@@ -1,0 +1,91 @@
+//! Drive the calibrated A100 analytic model directly: ask "what would
+//! this kernel cost on the paper's testbed?" for arbitrary shapes,
+//! inspect the fitted coefficients, and check the shared-memory capacity
+//! story (the mechanism behind AQLM-1×16's collapse and the headline
+//! 8.93× at 70B).
+//!
+//! Run: `cargo run --release --example simulate_a100 [N K [M]]`
+
+use codegemm::bench::workloads::GemmShape;
+use codegemm::config::QuantConfig;
+use codegemm::simulator::memory::{blocks_per_sm, fits_smem, overflow_gather_bytes};
+use codegemm::simulator::{Method, Simulator, A100_80GB};
+use codegemm::util::table::{fnum, Table};
+
+fn main() {
+    let args: Vec<usize> =
+        std::env::args().skip(1).filter_map(|a| a.parse().ok()).collect();
+    let (n, k) = if args.len() >= 2 { (args[0], args[1]) } else { (8192, 8192) };
+    let m_batch = if args.len() >= 3 { args[2] } else { 1 };
+
+    let sim = Simulator::a100();
+    println!("calibration quality (rel-RMSE per fitted family):");
+    for (fam, rmse) in &sim.fit_rmse {
+        println!("  {fam:12} {:.1}%", 100.0 * rmse);
+    }
+
+    let shape = GemmShape::new(m_batch, n, k);
+    let methods = [
+        Method::CuBlas,
+        Method::CuBlasPlusDequant,
+        Method::LutGemm { q: 2, g: 128 },
+        Method::QuipSharp,
+        Method::Qtip,
+        Method::aqlm_1x16(),
+        Method::aqlm_2x8(),
+        Method::codegemm_m2v8g128(),
+        Method::codegemm_m1v4g128(),
+    ];
+    let mut t = Table::new(
+        &format!("modelled A100 cost at (M={m_batch}, N={n}, K={k})"),
+        &["method", "µs", "q̄ bits", "weight MB", "smem/block", "fits smem", "blocks/SM"],
+    );
+    for m in &methods {
+        t.row(vec![
+            m.label(),
+            fnum(sim.latency_us(m, shape), 2),
+            fnum(m.bits_per_weight(n, k), 3),
+            fnum(m.weight_bytes(n, k) / 1e6, 2),
+            format!("{} B", m.smem_bytes(m_batch)),
+            if fits_smem(m, &A100_80GB, m_batch) { "yes".into() } else { "NO".into() },
+            blocks_per_sm(m, &A100_80GB, m_batch).to_string(),
+        ]);
+    }
+    println!("\n{}", t.render());
+
+    // The §2.3 capacity argument, explicitly.
+    let a116 = Method::aqlm_1x16();
+    println!(
+        "AQLM-1×16 codebook = {} KB > {} KB smem ⇒ {} MB of L2 gather traffic at this shape",
+        a116.smem_bytes(1) / 1024,
+        A100_80GB.smem_per_sm / 1024,
+        fnum(overflow_gather_bytes(&a116, &A100_80GB, m_batch, n, k) / 1e6, 1),
+    );
+
+    // Sweep batch to show the CUDA-core batch-scaling limitation (§6).
+    let mut t = Table::new(
+        "batch scaling (paper §A.4: CUDA-core kernels scale with M, tensor-core cuBLAS doesn't)",
+        &["M", "cuBLAS", "CG-m1v4", "AQLM-2x8", "AQLM-1x16"],
+    );
+    for mb in [1usize, 2, 4, 8, 16, 32] {
+        let s = GemmShape::new(mb, n, k);
+        t.row(vec![
+            mb.to_string(),
+            fnum(sim.latency_us(&Method::CuBlas, s), 1),
+            fnum(sim.latency_us(&Method::codegemm_m1v4g128(), s), 1),
+            fnum(sim.latency_us(&Method::aqlm_2x8(), s), 1),
+            fnum(sim.latency_us(&Method::aqlm_1x16(), s), 1),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // What-if: the same kernels on H100 (more smem, more bandwidth).
+    let h100 = Simulator::fit(codegemm::simulator::H100_SXM, &codegemm::simulator::kernels::calibration_samples());
+    let cfg = QuantConfig::m1v4g128();
+    println!(
+        "what-if H100: CodeGEMM-{} at (1, {n}, {k}) = {} µs (A100 {} µs)",
+        cfg.label(),
+        fnum(h100.latency_us(&Method::codegemm(cfg), GemmShape::new(1, n, k)), 2),
+        fnum(sim.latency_us(&Method::codegemm(cfg), GemmShape::new(1, n, k)), 2),
+    );
+}

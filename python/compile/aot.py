@@ -1,0 +1,197 @@
+"""AOT compile path (run ONCE by ``make artifacts``; never at serve time).
+
+Pipeline:
+
+1. Train the tiny model on the synthetic corpus (cached: skipped when
+   ``weights.f32.bin`` already exists).
+2. Quantize every linear with the additive-codebook quantizer
+   (``--quant m1v4g32`` by default; lm_head included, embeddings/norms
+   stay fp32 as in the paper).
+3. Lower the single-token batched decode step — linears running through
+   the L1 Pallas CodeGEMM kernel (interpret=True) — to **HLO text** for
+   each batch bucket, plus a standalone GEMV kernel artifact.
+4. Write ``weights.q.bin`` (the HLO's weight arguments), ``corpus.bin``
+   and ``manifest.json`` (the rust runtime contract).
+
+HLO *text* (not serialized proto) is the interchange format: jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .export import TensorFile
+from .kernels.codegemm import codegemm_matmul
+from .model import LINEARS, TINY, ModelConfig, linear_dims, make_decode_step
+from .quantize import QuantConfig, bits_per_weight, quantize
+from .train_tiny import export_corpus, export_weights, make_corpus, train
+
+DEFAULT_BATCHES = (1, 2, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def parse_quant_label(label: str) -> QuantConfig:
+    """Parse e.g. ``m1v4g32`` / ``m2v8g-1`` (b defaults to 8)."""
+    import re
+
+    m = re.fullmatch(r"m(\d+)v(\d+)(?:b(\d+))?g(-?\d+)", label)
+    if not m:
+        raise ValueError(f"bad quant label {label!r}")
+    mm, v, b, g = m.groups()
+    return QuantConfig(v=int(v), m=int(mm), b=int(b or 8), g=int(g))
+
+
+def quantize_model(params: dict, cfg: ModelConfig, qcfg: QuantConfig, seed: int = 0xC0DE):
+    """Quantize all linears; returns (weights dict, weight name order)."""
+    dims = linear_dims(cfg)
+    weights: dict[str, np.ndarray] = {"embedding": params["embedding"]}
+    names: list[str] = ["embedding"]
+
+    def add(name, arr):
+        weights[name] = arr
+        names.append(name)
+
+    lin_names = [f"layers.{i}.{w}" for i in range(cfg.n_layers) for w in LINEARS] + ["lm_head"]
+    for i in range(cfg.n_layers):
+        add(f"layers.{i}.attn_norm", params[f"layers.{i}.attn_norm"])
+        add(f"layers.{i}.mlp_norm", params[f"layers.{i}.mlp_norm"])
+    add("final_norm", params["final_norm"])
+    for ln in lin_names:
+        w = params[ln]
+        q = quantize(w, qcfg, seed=seed)
+        rel = np.linalg.norm(q.dequantize() - w) / max(np.linalg.norm(w), 1e-12)
+        print(f"  quantized {ln:20s} {w.shape!s:12s} rel-err {rel:.3f}")
+        add(f"{ln}.codes", q.codes.astype(np.int32))
+        add(f"{ln}.codebooks", q.codebooks.astype(np.float32))
+        add(f"{ln}.scales", q.scales.astype(np.float32))
+    return weights, names
+
+
+def lower_decode_steps(cfg: ModelConfig, engine: str, weights: dict, names: list[str],
+                       qcfg: QuantConfig, batches, out_dir: str):
+    step = make_decode_step(cfg, engine, names, quant_g=qcfg.g)
+    arts = []
+    for b in batches:
+        specs = [
+            jax.ShapeDtypeStruct((b,), jnp.int32),  # tokens
+            jax.ShapeDtypeStruct((b,), jnp.int32),  # positions
+            jax.ShapeDtypeStruct((cfg.n_layers, b, cfg.max_seq, cfg.kv_dim), jnp.float32),
+            jax.ShapeDtypeStruct((cfg.n_layers, b, cfg.max_seq, cfg.kv_dim), jnp.float32),
+        ] + [jax.ShapeDtypeStruct(weights[n].shape, weights[n].dtype) for n in names]
+        t0 = time.time()
+        lowered = jax.jit(step).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"decode_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        print(f"  lowered decode_b{b}: {len(text) / 1e6:.2f} MB HLO text ({time.time() - t0:.1f}s)")
+        arts.append({"name": f"decode_b{b}", "batch": b, "hlo": fname})
+    return arts
+
+
+def lower_gemv_kernel(qcfg: QuantConfig, out_dir: str, n: int = 256, k: int = 128, batch: int = 1):
+    """Standalone L1 kernel artifact (AOT-path microbenches + smoke)."""
+    rng = np.random.default_rng(1)
+    w = rng.normal(0, 0.05, (n, k)).astype(np.float32)
+    q = quantize(w, qcfg, iters=4)
+    fn = lambda x, c, cb, s: (codegemm_matmul(x, c, cb, s, g=qcfg.g, tile_h=min(2048, n), tile_w=32),)
+    specs = [
+        jax.ShapeDtypeStruct((batch, k), jnp.float32),
+        jax.ShapeDtypeStruct(q.codes.shape, jnp.int32),
+        jax.ShapeDtypeStruct(q.codebooks.shape, jnp.float32),
+        jax.ShapeDtypeStruct(q.scales.shape, jnp.float32),
+    ]
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    fname = f"gemv_{qcfg.label()}_n{n}k{k}b{batch}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    tf = TensorFile()
+    tf.push("x", rng.normal(0, 1, (batch, k)).astype(np.float32))
+    tf.push("codes", q.codes.astype(np.int32))
+    tf.push("codebooks", q.codebooks)
+    tf.push("scales", q.scales)
+    import jax.numpy as _j
+
+    from .kernels.ref import codegemm_ref
+
+    y = np.asarray(codegemm_ref(_j.asarray(tf.get("x")), _j.asarray(q.codes), _j.asarray(q.codebooks), _j.asarray(q.scales), qcfg.g))
+    tf.push("y_ref", y.astype(np.float32))
+    tf.save(os.path.join(out_dir, f"gemv_{qcfg.label()}_n{n}k{k}b{batch}.bin"))
+    print(f"  lowered standalone GEMV kernel ({fname})")
+    return fname
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quant", default="m1v4g32", help="codebook config label, e.g. m1v4g32")
+    ap.add_argument("--train-steps", type=int, default=600)
+    ap.add_argument("--batches", default=",".join(str(b) for b in DEFAULT_BATCHES))
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--force-train", action="store_true")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    qcfg = parse_quant_label(args.quant)
+    cfg = TINY
+    batches = [int(b) for b in args.batches.split(",")]
+
+    weights_f32 = os.path.join(out, "weights.f32.bin")
+    corpus_bin = os.path.join(out, "corpus.bin")
+    if os.path.exists(weights_f32) and os.path.exists(corpus_bin) and not args.force_train:
+        print(f"using cached {weights_f32}")
+        tf = TensorFile.load(weights_f32)
+        params = {n: tf.get(n) for n in tf.names()}
+    else:
+        print(f"training tiny model ({args.train_steps} steps)…")
+        params, tokens, log_probs, loss = train(cfg, steps=args.train_steps, seed=args.seed)
+        print(f"  final train loss {loss:.4f}")
+        export_weights(params, weights_f32)
+        export_corpus(tokens, log_probs, corpus_bin)
+
+    print(f"quantizing with {qcfg.label()} "
+          f"(q̄ = {bits_per_weight(qcfg, 4096, 4096):.3f} bits at Llama scale)…")
+    qweights, names = quantize_model(params, cfg, qcfg)
+    qtf = TensorFile()
+    for n in names:
+        qtf.push(n, qweights[n])
+    qtf.save(os.path.join(out, "weights.q.bin"))
+
+    print("lowering decode steps (L2 jax + L1 pallas, interpret=True)…")
+    arts = lower_decode_steps(cfg, "codegemm", qweights, names, qcfg, batches, out)
+    gemv = lower_gemv_kernel(qcfg, out)
+
+    manifest = {
+        "version": 1,
+        "engine": "codegemm",
+        "model": cfg.to_json_dict(),
+        "quant": {"v": qcfg.v, "m": qcfg.m, "b": qcfg.b, "g": qcfg.g},
+        "weights_file": "weights.q.bin",
+        "weight_args": names,
+        "artifacts": arts,
+        "extras": {"gemv_kernel": gemv, "corpus": "corpus.bin", "weights_f32": "weights.f32.bin"},
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {out}/manifest.json — artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

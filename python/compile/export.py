@@ -1,0 +1,96 @@
+"""TensorFile (CGTF) container — the python half of the interchange format.
+
+Byte-for-byte compatible with ``rust/src/util/npy.rs``: magic ``CGTF0001``,
+a little-endian u64 header length, a compact JSON header listing
+``{name, dtype, shape, offset, nbytes}`` per tensor, then the raw
+little-endian data section.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from dataclasses import dataclass, field
+
+import numpy as np
+
+MAGIC = b"CGTF0001"
+
+_DTYPES = {
+    "f32": np.float32,
+    "i32": np.int32,
+    "u8": np.uint8,
+    "u16": np.uint16,
+}
+_NAMES = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+
+def _dtype_name(arr: np.ndarray) -> str:
+    try:
+        return _NAMES[arr.dtype]
+    except KeyError:
+        raise ValueError(f"unsupported dtype {arr.dtype} (want f32/i32/u8/u16)") from None
+
+
+@dataclass
+class TensorFile:
+    """Ordered named-tensor container."""
+
+    tensors: dict[str, np.ndarray] = field(default_factory=dict)
+
+    def push(self, name: str, arr: np.ndarray) -> None:
+        if name in self.tensors:
+            raise ValueError(f"duplicate tensor name {name!r}")
+        arr = np.ascontiguousarray(arr)
+        _dtype_name(arr)  # validate
+        self.tensors[name] = arr
+
+    def get(self, name: str) -> np.ndarray:
+        return self.tensors[name]
+
+    def names(self) -> list[str]:
+        return list(self.tensors)
+
+    def to_bytes(self) -> bytes:
+        entries = []
+        blobs = []
+        offset = 0
+        for name, arr in self.tensors.items():
+            raw = arr.astype(arr.dtype.newbyteorder("<"), copy=False).tobytes()
+            entries.append(
+                {
+                    "name": name,
+                    "dtype": _dtype_name(arr),
+                    "shape": list(arr.shape),
+                    "offset": offset,
+                    "nbytes": len(raw),
+                }
+            )
+            blobs.append(raw)
+            offset += len(raw)
+        header = json.dumps({"tensors": entries}, separators=(",", ":")).encode()
+        return MAGIC + struct.pack("<Q", len(header)) + header + b"".join(blobs)
+
+    @staticmethod
+    def from_bytes(data: bytes) -> "TensorFile":
+        if data[:8] != MAGIC:
+            raise ValueError("not a CGTF file (bad magic)")
+        (hlen,) = struct.unpack("<Q", data[8:16])
+        header = json.loads(data[16 : 16 + hlen])
+        payload = data[16 + hlen :]
+        tf = TensorFile()
+        for e in header["tensors"]:
+            dt = np.dtype(_DTYPES[e["dtype"]]).newbyteorder("<")
+            raw = payload[e["offset"] : e["offset"] + e["nbytes"]]
+            arr = np.frombuffer(raw, dtype=dt).reshape(e["shape"]).astype(_DTYPES[e["dtype"]])
+            tf.push(e["name"], arr)
+        return tf
+
+    def save(self, path) -> None:
+        with open(path, "wb") as f:
+            f.write(self.to_bytes())
+
+    @staticmethod
+    def load(path) -> "TensorFile":
+        with open(path, "rb") as f:
+            return TensorFile.from_bytes(f.read())

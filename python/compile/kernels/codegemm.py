@@ -1,0 +1,144 @@
+"""CodeGEMM Pallas kernel (Layer 1).
+
+The paper's kernel re-thought for the TPU memory hierarchy (DESIGN.md
+§Hardware-Adaptation): the CUDA thread-block's shared-memory *Psumbook*
+becomes a VMEM scratch buffer; ``BlockSpec`` expresses the HBM↔VMEM tile
+schedule the CUDA version expressed with thread blocks; the code-indexed
+gather is a vectorized ``take_along_axis`` instead of warp shuffles.
+
+Grid: ``(n / t_h, k / t_w)`` — a split-K layout mirroring the paper's
+``(t_h × t_w)`` weight tiles (§3, Figure 3). Each grid step:
+
+1. reshapes its activation tile ``[B, t_w]`` into ``t_w/v`` length-``v``
+   sub-vectors (Figure 3 step ①),
+2. builds the Psumbook ``p[B, m, 2^b, t_w/v]`` in VMEM scratch — all
+   centroid·activation inner products for this K-tile (step ②, Eq. 2),
+3. gathers partial sums through the code tile, applies the group scales,
+   and accumulates into the output block (step ③).
+
+The K dimension is the *minor* grid axis, so the output block for a row
+tile stays resident while K sweeps — the Psumbook is rebuilt per K-tile
+and reused across all ``t_h`` rows, exactly the reuse structure that gives
+the paper its ``m/v`` complexity reduction.
+
+MUST run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls (real-TPU lowering). Interpret mode lowers to plain
+HLO, which `make artifacts` then ships to the rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_H = 2048  # paper §3 / §A.2
+DEFAULT_TILE_W = 32
+
+
+def _kernel(x_ref, codes_ref, codebooks_ref, scales_ref, o_ref, *, v, g, tile_w):
+    """One (row-tile, K-tile) grid step."""
+    kj = pl.program_id(1)
+
+    # --- step ①: reshape the activation tile into length-v sub-vectors.
+    x = x_ref[...]  # [B, t_w]
+    batch = x.shape[0]
+    jn = tile_w // v
+    xv = x.reshape(batch, jn, v)
+
+    # --- step ②: build the Psumbook (Eq. 2). This value is the kernel's
+    # entire on-chip working set — m · 2^b · (t_w/v) floats per batch
+    # column, VMEM-resident for the whole grid step (the paper's
+    # shared-memory Psumbook; a dequant kernel would instead need the full
+    # m · 2^b · v fp16 codebook *plus* reconstructed weights).
+    cb = codebooks_ref[...]  # [m, 2^b, v]
+    p = jnp.einsum("civ,bjv->bcij", cb, xv, preferred_element_type=jnp.float32)
+
+    # --- step ③: gather partial sums through the code tile + scale.
+    codes = codes_ref[...]  # [t_h, jn, m]
+    m = codes.shape[-1]
+    acc = jnp.zeros((batch, codes.shape[0], jn), dtype=jnp.float32)
+    jidx = jnp.arange(jn)
+    for c in range(m):
+        # p[b, c, codes[r, j, c], j] — vectorized code-indexed gather.
+        acc = acc + p[:, c, codes[:, :, c], jidx]
+    # Group scale of the j-th sub-vector in this K-tile: global column is
+    # kj*t_w + j*v; scales_ref block covers this tile's groups.
+    gsel = (kj * tile_w + jnp.arange(jn) * v) // g - (kj * tile_w) // g
+    sv = scales_ref[...][:, gsel]  # [t_h, jn]
+    partial = jnp.einsum("brj,rj->br", acc, sv, preferred_element_type=jnp.float32)
+
+    # Accumulate across the K grid (K is the minor axis).
+    @pl.when(kj == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(kj > 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("g", "tile_h", "tile_w"))
+def codegemm_matmul(
+    x,
+    codes,
+    codebooks,
+    scales,
+    *,
+    g: int,
+    tile_h: int = DEFAULT_TILE_H,
+    tile_w: int = DEFAULT_TILE_W,
+):
+    """``y[b, n] = Σ_k x[b, k] · W[n, k]`` over codebook-quantized ``W``.
+
+    Shapes: ``x [B, k]``, ``codes i32 [n, k/v, m]``, ``codebooks
+    [m, 2^b, v]``, ``scales [n, k/g]`` → ``[B, n]``.
+    """
+    batch, k = x.shape
+    n, jn_total, m = codes.shape
+    _, nc, v = codebooks.shape
+    assert jn_total * v == k, (jn_total, v, k)
+    g_eff = g if g > 0 else k
+    tile_h = min(tile_h, n)
+    tile_w = min(tile_w, k)
+    assert n % tile_h == 0 and k % tile_w == 0, (n, k, tile_h, tile_w)
+    assert tile_w % v == 0
+    # A tile must not straddle group boundaries mid-group (either even
+    # division works) — mirrors KernelConfig::validate_for.
+    assert g_eff % tile_w == 0 or tile_w % g_eff == 0, (g_eff, tile_w)
+    jn = tile_w // v
+    groups_per_tile = max(1, tile_w // g_eff)
+
+    grid = (n // tile_h, k // tile_w)
+    return pl.pallas_call(
+        functools.partial(_kernel, v=v, g=g_eff, tile_w=tile_w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, tile_w), lambda i, j: (0, j)),  # x: K-tile
+            pl.BlockSpec((tile_h, jn, m), lambda i, j: (i, j, 0)),  # codes
+            pl.BlockSpec((m, nc, v), lambda i, j: (0, 0, 0)),  # codebooks
+            pl.BlockSpec(
+                (tile_h, groups_per_tile),
+                # block index of the K-tile's first group (works both for
+                # tile_w >= g, where each K-tile owns t_w/g groups, and for
+                # tile_w < g, where g % t_w == 0 keeps tiles group-aligned).
+                lambda i, j: (i, (j * tile_w) // g_eff // groups_per_tile),
+            ),
+        ],
+        out_specs=pl.BlockSpec((batch, tile_h), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), jnp.float32),
+        interpret=True,
+    )(x, codes, codebooks, scales)
+
+
+def psumbook_bytes(m: int, b: int, tile_w: int, v: int, batch: int = 1) -> int:
+    """On-chip footprint of the Psumbook (§3 Space Complexity)."""
+    return m * (2**b) * (tile_w // v) * 4 * batch
+
+
+def codebook_bytes(m: int, b: int, v: int) -> int:
+    """On-chip footprint a dequantization kernel would need (fp16)."""
+    return m * (2**b) * v * 2

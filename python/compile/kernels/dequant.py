@@ -1,0 +1,83 @@
+"""Dequantization-based baseline Pallas kernel (the AQLM-style comparator,
+Figure 1(a)).
+
+Same quantized format, same tiling, but each grid step *reconstructs the
+weight tile* through per-code centroid fetches and then multiplies —
+keeping the full codebook resident on-chip and performing the redundant
+per-element work CodeGEMM eliminates. Exists so benches can contrast the
+two algorithms under one substrate and so correctness tests can cross-check
+both against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, codes_ref, codebooks_ref, scales_ref, o_ref, *, v, g, tile_w):
+    kj = pl.program_id(1)
+    x = x_ref[...]  # [B, t_w]
+    codes = codes_ref[...]  # [t_h, jn, m]
+    cb = codebooks_ref[...]  # [m, 2^b, v] — the FULL codebook, on-chip
+    th, jn, m = codes.shape
+
+    # Dequantize the weight tile: per-code centroid fetch + additive sum.
+    w = jnp.zeros((th, jn, v), dtype=jnp.float32)
+    for c in range(m):
+        w = w + cb[c][codes[:, :, c]]
+    # Apply group scales.
+    gsel = (kj * tile_w + jnp.arange(jn) * v) // g - (kj * tile_w) // g
+    sv = scales_ref[...][:, gsel]  # [t_h, jn]
+    w = (w * sv[:, :, None]).reshape(th, tile_w)
+
+    # Dense multiply with the reconstructed tile (full M·N·K work).
+    partial = jnp.dot(x, w.T, preferred_element_type=jnp.float32)
+
+    @pl.when(kj == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(kj > 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("g", "tile_h", "tile_w"))
+def dequant_matmul(x, codes, codebooks, scales, *, g: int, tile_h: int = 2048, tile_w: int = 32):
+    """Baseline: dequantize-then-GEMM. Same signature as
+    ``codegemm.codegemm_matmul``."""
+    batch, k = x.shape
+    n, jn_total, m = codes.shape
+    _, nc, v = codebooks.shape
+    g_eff = g if g > 0 else k
+    tile_h = min(tile_h, n)
+    tile_w = min(tile_w, k)
+    assert n % tile_h == 0 and k % tile_w == 0
+    assert tile_w % v == 0
+    assert g_eff % tile_w == 0 or tile_w % g_eff == 0
+    jn = tile_w // v
+    groups_per_tile = max(1, tile_w // g_eff)
+    grid = (n // tile_h, k // tile_w)
+    return pl.pallas_call(
+        functools.partial(_kernel, v=v, g=g_eff, tile_w=tile_w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, tile_w), lambda i, j: (0, j)),
+            pl.BlockSpec((tile_h, jn, m), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((m, nc, v), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec(
+                (tile_h, groups_per_tile),
+                # block index of the K-tile's first group (works both for
+                # tile_w >= g, where each K-tile owns t_w/g groups, and for
+                # tile_w < g, where g % t_w == 0 keeps tiles group-aligned).
+                lambda i, j: (i, (j * tile_w) // g_eff // groups_per_tile),
+            ),
+        ],
+        out_specs=pl.BlockSpec((batch, tile_h), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), jnp.float32),
+        interpret=True,
+    )(x, codes, codebooks, scales)

@@ -1,0 +1,70 @@
+"""Pure-`jnp` oracle for the CodeGEMM computation.
+
+Shared array layout (matches ``quantize.py`` and the Pallas kernels):
+
+- ``codes``      i32  ``[n, jn, m]``      with ``jn = k / v``
+- ``codebooks``  f32  ``[m, 2**b, v]``
+- ``scales``     f32  ``[n, gn]``         with ``gn = k / g`` (g | k)
+- ``x``          f32  ``[batch, k]``      activations
+- output         f32  ``[batch, n]``      (``y = x · Wᵀ``)
+
+The oracle computes dequantize-then-matmul; every kernel must match it to
+float tolerance — the paper's central claim is that the Psumbook gather is
+*algebraically identical* to dequantization (§3).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequantize(codes, codebooks, scales, g: int):
+    """Reconstruct the dense weight matrix ``W [n, k]``."""
+    n, jn, m = codes.shape
+    _, _, v = codebooks.shape
+    k = jn * v
+    # Sum the m codebook contributions: w_norm[n, jn, v]
+    w = jnp.zeros((n, jn, v), dtype=codebooks.dtype)
+    for c in range(m):
+        w = w + codebooks[c][codes[:, :, c]]
+    w = w.reshape(n, k)
+    # Expand group scales along k.
+    s = jnp.repeat(scales, g, axis=1)[:, :k]
+    return w * s
+
+
+def codegemm_ref(x, codes, codebooks, scales, g: int):
+    """Oracle matmul: ``y[b, n] = Σ_k x[b, k] · W[n, k]``."""
+    w = dequantize(codes, codebooks, scales, g)
+    return x @ w.T
+
+
+def psumbook_ref(x, codebooks):
+    """All centroid·activation inner products (Eq. 2).
+
+    Returns ``p[batch, m, 2**b, jn]`` with
+    ``p[b, c, i, j] = Σ_t codebooks[c, i, t] · x[b, j·v + t]``.
+    """
+    batch, k = x.shape
+    m, nc, v = codebooks.shape
+    xv = x.reshape(batch, k // v, v)
+    return jnp.einsum("civ,bjv->bcij", codebooks, xv)
+
+
+def codegemm_via_psumbook_ref(x, codes, codebooks, scales, g: int):
+    """Reference of the *kernel's* algorithm (build Psumbook → gather →
+    scale → accumulate) in plain jnp — used to pin down the exact
+    complexity-reduced computation the Pallas kernel implements."""
+    n, jn, m = codes.shape
+    _, _, v = codebooks.shape
+    p = psumbook_ref(x, codebooks)  # [B, m, 2^b, jn]
+    # gathered[b, n, j] = Σ_c p[b, c, codes[n, j, c], j]
+    batch = x.shape[0]
+    acc = jnp.zeros((batch, n, jn), dtype=x.dtype)
+    jidx = jnp.arange(jn)
+    for c in range(m):
+        acc = acc + p[:, c, codes[:, :, c], jidx]
+    # group scales: j-th vector belongs to group (j*v)//g
+    gsel = (jnp.arange(jn) * v) // g
+    sv = scales[:, gsel]  # [n, jn]
+    return jnp.einsum("bnj,nj->bn", acc, sv)

@@ -1,0 +1,245 @@
+"""Layer 2: the tiny Llama-style decoder in pure JAX.
+
+Architecture and numerics mirror ``rust/src/model/llama.rs`` exactly
+(RMSNorm eps 1e-5, rotate-half RoPE, GQA, SwiGLU) so the rust
+NativeBackend and the AOT/PJRT backend produce interchangeable results.
+
+Two entry points:
+
+- :func:`train_forward` — teacher-forced full-sequence forward for
+  ``train_tiny.py`` (dense fp32 only).
+- :func:`make_decode_step` — the single-token batched decode step that
+  ``aot.py`` lowers to HLO. Its linear layers run through a pluggable
+  engine: ``"dense"`` (fp32 matmul) or ``"codegemm"`` (the L1 Pallas
+  kernel over quantized weights).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.codegemm import codegemm_matmul
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256
+    hidden: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    ffn: int = 352
+    max_seq: int = 128
+    rope_theta: float = 10_000.0
+    name: str = "tiny-llama"
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def to_json_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "vocab": self.vocab,
+            "hidden": self.hidden,
+            "n_layers": self.n_layers,
+            "n_heads": self.n_heads,
+            "n_kv_heads": self.n_kv_heads,
+            "ffn": self.ffn,
+            "max_seq": self.max_seq,
+            "rope_theta": self.rope_theta,
+        }
+
+
+TINY = ModelConfig()
+
+# The seven quantized linears per layer, in rust LINEAR_NAMES order.
+LINEARS = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"]
+
+
+def linear_dims(cfg: ModelConfig) -> dict[str, tuple[int, int]]:
+    d, kv, f = cfg.hidden, cfg.kv_dim, cfg.ffn
+    return {
+        "wq": (d, d),
+        "wk": (kv, d),
+        "wv": (kv, d),
+        "wo": (d, d),
+        "w_gate": (f, d),
+        "w_up": (f, d),
+        "w_down": (d, f),
+    }
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    """Dense tensor names, identical to rust ``ModelWeights``."""
+    names = ["embedding"]
+    for i in range(cfg.n_layers):
+        names += [f"layers.{i}.{w}" for w in LINEARS]
+        names += [f"layers.{i}.attn_norm", f"layers.{i}.mlp_norm"]
+    names += ["final_norm", "lm_head"]
+    return names
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    d = cfg.hidden
+    std = 1.0 / np.sqrt(d)
+    dims = linear_dims(cfg)
+
+    def mat(n, k):
+        return rng.normal(0.0, std, (n, k)).astype(np.float32)
+
+    params: dict[str, np.ndarray] = {"embedding": mat(cfg.vocab, d)}
+    for i in range(cfg.n_layers):
+        for w in LINEARS:
+            params[f"layers.{i}.{w}"] = mat(*dims[w])
+        params[f"layers.{i}.attn_norm"] = np.ones(d, np.float32)
+        params[f"layers.{i}.mlp_norm"] = np.ones(d, np.float32)
+    params["final_norm"] = np.ones(d, np.float32)
+    params["lm_head"] = mat(cfg.vocab, d)
+    return params
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope_tables(cfg: ModelConfig):
+    hd = cfg.head_dim
+    half = hd // 2
+    inv_freq = 1.0 / (cfg.rope_theta ** (2.0 * np.arange(half) / hd))
+    t = np.arange(cfg.max_seq)
+    ang = np.outer(t, inv_freq).astype(np.float32)  # [S, half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope_rotate(x, cos, sin):
+    """Rotate-half RoPE over heads. ``x [..., n_heads*hd]``, cos/sin
+    ``[..., half]`` broadcastable per position."""
+    shape = x.shape
+    hd = 2 * cos.shape[-1]
+    xh = x.reshape(*shape[:-1], shape[-1] // hd, hd)
+    a, b = xh[..., : hd // 2], xh[..., hd // 2 :]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([a * c - b * s, b * c + a * s], axis=-1)
+    return out.reshape(shape)
+
+
+def _swiglu(gate, up):
+    return jax.nn.silu(gate) * up
+
+
+def train_forward(params: dict, cfg: ModelConfig, tokens):
+    """Teacher-forced forward: ``tokens [B, T]`` → logits ``[B, T, V]``."""
+    B, T = tokens.shape
+    d = cfg.hidden
+    groups = cfg.n_heads // cfg.n_kv_heads
+    cos_full, sin_full = rope_tables(cfg)
+    cos, sin = cos_full[:T], sin_full[:T]
+    h = params["embedding"][tokens]  # [B, T, d]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    for i in range(cfg.n_layers):
+        p = lambda s: params[f"layers.{i}.{s}"]
+        x = rmsnorm(h, p("attn_norm"))
+        q = x @ p("wq").T
+        k = x @ p("wk").T
+        v = x @ p("wv").T
+        q = rope_rotate(q, cos, sin)
+        k = rope_rotate(k, cos, sin)
+        hd = cfg.head_dim
+        qh = q.reshape(B, T, cfg.n_heads, hd)
+        kh = k.reshape(B, T, cfg.n_kv_heads, hd)
+        vh = v.reshape(B, T, cfg.n_kv_heads, hd)
+        kh = jnp.repeat(kh, groups, axis=2)
+        vh = jnp.repeat(vh, groups, axis=2)
+        scores = jnp.einsum("bthd,bshd->bhts", qh, kh) / np.sqrt(hd)
+        scores = jnp.where(mask[None, None], scores, -1e9)
+        attn = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhts,bshd->bthd", attn, vh).reshape(B, T, d)
+        h = h + out @ p("wo").T
+        x = rmsnorm(h, p("mlp_norm"))
+        h = h + _swiglu(x @ p("w_gate").T, x @ p("w_up").T) @ p("w_down").T
+    h = rmsnorm(h, params["final_norm"])
+    return h @ params["lm_head"].T
+
+
+def make_decode_step(cfg: ModelConfig, engine: str, weight_names: list[str], *, quant_g: int = 32):
+    """Build ``step(tokens, positions, kv_k, kv_v, *weights)`` →
+    ``(logits, kv_k', kv_v')`` with the weight list in ``weight_names``
+    order (the manifest's ``weight_args`` contract).
+
+    ``engine``: ``"dense"`` (weights are fp32 matrices) or ``"codegemm"``
+    (each linear contributes ``<name>.codes/.codebooks/.scales`` and runs
+    through the L1 Pallas kernel).
+    """
+    cos_full, sin_full = rope_tables(cfg)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    hd = cfg.head_dim
+
+    def linear(w: dict, name: str, x):
+        if engine == "dense":
+            return x @ w[name].T
+        q = w  # flat dict with .codes etc.
+        n = None  # tile_h chosen per linear below
+        codes = q[f"{name}.codes"]
+        n = codes.shape[0]
+        return codegemm_matmul(
+            x,
+            codes,
+            q[f"{name}.codebooks"],
+            q[f"{name}.scales"],
+            g=quant_g,
+            tile_h=min(2048, n),
+            tile_w=32,
+        )
+
+    def step(tokens, positions, kv_k, kv_v, *weights):
+        w = dict(zip(weight_names, weights, strict=True))
+        B = tokens.shape[0]
+        d = cfg.hidden
+        s_idx = jnp.arange(cfg.max_seq)
+        cos = cos_full[positions]  # [B, half]
+        sin = sin_full[positions]
+        h = w["embedding"][tokens]  # [B, d]
+        # attend mask per slot: positions s ≤ current position
+        mask = s_idx[None, :] <= positions[:, None]  # [B, S]
+        for i in range(cfg.n_layers):
+            name = lambda s: f"layers.{i}.{s}"
+            x = rmsnorm(h, w[name("attn_norm")])
+            q = linear(w, name("wq"), x)
+            k = linear(w, name("wk"), x)
+            v = linear(w, name("wv"), x)
+            q = rope_rotate(q, cos, sin)
+            k = rope_rotate(k, cos, sin)
+            bidx = jnp.arange(B)
+            kv_k = kv_k.at[i, bidx, positions].set(k)
+            kv_v = kv_v.at[i, bidx, positions].set(v)
+            keys = kv_k[i]  # [B, S, kv_dim]
+            vals = kv_v[i]
+            qh = q.reshape(B, cfg.n_heads, hd)
+            kh = keys.reshape(B, cfg.max_seq, cfg.n_kv_heads, hd)
+            vh = vals.reshape(B, cfg.max_seq, cfg.n_kv_heads, hd)
+            kh = jnp.repeat(kh, groups, axis=2)
+            vh = jnp.repeat(vh, groups, axis=2)
+            scores = jnp.einsum("bhd,bshd->bhs", qh, kh) / np.sqrt(hd)
+            scores = jnp.where(mask[:, None, :], scores, -1e9)
+            attn = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum("bhs,bshd->bhd", attn, vh).reshape(B, d)
+            h = h + linear(w, name("wo"), out)
+            x = rmsnorm(h, w[name("mlp_norm")])
+            h = h + linear(w, name("w_down"), _swiglu(linear(w, name("w_gate"), x), linear(w, name("w_up"), x)))
+        h = rmsnorm(h, w["final_norm"])
+        logits = h @ w["lm_head"].T if engine == "dense" else linear(w, "lm_head", h)
+        return logits, kv_k, kv_v
+
+    return step

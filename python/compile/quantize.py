@@ -1,0 +1,127 @@
+"""Additive multi-codebook quantizer (build-time python mirror of
+``rust/src/quant``): group-normalize → split into length-``v`` vectors →
+residual k-means over ``m`` codebooks → per-vector codes.
+
+Deterministic given the seed; used by ``aot.py`` to produce the quantized
+weight arrays the AOT decode-step HLO consumes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    v: int = 4
+    m: int = 1
+    b: int = 8
+    g: int = 32  # -1 ⇒ row-wise
+
+    def label(self) -> str:
+        return f"m{self.m}v{self.v}g{self.g}"
+
+    def validate(self, k: int) -> None:
+        if k % self.v:
+            raise ValueError(f"k={k} not a multiple of v={self.v}")
+        g = self.g if self.g > 0 else k
+        if g % self.v or (k % g):
+            raise ValueError(f"invalid group size g={self.g} for k={k}, v={self.v}")
+
+
+@dataclass
+class QuantizedLinear:
+    cfg: QuantConfig
+    n: int
+    k: int
+    codes: np.ndarray  # i32 [n, k//v, m]
+    codebooks: np.ndarray  # f32 [m, 2^b, v]
+    scales: np.ndarray  # f32 [n, k//g]
+
+    def dequantize(self) -> np.ndarray:
+        g = self.cfg.g if self.cfg.g > 0 else self.k
+        w = np.zeros((self.n, self.k // self.cfg.v, self.cfg.v), dtype=np.float32)
+        for c in range(self.cfg.m):
+            w += self.codebooks[c][self.codes[:, :, c]]
+        w = w.reshape(self.n, self.k)
+        s = np.repeat(self.scales, g, axis=1)[:, : self.k]
+        return w * s
+
+
+def _f16(x: np.ndarray) -> np.ndarray:
+    """Round through the f16 grid (stored precision in the paper, Eq. 1)."""
+    return x.astype(np.float16).astype(np.float32)
+
+
+def _kmeans(points: np.ndarray, n_clusters: int, iters: int, rng: np.random.Generator):
+    """Plain k-means with sampled init; returns (centroids, assignment)."""
+    npts = points.shape[0]
+    if npts <= n_clusters:
+        centroids = np.zeros((n_clusters, points.shape[1]), dtype=np.float32)
+        centroids[:npts] = points
+        return centroids, np.arange(npts) % n_clusters
+    idx = rng.choice(npts, size=n_clusters, replace=False)
+    centroids = points[idx].copy()
+    assign = np.zeros(npts, dtype=np.int64)
+    for _ in range(iters):
+        # assignment by squared distance (chunked to bound memory)
+        d2 = (
+            (points**2).sum(1, keepdims=True)
+            - 2.0 * points @ centroids.T
+            + (centroids**2).sum(1)[None, :]
+        )
+        assign = d2.argmin(1)
+        for c in range(n_clusters):
+            mask = assign == c
+            if mask.any():
+                centroids[c] = points[mask].mean(0)
+            else:  # re-seed empty cluster at the worst-fit point
+                centroids[c] = points[d2.min(1).argmax()]
+    return centroids.astype(np.float32), assign
+
+
+def quantize(w: np.ndarray, cfg: QuantConfig, iters: int = 12, seed: int = 0xC0DE) -> QuantizedLinear:
+    """Quantize a dense ``[n, k]`` matrix."""
+    n, k = w.shape
+    cfg.validate(k)
+    g = cfg.g if cfg.g > 0 else k
+    rng = np.random.default_rng(seed)
+
+    # Step 1 — group normalization (absmax per (row, group)).
+    wg = w.reshape(n, k // g, g)
+    scales = np.abs(wg).max(axis=2)
+    scales = np.where(scales == 0.0, 1.0, scales).astype(np.float32)
+    scales = _f16(scales)
+    w_norm = (wg / scales[:, :, None]).reshape(n, k).astype(np.float32)
+
+    # Steps 2–3 — residual k-means over m additive codebooks.
+    jn = k // cfg.v
+    vectors = w_norm.reshape(n * jn, cfg.v)
+    residual = vectors.copy()
+    codebooks = np.zeros((cfg.m, 2**cfg.b, cfg.v), dtype=np.float32)
+    codes = np.zeros((n * jn, cfg.m), dtype=np.int32)
+    for c in range(cfg.m):
+        cents, assign = _kmeans(residual, 2**cfg.b, iters, rng)
+        cents = _f16(cents)
+        codebooks[c] = cents
+        codes[:, c] = assign.astype(np.int32)
+        residual = residual - cents[assign]
+    return QuantizedLinear(
+        cfg=cfg,
+        n=n,
+        k=k,
+        codes=codes.reshape(n, jn, cfg.m),
+        codebooks=codebooks,
+        scales=scales,
+    )
+
+
+def bits_per_weight(cfg: QuantConfig, n: int, k: int) -> float:
+    """Eq. 1 of the paper."""
+    g = cfg.g if cfg.g > 0 else k
+    s_codebook = 16 * cfg.m * (2**cfg.b) * cfg.v
+    s_code = cfg.b * cfg.m * n * (k // cfg.v)
+    s_norm = 16 * n * (k // g)
+    return (s_codebook + s_code + s_norm) / (n * k)

@@ -1,0 +1,155 @@
+"""Train the tiny byte-level Llama on the synthetic Markov-Zipf corpus
+(DESIGN.md substitution for Llama-3 weights + WikiText-2) and export:
+
+- ``weights.f32.bin`` — dense fp32 weights (rust ``ModelWeights`` names),
+- ``corpus.bin``      — the corpus tokens + true transition log-probs, so
+  the rust evaluation measures the model on *its own* training
+  distribution's held-out half.
+
+Deterministic given the seed. Training is plain JAX: cross-entropy over
+teacher-forced windows, hand-rolled Adam (no optax dependency).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .export import TensorFile
+from .model import TINY, ModelConfig, init_params, train_forward
+
+
+# ---------------------------------------------------------------- corpus
+
+
+def make_corpus(vocab: int = 256, branching: int = 8, zipf_s: float = 1.2, length: int = 32_768, seed: int = 7):
+    """Markov chain with Zipf-weighted sparse transitions (the same family
+    as ``rust/src/eval/corpus.rs``; the rust side consumes this exact
+    corpus through ``corpus.bin``, so the two implementations never need
+    to be bit-identical)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, branching + 1, dtype=np.float64)
+    weights = 1.0 / ranks**zipf_s
+    weights /= weights.sum()
+    eps = 1e-4
+    log_probs = np.full((vocab, vocab), np.log(eps / vocab), np.float32)
+    successors = np.zeros((vocab, branching), np.int64)
+    for cur in range(vocab):
+        succ = rng.choice(vocab, size=branching, replace=False)
+        successors[cur] = succ
+        p = (1.0 - eps) * weights + eps / vocab
+        log_probs[cur, succ] = np.log(p).astype(np.float32)
+    tokens = np.zeros(length, np.int64)
+    cur = int(rng.integers(vocab))
+    for t in range(length):
+        tokens[t] = cur
+        if rng.random() < eps:
+            cur = int(rng.integers(vocab))
+        else:
+            cur = int(successors[cur, rng.choice(branching, p=weights)])
+    return tokens, log_probs
+
+
+def corpus_entropy(tokens: np.ndarray, log_probs: np.ndarray) -> float:
+    return float(-log_probs[tokens[:-1], tokens[1:]].mean())
+
+
+# ---------------------------------------------------------------- training
+
+
+def train(cfg: ModelConfig = TINY, steps: int = 600, batch: int = 32, window: int = 64,
+          lr: float = 3e-3, seed: int = 7, corpus=None, log_every: int = 100, verbose: bool = True):
+    """Returns (params, corpus_tokens, log_probs, final_train_loss)."""
+    tokens, log_probs = corpus if corpus is not None else make_corpus(vocab=cfg.vocab, seed=seed)
+    train_half = tokens[: len(tokens) // 2]
+    params = init_params(cfg, seed=seed)
+    names = sorted(params)
+    flat = [jnp.asarray(params[n]) for n in names]
+
+    rng = np.random.default_rng(seed ^ 0xADA)
+
+    def loss_fn(flat_params, batch_tokens):
+        p = dict(zip(names, flat_params))
+        logits = train_forward(p, cfg, batch_tokens[:, :-1])
+        targets = batch_tokens[:, 1:]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        return (logz - gold).mean()
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    # Hand-rolled Adam.
+    mom = [jnp.zeros_like(x) for x in flat]
+    var = [jnp.zeros_like(x) for x in flat]
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def adam_update(flat, grads, mom, var, step):
+        out_f, out_m, out_v = [], [], []
+        for x, g, m, v in zip(flat, grads, mom, var):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1**step)
+            vhat = v / (1 - b2**step)
+            out_f.append(x - lr * mhat / (jnp.sqrt(vhat) + eps))
+            out_m.append(m)
+            out_v.append(v)
+        return out_f, out_m, out_v
+
+    t0 = time.time()
+    loss = float("nan")
+    losses = []
+    for step in range(1, steps + 1):
+        starts = rng.integers(0, len(train_half) - window - 1, size=batch)
+        batch_tokens = jnp.asarray(
+            np.stack([train_half[s : s + window + 1] for s in starts]).astype(np.int32)
+        )
+        loss, grads = grad_fn(flat, batch_tokens)
+        flat, mom, var = adam_update(flat, grads, mom, var, step)
+        losses.append(float(loss))
+        if verbose and (step % log_every == 0 or step == 1):
+            print(f"step {step:4d}  loss {float(loss):.4f}  ({time.time() - t0:.1f}s)")
+    params = {n: np.asarray(x) for n, x in zip(names, flat)}
+    return params, tokens, log_probs, float(loss)
+
+
+# ---------------------------------------------------------------- export
+
+
+def export_weights(params: dict, path) -> None:
+    tf = TensorFile()
+    # Deterministic, rust-compatible order (ModelWeights::from_tensor_file
+    # looks tensors up by name, so any order works; keep it readable).
+    for name in sorted(params):
+        tf.push(name, params[name].astype(np.float32))
+    tf.save(path)
+
+
+def export_corpus(tokens: np.ndarray, log_probs: np.ndarray, path) -> None:
+    tf = TensorFile()
+    tf.push("tokens", tokens.astype(np.int32))
+    tf.push("log_probs", log_probs.astype(np.float32))
+    tf.save(path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--out-weights", default="../artifacts/weights.f32.bin")
+    ap.add_argument("--out-corpus", default="../artifacts/corpus.bin")
+    args = ap.parse_args()
+    params, tokens, log_probs, loss = train(steps=args.steps, seed=args.seed)
+    h = corpus_entropy(tokens, log_probs)
+    print(f"final loss {loss:.4f}  (source entropy {h:.4f} nats, uniform {np.log(256):.4f})")
+    export_weights(params, args.out_weights)
+    export_corpus(tokens, log_probs, args.out_corpus)
+    print(f"wrote {args.out_weights} and {args.out_corpus}")
+
+
+if __name__ == "__main__":
+    main()

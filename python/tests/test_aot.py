@@ -1,0 +1,84 @@
+"""AOT pipeline pieces: HLO text lowering, manifest schema, quant label
+parsing, corpus statistics. (The heavyweight full pipeline is exercised by
+`make artifacts`; these tests cover its components quickly.)"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import parse_quant_label, to_hlo_text
+from compile.train_tiny import corpus_entropy, make_corpus
+
+
+def test_parse_quant_labels():
+    q = parse_quant_label("m1v4g32")
+    assert (q.m, q.v, q.b, q.g) == (1, 4, 8, 32)
+    q = parse_quant_label("m2v8b6g-1")
+    assert (q.m, q.v, q.b, q.g) == (2, 8, 6, -1)
+    with pytest.raises(ValueError):
+        parse_quant_label("v4m1")
+
+
+def test_hlo_text_lowering_roundtrippable():
+    """The lowered text must be plain HLO (parseable header, no mosaic
+    custom-calls — interpret=True requirement)."""
+    fn = lambda x: (jnp.tanh(x) @ x.T,)
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec))
+    assert text.startswith("HloModule")
+    assert "custom-call" not in text or "Mosaic" not in text
+    assert "ROOT" in text
+
+
+def test_pallas_kernel_lowering_has_no_mosaic_calls():
+    from compile.kernels.codegemm import codegemm_matmul
+    from compile.quantize import QuantConfig, quantize
+
+    w = np.random.default_rng(0).normal(0, 0.05, (32, 64)).astype(np.float32)
+    q = quantize(w, QuantConfig(4, 1, 6, 32), iters=2)
+    fn = lambda x, c, cb, s: (codegemm_matmul(x, c, cb, s, g=32, tile_h=32, tile_w=32),)
+    specs = [
+        jax.ShapeDtypeStruct((1, 64), jnp.float32),
+        jax.ShapeDtypeStruct(q.codes.shape, jnp.int32),
+        jax.ShapeDtypeStruct(q.codebooks.shape, jnp.float32),
+        jax.ShapeDtypeStruct(q.scales.shape, jnp.float32),
+    ]
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "Mosaic" not in text, "pallas must be lowered with interpret=True"
+
+
+def test_corpus_is_structured_and_deterministic():
+    t1, lp1 = make_corpus(length=4000, seed=3)
+    t2, lp2 = make_corpus(length=4000, seed=3)
+    np.testing.assert_array_equal(t1, t2)
+    np.testing.assert_array_equal(lp1, lp2)
+    h = corpus_entropy(t1, lp1)
+    assert 0.1 < h < 0.5 * np.log(256), h
+    # transition rows are normalized
+    z = np.exp(lp1).sum(1)
+    np.testing.assert_allclose(z, 1.0, atol=1e-3)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_schema():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    m = json.load(open(path))
+    assert m["version"] == 1
+    assert m["engine"] == "codegemm"
+    assert m["model"]["vocab"] == 256
+    assert set(m["quant"]) == {"v", "m", "b", "g"}
+    names = m["weight_args"]
+    assert names[0] == "embedding"
+    assert any(n.endswith(".codes") for n in names)
+    arts = {a["batch"]: a["hlo"] for a in m["artifacts"]}
+    assert 1 in arts
+    base = os.path.dirname(path)
+    for f in list(arts.values()) + [m["weights_file"]]:
+        assert os.path.exists(os.path.join(base, f)), f

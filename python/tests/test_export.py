@@ -1,0 +1,60 @@
+"""TensorFile (CGTF) container: roundtrip, format details pinned to the
+rust implementation, error cases."""
+
+import numpy as np
+import pytest
+
+from compile.export import MAGIC, TensorFile
+
+
+def test_roundtrip_all_dtypes():
+    tf = TensorFile()
+    tf.push("w", np.arange(6, dtype=np.float32).reshape(2, 3))
+    tf.push("codes", np.array([0, 255, 7], np.uint8))
+    tf.push("idx", np.array([[-1, 2]], np.int32))
+    tf.push("halfbits", np.array([0x3C00, 0xC000], np.uint16))
+    back = TensorFile.from_bytes(tf.to_bytes())
+    assert back.names() == ["w", "codes", "idx", "halfbits"]
+    for n in tf.names():
+        np.testing.assert_array_equal(back.get(n), tf.get(n))
+        assert back.get(n).dtype == tf.get(n).dtype
+
+
+def test_format_layout_matches_rust():
+    """Byte-level pinning: magic, little-endian header length, compact JSON."""
+    tf = TensorFile()
+    tf.push("x", np.array([1.0], np.float32))
+    raw = tf.to_bytes()
+    assert raw[:8] == MAGIC == b"CGTF0001"
+    hlen = int.from_bytes(raw[8:16], "little")
+    header = raw[16 : 16 + hlen].decode()
+    assert header.startswith('{"tensors":[{"name":"x","dtype":"f32","shape":[1],')
+    # data section is exactly the f32 payload
+    assert raw[16 + hlen :] == np.array([1.0], "<f4").tobytes()
+
+
+def test_duplicate_name_rejected():
+    tf = TensorFile()
+    tf.push("a", np.zeros(1, np.float32))
+    with pytest.raises(ValueError):
+        tf.push("a", np.zeros(1, np.float32))
+
+
+def test_unsupported_dtype_rejected():
+    tf = TensorFile()
+    with pytest.raises(ValueError):
+        tf.push("bad", np.zeros(1, np.float64))
+
+
+def test_bad_magic_rejected():
+    with pytest.raises(ValueError):
+        TensorFile.from_bytes(b"NOTMAGIC" + b"\0" * 16)
+
+
+def test_file_roundtrip(tmp_path):
+    tf = TensorFile()
+    tf.push("w", np.random.default_rng(0).normal(size=(4, 4)).astype(np.float32))
+    p = tmp_path / "t.bin"
+    tf.save(p)
+    back = TensorFile.load(p)
+    np.testing.assert_array_equal(back.get("w"), tf.get("w"))

@@ -1,0 +1,101 @@
+"""Quantizer properties: reconstruction error trends, Eq. 1 accounting,
+determinism, f16 storage grid."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quantize import QuantConfig, bits_per_weight, quantize
+
+
+def rand_w(n, k, seed=0, std=0.05):
+    return np.random.default_rng(seed).normal(0, std, (n, k)).astype(np.float32)
+
+
+def rel_err(q, w):
+    return np.linalg.norm(q.dequantize() - w) / np.linalg.norm(w)
+
+
+def test_reconstruction_bounded():
+    w = rand_w(64, 128)
+    for cfg in [QuantConfig(4, 1, 8, 32), QuantConfig(8, 2, 8, -1)]:
+        q = quantize(w, cfg, iters=6)
+        assert rel_err(q, w) < 0.6, cfg
+
+
+def test_more_codebooks_reduce_error():
+    w = rand_w(64, 128, seed=1)
+    e1 = rel_err(quantize(w, QuantConfig(8, 1, 6, -1), iters=6), w)
+    e2 = rel_err(quantize(w, QuantConfig(8, 2, 6, -1), iters=6), w)
+    assert e2 < e1
+
+
+def test_more_bits_reduce_error():
+    w = rand_w(64, 128, seed=2)
+    errs = [rel_err(quantize(w, QuantConfig(8, 1, b, -1), iters=6), w) for b in (2, 4, 8)]
+    assert errs[2] < errs[1] < errs[0]
+
+
+def test_finer_groups_help_banded_scales():
+    rng = np.random.default_rng(3)
+    n, k = 32, 128
+    band = 1.0 + 9.0 * (np.arange(k) // 32) / 3.0
+    w = (rng.normal(0, 0.01, (n, k)) * band).astype(np.float32)
+    coarse = rel_err(quantize(w, QuantConfig(4, 1, 4, -1), iters=6), w)
+    fine = rel_err(quantize(w, QuantConfig(4, 1, 4, 32), iters=6), w)
+    assert fine < coarse
+
+
+def test_deterministic():
+    w = rand_w(32, 64, seed=4)
+    a = quantize(w, QuantConfig(4, 1, 6, 32), seed=11)
+    b = quantize(w, QuantConfig(4, 1, 6, 32), seed=11)
+    np.testing.assert_array_equal(a.codes, b.codes)
+    np.testing.assert_array_equal(a.codebooks, b.codebooks)
+
+
+def test_stored_values_on_f16_grid():
+    w = rand_w(16, 64, seed=5)
+    q = quantize(w, QuantConfig(4, 1, 6, 32), iters=4)
+    np.testing.assert_array_equal(q.codebooks, q.codebooks.astype(np.float16).astype(np.float32))
+    np.testing.assert_array_equal(q.scales, q.scales.astype(np.float16).astype(np.float32))
+
+
+@pytest.mark.parametrize(
+    "v,m,b,g,expected",
+    [
+        # Table 1 of the paper (4096-class square layers).
+        (4, 1, 8, -1, 2.005),
+        (8, 2, 8, -1, 2.008),
+        (16, 4, 8, -1, 2.020),
+        (8, 1, 8, 16, 2.002),
+        (16, 3, 8, 32, 2.012),
+    ],
+)
+def test_table1_bits_per_weight(v, m, b, g, expected):
+    q = bits_per_weight(QuantConfig(v, m, b, g), 4096, 4096)
+    assert abs(q - expected) < 0.01, (q, expected)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    v=st.sampled_from([4, 8]),
+    m=st.integers(1, 3),
+    b=st.sampled_from([3, 6, 8]),
+    seed=st.integers(0, 1000),
+)
+def test_codes_in_range_and_shapes(v, m, b, seed):
+    n, k = 16, 64
+    cfg = QuantConfig(v, m, b, 32)
+    q = quantize(rand_w(n, k, seed=seed), cfg, iters=3, seed=seed)
+    assert q.codes.shape == (n, k // v, m)
+    assert q.codebooks.shape == (m, 2**b, v)
+    assert q.scales.shape == (n, k // 32)
+    assert q.codes.min() >= 0 and q.codes.max() < 2**b
+
+
+def test_invalid_configs_rejected():
+    with pytest.raises(ValueError):
+        QuantConfig(4, 1, 8, 30).validate(128)  # g not multiple of v… (30 % 4)
+    with pytest.raises(ValueError):
+        QuantConfig(8, 1, 8, 32).validate(100)  # k not multiple of v

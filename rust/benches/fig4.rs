@@ -1,0 +1,9 @@
+//! Bench: paper Figure 4 — (a) footprint vs latency sweep on the A100
+//! model; (b) footprint vs perplexity sweep on the tiny-model substrate.
+use codegemm::bench::tables::{self, EvalContext};
+
+fn main() {
+    println!("{}", tables::fig4a());
+    let ctx = EvalContext::load(std::path::Path::new("artifacts"));
+    println!("{}", tables::fig4b(&ctx));
+}

@@ -1,0 +1,11 @@
+//! Bench: paper Figure 5 + Tables 4/5 — throughput vs accuracy for every
+//! method (throughput from the A100 model; accuracy measured on the tiny
+//! model under each quantized engine).
+use codegemm::bench::tables::{self, EvalContext};
+
+fn main() {
+    let ctx = EvalContext::load(std::path::Path::new("artifacts"));
+    println!("{}", tables::table4(&ctx));
+    println!("{}", tables::table5(&ctx));
+    println!("{}", tables::fig5(&ctx));
+}

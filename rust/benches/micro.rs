@@ -1,0 +1,90 @@
+//! Micro-benchmarks of the L3 hot paths: CPU GEMM engines across shapes
+//! and batch sizes, Psumbook construction, the quantizer, and (when
+//! artifacts exist) the AOT/PJRT decode step — the numbers behind
+//! EXPERIMENTS.md §Perf.
+use codegemm::bench::harness::{black_box, run_bench, BenchOptions};
+use codegemm::config::QuantConfig;
+use codegemm::coordinator::{DecodeBackend, PjrtBackend, SlotStep};
+use codegemm::gemm::{CodeGemmEngine, DenseEngine, DequantEngine, GemmEngine, LutGemmEngine, Psumbook};
+use codegemm::quant::bcq::BcqLinear;
+use codegemm::quant::Quantizer;
+use codegemm::runtime::ModelRuntime;
+use codegemm::util::prng::Prng;
+
+fn main() {
+    let opts = BenchOptions::from_env();
+    let shapes = [(1usize, 1024usize, 1024usize), (1, 4096, 1024), (4, 1024, 1024), (8, 1024, 1024)];
+    for (mb, n, k) in shapes {
+        let w = Prng::seeded(1).normal_vec(n * k, 0.02);
+        let x = Prng::seeded(2).normal_vec(k * mb, 1.0);
+        let flops = 2.0 * (mb * n * k) as f64;
+        let mut dense = DenseEngine::new(w.clone(), n, k);
+        let r = run_bench(&format!("dense      M{mb} {n}x{k}"), opts, || {
+            black_box(dense.gemm(&x, mb));
+        });
+        println!("{}   {:.2} GFLOP/s", r.line(), flops / r.mean_us() / 1e3);
+        for label in ["m1v4g128", "m2v8g128"] {
+            let cfg = QuantConfig::parse_label(label).unwrap();
+            let q = Quantizer::new(cfg).quantize(&w, n, k);
+            let mut cg = CodeGemmEngine::from_quantized(&q);
+            let mut dq = DequantEngine::from_quantized(&q);
+            let r = run_bench(&format!("codegemm-{label} M{mb} {n}x{k}"), opts, || {
+                black_box(cg.gemm(&x, mb));
+            });
+            println!("{}   {:.2} eff-GFLOP/s", r.line(), flops / r.mean_us() / 1e3);
+            let r = run_bench(&format!("dequant-{label}  M{mb} {n}x{k}"), opts, || {
+                black_box(dq.gemm(&x, mb));
+            });
+            println!("{}   {:.2} eff-GFLOP/s", r.line(), flops / r.mean_us() / 1e3);
+        }
+        if mb == 1 {
+            let bcq = BcqLinear::quantize(&w, n, k, 2, 128).unwrap();
+            let mut lut = LutGemmEngine::new(bcq);
+            let r = run_bench(&format!("lutgemm-q2g128 {n}x{k}"), opts, || {
+                black_box(lut.gemv(&x));
+            });
+            println!("{}", r.line());
+        }
+    }
+    // Psumbook build in isolation.
+    {
+        let cfg = QuantConfig::m2v8g128();
+        let q = Quantizer::new(cfg).quantize(&Prng::seeded(1).normal_vec(256 * 1024, 0.02), 256, 1024);
+        let x = Prng::seeded(2).normal_vec(1024, 1.0);
+        let mut p = Psumbook::empty(1024 / cfg.v, cfg.m, cfg.n_centroids(), 1);
+        let r = run_bench("psumbook-build K=1024 m2v8", opts, || {
+            black_box(p.build(&q.codebooks, cfg.v, &x));
+        });
+        println!("{}", r.line());
+    }
+    // Quantizer throughput.
+    {
+        let w = Prng::seeded(3).normal_vec(512 * 512, 0.02);
+        let r = run_bench("quantize 512x512 m1v4g128", BenchOptions { trials: 5, warmup: 1, ..opts }, || {
+            black_box(Quantizer::new(QuantConfig::m1v4g128()).quantize(&w, 512, 512));
+        });
+        println!("{}", r.line());
+    }
+    // AOT/PJRT decode step (the serve hot path).
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        for batch in [1usize, 4] {
+            let rt = ModelRuntime::load("artifacts").unwrap();
+            if !rt.batch_sizes().contains(&batch) {
+                continue;
+            }
+            let mut be = PjrtBackend::with_batch(rt, batch);
+            let steps: Vec<SlotStep> =
+                (0..batch).map(|s| SlotStep { slot: s, token: 65 + s, pos: 0 }).collect();
+            let mut pos = 0usize;
+            let r = run_bench(&format!("pjrt-decode-step b{batch}"), opts, || {
+                let st: Vec<SlotStep> =
+                    steps.iter().map(|s| SlotStep { pos: pos % 127, ..*s }).collect();
+                black_box(be.step(&st).unwrap());
+                pos += 1;
+            });
+            println!("{}   ({:.0} tok/s at this batch)", r.line(), batch as f64 * 1e6 / r.mean_us());
+        }
+    } else {
+        println!("pjrt-decode-step: skipped (run `make artifacts`)");
+    }
+}

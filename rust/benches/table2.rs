@@ -1,0 +1,35 @@
+//! Bench: regenerate paper Table 2 (decoder-block latency, 8B + 70B) from
+//! the calibrated A100 model, and time the CPU CodeGEMM engine on a
+//! scaled-down block as a correctness-bearing wall-clock reference.
+use codegemm::bench::harness::{black_box, run_bench, BenchOptions};
+use codegemm::bench::tables;
+use codegemm::bench::workloads::{scaled_block_shapes, LLAMA3_8B};
+use codegemm::config::QuantConfig;
+use codegemm::gemm::{CodeGemmEngine, GemmEngine};
+use codegemm::quant::Quantizer;
+use codegemm::util::prng::Prng;
+
+fn main() {
+    println!("{}", tables::table2());
+    // CPU wall-clock on a 16×-scaled 8B block (absolute µs are CPU
+    // numbers; the A100 µs come from the model above).
+    let opts = BenchOptions::from_env();
+    for label in ["m1v4g128", "m2v8g128"] {
+        let cfg = QuantConfig::parse_label(label).unwrap();
+        let mut engines: Vec<CodeGemmEngine> = scaled_block_shapes(&LLAMA3_8B, 1, 16)
+            .into_iter()
+            .map(|(_, s)| {
+                let w = Prng::seeded(7).normal_vec(s.n * s.k, 0.02);
+                CodeGemmEngine::from_quantized(&Quantizer::new(cfg).quantize(&w, s.n, s.k))
+            })
+            .collect();
+        let xs: Vec<Vec<f32>> =
+            engines.iter().map(|e| Prng::seeded(8).normal_vec(e.dims().1, 1.0)).collect();
+        let r = run_bench(&format!("cpu-block16x-{label}"), opts, || {
+            for (e, x) in engines.iter_mut().zip(&xs) {
+                black_box(e.gemv(x));
+            }
+        });
+        println!("{}", r.line());
+    }
+}

@@ -1,0 +1,32 @@
+//! Bench: paper Table 6 — Psumbook build vs read split. Reports both the
+//! op-count split (the quantity the paper profiles per SM) and the
+//! measured CPU wall-clock split from the engine's phase timers.
+use codegemm::bench::tables;
+use codegemm::config::{KernelConfig, QuantConfig};
+use codegemm::gemm::{CodeGemmEngine, GemmEngine};
+use codegemm::quant::Quantizer;
+use codegemm::util::prng::Prng;
+
+fn main() {
+    println!("{}", tables::table6());
+    // Wall-clock split on one representative shape.
+    let (n, k) = (1024, 1024);
+    for label in ["m2v8g128", "m1v4g128"] {
+        let cfg = QuantConfig::parse_label(label).unwrap();
+        let w = Prng::seeded(1).normal_vec(n * k, 0.02);
+        let q = Quantizer::new(cfg).quantize(&w, n, k);
+        let mut e = CodeGemmEngine::with_kernel(&q, KernelConfig::new(32, 1024).unwrap());
+        let x = Prng::seeded(2).normal_vec(k, 1.0);
+        for _ in 0..20 {
+            let _ = e.gemv(&x);
+        }
+        let c = e.counters();
+        println!(
+            "{label} {n}x{k}: build/read = {:.1}%/{:.1}% by ops, {:.1}%/{:.1}% by CPU time",
+            100.0 * c.build_share_ops(),
+            100.0 * (1.0 - c.build_share_ops()),
+            100.0 * c.build_share_time(),
+            100.0 * (1.0 - c.build_share_time()),
+        );
+    }
+}

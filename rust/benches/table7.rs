@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Table 7 from the calibrated A100 model.
+use codegemm::bench::tables;
+
+fn main() {
+    println!("{}", tables::table7());
+}

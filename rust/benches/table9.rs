@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Table 9 from the calibrated A100 model.
+use codegemm::bench::tables;
+
+fn main() {
+    println!("{}", tables::table9());
+}

@@ -1,0 +1,143 @@
+//! Criterion-style micro/meso benchmark harness: warmup, fixed trial
+//! count or time budget, robust summary statistics, and uniform
+//! reporting. All `cargo bench` targets and the perf pass use this.
+
+use crate::util::stats::Summary;
+use crate::util::timer::Timer;
+
+/// Options controlling a bench run.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOptions {
+    /// Warmup iterations (not recorded).
+    pub warmup: usize,
+    /// Recorded iterations.
+    pub trials: usize,
+    /// Optional wall-clock budget in seconds; stops early once exceeded
+    /// (after at least `min_trials`).
+    pub max_seconds: f64,
+    pub min_trials: usize,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions { warmup: 3, trials: 30, max_seconds: 5.0, min_trials: 5 }
+    }
+}
+
+impl BenchOptions {
+    /// Fast preset for CI / smoke runs.
+    pub fn quick() -> Self {
+        BenchOptions { warmup: 1, trials: 5, max_seconds: 1.0, min_trials: 2 }
+    }
+
+    /// Honour the CODEGEMM_BENCH_QUICK env var (set by `make test`).
+    pub fn from_env() -> Self {
+        if std::env::var("CODEGEMM_BENCH_QUICK").is_ok() {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.summary.mean * 1e6
+    }
+
+    pub fn median_us(&self) -> f64 {
+        self.summary.p50 * 1e6
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:40} mean {:>10.2} us  p50 {:>10.2} us  p95 {:>10.2} us  (n={})",
+            self.name,
+            self.summary.mean * 1e6,
+            self.summary.p50 * 1e6,
+            self.summary.p95 * 1e6,
+            self.summary.n
+        )
+    }
+}
+
+/// Run a benchmark: `f` is invoked once per trial; its own duration is
+/// measured (use closures that do a fixed amount of work).
+pub fn run_bench(name: &str, opts: BenchOptions, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let budget = Timer::start();
+    let mut samples = Vec::with_capacity(opts.trials);
+    for i in 0..opts.trials {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_s());
+        if i + 1 >= opts.min_trials && budget.elapsed_s() > opts.max_seconds {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), summary: Summary::of(&samples) }
+}
+
+/// Run a benchmark whose closure processes `items` units per call and
+/// report per-unit throughput too.
+pub fn run_bench_throughput(
+    name: &str,
+    opts: BenchOptions,
+    items_per_call: f64,
+    f: impl FnMut(),
+) -> (BenchResult, f64) {
+    let r = run_bench(name, opts, f);
+    let per_sec = items_per_call / r.summary.p50.max(1e-12);
+    (r, per_sec)
+}
+
+/// Prevent the optimizer from discarding a value (stable-Rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_requested_trials() {
+        let r = run_bench("noop", BenchOptions { warmup: 1, trials: 8, max_seconds: 60.0, min_trials: 2 }, || {
+            black_box(1 + 1);
+        });
+        assert_eq!(r.summary.n, 8);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let opts = BenchOptions { warmup: 0, trials: 1000, max_seconds: 0.05, min_trials: 2 };
+        let r = run_bench("sleepy", opts, || std::thread::sleep(std::time::Duration::from_millis(10)));
+        assert!(r.summary.n < 1000, "stopped early, got {}", r.summary.n);
+        assert!(r.summary.n >= 2);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let (_r, tput) = run_bench_throughput("t", BenchOptions::quick(), 100.0, || {
+            black_box((0..100).sum::<usize>());
+        });
+        assert!(tput > 0.0);
+    }
+
+    #[test]
+    fn line_formats() {
+        let r = run_bench("fmt", BenchOptions::quick(), || {});
+        assert!(r.line().contains("fmt"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Benchmark harness and paper workload definitions.
+//!
+//! The offline registry carries no `criterion`, so `harness` implements
+//! warmup + timed trials + outlier-robust summaries, and `workloads`
+//! encodes the exact matrix shapes used by the paper's evaluation
+//! (Llama-3 8B/70B decoder-block linears, the Table 10 sweep, ...).
+
+pub mod harness;
+pub mod tables;
+pub mod workloads;
+
+pub use harness::{run_bench, BenchOptions, BenchResult};
+pub use workloads::{decoder_block_shapes, table10_shapes, GemmShape, LlamaGeometry};

@@ -1,0 +1,706 @@
+//! Regeneration of every table and figure in the paper's evaluation.
+//!
+//! Latency/telemetry tables come from the calibrated A100 analytic model
+//! (`crate::simulator`); accuracy columns come from the tiny trained model
+//! evaluated under each quantized engine (`crate::eval`) — trained weights
+//! and corpus are loaded from `artifacts/` when present, otherwise the
+//! analytically-constructed bigram model on the synthetic corpus is used
+//! (the fallback is clearly labelled in the output).
+//!
+//! Each function returns the rendered table(s); the CLI (`tables`
+//! subcommand) and the bench binaries both call through here.
+
+use crate::bench::workloads::{table3_shape, GemmShape, LLAMA3_70B, LLAMA3_8B};
+use crate::config::{KernelConfig, ModelConfig, QuantConfig};
+use crate::eval::corpus::{Corpus, CorpusSpec};
+use crate::eval::sweep::{measure, AccuracyRow};
+use crate::model::{EngineKind, ModelWeights};
+use crate::quant::calib::TuneLevel;
+use crate::quant::footprint::bits_per_weight;
+use crate::simulator::methods::Method;
+use crate::simulator::paper_data;
+use crate::simulator::power::table3_structure_holds;
+use crate::simulator::Simulator;
+use crate::util::npy::TensorFile;
+use crate::util::table::{fnum, Align, Table};
+use std::path::Path;
+
+/// Accuracy evaluation context: trained artifacts if present, otherwise
+/// the constructed-bigram fallback.
+pub struct EvalContext {
+    pub weights: ModelWeights,
+    pub held_out: Vec<usize>,
+    pub source: &'static str,
+    /// Tokens to score per measurement (trade speed vs noise).
+    pub max_tokens: usize,
+}
+
+impl EvalContext {
+    /// Load from `artifacts/` or fall back to the bigram construction.
+    pub fn load(artifacts: &Path) -> EvalContext {
+        match EvalContext::from_artifacts(artifacts) {
+            Some(ctx) => ctx,
+            None => EvalContext::bigram_fallback(),
+        }
+    }
+
+    fn from_artifacts(dir: &Path) -> Option<EvalContext> {
+        let wf = dir.join("weights.f32.bin");
+        let cf = dir.join("corpus.bin");
+        if !wf.exists() || !cf.exists() {
+            return None;
+        }
+        let weights = ModelWeights::load(ModelConfig::tiny(), &wf).ok()?;
+        let tf = TensorFile::load(&cf).ok()?;
+        let tokens: Vec<usize> = tf.get("tokens").ok()?.data.as_i32().ok()?.iter().map(|&t| t as usize).collect();
+        let held_out = tokens[tokens.len() / 2..].to_vec();
+        Some(EvalContext { weights, held_out, source: "trained tiny model (artifacts/)", max_tokens: 256 })
+    }
+
+    pub fn bigram_fallback() -> EvalContext {
+        let corpus = Corpus::synthesize(CorpusSpec { vocab: 64, len: 4096, ..Default::default() });
+        let weights = ModelWeights::bigram(ModelConfig::tiny(), &corpus.log_probs, 7);
+        let (_, held) = corpus.split();
+        EvalContext {
+            weights,
+            held_out: held.to_vec(),
+            source: "constructed bigram model (no artifacts — run `make artifacts`)",
+            max_tokens: 160,
+        }
+    }
+
+    pub fn measure(&self, kind: EngineKind) -> AccuracyRow {
+        measure(&self.weights, kind, None, &self.held_out, self.max_tokens)
+    }
+}
+
+fn sim() -> Simulator {
+    Simulator::a100()
+}
+
+// ---------------------------------------------------------------- Table 1
+
+/// Table 1: average bits per weight per (v, m, b, g).
+pub fn table1() -> String {
+    let mut t = Table::new(
+        "Table 1 — average bits per weight (Eq. 1, 4096×4096 layers)",
+        &["v", "m", "b", "g", "q_code", "q_codebook", "q_norm", "q̄ (model)", "q̄ (paper)"],
+    );
+    let rows: &[(usize, usize, usize, i64, f64)] = &[
+        (4, 1, 8, -1, 2.005),
+        (8, 2, 8, -1, 2.008),
+        (16, 4, 8, -1, 2.020),
+        (8, 1, 8, 16, 2.002),
+        (16, 3, 8, 32, 2.012),
+    ];
+    for &(v, m, b, g, paper) in rows {
+        let cfg = QuantConfig::new(v, m, b, g).unwrap();
+        let f = bits_per_weight(&cfg, 4096, 4096);
+        t.row(vec![
+            v.to_string(),
+            m.to_string(),
+            b.to_string(),
+            if g < 0 { "-1".into() } else { g.to_string() },
+            fnum(f.q_code, 3),
+            fnum(f.q_codebook, 3),
+            fnum(f.q_norm, 3),
+            fnum(f.total, 3),
+            fnum(paper, 3),
+        ]);
+    }
+    t.render()
+}
+
+// ---------------------------------------------------------------- Table 2
+
+/// Methods of Table 2/9/10, in paper column order.
+pub fn table2_methods() -> Vec<Method> {
+    vec![
+        Method::CuBlas,
+        Method::LutGemm { q: 2, g: 128 },
+        Method::QuipSharp,
+        Method::Qtip,
+        Method::aqlm_1x16(),
+        Method::aqlm_2x8(),
+        Method::codegemm_m2v8g128(),
+        Method::codegemm_m1v4g128(),
+    ]
+}
+
+/// Table 2: decoder-block kernel latency, 8B and 70B, model vs paper.
+pub fn table2() -> String {
+    let s = sim();
+    let mut t = Table::new(
+        "Table 2 — decoder-block linear latency (µs), M=1 (model | paper)",
+        &["model", "cuBLAS", "LUTGEMM", "QuIP#", "QTIP", "AQLM-1x16", "AQLM-2x8", "CG-m2v8", "CG-m1v4"],
+    );
+    for (geom, p) in [(LLAMA3_8B, &paper_data::TABLE2[0]), (LLAMA3_70B, &paper_data::TABLE2[1])] {
+        let l = |m: &Method| s.block_latency_us(m, &geom, 1);
+        let ms = table2_methods();
+        let paper = [p.cublas, p.lutgemm, p.quip, p.qtip, p.aqlm_1x16, p.aqlm_2x8, p.codegemm_m2v8, p.codegemm_m1v4];
+        let mut cells = vec![p.model.to_string()];
+        for (m, pv) in ms.iter().zip(paper) {
+            cells.push(format!("{} | {}", fnum(l(m), 1), fnum(pv, 1)));
+        }
+        t.row(cells);
+    }
+    t.render()
+}
+
+// ---------------------------------------------------------------- Table 3
+
+/// Table 3: GEMV telemetry on (1, 28672, 8192).
+pub fn table3() -> String {
+    let s = sim();
+    let shape = table3_shape();
+    let methods = [
+        Method::CuBlas,
+        Method::aqlm_1x16(),
+        Method::aqlm_2x8(),
+        Method::codegemm_m2v8g128(),
+        Method::codegemm_m1v4g128(),
+    ];
+    let rows: Vec<_> = methods.iter().map(|m| s.telemetry(m, shape)).collect();
+    let mut t = Table::new(
+        "Table 3 — GEMV (1, 28672, 8192) telemetry (model | paper)",
+        &["Method", "TFLOPS", "Power (W)", "GFLOPS/W", "GPU Util %", "Mem Util %"],
+    );
+    for (tele, p) in rows.iter().zip(paper_data::TABLE3) {
+        t.row(vec![
+            tele.method.clone(),
+            format!("{} | {}", fnum(tele.tflops, 2), fnum(p.tflops, 2)),
+            format!("{} | {}", fnum(tele.power_w, 1), fnum(p.power_w, 1)),
+            format!("{} | {}", fnum(tele.gflops_per_w, 2), fnum(p.gflops_per_w, 2)),
+            format!("{} | {}", fnum(tele.gpu_util, 1), fnum(p.gpu_util, 1)),
+            format!("{} | {}", fnum(tele.mem_util, 1), fnum(p.mem_util, 1)),
+        ]);
+    }
+    let verdict = match table3_structure_holds(&rows) {
+        Ok(()) => "qualitative structure HOLDS (orderings + AQLM-1x16 spin signature)".to_string(),
+        Err(e) => format!("STRUCTURE VIOLATION: {e}"),
+    };
+    format!("{}\n  {}\n", t.render(), verdict)
+}
+
+// ------------------------------------------------------------ Tables 4/5
+
+/// The accuracy/throughput method grid of Tables 4 and 5.
+pub fn table4(ctx: &EvalContext) -> String {
+    let s = sim();
+    let cfg_m1v4 = tiny_cfg(4, 1, 8);
+    let cfg_m2v8 = tiny_cfg(8, 2, 8);
+    let aqlm28 = tiny_cfg(8, 2, 8);
+    // Methods: (label, engine for accuracy, sim method for tok/s, paper tok/s, paper avg)
+    let rows: Vec<(String, Option<EngineKind>, Method, f64, f64)> = vec![
+        ("FP16".into(), Some(EngineKind::Dense), Method::CuBlas, 103.8, 71.26),
+        (
+            "FlexRound-q2g128".into(),
+            Some(EngineKind::Uniform { bits: 2, group: 32 }),
+            Method::LutGemm { q: 2, g: 128 },
+            205.3,
+            41.65,
+        ),
+        (
+            "AQLM-2x8".into(),
+            Some(EngineKind::Dequant { cfg: aqlm28, tune: TuneLevel::Calibrated }),
+            Method::aqlm_2x8(),
+            124.5,
+            47.82,
+        ),
+        (
+            "AQLM-1x16".into(),
+            Some(EngineKind::Dequant { cfg: tiny_cfg(8, 1, 12), tune: TuneLevel::Calibrated }),
+            Method::aqlm_1x16(),
+            49.0,
+            63.57,
+        ),
+        (
+            "CodeGEMM-m1v4".into(),
+            Some(EngineKind::CodeGemm { cfg: cfg_m1v4, kernel: KernelConfig::default(), tune: TuneLevel::Calibrated }),
+            Method::codegemm_m1v4g128(),
+            228.3,
+            53.93,
+        ),
+        (
+            "  +PV-Tuning".into(),
+            Some(EngineKind::CodeGemm { cfg: cfg_m1v4, kernel: KernelConfig::default(), tune: TuneLevel::PvTuned }),
+            Method::codegemm_m1v4g128(),
+            228.3,
+            63.96,
+        ),
+        (
+            "CodeGEMM-m2v8".into(),
+            Some(EngineKind::CodeGemm { cfg: cfg_m2v8, kernel: KernelConfig::default(), tune: TuneLevel::Calibrated }),
+            Method::codegemm_m2v8g128(),
+            214.4,
+            52.67,
+        ),
+        (
+            "  +PV-Tuning".into(),
+            Some(EngineKind::CodeGemm { cfg: cfg_m2v8, kernel: KernelConfig::default(), tune: TuneLevel::PvTuned }),
+            Method::codegemm_m2v8g128(),
+            214.4,
+            63.76,
+        ),
+    ];
+    let mut t = Table::new(
+        "Table 4 — Llama-3.1-8B-class accuracy & throughput (model | paper)",
+        &["Method", "tok/s (sim|paper)", "ppl", "top1 %", "top5 %", "Avg (paper)"],
+    );
+    for (label, kind, method, paper_toks, paper_avg) in rows {
+        let toks = s.tokens_per_s(&method, &LLAMA3_8B, 1);
+        let acc = kind.map(|k| ctx.measure(k));
+        let (ppl, top1, top5) = acc.map(|a| (a.ppl, a.top1, a.top5)).unwrap_or((f64::NAN, f64::NAN, f64::NAN));
+        t.row(vec![
+            label,
+            format!("{} | {}", fnum(toks, 1), fnum(paper_toks, 1)),
+            fnum(ppl, 2),
+            fnum(top1, 1),
+            fnum(top5, 1),
+            fnum(paper_avg, 2),
+        ]);
+    }
+    format!("{}\n  accuracy substrate: {}\n", t.render(), ctx.source)
+}
+
+/// Table 5: the 70B scaling table (throughput simulated at 70B geometry;
+/// accuracy columns share the tiny-model substrate with Table 4).
+pub fn table5(ctx: &EvalContext) -> String {
+    let s = sim();
+    let rows: Vec<(String, Option<EngineKind>, Method, f64)> = vec![
+        ("FP16".into(), Some(EngineKind::Dense), Method::CuBlas, f64::NAN), // OOM in paper
+        ("GPTQ-q2g128".into(), Some(EngineKind::Uniform { bits: 2, group: 32 }), Method::LutGemm { q: 2, g: 128 }, 41.7),
+        (
+            "AQLM-2x8".into(),
+            Some(EngineKind::Dequant { cfg: tiny_cfg(8, 2, 8), tune: TuneLevel::Calibrated }),
+            Method::aqlm_2x8(),
+            19.0,
+        ),
+        (
+            "AQLM-1x16".into(),
+            Some(EngineKind::Dequant { cfg: tiny_cfg(8, 1, 12), tune: TuneLevel::Calibrated }),
+            Method::aqlm_1x16(),
+            5.5,
+        ),
+        (
+            "CodeGEMM-m1v4g128".into(),
+            Some(EngineKind::codegemm(tiny_cfg(4, 1, 8))),
+            Method::codegemm_m1v4g128(),
+            51.2,
+        ),
+        (
+            "CodeGEMM-m1v4g32".into(),
+            Some(EngineKind::CodeGemm {
+                cfg: QuantConfig::new(4, 1, 8, 32).unwrap(),
+                kernel: KernelConfig::default(),
+                tune: TuneLevel::Calibrated,
+            }),
+            Method::codegemm(QuantConfig::new(4, 1, 8, 32).unwrap()),
+            49.1,
+        ),
+    ];
+    let mut t = Table::new(
+        "Table 5 — Llama-3.1-70B scaling (model | paper)",
+        &["Method", "tok/s (sim|paper)", "ppl", "top1 %", "top5 %"],
+    );
+    for (label, kind, method, paper_toks) in rows {
+        let toks = s.tokens_per_s(&method, &LLAMA3_70B, 1);
+        let acc = kind.map(|k| ctx.measure(k));
+        let (ppl, top1, top5) = acc.map(|a| (a.ppl, a.top1, a.top5)).unwrap_or((f64::NAN, f64::NAN, f64::NAN));
+        t.row(vec![
+            label,
+            format!("{} | {}", fnum(toks, 1), if paper_toks.is_nan() { "OOM".into() } else { fnum(paper_toks, 1) }),
+            fnum(ppl, 2),
+            fnum(top1, 1),
+            fnum(top5, 1),
+        ]);
+    }
+    let sp = s.tokens_per_s(&Method::codegemm_m1v4g128(), &LLAMA3_70B, 1)
+        / s.tokens_per_s(&Method::aqlm_1x16(), &LLAMA3_70B, 1);
+    format!(
+        "{}\n  accuracy substrate: {}\n  headline: CodeGEMM-m1v4 vs AQLM-1x16 at 70B = {:.2}× (paper 8.93×, tok/s 51.2/5.5 = 9.3×)\n",
+        t.render(),
+        ctx.source,
+        sp
+    )
+}
+
+/// Quantization configs for the tiny model: g=32 divides every tiny layer
+/// (k ∈ {128, 352}); the Llama-scale labels keep g=128.
+fn tiny_cfg(v: usize, m: usize, b: usize) -> QuantConfig {
+    QuantConfig::new(v, m, b, 32).unwrap()
+}
+
+// ---------------------------------------------------------------- Table 6
+
+/// Table 6: Psumbook build vs read cycle split.
+///
+/// Op counts are exact at the paper's true shapes (build `m·2^b·K·⌈N/t_h⌉·M`
+/// MACs, read `N·K·m/v·M` gathers — the same formulas the CPU engine's
+/// counters implement and unit tests validate); gathers are weighted 2×
+/// a build MAC in cycles (random table access vs streaming dot products —
+/// the single weight is derived once from the paper's first row and then
+/// applied everywhere, so all other rows are predictions).
+pub fn table6() -> String {
+    const READ_CYCLE_WEIGHT: f64 = 2.0;
+    let mut t = Table::new(
+        "Table 6 — Psumbook build vs read cycle share (%), weighted op model (model | paper build-%)",
+        &["M", "N", "K", "t_w", "m2v8 build%", "m1v4 build%"],
+    );
+    for r in paper_data::TABLE6 {
+        let mut cells = vec![r.m_batch.to_string(), r.n.to_string(), r.k.to_string(), r.tile_w.to_string()];
+        for (cfg, paper) in [
+            (QuantConfig::m2v8g128(), r.build_m2v8),
+            (QuantConfig::m1v4g128(), r.build_m1v4),
+        ] {
+            let th = 2048usize;
+            let mb = r.m_batch as f64;
+            let build = (cfg.m * cfg.n_centroids() * r.k * r.n.div_ceil(th)) as f64 * mb;
+            let read = (r.n * r.k * cfg.m / cfg.v) as f64 * mb;
+            let share = 100.0 * build / (build + READ_CYCLE_WEIGHT * read);
+            cells.push(format!("{} | {}", fnum(share, 1), fnum(paper, 1)));
+        }
+        t.row(cells);
+    }
+    format!(
+        "{}\n  build/read split is M-invariant (both phases scale with M — the paper's §A.1 point);\n  \
+         m2v8 > m1v4 build share holds everywhere; the paper's 8192² rows additionally see\n  \
+         per-SM occupancy effects an op-count model does not capture (45% vs modeled ~33%).\n",
+        t.render()
+    )
+}
+
+// ---------------------------------------------------------------- Table 7
+
+pub fn table7() -> String {
+    let s = sim();
+    let mut t = Table::new(
+        "Table 7 — tile-size sensitivity (µs), M=1 (model | paper)",
+        &["N", "K", "t_w", "t_h", "m2v8", "m1v4"],
+    );
+    for r in paper_data::TABLE7 {
+        let kernel = KernelConfig::new(r.tile_w, r.tile_h).unwrap();
+        let shape = GemmShape::new(1, r.n, r.k);
+        let m2 = s.latency_us(&Method::CodeGemm { cfg: QuantConfig::m2v8g128(), kernel }, shape);
+        let m1 = s.latency_us(&Method::CodeGemm { cfg: QuantConfig::m1v4g128(), kernel }, shape);
+        t.row(vec![
+            r.n.to_string(),
+            r.k.to_string(),
+            r.tile_w.to_string(),
+            r.tile_h.to_string(),
+            format!("{} | {}", fnum(m2, 2), fnum(r.m2v8, 2)),
+            format!("{} | {}", fnum(m1, 2), fnum(r.m1v4, 2)),
+        ]);
+    }
+    t.render()
+}
+
+// ---------------------------------------------------------------- Table 8
+
+pub fn table8() -> String {
+    let s = sim();
+    let mut t = Table::new(
+        "Table 8 — higher bit precisions (µs), g=128 b=8 t=(32,2048) (model | paper)",
+        &["N", "K", "m", "v", "bits", "latency"],
+    );
+    for r in paper_data::TABLE8 {
+        let shape = GemmShape::new(1, r.n, r.k);
+        let (label_m, label_v, lat, bits) = if r.m_books == 0 {
+            (String::from("-"), String::from("-"), s.latency_us(&Method::CuBlas, shape), 16.0)
+        } else {
+            let cfg = QuantConfig::new(r.v, r.m_books, 8, 128).unwrap();
+            (
+                r.m_books.to_string(),
+                r.v.to_string(),
+                s.latency_us(&Method::codegemm(cfg), shape),
+                bits_per_weight(&cfg, r.n, r.k).total,
+            )
+        };
+        t.row(vec![
+            r.n.to_string(),
+            r.k.to_string(),
+            label_m,
+            label_v,
+            format!("{} | {}", fnum(bits, 3), fnum(r.bits, 3)),
+            format!("{} | {}", fnum(lat, 2), fnum(r.latency, 2)),
+        ]);
+    }
+    t.render()
+}
+
+// ---------------------------------------------------------------- Table 9
+
+pub fn table9() -> String {
+    let s = sim();
+    let mut t = Table::new(
+        "Table 9 — 8B decoder-block latency vs batch (µs), fair dequant accounting (model | paper)",
+        &["BS", "cuBLAS", "Dequant", "cuBLAS+Deq", "AQLM-1x16", "AQLM-2x8", "QuIP#", "QTIP", "CG-m2v8", "CG-m1v4"],
+    );
+    for r in paper_data::TABLE9 {
+        let l = |m: &Method| s.block_latency_us(m, &LLAMA3_8B, r.batch);
+        let pairs: Vec<(f64, f64)> = vec![
+            (l(&Method::CuBlas), r.cublas),
+            (l(&Method::DequantStage), r.dequant_stage),
+            (l(&Method::CuBlasPlusDequant), r.cublas_plus_dequant),
+            (l(&Method::aqlm_1x16()), r.aqlm_1x16),
+            (l(&Method::aqlm_2x8()), r.aqlm_2x8),
+            (l(&Method::QuipSharp), r.quip),
+            (l(&Method::Qtip), r.qtip),
+            (l(&Method::codegemm_m2v8g128()), r.codegemm_m2v8),
+            (l(&Method::codegemm_m1v4g128()), r.codegemm_m1v4),
+        ];
+        let mut cells = vec![r.batch.to_string()];
+        cells.extend(pairs.iter().map(|(m, p)| format!("{} | {}", fnum(*m, 0), fnum(*p, 0))));
+        t.row(cells);
+    }
+    t.render()
+}
+
+// --------------------------------------------------------------- Table 10
+
+pub fn table10() -> String {
+    let s = sim();
+    let mut t = Table::new(
+        "Table 10 — kernel latency (µs) across (M, N, K) (model | paper)",
+        &["M", "N", "K", "cuBLAS", "AQLM-1x16", "AQLM-2x8", "CG-m2v8", "CG-m1v4", "QuIP#", "QTIP"],
+    );
+    for r in paper_data::TABLE10 {
+        let shape = GemmShape::new(r.m, r.n, r.k);
+        let pairs: Vec<(f64, f64)> = vec![
+            (s.latency_us(&Method::CuBlas, shape), r.cublas),
+            (s.latency_us(&Method::aqlm_1x16(), shape), r.aqlm_1x16),
+            (s.latency_us(&Method::aqlm_2x8(), shape), r.aqlm_2x8),
+            (s.latency_us(&Method::codegemm_m2v8g128(), shape), r.codegemm_m2v8),
+            (s.latency_us(&Method::codegemm_m1v4g128(), shape), r.codegemm_m1v4),
+            (s.latency_us(&Method::QuipSharp, shape), r.quip),
+            (s.latency_us(&Method::Qtip, shape), r.qtip),
+        ];
+        let mut cells = vec![r.m.to_string(), r.n.to_string(), r.k.to_string()];
+        cells.extend(pairs.iter().map(|(m, p)| format!("{} | {}", fnum(*m, 1), fnum(*p, 1))));
+        t.row(cells);
+    }
+    // Aggregate fit quality.
+    let mut errs = Vec::new();
+    for r in paper_data::TABLE10 {
+        let shape = GemmShape::new(r.m, r.n, r.k);
+        for (m, p) in [
+            (Method::CuBlas, r.cublas),
+            (Method::aqlm_2x8(), r.aqlm_2x8),
+            (Method::codegemm_m1v4g128(), r.codegemm_m1v4),
+            (Method::QuipSharp, r.quip),
+            (Method::Qtip, r.qtip),
+        ] {
+            errs.push(((s.latency_us(&m, shape) - p) / p).abs());
+        }
+    }
+    let mean_err = errs.iter().sum::<f64>() / errs.len() as f64;
+    format!("{}\n  mean |rel err| over fitted families: {:.1}%\n", t.render(), 100.0 * mean_err)
+}
+
+// ----------------------------------------------------------- Figures 4/5
+
+/// Figure 4(a): footprint vs latency sweep (8B geometry).
+pub fn fig4a() -> String {
+    let s = sim();
+    let mut t = Table::new(
+        "Figure 4(a) — memory footprint vs latency, Llama-3.1-8B block, M=1",
+        &["config", "q̄ (bits)", "block µs", "vs fp16"],
+    )
+    .align(1, Align::Right);
+    let fp16 = s.block_latency_us(&Method::CuBlas, &LLAMA3_8B, 1);
+    let mut rows: Vec<(QuantConfig, f64, f64)> = Vec::new();
+    for (v, m, g) in [
+        (4usize, 1usize, -1i64),
+        (4, 1, 128),
+        (4, 1, 32),
+        (4, 1, 16),
+        (4, 1, 4),
+        (8, 2, -1),
+        (8, 2, 128),
+        (8, 2, 32),
+        (8, 2, 8),
+        (8, 1, 128),
+        (16, 3, 32),
+        (4, 2, 128),
+        (8, 4, 128),
+    ] {
+        let Ok(cfg) = QuantConfig::new(v, m, 8, g) else { continue };
+        let bits = bits_per_weight(&cfg, 4096, 4096).total;
+        let lat = s.block_latency_us(&Method::codegemm(cfg), &LLAMA3_8B, 1);
+        rows.push((cfg, bits, lat));
+    }
+    rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    for (cfg, bits, lat) in &rows {
+        t.row(vec![cfg.label(), fnum(*bits, 3), fnum(*lat, 1), format!("{:.2}×", fp16 / lat)]);
+    }
+    // Qualitative check from the paper: per-vector normalization (g=v)
+    // spikes latency; g>=32 is nearly flat.
+    let lat_of = |g: i64| {
+        let cfg = QuantConfig::new(4, 1, 8, g).unwrap();
+        s.block_latency_us(&Method::codegemm(cfg), &LLAMA3_8B, 1)
+    };
+    let flat = (lat_of(128) - lat_of(32)).abs() / lat_of(128);
+    let spike = lat_of(4) / lat_of(128);
+    format!(
+        "{}\n  g∈{{32,128}} latency spread {:.1}% (paper: minimal); g=v latency {:.2}× g=128 (paper: sharp rise)\n",
+        t.render(),
+        100.0 * flat,
+        spike
+    )
+}
+
+/// Figure 4(b): footprint vs perplexity sweep on the tiny model.
+pub fn fig4b(ctx: &EvalContext) -> String {
+    let mut t = Table::new(
+        "Figure 4(b) — memory footprint vs perplexity (tiny-model substrate)",
+        &["config", "q̄ @Llama scale", "ppl", "top1 %"],
+    );
+    let mut rows = Vec::new();
+    for (v, m, g) in [
+        (4usize, 1usize, -1i64),
+        (8, 2, -1),
+        (16, 4, -1),
+        (4, 1, 32),
+        (8, 2, 32),
+        (8, 1, 16),
+        (4, 2, 32),
+        (8, 4, 32),
+        (16, 2, 32),
+    ] {
+        let Ok(cfg) = QuantConfig::new(v, m, 8, g) else { continue };
+        // tiny layers need g | k (k ∈ {128, 352}): remap g=-1 to row-wise
+        // (valid) and keep g=16/32 (both divide).
+        let bits = bits_per_weight(&cfg, 4096, 4096).total;
+        let acc = ctx.measure(EngineKind::codegemm(cfg));
+        rows.push((cfg.label(), bits, acc));
+    }
+    rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let mut monotone_pairs = 0;
+    let mut total_pairs = 0;
+    for w in rows.windows(2) {
+        if w[1].1 > w[0].1 + 0.2 {
+            total_pairs += 1;
+            if w[1].2.ppl <= w[0].2.ppl * 1.05 {
+                monotone_pairs += 1;
+            }
+        }
+    }
+    for (label, bits, acc) in &rows {
+        t.row(vec![label.clone(), fnum(*bits, 3), fnum(acc.ppl, 3), fnum(acc.top1, 1)]);
+    }
+    format!(
+        "{}\n  substrate: {} — more bits ⇒ lower ppl held for {monotone_pairs}/{total_pairs} bit-separated pairs\n",
+        t.render(),
+        ctx.source
+    )
+}
+
+/// Figure 5: throughput vs accuracy scatter (8B and 70B).
+pub fn fig5(ctx: &EvalContext) -> String {
+    let s = sim();
+    let mut out = String::new();
+    for (geom, tag) in [(LLAMA3_8B, "8B"), (LLAMA3_70B, "70B")] {
+        let mut t = Table::new(
+            &format!("Figure 5 ({tag}) — throughput vs accuracy"),
+            &["method", "tok/s (sim)", "ppl", "top1 %"],
+        );
+        let entries: Vec<(String, EngineKind, Method)> = vec![
+            ("FP16".into(), EngineKind::Dense, Method::CuBlas),
+            ("Uniform-2bit".into(), EngineKind::Uniform { bits: 2, group: 32 }, Method::LutGemm { q: 2, g: 128 }),
+            (
+                "AQLM-2x8".into(),
+                EngineKind::Dequant { cfg: tiny_cfg(8, 2, 8), tune: TuneLevel::Calibrated },
+                Method::aqlm_2x8(),
+            ),
+            (
+                "AQLM-1x16".into(),
+                EngineKind::Dequant { cfg: tiny_cfg(8, 1, 12), tune: TuneLevel::Calibrated },
+                Method::aqlm_1x16(),
+            ),
+            ("CodeGEMM-m1v4".into(), EngineKind::codegemm(tiny_cfg(4, 1, 8)), Method::codegemm_m1v4g128()),
+            (
+                "CodeGEMM-m1v4+PV".into(),
+                EngineKind::CodeGemm { cfg: tiny_cfg(4, 1, 8), kernel: KernelConfig::default(), tune: TuneLevel::PvTuned },
+                Method::codegemm_m1v4g128(),
+            ),
+            ("CodeGEMM-m2v8".into(), EngineKind::codegemm(tiny_cfg(8, 2, 8)), Method::codegemm_m2v8g128()),
+        ];
+        for (label, kind, method) in entries {
+            let toks = s.tokens_per_s(&method, &geom, 1);
+            let acc = ctx.measure(kind);
+            t.row(vec![label, fnum(toks, 1), fnum(acc.ppl, 2), fnum(acc.top1, 1)]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    let sp8 = s.tokens_per_s(&Method::codegemm_m1v4g128(), &LLAMA3_8B, 1)
+        / s.tokens_per_s(&Method::aqlm_2x8(), &LLAMA3_8B, 1);
+    let sp70 = s.tokens_per_s(&Method::codegemm_m1v4g128(), &LLAMA3_70B, 1)
+        / s.tokens_per_s(&Method::aqlm_1x16(), &LLAMA3_70B, 1);
+    out.push_str(&format!(
+        "  headline speedups at comparable accuracy: 8B {:.2}× (paper 1.83×), 70B {:.2}× (paper 8.93×)\n",
+        sp8, sp70
+    ));
+    out
+}
+
+/// Render one table/figure by id.
+pub fn render(id: &str, ctx: &EvalContext) -> Option<String> {
+    Some(match id {
+        "1" => table1(),
+        "2" => table2(),
+        "3" => table3(),
+        "4" => table4(ctx),
+        "5" => table5(ctx),
+        "6" => table6(),
+        "7" => table7(),
+        "8" => table8(),
+        "9" => table9(),
+        "10" => table10(),
+        "fig4a" => fig4a(),
+        "fig4b" => fig4b(ctx),
+        "fig5" => fig5(ctx),
+        _ => return None,
+    })
+}
+
+/// All ids in paper order.
+pub fn all_ids() -> &'static [&'static str] {
+    &["1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "fig4a", "fig4b", "fig5"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_tables_render() {
+        for id in ["1", "2", "3", "7", "8", "9", "10", "fig4a"] {
+            let ctx = EvalContext::bigram_fallback();
+            let s = render(id, &ctx).unwrap();
+            assert!(s.len() > 100, "{id} too short");
+            assert!(!s.contains("NaN"), "{id} contains NaN:\n{s}");
+        }
+    }
+
+    #[test]
+    fn table6_build_share_in_paper_ballpark() {
+        let s = table6();
+        assert!(s.contains('|'));
+    }
+
+    #[test]
+    fn table10_fit_is_tight() {
+        let s = table10();
+        // "mean |rel err| over fitted families: X%" — must stay under 25%.
+        let pct: f64 = s
+            .split("mean |rel err| over fitted families:")
+            .nth(1)
+            .unwrap()
+            .trim()
+            .trim_end_matches('%')
+            .parse()
+            .unwrap();
+        assert!(pct < 25.0, "mean rel err {pct}%");
+    }
+}

@@ -1,0 +1,218 @@
+//! Paper workload geometry.
+//!
+//! The paper evaluates kernels on the linear-layer shapes of Llama-3
+//! 8B/70B decoder blocks (Table 2/9: "sum of kernel execution times for
+//! all linear layers in a single Transformer decoder block without layer
+//! fusion") and a sweep of raw (M, N, K) GEMM shapes (Table 10).
+
+/// One GEMM: output = W(N×K) · x(K×M). `m_batch` is the paper's M (token
+/// batch), `n` the output features, `k` the reduction dim.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmShape {
+    pub m_batch: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl GemmShape {
+    pub fn new(m_batch: usize, n: usize, k: usize) -> GemmShape {
+        GemmShape { m_batch, n, k }
+    }
+
+    /// Multiply-accumulate count (2 flops each).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m_batch as f64 * self.n as f64 * self.k as f64
+    }
+
+    pub fn weight_elems(&self) -> usize {
+        self.n * self.k
+    }
+
+    pub fn label(&self) -> String {
+        format!("M{} N{} K{}", self.m_batch, self.n, self.k)
+    }
+}
+
+/// Transformer geometry for the models the paper evaluates.
+#[derive(Clone, Copy, Debug)]
+pub struct LlamaGeometry {
+    pub name: &'static str,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub ffn: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+}
+
+/// Llama-3 8B geometry (d=4096, 32 heads / 8 KV heads, ffn 14336).
+pub const LLAMA3_8B: LlamaGeometry = LlamaGeometry {
+    name: "llama3-8b",
+    hidden: 4096,
+    n_heads: 32,
+    n_kv_heads: 8,
+    ffn: 14336,
+    n_layers: 32,
+    vocab: 128_256,
+};
+
+/// Llama-3 70B geometry (d=8192, 64 heads / 8 KV heads, ffn 28672).
+pub const LLAMA3_70B: LlamaGeometry = LlamaGeometry {
+    name: "llama3-70b",
+    hidden: 8192,
+    n_heads: 64,
+    n_kv_heads: 8,
+    ffn: 28672,
+    n_layers: 80,
+    vocab: 128_256,
+};
+
+impl LlamaGeometry {
+    pub fn by_name(name: &str) -> Option<LlamaGeometry> {
+        match name {
+            "llama3-8b" | "8b" | "8B" => Some(LLAMA3_8B),
+            "llama3-70b" | "70b" | "70B" => Some(LLAMA3_70B),
+            _ => None,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.n_heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+}
+
+/// The 7 linear layers of one decoder block, as (label, GemmShape), for a
+/// given token batch `m_batch`: q/k/v/o projections + gate/up/down MLP.
+pub fn decoder_block_shapes(geom: &LlamaGeometry, m_batch: usize) -> Vec<(&'static str, GemmShape)> {
+    let d = geom.hidden;
+    let kv = geom.kv_dim();
+    let f = geom.ffn;
+    vec![
+        ("q_proj", GemmShape::new(m_batch, d, d)),
+        ("k_proj", GemmShape::new(m_batch, kv, d)),
+        ("v_proj", GemmShape::new(m_batch, kv, d)),
+        ("o_proj", GemmShape::new(m_batch, d, d)),
+        ("gate_proj", GemmShape::new(m_batch, f, d)),
+        ("up_proj", GemmShape::new(m_batch, f, d)),
+        ("down_proj", GemmShape::new(m_batch, d, f)),
+    ]
+}
+
+/// Total decoder-block weight elements (for footprint accounting).
+pub fn decoder_block_weight_elems(geom: &LlamaGeometry) -> usize {
+    decoder_block_shapes(geom, 1).iter().map(|(_, s)| s.weight_elems()).sum()
+}
+
+/// The 27 (M, N, K) shapes of the paper's Table 10 sweep.
+pub fn table10_shapes() -> Vec<GemmShape> {
+    let mnk = [
+        (1, 2048, 2048),
+        (4, 2048, 2048),
+        (8, 2048, 2048),
+        (1, 8192, 2048),
+        (4, 8192, 2048),
+        (8, 8192, 2048),
+        (1, 2048, 8192),
+        (4, 2048, 8192),
+        (8, 2048, 8192),
+        (1, 4096, 4096),
+        (4, 4096, 4096),
+        (8, 4096, 4096),
+        (1, 14336, 4096),
+        (4, 14336, 4096),
+        (8, 14336, 4096),
+        (1, 4096, 14336),
+        (4, 4096, 14336),
+        (8, 4096, 14336),
+        (1, 8192, 8192),
+        (4, 8192, 8192),
+        (8, 8192, 8192),
+        (1, 28672, 8192),
+        (4, 28672, 8192),
+        (8, 28672, 8192),
+        (1, 8192, 28672),
+        (4, 8192, 28672),
+        (8, 8192, 28672),
+    ];
+    mnk.iter().map(|&(m, n, k)| GemmShape::new(m, n, k)).collect()
+}
+
+/// The Table 3 telemetry GEMV shape.
+pub fn table3_shape() -> GemmShape {
+    GemmShape::new(1, 28672, 8192)
+}
+
+/// Scaled-down analogues of the decoder-block shapes for CPU-measurable
+/// benches (same aspect ratios, ~1/16 the area). Used where wall-clock
+/// measurement on the CPU engines is wanted rather than the simulator.
+pub fn scaled_block_shapes(geom: &LlamaGeometry, m_batch: usize, scale: usize) -> Vec<(&'static str, GemmShape)> {
+    decoder_block_shapes(geom, m_batch)
+        .into_iter()
+        .map(|(l, s)| (l, GemmShape::new(s.m_batch, (s.n / scale).max(64), (s.k / scale).max(64))))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_shapes_8b() {
+        let shapes = decoder_block_shapes(&LLAMA3_8B, 1);
+        assert_eq!(shapes.len(), 7);
+        let q = shapes[0].1;
+        assert_eq!((q.n, q.k), (4096, 4096));
+        let k = shapes[1].1;
+        assert_eq!((k.n, k.k), (1024, 4096)); // 8 KV heads * 128
+        let down = shapes[6].1;
+        assert_eq!((down.n, down.k), (4096, 14336));
+    }
+
+    #[test]
+    fn block_shapes_70b() {
+        let shapes = decoder_block_shapes(&LLAMA3_70B, 1);
+        let gate = shapes[4].1;
+        assert_eq!((gate.n, gate.k), (28672, 8192));
+        assert_eq!(LLAMA3_70B.head_dim(), 128);
+        assert_eq!(LLAMA3_70B.kv_dim(), 1024);
+    }
+
+    #[test]
+    fn table10_has_27_shapes() {
+        let shapes = table10_shapes();
+        assert_eq!(shapes.len(), 27);
+        assert!(shapes.contains(&GemmShape::new(1, 28672, 8192)));
+        assert!(shapes.contains(&GemmShape::new(8, 2048, 8192)));
+    }
+
+    #[test]
+    fn flops_formula() {
+        let s = GemmShape::new(2, 3, 4);
+        assert_eq!(s.flops(), 48.0);
+        assert_eq!(s.weight_elems(), 12);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(LlamaGeometry::by_name("8b").unwrap().hidden, 4096);
+        assert_eq!(LlamaGeometry::by_name("llama3-70b").unwrap().ffn, 28672);
+        assert!(LlamaGeometry::by_name("13b").is_none());
+    }
+
+    #[test]
+    fn scaled_shapes_floor() {
+        let s = scaled_block_shapes(&LLAMA3_8B, 1, 1_000_000);
+        assert!(s.iter().all(|(_, g)| g.n == 64 && g.k == 64));
+    }
+
+    #[test]
+    fn block_weight_elems_positive() {
+        let w8 = decoder_block_weight_elems(&LLAMA3_8B);
+        // 2*4096*4096 + 2*1024*4096 + 3*14336*4096
+        assert_eq!(w8, 2 * 4096 * 4096 + 2 * 1024 * 4096 + 3 * 14336 * 4096);
+    }
+}

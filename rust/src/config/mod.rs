@@ -1,0 +1,351 @@
+//! Configuration system: quantization hyperparameters, kernel tiling,
+//! model presets, device presets, serving options — all JSON round-trip
+//! capable and validated at construction.
+
+pub mod serve;
+
+pub use serve::ServeConfig;
+
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// Codebook quantization hyperparameters (paper §2.2, Figure 2):
+/// `v` vector length, `m` number of additive codebooks, `b` bits per code
+/// (codebook has `2^b` centroids), `g` normalization group size
+/// (`g = -1` ⇒ row-wise normalization, i.e. one scale per row).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct QuantConfig {
+    pub v: usize,
+    pub m: usize,
+    pub b: usize,
+    /// Group size; `None` encodes the paper's `g = -1` (row-wise).
+    pub g: Option<usize>,
+}
+
+impl QuantConfig {
+    /// `g <= 0` maps to row-wise normalization (paper's `g = -1`).
+    pub fn new(v: usize, m: usize, b: usize, g: i64) -> Result<QuantConfig> {
+        let cfg = QuantConfig { v, m, b, g: if g <= 0 { None } else { Some(g as usize) } };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.v == 0 || !self.v.is_power_of_two() || self.v > 64 {
+            bail!("v must be a power of two in [1, 64], got {}", self.v);
+        }
+        if self.m == 0 || self.m > 8 {
+            bail!("m must be in [1, 8], got {}", self.m);
+        }
+        if self.b == 0 || self.b > 16 {
+            bail!("b must be in [1, 16], got {}", self.b);
+        }
+        if let Some(g) = self.g {
+            if g < self.v {
+                bail!("g ({g}) must be >= v ({})", self.v);
+            }
+            if g % self.v != 0 {
+                bail!("g ({g}) must be a multiple of v ({})", self.v);
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of centroids per codebook.
+    pub fn n_centroids(&self) -> usize {
+        1usize << self.b
+    }
+
+    /// Effective group size for a row of length `k`.
+    pub fn group_size(&self, k: usize) -> usize {
+        self.g.unwrap_or(k)
+    }
+
+    /// Paper-style label, e.g. `m2v8g128` or `m1v4` for row-wise.
+    pub fn label(&self) -> String {
+        match self.g {
+            Some(g) => format!("m{}v{}g{}", self.m, self.v, g),
+            None => format!("m{}v{}", self.m, self.v),
+        }
+    }
+
+    /// Parse labels like `m2v8g128`, `m1v4`, `m1v4g-1`.
+    pub fn parse_label(s: &str) -> Result<QuantConfig> {
+        let (with_b, s2) = match s.split_once('b') {
+            // optional trailing bits spec like m1v4g128b8 — handled below
+            _ => (None::<usize>, s),
+        };
+        let _ = with_b;
+        let bytes = s2.as_bytes();
+        if bytes.first() != Some(&b'm') {
+            bail!("config label must start with 'm': {s}");
+        }
+        let mut m = 0usize;
+        let mut v = 0usize;
+        let mut g: i64 = -1;
+        let mut b = 8usize;
+        let mut i = 0;
+        let parse_num = |bytes: &[u8], mut i: usize| -> (i64, usize) {
+            let neg = bytes.get(i) == Some(&b'-');
+            if neg {
+                i += 1;
+            }
+            let mut x: i64 = 0;
+            while i < bytes.len() && bytes[i].is_ascii_digit() {
+                x = x * 10 + (bytes[i] - b'0') as i64;
+                i += 1;
+            }
+            (if neg { -x } else { x }, i)
+        };
+        while i < bytes.len() {
+            let key = bytes[i];
+            let (val, ni) = parse_num(bytes, i + 1);
+            i = ni;
+            match key {
+                b'm' => m = val as usize,
+                b'v' => v = val as usize,
+                b'g' => g = val,
+                b'b' => b = val as usize,
+                other => bail!("unknown key '{}' in label {s}", other as char),
+            }
+        }
+        QuantConfig::new(v, m, b, g)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("v", Json::from(self.v)),
+            ("m", Json::from(self.m)),
+            ("b", Json::from(self.b)),
+            ("g", Json::from(self.g.map(|g| g as i64).unwrap_or(-1))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<QuantConfig> {
+        QuantConfig::new(j.req_usize("v")?, j.req_usize("m")?, j.req_usize("b")?, j.req_i64("g")?)
+    }
+
+    /// The paper's headline configurations.
+    pub fn m1v4g128() -> QuantConfig {
+        QuantConfig::new(4, 1, 8, 128).unwrap()
+    }
+
+    pub fn m2v8g128() -> QuantConfig {
+        QuantConfig::new(8, 2, 8, 128).unwrap()
+    }
+}
+
+/// Kernel tiling parameters (paper §3: defaults t_w = 32, t_h = 2048).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelConfig {
+    pub tile_w: usize,
+    pub tile_h: usize,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig { tile_w: 32, tile_h: 2048 }
+    }
+}
+
+impl KernelConfig {
+    pub fn new(tile_w: usize, tile_h: usize) -> Result<KernelConfig> {
+        if tile_w == 0 || tile_h == 0 {
+            bail!("tile dims must be positive");
+        }
+        Ok(KernelConfig { tile_w, tile_h })
+    }
+
+    pub fn validate_for(&self, cfg: &QuantConfig, k: usize) -> Result<()> {
+        if self.tile_w % cfg.v != 0 {
+            bail!("tile_w ({}) must be a multiple of v ({})", self.tile_w, cfg.v);
+        }
+        if let Some(g) = cfg.g {
+            // Group boundaries must not straddle a tile boundary mid-group
+            // unless tiles divide groups evenly (either direction works).
+            if g % self.tile_w != 0 && self.tile_w % g != 0 {
+                bail!("tile_w ({}) and g ({g}) must divide one another", self.tile_w);
+            }
+        }
+        if k % cfg.v != 0 {
+            bail!("K ({k}) must be a multiple of v ({})", cfg.v);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("tile_w", Json::from(self.tile_w)), ("tile_h", Json::from(self.tile_h))])
+    }
+
+    pub fn from_json(j: &Json) -> Result<KernelConfig> {
+        KernelConfig::new(j.req_usize("tile_w")?, j.req_usize("tile_h")?)
+    }
+}
+
+/// Model architecture configuration (mirrors `python/compile/model.py`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+    pub rope_theta_milli: usize, // theta * 1000 kept integral for Eq/Hash
+}
+
+impl ModelConfig {
+    /// The tiny byte-level model trained by `python/compile/train_tiny.py`
+    /// and served end-to-end. Must match `TINY_CONFIG` there.
+    pub fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "tiny-llama".into(),
+            vocab: 256,
+            hidden: 128,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            ffn: 352,
+            max_seq: 128,
+            rope_theta_milli: 10_000_000,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.n_heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    pub fn rope_theta(&self) -> f32 {
+        self.rope_theta_milli as f32 / 1000.0
+    }
+
+    /// Parameter count (tied embeddings not assumed; lm_head separate).
+    pub fn n_params(&self) -> usize {
+        let d = self.hidden;
+        let attn = d * d + 2 * d * self.kv_dim() + d * d;
+        let mlp = 3 * d * self.ffn;
+        let norms = 2 * d;
+        self.vocab * d * 2 + self.n_layers * (attn + mlp + norms) + d
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.hidden % self.n_heads != 0 {
+            bail!("hidden ({}) must divide by n_heads ({})", self.hidden, self.n_heads);
+        }
+        if self.n_heads % self.n_kv_heads != 0 {
+            bail!("n_heads must divide by n_kv_heads");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("vocab", Json::from(self.vocab)),
+            ("hidden", Json::from(self.hidden)),
+            ("n_layers", Json::from(self.n_layers)),
+            ("n_heads", Json::from(self.n_heads)),
+            ("n_kv_heads", Json::from(self.n_kv_heads)),
+            ("ffn", Json::from(self.ffn)),
+            ("max_seq", Json::from(self.max_seq)),
+            ("rope_theta", Json::Num(self.rope_theta() as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        let cfg = ModelConfig {
+            name: j.req_str("name")?.to_string(),
+            vocab: j.req_usize("vocab")?,
+            hidden: j.req_usize("hidden")?,
+            n_layers: j.req_usize("n_layers")?,
+            n_heads: j.req_usize("n_heads")?,
+            n_kv_heads: j.req_usize("n_kv_heads")?,
+            ffn: j.req_usize("ffn")?,
+            max_seq: j.req_usize("max_seq")?,
+            rope_theta_milli: (j.req_f64("rope_theta")? * 1000.0) as usize,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_config_validation() {
+        assert!(QuantConfig::new(4, 1, 8, 128).is_ok());
+        assert!(QuantConfig::new(3, 1, 8, 128).is_err()); // v not pow2
+        assert!(QuantConfig::new(4, 0, 8, 128).is_err()); // m=0
+        assert!(QuantConfig::new(4, 1, 0, 128).is_err()); // b=0
+        assert!(QuantConfig::new(4, 1, 17, 128).is_err()); // b>16
+        assert!(QuantConfig::new(8, 1, 8, 4).is_err()); // g < v
+        assert!(QuantConfig::new(8, 1, 8, 20).is_err()); // g % v != 0
+        assert!(QuantConfig::new(8, 1, 8, -1).is_ok()); // row-wise
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        for label in ["m2v8g128", "m1v4", "m3v16g32"] {
+            let cfg = QuantConfig::parse_label(label).unwrap();
+            assert_eq!(cfg.label(), label);
+        }
+        let cfg = QuantConfig::parse_label("m1v4b6g128").unwrap();
+        assert_eq!(cfg.b, 6);
+        assert!(QuantConfig::parse_label("x1v4").is_err());
+    }
+
+    #[test]
+    fn headline_configs() {
+        let a = QuantConfig::m1v4g128();
+        assert_eq!((a.v, a.m, a.b, a.g), (4, 1, 8, Some(128)));
+        let b = QuantConfig::m2v8g128();
+        assert_eq!((b.v, b.m, b.b, b.g), (8, 2, 8, Some(128)));
+    }
+
+    #[test]
+    fn json_roundtrip_quant() {
+        let cfg = QuantConfig::new(8, 2, 8, -1).unwrap();
+        let j = cfg.to_json();
+        assert_eq!(QuantConfig::from_json(&j).unwrap(), cfg);
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(QuantConfig::from_json(&parsed).unwrap(), cfg);
+    }
+
+    #[test]
+    fn kernel_config_checks() {
+        let kc = KernelConfig::default();
+        assert_eq!((kc.tile_w, kc.tile_h), (32, 2048));
+        let q = QuantConfig::new(8, 1, 8, 32).unwrap();
+        assert!(kc.validate_for(&q, 4096).is_ok());
+        let q2 = QuantConfig::new(64, 1, 8, -1).unwrap();
+        assert!(kc.validate_for(&q2, 4096).is_err()); // tile_w % v != 0
+        assert!(kc.validate_for(&q, 4095).is_err()); // K % v != 0
+    }
+
+    #[test]
+    fn model_config_tiny() {
+        let m = ModelConfig::tiny();
+        m.validate().unwrap();
+        assert_eq!(m.head_dim(), 32);
+        assert_eq!(m.kv_dim(), 64);
+        assert!(m.n_params() > 100_000);
+        let j = m.to_json();
+        assert_eq!(ModelConfig::from_json(&j).unwrap(), m);
+    }
+
+    #[test]
+    fn group_size_effective() {
+        let row = QuantConfig::new(4, 1, 8, -1).unwrap();
+        assert_eq!(row.group_size(4096), 4096);
+        let grp = QuantConfig::new(4, 1, 8, 128).unwrap();
+        assert_eq!(grp.group_size(4096), 128);
+    }
+}

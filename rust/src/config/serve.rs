@@ -1,0 +1,79 @@
+//! Serving configuration for the L3 coordinator.
+
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Options for the request coordinator (router + batcher + scheduler).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Maximum decode batch size. The AOT artifacts are compiled per batch
+    /// size; the batcher only forms batches whose size has an artifact.
+    pub max_batch: usize,
+    /// Batch-formation window: how long the batcher waits for more
+    /// requests before dispatching a partial batch (microseconds).
+    pub batch_window_us: u64,
+    /// Maximum new tokens per request (hard cap).
+    pub max_new_tokens: usize,
+    /// Sampling temperature (0 ⇒ greedy).
+    pub temperature: f32,
+    /// Queue capacity before admission control rejects requests.
+    pub queue_capacity: usize,
+    /// Worker threads executing model steps.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 8,
+            batch_window_us: 2_000,
+            max_new_tokens: 64,
+            temperature: 0.0,
+            queue_capacity: 256,
+            workers: 1,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_batch", Json::from(self.max_batch)),
+            ("batch_window_us", Json::from(self.batch_window_us as usize)),
+            ("max_new_tokens", Json::from(self.max_new_tokens)),
+            ("temperature", Json::Num(self.temperature as f64)),
+            ("queue_capacity", Json::from(self.queue_capacity)),
+            ("workers", Json::from(self.workers)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServeConfig> {
+        Ok(ServeConfig {
+            max_batch: j.req_usize("max_batch")?,
+            batch_window_us: j.req_usize("batch_window_us")? as u64,
+            max_new_tokens: j.req_usize("max_new_tokens")?,
+            temperature: j.req_f64("temperature")? as f32,
+            queue_capacity: j.req_usize("queue_capacity")?,
+            workers: j.req_usize("workers")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_sane() {
+        let c = ServeConfig::default();
+        assert!(c.max_batch >= 1);
+        assert!(c.queue_capacity >= c.max_batch);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ServeConfig { max_batch: 4, temperature: 0.7, ..Default::default() };
+        let j = Json::parse(&c.to_json().to_string_pretty()).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap(), c);
+    }
+}

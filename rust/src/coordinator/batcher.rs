@@ -1,0 +1,293 @@
+//! Continuous (iteration-level) dynamic batcher.
+//!
+//! Orca/vLLM-style scheduling adapted to single-token stepping: each
+//! engine step advances every occupied slot by one token — prefilling
+//! sequences consume their next prompt token, decoding sequences consume
+//! their last sampled token — so new requests join the batch *between
+//! steps* without draining it ("continuous batching"). A configurable
+//! prefill admission cap keeps time-to-first-token bounded under decode
+//! load.
+
+use super::backend::{DecodeBackend, SlotStep};
+use super::metrics::Metrics;
+use super::request::{FinishReason, InFlight, Request, Response};
+use crate::config::ServeConfig;
+use crate::model::Sampler;
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Slot state.
+enum Slot {
+    Free,
+    Busy(InFlight),
+}
+
+/// The batcher owns the backend, the admission queue and the slot table.
+pub struct Batcher {
+    backend: Box<dyn DecodeBackend>,
+    cfg: ServeConfig,
+    slots: Vec<Slot>,
+    queue: VecDeque<Request>,
+    sampler: Sampler,
+    pub metrics: Arc<Metrics>,
+    finished: Vec<Response>,
+}
+
+impl Batcher {
+    pub fn new(backend: Box<dyn DecodeBackend>, cfg: ServeConfig, metrics: Arc<Metrics>) -> Batcher {
+        let n = backend.max_batch().min(cfg.max_batch.max(1));
+        Batcher {
+            backend,
+            sampler: Sampler::new(cfg.temperature, 0x5EED),
+            cfg,
+            slots: (0..n).map(|_| Slot::Free).collect(),
+            queue: VecDeque::new(),
+            metrics,
+            finished: Vec::new(),
+        }
+    }
+
+    /// Enqueue a request (admission control: bounded queue).
+    pub fn submit(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.cfg.queue_capacity {
+            self.metrics.on_reject();
+            return false;
+        }
+        self.metrics.on_submit();
+        self.queue.push_back(req);
+        true
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.slots.iter().filter(|s| matches!(s, Slot::Busy(_))).count()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.occupied() == 0 && self.queue.is_empty()
+    }
+
+    /// Move queued requests into free slots (the router step).
+    fn admit(&mut self) {
+        for i in 0..self.slots.len() {
+            if self.queue.is_empty() {
+                break;
+            }
+            if matches!(self.slots[i], Slot::Free) {
+                let req = self.queue.pop_front().unwrap();
+                self.backend.reset_slot(i);
+                self.slots[i] = Slot::Busy(InFlight::new(req));
+            }
+        }
+    }
+
+    /// Run one engine step over all occupied slots. Returns the number of
+    /// slots advanced (0 ⇒ idle).
+    pub fn step(&mut self) -> usize {
+        self.admit();
+        // Assemble this step's work: all decoding slots plus prefilling
+        // slots (token-level prefill joins the same batch).
+        let mut steps: Vec<SlotStep> = Vec::new();
+        let mut prefill_n = 0usize;
+        let mut decode_n = 0usize;
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Slot::Busy(f) = s {
+                steps.push(SlotStep { slot: i, token: f.next_input(), pos: f.pos });
+                if f.is_prefilling() {
+                    prefill_n += 1;
+                } else {
+                    decode_n += 1;
+                }
+            }
+        }
+        if steps.is_empty() {
+            return 0;
+        }
+        let t0 = Instant::now();
+        let logits = self.backend.step(&steps).expect("backend step failed");
+        self.metrics.on_step(steps.len(), prefill_n, decode_n, t0.elapsed().as_secs_f64());
+        // Advance per-slot state.
+        let max_seq = self.backend.max_seq();
+        for (ss, lg) in steps.iter().zip(logits) {
+            let slot = &mut self.slots[ss.slot];
+            let Slot::Busy(f) = slot else { unreachable!() };
+            let was_prefilling = f.is_prefilling();
+            if was_prefilling {
+                f.prefill_idx += 1;
+            }
+            f.pos += 1;
+            let now_decoding = !f.is_prefilling();
+            let mut finish: Option<FinishReason> = None;
+            if now_decoding {
+                // Sample the next token from this step's logits (valid both
+                // for the final prefill token and for decode steps).
+                let tok = self.sampler.sample(&lg);
+                if f.first_token.is_none() {
+                    f.first_token = Some(Instant::now());
+                }
+                f.generated.push(tok);
+                if f.req.stop_token == Some(tok) {
+                    finish = Some(FinishReason::Stop);
+                } else if f.generated.len() >= f.req.max_new_tokens {
+                    finish = Some(FinishReason::Length);
+                }
+            }
+            if finish.is_none() && f.pos >= max_seq {
+                finish = Some(FinishReason::Context);
+            }
+            if let Some(reason) = finish {
+                let ttft = f
+                    .first_token
+                    .map(|t| (t - f.submitted).as_secs_f64())
+                    .unwrap_or_default();
+                let latency = f.submitted.elapsed().as_secs_f64();
+                let decode_time = (latency - ttft).max(1e-9);
+                let n_gen = f.generated.len();
+                let resp = Response {
+                    id: f.req.id,
+                    tokens: std::mem::take(&mut f.generated),
+                    finish: reason,
+                    ttft_s: ttft,
+                    latency_s: latency,
+                    tok_per_s: if n_gen > 1 { (n_gen - 1) as f64 / decode_time } else { 0.0 },
+                };
+                self.metrics.on_complete(ttft, latency);
+                self.finished.push(resp);
+                *slot = Slot::Free;
+            }
+        }
+        steps.len()
+    }
+
+    /// Drain finished responses.
+    pub fn take_finished(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Run until every queued/in-flight request completes; returns all
+    /// responses. (The offline/batch entrypoint; the server wraps `step`
+    /// for online serving.)
+    pub fn run_to_completion(&mut self) -> Vec<Response> {
+        let mut out = Vec::new();
+        while !self.is_idle() {
+            self.step();
+            out.extend(self.take_finished());
+        }
+        out
+    }
+
+    pub fn backend_label(&self) -> String {
+        self.backend.label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::model::{EngineKind, ModelWeights};
+
+    fn mk_batcher(max_batch: usize, queue_cap: usize) -> Batcher {
+        let w = ModelWeights::random(ModelConfig::tiny(), 3);
+        let backend = Box::new(NativeBackend::new(&w, EngineKind::Dense, max_batch));
+        let cfg = ServeConfig {
+            max_batch,
+            queue_capacity: queue_cap,
+            max_new_tokens: 4,
+            temperature: 0.0,
+            ..Default::default()
+        };
+        Batcher::new(backend, cfg, Arc::new(Metrics::new()))
+    }
+
+    #[test]
+    fn single_request_completes_with_exact_token_budget() {
+        let mut b = mk_batcher(2, 8);
+        b.submit(Request::new(7, vec![1, 2, 3], 4));
+        let out = b.run_to_completion();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 7);
+        assert_eq!(out[0].tokens.len(), 4);
+        assert_eq!(out[0].finish, FinishReason::Length);
+    }
+
+    #[test]
+    fn batched_equals_sequential_greedy() {
+        // Continuous batching must not change greedy outputs.
+        let prompts: Vec<Vec<usize>> = vec![vec![5, 6], vec![100, 101, 102], vec![9]];
+        let mut seq_out = Vec::new();
+        for p in &prompts {
+            let mut b = mk_batcher(1, 8);
+            b.submit(Request::new(0, p.clone(), 4));
+            seq_out.push(b.run_to_completion().remove(0).tokens);
+        }
+        let mut b = mk_batcher(3, 8);
+        for (i, p) in prompts.iter().enumerate() {
+            b.submit(Request::new(i as u64, p.clone(), 4));
+        }
+        let mut batched = b.run_to_completion();
+        batched.sort_by_key(|r| r.id);
+        for (i, r) in batched.iter().enumerate() {
+            assert_eq!(r.tokens, seq_out[i], "request {i} diverged under batching");
+        }
+    }
+
+    #[test]
+    fn queue_overflow_rejects() {
+        let mut b = mk_batcher(1, 2);
+        assert!(b.submit(Request::new(1, vec![1], 2)));
+        assert!(b.submit(Request::new(2, vec![1], 2)));
+        assert!(!b.submit(Request::new(3, vec![1], 2)));
+        assert_eq!(b.metrics.report().rejected, 1);
+    }
+
+    #[test]
+    fn more_requests_than_slots_all_complete() {
+        let mut b = mk_batcher(2, 16);
+        for i in 0..6 {
+            b.submit(Request::new(i, vec![(i as usize) % 200 + 1, 2], 3));
+        }
+        let out = b.run_to_completion();
+        assert_eq!(out.len(), 6);
+        let mut ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+        // Slots were actually shared.
+        assert!(b.metrics.report().mean_batch > 1.0);
+    }
+
+    #[test]
+    fn stop_token_halts_generation() {
+        let w = ModelWeights::random(ModelConfig::tiny(), 3);
+        let backend = Box::new(NativeBackend::new(&w, EngineKind::Dense, 1));
+        let cfg = ServeConfig { max_batch: 1, max_new_tokens: 64, temperature: 0.0, ..Default::default() };
+        let mut b = Batcher::new(backend, cfg, Arc::new(Metrics::new()));
+        // Find what greedy generates first, then use it as the stop token.
+        let mut probe = mk_batcher(1, 4);
+        probe.submit(Request::new(0, vec![1, 2], 1));
+        let first = probe.run_to_completion()[0].tokens[0];
+        let mut req = Request::new(1, vec![1, 2], 64);
+        req.stop_token = Some(first);
+        b.submit(req);
+        let out = b.run_to_completion();
+        assert_eq!(out[0].finish, FinishReason::Stop);
+        assert_eq!(out[0].tokens.len(), 1);
+    }
+
+    #[test]
+    fn context_limit_terminates() {
+        let mut b = mk_batcher(1, 4);
+        let long_prompt: Vec<usize> = (0..120).map(|i| (i % 250) + 1).collect();
+        b.submit(Request::new(1, long_prompt, 1000));
+        let out = b.run_to_completion();
+        assert_eq!(out[0].finish, FinishReason::Context);
+        // Positions 0..119 hold the prompt; forwards at 119..=127 each
+        // produce one sampled token ⇒ 9 generated, all 128 positions used.
+        assert_eq!(out[0].tokens.len(), 9);
+    }
+}

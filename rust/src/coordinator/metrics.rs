@@ -1,0 +1,155 @@
+//! Serving metrics: counters and latency summaries, shared between the
+//! batcher thread and callers.
+
+use crate::util::stats::Summary;
+use std::sync::Mutex;
+
+/// Raw metric samples (seconds).
+#[derive(Debug, Default)]
+struct Inner {
+    submitted: u64,
+    completed: u64,
+    rejected: u64,
+    prefill_tokens: u64,
+    decode_tokens: u64,
+    steps: u64,
+    batched_slots: u64,
+    ttft: Vec<f64>,
+    latency: Vec<f64>,
+    step_seconds: Vec<f64>,
+    started: Option<std::time::Instant>,
+    finished: Option<std::time::Instant>,
+}
+
+/// Thread-safe metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// A point-in-time metrics report.
+#[derive(Clone, Debug)]
+pub struct MetricsReport {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub steps: u64,
+    /// Mean occupied slots per step (batch efficiency).
+    pub mean_batch: f64,
+    pub ttft: Summary,
+    pub latency: Summary,
+    pub step_time: Summary,
+    /// Aggregate decode throughput over the serving window (tok/s).
+    pub tokens_per_s: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.inner.lock().unwrap().submitted += 1;
+    }
+
+    pub fn on_reject(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn on_step(&self, occupied: usize, prefill: usize, decode: usize, seconds: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.steps += 1;
+        g.batched_slots += occupied as u64;
+        g.prefill_tokens += prefill as u64;
+        g.decode_tokens += decode as u64;
+        g.step_seconds.push(seconds);
+        let now = std::time::Instant::now();
+        g.started.get_or_insert(now);
+        g.finished = Some(now);
+    }
+
+    pub fn on_complete(&self, ttft_s: f64, latency_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.completed += 1;
+        g.ttft.push(ttft_s);
+        g.latency.push(latency_s);
+    }
+
+    pub fn report(&self) -> MetricsReport {
+        let g = self.inner.lock().unwrap();
+        let window = match (g.started, g.finished) {
+            (Some(a), Some(b)) => (b - a).as_secs_f64().max(1e-9),
+            _ => f64::INFINITY,
+        };
+        let summary = |xs: &[f64]| {
+            if xs.is_empty() {
+                Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0 }
+            } else {
+                Summary::of(xs)
+            }
+        };
+        MetricsReport {
+            submitted: g.submitted,
+            completed: g.completed,
+            rejected: g.rejected,
+            prefill_tokens: g.prefill_tokens,
+            decode_tokens: g.decode_tokens,
+            steps: g.steps,
+            mean_batch: if g.steps > 0 { g.batched_slots as f64 / g.steps as f64 } else { 0.0 },
+            ttft: summary(&g.ttft),
+            latency: summary(&g.latency),
+            step_time: summary(&g.step_seconds),
+            tokens_per_s: if window.is_finite() { g.decode_tokens as f64 / window } else { 0.0 },
+        }
+    }
+}
+
+impl MetricsReport {
+    pub fn render(&self) -> String {
+        format!(
+            "requests: {} submitted / {} completed / {} rejected\n\
+             tokens:   {} prefill / {} decode ({:.1} tok/s decode)\n\
+             batching: {} steps, mean occupancy {:.2}\n\
+             ttft:     p50 {:.1} ms, p95 {:.1} ms\n\
+             latency:  p50 {:.1} ms, p95 {:.1} ms",
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.prefill_tokens,
+            self.decode_tokens,
+            self.tokens_per_s,
+            self.steps,
+            self.mean_batch,
+            self.ttft.p50 * 1e3,
+            self.ttft.p95 * 1e3,
+            self.latency.p50 * 1e3,
+            self.latency.p95 * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_reject();
+        m.on_step(2, 2, 0, 0.001);
+        m.on_step(2, 0, 2, 0.001);
+        m.on_complete(0.01, 0.05);
+        let r = m.report();
+        assert_eq!(r.submitted, 2);
+        assert_eq!(r.rejected, 1);
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.prefill_tokens, 2);
+        assert_eq!(r.decode_tokens, 2);
+        assert!((r.mean_batch - 2.0).abs() < 1e-9);
+        assert!(r.render().contains("mean occupancy 2.00"));
+    }
+}

@@ -1,0 +1,19 @@
+//! The L3 serving coordinator: admission queue + router, continuous
+//! (iteration-level) dynamic batcher, threaded leader loop, and metrics.
+//!
+//! Two backends plug in underneath ([`backend::DecodeBackend`]): the
+//! pure-Rust model (always available) and the PJRT/AOT runtime (the
+//! production path — `artifacts/*.hlo.txt` compiled once, Python never on
+//! the request path).
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use backend::{DecodeBackend, NativeBackend, PjrtBackend, SlotStep};
+pub use batcher::Batcher;
+pub use metrics::{Metrics, MetricsReport};
+pub use request::{FinishReason, InFlight, Request, Response};
+pub use server::{ResponseHandle, Server};

@@ -1,0 +1,122 @@
+//! Request/response types for the serving coordinator.
+
+use std::time::Instant;
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt tokens (byte-level for the tiny model).
+    pub prompt: Vec<usize>,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    /// Stop generating at this token if produced (e.g. a newline byte).
+    pub stop_token: Option<usize>,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<usize>, max_new_tokens: usize) -> Request {
+        Request { id, prompt, max_new_tokens, temperature: 0.0, stop_token: None }
+    }
+
+    /// Byte-level helper: prompt from text.
+    pub fn from_text(id: u64, text: &str, max_new_tokens: usize) -> Request {
+        Request::new(id, text.bytes().map(|b| b as usize).collect(), max_new_tokens)
+    }
+}
+
+/// Why a sequence stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit `max_new_tokens`.
+    Length,
+    /// Produced the stop token.
+    Stop,
+    /// Prompt + generation hit the model context limit.
+    Context,
+}
+
+/// A finished generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<usize>,
+    pub finish: FinishReason,
+    /// Time from submit to first generated token (seconds).
+    pub ttft_s: f64,
+    /// Total time from submit to completion (seconds).
+    pub latency_s: f64,
+    /// Decode throughput for this request (generated tokens / decode time).
+    pub tok_per_s: f64,
+}
+
+impl Response {
+    /// Byte-level helper: generated tokens as (lossy) text.
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.tokens.iter().map(|&t| t as u8).collect::<Vec<u8>>()).into_owned()
+    }
+}
+
+/// In-flight request state tracked by the batcher.
+#[derive(Debug)]
+pub struct InFlight {
+    pub req: Request,
+    pub submitted: Instant,
+    pub first_token: Option<Instant>,
+    /// Tokens generated so far.
+    pub generated: Vec<usize>,
+    /// Next prompt index still to prefill (== prompt.len() ⇒ decoding).
+    pub prefill_idx: usize,
+    /// Current sequence position in the KV cache.
+    pub pos: usize,
+}
+
+impl InFlight {
+    pub fn new(req: Request) -> InFlight {
+        InFlight { req, submitted: Instant::now(), first_token: None, generated: Vec::new(), prefill_idx: 0, pos: 0 }
+    }
+
+    pub fn is_prefilling(&self) -> bool {
+        self.prefill_idx < self.req.prompt.len()
+    }
+
+    /// The token to feed next (prompt during prefill, last generated after).
+    pub fn next_input(&self) -> usize {
+        if self.is_prefilling() {
+            self.req.prompt[self.prefill_idx]
+        } else {
+            *self.generated.last().expect("decode phase implies a generated token or last prompt token")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_roundtrip() {
+        let r = Request::from_text(1, "hi", 4);
+        assert_eq!(r.prompt, vec![104, 105]);
+        let resp = Response {
+            id: 1,
+            tokens: vec![104, 105],
+            finish: FinishReason::Length,
+            ttft_s: 0.0,
+            latency_s: 0.0,
+            tok_per_s: 0.0,
+        };
+        assert_eq!(resp.text(), "hi");
+    }
+
+    #[test]
+    fn inflight_phases() {
+        let mut f = InFlight::new(Request::new(1, vec![10, 11], 3));
+        assert!(f.is_prefilling());
+        assert_eq!(f.next_input(), 10);
+        f.prefill_idx = 2;
+        f.generated.push(42);
+        assert!(!f.is_prefilling());
+        assert_eq!(f.next_input(), 42);
+    }
+}

@@ -1,0 +1,218 @@
+//! Threaded serving front-end: a leader thread runs the batcher loop; any
+//! number of client threads submit requests through a channel and wait on
+//! per-request response channels. This is the L3 event loop — requests
+//! never touch Python.
+
+use super::backend::DecodeBackend;
+use super::batcher::Batcher;
+use super::metrics::{Metrics, MetricsReport};
+use super::request::{Request, Response};
+use crate::config::ServeConfig;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+enum Msg {
+    Submit(Request, Sender<Response>),
+    Shutdown,
+}
+
+/// Handle for one in-flight request.
+pub struct ResponseHandle {
+    rx: Receiver<Response>,
+}
+
+impl ResponseHandle {
+    /// Block until the generation finishes.
+    pub fn wait(self) -> Response {
+        self.rx.recv().expect("server dropped the response channel")
+    }
+
+    pub fn wait_timeout(&self, d: Duration) -> Option<Response> {
+        self.rx.recv_timeout(d).ok()
+    }
+}
+
+/// The serving coordinator.
+pub struct Server {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    running: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Spawn the leader loop over `backend`.
+    pub fn start(backend: Box<dyn DecodeBackend>, cfg: ServeConfig) -> Server {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = channel::<Msg>();
+        let running = Arc::new(AtomicBool::new(true));
+        let m2 = metrics.clone();
+        let r2 = running.clone();
+        let window = Duration::from_micros(cfg.batch_window_us);
+        let worker = std::thread::Builder::new()
+            .name("codegemm-leader".into())
+            .spawn(move || {
+                let mut batcher = Batcher::new(backend, cfg, m2);
+                let mut pending: Vec<(u64, Sender<Response>)> = Vec::new();
+                loop {
+                    // Pull every queued message; block briefly when idle so
+                    // the loop does not spin.
+                    let msg = if batcher.is_idle() {
+                        match rx.recv_timeout(Duration::from_millis(50)) {
+                            Ok(m) => Some(m),
+                            Err(_) => None,
+                        }
+                    } else {
+                        rx.try_recv().ok()
+                    };
+                    match msg {
+                        Some(Msg::Submit(req, resp_tx)) => {
+                            let id = req.id;
+                            if batcher.submit(req) {
+                                pending.push((id, resp_tx));
+                            }
+                            // Batch-forming window: give co-arriving
+                            // requests a chance to join the same admission.
+                            if !window.is_zero() {
+                                let deadline = std::time::Instant::now() + window;
+                                while let Ok(m) = rx.recv_timeout(
+                                    deadline.saturating_duration_since(std::time::Instant::now()),
+                                ) {
+                                    match m {
+                                        Msg::Submit(r, t) => {
+                                            let id = r.id;
+                                            if batcher.submit(r) {
+                                                pending.push((id, t));
+                                            }
+                                        }
+                                        Msg::Shutdown => {
+                                            r2.store(false, Ordering::SeqCst);
+                                            break;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                        Some(Msg::Shutdown) => {
+                            r2.store(false, Ordering::SeqCst);
+                        }
+                        None => {}
+                    }
+                    batcher.step();
+                    for resp in batcher.take_finished() {
+                        if let Some(idx) = pending.iter().position(|(id, _)| *id == resp.id) {
+                            let (_, tx) = pending.swap_remove(idx);
+                            let _ = tx.send(resp);
+                        }
+                    }
+                    if !r2.load(Ordering::SeqCst) && batcher.is_idle() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn leader thread");
+        Server { tx, worker: Some(worker), metrics, next_id: AtomicU64::new(1), running }
+    }
+
+    /// Submit a request; its `id` field is overwritten with a fresh id.
+    pub fn submit(&self, mut req: Request) -> ResponseHandle {
+        req.id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Submit(req, tx)).expect("leader thread gone");
+        ResponseHandle { rx }
+    }
+
+    /// Convenience: submit text, wait for the generated text.
+    pub fn generate_text(&self, prompt: &str, max_new_tokens: usize) -> Response {
+        self.submit(Request::from_text(0, prompt, max_new_tokens)).wait()
+    }
+
+    pub fn metrics(&self) -> MetricsReport {
+        self.metrics.report()
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.running.load(Ordering::SeqCst)
+    }
+
+    /// Finish in-flight work and stop the leader thread.
+    pub fn shutdown(mut self) -> MetricsReport {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+        self.metrics.report()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::model::{EngineKind, ModelWeights};
+
+    fn start(max_batch: usize) -> Server {
+        let w = ModelWeights::random(ModelConfig::tiny(), 3);
+        let backend = Box::new(NativeBackend::new(&w, EngineKind::Dense, max_batch));
+        let cfg = ServeConfig {
+            max_batch,
+            batch_window_us: 200,
+            max_new_tokens: 8,
+            temperature: 0.0,
+            ..Default::default()
+        };
+        Server::start(backend, cfg)
+    }
+
+    #[test]
+    fn serves_one_request() {
+        let s = start(2);
+        let resp = s.submit(Request::new(0, vec![1, 2, 3], 5)).wait();
+        assert_eq!(resp.tokens.len(), 5);
+        let m = s.shutdown();
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn serves_concurrent_clients() {
+        let s = Arc::new(start(4));
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    let resp = s.submit(Request::new(0, vec![(i % 200) + 1, 2], 4)).wait();
+                    assert_eq!(resp.tokens.len(), 4);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = s.metrics();
+        assert_eq!(m.completed, 8);
+        assert!(m.mean_batch > 1.0, "concurrent requests should batch (mean {})", m.mean_batch);
+    }
+
+    #[test]
+    fn shutdown_completes_inflight() {
+        let s = start(2);
+        let h = s.submit(Request::new(0, vec![1], 6));
+        let m = s.shutdown(); // must not drop the in-flight request
+        assert_eq!(m.completed, 1);
+        assert_eq!(h.wait().tokens.len(), 6);
+    }
+}

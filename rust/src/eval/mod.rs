@@ -1,0 +1,12 @@
+//! Accuracy evaluation substrate: synthetic corpus (the WikiText-2 /
+//! lm-eval substitution — DESIGN.md §Substitutions), perplexity and
+//! next-token task metrics, and the quantization-config sweeps behind
+//! Figure 4(b) and the accuracy columns of Tables 4/5.
+
+pub mod corpus;
+pub mod perplexity;
+pub mod sweep;
+
+pub use corpus::{Corpus, CorpusSpec};
+pub use perplexity::{nll, perplexity, top1_accuracy, top_k_accuracy};
+pub use sweep::{calibrate, fig4b_configs, fig4b_sweep, measure, AccuracyRow};

@@ -1,0 +1,121 @@
+//! Perplexity of a model over a token stream (the WikiText-2 stand-in
+//! measurement for Figure 4(b) and the accuracy columns of Tables 4/5).
+
+use crate::model::LlamaModel;
+use crate::util::stats::log_sum_exp;
+
+/// Per-token negative log-likelihood of `tokens` under the model,
+/// evaluated in non-overlapping windows of the model's `max_seq`.
+/// Returns (nll_nats_per_token, n_scored_tokens).
+pub fn nll(model: &mut LlamaModel, tokens: &[usize], max_tokens: usize) -> (f64, usize) {
+    let max_seq = model.cfg.max_seq;
+    let mut total = 0f64;
+    let mut scored = 0usize;
+    'outer: for window in tokens.chunks(max_seq) {
+        if window.len() < 2 {
+            break;
+        }
+        let mut cache = model.new_cache();
+        for (pos, pair) in window.windows(2).enumerate() {
+            let logits = model.forward(pair[0], pos, &mut cache);
+            let lse = log_sum_exp(&logits);
+            total += (lse - logits[pair[1]]) as f64;
+            scored += 1;
+            if scored >= max_tokens {
+                break 'outer;
+            }
+        }
+    }
+    (total / scored.max(1) as f64, scored)
+}
+
+/// Perplexity = exp(mean NLL).
+pub fn perplexity(model: &mut LlamaModel, tokens: &[usize], max_tokens: usize) -> f64 {
+    let (n, _) = nll(model, tokens, max_tokens);
+    n.exp()
+}
+
+/// Top-1 next-token accuracy (%), the zero-shot-task stand-in.
+pub fn top1_accuracy(model: &mut LlamaModel, tokens: &[usize], max_tokens: usize) -> f64 {
+    top_k_accuracy(model, tokens, 1, max_tokens)
+}
+
+/// Top-k next-token accuracy (%).
+pub fn top_k_accuracy(model: &mut LlamaModel, tokens: &[usize], k: usize, max_tokens: usize) -> f64 {
+    let max_seq = model.cfg.max_seq;
+    let mut hits = 0usize;
+    let mut scored = 0usize;
+    'outer: for window in tokens.chunks(max_seq) {
+        if window.len() < 2 {
+            break;
+        }
+        let mut cache = model.new_cache();
+        for (pos, pair) in window.windows(2).enumerate() {
+            let logits = model.forward(pair[0], pos, &mut cache);
+            let target = logits[pair[1]];
+            let better = logits.iter().filter(|&&x| x > target).count();
+            if better < k {
+                hits += 1;
+            }
+            scored += 1;
+            if scored >= max_tokens {
+                break 'outer;
+            }
+        }
+    }
+    100.0 * hits as f64 / scored.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::eval::corpus::{Corpus, CorpusSpec};
+    use crate::model::{EngineKind, LlamaModel, ModelWeights};
+
+    fn small_spec() -> CorpusSpec {
+        CorpusSpec { vocab: 64, len: 1200, ..Default::default() }
+    }
+
+    #[test]
+    fn random_model_is_near_uniform() {
+        let corpus = Corpus::synthesize(small_spec());
+        let w = ModelWeights::random(ModelConfig::tiny(), 9);
+        let mut m = LlamaModel::load(&w, EngineKind::Dense, None);
+        let ppl = perplexity(&mut m, &corpus.tokens, 200);
+        // Untrained ≈ vocab-size perplexity (allow wide slack).
+        assert!(ppl > 60.0 && ppl < 1200.0, "random-model ppl {ppl}");
+    }
+
+    #[test]
+    fn bigram_model_beats_uniform_decisively() {
+        let corpus = Corpus::synthesize(small_spec());
+        let w = ModelWeights::bigram(ModelConfig::tiny(), &corpus.log_probs, 9);
+        let mut m = LlamaModel::load(&w, EngineKind::Dense, None);
+        let ppl = perplexity(&mut m, &corpus.tokens, 200);
+        let floor = corpus.entropy_rate().exp();
+        assert!(ppl < 80.0, "bigram-constructed model ppl {ppl} (floor {floor:.2}, uniform 256)");
+        assert!(ppl >= floor * 0.7, "cannot beat the source entropy: {ppl} vs floor {floor}");
+    }
+
+    #[test]
+    fn top1_accuracy_tracks_ppl() {
+        let corpus = Corpus::synthesize(small_spec());
+        let wb = ModelWeights::bigram(ModelConfig::tiny(), &corpus.log_probs, 9);
+        let wr = ModelWeights::random(ModelConfig::tiny(), 9);
+        let mut mb = LlamaModel::load(&wb, EngineKind::Dense, None);
+        let mut mr = LlamaModel::load(&wr, EngineKind::Dense, None);
+        let ab = top1_accuracy(&mut mb, &corpus.tokens, 150);
+        let ar = top1_accuracy(&mut mr, &corpus.tokens, 150);
+        assert!(ab > ar + 10.0, "bigram acc {ab}% vs random {ar}%");
+    }
+
+    #[test]
+    fn nll_counts_requested_tokens() {
+        let corpus = Corpus::synthesize(small_spec());
+        let w = ModelWeights::random(ModelConfig::tiny(), 9);
+        let mut m = LlamaModel::load(&w, EngineKind::Dense, None);
+        let (_, n) = nll(&mut m, &corpus.tokens, 50);
+        assert_eq!(n, 50);
+    }
+}

@@ -1,0 +1,131 @@
+//! Dense FP32 reference engine — the correctness oracle for every
+//! quantized kernel, and the stand-in for the cuBLAS FP16 baseline in
+//! CPU-measured comparisons.
+
+use crate::gemm::traffic::Counters;
+use crate::gemm::GemmEngine;
+
+/// Row-major dense weight engine.
+#[derive(Clone, Debug)]
+pub struct DenseEngine {
+    w: Vec<f32>,
+    n: usize,
+    k: usize,
+    counters: Counters,
+}
+
+impl DenseEngine {
+    pub fn new(w: Vec<f32>, n: usize, k: usize) -> DenseEngine {
+        assert_eq!(w.len(), n * k, "weight shape mismatch");
+        DenseEngine { w, n, k, counters: Counters::new() }
+    }
+
+    /// Borrow the weights (used by tests and the model runner).
+    pub fn weights(&self) -> &[f32] {
+        &self.w
+    }
+}
+
+impl GemmEngine for DenseEngine {
+    fn name(&self) -> &'static str {
+        "dense-f32"
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.n, self.k)
+    }
+
+    fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.k * m_batch);
+        let (n, k) = (self.n, self.k);
+        let mut y = vec![0f32; n * m_batch];
+        for b in 0..m_batch {
+            let xb = &x[b * k..(b + 1) * k];
+            let yb = &mut y[b * n..(b + 1) * n];
+            for r in 0..n {
+                let row = &self.w[r * k..(r + 1) * k];
+                // 4-way unrolled dot; autovectorizes well.
+                let mut acc0 = 0f32;
+                let mut acc1 = 0f32;
+                let mut acc2 = 0f32;
+                let mut acc3 = 0f32;
+                let chunks = k / 4;
+                for c in 0..chunks {
+                    let i = c * 4;
+                    acc0 += row[i] * xb[i];
+                    acc1 += row[i + 1] * xb[i + 1];
+                    acc2 += row[i + 2] * xb[i + 2];
+                    acc3 += row[i + 3] * xb[i + 3];
+                }
+                let mut acc = acc0 + acc1 + acc2 + acc3;
+                for i in chunks * 4..k {
+                    acc += row[i] * xb[i];
+                }
+                yb[r] = acc;
+            }
+        }
+        let macs = (n * k * m_batch) as u64;
+        self.counters.mac_flops += macs;
+        self.counters.read_ops += macs;
+        self.counters.weight_bytes += (n * k * m_batch) as u64 * 2; // fp16 stream on device
+        self.counters.activation_bytes += (k * m_batch) as u64 * 2;
+        self.counters.calls += 1;
+        y
+    }
+
+    fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    fn reset_counters(&mut self) {
+        self.counters.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn identity_gemv() {
+        let n = 4;
+        let mut w = vec![0f32; n * n];
+        for i in 0..n {
+            w[i * n + i] = 1.0;
+        }
+        let mut e = DenseEngine::new(w, n, n);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(e.gemv(&x), x);
+    }
+
+    #[test]
+    fn known_small_product() {
+        // W = [[1,2],[3,4]], x = [5,6] => y = [17, 39]
+        let mut e = DenseEngine::new(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        assert_eq!(e.gemv(&[5.0, 6.0]), vec![17.0, 39.0]);
+    }
+
+    #[test]
+    fn batch_equals_repeated_gemv() {
+        let (n, k) = (16, 33); // odd k exercises the remainder loop
+        let mut rng = Prng::seeded(1);
+        let w = rng.normal_vec(n * k, 1.0);
+        let x = rng.normal_vec(k * 3, 1.0);
+        let mut e = DenseEngine::new(w, n, k);
+        let batched = e.gemm(&x, 3);
+        for b in 0..3 {
+            let single = e.gemv(&x[b * k..(b + 1) * k]);
+            assert_eq!(&batched[b * n..(b + 1) * n], single.as_slice());
+        }
+    }
+
+    #[test]
+    fn counters_track_macs() {
+        let (n, k) = (8, 16);
+        let mut e = DenseEngine::new(vec![0.0; n * k], n, k);
+        let _ = e.gemv(&vec![0.0; k]);
+        assert_eq!(e.counters().mac_flops, (n * k) as u64);
+        assert_eq!(e.counters().calls, 1);
+    }
+}

@@ -1,0 +1,219 @@
+//! Dequantization-based baseline kernel (the AQLM-style pipeline the
+//! paper contrasts against, §2.3 / Figure 1a).
+//!
+//! For each weight tile the codes fetch centroids from the *full
+//! codebook*, reconstruct the FP weights into a scratch buffer, and a
+//! plain dot product follows. Computational complexity stays at
+//! `O(MNK)` (the paper's point) and the on-chip requirement is the whole
+//! codebook (`m · 2^b · v` halfwords) — which is why AQLM-1×16 falls off
+//! a cliff when `2^16` centroids no longer fit in shared memory.
+
+use crate::config::{KernelConfig, QuantConfig};
+use crate::gemm::tiling::Tiles;
+use crate::gemm::traffic::Counters;
+use crate::gemm::GemmEngine;
+use crate::quant::QuantizedLinear;
+use crate::util::timer::Timer;
+
+/// CPU implementation of the dequantize-then-multiply kernel.
+#[derive(Clone, Debug)]
+pub struct DequantEngine {
+    cfg: QuantConfig,
+    kernel: KernelConfig,
+    n: usize,
+    k: usize,
+    jn: usize,
+    codebooks: Vec<f32>,
+    codes: Vec<u16>,
+    scales: Vec<f32>,
+    groups_per_row: usize,
+    counters: Counters,
+}
+
+impl DequantEngine {
+    pub fn from_quantized(q: &QuantizedLinear) -> DequantEngine {
+        Self::with_kernel(q, KernelConfig::default())
+    }
+
+    pub fn with_kernel(q: &QuantizedLinear, mut kernel: KernelConfig) -> DequantEngine {
+        q.validate().expect("valid quantized layer");
+        kernel.tile_w = kernel.tile_w.min(q.k);
+        assert!(kernel.tile_w % q.cfg.v == 0);
+        DequantEngine {
+            cfg: q.cfg,
+            kernel,
+            n: q.n,
+            k: q.k,
+            jn: q.k / q.cfg.v,
+            codebooks: q.codebooks.clone(),
+            codes: q.codes.unpack().into_iter().map(|c| c as u16).collect(),
+            scales: q.scales.clone(),
+            groups_per_row: q.groups_per_row(),
+            counters: Counters::new(),
+        }
+    }
+
+    /// On-chip bytes the kernel needs resident: the full codebook (FP16).
+    pub fn codebook_bytes(&self) -> usize {
+        self.cfg.m * self.cfg.n_centroids() * self.cfg.v * 2
+    }
+}
+
+impl GemmEngine for DequantEngine {
+    fn name(&self) -> &'static str {
+        "dequant"
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.n, self.k)
+    }
+
+    fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.k * m_batch);
+        let (n, k) = (self.n, self.k);
+        let v = self.cfg.v;
+        let m = self.cfg.m;
+        let nc = self.cfg.n_centroids();
+        let g = self.cfg.group_size(k);
+        let tw = self.kernel.tile_w;
+        let th = self.kernel.tile_h;
+        let gpr = self.groups_per_row;
+        let mut y = vec![0f32; n * m_batch];
+        let mut wrow = vec![0f32; tw]; // decode scratch (one row-tile)
+        for (r0, r1) in Tiles::new(n, th) {
+            for (c0, c1) in Tiles::new(k, tw) {
+                let width = c1 - c0;
+                let jn_tile = width / v;
+                let j0 = c0 / v;
+                for r in r0..r1 {
+                    // Dequantize phase: reconstruct the row-tile weights.
+                    let t = Timer::start();
+                    wrow[..width].fill(0.0);
+                    let base = (r * self.jn + j0) * m;
+                    for j in 0..jn_tile {
+                        for c in 0..m {
+                            let code = self.codes[base + j * m + c] as usize;
+                            let cent = &self.codebooks[(c * nc + code) * v..(c * nc + code + 1) * v];
+                            for t in 0..v {
+                                wrow[j * v + t] += cent[t];
+                            }
+                        }
+                    }
+                    // Apply group scales.
+                    for t_idx in 0..width {
+                        let col = c0 + t_idx;
+                        wrow[t_idx] *= self.scales[r * gpr + col / g];
+                    }
+                    self.counters.build_seconds += t.elapsed_s();
+                    let decode_ops = (jn_tile * m * v + width) as u64;
+                    self.counters.build_ops += decode_ops;
+                    self.counters.lookups += (jn_tile * m) as u64;
+
+                    // Multiply phase: full dot per batch column — the
+                    // unreduced O(MNK) compute the paper calls out.
+                    let t = Timer::start();
+                    for b in 0..m_batch {
+                        let xb = &x[b * k + c0..b * k + c1];
+                        let mut acc = 0f32;
+                        for (wv, xv) in wrow[..width].iter().zip(xb) {
+                            acc += wv * xv;
+                        }
+                        y[b * n + r] += acc;
+                    }
+                    self.counters.read_seconds += t.elapsed_s();
+                    let macs = (width * m_batch) as u64;
+                    self.counters.mac_flops += macs;
+                    self.counters.read_ops += macs;
+                    self.counters.scratch_bytes += (width * 4 * 2) as u64; // write + read decode buf
+                    self.counters.weight_bytes += (jn_tile * m * 2) as u64; // codes (u16 stream)
+                }
+                // Codebook residency charged once per (row-block, tile),
+                // as on the GPU where each thread block re-stages it.
+                self.counters.weight_bytes += self.codebook_bytes() as u64;
+            }
+        }
+        self.counters.weight_bytes += (n * gpr * 2) as u64;
+        self.counters.activation_bytes += (k * m_batch * 2) as u64;
+        self.counters.calls += 1;
+        y
+    }
+
+    fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    fn reset_counters(&mut self) {
+        self.counters.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{CodeGemmEngine, DenseEngine};
+    use crate::quant::Quantizer;
+    use crate::util::prng::Prng;
+    use crate::util::stats;
+
+    fn quantize(n: usize, k: usize, label: &str, seed: u64) -> QuantizedLinear {
+        let w = Prng::seeded(seed).normal_vec(n * k, 0.02);
+        Quantizer::new(QuantConfig::parse_label(label).unwrap()).quantize(&w, n, k)
+    }
+
+    #[test]
+    fn matches_dense_on_dequantized_weights() {
+        let q = quantize(40, 96, "m2v8g32", 1);
+        let x = Prng::seeded(2).normal_vec(96 * 2, 1.0);
+        let y_ref = DenseEngine::new(q.dequantize(), 40, 96).gemm(&x, 2);
+        let mut e = DequantEngine::from_quantized(&q);
+        let y = e.gemm(&x, 2);
+        assert!(stats::rel_l2(&y, &y_ref) < 2e-5);
+    }
+
+    #[test]
+    fn agrees_with_codegemm_bitwise_semantics() {
+        // Both kernels compute the same mathematical result; allow only
+        // float reassociation noise.
+        let q = quantize(64, 64, "m1v4g16", 3);
+        let x = Prng::seeded(4).normal_vec(64, 1.0);
+        let y_dq = DequantEngine::from_quantized(&q).gemv(&x);
+        let y_cg = CodeGemmEngine::from_quantized(&q).gemv(&x);
+        assert!(stats::rel_l2(&y_cg, &y_dq) < 2e-5);
+    }
+
+    #[test]
+    fn compute_is_not_reduced_vs_dense() {
+        // The paper's complexity argument: dequant MACs == dense MACs.
+        let (n, k) = (32, 64);
+        let q = quantize(n, k, "m1v4g-1", 5);
+        let x = Prng::seeded(6).normal_vec(k, 1.0);
+        let mut e = DequantEngine::from_quantized(&q);
+        let _ = e.gemv(&x);
+        assert_eq!(e.counters().mac_flops, (n * k) as u64);
+    }
+
+    #[test]
+    fn codebook_bytes_formula() {
+        let q = quantize(16, 32, "m2v8g32", 7);
+        let e = DequantEngine::from_quantized(&q);
+        assert_eq!(e.codebook_bytes(), 2 * 256 * 8 * 2);
+    }
+
+    #[test]
+    fn counters_show_more_weight_traffic_than_codegemm() {
+        // The dequant kernel re-stages the whole codebook per tile, so its
+        // weight-side traffic must exceed CodeGEMM's on the same layer.
+        let q = quantize(128, 128, "m2v8g128", 8);
+        let x = Prng::seeded(9).normal_vec(128, 1.0);
+        let mut dq = DequantEngine::with_kernel(&q, KernelConfig { tile_w: 32, tile_h: 64 });
+        let mut cg = CodeGemmEngine::with_kernel(&q, KernelConfig { tile_w: 32, tile_h: 64 });
+        let _ = dq.gemv(&x);
+        let _ = cg.gemv(&x);
+        assert!(
+            dq.counters().weight_bytes > cg.counters().weight_bytes,
+            "dequant {} !> codegemm {}",
+            dq.counters().weight_bytes,
+            cg.counters().weight_bytes
+        );
+    }
+}

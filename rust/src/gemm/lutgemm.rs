@@ -1,0 +1,177 @@
+//! LUT-GEMM baseline (paper §2.3, ref [20]): lookup-table GEMM over the
+//! BCQ format. For every length-μ (=8) chunk of the activations, the
+//! kernel precomputes all `2^μ` signed sums; each weight bitplane then
+//! indexes the table with 8 sign bits at a time, replacing 8 MACs by one
+//! lookup + add per plane.
+
+use crate::gemm::traffic::Counters;
+use crate::gemm::GemmEngine;
+use crate::quant::bcq::BcqLinear;
+use crate::util::timer::Timer;
+
+/// Sub-vector width of the lookup table (LUT-GEMM's μ).
+pub const MU: usize = 8;
+
+/// CPU implementation of the LUT-GEMM kernel over BCQ weights.
+#[derive(Clone, Debug)]
+pub struct LutGemmEngine {
+    bcq: BcqLinear,
+    counters: Counters,
+}
+
+impl LutGemmEngine {
+    pub fn new(bcq: BcqLinear) -> LutGemmEngine {
+        assert_eq!(bcq.k % MU, 0, "K must be a multiple of MU={MU}");
+        assert_eq!(bcq.group % MU, 0, "group must be a multiple of MU");
+        LutGemmEngine { bcq, counters: Counters::new() }
+    }
+
+    /// LUT on-chip bytes per batch column: `2^μ · K/μ` f32 entries.
+    pub fn lut_bytes(&self) -> usize {
+        (1 << MU) * (self.bcq.k / MU) * 4
+    }
+
+    /// Build the `2^8` signed-sum table for one 8-chunk of activations
+    /// using the doubling recurrence: O(2^μ) instead of O(μ·2^μ).
+    fn build_chunk_table(x: &[f32; MU], table: &mut [f32]) {
+        // table[t]: bit j of t set ⇒ +x[j], else −x[j].
+        table[0] = -x.iter().sum::<f32>();
+        let mut size = 1usize;
+        for (j, &xj) in x.iter().enumerate() {
+            let add = 2.0 * xj;
+            let bit = 1usize << j;
+            for t in 0..size {
+                table[t | bit] = table[t] + add;
+            }
+            size <<= 1;
+        }
+    }
+}
+
+impl GemmEngine for LutGemmEngine {
+    fn name(&self) -> &'static str {
+        "lutgemm"
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.bcq.n, self.bcq.k)
+    }
+
+    fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32> {
+        let (n, k) = self.dims();
+        assert_eq!(x.len(), k * m_batch);
+        let q = self.bcq.q_bits;
+        let chunks = k / MU;
+        let mut y = vec![0f32; n * m_batch];
+        let mut table = vec![0f32; chunks << MU];
+        for b in 0..m_batch {
+            let xb = &x[b * k..(b + 1) * k];
+            // Build phase: all chunk tables for this activation column.
+            let t = Timer::start();
+            for ch in 0..chunks {
+                let mut xc = [0f32; MU];
+                xc.copy_from_slice(&xb[ch * MU..(ch + 1) * MU]);
+                Self::build_chunk_table(&xc, &mut table[ch << MU..(ch + 1) << MU]);
+            }
+            self.counters.build_seconds += t.elapsed_s();
+            self.counters.build_ops += (chunks << MU) as u64;
+            self.counters.scratch_bytes += ((chunks << MU) * 4) as u64;
+
+            // Read phase: per row/plane, index the tables by sign bits.
+            let t = Timer::start();
+            for r in 0..n {
+                let mut acc = 0f32;
+                for plane in 0..q {
+                    let words = self.bcq.row_plane_words(plane, r);
+                    for ch in 0..chunks {
+                        let c0 = ch * MU;
+                        let bits = ((words[c0 / 64] >> (c0 % 64)) & 0xFF) as usize;
+                        let alpha = self.bcq.alpha(r, c0, plane);
+                        acc += alpha * table[(ch << MU) | bits];
+                    }
+                }
+                y[b * n + r] = acc;
+            }
+            self.counters.read_seconds += t.elapsed_s();
+            let lookups = (n * q * chunks) as u64;
+            self.counters.read_ops += lookups;
+            self.counters.lookups += lookups;
+            self.counters.mac_flops += lookups; // one MAC (alpha × table) per lookup
+            self.counters.scratch_bytes += lookups * 4;
+        }
+        // Weight stream: bitplanes + alphas.
+        self.counters.weight_bytes += ((n * k * q) / 8 + n * (k / self.bcq.group) * q * 2) as u64;
+        self.counters.activation_bytes += (k * m_batch * 2) as u64;
+        self.counters.calls += 1;
+        y
+    }
+
+    fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    fn reset_counters(&mut self) {
+        self.counters.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::DenseEngine;
+    use crate::util::prng::Prng;
+    use crate::util::stats;
+
+    #[test]
+    fn chunk_table_enumerates_all_sign_patterns() {
+        let x = [1.0f32, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+        let mut table = vec![0f32; 256];
+        LutGemmEngine::build_chunk_table(&x, &mut table);
+        for t in 0..256usize {
+            let mut expect = 0f32;
+            for (j, &xj) in x.iter().enumerate() {
+                expect += if (t >> j) & 1 == 1 { xj } else { -xj };
+            }
+            assert!((table[t] - expect).abs() < 1e-4, "t={t}: {} vs {expect}", table[t]);
+        }
+    }
+
+    #[test]
+    fn matches_dense_on_dequantized_bcq() {
+        let (n, k) = (32, 64);
+        let w = Prng::seeded(1).normal_vec(n * k, 0.02);
+        let bcq = BcqLinear::quantize(&w, n, k, 3, 32).unwrap();
+        let x = Prng::seeded(2).normal_vec(k * 2, 1.0);
+        let y_ref = DenseEngine::new(bcq.dequantize(), n, k).gemm(&x, 2);
+        let mut e = LutGemmEngine::new(bcq);
+        let y = e.gemm(&x, 2);
+        assert!(stats::rel_l2(&y, &y_ref) < 1e-4);
+    }
+
+    #[test]
+    fn lookup_count_is_macs_over_mu() {
+        // LUT-GEMM's win: n·k·q MACs become n·(k/8)·q lookups.
+        let (n, k, q) = (16, 64, 2);
+        let w = Prng::seeded(3).normal_vec(n * k, 1.0);
+        let bcq = BcqLinear::quantize(&w, n, k, q, 64).unwrap();
+        let mut e = LutGemmEngine::new(bcq);
+        let _ = e.gemv(&vec![1.0f32; k]);
+        assert_eq!(e.counters().lookups, (n * (k / MU) * q) as u64);
+    }
+
+    #[test]
+    fn lut_bytes_formula() {
+        let w = vec![0.1f32; 8 * 64];
+        let bcq = BcqLinear::quantize(&w, 8, 64, 2, 64).unwrap();
+        let e = LutGemmEngine::new(bcq);
+        assert_eq!(e.lut_bytes(), 256 * 8 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of MU")]
+    fn rejects_unaligned_k() {
+        let w = vec![0.1f32; 4 * 12];
+        let bcq = BcqLinear::quantize(&w, 4, 12, 2, 12).unwrap();
+        let _ = LutGemmEngine::new(bcq);
+    }
+}

@@ -1,0 +1,112 @@
+//! CPU reference engines for every matrix-multiplication kernel in the
+//! paper's evaluation (§3, §4).
+//!
+//! Each engine computes `Y (n × M) = W (n × k) · X (k × M)` for its weight
+//! format and maintains exact work/traffic counters (MACs, table lookups,
+//! bytes touched per memory class, per-phase time) so the benches can
+//! report both *measured CPU wall-clock* and the *derived counts* that
+//! feed the A100 analytic model.
+//!
+//! Activation/batch layout: `X` is batch-major (`x[b*k .. (b+1)*k]` is
+//! column `b`), outputs likewise (`y[b*n .. (b+1)*n]`).
+
+pub mod codegemm;
+pub mod dense;
+pub mod dequant;
+pub mod lutgemm;
+pub mod psumbook;
+pub mod tiling;
+pub mod traffic;
+pub mod uniform_gemm;
+
+pub use codegemm::CodeGemmEngine;
+pub use dense::DenseEngine;
+pub use dequant::DequantEngine;
+pub use lutgemm::LutGemmEngine;
+pub use psumbook::Psumbook;
+pub use traffic::Counters;
+pub use uniform_gemm::UniformGemmEngine;
+
+/// Common interface over all kernel implementations.
+pub trait GemmEngine {
+    /// Kernel name as used in the paper's tables.
+    fn name(&self) -> &'static str;
+
+    /// `(n, k)` weight dimensions.
+    fn dims(&self) -> (usize, usize);
+
+    /// Single-vector product `y = W x` (`x.len() == k`).
+    fn gemv(&mut self, x: &[f32]) -> Vec<f32> {
+        self.gemm(x, 1)
+    }
+
+    /// Batched product. `x.len() == k * m_batch`, returns `n * m_batch`.
+    fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32>;
+
+    /// Work/traffic counters accumulated since the last reset.
+    fn counters(&self) -> &Counters;
+
+    fn reset_counters(&mut self);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QuantConfig;
+    use crate::quant::{QuantizedLinear, Quantizer};
+    use crate::util::prng::Prng;
+    use crate::util::stats;
+
+    fn setup(n: usize, k: usize, cfg: QuantConfig) -> (Vec<f32>, QuantizedLinear) {
+        let w = Prng::seeded(99).normal_vec(n * k, 0.02);
+        let q = Quantizer::new(cfg).quantize(&w, n, k);
+        (w, q)
+    }
+
+    /// THE central correctness property of the paper: CodeGEMM computes
+    /// exactly the same result as dequantize-then-GEMM, because the
+    /// Psumbook gather is algebraically identical to reconstructing the
+    /// weights (§3 Methodology).
+    #[test]
+    fn codegemm_matches_dequantized_dense_exactly() {
+        for label in ["m1v4g-1", "m2v8g32", "m1v8g16", "m3v4g64"] {
+            let cfg = QuantConfig::parse_label(label).unwrap();
+            let (_, q) = setup(64, 128, cfg);
+            let wq = q.dequantize();
+            let mut rng = Prng::seeded(5);
+            let x = rng.normal_vec(128, 1.0);
+            let mut dense = DenseEngine::new(wq, 64, 128);
+            let mut cg = CodeGemmEngine::from_quantized(&q);
+            let y_ref = dense.gemv(&x);
+            let y = cg.gemv(&x);
+            let rel = stats::rel_l2(&y, &y_ref);
+            assert!(rel < 2e-5, "{label}: rel={rel}");
+        }
+    }
+
+    #[test]
+    fn all_quantized_engines_agree_with_their_dequantized_weights() {
+        let cfg = QuantConfig::new(4, 2, 6, 32).unwrap();
+        let (_, q) = setup(48, 64, cfg);
+        let x = Prng::seeded(6).normal_vec(64 * 3, 1.0);
+        let wq = q.dequantize();
+        let y_ref = DenseEngine::new(wq, 48, 64).gemm(&x, 3);
+        let mut cg = CodeGemmEngine::from_quantized(&q);
+        let mut dq = DequantEngine::from_quantized(&q);
+        assert!(stats::rel_l2(&cg.gemm(&x, 3), &y_ref) < 2e-5);
+        assert!(stats::rel_l2(&dq.gemm(&x, 3), &y_ref) < 2e-5);
+    }
+
+    #[test]
+    fn engines_report_dims_and_counters() {
+        let cfg = QuantConfig::m1v4g128();
+        let (_, q) = setup(32, 128, cfg);
+        let mut cg = CodeGemmEngine::from_quantized(&q);
+        assert_eq!(cg.dims(), (32, 128));
+        let x = vec![1.0f32; 128];
+        let _ = cg.gemv(&x);
+        assert!(cg.counters().mac_flops > 0);
+        cg.reset_counters();
+        assert_eq!(cg.counters().mac_flops, 0);
+    }
+}

@@ -1,0 +1,180 @@
+//! The Psumbook (paper §3, Figure 3, Step 2): all inner products between
+//! codebook centroids and the activation sub-vectors of one weight tile,
+//! precomputed once per (row-block × k-tile) and then *gathered* through
+//! the code matrix instead of dequantizing weights.
+//!
+//! Layout: `data[((j·m + c)·2^b + i)·mb + b]` — the centroid axis `i` is
+//! innermost-but-one so each `(j, c)` table is a contiguous `2^b × mb`
+//! block (stays L1-resident during the gather), and the batch axis is
+//! innermost so batched gathers are contiguous loads.
+
+/// A built Psumbook for one tile.
+#[derive(Clone, Debug)]
+pub struct Psumbook {
+    /// Vectors in the tile (`t_w / v`).
+    pub jn: usize,
+    /// Number of codebooks.
+    pub m: usize,
+    /// Centroids per codebook (`2^b`).
+    pub nc: usize,
+    /// Batch columns.
+    pub mb: usize,
+    pub data: Vec<f32>,
+}
+
+impl Psumbook {
+    /// Allocate an uninitialized book (zeroed).
+    pub fn empty(jn: usize, m: usize, nc: usize, mb: usize) -> Psumbook {
+        Psumbook { jn, m, nc, mb, data: vec![0f32; jn * m * nc * mb] }
+    }
+
+    /// Number of f32 entries.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// On-chip footprint in bytes (the paper's space-complexity object:
+    /// `O(m · 2^b · t_w/v)` per batch column).
+    pub fn footprint_bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    /// Build the book for activations `x` laid out batch-major
+    /// (`x[b*k_tile..]` is one column's tile slice, `k_tile = jn*v`).
+    ///
+    /// `codebooks` is the flat `m × nc × v` array from
+    /// [`crate::quant::QuantizedLinear`]. Returns MAC count.
+    pub fn build(&mut self, codebooks: &[f32], v: usize, x: &[f32]) -> u64 {
+        let (jn, m, nc, mb) = (self.jn, self.m, self.nc, self.mb);
+        let k_tile = jn * v;
+        debug_assert_eq!(x.len(), k_tile * mb);
+        debug_assert_eq!(codebooks.len(), m * nc * v);
+        if mb == 1 {
+            // Single-column fast path (the GEMV hot case): the activation
+            // sub-vector is hoisted out of the centroid loop and the v≤8
+            // dot product unrolls; table entries are written sequentially.
+            for j in 0..jn {
+                let xj = &x[j * v..(j + 1) * v];
+                for c in 0..m {
+                    let cb = &codebooks[c * nc * v..(c + 1) * nc * v];
+                    let out = &mut self.data[(j * m + c) * nc..(j * m + c + 1) * nc];
+                    match v {
+                        4 => {
+                            let (x0, x1, x2, x3) = (xj[0], xj[1], xj[2], xj[3]);
+                            for (i, o) in out.iter_mut().enumerate() {
+                                let cent = &cb[i * 4..i * 4 + 4];
+                                *o = cent[0] * x0 + cent[1] * x1 + cent[2] * x2 + cent[3] * x3;
+                            }
+                        }
+                        8 => {
+                            for (i, o) in out.iter_mut().enumerate() {
+                                let cent = &cb[i * 8..i * 8 + 8];
+                                let a = cent[0] * xj[0] + cent[1] * xj[1] + cent[2] * xj[2] + cent[3] * xj[3];
+                                let b = cent[4] * xj[4] + cent[5] * xj[5] + cent[6] * xj[6] + cent[7] * xj[7];
+                                *o = a + b;
+                            }
+                        }
+                        _ => {
+                            for (i, o) in out.iter_mut().enumerate() {
+                                let cent = &cb[i * v..(i + 1) * v];
+                                *o = cent.iter().zip(xj).map(|(a, b)| a * b).sum();
+                            }
+                        }
+                    }
+                }
+            }
+            return (jn * m * nc * v) as u64;
+        }
+        for j in 0..jn {
+            for c in 0..m {
+                let cb = &codebooks[c * nc * v..(c + 1) * nc * v];
+                let base = (j * m + c) * nc * mb;
+                for i in 0..nc {
+                    let cent = &cb[i * v..(i + 1) * v];
+                    for b in 0..mb {
+                        let xj = &x[b * k_tile + j * v..b * k_tile + (j + 1) * v];
+                        let mut acc = 0f32;
+                        for t in 0..v {
+                            acc += cent[t] * xj[t];
+                        }
+                        self.data[base + i * mb + b] = acc;
+                    }
+                }
+            }
+        }
+        (jn * m * nc * v * mb) as u64
+    }
+
+    /// The contiguous `nc × mb` table for `(j, c)`.
+    #[inline]
+    pub fn table(&self, j: usize, c: usize) -> &[f32] {
+        let base = (j * self.m + c) * self.nc * self.mb;
+        &self.data[base..base + self.nc * self.mb]
+    }
+
+    /// Single-batch lookup.
+    #[inline]
+    pub fn get(&self, j: usize, c: usize, code: usize, b: usize) -> f32 {
+        self.data[((j * self.m + c) * self.nc + code) * self.mb + b]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    /// Psumbook entries must equal the direct inner products (Eq. 2).
+    #[test]
+    fn entries_match_eq2() {
+        let (v, m, nc, jn, mb) = (4usize, 2usize, 8usize, 3usize, 2usize);
+        let mut rng = Prng::seeded(1);
+        let codebooks = rng.normal_vec(m * nc * v, 1.0);
+        let x = rng.normal_vec(jn * v * mb, 1.0);
+        let mut book = Psumbook::empty(jn, m, nc, mb);
+        let macs = book.build(&codebooks, v, &x);
+        assert_eq!(macs, (jn * m * nc * v * mb) as u64);
+        for j in 0..jn {
+            for c in 0..m {
+                for i in 0..nc {
+                    for b in 0..mb {
+                        let mut expect = 0f32;
+                        for t in 0..v {
+                            expect += codebooks[(c * nc + i) * v + t] * x[b * jn * v + j * v + t];
+                        }
+                        let got = book.get(j, c, i, b);
+                        assert!((got - expect).abs() < 1e-5, "j{j} c{c} i{i} b{b}: {got} vs {expect}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn footprint_matches_paper_space_complexity() {
+        // m=2, b=8 (nc=256), t_w=32, v=8 ⇒ jn=4 ⇒ 2·256·4 f32 = 8 KiB.
+        let book = Psumbook::empty(4, 2, 256, 1);
+        assert_eq!(book.footprint_bytes(), 2 * 256 * 4 * 4);
+    }
+
+    #[test]
+    fn table_slices_are_disjoint_cover() {
+        let book = Psumbook::empty(2, 2, 4, 1);
+        let total: usize = (0..2).flat_map(|j| (0..2).map(move |c| (j, c))).map(|(j, c)| book.table(j, c).len()).sum();
+        assert_eq!(total, book.len());
+    }
+
+    #[test]
+    fn zero_activations_zero_book() {
+        let (v, m, nc, jn) = (4, 1, 4, 2);
+        let codebooks = Prng::seeded(2).normal_vec(m * nc * v, 1.0);
+        let x = vec![0f32; jn * v];
+        let mut book = Psumbook::empty(jn, m, nc, 1);
+        book.build(&codebooks, v, &x);
+        assert!(book.data.iter().all(|&p| p == 0.0));
+    }
+}

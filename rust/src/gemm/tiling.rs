@@ -1,0 +1,79 @@
+//! Tiling helpers: the kernels walk the weight matrix in `(t_h × t_w)`
+//! tiles exactly as the GPU kernels do (paper §3, Figure 3), which is
+//! what makes the build/read phase accounting (Table 6) and the tile
+//! sensitivity study (Table 7) meaningful on the CPU engines.
+
+/// Half-open ranges covering `[0, len)` in steps of `tile`.
+#[derive(Clone, Copy, Debug)]
+pub struct Tiles {
+    len: usize,
+    tile: usize,
+    pos: usize,
+}
+
+impl Tiles {
+    pub fn new(len: usize, tile: usize) -> Tiles {
+        assert!(tile > 0, "tile must be positive");
+        Tiles { len, tile, pos: 0 }
+    }
+
+    /// Number of tiles.
+    pub fn count(len: usize, tile: usize) -> usize {
+        len.div_ceil(tile)
+    }
+}
+
+impl Iterator for Tiles {
+    type Item = (usize, usize);
+
+    fn next(&mut self) -> Option<(usize, usize)> {
+        if self.pos >= self.len {
+            return None;
+        }
+        let start = self.pos;
+        let end = (start + self.tile).min(self.len);
+        self.pos = end;
+        Some((start, end))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_exactly() {
+        let tiles: Vec<_> = Tiles::new(10, 4).collect();
+        assert_eq!(tiles, vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(Tiles::count(10, 4), 3);
+    }
+
+    #[test]
+    fn exact_division() {
+        let tiles: Vec<_> = Tiles::new(8, 4).collect();
+        assert_eq!(tiles, vec![(0, 4), (4, 8)]);
+    }
+
+    #[test]
+    fn empty_len() {
+        assert_eq!(Tiles::new(0, 4).count(), 0);
+    }
+
+    #[test]
+    fn tile_larger_than_len() {
+        let tiles: Vec<_> = Tiles::new(3, 100).collect();
+        assert_eq!(tiles, vec![(0, 3)]);
+    }
+
+    #[test]
+    fn union_is_disjoint_cover() {
+        let mut covered = vec![false; 37];
+        for (a, b) in Tiles::new(37, 5) {
+            for i in a..b {
+                assert!(!covered[i], "overlap at {i}");
+                covered[i] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+}

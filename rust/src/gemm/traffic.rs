@@ -1,0 +1,130 @@
+//! Work and traffic accounting shared by all engines.
+//!
+//! Counters are *exact* counts derived from the algorithm (not sampled):
+//! they feed the A100 analytic model (`simulator/`) and the paper's
+//! Table 6 build/read split.
+
+/// Accumulated work counters for one engine.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Counters {
+    /// Multiply-accumulate operations (1 MAC = 2 FLOPs).
+    pub mac_flops: u64,
+    /// Table lookups (Psumbook gathers / LUT reads).
+    pub lookups: u64,
+    /// Bytes of weight-side data read (dense weights, codes, codebooks,
+    /// scales, bitplanes) — models DRAM traffic on the weight stream.
+    pub weight_bytes: u64,
+    /// Bytes of activation data read.
+    pub activation_bytes: u64,
+    /// Bytes written to / read from the on-chip scratch (Psumbook / LUT /
+    /// decode buffers) — models shared-memory traffic.
+    pub scratch_bytes: u64,
+    /// Work spent building per-tile structures (Psumbook/LUT), in MACs.
+    pub build_ops: u64,
+    /// Work spent in the main accumulate loop, in lookup+add units.
+    pub read_ops: u64,
+    /// Wall time attributed to the build phase (seconds).
+    pub build_seconds: f64,
+    /// Wall time attributed to the read/accumulate phase (seconds).
+    pub read_seconds: f64,
+    /// Number of GEMV/GEMM calls.
+    pub calls: u64,
+}
+
+impl Counters {
+    pub fn new() -> Counters {
+        Counters::default()
+    }
+
+    pub fn reset(&mut self) {
+        *self = Counters::default();
+    }
+
+    /// Total FLOPs (2 per MAC).
+    pub fn flops(&self) -> u64 {
+        2 * self.mac_flops
+    }
+
+    /// Fraction of phase work spent building (by op counts) — the
+    /// quantity the paper's Table 6 reports as "Psumbook Phase (%)".
+    pub fn build_share_ops(&self) -> f64 {
+        let total = (self.build_ops + self.read_ops) as f64;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.build_ops as f64 / total
+        }
+    }
+
+    /// Fraction of phase wall-time spent building.
+    pub fn build_share_time(&self) -> f64 {
+        let total = self.build_seconds + self.read_seconds;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.build_seconds / total
+        }
+    }
+
+    /// Total bytes moved (all classes).
+    pub fn total_bytes(&self) -> u64 {
+        self.weight_bytes + self.activation_bytes + self.scratch_bytes
+    }
+
+    /// Merge another counter set into this one.
+    pub fn merge(&mut self, other: &Counters) {
+        self.mac_flops += other.mac_flops;
+        self.lookups += other.lookups;
+        self.weight_bytes += other.weight_bytes;
+        self.activation_bytes += other.activation_bytes;
+        self.scratch_bytes += other.scratch_bytes;
+        self.build_ops += other.build_ops;
+        self.read_ops += other.read_ops;
+        self.build_seconds += other.build_seconds;
+        self.read_seconds += other.read_seconds;
+        self.calls += other.calls;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_share_by_ops() {
+        let mut c = Counters::new();
+        c.build_ops = 30;
+        c.read_ops = 70;
+        assert!((c.build_share_ops() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_shares_are_zero() {
+        let c = Counters::new();
+        assert_eq!(c.build_share_ops(), 0.0);
+        assert_eq!(c.build_share_time(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Counters { mac_flops: 1, lookups: 2, calls: 1, ..Default::default() };
+        let b = Counters { mac_flops: 10, lookups: 20, calls: 1, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.mac_flops, 11);
+        assert_eq!(a.lookups, 22);
+        assert_eq!(a.calls, 2);
+    }
+
+    #[test]
+    fn flops_is_twice_macs() {
+        let c = Counters { mac_flops: 21, ..Default::default() };
+        assert_eq!(c.flops(), 42);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut c = Counters { mac_flops: 5, build_seconds: 1.0, ..Default::default() };
+        c.reset();
+        assert_eq!(c, Counters::default());
+    }
+}

@@ -1,0 +1,118 @@
+//! Uniform-quantization GEMM baseline (GPTQ/AWQ-class INTx-FP kernel,
+//! paper §2.3). Dequantizes int weights with their group scale on the fly
+//! and multiplies — data movement improves with the bit-width, compute
+//! does not.
+
+use crate::gemm::traffic::Counters;
+use crate::gemm::GemmEngine;
+use crate::quant::uniform::UniformLinear;
+use crate::util::timer::Timer;
+
+/// CPU implementation of the INTx-FP uniform kernel.
+#[derive(Clone, Debug)]
+pub struct UniformGemmEngine {
+    q: UniformLinear,
+    counters: Counters,
+}
+
+impl UniformGemmEngine {
+    pub fn new(q: UniformLinear) -> UniformGemmEngine {
+        UniformGemmEngine { q, counters: Counters::new() }
+    }
+}
+
+impl GemmEngine for UniformGemmEngine {
+    fn name(&self) -> &'static str {
+        "uniform-int"
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.q.n, self.q.k)
+    }
+
+    fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32> {
+        let (n, k) = self.dims();
+        assert_eq!(x.len(), k * m_batch);
+        let group = self.q.group;
+        let n_groups = self.q.n_groups();
+        let mut y = vec![0f32; n * m_batch];
+        let t = Timer::start();
+        for b in 0..m_batch {
+            let xb = &x[b * k..(b + 1) * k];
+            for r in 0..n {
+                let qrow = &self.q.qweight[r * k..(r + 1) * k];
+                let srow = &self.q.scales[r * n_groups..(r + 1) * n_groups];
+                let mut acc = 0f32;
+                for (gi, scale) in srow.iter().enumerate() {
+                    let lo = gi * group;
+                    let mut gacc = 0f32;
+                    for c in lo..lo + group {
+                        gacc += qrow[c] as f32 * xb[c];
+                    }
+                    acc += scale * gacc;
+                }
+                y[b * n + r] = acc;
+            }
+        }
+        self.counters.read_seconds += t.elapsed_s();
+        let macs = (n * k * m_batch) as u64;
+        self.counters.mac_flops += macs;
+        self.counters.read_ops += macs;
+        // Weight stream: packed ints + fp16 scales.
+        self.counters.weight_bytes +=
+            ((n * k * self.q.bits).div_ceil(8) + n * n_groups * 2) as u64;
+        self.counters.activation_bytes += (k * m_batch * 2) as u64;
+        self.counters.calls += 1;
+        y
+    }
+
+    fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    fn reset_counters(&mut self) {
+        self.counters.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::DenseEngine;
+    use crate::util::prng::Prng;
+    use crate::util::stats;
+
+    #[test]
+    fn matches_dense_on_dequantized_weights() {
+        let (n, k) = (24, 64);
+        let w = Prng::seeded(1).normal_vec(n * k, 0.02);
+        let q = UniformLinear::quantize(&w, n, k, 4, 32).unwrap();
+        let x = Prng::seeded(2).normal_vec(k * 2, 1.0);
+        let y_ref = DenseEngine::new(q.dequantize(), n, k).gemm(&x, 2);
+        let mut e = UniformGemmEngine::new(q);
+        assert!(stats::rel_l2(&e.gemm(&x, 2), &y_ref) < 1e-5);
+    }
+
+    #[test]
+    fn compute_equals_dense_macs() {
+        let (n, k) = (8, 32);
+        let q = UniformLinear::quantize(&vec![0.5f32; n * k], n, k, 2, 32).unwrap();
+        let mut e = UniformGemmEngine::new(q);
+        let _ = e.gemv(&vec![1.0f32; k]);
+        assert_eq!(e.counters().mac_flops, (n * k) as u64);
+    }
+
+    #[test]
+    fn weight_traffic_scales_with_bits() {
+        let (n, k) = (8, 128);
+        let w = Prng::seeded(3).normal_vec(n * k, 1.0);
+        let traffic = |bits| {
+            let q = UniformLinear::quantize(&w, n, k, bits, 128).unwrap();
+            let mut e = UniformGemmEngine::new(q);
+            let _ = e.gemv(&vec![1.0f32; k]);
+            e.counters().weight_bytes
+        };
+        assert!(traffic(2) < traffic(4));
+        assert!(traffic(4) < traffic(8));
+    }
+}

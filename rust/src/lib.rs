@@ -1,0 +1,63 @@
+//! # CodeGEMM
+//!
+//! A codebook-centric GEMM stack for quantized LLM inference, reproducing
+//! *"CodeGEMM: A Codebook-Centric Approach to Efficient GEMM in Quantized
+//! LLMs"* (Park et al., 2025).
+//!
+//! The crate is the **Layer-3 (Rust) half** of a three-layer system:
+//!
+//! - **L1** — a Pallas kernel (`python/compile/kernels/codegemm.py`) that
+//!   builds a *Psumbook* (all centroid·activation inner products) in on-chip
+//!   scratch and gathers partial sums through the code matrix.
+//! - **L2** — a JAX Llama-style decoder whose linear layers call the L1
+//!   kernel; AOT-lowered once to HLO text (`make artifacts`).
+//! - **L3** — this crate: the quantization toolkit, CPU reference engines
+//!   for every kernel in the paper's evaluation, an A100 analytic
+//!   performance model regenerating the paper's tables, a PJRT runtime
+//!   that loads and executes the AOT artifacts, and a serving coordinator
+//!   (router / dynamic batcher / scheduler) with Python *never* on the
+//!   request path.
+//!
+//! ## Quick start
+//!
+//! (`no_run`: rustdoc test binaries do not inherit the cargo-config rpath
+//! to `$XLA_EXTENSION_DIR/lib`, so they cannot load libstdc++ in this
+//! offline image; the same code *is* executed by `examples/quickstart.rs`
+//! and the `gemm` unit tests.)
+//!
+//! ```no_run
+//! use codegemm::config::QuantConfig;
+//! use codegemm::quant::Quantizer;
+//! use codegemm::gemm::{CodeGemmEngine, DenseEngine, GemmEngine};
+//! use codegemm::util::prng::Prng;
+//!
+//! let mut rng = Prng::seeded(7);
+//! let (n, k) = (64, 128);
+//! let w: Vec<f32> = (0..n * k).map(|_| rng.normal_f32()).collect();
+//! let cfg = QuantConfig::new(4, 1, 8, 128).unwrap(); // v=4, m=1, b=8, g=128
+//! let qw = Quantizer::new(cfg).quantize(&w, n, k);
+//! let x: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+//!
+//! let mut engine = CodeGemmEngine::from_quantized(&qw);
+//! let y = engine.gemv(&x);
+//! let y_ref = DenseEngine::new(w.clone(), n, k).gemv(&x);
+//! let rel = codegemm::util::stats::rel_l2(&y, &y_ref);
+//! assert!(rel < 0.5, "2-bit-class quantization keeps gross structure");
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod gemm;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod simulator;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI and the serving endpoint.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

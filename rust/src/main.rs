@@ -1,0 +1,291 @@
+//! `codegemm` — leader entrypoint + CLI.
+//!
+//! Subcommands:
+//! - `tables`    regenerate the paper's tables/figures (model vs paper)
+//! - `serve`     run the serving coordinator on the AOT artifacts (or the
+//!               native backend) against a synthetic request workload
+//! - `quantize`  quantize a layer and report footprint / error / engine
+//!               agreement
+//! - `bench`     quick CPU-engine micro-benchmarks (full suite: cargo bench)
+//! - `doctor`    environment self-checks (PJRT client, artifacts)
+
+use codegemm::bench::harness::{run_bench, BenchOptions};
+use codegemm::bench::tables::{self, EvalContext};
+use codegemm::config::{ModelConfig, QuantConfig, ServeConfig};
+use codegemm::coordinator::{DecodeBackend, NativeBackend, PjrtBackend, Request, Server};
+use codegemm::gemm::{CodeGemmEngine, DenseEngine, DequantEngine, GemmEngine};
+use codegemm::model::{EngineKind, ModelWeights};
+use codegemm::quant::footprint::bits_per_weight;
+use codegemm::quant::Quantizer;
+use codegemm::runtime::{pjrt_self_test, ModelRuntime};
+use codegemm::util::argparse::Command;
+use codegemm::util::prng::Prng;
+use codegemm::util::stats;
+use codegemm::util::table::fnum;
+use std::path::Path;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    format!(
+        "codegemm {} — codebook-centric GEMM stack (CodeGEMM reproduction)\n\n\
+         USAGE: codegemm <subcommand> [options]\n\n\
+         SUBCOMMANDS:\n  \
+           tables    --table <1..10|fig4a|fig4b|fig5|all> [--artifacts DIR]\n  \
+           serve     [--artifacts DIR] [--backend pjrt|native] [--requests N] [--batch N]\n  \
+           quantize  --config m1v4g128 [--n 512] [--k 512]\n  \
+           bench     [--n 1024] [--k 1024]\n  \
+           doctor    [--artifacts DIR]\n",
+        codegemm::VERSION
+    )
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let Some(sub) = args.first() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "tables" => cmd_tables(rest),
+        "serve" => cmd_serve(rest),
+        "quantize" => cmd_quantize(rest),
+        "bench" => cmd_bench(rest),
+        "doctor" => cmd_doctor(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}'\n{}", usage()),
+    }
+}
+
+// ----------------------------------------------------------------- tables
+
+fn cmd_tables(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("tables", "regenerate the paper's tables and figures")
+        .opt("table", Some("all"), "table id (1..10, fig4a, fig4b, fig5) or 'all'")
+        .flag("all", "regenerate everything")
+        .opt("artifacts", Some("artifacts"), "artifacts dir for the accuracy substrate");
+    let m = cmd.parse(args)?;
+    let ctx = EvalContext::load(Path::new(m.str("artifacts")?));
+    let want = if m.flag("all") { "all" } else { m.str("table")? };
+    let ids: Vec<&str> = if want == "all" {
+        tables::all_ids().to_vec()
+    } else {
+        vec![want]
+    };
+    for id in ids {
+        match tables::render(id, &ctx) {
+            Some(text) => println!("{text}"),
+            None => anyhow::bail!("unknown table id '{id}' (valid: {:?})", tables::all_ids()),
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ serve
+
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("serve", "serve a synthetic workload through the coordinator")
+        .opt("artifacts", Some("artifacts"), "AOT artifacts dir")
+        .opt("backend", Some("auto"), "pjrt | native | auto")
+        .opt("requests", Some("32"), "number of requests")
+        .opt("batch", Some("4"), "max batch (native backend)")
+        .opt("max-new", Some("24"), "max new tokens per request")
+        .opt("prompt-len", Some("16"), "prompt length (tokens)");
+    let m = cmd.parse(args)?;
+    let artifacts = Path::new(m.str("artifacts")?);
+    let n_requests = m.usize("requests")?;
+    let max_new = m.usize("max-new")?;
+    let prompt_len = m.usize("prompt-len")?;
+    let want = m.str("backend")?;
+
+    let cfg = ServeConfig { max_batch: m.usize("batch")?, max_new_tokens: max_new, ..Default::default() };
+    let (backend, label): (Box<dyn DecodeBackend>, String) =
+        if want != "native" && artifacts.join("manifest.json").exists() {
+            let rt = ModelRuntime::load(artifacts)?;
+            let be = PjrtBackend::new(rt);
+            let label = be.label();
+            (Box::new(be), label)
+        } else {
+            if want == "pjrt" {
+                anyhow::bail!("--backend pjrt requested but no artifacts at {}", artifacts.display());
+            }
+            let weights = load_or_random_weights(artifacts);
+            let be = NativeBackend::new(
+                &weights,
+                EngineKind::codegemm(QuantConfig::new(4, 1, 8, 32)?),
+                cfg.max_batch,
+            );
+            let label = be.label();
+            (Box::new(be), label)
+        };
+    println!("backend: {label}");
+    let server = Server::start(backend, cfg);
+
+    // Synthetic workload: corpus-like byte prompts.
+    let mut rng = Prng::seeded(42);
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let prompt: Vec<usize> = (0..prompt_len).map(|_| rng.index(255) + 1).collect();
+            server.submit(Request::new(i as u64, prompt, max_new))
+        })
+        .collect();
+    let mut total_tokens = 0usize;
+    for h in handles {
+        total_tokens += h.wait().tokens.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let report = server.shutdown();
+    println!("{}", report.render());
+    println!(
+        "wall: {:.2}s — {:.1} generated tok/s end-to-end ({} tokens / {} requests)",
+        wall,
+        total_tokens as f64 / wall,
+        total_tokens,
+        n_requests
+    );
+    Ok(())
+}
+
+fn load_or_random_weights(artifacts: &Path) -> ModelWeights {
+    let wf = artifacts.join("weights.f32.bin");
+    if wf.exists() {
+        if let Ok(w) = ModelWeights::load(ModelConfig::tiny(), &wf) {
+            return w;
+        }
+    }
+    ModelWeights::random(ModelConfig::tiny(), 7)
+}
+
+// --------------------------------------------------------------- quantize
+
+fn cmd_quantize(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("quantize", "quantize a random layer; report error + engine agreement")
+        .opt("config", Some("m1v4g128"), "quant config label (e.g. m2v8g128)")
+        .opt("n", Some("512"), "rows")
+        .opt("k", Some("512"), "cols")
+        .opt("refine", Some("1"), "alternating refinement rounds");
+    let m = cmd.parse(args)?;
+    let cfg = QuantConfig::parse_label(m.str("config")?)?;
+    let (n, k) = (m.usize("n")?, m.usize("k")?);
+    let w = Prng::seeded(1).normal_vec(n * k, 0.02);
+    let t0 = std::time::Instant::now();
+    let q = Quantizer::new(cfg).with_refinement(m.usize("refine")?).quantize(&w, n, k);
+    let dt = t0.elapsed().as_secs_f64();
+    let wq = q.dequantize();
+    let f = bits_per_weight(&cfg, n, k);
+    println!("config {} on {n}×{k}  ({dt:.2}s)", cfg.label());
+    println!(
+        "  q̄ = {} bits (codes {}, codebooks {}, scales {})",
+        fnum(f.total, 3),
+        fnum(f.q_code, 3),
+        fnum(f.q_codebook, 3),
+        fnum(f.q_norm, 3)
+    );
+    println!(
+        "  storage: {} bytes ({}× smaller than fp16)",
+        q.storage_bytes(),
+        fnum(2.0 * (n * k) as f64 / q.storage_bytes() as f64, 2)
+    );
+    println!("  reconstruction rel-err: {}", fnum(stats::rel_l2(&wq, &w), 4));
+    // engine agreement
+    let x = Prng::seeded(2).normal_vec(k, 1.0);
+    let mut cg = CodeGemmEngine::from_quantized(&q);
+    let mut dq = DequantEngine::from_quantized(&q);
+    let mut dense = DenseEngine::new(wq, n, k);
+    let (y_cg, y_dq, y_ref) = (cg.gemv(&x), dq.gemv(&x), dense.gemv(&x));
+    println!("  CodeGEMM vs dequantized-dense rel: {:.2e}", stats::rel_l2(&y_cg, &y_ref));
+    println!("  Dequant  vs dequantized-dense rel: {:.2e}", stats::rel_l2(&y_dq, &y_ref));
+    println!("  Psumbook bytes/tile: {} (codebook would be {})", cg.psumbook_bytes(), dq.codebook_bytes());
+    Ok(())
+}
+
+// ------------------------------------------------------------------ bench
+
+fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("bench", "quick CPU-engine micro-bench")
+        .opt("n", Some("1024"), "rows")
+        .opt("k", Some("1024"), "cols")
+        .opt("batch", Some("1"), "batch columns");
+    let m = cmd.parse(args)?;
+    let (n, k, mb) = (m.usize("n")?, m.usize("k")?, m.usize("batch")?);
+    let w = Prng::seeded(1).normal_vec(n * k, 0.02);
+    let x = Prng::seeded(2).normal_vec(k * mb, 1.0);
+    let opts = BenchOptions::from_env();
+    println!("CPU engines on {n}×{k}, batch {mb} (not A100 numbers — see `tables` for the model):");
+    let mut dense = DenseEngine::new(w.clone(), n, k);
+    println!(
+        "  {}",
+        run_bench("fp32-dense", opts, || {
+            codegemm::bench::harness::black_box(dense.gemm(&x, mb));
+        })
+        .line()
+    );
+    for label in ["m1v4g128", "m2v8g128"] {
+        let cfg = QuantConfig::parse_label(label)?;
+        let q = Quantizer::new(cfg).quantize(&w, n, k);
+        let mut cg = CodeGemmEngine::from_quantized(&q);
+        let mut dq = DequantEngine::from_quantized(&q);
+        println!(
+            "  {}",
+            run_bench(&format!("codegemm-{label}"), opts, || {
+                codegemm::bench::harness::black_box(cg.gemm(&x, mb));
+            })
+            .line()
+        );
+        println!(
+            "  {}",
+            run_bench(&format!("dequant-{label}"), opts, || {
+                codegemm::bench::harness::black_box(dq.gemm(&x, mb));
+            })
+            .line()
+        );
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------- doctor
+
+fn cmd_doctor(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("doctor", "environment self-checks")
+        .opt("artifacts", Some("artifacts"), "artifacts dir");
+    let m = cmd.parse(args)?;
+    print!("PJRT CPU client … ");
+    match pjrt_self_test() {
+        Ok(()) => println!("ok"),
+        Err(e) => println!("FAILED: {e:#}"),
+    }
+    let dir = Path::new(m.str("artifacts")?);
+    print!("artifacts at {} … ", dir.display());
+    if dir.join("manifest.json").exists() {
+        match ModelRuntime::load(dir) {
+            Ok(rt) => println!(
+                "ok (engine {}, batches {:?}, {} weight tensors)",
+                rt.manifest.engine,
+                rt.batch_sizes(),
+                rt.manifest.weight_args.len()
+            ),
+            Err(e) => println!("FAILED to load: {e:#}"),
+        }
+    } else {
+        println!("absent — run `make artifacts`");
+    }
+    print!("simulator calibration … ");
+    let sim = codegemm::simulator::Simulator::a100();
+    let worst = sim.fit_rmse.values().cloned().fold(0.0f64, f64::max);
+    println!("ok (worst family rel-RMSE {:.1}%)", 100.0 * worst);
+    Ok(())
+}

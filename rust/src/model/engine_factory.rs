@@ -1,0 +1,115 @@
+//! Build a [`GemmEngine`] per linear layer from dense weights, for every
+//! method in the paper's evaluation. This is how a model is "loaded under"
+//! a kernel: `EngineKind::CodeGemm { .. }` quantizes each linear with the
+//! additive-codebook pipeline and wraps it in the Psumbook engine.
+
+use crate::config::{KernelConfig, QuantConfig};
+use crate::gemm::{
+    CodeGemmEngine, DenseEngine, DequantEngine, GemmEngine, LutGemmEngine, UniformGemmEngine,
+};
+use crate::quant::calib::TuneLevel;
+use crate::quant::{bcq::BcqLinear, uniform::UniformLinear, Quantizer};
+
+/// Which kernel/quantization to build engines with.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EngineKind {
+    /// Unquantized fp32 matmul (the cuBLAS stand-in / accuracy oracle).
+    Dense,
+    /// The paper's kernel over additive-codebook weights.
+    CodeGemm { cfg: QuantConfig, kernel: KernelConfig, tune: TuneLevel },
+    /// Dequantization-based baseline (AQLM-style) on the same format.
+    Dequant { cfg: QuantConfig, tune: TuneLevel },
+    /// Uniform group quantization (GPTQ/FlexRound class).
+    Uniform { bits: usize, group: usize },
+    /// BCQ + LUT-GEMM.
+    Lut { bits: usize, group: usize },
+}
+
+impl EngineKind {
+    pub fn codegemm(cfg: QuantConfig) -> EngineKind {
+        EngineKind::CodeGemm { cfg, kernel: KernelConfig::default(), tune: TuneLevel::Calibrated }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            EngineKind::Dense => "fp32".into(),
+            EngineKind::CodeGemm { cfg, tune, .. } => format!("CodeGEMM-{}{}", cfg.label(), tune.label()),
+            EngineKind::Dequant { cfg, tune } => format!("Dequant-{}{}", cfg.label(), tune.label()),
+            EngineKind::Uniform { bits, group } => format!("Uniform-q{bits}g{group}"),
+            EngineKind::Lut { bits, group } => format!("LUT-q{bits}g{group}"),
+        }
+    }
+
+    /// Quantize `w` (row-major `n×k`) and construct the engine.
+    /// `h` is an optional per-column calibration importance (diag H).
+    pub fn build(&self, w: &[f32], n: usize, k: usize, h: Option<&[f32]>) -> Box<dyn GemmEngine + Send> {
+        match self {
+            EngineKind::Dense => Box::new(DenseEngine::new(w.to_vec(), n, k)),
+            EngineKind::CodeGemm { cfg, kernel, tune } => {
+                let q = Quantizer::new(*cfg)
+                    .with_refinement(tune.refine_rounds())
+                    .quantize_weighted(w, n, k, h);
+                Box::new(CodeGemmEngine::with_kernel(&q, *kernel))
+            }
+            EngineKind::Dequant { cfg, tune } => {
+                let q = Quantizer::new(*cfg)
+                    .with_refinement(tune.refine_rounds())
+                    .quantize_weighted(w, n, k, h);
+                Box::new(DequantEngine::from_quantized(&q))
+            }
+            EngineKind::Uniform { bits, group } => {
+                let q = UniformLinear::quantize(w, n, k, *bits, *group).expect("uniform quantize");
+                Box::new(UniformGemmEngine::new(q))
+            }
+            EngineKind::Lut { bits, group } => {
+                let q = BcqLinear::quantize(w, n, k, *bits, *group).expect("bcq quantize");
+                Box::new(LutGemmEngine::new(q))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::stats;
+
+    #[test]
+    fn every_kind_builds_and_runs() {
+        let (n, k) = (32, 64);
+        let w = Prng::seeded(1).normal_vec(n * k, 0.05);
+        let x = Prng::seeded(2).normal_vec(k, 1.0);
+        let y_ref = {
+            let mut e = DenseEngine::new(w.clone(), n, k);
+            use crate::gemm::GemmEngine;
+            e.gemv(&x)
+        };
+        for kind in [
+            EngineKind::Dense,
+            EngineKind::codegemm(QuantConfig::new(4, 1, 8, 32).unwrap()),
+            EngineKind::Dequant { cfg: QuantConfig::new(4, 1, 8, 32).unwrap(), tune: TuneLevel::None },
+            EngineKind::Uniform { bits: 4, group: 32 },
+            EngineKind::Lut { bits: 4, group: 32 },
+        ] {
+            let mut e = kind.build(&w, n, k, None);
+            let y = e.gemv(&x);
+            assert_eq!(y.len(), n, "{}", kind.label());
+            let rel = stats::rel_l2(&y, &y_ref);
+            assert!(rel < 0.6, "{}: rel {rel}", kind.label());
+        }
+    }
+
+    #[test]
+    fn codegemm_and_dequant_agree_on_same_format() {
+        let (n, k) = (16, 32);
+        let w = Prng::seeded(3).normal_vec(n * k, 0.05);
+        let x = Prng::seeded(4).normal_vec(k, 1.0);
+        let cfg = QuantConfig::new(4, 2, 6, -1).unwrap();
+        let tune = TuneLevel::None;
+        let mut a = EngineKind::CodeGemm { cfg, kernel: KernelConfig::default(), tune }.build(&w, n, k, None);
+        let mut b = EngineKind::Dequant { cfg, tune }.build(&w, n, k, None);
+        let (ya, yb) = (a.gemv(&x), b.gemv(&x));
+        assert!(stats::rel_l2(&ya, &yb) < 2e-5);
+    }
+}

@@ -1,0 +1,108 @@
+//! Per-sequence key/value cache for autoregressive decoding.
+
+/// KV cache for one sequence across all layers.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub kv_dim: usize,
+    /// `k[layer][pos * kv_dim + t]`
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Number of positions filled so far.
+    pub len: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, max_seq: usize, kv_dim: usize) -> KvCache {
+        KvCache {
+            n_layers,
+            max_seq,
+            kv_dim,
+            k: vec![vec![0.0; max_seq * kv_dim]; n_layers],
+            v: vec![vec![0.0; max_seq * kv_dim]; n_layers],
+            len: 0,
+        }
+    }
+
+    /// Bytes held by this cache (capacity, not fill).
+    pub fn bytes(&self) -> usize {
+        2 * self.n_layers * self.max_seq * self.kv_dim * 4
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len >= self.max_seq
+    }
+
+    /// Write k/v for `layer` at position `pos` (must be `<= len`; writing
+    /// at `len` on the last layer advances the cache).
+    pub fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), self.kv_dim);
+        debug_assert_eq!(v.len(), self.kv_dim);
+        assert!(pos < self.max_seq, "kv cache overflow: pos {pos} >= {}", self.max_seq);
+        let off = pos * self.kv_dim;
+        self.k[layer][off..off + self.kv_dim].copy_from_slice(k);
+        self.v[layer][off..off + self.kv_dim].copy_from_slice(v);
+        if layer + 1 == self.n_layers && pos >= self.len {
+            self.len = pos + 1;
+        }
+    }
+
+    /// Cached keys for `layer`, positions `0..=pos`.
+    #[inline]
+    pub fn keys(&self, layer: usize, upto: usize) -> &[f32] {
+        &self.k[layer][..upto * self.kv_dim]
+    }
+
+    #[inline]
+    pub fn values(&self, layer: usize, upto: usize) -> &[f32] {
+        &self.v[layer][..upto * self.kv_dim]
+    }
+
+    /// Drop all cached state (reuse the allocation).
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_and_read_roundtrip() {
+        let mut c = KvCache::new(2, 8, 4);
+        let k = [1.0, 2.0, 3.0, 4.0];
+        let v = [5.0, 6.0, 7.0, 8.0];
+        c.write(0, 0, &k, &v);
+        c.write(1, 0, &k, &v);
+        assert_eq!(c.len, 1);
+        assert_eq!(c.keys(0, 1), &k);
+        assert_eq!(c.values(1, 1), &v);
+    }
+
+    #[test]
+    fn len_advances_only_on_last_layer() {
+        let mut c = KvCache::new(3, 8, 2);
+        c.write(0, 0, &[0.0; 2], &[0.0; 2]);
+        assert_eq!(c.len, 0);
+        c.write(2, 0, &[0.0; 2], &[0.0; 2]);
+        assert_eq!(c.len, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut c = KvCache::new(1, 2, 2);
+        c.write(0, 2, &[0.0; 2], &[0.0; 2]);
+    }
+
+    #[test]
+    fn clear_resets_len() {
+        let mut c = KvCache::new(1, 4, 2);
+        c.write(0, 0, &[1.0; 2], &[1.0; 2]);
+        c.clear();
+        assert_eq!(c.len, 0);
+        assert!(!c.is_full());
+    }
+}

@@ -1,0 +1,19 @@
+//! Pure-Rust Llama-style decoder over pluggable GEMM engines.
+//!
+//! This is the accuracy-evaluation substrate: the same trained weights are
+//! loaded under fp32 / CodeGEMM / dequant / uniform / LUT engines and the
+//! resulting models are compared on perplexity and task accuracy
+//! (`crate::eval`), reproducing the paper's Tables 4/5 and Figure 4(b)
+//! trends on the tiny model.
+
+pub mod engine_factory;
+pub mod kv;
+pub mod llama;
+pub mod sampler;
+pub mod weights;
+
+pub use engine_factory::EngineKind;
+pub use kv::KvCache;
+pub use llama::{rmsnorm, silu, LlamaModel};
+pub use sampler::{argmax, Sampler};
+pub use weights::{LayerWeights, ModelWeights};

@@ -1,0 +1,289 @@
+//! Model weight container: load/save via the `TensorFile` interchange
+//! format shared with `python/compile/export.py`, random initialization
+//! for tests, and an analytically-constructed bigram model whose
+//! perplexity on the synthetic corpus is provably below uniform — used
+//! by accuracy-trend tests when no trained artifact is available.
+
+use crate::config::ModelConfig;
+use crate::util::npy::{Tensor, TensorFile};
+use crate::util::prng::Prng;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One decoder layer's dense weights (row-major `n × k`, `y = W x`).
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub wq: Vec<f32>,     // hidden × hidden
+    pub wk: Vec<f32>,     // kv_dim × hidden
+    pub wv: Vec<f32>,     // kv_dim × hidden
+    pub wo: Vec<f32>,     // hidden × hidden
+    pub w_gate: Vec<f32>, // ffn × hidden
+    pub w_up: Vec<f32>,   // ffn × hidden
+    pub w_down: Vec<f32>, // hidden × ffn
+    pub attn_norm: Vec<f32>,
+    pub mlp_norm: Vec<f32>,
+}
+
+/// Full model weights.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub cfg: ModelConfig,
+    /// Token embedding, `vocab × hidden` row-major.
+    pub embedding: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f32>,
+    /// LM head, `vocab × hidden`.
+    pub lm_head: Vec<f32>,
+}
+
+/// The seven linear-layer names of a decoder block, in kernel order.
+pub const LINEAR_NAMES: [&str; 7] = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"];
+
+impl ModelWeights {
+    /// Random small-scale initialization (for mechanics tests).
+    pub fn random(cfg: ModelConfig, seed: u64) -> ModelWeights {
+        let mut rng = Prng::seeded(seed);
+        let d = cfg.hidden;
+        let kv = cfg.kv_dim();
+        let std = 1.0 / (d as f32).sqrt();
+        let mk = |rng: &mut Prng, n: usize| rng.normal_vec(n, std);
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                wq: mk(&mut rng, d * d),
+                wk: mk(&mut rng, kv * d),
+                wv: mk(&mut rng, kv * d),
+                wo: mk(&mut rng, d * d),
+                w_gate: mk(&mut rng, cfg.ffn * d),
+                w_up: mk(&mut rng, cfg.ffn * d),
+                w_down: mk(&mut rng, d * cfg.ffn),
+                attn_norm: vec![1.0; d],
+                mlp_norm: vec![1.0; d],
+            })
+            .collect();
+        ModelWeights {
+            embedding: mk(&mut rng, cfg.vocab * d),
+            layers,
+            final_norm: vec![1.0; d],
+            lm_head: mk(&mut rng, cfg.vocab * d),
+            cfg,
+        }
+    }
+
+    /// Construct a model that computes (approximately) a *bigram* language
+    /// model for the given `vocab × vocab` transition log-probabilities:
+    /// the embedding encodes the current token, the transformer layers are
+    /// near-identity (tiny weights pass the residual through), and
+    /// `lm_head · embedding ≈ log P(next | cur)`.
+    ///
+    /// Used by accuracy-trend tests: quantizing these weights degrades the
+    /// bigram fit in exactly the way the paper's Figure 4(b) sweeps over.
+    pub fn bigram(cfg: ModelConfig, log_probs: &[f32], seed: u64) -> ModelWeights {
+        // The corpus may use a sub-vocabulary (cv ≤ cfg.vocab); with
+        // cv ≤ hidden the token codes can be exactly orthogonal, making
+        // the construction lossless up to the damped-layer residue.
+        let cv = (log_probs.len() as f64).sqrt().round() as usize;
+        assert_eq!(log_probs.len(), cv * cv);
+        assert!(cv <= cfg.vocab, "corpus vocab {cv} exceeds model vocab {}", cfg.vocab);
+        let mut w = ModelWeights::random(cfg.clone(), seed);
+        let d = cfg.hidden;
+        // Dampen attention/MLP so the residual dominates.
+        for l in &mut w.layers {
+            for x in l
+                .wo
+                .iter_mut()
+                .chain(l.w_down.iter_mut())
+                .chain(l.wv.iter_mut())
+            {
+                *x *= 0.002;
+            }
+        }
+        // Random dense code for each token (near-orthogonal for d >= 64),
+        // then lm_head rows chosen so lm_head · rmsnorm(e(tok)) ≈ the
+        // *baseline-shifted* log-probs: per-row we encode only the sparse
+        // successor mass lp − min_row(lp) (softmax is shift-invariant), so
+        // the ~vocab-wide smoothing floor does not pollute the projection
+        // with cross-talk.
+        let mut rng = Prng::seeded(seed ^ 0xB16A);
+        let scale = 1.0 / (d as f32).sqrt();
+        for x in w.embedding.iter_mut() {
+            *x = rng.normal_f32() * scale;
+        }
+        if cv <= d && d.is_power_of_two() {
+            // Exactly orthogonal *dense* codes (rows of the Sylvester
+            // Hadamard matrix): zero cross-talk between tokens, and the
+            // resulting lm_head is dense so quantization error actually
+            // spreads across it (one-hot codes would leave it sparse and
+            // trivially quantizable).
+            for cur in 0..cv {
+                let row = &mut w.embedding[cur * d..(cur + 1) * d];
+                for (j, x) in row.iter_mut().enumerate() {
+                    let sign = if (cur & j).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
+                    *x = sign * scale;
+                }
+            }
+        }
+        let mut lm = vec![0f32; cfg.vocab * d];
+        for cur in 0..cv {
+            let row = &log_probs[cur * cv..(cur + 1) * cv];
+            let base = row.iter().cloned().fold(f32::MAX, f32::min);
+            let e = w.embedding[cur * d..(cur + 1) * d].to_vec();
+            let norm2: f32 = e.iter().map(|x| x * x).sum();
+            // The final RMSNorm rescales h ≈ e(cur) to e / rms(e); encode
+            // against that normalized code so the logits land on scale.
+            let rms = (norm2 / d as f32).sqrt();
+            for (next, &lp) in row.iter().enumerate() {
+                let shifted = lp - base;
+                if shifted <= 1e-4 {
+                    continue;
+                }
+                for t in 0..d {
+                    lm[next * d + t] += shifted * e[t] * rms / norm2;
+                }
+            }
+        }
+        w.lm_head = lm;
+        w
+    }
+
+    /// All linear layers as `(name, n, k, data)` tuples (the quantization
+    /// targets; embeddings and norms stay fp16/fp32 as in the paper).
+    pub fn linears(&self) -> Vec<(String, usize, usize, &[f32])> {
+        let d = self.cfg.hidden;
+        let kv = self.cfg.kv_dim();
+        let ffn = self.cfg.ffn;
+        let mut out = Vec::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            let dims: [(&str, usize, usize, &[f32]); 7] = [
+                ("wq", d, d, &l.wq),
+                ("wk", kv, d, &l.wk),
+                ("wv", kv, d, &l.wv),
+                ("wo", d, d, &l.wo),
+                ("w_gate", ffn, d, &l.w_gate),
+                ("w_up", ffn, d, &l.w_up),
+                ("w_down", d, ffn, &l.w_down),
+            ];
+            for (name, n, k, data) in dims {
+                out.push((format!("layers.{i}.{name}"), n, k, data));
+            }
+        }
+        out.push(("lm_head".into(), self.cfg.vocab, d, self.lm_head.as_slice()));
+        out
+    }
+
+    /// Serialize to the shared TensorFile container.
+    pub fn to_tensor_file(&self) -> TensorFile {
+        let cfg = &self.cfg;
+        let d = cfg.hidden;
+        let mut tf = TensorFile::new();
+        tf.push(Tensor::f32("embedding", vec![cfg.vocab, d], self.embedding.clone()));
+        for (i, l) in self.layers.iter().enumerate() {
+            let p = |s: &str| format!("layers.{i}.{s}");
+            tf.push(Tensor::f32(&p("wq"), vec![d, d], l.wq.clone()));
+            tf.push(Tensor::f32(&p("wk"), vec![cfg.kv_dim(), d], l.wk.clone()));
+            tf.push(Tensor::f32(&p("wv"), vec![cfg.kv_dim(), d], l.wv.clone()));
+            tf.push(Tensor::f32(&p("wo"), vec![d, d], l.wo.clone()));
+            tf.push(Tensor::f32(&p("w_gate"), vec![cfg.ffn, d], l.w_gate.clone()));
+            tf.push(Tensor::f32(&p("w_up"), vec![cfg.ffn, d], l.w_up.clone()));
+            tf.push(Tensor::f32(&p("w_down"), vec![d, cfg.ffn], l.w_down.clone()));
+            tf.push(Tensor::f32(&p("attn_norm"), vec![d], l.attn_norm.clone()));
+            tf.push(Tensor::f32(&p("mlp_norm"), vec![d], l.mlp_norm.clone()));
+        }
+        tf.push(Tensor::f32("final_norm", vec![d], self.final_norm.clone()));
+        tf.push(Tensor::f32("lm_head", vec![cfg.vocab, d], self.lm_head.clone()));
+        tf
+    }
+
+    /// Load from a TensorFile written by rust or `python/compile/export.py`.
+    pub fn from_tensor_file(cfg: ModelConfig, tf: &TensorFile) -> Result<ModelWeights> {
+        cfg.validate()?;
+        let d = cfg.hidden;
+        let getf = |name: &str, want: usize| -> Result<Vec<f32>> {
+            let t = tf.get(name)?;
+            let data = t.data.as_f32().with_context(|| format!("{name} must be f32"))?;
+            if data.len() != want {
+                bail!("{name}: expected {want} elements, got {}", data.len());
+            }
+            Ok(data.to_vec())
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = |s: &str| format!("layers.{i}.{s}");
+            layers.push(LayerWeights {
+                wq: getf(&p("wq"), d * d)?,
+                wk: getf(&p("wk"), cfg.kv_dim() * d)?,
+                wv: getf(&p("wv"), cfg.kv_dim() * d)?,
+                wo: getf(&p("wo"), d * d)?,
+                w_gate: getf(&p("w_gate"), cfg.ffn * d)?,
+                w_up: getf(&p("w_up"), cfg.ffn * d)?,
+                w_down: getf(&p("w_down"), d * cfg.ffn)?,
+                attn_norm: getf(&p("attn_norm"), d)?,
+                mlp_norm: getf(&p("mlp_norm"), d)?,
+            });
+        }
+        Ok(ModelWeights {
+            embedding: getf("embedding", cfg.vocab * d)?,
+            layers,
+            final_norm: getf("final_norm", d)?,
+            lm_head: getf("lm_head", cfg.vocab * d)?,
+            cfg,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.to_tensor_file().save(path)
+    }
+
+    pub fn load(cfg: ModelConfig, path: impl AsRef<Path>) -> Result<ModelWeights> {
+        let tf = TensorFile::load(path)?;
+        ModelWeights::from_tensor_file(cfg, &tf)
+    }
+
+    /// Total parameter count of the stored tensors.
+    pub fn n_params(&self) -> usize {
+        self.to_tensor_file().tensors.iter().map(|t| t.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_roundtrips_through_tensor_file() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::random(cfg.clone(), 3);
+        let tf = w.to_tensor_file();
+        let w2 = ModelWeights::from_tensor_file(cfg, &tf).unwrap();
+        assert_eq!(w.embedding, w2.embedding);
+        assert_eq!(w.layers[1].w_down, w2.layers[1].w_down);
+        assert_eq!(w.lm_head, w2.lm_head);
+    }
+
+    #[test]
+    fn linears_cover_block_and_head() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::random(cfg.clone(), 3);
+        let lin = w.linears();
+        assert_eq!(lin.len(), cfg.n_layers * 7 + 1);
+        let (_, n, k, data) = &lin[0];
+        assert_eq!((*n, *k), (cfg.hidden, cfg.hidden));
+        assert_eq!(data.len(), n * k);
+    }
+
+    #[test]
+    fn param_count_matches_config() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::random(cfg.clone(), 3);
+        // to_tensor_file stores every parameter exactly once.
+        assert_eq!(w.n_params(), cfg.n_params());
+    }
+
+    #[test]
+    fn missing_tensor_is_an_error() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::random(cfg.clone(), 3);
+        let mut tf = w.to_tensor_file();
+        tf.tensors.retain(|t| t.name != "lm_head");
+        assert!(ModelWeights::from_tensor_file(cfg, &tf).is_err());
+    }
+}

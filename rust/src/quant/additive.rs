@@ -1,0 +1,349 @@
+//! Additive multi-codebook quantization (AQLM-style, paper §2.2).
+//!
+//! Greedy residual stage: codebook 0 is k-means over the normalized weight
+//! vectors; codebook `c` is k-means over the residual left by codebooks
+//! `0..c`. Optional alternating refinement (the PV-Tuning-class
+//! post-optimization): coordinate descent over codes per codebook followed
+//! by least-squares centroid updates, which strictly decreases the
+//! (importance-weighted) reconstruction error.
+
+use crate::config::QuantConfig;
+use crate::quant::kmeans::{assign, kmeans, KMeansOptions};
+use crate::quant::normalize::GroupScales;
+use crate::quant::pack::PackedCodes;
+use crate::quant::QuantizedLinear;
+use crate::util::f16::round_f16_slice;
+use crate::util::prng::Prng;
+
+/// Refinement options for the alternating stage.
+#[derive(Clone, Copy, Debug)]
+pub struct RefineOptions {
+    /// Number of full alternating rounds (0 disables refinement).
+    pub rounds: usize,
+    /// Whether centroids are re-fit after code reassignment (the
+    /// "PV-Tuning" half); codes-only refinement keeps codebooks frozen.
+    pub update_codebooks: bool,
+}
+
+impl Default for RefineOptions {
+    fn default() -> Self {
+        RefineOptions { rounds: 1, update_codebooks: true }
+    }
+}
+
+/// The additive quantizer. See [`crate::quant::Quantizer`] for the facade.
+#[derive(Clone, Debug)]
+pub struct AdditiveQuantizer {
+    pub cfg: QuantConfig,
+    pub max_train_points: usize,
+    pub kmeans_iters: usize,
+    pub seed: u64,
+}
+
+impl AdditiveQuantizer {
+    /// Quantize normalized + grouped weights into codebooks/codes/scales.
+    /// `h` is an optional per-column importance vector of length `k`
+    /// (diagonal of the calibration second moment).
+    pub fn quantize(
+        &self,
+        w: &[f32],
+        n: usize,
+        k: usize,
+        h: Option<&[f32]>,
+        refine: RefineOptions,
+    ) -> QuantizedLinear {
+        let cfg = self.cfg;
+        let v = cfg.v;
+        let jn = k / v;
+        let n_points = n * jn;
+        let mut rng = Prng::seeded(self.seed);
+
+        // Step 1: group normalization.
+        let (scales, normalized) = GroupScales::compute(w, n, k, &cfg);
+
+        // Vectors tile rows contiguously, so `normalized` doubles as the
+        // flat point array (point p = (r, j) at offset p * v).
+        let points: &[f32] = &normalized;
+
+        // Per-point importance: mean of h over the vector's column span.
+        let point_weights: Option<Vec<f32>> = h.map(|h| {
+            assert_eq!(h.len(), k, "importance vector must have length k");
+            let per_j: Vec<f32> = (0..jn)
+                .map(|j| {
+                    let s: f32 = h[j * v..(j + 1) * v].iter().sum();
+                    (s / v as f32).max(1e-12)
+                })
+                .collect();
+            (0..n_points).map(|p| per_j[p % jn]).collect()
+        });
+
+        // Step 2/3: residual k-means per codebook.
+        let mut residual: Vec<f32> = points.to_vec();
+        let mut codebooks: Vec<f32> = Vec::with_capacity(cfg.m * cfg.n_centroids() * v);
+        let mut codes: Vec<u32> = vec![0; n_points * cfg.m]; // [p][c]
+        for c in 0..cfg.m {
+            let (train_pts, train_w) = self.subsample(&residual, point_weights.as_deref(), v, &mut rng);
+            let mut res = kmeans(
+                &train_pts,
+                train_w.as_deref(),
+                KMeansOptions {
+                    n_clusters: cfg.n_centroids(),
+                    dim: v,
+                    max_iters: self.kmeans_iters,
+                    seed: rng.next_u64(),
+                    tol: 1e-4,
+                },
+            );
+            // Codebook values are stored in FP16 on device.
+            round_f16_slice(&mut res.centroids);
+            // Assign *all* points against the trained codebook.
+            let (asg, _) = assign(&residual, &res.centroids, v, None);
+            for p in 0..n_points {
+                codes[p * cfg.m + c] = asg[p];
+                let cent = &res.centroids[asg[p] as usize * v..(asg[p] as usize + 1) * v];
+                for t in 0..v {
+                    residual[p * v + t] -= cent[t];
+                }
+            }
+            codebooks.extend_from_slice(&res.centroids);
+        }
+
+        // Step 4: alternating refinement.
+        for _ in 0..refine.rounds {
+            self.refine_round(points, point_weights.as_deref(), &mut codebooks, &mut codes, n_points, refine);
+        }
+
+        let packed = PackedCodes::pack(&codes, cfg.b).expect("codes fit in b bits");
+        QuantizedLinear { cfg, n, k, codebooks, codes: packed, scales: scales.scales }
+    }
+
+    /// Subsample points (and weights) for codebook training.
+    fn subsample(
+        &self,
+        points: &[f32],
+        weights: Option<&[f32]>,
+        dim: usize,
+        rng: &mut Prng,
+    ) -> (Vec<f32>, Option<Vec<f32>>) {
+        let n = points.len() / dim;
+        if n <= self.max_train_points {
+            return (points.to_vec(), weights.map(|w| w.to_vec()));
+        }
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(self.max_train_points);
+        let mut pts = Vec::with_capacity(self.max_train_points * dim);
+        let mut ws = weights.map(|_| Vec::with_capacity(self.max_train_points));
+        for &p in &idx {
+            pts.extend_from_slice(&points[p * dim..(p + 1) * dim]);
+            if let (Some(ws), Some(w)) = (ws.as_mut(), weights) {
+                ws.push(w[p]);
+            }
+        }
+        (pts, ws)
+    }
+
+    /// One alternating round: per codebook, coordinate-descent code
+    /// reassignment against the residual target, then (optionally)
+    /// weighted least-squares centroid re-fit.
+    fn refine_round(
+        &self,
+        points: &[f32],
+        weights: Option<&[f32]>,
+        codebooks: &mut [f32],
+        codes: &mut [u32],
+        n_points: usize,
+        opts: RefineOptions,
+    ) {
+        let cfg = self.cfg;
+        let v = cfg.v;
+        let nc = cfg.n_centroids();
+        // Current reconstruction per point.
+        let mut recon = vec![0f32; n_points * v];
+        for p in 0..n_points {
+            for c in 0..cfg.m {
+                let code = codes[p * cfg.m + c] as usize;
+                let cent = &codebooks[(c * nc + code) * v..(c * nc + code + 1) * v];
+                for t in 0..v {
+                    recon[p * v + t] += cent[t];
+                }
+            }
+        }
+        let mut target = vec![0f32; v];
+        for c in 0..cfg.m {
+            let cb = c * nc * v;
+            // (a) reassign codes for codebook c.
+            for p in 0..n_points {
+                let old = codes[p * cfg.m + c] as usize;
+                let old_cent: Vec<f32> = codebooks[cb + old * v..cb + (old + 1) * v].to_vec();
+                for t in 0..v {
+                    target[t] = points[p * v + t] - (recon[p * v + t] - old_cent[t]);
+                }
+                let mut best = old;
+                let mut best_d = f32::INFINITY;
+                for i in 0..nc {
+                    let cent = &codebooks[cb + i * v..cb + (i + 1) * v];
+                    let mut d = 0f32;
+                    for t in 0..v {
+                        let e = target[t] - cent[t];
+                        d += e * e;
+                    }
+                    if d < best_d {
+                        best_d = d;
+                        best = i;
+                    }
+                }
+                if best != old {
+                    codes[p * cfg.m + c] = best as u32;
+                    let new_cent = &codebooks[cb + best * v..cb + (best + 1) * v];
+                    for t in 0..v {
+                        recon[p * v + t] += new_cent[t] - old_cent[t];
+                    }
+                }
+            }
+            // (b) least-squares centroid update for codebook c.
+            if opts.update_codebooks {
+                let mut sums = vec![0f64; nc * v];
+                let mut wsum = vec![0f64; nc];
+                for p in 0..n_points {
+                    let code = codes[p * cfg.m + c] as usize;
+                    let wgt = weights.map(|w| w[p] as f64).unwrap_or(1.0);
+                    wsum[code] += wgt;
+                    let cent = &codebooks[cb + code * v..cb + (code + 1) * v];
+                    for t in 0..v {
+                        // target for this point under fixed other codes:
+                        let tgt = points[p * v + t] - (recon[p * v + t] - cent[t]);
+                        sums[code * v + t] += tgt as f64 * wgt;
+                    }
+                }
+                for i in 0..nc {
+                    if wsum[i] > 0.0 {
+                        let old: Vec<f32> = codebooks[cb + i * v..cb + (i + 1) * v].to_vec();
+                        for t in 0..v {
+                            codebooks[cb + i * v + t] = (sums[i * v + t] / wsum[i]) as f32;
+                        }
+                        round_f16_slice(&mut codebooks[cb + i * v..cb + (i + 1) * v]);
+                        // Patch reconstructions for members of centroid i.
+                        let newc: Vec<f32> = codebooks[cb + i * v..cb + (i + 1) * v].to_vec();
+                        for p in 0..n_points {
+                            if codes[p * cfg.m + c] as usize == i {
+                                for t in 0..v {
+                                    recon[p * v + t] += newc[t] - old[t];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn quantizer(cfg: QuantConfig) -> AdditiveQuantizer {
+        AdditiveQuantizer { cfg, max_train_points: 1 << 14, kmeans_iters: 10, seed: 7 }
+    }
+
+    #[test]
+    fn exact_recovery_when_data_is_clusterable() {
+        // Weights drawn from exactly 4 distinct vectors; b=2 (4 centroids)
+        // must reconstruct (nearly) exactly.
+        let v = 4;
+        // All prototypes share absmax = 1 so row-wise normalization maps
+        // every row onto the same 4 points (exactly clusterable).
+        let protos: [[f32; 4]; 4] = [
+            [1.0, -0.5, 0.25, 0.0],
+            [-0.25, 1.0, -0.5, 0.5],
+            [0.0, 0.0, 1.0, -1.0],
+            [1.0, 0.125, -0.75, 0.25],
+        ];
+        let (n, k) = (16, 32);
+        let mut rng = Prng::seeded(1);
+        let mut w = vec![0f32; n * k];
+        for p in 0..(n * k / v) {
+            let proto = protos[rng.index(4)];
+            w[p * v..(p + 1) * v].copy_from_slice(&proto);
+        }
+        let cfg = QuantConfig::new(4, 1, 2, -1).unwrap();
+        let q = quantizer(cfg).quantize(&w, n, k, None, RefineOptions { rounds: 1, update_codebooks: true });
+        let rel = stats::rel_l2(&q.dequantize(), &w);
+        assert!(rel < 0.02, "clusterable data should reconstruct, rel={rel}");
+    }
+
+    #[test]
+    fn refinement_monotonically_improves_weighted_objective() {
+        let (n, k) = (24, 64);
+        let w = Prng::seeded(2).normal_vec(n * k, 0.02);
+        let cfg = QuantConfig::new(8, 2, 4, -1).unwrap();
+        let aq = quantizer(cfg);
+        let mut prev = f64::INFINITY;
+        for rounds in [0usize, 1, 3] {
+            let q = aq.quantize(&w, n, k, None, RefineOptions { rounds, update_codebooks: true });
+            let err = stats::mse(&q.dequantize(), &w);
+            assert!(err <= prev * 1.01, "rounds={rounds}: {err} > prev {prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn importance_weights_prioritize_heavy_columns() {
+        // Columns 0..v get 100x importance; the weighted quantizer should
+        // achieve lower error there than the unweighted one.
+        let (n, k) = (32, 32);
+        let v = 4;
+        let w = Prng::seeded(3).normal_vec(n * k, 0.02);
+        let mut h = vec![1f32; k];
+        for t in 0..v {
+            h[t] = 100.0;
+        }
+        let cfg = QuantConfig::new(4, 1, 3, -1).unwrap();
+        let aq = quantizer(cfg);
+        let err_on_heavy = |q: &QuantizedLinear| {
+            let wq = q.dequantize();
+            let mut e = 0f64;
+            for r in 0..n {
+                for t in 0..v {
+                    e += ((wq[r * k + t] - w[r * k + t]) as f64).powi(2);
+                }
+            }
+            e
+        };
+        let q_plain = aq.quantize(&w, n, k, None, RefineOptions { rounds: 2, update_codebooks: true });
+        let q_weighted = aq.quantize(&w, n, k, Some(&h), RefineOptions { rounds: 2, update_codebooks: true });
+        assert!(
+            err_on_heavy(&q_weighted) <= err_on_heavy(&q_plain) * 1.05,
+            "weighted {} vs plain {}",
+            err_on_heavy(&q_weighted),
+            err_on_heavy(&q_plain)
+        );
+    }
+
+    #[test]
+    fn codes_within_range_all_configs() {
+        let (n, k) = (8, 32);
+        let w = Prng::seeded(4).normal_vec(n * k, 1.0);
+        for (v, m, b) in [(4, 1, 2), (8, 3, 3), (16, 2, 5)] {
+            let cfg = QuantConfig::new(v, m, b, -1).unwrap();
+            let q = quantizer(cfg).quantize(&w, n, k, None, RefineOptions::default());
+            assert!(q.codes.max_value() < cfg.n_centroids());
+            q.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn subsampling_still_produces_valid_quantization() {
+        let (n, k) = (64, 64);
+        let w = Prng::seeded(5).normal_vec(n * k, 0.02);
+        let cfg = QuantConfig::new(4, 1, 6, -1).unwrap();
+        let mut aq = quantizer(cfg);
+        aq.max_train_points = 64; // force heavy subsampling (1024 points)
+        let q = aq.quantize(&w, n, k, None, RefineOptions::default());
+        q.validate().unwrap();
+        let rel = stats::rel_l2(&q.dequantize(), &w);
+        assert!(rel < 0.7, "rel={rel}");
+    }
+}

@@ -1,0 +1,176 @@
+//! Binary-Coded Quantization (BCQ) — the weight format consumed by the
+//! LUT-GEMM baseline kernel (paper refs [20, 30]).
+//!
+//! Each group of `g` weights in a row is approximated by a sum of `q`
+//! binary vectors with per-vector scales: `w ≈ Σ_{i<q} α_i · b_i`,
+//! `b_i ∈ {−1, +1}^g`. Greedy alternating fit: `b_i = sign(residual)`,
+//! `α_i = mean(|residual|)`, which is the closed-form 1-term optimum.
+
+use crate::util::f16::round_f16;
+use anyhow::{bail, Result};
+
+/// BCQ-quantized linear layer.
+#[derive(Clone, Debug)]
+pub struct BcqLinear {
+    pub n: usize,
+    pub k: usize,
+    /// Number of binary components (effective bits per weight, excl. scales).
+    pub q_bits: usize,
+    pub group: usize,
+    /// Sign bitplanes: `bits[i][r * k + c]` packed as u64 words per plane.
+    /// Plane i, row r: bit c of word `(r * words_per_row) + c/64`.
+    planes: Vec<Vec<u64>>,
+    /// Scales α: `alphas[((r * n_groups) + gi) * q_bits + i]`, f16.
+    pub alphas: Vec<f32>,
+}
+
+impl BcqLinear {
+    pub fn quantize(w: &[f32], n: usize, k: usize, q_bits: usize, group: usize) -> Result<BcqLinear> {
+        if q_bits == 0 || q_bits > 8 {
+            bail!("q_bits must be in [1, 8]");
+        }
+        let group = group.min(k).max(1);
+        if k % group != 0 {
+            bail!("k must be a multiple of group");
+        }
+        assert_eq!(w.len(), n * k);
+        let n_groups = k / group;
+        let words_per_row = k.div_ceil(64);
+        let mut planes = vec![vec![0u64; n * words_per_row]; q_bits];
+        let mut alphas = vec![0f32; n * n_groups * q_bits];
+        let mut residual = vec![0f32; group];
+        for r in 0..n {
+            for gi in 0..n_groups {
+                let lo = gi * group;
+                residual.copy_from_slice(&w[r * k + lo..r * k + lo + group]);
+                for i in 0..q_bits {
+                    let alpha = round_f16(residual.iter().map(|x| x.abs()).sum::<f32>() / group as f32);
+                    alphas[(r * n_groups + gi) * q_bits + i] = alpha;
+                    for (t, res) in residual.iter_mut().enumerate() {
+                        let c = lo + t;
+                        let sign = if *res >= 0.0 { 1.0 } else { -1.0 };
+                        if sign > 0.0 {
+                            planes[i][r * words_per_row + c / 64] |= 1u64 << (c % 64);
+                        }
+                        *res -= alpha * sign;
+                    }
+                }
+            }
+        }
+        Ok(BcqLinear { n, k, q_bits, group, planes, alphas })
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.k / self.group
+    }
+
+    #[inline]
+    pub fn sign(&self, plane: usize, r: usize, c: usize) -> f32 {
+        let words_per_row = self.k.div_ceil(64);
+        if (self.planes[plane][r * words_per_row + c / 64] >> (c % 64)) & 1 == 1 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    #[inline]
+    pub fn alpha(&self, r: usize, c: usize, plane: usize) -> f32 {
+        self.alphas[(r * self.n_groups() + c / self.group) * self.q_bits + plane]
+    }
+
+    /// Raw bitplane words for row `r`, plane `i` (the LUT kernel consumes
+    /// these directly).
+    pub fn row_plane_words(&self, plane: usize, r: usize) -> &[u64] {
+        let wpr = self.k.div_ceil(64);
+        &self.planes[plane][r * wpr..(r + 1) * wpr]
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut w = vec![0f32; self.n * self.k];
+        for r in 0..self.n {
+            for c in 0..self.k {
+                let mut acc = 0f32;
+                for i in 0..self.q_bits {
+                    acc += self.alpha(r, c, i) * self.sign(i, r, c);
+                }
+                w[r * self.k + c] = acc;
+            }
+        }
+        w
+    }
+
+    /// Average storage bits per weight.
+    pub fn bits_per_weight(&self) -> f64 {
+        self.q_bits as f64 + 16.0 * self.q_bits as f64 / self.group as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::stats;
+
+    #[test]
+    fn error_decreases_with_q_bits() {
+        let (n, k) = (16, 128);
+        let w = Prng::seeded(1).normal_vec(n * k, 0.02);
+        let err = |q| {
+            let b = BcqLinear::quantize(&w, n, k, q, 128).unwrap();
+            stats::rel_l2(&b.dequantize(), &w)
+        };
+        assert!(err(2) < err(1));
+        assert!(err(4) < err(2));
+    }
+
+    #[test]
+    fn one_bit_is_sign_times_mean_abs() {
+        let w = vec![1.0f32, -2.0, 3.0, -4.0];
+        let b = BcqLinear::quantize(&w, 1, 4, 1, 4).unwrap();
+        let deq = b.dequantize();
+        let alpha = (1.0 + 2.0 + 3.0 + 4.0) / 4.0;
+        let expect = [alpha, -alpha, alpha, -alpha];
+        for (x, e) in deq.iter().zip(expect) {
+            assert!((x - e).abs() < 1e-3, "{x} vs {e}");
+        }
+    }
+
+    #[test]
+    fn bcq2_beats_nothing_but_tracks_signal() {
+        let (n, k) = (8, 64);
+        let w = Prng::seeded(2).normal_vec(n * k, 0.02);
+        let b = BcqLinear::quantize(&w, n, k, 2, 64).unwrap();
+        let rel = stats::rel_l2(&b.dequantize(), &w);
+        assert!(rel < 0.65, "bcq-2 rel={rel}");
+    }
+
+    #[test]
+    fn sign_accessor_matches_dequant() {
+        let (n, k) = (4, 128);
+        let w = Prng::seeded(3).normal_vec(n * k, 1.0);
+        let b = BcqLinear::quantize(&w, n, k, 3, 32).unwrap();
+        let deq = b.dequantize();
+        for r in 0..n {
+            for c in 0..k {
+                let manual: f32 = (0..3).map(|i| b.alpha(r, c, i) * b.sign(i, r, c)).sum();
+                assert!((manual - deq[r * k + c]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn footprint() {
+        let w = vec![0.5f32; 256];
+        let b = BcqLinear::quantize(&w, 2, 128, 2, 128).unwrap();
+        assert!((b.bits_per_weight() - 2.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let w = vec![0f32; 16];
+        assert!(BcqLinear::quantize(&w, 4, 4, 0, 4).is_err());
+        assert!(BcqLinear::quantize(&w, 4, 4, 9, 4).is_err());
+        assert!(BcqLinear::quantize(&w, 4, 4, 2, 3).is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Average bits-per-weight accounting (paper Eq. 1, Table 1).
+//!
+//! `q̄ = (16·m·2^b·v + b·m·M·K/v + 16·M·K/g) / (M·K)` where the first term
+//! is the FP16 codebook, the second the packed codes, the third the FP16
+//! group scales (`g = -1` ⇒ one scale per row ⇒ g = K).
+
+use crate::config::QuantConfig;
+
+/// Breakdown of the average bits per weight.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FootprintBreakdown {
+    /// Bits/weight spent on codes (paper's q_code).
+    pub q_code: f64,
+    /// Bits/weight spent on codebooks (q_codebook).
+    pub q_codebook: f64,
+    /// Bits/weight spent on group scales (q_norm).
+    pub q_norm: f64,
+    /// Total q̄.
+    pub total: f64,
+}
+
+/// Compute Eq. 1 for a weight matrix of `n` rows (paper's M) by `k`
+/// columns.
+pub fn bits_per_weight(cfg: &QuantConfig, n: usize, k: usize) -> FootprintBreakdown {
+    let nk = (n * k) as f64;
+    let g = cfg.group_size(k) as f64;
+    let q_codebook = 16.0 * cfg.m as f64 * cfg.n_centroids() as f64 * cfg.v as f64 / nk;
+    let q_code = cfg.b as f64 * cfg.m as f64 * n as f64 * (k as f64 / cfg.v as f64) / nk;
+    let q_norm = 16.0 * n as f64 * (k as f64 / g) / nk;
+    FootprintBreakdown { q_code, q_codebook, q_norm, total: q_code + q_codebook + q_norm }
+}
+
+/// Total quantized bytes for a weight matrix (codes + codebook + scales).
+pub fn quantized_bytes(cfg: &QuantConfig, n: usize, k: usize) -> f64 {
+    bits_per_weight(cfg, n, k).total * (n * k) as f64 / 8.0
+}
+
+/// Bits/weight for uniform quantization with `bits` per weight and group
+/// size `g` (FP16 scale per group) — the FlexRound/GPTQ `qX-gY` format.
+pub fn uniform_bits_per_weight(bits: usize, g: usize, _n: usize, k: usize) -> f64 {
+    let g = g.min(k) as f64;
+    bits as f64 + 16.0 / g
+}
+
+/// The five configurations of the paper's Table 1, with their published
+/// q̄ values, evaluated at Llama-3-8B scale (M=4096, K=4096).
+pub fn table1_rows() -> Vec<(QuantConfig, f64)> {
+    vec![
+        (QuantConfig::new(4, 1, 8, -1).unwrap(), 2.005),
+        (QuantConfig::new(8, 2, 8, -1).unwrap(), 2.008),
+        (QuantConfig::new(16, 4, 8, -1).unwrap(), 2.020),
+        (QuantConfig::new(8, 1, 8, 16).unwrap(), 2.002),
+        (QuantConfig::new(16, 3, 8, 32).unwrap(), 2.012),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N: usize = 4096;
+    const K: usize = 4096;
+
+    #[test]
+    fn reproduces_table1_exactly() {
+        for (cfg, expected) in table1_rows() {
+            let got = bits_per_weight(&cfg, N, K).total;
+            assert!(
+                (got - expected).abs() < 0.002,
+                "{}: got {got:.4}, paper says {expected}",
+                cfg.label()
+            );
+        }
+    }
+
+    #[test]
+    fn table1_component_columns() {
+        // Row (v=8, m=1, b=8, g=16): q_code=1.0, q_codebook≈0.002, q_norm=1.0
+        let cfg = QuantConfig::new(8, 1, 8, 16).unwrap();
+        let f = bits_per_weight(&cfg, N, K);
+        assert!((f.q_code - 1.0).abs() < 1e-9);
+        assert!((f.q_norm - 1.0).abs() < 1e-9);
+        assert!((f.q_codebook - 0.002).abs() < 0.0005);
+
+        // Row (v=16, m=3, b=8, g=32): q_code=1.5, q_norm=0.5
+        let cfg = QuantConfig::new(16, 3, 8, 32).unwrap();
+        let f = bits_per_weight(&cfg, N, K);
+        assert!((f.q_code - 1.5).abs() < 1e-9);
+        assert!((f.q_norm - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rowwise_norm_is_16_over_k() {
+        let cfg = QuantConfig::new(4, 1, 8, -1).unwrap();
+        let f = bits_per_weight(&cfg, N, K);
+        assert!((f.q_norm - 16.0 / K as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn headline_configs_match_table4() {
+        // Table 4: CodeGEMM-m1v4g128 has q̄ = 2.126 on Llama-3.1-8B.
+        // Evaluated on the dominant 4096-wide layers:
+        let cfg = QuantConfig::m1v4g128();
+        let got = bits_per_weight(&cfg, 4096, 4096).total;
+        assert!((got - 2.126).abs() < 0.01, "m1v4g128 q̄ = {got}");
+        let cfg = QuantConfig::m2v8g128();
+        let got = bits_per_weight(&cfg, 4096, 4096).total;
+        assert!((got - 2.127).abs() < 0.01, "m2v8g128 q̄ = {got}");
+    }
+
+    #[test]
+    fn uniform_q2g128_matches_table4() {
+        // FlexRound-q2g128 has q̄ = 2.125 in Table 4.
+        let got = uniform_bits_per_weight(2, 128, N, K);
+        assert!((got - 2.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn codebook_term_scales_with_b() {
+        let small = bits_per_weight(&QuantConfig::new(8, 1, 4, -1).unwrap(), N, K).q_codebook;
+        let large = bits_per_weight(&QuantConfig::new(8, 1, 8, -1).unwrap(), N, K).q_codebook;
+        assert!((large / small - 16.0).abs() < 1e-9); // 2^8/2^4
+    }
+
+    #[test]
+    fn quantized_bytes_consistent() {
+        let cfg = QuantConfig::m1v4g128();
+        let b = quantized_bytes(&cfg, N, K);
+        let f = bits_per_weight(&cfg, N, K);
+        assert!((b * 8.0 - f.total * (N * K) as f64).abs() < 1.0);
+    }
+}

@@ -1,0 +1,279 @@
+//! Weighted k-means clustering over length-`v` vectors (paper §2.2 Step 2).
+//!
+//! k-means++ initialization, Lloyd iterations with empty-cluster
+//! reseeding, optional per-point importance weights (used by the
+//! calibration-aware quantizer), and deterministic behaviour from a seed.
+
+use crate::util::prng::Prng;
+
+/// Result of a k-means run.
+#[derive(Clone, Debug)]
+pub struct KMeansResult {
+    /// `centroids[i * dim .. (i+1) * dim]` is centroid `i`.
+    pub centroids: Vec<f32>,
+    /// Assignment of each input point to a centroid index.
+    pub assignments: Vec<u32>,
+    /// Final weighted sum of squared distances.
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+/// Options for a k-means run.
+#[derive(Clone, Copy, Debug)]
+pub struct KMeansOptions {
+    pub n_clusters: usize,
+    pub dim: usize,
+    pub max_iters: usize,
+    pub seed: u64,
+    /// Relative inertia improvement below which iteration stops.
+    pub tol: f64,
+}
+
+impl KMeansOptions {
+    pub fn new(n_clusters: usize, dim: usize) -> KMeansOptions {
+        KMeansOptions { n_clusters, dim, max_iters: 12, seed: 0xC0DE, tol: 1e-4 }
+    }
+}
+
+#[inline]
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        acc += d * d;
+    }
+    acc
+}
+
+/// k-means++ seeding: first centroid uniform, subsequent ones proportional
+/// to (weighted) squared distance to the nearest chosen centroid.
+fn init_plusplus(points: &[f32], weights: Option<&[f32]>, opts: &KMeansOptions, rng: &mut Prng) -> Vec<f32> {
+    let d = opts.dim;
+    let n = points.len() / d;
+    let kc = opts.n_clusters.min(n.max(1));
+    let mut centroids = Vec::with_capacity(opts.n_clusters * d);
+    let first = rng.index(n);
+    centroids.extend_from_slice(&points[first * d..(first + 1) * d]);
+    let mut best_d2: Vec<f64> = (0..n)
+        .map(|p| {
+            let w = weights.map(|w| w[p] as f64).unwrap_or(1.0);
+            dist2(&points[p * d..(p + 1) * d], &centroids[..d]) as f64 * w
+        })
+        .collect();
+    while centroids.len() / d < kc {
+        let total: f64 = best_d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.index(n)
+        } else {
+            let mut t = rng.uniform() * total;
+            let mut pick = n - 1;
+            for (p, d2) in best_d2.iter().enumerate() {
+                t -= d2;
+                if t <= 0.0 {
+                    pick = p;
+                    break;
+                }
+            }
+            pick
+        };
+        let c0 = centroids.len();
+        centroids.extend_from_slice(&points[pick * d..(pick + 1) * d]);
+        let new_c = &centroids[c0..c0 + d];
+        for p in 0..n {
+            let w = weights.map(|w| w[p] as f64).unwrap_or(1.0);
+            let nd = dist2(&points[p * d..(p + 1) * d], new_c) as f64 * w;
+            if nd < best_d2[p] {
+                best_d2[p] = nd;
+            }
+        }
+    }
+    // If fewer points than clusters, duplicate-with-jitter to fill.
+    while centroids.len() / d < opts.n_clusters {
+        let src = rng.index(centroids.len() / d);
+        let mut c: Vec<f32> = centroids[src * d..(src + 1) * d].to_vec();
+        for x in c.iter_mut() {
+            *x += rng.normal_f32() * 1e-4;
+        }
+        centroids.extend_from_slice(&c);
+    }
+    centroids
+}
+
+/// Assign each point to its nearest centroid; returns (assignments,
+/// weighted inertia).
+pub fn assign(points: &[f32], centroids: &[f32], dim: usize, weights: Option<&[f32]>) -> (Vec<u32>, f64) {
+    let n = points.len() / dim;
+    let kc = centroids.len() / dim;
+    let mut asg = vec![0u32; n];
+    let mut inertia = 0f64;
+    for p in 0..n {
+        let pt = &points[p * dim..(p + 1) * dim];
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..kc {
+            let d2 = dist2(pt, &centroids[c * dim..(c + 1) * dim]);
+            if d2 < best_d {
+                best_d = d2;
+                best = c;
+            }
+        }
+        asg[p] = best as u32;
+        let w = weights.map(|w| w[p] as f64).unwrap_or(1.0);
+        inertia += best_d as f64 * w;
+    }
+    (asg, inertia)
+}
+
+/// Recompute centroids as the weighted mean of their members. Empty
+/// clusters are reseeded to the point farthest from its centroid.
+fn update_centroids(
+    points: &[f32],
+    asg: &[u32],
+    weights: Option<&[f32]>,
+    opts: &KMeansOptions,
+    rng: &mut Prng,
+    centroids: &mut [f32],
+) {
+    let d = opts.dim;
+    let n = points.len() / d;
+    let kc = opts.n_clusters;
+    let mut sums = vec![0f64; kc * d];
+    let mut wsum = vec![0f64; kc];
+    for p in 0..n {
+        let c = asg[p] as usize;
+        let w = weights.map(|w| w[p] as f64).unwrap_or(1.0);
+        wsum[c] += w;
+        for t in 0..d {
+            sums[c * d + t] += points[p * d + t] as f64 * w;
+        }
+    }
+    for c in 0..kc {
+        if wsum[c] > 0.0 {
+            for t in 0..d {
+                centroids[c * d + t] = (sums[c * d + t] / wsum[c]) as f32;
+            }
+        } else if n > 0 {
+            // Reseed empty cluster at a random point (weighted draw keeps
+            // determinism through the shared rng).
+            let p = rng.index(n);
+            centroids[c * d..(c + 1) * d].copy_from_slice(&points[p * d..(p + 1) * d]);
+        }
+    }
+}
+
+/// Run weighted k-means. `points` is `n*dim` flat; `weights` optional
+/// per-point importance (defaults to 1).
+pub fn kmeans(points: &[f32], weights: Option<&[f32]>, opts: KMeansOptions) -> KMeansResult {
+    assert!(opts.dim > 0 && points.len() % opts.dim == 0, "bad points length");
+    let n = points.len() / opts.dim;
+    assert!(n > 0, "kmeans on empty point set");
+    if let Some(w) = weights {
+        assert_eq!(w.len(), n);
+    }
+    let mut rng = Prng::seeded(opts.seed);
+    let mut centroids = init_plusplus(points, weights, &opts, &mut rng);
+    let (mut asg, mut inertia) = assign(points, &centroids, opts.dim, weights);
+    let mut iters = 0;
+    for _ in 0..opts.max_iters {
+        iters += 1;
+        update_centroids(points, &asg, weights, &opts, &mut rng, &mut centroids);
+        let (new_asg, new_inertia) = assign(points, &centroids, opts.dim, weights);
+        let improved = inertia - new_inertia;
+        asg = new_asg;
+        let prev = inertia;
+        inertia = new_inertia;
+        if improved <= opts.tol * prev.max(1e-12) {
+            break;
+        }
+    }
+    KMeansResult { centroids, assignments: asg, inertia, iterations: iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated blobs in 2D.
+    fn blobs(rng: &mut Prng, per: usize) -> Vec<f32> {
+        let centers = [(-5.0f32, 0.0f32), (5.0, 0.0), (0.0, 8.0)];
+        let mut pts = Vec::new();
+        for &(cx, cy) in &centers {
+            for _ in 0..per {
+                pts.push(cx + rng.normal_f32() * 0.3);
+                pts.push(cy + rng.normal_f32() * 0.3);
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Prng::seeded(1);
+        let pts = blobs(&mut rng, 50);
+        let res = kmeans(&pts, None, KMeansOptions { max_iters: 30, ..KMeansOptions::new(3, 2) });
+        // Every centroid should be near one of the true centers.
+        let centers = [(-5.0f32, 0.0f32), (5.0, 0.0), (0.0, 8.0)];
+        for c in 0..3 {
+            let cx = res.centroids[c * 2];
+            let cy = res.centroids[c * 2 + 1];
+            let ok = centers.iter().any(|&(x, y)| ((cx - x).powi(2) + (cy - y).powi(2)).sqrt() < 1.0);
+            assert!(ok, "centroid ({cx},{cy}) not near any blob center");
+        }
+        // Inertia per point should be tiny relative to blob separation.
+        assert!(res.inertia / 150.0 < 0.5, "inertia {}", res.inertia);
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut rng = Prng::seeded(2);
+        let pts = blobs(&mut rng, 20);
+        let a = kmeans(&pts, None, KMeansOptions::new(4, 2));
+        let b = kmeans(&pts, None, KMeansOptions::new(4, 2));
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.assignments, b.assignments);
+    }
+
+    #[test]
+    fn inertia_decreases_with_more_clusters() {
+        let mut rng = Prng::seeded(3);
+        let pts: Vec<f32> = (0..400).map(|_| rng.normal_f32()).collect();
+        let i2 = kmeans(&pts, None, KMeansOptions::new(2, 2)).inertia;
+        let i8 = kmeans(&pts, None, KMeansOptions::new(8, 2)).inertia;
+        assert!(i8 < i2, "k=8 ({i8}) should beat k=2 ({i2})");
+    }
+
+    #[test]
+    fn handles_more_clusters_than_points() {
+        let pts = vec![0.0f32, 0.0, 1.0, 1.0]; // 2 points in 2D
+        let res = kmeans(&pts, None, KMeansOptions::new(8, 2));
+        assert_eq!(res.centroids.len(), 8 * 2);
+        assert!(res.assignments.iter().all(|&a| a < 8));
+    }
+
+    #[test]
+    fn weights_pull_centroids() {
+        // Two points; give one a huge weight — with k=1 the centroid must
+        // sit nearly on the heavy point.
+        let pts = vec![0.0f32, 0.0, 10.0, 0.0];
+        let w = vec![1.0f32, 1000.0];
+        let res = kmeans(&pts, Some(&w), KMeansOptions::new(1, 2));
+        assert!((res.centroids[0] - 10.0).abs() < 0.1, "centroid at {}", res.centroids[0]);
+    }
+
+    #[test]
+    fn assignments_are_nearest() {
+        let mut rng = Prng::seeded(4);
+        let pts = blobs(&mut rng, 10);
+        let res = kmeans(&pts, None, KMeansOptions::new(3, 2));
+        let (re_asg, _) = assign(&pts, &res.centroids, 2, None);
+        assert_eq!(res.assignments, re_asg);
+    }
+
+    #[test]
+    fn single_cluster_is_mean() {
+        let pts = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3 pts in 2D
+        let res = kmeans(&pts, None, KMeansOptions::new(1, 2));
+        assert!((res.centroids[0] - 3.0).abs() < 1e-5);
+        assert!((res.centroids[1] - 4.0).abs() < 1e-5);
+    }
+}

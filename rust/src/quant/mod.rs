@@ -1,0 +1,328 @@
+//! Codebook-based weight quantization toolkit (paper §2.2, Figure 2).
+//!
+//! Pipeline: group-normalize the weight matrix → split rows into length-`v`
+//! vectors → train `m` additive codebooks by residual k-means → encode each
+//! vector as `m` codes of `b` bits → optionally refine codes+codebooks by
+//! alternating least squares (the PV-Tuning-class post-optimization).
+//!
+//! Also provides the baseline formats used in the paper's evaluation:
+//! uniform group-scaled quantization (GPTQ / FlexRound class) and
+//! binary-coded quantization (LUT-GEMM's BCQ format).
+
+pub mod additive;
+pub mod bcq;
+pub mod calib;
+pub mod footprint;
+pub mod kmeans;
+pub mod normalize;
+pub mod pack;
+pub mod uniform;
+
+pub use additive::{AdditiveQuantizer, RefineOptions};
+pub use footprint::{bits_per_weight, FootprintBreakdown};
+pub use normalize::GroupScales;
+pub use pack::PackedCodes;
+
+use crate::config::QuantConfig;
+use crate::util::f16::round_f16;
+use anyhow::{bail, Result};
+
+/// A codebook-quantized linear layer `W (n × k)` in the paper's format.
+#[derive(Clone, Debug)]
+pub struct QuantizedLinear {
+    pub cfg: QuantConfig,
+    pub n: usize,
+    pub k: usize,
+    /// `m` codebooks, flattened: `codebooks[c * 2^b * v + i * v + t]` is
+    /// element `t` of centroid `i` of codebook `c`. Values are f16-rounded.
+    pub codebooks: Vec<f32>,
+    /// Bit-packed codes in `[r][j][c]` order (row, vector index, codebook).
+    pub codes: PackedCodes,
+    /// Group scales, `scales[r * n_groups + gi]`, f16-rounded.
+    pub scales: Vec<f32>,
+}
+
+impl QuantizedLinear {
+    /// Number of length-`v` vectors per row.
+    pub fn vectors_per_row(&self) -> usize {
+        self.k / self.cfg.v
+    }
+
+    /// Number of normalization groups per row.
+    pub fn groups_per_row(&self) -> usize {
+        let g = self.cfg.group_size(self.k);
+        self.k.div_ceil(g)
+    }
+
+    /// Centroid slice for codebook `c`, code `i`.
+    #[inline]
+    pub fn centroid(&self, c: usize, i: usize) -> &[f32] {
+        let v = self.cfg.v;
+        let base = (c * self.cfg.n_centroids() + i) * v;
+        &self.codebooks[base..base + v]
+    }
+
+    /// Code for (row, vector, codebook).
+    #[inline]
+    pub fn code(&self, r: usize, j: usize, c: usize) -> usize {
+        let idx = (r * self.vectors_per_row() + j) * self.cfg.m + c;
+        self.codes.get(idx)
+    }
+
+    /// Scale for (row, column).
+    #[inline]
+    pub fn scale(&self, r: usize, col: usize) -> f32 {
+        let g = self.cfg.group_size(self.k);
+        self.scales[r * self.groups_per_row() + col / g]
+    }
+
+    /// Reconstruct the full dequantized weight matrix (row-major n×k).
+    /// This is the reference the GEMM engines are validated against.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let v = self.cfg.v;
+        let jn = self.vectors_per_row();
+        let mut w = vec![0f32; self.n * self.k];
+        for r in 0..self.n {
+            for j in 0..jn {
+                let col0 = j * v;
+                let s = self.scale(r, col0);
+                for c in 0..self.cfg.m {
+                    let cent = self.centroid(c, self.code(r, j, c));
+                    for t in 0..v {
+                        w[r * self.k + col0 + t] += s * cent[t];
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    /// Total storage in bytes (codes packed, codebooks+scales f16).
+    pub fn storage_bytes(&self) -> usize {
+        let code_bits = self.n * self.vectors_per_row() * self.cfg.m * self.cfg.b;
+        let codebook_bytes = self.cfg.m * self.cfg.n_centroids() * self.cfg.v * 2;
+        let scale_bytes = self.n * self.groups_per_row() * 2;
+        code_bits.div_ceil(8) + codebook_bytes + scale_bytes
+    }
+
+    /// Average bits per weight (matches Eq. 1 of the paper).
+    pub fn bits_per_weight(&self) -> f64 {
+        footprint::bits_per_weight(&self.cfg, self.n, self.k).total
+    }
+
+    /// Internal consistency checks (used by tests and after deserialize).
+    pub fn validate(&self) -> Result<()> {
+        self.cfg.validate()?;
+        if self.k % self.cfg.v != 0 {
+            bail!("k ({}) not a multiple of v ({})", self.k, self.cfg.v);
+        }
+        let expect_cb = self.cfg.m * self.cfg.n_centroids() * self.cfg.v;
+        if self.codebooks.len() != expect_cb {
+            bail!("codebook len {} != {}", self.codebooks.len(), expect_cb);
+        }
+        let expect_codes = self.n * self.vectors_per_row() * self.cfg.m;
+        if self.codes.len() != expect_codes {
+            bail!("codes len {} != {}", self.codes.len(), expect_codes);
+        }
+        let expect_scales = self.n * self.groups_per_row();
+        if self.scales.len() != expect_scales {
+            bail!("scales len {} != {}", self.scales.len(), expect_scales);
+        }
+        if self.codes.max_value() >= self.cfg.n_centroids() {
+            bail!("code out of range for b={}", self.cfg.b);
+        }
+        Ok(())
+    }
+}
+
+/// High-level quantizer facade with sensible defaults.
+#[derive(Clone, Debug)]
+pub struct Quantizer {
+    pub cfg: QuantConfig,
+    /// Max sample vectors used for codebook training (subsampling keeps
+    /// k-means tractable on large layers; codes are still assigned to all).
+    pub max_train_points: usize,
+    /// k-means iterations per codebook.
+    pub kmeans_iters: usize,
+    /// Alternating refinement rounds (0 = greedy residual only).
+    pub refine_rounds: usize,
+    pub seed: u64,
+}
+
+impl Quantizer {
+    pub fn new(cfg: QuantConfig) -> Quantizer {
+        Quantizer { cfg, max_train_points: 1 << 16, kmeans_iters: 12, refine_rounds: 1, seed: 0xC0DE }
+    }
+
+    pub fn with_refinement(mut self, rounds: usize) -> Quantizer {
+        self.refine_rounds = rounds;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Quantizer {
+        self.seed = seed;
+        self
+    }
+
+    /// Quantize a row-major `n×k` weight matrix.
+    pub fn quantize(&self, w: &[f32], n: usize, k: usize) -> QuantizedLinear {
+        self.quantize_weighted(w, n, k, None)
+    }
+
+    /// Quantize with optional per-column importance weights (diag of the
+    /// calibration second-moment H — the AQLM/GPTQ-style objective
+    /// ‖(W−Ŵ)·diag(h)^{1/2}‖²). `h.len() == k`.
+    pub fn quantize_weighted(&self, w: &[f32], n: usize, k: usize, h: Option<&[f32]>) -> QuantizedLinear {
+        assert_eq!(w.len(), n * k, "weight length mismatch");
+        assert_eq!(k % self.cfg.v, 0, "k must be a multiple of v");
+        let aq = AdditiveQuantizer {
+            cfg: self.cfg,
+            max_train_points: self.max_train_points,
+            kmeans_iters: self.kmeans_iters,
+            seed: self.seed,
+        };
+        let refine = RefineOptions { rounds: self.refine_rounds, update_codebooks: true };
+        aq.quantize(w, n, k, h, refine)
+    }
+}
+
+/// Round an entire quantized layer's stored values through the f16 grid
+/// (idempotent; exposed for tests).
+pub fn f16_sanitize(q: &mut QuantizedLinear) {
+    for x in q.codebooks.iter_mut() {
+        *x = round_f16(*x);
+    }
+    for s in q.scales.iter_mut() {
+        *s = round_f16(*s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::stats;
+
+    fn random_weight(n: usize, k: usize, seed: u64) -> Vec<f32> {
+        Prng::seeded(seed).normal_vec(n * k, 0.02)
+    }
+
+    #[test]
+    fn quantize_reconstructs_with_bounded_error() {
+        let (n, k) = (32, 64);
+        let w = random_weight(n, k, 1);
+        for label in ["m1v4g-1", "m2v8g32", "m1v8g16"] {
+            let cfg = QuantConfig::parse_label(label).unwrap();
+            let q = Quantizer::new(cfg).quantize(&w, n, k);
+            q.validate().unwrap();
+            let wq = q.dequantize();
+            let rel = stats::rel_l2(&wq, &w);
+            assert!(rel < 0.6, "{label}: rel={rel}");
+        }
+    }
+
+    #[test]
+    fn more_codebooks_reduce_error() {
+        let (n, k) = (48, 64);
+        let w = random_weight(n, k, 2);
+        let err = |m: usize| {
+            let cfg = QuantConfig::new(8, m, 6, -1).unwrap();
+            let q = Quantizer::new(cfg).quantize(&w, n, k);
+            stats::rel_l2(&q.dequantize(), &w)
+        };
+        let (e1, e2) = (err(1), err(2));
+        assert!(e2 < e1, "m=2 ({e2}) should beat m=1 ({e1})");
+    }
+
+    #[test]
+    fn more_bits_reduce_error() {
+        let (n, k) = (48, 64);
+        let w = random_weight(n, k, 3);
+        let err = |b: usize| {
+            let cfg = QuantConfig::new(8, 1, b, -1).unwrap();
+            let q = Quantizer::new(cfg).quantize(&w, n, k);
+            stats::rel_l2(&q.dequantize(), &w)
+        };
+        assert!(err(8) < err(4), "8 bits should beat 4 bits");
+        assert!(err(4) < err(2), "4 bits should beat 2 bits");
+    }
+
+    #[test]
+    fn finer_groups_reduce_error_on_heteroscedastic_rows() {
+        // Rows whose scale varies along k benefit from finer g.
+        let (n, k) = (16, 128);
+        let mut rng = Prng::seeded(4);
+        let mut w = vec![0f32; n * k];
+        for r in 0..n {
+            for c in 0..k {
+                let band = 1.0 + 9.0 * ((c / 32) as f32 / 3.0); // scale ramps 1x→10x
+                w[r * k + c] = rng.normal_f32() * 0.01 * band;
+            }
+        }
+        let err = |g: i64| {
+            let cfg = QuantConfig::new(4, 1, 4, g).unwrap();
+            let q = Quantizer::new(cfg).quantize(&w, n, k);
+            stats::rel_l2(&q.dequantize(), &w)
+        };
+        assert!(err(32) < err(-1), "g=32 should beat row-wise on banded scales");
+    }
+
+    #[test]
+    fn storage_matches_eq1_within_rounding() {
+        let (n, k) = (64, 256);
+        let cfg = QuantConfig::new(8, 2, 8, 128).unwrap();
+        let w = random_weight(n, k, 5);
+        let q = Quantizer::new(cfg).quantize(&w, n, k);
+        let eq1_bits = q.bits_per_weight() * (n * k) as f64;
+        let actual_bits = (q.storage_bytes() * 8) as f64;
+        let rel = (actual_bits - eq1_bits).abs() / eq1_bits;
+        assert!(rel < 0.01, "storage {actual_bits} vs eq1 {eq1_bits}");
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let (n, k) = (8, 16);
+        let cfg = QuantConfig::new(4, 1, 4, -1).unwrap();
+        let w = random_weight(n, k, 6);
+        let mut q = Quantizer::new(cfg).quantize(&w, n, k);
+        q.scales.pop();
+        assert!(q.validate().is_err());
+    }
+
+    #[test]
+    fn stored_values_are_f16_exact() {
+        let (n, k) = (8, 32);
+        let cfg = QuantConfig::new(4, 1, 6, -1).unwrap();
+        let w = random_weight(n, k, 7);
+        let q = Quantizer::new(cfg).quantize(&w, n, k);
+        for &x in q.codebooks.iter().chain(q.scales.iter()) {
+            assert_eq!(x, round_f16(x), "stored value {x} not on f16 grid");
+        }
+    }
+
+    #[test]
+    fn refinement_does_not_hurt() {
+        let (n, k) = (32, 64);
+        let w = random_weight(n, k, 8);
+        let cfg = QuantConfig::new(8, 2, 5, -1).unwrap();
+        let e0 = {
+            let q = Quantizer::new(cfg).with_refinement(0).quantize(&w, n, k);
+            stats::rel_l2(&q.dequantize(), &w)
+        };
+        let e2 = {
+            let q = Quantizer::new(cfg).with_refinement(2).quantize(&w, n, k);
+            stats::rel_l2(&q.dequantize(), &w)
+        };
+        assert!(e2 <= e0 * 1.02, "refined {e2} vs greedy {e0}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (n, k) = (16, 32);
+        let w = random_weight(n, k, 9);
+        let cfg = QuantConfig::new(4, 1, 5, -1).unwrap();
+        let q1 = Quantizer::new(cfg).with_seed(11).quantize(&w, n, k);
+        let q2 = Quantizer::new(cfg).with_seed(11).quantize(&w, n, k);
+        assert_eq!(q1.dequantize(), q2.dequantize());
+    }
+}

@@ -1,0 +1,149 @@
+//! Group normalization (paper §2.2 Step 1).
+//!
+//! Each row of the weight matrix is divided into groups of `g` consecutive
+//! elements (`g = -1` ⇒ the whole row); every group is normalized by its
+//! absolute maximum so the resulting vectors live in `[-1, 1]^v`, which is
+//! what the shared codebooks are trained on. Scales are stored in FP16.
+
+use crate::config::QuantConfig;
+use crate::util::f16::round_f16;
+
+/// Per-(row, group) scales for an `n×k` matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupScales {
+    pub n: usize,
+    pub k: usize,
+    pub g: usize,
+    /// `scales[r * n_groups + gi]`
+    pub scales: Vec<f32>,
+}
+
+impl GroupScales {
+    pub fn n_groups(&self) -> usize {
+        self.k.div_ceil(self.g)
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, col: usize) -> f32 {
+        self.scales[r * self.n_groups() + col / self.g]
+    }
+
+    /// Compute absmax scales for `w` under `cfg`, returning scales and the
+    /// normalized matrix. Zero groups get scale 1 (nothing to normalize).
+    pub fn compute(w: &[f32], n: usize, k: usize, cfg: &QuantConfig) -> (GroupScales, Vec<f32>) {
+        let g = cfg.group_size(k);
+        let n_groups = k.div_ceil(g);
+        let mut scales = vec![1f32; n * n_groups];
+        let mut normalized = vec![0f32; n * k];
+        for r in 0..n {
+            for gi in 0..n_groups {
+                let lo = gi * g;
+                let hi = ((gi + 1) * g).min(k);
+                let mut amax = 0f32;
+                for c in lo..hi {
+                    amax = amax.max(w[r * k + c].abs());
+                }
+                // f16-round the scale (it is stored in FP16 on device).
+                let s = if amax > 0.0 { round_f16(amax) } else { 1.0 };
+                let s = if s == 0.0 { 1.0 } else { s }; // f16 underflow guard
+                scales[r * n_groups + gi] = s;
+                let inv = 1.0 / s;
+                for c in lo..hi {
+                    normalized[r * k + c] = w[r * k + c] * inv;
+                }
+            }
+        }
+        (GroupScales { n, k, g, scales }, normalized)
+    }
+
+    /// Apply scales to a normalized matrix (inverse of `compute`'s
+    /// normalization, up to f16 rounding of the scales).
+    pub fn denormalize(&self, normalized: &[f32]) -> Vec<f32> {
+        let mut w = vec![0f32; self.n * self.k];
+        for r in 0..self.n {
+            for c in 0..self.k {
+                w[r * self.k + c] = normalized[r * self.k + c] * self.at(r, c);
+            }
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::stats;
+
+    #[test]
+    fn roundtrip_up_to_f16_scale_rounding() {
+        let (n, k) = (8, 64);
+        let w = Prng::seeded(1).normal_vec(n * k, 1.0);
+        let cfg = QuantConfig::new(4, 1, 8, 16).unwrap();
+        let (scales, norm) = GroupScales::compute(&w, n, k, &cfg);
+        let back = scales.denormalize(&norm);
+        // Normalization divides by f16(amax) and denormalize multiplies by
+        // the same stored value, so the roundtrip is exact in f32 terms.
+        assert!(stats::max_abs_diff(&back, &w) < 1e-6);
+    }
+
+    #[test]
+    fn normalized_values_bounded() {
+        let (n, k) = (4, 32);
+        let w = Prng::seeded(2).normal_vec(n * k, 5.0);
+        let cfg = QuantConfig::new(4, 1, 8, 8).unwrap();
+        let (_, norm) = GroupScales::compute(&w, n, k, &cfg);
+        // |w|/f16(amax) can exceed 1 by at most the f16 rounding (2^-11).
+        for x in norm {
+            assert!(x.abs() <= 1.0 + 1e-3, "{x}");
+        }
+    }
+
+    #[test]
+    fn row_wise_when_g_is_none() {
+        let (n, k) = (2, 16);
+        let w = Prng::seeded(3).normal_vec(n * k, 1.0);
+        let cfg = QuantConfig::new(4, 1, 8, -1).unwrap();
+        let (scales, _) = GroupScales::compute(&w, n, k, &cfg);
+        assert_eq!(scales.n_groups(), 1);
+        assert_eq!(scales.scales.len(), n);
+    }
+
+    #[test]
+    fn zero_group_scale_is_one() {
+        let (n, k) = (1, 8);
+        let w = vec![0f32; n * k];
+        let cfg = QuantConfig::new(4, 1, 8, 4).unwrap();
+        let (scales, norm) = GroupScales::compute(&w, n, k, &cfg);
+        assert!(scales.scales.iter().all(|&s| s == 1.0));
+        assert!(norm.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scales_are_f16_values() {
+        let (n, k) = (4, 16);
+        let w = Prng::seeded(4).normal_vec(n * k, 0.37);
+        let cfg = QuantConfig::new(4, 1, 8, 8).unwrap();
+        let (scales, _) = GroupScales::compute(&w, n, k, &cfg);
+        for &s in &scales.scales {
+            assert_eq!(s, round_f16(s));
+        }
+    }
+
+    #[test]
+    fn at_indexes_correct_group() {
+        let (n, k) = (2, 8);
+        #[rustfmt::skip]
+        let w = vec![
+            1.0, 1.0, 2.0, 2.0, 4.0, 4.0, 8.0, 8.0,
+            3.0, 3.0, 3.0, 3.0, 3.0, 3.0, 3.0, 3.0,
+        ];
+        let cfg = QuantConfig::new(2, 1, 8, 2).unwrap();
+        let (scales, _) = GroupScales::compute(&w, n, k, &cfg);
+        assert_eq!(scales.at(0, 0), 1.0);
+        assert_eq!(scales.at(0, 2), 2.0);
+        assert_eq!(scales.at(0, 5), 4.0);
+        assert_eq!(scales.at(0, 7), 8.0);
+        assert_eq!(scales.at(1, 3), 3.0);
+    }
+}

@@ -1,0 +1,197 @@
+//! Bit-packing of code indices (paper stores `b`-bit codes densely).
+//!
+//! Codes are packed LSB-first into a little-endian bitstream. For `b = 8`
+//! (the paper's recommended setting) a zero-copy `u8` fast path is kept so
+//! the GEMM hot loop can index codes directly without bit arithmetic.
+
+use anyhow::{bail, Result};
+
+/// Densely bit-packed code array.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedCodes {
+    bits: usize,
+    len: usize,
+    data: Vec<u8>,
+}
+
+impl PackedCodes {
+    /// Pack `codes` (each `< 2^bits`) into a bitstream.
+    pub fn pack(codes: &[u32], bits: usize) -> Result<PackedCodes> {
+        if bits == 0 || bits > 16 {
+            bail!("bits must be in [1,16], got {bits}");
+        }
+        let limit = 1u32 << bits;
+        let mut data = vec![0u8; (codes.len() * bits).div_ceil(8)];
+        for (i, &c) in codes.iter().enumerate() {
+            if c >= limit {
+                bail!("code {c} out of range for {bits} bits");
+            }
+            let bit0 = i * bits;
+            let mut remaining = bits;
+            let mut val = c;
+            let mut pos = bit0;
+            while remaining > 0 {
+                let byte = pos / 8;
+                let off = pos % 8;
+                let take = remaining.min(8 - off);
+                let mask = ((1u32 << take) - 1) as u8;
+                data[byte] |= (((val as u8) & mask) as u8) << off;
+                val >>= take;
+                pos += take;
+                remaining -= take;
+            }
+        }
+        Ok(PackedCodes { bits, len: codes.len(), data })
+    }
+
+    /// Number of stored codes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Raw packed bytes (for serialization / the AOT export parity tests).
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Construct from raw packed bytes.
+    pub fn from_bytes(data: Vec<u8>, bits: usize, len: usize) -> Result<PackedCodes> {
+        if bits == 0 || bits > 16 {
+            bail!("bits must be in [1,16]");
+        }
+        if data.len() < (len * bits).div_ceil(8) {
+            bail!("packed data too short: {} bytes for {len} codes of {bits} bits", data.len());
+        }
+        Ok(PackedCodes { bits, len, data })
+    }
+
+    /// Read code `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> usize {
+        debug_assert!(i < self.len);
+        let bit0 = i * self.bits;
+        let mut val = 0u32;
+        let mut got = 0usize;
+        let mut pos = bit0;
+        while got < self.bits {
+            let byte = pos / 8;
+            let off = pos % 8;
+            let take = (self.bits - got).min(8 - off);
+            let mask = ((1u32 << take) - 1) as u32;
+            val |= (((self.data[byte] as u32) >> off) & mask) << got;
+            got += take;
+            pos += take;
+        }
+        val as usize
+    }
+
+    /// Unpack everything to u32.
+    pub fn unpack(&self) -> Vec<u32> {
+        (0..self.len).map(|i| self.get(i) as u32).collect()
+    }
+
+    /// Unpack to u8 (requires `bits <= 8`); the GEMM fast path operates on
+    /// this representation.
+    pub fn unpack_u8(&self) -> Result<Vec<u8>> {
+        if self.bits > 8 {
+            bail!("unpack_u8 requires bits <= 8 (got {})", self.bits);
+        }
+        // b == 8 is the no-op fast path.
+        if self.bits == 8 {
+            return Ok(self.data[..self.len].to_vec());
+        }
+        Ok((0..self.len).map(|i| self.get(i) as u8).collect())
+    }
+
+    /// Largest stored code value (0 for empty).
+    pub fn max_value(&self) -> usize {
+        (0..self.len).map(|i| self.get(i)).max().unwrap_or(0)
+    }
+
+    /// Packed size in bytes.
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn roundtrip_all_bit_widths() {
+        let mut rng = Prng::seeded(1);
+        for bits in 1..=16usize {
+            let limit = 1u32 << bits;
+            let codes: Vec<u32> = (0..257).map(|_| rng.next_u32() % limit).collect();
+            let packed = PackedCodes::pack(&codes, bits).unwrap();
+            assert_eq!(packed.unpack(), codes, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn b8_is_byte_identical() {
+        let codes: Vec<u32> = (0..=255).collect();
+        let packed = PackedCodes::pack(&codes, 8).unwrap();
+        assert_eq!(packed.bytes().len(), 256);
+        assert_eq!(packed.unpack_u8().unwrap(), (0..=255).collect::<Vec<u8>>());
+    }
+
+    #[test]
+    fn packed_size_is_minimal() {
+        let codes = vec![1u32; 100];
+        for bits in [1usize, 2, 3, 5, 8, 12] {
+            let packed = PackedCodes::pack(&codes, bits).unwrap();
+            assert_eq!(packed.packed_bytes(), (100 * bits).div_ceil(8));
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(PackedCodes::pack(&[4], 2).is_err());
+        assert!(PackedCodes::pack(&[3], 2).is_ok());
+        assert!(PackedCodes::pack(&[0], 0).is_err());
+        assert!(PackedCodes::pack(&[0], 17).is_err());
+    }
+
+    #[test]
+    fn unpack_u8_rejects_wide() {
+        let packed = PackedCodes::pack(&[1000], 12).unwrap();
+        assert!(packed.unpack_u8().is_err());
+    }
+
+    #[test]
+    fn from_bytes_validates_length() {
+        let packed = PackedCodes::pack(&[1, 2, 3], 8).unwrap();
+        let bytes = packed.bytes().to_vec();
+        assert!(PackedCodes::from_bytes(bytes.clone(), 8, 3).is_ok());
+        assert!(PackedCodes::from_bytes(bytes.clone(), 8, 4).is_err());
+        let back = PackedCodes::from_bytes(bytes, 8, 3).unwrap();
+        assert_eq!(back.unpack(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn max_value_scan() {
+        let packed = PackedCodes::pack(&[3, 7, 1], 4).unwrap();
+        assert_eq!(packed.max_value(), 7);
+    }
+
+    #[test]
+    fn crossing_byte_boundaries() {
+        // 3-bit codes cross byte boundaries at every third code.
+        let codes: Vec<u32> = (0..64).map(|i| (i * 5) % 8).collect();
+        let packed = PackedCodes::pack(&codes, 3).unwrap();
+        for (i, &c) in codes.iter().enumerate() {
+            assert_eq!(packed.get(i) as u32, c, "index {i}");
+        }
+    }
+}

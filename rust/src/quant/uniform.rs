@@ -1,0 +1,160 @@
+//! Uniform (integer) group-scaled quantization — the GPTQ / FlexRound /
+//! AWQ format class used as a baseline in the paper's Tables 4 and 5.
+//!
+//! Each group of `g` consecutive weights in a row shares an FP16 scale;
+//! weights are rounded to signed integers in `[-2^(b-1), 2^(b-1)-1]`
+//! (asymmetric zero-point omitted: Llama weights are near-zero-mean, and
+//! the paper's baselines are symmetric RTN-class quantizers).
+
+use crate::util::f16::round_f16;
+use anyhow::{bail, Result};
+
+/// A uniformly quantized linear layer.
+#[derive(Clone, Debug)]
+pub struct UniformLinear {
+    pub n: usize,
+    pub k: usize,
+    pub bits: usize,
+    pub group: usize,
+    /// Quantized integer weights, row-major, stored widened to i8.
+    pub qweight: Vec<i8>,
+    /// FP16 scales per (row, group).
+    pub scales: Vec<f32>,
+}
+
+impl UniformLinear {
+    /// Round-to-nearest quantization of a row-major `n×k` matrix.
+    pub fn quantize(w: &[f32], n: usize, k: usize, bits: usize, group: usize) -> Result<UniformLinear> {
+        if !(2..=8).contains(&bits) {
+            bail!("uniform bits must be in [2, 8], got {bits}");
+        }
+        let group = group.min(k).max(1);
+        if k % group != 0 {
+            bail!("k ({k}) must be a multiple of group ({group})");
+        }
+        assert_eq!(w.len(), n * k);
+        let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+        let n_groups = k / group;
+        let mut qweight = vec![0i8; n * k];
+        let mut scales = vec![1f32; n * n_groups];
+        for r in 0..n {
+            for gi in 0..n_groups {
+                let lo = gi * group;
+                let hi = lo + group;
+                let mut amax = 0f32;
+                for c in lo..hi {
+                    amax = amax.max(w[r * k + c].abs());
+                }
+                let scale = if amax > 0.0 { round_f16(amax / qmax) } else { 1.0 };
+                let scale = if scale == 0.0 { 1.0 } else { scale };
+                scales[r * n_groups + gi] = scale;
+                for c in lo..hi {
+                    let q = (w[r * k + c] / scale).round().clamp(-qmax - 1.0, qmax);
+                    qweight[r * k + c] = q as i8;
+                }
+            }
+        }
+        Ok(UniformLinear { n, k, bits, group, qweight, scales })
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.k / self.group
+    }
+
+    #[inline]
+    pub fn scale(&self, r: usize, col: usize) -> f32 {
+        self.scales[r * self.n_groups() + col / self.group]
+    }
+
+    /// Reconstruct the dequantized matrix.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut w = vec![0f32; self.n * self.k];
+        for r in 0..self.n {
+            for c in 0..self.k {
+                w[r * self.k + c] = self.qweight[r * self.k + c] as f32 * self.scale(r, c);
+            }
+        }
+        w
+    }
+
+    /// Average storage bits per weight (packed ints + FP16 scales).
+    pub fn bits_per_weight(&self) -> f64 {
+        self.bits as f64 + 16.0 / self.group as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::stats;
+
+    #[test]
+    fn four_bit_error_is_small() {
+        let (n, k) = (32, 128);
+        let w = Prng::seeded(1).normal_vec(n * k, 0.02);
+        let q = UniformLinear::quantize(&w, n, k, 4, 128).unwrap();
+        let rel = stats::rel_l2(&q.dequantize(), &w);
+        assert!(rel < 0.12, "4-bit rel={rel}");
+    }
+
+    #[test]
+    fn error_ordering_by_bits() {
+        let (n, k) = (32, 128);
+        let w = Prng::seeded(2).normal_vec(n * k, 0.02);
+        let err = |bits| {
+            let q = UniformLinear::quantize(&w, n, k, bits, 128).unwrap();
+            stats::rel_l2(&q.dequantize(), &w)
+        };
+        assert!(err(8) < err(4));
+        assert!(err(4) < err(3));
+        assert!(err(3) < err(2));
+    }
+
+    #[test]
+    fn two_bit_is_bad_exactly_as_paper_argues() {
+        // The paper's motivation: uniform 2-bit collapses. Relative error
+        // should be large (>25%) on gaussian weights.
+        let (n, k) = (32, 128);
+        let w = Prng::seeded(3).normal_vec(n * k, 0.02);
+        let q = UniformLinear::quantize(&w, n, k, 2, 128).unwrap();
+        let rel = stats::rel_l2(&q.dequantize(), &w);
+        assert!(rel > 0.25, "2-bit uniform should hurt, rel={rel}");
+    }
+
+    #[test]
+    fn qweight_within_range() {
+        let (n, k) = (8, 64);
+        let w = Prng::seeded(4).normal_vec(n * k, 10.0);
+        for bits in [2usize, 3, 4, 8] {
+            let q = UniformLinear::quantize(&w, n, k, bits, 32).unwrap();
+            let lim = 1i32 << (bits - 1);
+            for &x in &q.qweight {
+                assert!((x as i32) >= -lim && (x as i32) < lim, "bits={bits} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn footprint_formula() {
+        let (n, k) = (8, 256);
+        let w = Prng::seeded(5).normal_vec(n * k, 1.0);
+        let q = UniformLinear::quantize(&w, n, k, 2, 128).unwrap();
+        assert!((q.bits_per_weight() - 2.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let w = vec![0f32; 64];
+        assert!(UniformLinear::quantize(&w, 8, 8, 1, 8).is_err());
+        assert!(UniformLinear::quantize(&w, 8, 8, 9, 8).is_err());
+        assert!(UniformLinear::quantize(&w, 8, 8, 4, 3).is_err());
+    }
+
+    #[test]
+    fn zero_matrix_is_exact() {
+        let w = vec![0f32; 64];
+        let q = UniformLinear::quantize(&w, 8, 8, 2, 8).unwrap();
+        assert_eq!(q.dequantize(), w);
+    }
+}

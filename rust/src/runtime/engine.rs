@@ -1,0 +1,245 @@
+//! PJRT runtime: load AOT artifacts (HLO text + packed weights), compile
+//! them once on the CPU PJRT client, and run decode steps from the serve
+//! hot path. Python is **never** involved here — the HLO was lowered at
+//! build time by `python/compile/aot.py`.
+
+use super::manifest::Manifest;
+use crate::util::npy::{TensorData, TensorFile};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A compiled decode-step executable plus its batch size.
+pub struct CompiledStep {
+    pub batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The serve-time model runtime.
+///
+/// # Safety of the `Send` impl
+/// The `xla` crate's handles hold `Rc`s to the PJRT client, so the type is
+/// not auto-`Send`. Every `Rc` clone lives *inside* this struct (client,
+/// executables, weight literals) — `ModelRuntime::load` leaks none — so
+/// moving the whole value to another thread moves every reference
+/// together and the non-atomic refcounts are never touched concurrently.
+/// The runtime must not be shared (`&ModelRuntime` across threads) —
+/// which `Send`-without-`Sync` exactly encodes.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    /// Kept alive for the executables' lifetime (never read directly).
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    steps: BTreeMap<usize, CompiledStep>,
+    /// Weight literals in `manifest.weight_args` order, decoded once at
+    /// load and passed to `execute` *by reference* (§Perf: no per-step
+    /// weight copies; `execute_b` device buffers segfault on the CPU
+    /// plugin because PJRT donates input buffers).
+    weights: Vec<xla::Literal>,
+}
+
+// SAFETY: see the struct docs — all internal `Rc`s move as one unit and
+// the type is not `Sync`, so refcounts are never mutated from two threads.
+unsafe impl Send for ModelRuntime {}
+
+impl ModelRuntime {
+    /// Load every artifact in `dir` and compile it on the CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(dir)?;
+        ModelRuntime::from_manifest(manifest)
+    }
+
+    pub fn from_manifest(manifest: Manifest) -> Result<ModelRuntime> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut steps = BTreeMap::new();
+        for a in &manifest.artifacts {
+            let path = manifest.hlo_path(a);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compiling {}", a.name))?;
+            steps.insert(a.batch, CompiledStep { batch: a.batch, exe });
+        }
+        let weights = load_weight_literals(&manifest)?;
+        Ok(ModelRuntime { manifest, client, steps, weights })
+    }
+
+    /// Compiled batch sizes, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.steps.keys().copied().collect()
+    }
+
+    /// Largest compiled batch (the serving bucket).
+    pub fn max_batch(&self) -> usize {
+        *self.steps.keys().max().expect("at least one artifact")
+    }
+
+    /// Run one decode step at the exact compiled batch size `batch`.
+    ///
+    /// - `tokens`, `positions`: length `batch` (pad idle slots with 0 /
+    ///   their current length — padded writes land at positions that are
+    ///   overwritten before ever being read, see coordinator docs).
+    /// - `kv_k` / `kv_v`: `[n_layers, batch, max_seq, kv_dim]`, updated
+    ///   in place with the step's new K/V rows.
+    ///
+    /// Returns logits `[batch, vocab]`.
+    pub fn decode_step(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        positions: &[i32],
+        kv_k: &mut Vec<f32>,
+        kv_v: &mut Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        let m = &self.manifest.model;
+        let kv_len = m.n_layers * batch * m.max_seq * m.kv_dim();
+        if kv_k.len() != kv_len || kv_v.len() != kv_len {
+            bail!("kv buffers must have length {kv_len}, got {}", kv_k.len());
+        }
+        let dims = [m.n_layers as i64, batch as i64, m.max_seq as i64, m.kv_dim() as i64];
+        let mut lk = xla::Literal::vec1(kv_k.as_slice()).reshape(&dims)?;
+        let mut lv = xla::Literal::vec1(kv_v.as_slice()).reshape(&dims)?;
+        let logits = self.decode_step_lit(batch, tokens, positions, &mut lk, &mut lv)?;
+        lk.copy_raw_to(kv_k.as_mut_slice())?;
+        lv.copy_raw_to(kv_v.as_mut_slice())?;
+        Ok(logits)
+    }
+
+    /// Zero-copy variant of [`ModelRuntime::decode_step`]: the KV state
+    /// stays inside PJRT literals across steps — the serve hot path never
+    /// round-trips the cache through host vectors (§Perf).
+    pub fn decode_step_lit(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        positions: &[i32],
+        kv_k: &mut xla::Literal,
+        kv_v: &mut xla::Literal,
+    ) -> Result<Vec<f32>> {
+        let step = self
+            .steps
+            .get(&batch)
+            .with_context(|| format!("no compiled artifact for batch {batch} (have {:?})", self.batch_sizes()))?;
+        let m = &self.manifest.model;
+        if tokens.len() != batch || positions.len() != batch {
+            bail!("tokens/positions must have length {batch}");
+        }
+        let tok = xla::Literal::vec1(tokens);
+        let pos = xla::Literal::vec1(positions);
+        let mut args: Vec<&xla::Literal> = vec![&tok, &pos, kv_k, kv_v];
+        args.extend(self.weights.iter());
+        let result = step.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (logits, new_k, new_v) = result.to_tuple3()?;
+        let logits = logits.to_vec::<f32>()?;
+        if logits.len() != batch * m.vocab {
+            bail!("logits length {} != batch {batch} × vocab {}", logits.len(), m.vocab);
+        }
+        *kv_k = new_k;
+        *kv_v = new_v;
+        Ok(logits)
+    }
+
+    /// Allocate zeroed KV literals for a compiled batch size (pairs with
+    /// [`ModelRuntime::decode_step_lit`]).
+    pub fn new_kv_literals(&self, batch: usize) -> Result<(xla::Literal, xla::Literal)> {
+        let m = &self.manifest.model;
+        let dims = [m.n_layers as i64, batch as i64, m.max_seq as i64, m.kv_dim() as i64];
+        let len = m.n_layers * batch * m.max_seq * m.kv_dim();
+        let zeros = vec![0f32; len];
+        Ok((
+            xla::Literal::vec1(zeros.as_slice()).reshape(&dims)?,
+            xla::Literal::vec1(zeros.as_slice()).reshape(&dims)?,
+        ))
+    }
+
+    /// Allocate zeroed KV buffers for a compiled batch size.
+    pub fn new_kv(&self, batch: usize) -> (Vec<f32>, Vec<f32>) {
+        let m = &self.manifest.model;
+        let len = m.n_layers * batch * m.max_seq * m.kv_dim();
+        (vec![0f32; len], vec![0f32; len])
+    }
+
+    /// Zero one slot's KV lanes (used when a batch slot is recycled; not
+    /// strictly required for correctness — prefill overwrites positions
+    /// before they are read — but keeps state inspection sane).
+    pub fn clear_slot(&self, kv_k: &mut [f32], kv_v: &mut [f32], batch: usize, slot: usize) {
+        let m = &self.manifest.model;
+        let per_slot = m.max_seq * m.kv_dim();
+        for l in 0..m.n_layers {
+            let base = (l * batch + slot) * per_slot;
+            kv_k[base..base + per_slot].fill(0.0);
+            kv_v[base..base + per_slot].fill(0.0);
+        }
+    }
+}
+
+/// Convert the packed-weights TensorFile into PJRT literals in
+/// `weight_args` order.
+fn load_weight_literals(manifest: &Manifest) -> Result<Vec<xla::Literal>> {
+    let tf = TensorFile::load(manifest.weights_path())
+        .with_context(|| format!("loading {}", manifest.weights_path().display()))?;
+    let mut out = Vec::with_capacity(manifest.weight_args.len());
+    for name in &manifest.weight_args {
+        let t = tf.get(name).with_context(|| format!("weights file missing tensor {name}"))?;
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &t.data {
+            TensorData::F32(v) => xla::Literal::vec1(v.as_slice()).reshape(&dims)?,
+            TensorData::I32(v) => xla::Literal::vec1(v.as_slice()).reshape(&dims)?,
+            TensorData::U8(v) => {
+                // Codes are shipped as u8 and widened to i32 for gathers.
+                let widened: Vec<i32> = v.iter().map(|&x| x as i32).collect();
+                xla::Literal::vec1(widened.as_slice()).reshape(&dims)?
+            }
+            TensorData::U16(v) => {
+                // f16 payloads (scales/codebooks) arrive as raw u16 bits;
+                // widen through f32 for the runtime.
+                let widened: Vec<f32> =
+                    v.iter().map(|&bits| crate::util::f16::f16_bits_to_f32(bits)).collect();
+                xla::Literal::vec1(widened.as_slice()).reshape(&dims)?
+            }
+        };
+        out.push(lit);
+    }
+    Ok(out)
+}
+
+/// Smoke-level self test of the PJRT bridge that does not require the
+/// python-built artifacts: build `f(x) = 2x + 1` with the XlaBuilder,
+/// compile on the CPU client, execute, check numbers. Exposed as a
+/// function so the CLI's `doctor` subcommand can run it too.
+pub fn pjrt_self_test() -> Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    let builder = xla::XlaBuilder::new("self_test");
+    let x = builder.parameter_s(0, &xla::Shape::array::<f32>(vec![4]), "x")?;
+    let y = x.add_(&x)?.sqrt()?;
+    let comp = y.build()?;
+    let exe = client.compile(&comp)?;
+    let input = xla::Literal::vec1(&[2f32, 8.0, 18.0, 32.0]);
+    let out = exe.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
+    let vals = out.to_vec::<f32>()?;
+    if vals != vec![2f32, 4.0, 6.0, 8.0] {
+        bail!("PJRT self-test mismatch: {vals:?}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pjrt_cpu_client_works() {
+        pjrt_self_test().unwrap();
+    }
+
+    #[test]
+    fn missing_artifacts_dir_is_a_clear_error() {
+        let msg = match ModelRuntime::load("/nonexistent-artifacts") {
+            Ok(_) => panic!("load should fail"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(msg.contains("make artifacts"), "error should point at make artifacts: {msg}");
+    }
+}

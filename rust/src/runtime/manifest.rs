@@ -1,0 +1,154 @@
+//! The `artifacts/manifest.json` contract between `python/compile/aot.py`
+//! (producer, build time) and the Rust runtime (consumer, serve time).
+
+use crate::config::{ModelConfig, QuantConfig};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    /// e.g. `decode_b4`.
+    pub name: String,
+    /// Batch size the computation was lowered for.
+    pub batch: usize,
+    /// HLO text file, relative to the artifacts dir.
+    pub hlo: String,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelConfig,
+    pub quant: Option<QuantConfig>,
+    /// `fp32` or `codegemm`.
+    pub engine: String,
+    /// Quantized/packed weights container, relative to the artifacts dir.
+    pub weights_file: String,
+    /// Tensor names, in the exact order the decode-step HLO expects them
+    /// *after* the state inputs (tokens, positions, kv_k, kv_v).
+    pub weight_args: Vec<String>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+/// Number of leading state inputs of every decode-step computation:
+/// `tokens i32[B]`, `positions i32[B]`, `kv_k f32[L,B,S,KV]`, `kv_v`.
+pub const N_STATE_INPUTS: usize = 4;
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text)?;
+        Manifest::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: PathBuf, j: &Json) -> Result<Manifest> {
+        let version = j.req_usize("version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let model = ModelConfig::from_json(j.get("model").context("missing model")?)?;
+        let quant = match j.get("quant") {
+            Some(Json::Null) | None => None,
+            Some(q) => Some(QuantConfig::from_json(q)?),
+        };
+        let weight_args = j
+            .req_arr("weight_args")?
+            .iter()
+            .map(|x| x.as_str().map(str::to_string).context("weight_args entries must be strings"))
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = Vec::new();
+        for a in j.req_arr("artifacts")? {
+            artifacts.push(ArtifactSpec {
+                name: a.req_str("name")?.to_string(),
+                batch: a.req_usize("batch")?,
+                hlo: a.req_str("hlo")?.to_string(),
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        Ok(Manifest {
+            dir,
+            model,
+            quant,
+            engine: j.req_str("engine")?.to_string(),
+            weights_file: j.req_str("weights_file")?.to_string(),
+            weight_args,
+            artifacts,
+        })
+    }
+
+    /// Artifact for an exact batch size.
+    pub fn artifact_for_batch(&self, batch: usize) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.batch == batch)
+    }
+
+    /// Smallest compiled batch ≥ `want` (or the largest available).
+    pub fn bucket_for(&self, want: usize) -> &ArtifactSpec {
+        self.artifacts
+            .iter()
+            .filter(|a| a.batch >= want)
+            .min_by_key(|a| a.batch)
+            .unwrap_or_else(|| self.artifacts.iter().max_by_key(|a| a.batch).unwrap())
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join(&self.weights_file)
+    }
+
+    pub fn hlo_path(&self, a: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&a.hlo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{
+              "version": 1,
+              "engine": "codegemm",
+              "model": {"name":"tiny-llama","vocab":256,"hidden":128,"n_layers":2,
+                        "n_heads":4,"n_kv_heads":2,"ffn":352,"max_seq":128,"rope_theta":10000.0},
+              "quant": {"v":4,"m":1,"b":8,"g":128},
+              "weights_file": "weights.q.bin",
+              "weight_args": ["embedding","final_norm"],
+              "artifacts": [
+                {"name":"decode_b1","batch":1,"hlo":"decode_b1.hlo.txt"},
+                {"name":"decode_b4","batch":4,"hlo":"decode_b4.hlo.txt"}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_resolves() {
+        let m = Manifest::from_json(PathBuf::from("/tmp/a"), &sample_json()).unwrap();
+        assert_eq!(m.engine, "codegemm");
+        assert_eq!(m.quant.unwrap().v, 4);
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.artifact_for_batch(4).unwrap().name, "decode_b4");
+        assert_eq!(m.bucket_for(2).batch, 4);
+        assert_eq!(m.bucket_for(3).batch, 4);
+        assert_eq!(m.bucket_for(9).batch, 4); // clamps to largest
+        assert!(m.weights_path().ends_with("weights.q.bin"));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let mut j = sample_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".into(), Json::from(2usize));
+        }
+        assert!(Manifest::from_json(PathBuf::from("/tmp"), &j).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Serve-time runtime: load AOT artifacts (HLO text lowered once by
+//! `python/compile/aot.py`) and execute them through the PJRT C API via
+//! the `xla` crate. Python never runs on the request path — after
+//! `make artifacts` the rust binary is self-contained.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{pjrt_self_test, ModelRuntime};
+pub use manifest::{ArtifactSpec, Manifest, N_STATE_INPUTS};

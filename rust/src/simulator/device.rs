@@ -1,0 +1,108 @@
+//! GPU device specifications used by the analytic model.
+
+/// Static device parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Streaming multiprocessors.
+    pub sms: usize,
+    /// Usable shared memory per SM (bytes).
+    pub smem_per_sm: usize,
+    /// DRAM bandwidth (GB/s).
+    pub dram_gbps: f64,
+    /// Effective fraction of peak DRAM bandwidth a streaming kernel
+    /// achieves in practice.
+    pub dram_efficiency: f64,
+    /// L2 cache (bytes).
+    pub l2_bytes: usize,
+    /// CUDA-core FP32 peak (TFLOPS).
+    pub cuda_tflops: f64,
+    /// Tensor-core FP16 peak (TFLOPS).
+    pub tensor_tflops: f64,
+    /// SM clock (GHz).
+    pub clock_ghz: f64,
+    /// Kernel launch + measurement overhead (µs).
+    pub launch_us: f64,
+    /// Idle board power (W).
+    pub idle_watts: f64,
+    /// Incremental power at full DRAM bandwidth (W).
+    pub dram_watts: f64,
+    /// Incremental power at full SM arithmetic activity (W).
+    pub sm_watts: f64,
+    /// Board power limit (W).
+    pub tdp_watts: f64,
+}
+
+/// NVIDIA A100-SXM4-80GB — the paper's evaluation platform (§4 Setup).
+pub const A100_80GB: DeviceSpec = DeviceSpec {
+    name: "A100-SXM4-80GB",
+    sms: 108,
+    smem_per_sm: 164 * 1024,
+    dram_gbps: 2039.0,
+    dram_efficiency: 0.80,
+    l2_bytes: 40 * 1024 * 1024,
+    cuda_tflops: 19.5,
+    tensor_tflops: 312.0,
+    clock_ghz: 1.41,
+    launch_us: 6.0,
+    idle_watts: 80.0,
+    dram_watts: 300.0,
+    sm_watts: 170.0,
+    tdp_watts: 400.0,
+};
+
+/// NVIDIA H100-SXM5-80GB (used for what-if projections; the paper cites
+/// its 224 KB shared memory when discussing codebook capacity).
+pub const H100_SXM: DeviceSpec = DeviceSpec {
+    name: "H100-SXM5-80GB",
+    sms: 132,
+    smem_per_sm: 224 * 1024,
+    dram_gbps: 3350.0,
+    dram_efficiency: 0.80,
+    l2_bytes: 50 * 1024 * 1024,
+    cuda_tflops: 67.0,
+    tensor_tflops: 989.0,
+    clock_ghz: 1.83,
+    launch_us: 5.0,
+    idle_watts: 90.0,
+    dram_watts: 330.0,
+    sm_watts: 250.0,
+    tdp_watts: 700.0,
+};
+
+impl DeviceSpec {
+    /// Effective DRAM bandwidth in bytes/µs.
+    pub fn dram_bytes_per_us(&self) -> f64 {
+        self.dram_gbps * self.dram_efficiency * 1e9 / 1e6
+    }
+
+    /// Time (µs) to stream `bytes` at effective DRAM bandwidth.
+    pub fn stream_us(&self, bytes: f64) -> f64 {
+        bytes / self.dram_bytes_per_us()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_matches_paper_citations() {
+        // §2.3: "A100 (164KB)" shared memory; the 1 MB AQLM-1×16 codebook
+        // must not fit.
+        assert_eq!(A100_80GB.smem_per_sm, 164 * 1024);
+        let codebook_1x16 = (1usize << 16) * 8 * 2; // 2^16 centroids × v=8 × fp16
+        assert_eq!(codebook_1x16, 1024 * 1024);
+        assert!(codebook_1x16 > A100_80GB.smem_per_sm);
+        // H100 (224KB) also cannot hold it — §2.3.
+        assert!(codebook_1x16 > H100_SXM.smem_per_sm);
+    }
+
+    #[test]
+    fn stream_time_sane() {
+        // 470 MB at ~1631 GB/s effective ≈ 288 µs (the cuBLAS fp16 weight
+        // stream for N=28672, K=8192 — paper Table 10 shows ~298 µs).
+        let t = A100_80GB.stream_us(2.0 * 28672.0 * 8192.0);
+        assert!((t - 288.0).abs() < 5.0, "t={t}");
+    }
+}

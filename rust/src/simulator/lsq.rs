@@ -1,0 +1,183 @@
+//! Small dense least-squares solver with non-negativity projection.
+//!
+//! The analytic model fits ≤6 coefficients to a few dozen published
+//! measurements, so normal equations + Gaussian elimination with partial
+//! pivoting are ample. Non-negativity (a latency model must not have
+//! negative cost components) is enforced by iterative clamping: negative
+//! coefficients are pinned to zero and the reduced system is refit.
+
+/// Solve `A x = b` for square `A` (row-major, n×n) with partial pivoting.
+/// Returns `None` if singular.
+pub fn solve_square(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    let mut m = a.to_vec();
+    let mut rhs = b.to_vec();
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        for r in col + 1..n {
+            if m[r * n + col].abs() > m[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if m[piv * n + col].abs() < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for c in 0..n {
+                m.swap(col * n + c, piv * n + c);
+            }
+            rhs.swap(col, piv);
+        }
+        // Eliminate.
+        let d = m[col * n + col];
+        for r in col + 1..n {
+            let f = m[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                m[r * n + c] -= f * m[col * n + c];
+            }
+            rhs[r] -= f * rhs[col];
+        }
+    }
+    // Back-substitute.
+    let mut x = vec![0f64; n];
+    for col in (0..n).rev() {
+        let mut acc = rhs[col];
+        for c in col + 1..n {
+            acc -= m[col * n + c] * x[c];
+        }
+        x[col] = acc / m[col * n + col];
+    }
+    Some(x)
+}
+
+/// Ordinary least squares: rows of `features` (each length `dim`) against
+/// `targets`. Ridge-damped (`lambda`) for conditioning.
+pub fn least_squares(features: &[Vec<f64>], targets: &[f64], dim: usize, lambda: f64) -> Option<Vec<f64>> {
+    assert_eq!(features.len(), targets.len());
+    let mut ata = vec![0f64; dim * dim];
+    let mut atb = vec![0f64; dim];
+    for (f, &y) in features.iter().zip(targets) {
+        assert_eq!(f.len(), dim);
+        for i in 0..dim {
+            atb[i] += f[i] * y;
+            for j in 0..dim {
+                ata[i * dim + j] += f[i] * f[j];
+            }
+        }
+    }
+    for i in 0..dim {
+        ata[i * dim + i] += lambda;
+    }
+    solve_square(&ata, &atb, dim)
+}
+
+/// Non-negative least squares by iterative clamping (projected refit).
+/// Good enough for well-posed low-dimensional latency fits.
+pub fn nnls(features: &[Vec<f64>], targets: &[f64], dim: usize, lambda: f64) -> Vec<f64> {
+    // Floor the ridge so collinear feature sets (common when one feature
+    // is a multiple of another for a method family) stay solvable.
+    let lambda = lambda.max(1e-6);
+    let mut active: Vec<bool> = vec![true; dim]; // coefficient is free
+    for _ in 0..dim + 1 {
+        // Build reduced system over free coefficients.
+        let free: Vec<usize> = (0..dim).filter(|&i| active[i]).collect();
+        if free.is_empty() {
+            return vec![0.0; dim];
+        }
+        let reduced: Vec<Vec<f64>> = features
+            .iter()
+            .map(|f| free.iter().map(|&i| f[i]).collect::<Vec<f64>>())
+            .collect();
+        let sol = match least_squares(&reduced, targets, free.len(), lambda) {
+            Some(s) => s,
+            None => return vec![0.0; dim],
+        };
+        let mut any_negative = false;
+        for (idx, &i) in free.iter().enumerate() {
+            if sol[idx] < 0.0 {
+                active[i] = false;
+                any_negative = true;
+            }
+        }
+        if !any_negative {
+            let mut full = vec![0f64; dim];
+            for (idx, &i) in free.iter().enumerate() {
+                full[i] = sol[idx];
+            }
+            return full;
+        }
+    }
+    vec![0.0; dim]
+}
+
+/// Root-mean-square relative error of a fit (diagnostics/tests).
+pub fn rel_rmse(features: &[Vec<f64>], targets: &[f64], coef: &[f64]) -> f64 {
+    let mut acc = 0f64;
+    for (f, &y) in features.iter().zip(targets) {
+        let pred: f64 = f.iter().zip(coef).map(|(a, b)| a * b).sum();
+        let rel = (pred - y) / y.max(1e-9);
+        acc += rel * rel;
+    }
+    (acc / targets.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![3.0, 4.0];
+        assert_eq!(solve_square(&a, &b, 2).unwrap(), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn solves_with_pivoting() {
+        // Requires a row swap: [[0,1],[1,0]] x = [2,5] -> x=[5,2]
+        let a = vec![0.0, 1.0, 1.0, 0.0];
+        let x = solve_square(&a, &[2.0, 5.0], 2).unwrap();
+        assert!((x[0] - 5.0).abs() < 1e-12 && (x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        let a = vec![1.0, 2.0, 2.0, 4.0];
+        assert!(solve_square(&a, &[1.0, 2.0], 2).is_none());
+    }
+
+    #[test]
+    fn ols_recovers_exact_linear_model() {
+        // y = 2 + 3 f1
+        let feats: Vec<Vec<f64>> = (0..10).map(|i| vec![1.0, i as f64]).collect();
+        let ys: Vec<f64> = (0..10).map(|i| 2.0 + 3.0 * i as f64).collect();
+        let c = least_squares(&feats, &ys, 2, 0.0).unwrap();
+        assert!((c[0] - 2.0).abs() < 1e-9 && (c[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nnls_clamps_negative_component() {
+        // Best unconstrained fit would give a negative coefficient on f1;
+        // NNLS must pin it to 0 and still fit the rest.
+        let feats: Vec<Vec<f64>> = (0..20)
+            .map(|i| vec![1.0, i as f64, (20 - i) as f64])
+            .collect();
+        let ys: Vec<f64> = (0..20).map(|i| 5.0 + 2.0 * (20 - i) as f64).collect();
+        let c = nnls(&feats, &ys, 3, 0.0);
+        assert!(c.iter().all(|&x| x >= 0.0), "{c:?}");
+        assert!(rel_rmse(&feats, &ys, &c) < 0.05);
+    }
+
+    #[test]
+    fn rel_rmse_zero_for_perfect() {
+        let feats = vec![vec![1.0, 2.0], vec![1.0, 3.0]];
+        let ys = vec![5.0, 7.0];
+        let c = vec![1.0, 2.0];
+        assert!(rel_rmse(&feats, &ys, &c) < 1e-12);
+    }
+}

@@ -1,0 +1,254 @@
+//! Tiny declarative CLI argument parser (offline stand-in for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, typed accessors with defaults, and auto-generated help.
+
+use std::collections::BTreeMap;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// A declarative command parser.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    name: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>, // (name, help)
+}
+
+/// Parse results.
+#[derive(Clone, Debug, Default)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pos: Vec<String>,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Command { name: name.into(), about: about.into(), ..Default::default() }
+    }
+
+    /// Boolean flag (`--name`).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec { name: name.into(), help: help.into(), takes_value: false, default: None });
+        self
+    }
+
+    /// Valued option (`--name VALUE`), optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: true,
+            default: default.map(str::to_string),
+        });
+        self
+    }
+
+    /// Positional argument (collected in order).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.into(), help.into()));
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        if !self.opts.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        s.push('\n');
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let head = if o.takes_value {
+                    format!("--{} <VAL>", o.name)
+                } else {
+                    format!("--{}", o.name)
+                };
+                let def = o.default.as_deref().map(|d| format!(" [default: {d}]")).unwrap_or_default();
+                s.push_str(&format!("  {head:24} {}{def}\n", o.help));
+            }
+        }
+        s
+    }
+
+    /// Parse a raw argv slice (not including the program/subcommand name).
+    pub fn parse(&self, args: &[String]) -> anyhow::Result<Matches> {
+        let mut m = Matches::default();
+        for spec in &self.opts {
+            if let Some(d) = &spec.default {
+                m.values.insert(spec.name.clone(), d.clone());
+            }
+            if !spec.takes_value {
+                m.flags.insert(spec.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                anyhow::bail!("{}", self.help());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n\n{}", self.help()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{key} requires a value"))?
+                        }
+                    };
+                    m.values.insert(key, val);
+                } else {
+                    if inline_val.is_some() {
+                        anyhow::bail!("--{key} does not take a value");
+                    }
+                    m.flags.insert(key, true);
+                }
+            } else {
+                m.pos.push(a.clone());
+            }
+            i += 1;
+        }
+        if m.pos.len() < self.positionals.len() {
+            anyhow::bail!(
+                "missing positional <{}>\n\n{}",
+                self.positionals[m.pos.len()].0,
+                self.help()
+            );
+        }
+        Ok(m)
+    }
+}
+
+impl Matches {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn str(&self, name: &str) -> anyhow::Result<&str> {
+        self.get(name).ok_or_else(|| anyhow::anyhow!("missing --{name}"))
+    }
+
+    pub fn usize(&self, name: &str) -> anyhow::Result<usize> {
+        Ok(self.str(name)?.parse::<usize>().map_err(|e| anyhow::anyhow!("--{name}: {e}"))?)
+    }
+
+    pub fn i64(&self, name: &str) -> anyhow::Result<i64> {
+        Ok(self.str(name)?.parse::<i64>().map_err(|e| anyhow::anyhow!("--{name}: {e}"))?)
+    }
+
+    pub fn f64(&self, name: &str) -> anyhow::Result<f64> {
+        Ok(self.str(name)?.parse::<f64>().map_err(|e| anyhow::anyhow!("--{name}: {e}"))?)
+    }
+
+    /// Comma-separated usize list, e.g. `--batch-sizes 1,4,8`.
+    pub fn usize_list(&self, name: &str) -> anyhow::Result<Vec<usize>> {
+        self.str(name)?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow::anyhow!("--{name}: {e}")))
+            .collect()
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.pos.get(idx).map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("t", "test cmd")
+            .flag("verbose", "talk more")
+            .opt("n", Some("4"), "count")
+            .opt("name", None, "label")
+            .positional("input", "input file")
+    }
+
+    #[test]
+    fn parses_flags_values_positionals() {
+        let m = cmd().parse(&args(&["--verbose", "--n", "9", "file.txt", "--name=x"])).unwrap();
+        assert!(m.flag("verbose"));
+        assert_eq!(m.usize("n").unwrap(), 9);
+        assert_eq!(m.str("name").unwrap(), "x");
+        assert_eq!(m.positional(0), Some("file.txt"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = cmd().parse(&args(&["f"])).unwrap();
+        assert_eq!(m.usize("n").unwrap(), 4);
+        assert!(!m.flag("verbose"));
+        assert!(m.get("name").is_none());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&args(&["--bogus", "f"])).is_err());
+    }
+
+    #[test]
+    fn missing_positional_errors() {
+        assert!(cmd().parse(&args(&[])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cmd().parse(&args(&["f", "--n"])).is_err());
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let c = Command::new("t", "").opt("bs", Some("1,4,8"), "");
+        let m = c.parse(&args(&[])).unwrap();
+        assert_eq!(m.usize_list("bs").unwrap(), vec![1, 4, 8]);
+    }
+
+    #[test]
+    fn help_contains_options() {
+        let h = cmd().help();
+        assert!(h.contains("--verbose"));
+        assert!(h.contains("[default: 4]"));
+        assert!(h.contains("<input>"));
+    }
+}

@@ -1,0 +1,167 @@
+//! IEEE-754 binary16 conversion.
+//!
+//! The paper stores codebooks, scales, and activations in FP16. The CPU
+//! engines compute in f32 but *round every stored value through the f16
+//! grid* so quantization error matches what the GPU kernels would see.
+//! No `half` crate offline, so the conversions are implemented directly.
+
+/// Convert f32 -> f16 bit pattern (round-to-nearest-even, with proper
+/// handling of subnormals, infinities and NaN).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+
+    // Unbiased exponent, re-biased for f16.
+    let unbiased = exp - 127;
+    let f16_exp = unbiased + 15;
+
+    if f16_exp >= 0x1F {
+        // Overflow -> infinity
+        return sign | 0x7C00;
+    }
+    if f16_exp <= 0 {
+        // Subnormal or underflow to zero.
+        if f16_exp < -10 {
+            return sign; // rounds to +-0
+        }
+        // Add implicit leading 1, shift into subnormal position.
+        let mant = mant | 0x0080_0000;
+        let shift = 14 - f16_exp; // in [14, 24]
+        let half = 1u32 << (shift - 1);
+        let rounded = mant + (half - 1) + ((mant >> shift) & 1);
+        return sign | (rounded >> shift) as u16;
+    }
+
+    // Normal: round mantissa from 23 to 10 bits (RNE).
+    let half = 0x0000_1000u32; // 1 << 12
+    let rounded = mant + (half - 1) + ((mant >> 13) & 1);
+    if rounded & 0x0080_0000 != 0 {
+        // Mantissa overflowed into the exponent.
+        let f16_exp = f16_exp + 1;
+        if f16_exp >= 0x1F {
+            return sign | 0x7C00;
+        }
+        return sign | ((f16_exp as u16) << 10);
+    }
+    sign | ((f16_exp as u16) << 10) | (rounded >> 13) as u16
+}
+
+/// Convert f16 bit pattern -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal: normalize.
+            let mut exp = 127 - 15 + 1;
+            let mut mant = mant;
+            while mant & 0x0400 == 0 {
+                mant <<= 1;
+                exp -= 1;
+            }
+            sign | ((exp as u32) << 23) | ((mant & 0x03FF) << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 value through the f16 grid (the storage precision of
+/// codebooks/scales in the paper's format).
+#[inline]
+pub fn round_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Round a whole slice in place through the f16 grid.
+pub fn round_f16_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = round_f16(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_roundtrip() {
+        for i in -2048..=2048 {
+            let x = i as f32;
+            assert_eq!(round_f16(x), x, "{i} should be exact in f16");
+        }
+    }
+
+    #[test]
+    fn halves_roundtrip() {
+        for i in -100..100 {
+            let x = i as f32 + 0.5;
+            assert_eq!(round_f16(x), x);
+        }
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert!(round_f16(70000.0).is_infinite());
+        assert!(round_f16(-70000.0).is_infinite());
+        assert_eq!(round_f16(65504.0), 65504.0); // f16 max
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(round_f16(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn subnormals() {
+        let tiny = 5.96e-8; // smallest positive f16 subnormal ~5.96e-8
+        let r = round_f16(tiny);
+        assert!(r > 0.0 && r < 1e-7);
+        assert_eq!(round_f16(1e-12), 0.0); // underflow
+    }
+
+    #[test]
+    fn signed_zero() {
+        assert_eq!(round_f16(-0.0).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(round_f16(0.0).to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn relative_error_bounded_for_normals() {
+        // f16 has 11 significand bits -> rel err <= 2^-11.
+        let mut state = 12345u64;
+        for _ in 0..10_000 {
+            let r = crate::util::prng::splitmix64(&mut state);
+            let x = ((r >> 40) as f32 / (1u64 << 24) as f32 - 0.5) * 100.0;
+            if x.abs() < 1e-3 {
+                continue;
+            }
+            let y = round_f16(x);
+            assert!(((y - x) / x).abs() <= 1.0 / 2048.0 + 1e-7, "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn bit_exact_against_reference_cases() {
+        // Spot values cross-checked against numpy float16.
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(0.5), 0x3800);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF);
+        assert_eq!(f16_bits_to_f32(0x3555), 0.33325195);
+    }
+}

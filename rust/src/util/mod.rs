@@ -1,0 +1,15 @@
+//! Substrate utilities built from scratch (the build environment is fully
+//! offline, so the usual ecosystem crates — `rand`, `serde`, `clap`,
+//! `rayon`, `criterion`, `proptest` — are replaced by small, tested,
+//! purpose-built implementations).
+
+pub mod argparse;
+pub mod f16;
+pub mod json;
+pub mod npy;
+pub mod proptest;
+pub mod prng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+pub mod timer;

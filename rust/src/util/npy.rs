@@ -1,0 +1,360 @@
+//! CGTF tensor-container file I/O.
+//!
+//! `weights.bin` interchange format between the Python compile path
+//! (`python/compile/export.py`) and the Rust runtime. Layout:
+//!
+//! ```text
+//! [ 8 bytes magic "CGTF0001" ]
+//! [ u64 LE: header JSON length ]
+//! [ header JSON: {"tensors": [{name, dtype, shape, offset, nbytes}, ...]} ]
+//! [ raw little-endian tensor data, offsets relative to data start ]
+//! ```
+//!
+//! Supported dtypes: `f32`, `i32`, `u8`, `u16`. All multi-byte values are
+//! little-endian (both sides are x86-64/LE here; the reader still goes
+//! through explicit `from_le_bytes` so big-endian hosts would work).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"CGTF0001";
+
+/// Element type of a stored tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+    U16,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+            DType::U16 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U8 => "u8",
+            DType::U16 => "u16",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" | "float32" => DType::F32,
+            "i32" | "int32" => DType::I32,
+            "u8" | "uint8" => DType::U8,
+            "u16" | "uint16" => DType::U16,
+            other => bail!("unsupported dtype '{other}'"),
+        })
+    }
+}
+
+/// Typed tensor payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+    U16(Vec<u16>),
+}
+
+impl TensorData {
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+            TensorData::U8(_) => DType::U8,
+            TensorData::U16(_) => DType::U16,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::U8(v) => v.len(),
+            TensorData::U16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorData::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            TensorData::I32(v) => Ok(v),
+            other => bail!("expected i32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match self {
+            TensorData::U8(v) => Ok(v),
+            other => bail!("expected u8 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    fn to_le_bytes(&self) -> Vec<u8> {
+        match self {
+            TensorData::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            TensorData::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            TensorData::U8(v) => v.clone(),
+            TensorData::U16(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        }
+    }
+
+    fn from_le_bytes(dtype: DType, bytes: &[u8]) -> Result<TensorData> {
+        if bytes.len() % dtype.size() != 0 {
+            bail!("byte length {} not divisible by element size {}", bytes.len(), dtype.size());
+        }
+        Ok(match dtype {
+            DType::F32 => TensorData::F32(
+                bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            DType::I32 => TensorData::I32(
+                bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            DType::U8 => TensorData::U8(bytes.to_vec()),
+            DType::U16 => TensorData::U16(
+                bytes.chunks_exact(2).map(|c| u16::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+        })
+    }
+}
+
+/// A named, shaped tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(name: &str, shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        Tensor { name: name.into(), shape, data: TensorData::F32(data) }
+    }
+
+    pub fn u8(name: &str, shape: Vec<usize>, data: Vec<u8>) -> Tensor {
+        Tensor { name: name.into(), shape, data: TensorData::U8(data) }
+    }
+
+    pub fn i32(name: &str, shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        Tensor { name: name.into(), shape, data: TensorData::I32(data) }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.numel() != self.data.len() {
+            bail!(
+                "tensor '{}': shape {:?} (numel {}) != data len {}",
+                self.name,
+                self.shape,
+                self.numel(),
+                self.data.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// An ordered collection of named tensors.
+#[derive(Clone, Debug, Default)]
+pub struct TensorFile {
+    pub tensors: Vec<Tensor>,
+}
+
+impl TensorFile {
+    pub fn new() -> TensorFile {
+        TensorFile::default()
+    }
+
+    pub fn push(&mut self, t: Tensor) {
+        self.tensors.push(t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| anyhow!("tensor '{name}' not found (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.iter().map(|t| t.name.as_str()).collect()
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut entries = Vec::new();
+        let mut data = Vec::new();
+        let mut seen = BTreeMap::new();
+        for t in &self.tensors {
+            t.validate()?;
+            if seen.insert(t.name.clone(), ()).is_some() {
+                bail!("duplicate tensor name '{}'", t.name);
+            }
+            let bytes = t.data.to_le_bytes();
+            entries.push(Json::obj(vec![
+                ("name", Json::Str(t.name.clone())),
+                ("dtype", Json::Str(t.data.dtype().name().into())),
+                ("shape", Json::Arr(t.shape.iter().map(|&s| Json::from(s)).collect())),
+                ("offset", Json::from(data.len())),
+                ("nbytes", Json::from(bytes.len())),
+            ]));
+            data.extend_from_slice(&bytes);
+        }
+        let header = Json::obj(vec![("tensors", Json::Arr(entries))]).to_string_compact();
+        let mut out = Vec::with_capacity(16 + header.len() + data.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&data);
+        Ok(out)
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<TensorFile> {
+        if bytes.len() < 16 || &bytes[..8] != MAGIC {
+            bail!("not a CGTF file (bad magic)");
+        }
+        let hlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let header_end = 16 + hlen;
+        if bytes.len() < header_end {
+            bail!("truncated header");
+        }
+        let header = Json::parse(std::str::from_utf8(&bytes[16..header_end])?)?;
+        let data = &bytes[header_end..];
+        let mut tf = TensorFile::new();
+        for e in header.req_arr("tensors")? {
+            let name = e.req_str("name")?.to_string();
+            let dtype = DType::from_name(e.req_str("dtype")?)?;
+            let shape = e
+                .get("shape")
+                .ok_or_else(|| anyhow!("missing shape"))?
+                .usize_vec()?;
+            let offset = e.req_usize("offset")?;
+            let nbytes = e.req_usize("nbytes")?;
+            if offset + nbytes > data.len() {
+                bail!("tensor '{name}' extends past end of data section");
+            }
+            let td = TensorData::from_le_bytes(dtype, &data[offset..offset + nbytes])?;
+            let t = Tensor { name, shape, data: td };
+            t.validate()?;
+            tf.push(t);
+        }
+        Ok(tf)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let bytes = self.to_bytes()?;
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<TensorFile> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {}", path.as_ref().display()))?;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes)?;
+        TensorFile::from_bytes(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TensorFile {
+        let mut tf = TensorFile::new();
+        tf.push(Tensor::f32("w", vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.0]));
+        tf.push(Tensor::u8("codes", vec![4], vec![0, 255, 7, 8]));
+        tf.push(Tensor::i32("shape_info", vec![2], vec![-1, 1024]));
+        tf
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let tf = sample();
+        let bytes = tf.to_bytes().unwrap();
+        let back = TensorFile::from_bytes(&bytes).unwrap();
+        assert_eq!(back.tensors, tf.tensors);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let tf = sample();
+        let path = std::env::temp_dir().join("cgtf_test.bin");
+        tf.save(&path).unwrap();
+        let back = TensorFile::load(&path).unwrap();
+        assert_eq!(back.tensors, tf.tensors);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn get_by_name() {
+        let tf = sample();
+        assert_eq!(tf.get("codes").unwrap().data.as_u8().unwrap(), &[0, 255, 7, 8]);
+        assert!(tf.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(TensorFile::from_bytes(b"XXXX00010000000000000000").is_err());
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let mut tf = TensorFile::new();
+        tf.push(Tensor::f32("bad", vec![3], vec![1.0]));
+        assert!(tf.to_bytes().is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let mut tf = TensorFile::new();
+        tf.push(Tensor::f32("a", vec![1], vec![1.0]));
+        tf.push(Tensor::f32("a", vec![1], vec![2.0]));
+        assert!(tf.to_bytes().is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_data() {
+        let tf = sample();
+        let mut bytes = tf.to_bytes().unwrap();
+        bytes.truncate(bytes.len() - 4);
+        assert!(TensorFile::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn dtype_roundtrip_names() {
+        for d in [DType::F32, DType::I32, DType::U8, DType::U16] {
+            assert_eq!(DType::from_name(d.name()).unwrap(), d);
+        }
+        assert!(DType::from_name("f64").is_err());
+    }
+}

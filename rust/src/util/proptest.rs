@@ -1,0 +1,220 @@
+//! Minimal property-based testing framework (offline stand-in for
+//! `proptest`). Runs a property over `cases` random inputs drawn from a
+//! generator; on failure it attempts greedy shrinking via user-provided
+//! simplification and reports the minimal counterexample with the seed.
+
+use crate::util::prng::Prng;
+
+/// A generator of random values for property tests.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Prng) -> T;
+    /// Candidate simplifications of a failing value (smaller first).
+    fn shrink(&self, _value: &T) -> Vec<T> {
+        Vec::new()
+    }
+}
+
+/// Generator from closures.
+pub struct FnGen<T, G: Fn(&mut Prng) -> T, S: Fn(&T) -> Vec<T>> {
+    pub gen: G,
+    pub shrinker: S,
+}
+
+impl<T, G: Fn(&mut Prng) -> T, S: Fn(&T) -> Vec<T>> Gen<T> for FnGen<T, G, S> {
+    fn generate(&self, rng: &mut Prng) -> T {
+        (self.gen)(rng)
+    }
+    fn shrink(&self, value: &T) -> Vec<T> {
+        (self.shrinker)(value)
+    }
+}
+
+/// Build a generator from a closure with no shrinking.
+pub fn gen_fn<T>(f: impl Fn(&mut Prng) -> T) -> impl Gen<T> {
+    FnGen { gen: f, shrinker: |_: &T| Vec::new() }
+}
+
+/// Uniform usize in `[lo, hi]` with halving shrink toward `lo`.
+pub fn usize_in(lo: usize, hi: usize) -> impl Gen<usize> {
+    assert!(lo <= hi);
+    FnGen {
+        gen: move |rng: &mut Prng| lo + rng.index(hi - lo + 1),
+        shrinker: move |v: &usize| {
+            let mut c = Vec::new();
+            if *v > lo {
+                c.push(lo);
+                let mid = lo + (*v - lo) / 2;
+                if mid != lo && mid != *v {
+                    c.push(mid);
+                }
+                if *v - 1 != lo {
+                    c.push(*v - 1);
+                }
+            }
+            c
+        },
+    }
+}
+
+/// Vec of f32 normals with length in `[min_len, max_len]`; shrinks by
+/// halving length and zeroing elements.
+pub fn f32_vec(min_len: usize, max_len: usize, std: f32) -> impl Gen<Vec<f32>> {
+    FnGen {
+        gen: move |rng: &mut Prng| {
+            let n = min_len + rng.index(max_len - min_len + 1);
+            rng.normal_vec(n, std)
+        },
+        shrinker: move |v: &Vec<f32>| {
+            let mut c = Vec::new();
+            if v.len() > min_len {
+                let half = (v.len() / 2).max(min_len);
+                c.push(v[..half].to_vec());
+            }
+            if v.iter().any(|x| *x != 0.0) {
+                c.push(vec![0.0; v.len()]);
+            }
+            c
+        },
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult<T> {
+    Pass { cases: usize },
+    Fail { seed: u64, original: T, minimal: T, message: String },
+}
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0DE_6E44, max_shrink_steps: 200 }
+    }
+}
+
+/// Run `prop` on `cfg.cases` random inputs. `prop` returns `Err(msg)` to
+/// signal failure (assert-style helpers below).
+pub fn check<T: Clone>(
+    cfg: PropConfig,
+    gen: &impl Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> PropResult<T> {
+    let mut rng = Prng::seeded(cfg.seed);
+    for case in 0..cfg.cases {
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Greedy shrink.
+            let mut best = value.clone();
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in gen.shrink(&best) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            let _ = case;
+            return PropResult::Fail { seed: cfg.seed, original: value, minimal: best, message: best_msg };
+        }
+    }
+    PropResult::Pass { cases: cfg.cases }
+}
+
+/// Assert wrapper: panics with a readable report on failure. Use inside
+/// `#[test]` functions.
+pub fn assert_prop<T: Clone + std::fmt::Debug>(
+    name: &str,
+    cfg: PropConfig,
+    gen: &impl Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    match check(cfg, gen, prop) {
+        PropResult::Pass { .. } => {}
+        PropResult::Fail { seed, original, minimal, message } => {
+            panic!(
+                "property '{name}' failed (seed={seed:#x})\n  message: {message}\n  original: {original:?}\n  minimal:  {minimal:?}"
+            );
+        }
+    }
+}
+
+/// Property helper: check a boolean with a message.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Property helper: approximate equality.
+pub fn ensure_close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let g = usize_in(0, 100);
+        match check(PropConfig::default(), &g, |v| ensure(*v <= 100, "range")) {
+            PropResult::Pass { cases } => assert_eq!(cases, 64),
+            PropResult::Fail { .. } => panic!("should pass"),
+        }
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        // Fails for v >= 10; minimal counterexample by our shrinker should
+        // be small (close to 10).
+        let g = usize_in(0, 1000);
+        match check(PropConfig { cases: 200, ..Default::default() }, &g, |v| ensure(*v < 10, "v<10")) {
+            PropResult::Fail { minimal, .. } => assert!(minimal >= 10 && minimal <= 20, "minimal={minimal}"),
+            PropResult::Pass { .. } => panic!("should fail"),
+        }
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = f32_vec(2, 8, 1.0);
+        let mut rng = Prng::seeded(1);
+        for _ in 0..100 {
+            let v = g.generate(&mut rng);
+            assert!((2..=8).contains(&v.len()));
+        }
+    }
+
+    #[test]
+    fn ensure_close_tolerance() {
+        assert!(ensure_close(1.0, 1.0 + 1e-9, 1e-6).is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-6).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'demo' failed")]
+    fn assert_prop_panics_with_report() {
+        let g = usize_in(0, 10);
+        assert_prop("demo", PropConfig::default(), &g, |v| ensure(*v > 100, "impossible"));
+    }
+}

@@ -1,0 +1,229 @@
+//! ASCII / Markdown table rendering for paper-style output.
+//!
+//! Every bench target prints its table through this module so the rows can
+//! be compared side-by-side with the paper's tables.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder.
+#[derive(Clone, Debug)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+                .collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Table {
+        self.aligns[col] = a;
+        self
+    }
+
+    /// Add a row of pre-formatted cells.
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Add a row from &str cells.
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        self.row(cells.iter().map(|s| s.to_string()).collect())
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    fn fmt_cell(cell: &str, width: usize, align: Align) -> String {
+        let pad = width.saturating_sub(cell.chars().count());
+        match align {
+            Align::Left => format!("{cell}{}", " ".repeat(pad)),
+            Align::Right => format!("{}{cell}", " ".repeat(pad)),
+        }
+    }
+
+    /// Render as a box-drawn ASCII table.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let sep: String = {
+            let mut s = String::from("+");
+            for wi in &w {
+                s.push_str(&"-".repeat(wi + 2));
+                s.push('+');
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("{}\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push('|');
+        for (i, h) in self.headers.iter().enumerate() {
+            out.push_str(&format!(" {} |", Self::fmt_cell(h, w[i], Align::Left)));
+        }
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push('|');
+            for (i, c) in r.iter().enumerate() {
+                out.push_str(&format!(" {} |", Self::fmt_cell(c, w[i], self.aligns[i])));
+            }
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// Render as GitHub-flavoured Markdown.
+    pub fn render_markdown(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("**{}**\n\n", self.title));
+        }
+        out.push('|');
+        for (i, h) in self.headers.iter().enumerate() {
+            out.push_str(&format!(" {} |", Self::fmt_cell(h, w[i], Align::Left)));
+        }
+        out.push('\n');
+        out.push('|');
+        for (i, wi) in w.iter().enumerate() {
+            let dashes = "-".repeat(*wi);
+            match self.aligns[i] {
+                Align::Left => out.push_str(&format!(" {dashes} |")),
+                Align::Right => out.push_str(&format!(" {dashes}:|")),
+            }
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push('|');
+            for (i, c) in r.iter().enumerate() {
+                out.push_str(&format!(" {} |", Self::fmt_cell(c, w[i], self.aligns[i])));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render rows as CSV (headers included) for downstream plotting.
+    pub fn render_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for r in &self.rows {
+            let esc: Vec<String> = r
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            out.push_str(&esc.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with `prec` decimals.
+pub fn fnum(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+/// Format microseconds adaptively.
+pub fn fus(us: f64) -> String {
+    if us >= 10_000.0 {
+        format!("{:.1}", us)
+    } else if us >= 100.0 {
+        format!("{:.2}", us)
+    } else {
+        format!("{:.2}", us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Title", &["name", "val"]);
+        t.row_str(&["alpha", "1.5"]);
+        t.row_str(&["b", "22"]);
+        t
+    }
+
+    #[test]
+    fn render_contains_cells_and_title() {
+        let s = sample().render();
+        assert!(s.contains("Title"));
+        assert!(s.contains("alpha"));
+        assert!(s.contains("22"));
+        assert!(s.starts_with("Title\n+"));
+    }
+
+    #[test]
+    fn markdown_has_alignment_row() {
+        let s = sample().render_markdown();
+        assert!(s.contains("|"));
+        assert!(s.contains(":-") || s.contains("-:")); // right-aligned marker
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("", &["a"]);
+        t.row_str(&["x,y"]);
+        assert!(t.render_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn widths_accommodate_long_rows() {
+        let mut t = Table::new("", &["h"]);
+        t.row_str(&["a-very-long-cell"]);
+        let line = t.render().lines().nth(1).unwrap().to_string();
+        assert!(line.len() >= "a-very-long-cell".len());
+    }
+}

@@ -1,0 +1,143 @@
+//! Fixed-size worker thread pool (offline stand-in for `rayon`/`tokio`).
+//!
+//! Drives the coordinator's request execution and parallel parameter
+//! sweeps. Scoped `parallel_map` keeps the API simple and safe.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads consuming a shared queue.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    handles: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (minimum 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("codegemm-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx, handles, size }
+    }
+
+    /// Pool sized to available parallelism.
+    pub fn default_size() -> ThreadPool {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget job submission.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx.send(Msg::Run(Box::new(job))).expect("pool alive");
+    }
+
+    /// Apply `f` to each item, preserving order, using the pool.
+    pub fn parallel_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.submit(move || {
+                let r = f(item);
+                let _ = rtx.send((i, r));
+            });
+        }
+        drop(rtx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rrx.recv().expect("worker result");
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_submitted_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins workers
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.parallel_map((0..100).collect(), |x: usize| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.parallel_map(Vec::<usize>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn minimum_one_worker() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let out = pool.parallel_map(vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+}

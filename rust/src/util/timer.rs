@@ -1,0 +1,135 @@
+//! Wall-clock timing helpers for the bench harness and the coordinator's
+//! metrics. `Instant`-based; monotonic.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+#[derive(Clone, Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_s() * 1e6
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_s())
+}
+
+/// Accumulating phase timer: attribute wall time to named phases. Used by
+/// the CodeGEMM engine to reproduce the paper's Table 6 build/read split.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimer {
+    phases: Vec<(String, f64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> PhaseTimer {
+        PhaseTimer::default()
+    }
+
+    pub fn add(&mut self, phase: &str, seconds: f64) {
+        if let Some(e) = self.phases.iter_mut().find(|(n, _)| n == phase) {
+            e.1 += seconds;
+        } else {
+            self.phases.push((phase.to_string(), seconds));
+        }
+    }
+
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let (out, s) = time(f);
+        self.add(phase, s);
+        out
+    }
+
+    pub fn total(&self) -> f64 {
+        self.phases.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn seconds(&self, phase: &str) -> f64 {
+        self.phases.iter().find(|(n, _)| n == phase).map(|(_, s)| *s).unwrap_or(0.0)
+    }
+
+    /// Fraction of total time spent in `phase` (0 if no time recorded).
+    pub fn share(&self, phase: &str) -> f64 {
+        let t = self.total();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.seconds(phase) / t
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.phases.clear();
+    }
+
+    pub fn phases(&self) -> &[(String, f64)] {
+        &self.phases
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        let a = t.elapsed_s();
+        let b = t.elapsed_s();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn time_returns_result() {
+        let (x, s) = time(|| 41 + 1);
+        assert_eq!(x, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut p = PhaseTimer::new();
+        p.add("build", 1.0);
+        p.add("read", 3.0);
+        p.add("build", 1.0);
+        assert_eq!(p.seconds("build"), 2.0);
+        assert_eq!(p.total(), 5.0);
+        assert!((p.share("build") - 0.4).abs() < 1e-12);
+        assert_eq!(p.share("missing"), 0.0);
+    }
+
+    #[test]
+    fn phase_timer_time_closure() {
+        let mut p = PhaseTimer::new();
+        let v = p.time("work", || 7);
+        assert_eq!(v, 7);
+        assert!(p.seconds("work") >= 0.0);
+        p.clear();
+        assert_eq!(p.total(), 0.0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Failure-injection tests: corrupted artifacts, malformed containers,
+//! invalid configurations — every failure must surface as a clear error,
+//! never a panic or silent wrong answer.
+
+use codegemm::config::{KernelConfig, ModelConfig, QuantConfig};
+use codegemm::model::ModelWeights;
+use codegemm::quant::pack::PackedCodes;
+use codegemm::quant::Quantizer;
+use codegemm::runtime::{Manifest, ModelRuntime};
+use codegemm::util::npy::{Tensor, TensorFile};
+use codegemm::util::prng::Prng;
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("codegemm-fi-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn truncated_tensorfile_rejected() {
+    let w = ModelWeights::random(ModelConfig::tiny(), 1);
+    let bytes = w.to_tensor_file().to_bytes().unwrap();
+    for cut in [4usize, 15, 64, bytes.len() - 8] {
+        let res = TensorFile::from_bytes(&bytes[..cut]);
+        assert!(res.is_err(), "truncation at {cut} must error");
+    }
+}
+
+#[test]
+fn tensorfile_with_garbage_header_rejected() {
+    let mut bytes = ModelWeights::random(ModelConfig::tiny(), 1).to_tensor_file().to_bytes().unwrap();
+    bytes[20] = b'!'; // corrupt the JSON header
+    assert!(TensorFile::from_bytes(&bytes).is_err());
+}
+
+#[test]
+fn manifest_missing_fields_rejected() {
+    use codegemm::util::json::Json;
+    let min = r#"{"version":1,"engine":"codegemm"}"#;
+    let j = Json::parse(min).unwrap();
+    assert!(Manifest::from_json(PathBuf::from("/tmp"), &j).is_err());
+}
+
+#[test]
+fn runtime_with_corrupt_hlo_fails_cleanly() {
+    let dir = tmpdir("hlo");
+    // Minimal manifest pointing at a garbage HLO file.
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{
+          "version": 1, "engine": "codegemm",
+          "model": {"name":"tiny-llama","vocab":256,"hidden":128,"n_layers":2,
+                    "n_heads":4,"n_kv_heads":2,"ffn":352,"max_seq":128,"rope_theta":10000.0},
+          "quant": {"v":4,"m":1,"b":8,"g":32},
+          "weights_file": "weights.q.bin",
+          "weight_args": ["embedding"],
+          "artifacts": [{"name":"decode_b1","batch":1,"hlo":"decode_b1.hlo.txt"}]
+        }"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("decode_b1.hlo.txt"), "this is not HLO text").unwrap();
+    let mut tf = TensorFile::new();
+    tf.push(Tensor::f32("embedding", vec![256, 128], vec![0.0; 256 * 128]));
+    tf.save(dir.join("weights.q.bin")).unwrap();
+    let err = match ModelRuntime::load(&dir) {
+        Ok(_) => panic!("garbage HLO must not load"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("decode_b1"), "error should name the artifact: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn runtime_with_missing_weight_tensor_fails_cleanly() {
+    // Real artifacts (if present) but a weights file missing a tensor.
+    let real = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !real.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let dir = tmpdir("weights");
+    for f in std::fs::read_dir(&real).unwrap() {
+        let f = f.unwrap();
+        if f.file_name() != "weights.q.bin" {
+            std::fs::copy(f.path(), dir.join(f.file_name())).unwrap();
+        }
+    }
+    // Weights file present but lacking every tensor the manifest lists.
+    let mut tf = TensorFile::new();
+    tf.push(Tensor::f32("bogus", vec![1], vec![0.0]));
+    tf.save(dir.join("weights.q.bin")).unwrap();
+    let err = match ModelRuntime::load(&dir) {
+        Ok(_) => panic!("missing tensors must not load"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("missing tensor"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn packed_codes_reject_out_of_range() {
+    assert!(PackedCodes::pack(&[0, 3, 4], 2).is_err(), "code 4 does not fit 2 bits");
+    assert!(PackedCodes::pack(&[0, 1], 0).is_err(), "0-bit codes are invalid");
+}
+
+#[test]
+fn kernel_config_rejects_group_straddling_tiles()
+{
+    // t_w=32, g=48: tiles straddle group boundaries mid-group.
+    let kc = KernelConfig::new(32, 2048).unwrap();
+    let q = QuantConfig::new(4, 1, 8, 48).unwrap();
+    assert!(kc.validate_for(&q, 4800).is_err());
+}
+
+#[test]
+fn quantizer_asserts_on_misaligned_k() {
+    let cfg = QuantConfig::new(8, 1, 4, -1).unwrap();
+    let w = Prng::seeded(1).normal_vec(4 * 20, 0.02); // k=20 not divisible by v=8
+    let res = std::panic::catch_unwind(|| Quantizer::new(cfg).quantize(&w, 4, 20));
+    assert!(res.is_err(), "misaligned k must be rejected loudly");
+}
+
+#[test]
+fn model_weights_reject_wrong_shapes() {
+    let cfg = ModelConfig::tiny();
+    let w = ModelWeights::random(cfg.clone(), 1);
+    let mut tf = w.to_tensor_file();
+    // Swap in a wrong-sized lm_head.
+    tf.tensors.retain(|t| t.name != "lm_head");
+    tf.push(Tensor::f32("lm_head", vec![cfg.vocab, cfg.hidden - 1], vec![0.0; cfg.vocab * (cfg.hidden - 1)]));
+    assert!(ModelWeights::from_tensor_file(cfg, &tf).is_err());
+}
