@@ -1,0 +1,121 @@
+//! Bench: thread-scaling of the sharded engines (`codegemm::parallel`)
+//! on the paper's Llama-3 8B and 70B decoder-block layer shapes.
+//!
+//! Matrix: threads {1, 2, 4, 8} × engines {codegemm, dequant, lutgemm,
+//! dense} × {q_proj, gate_proj, down_proj} of each geometry, GEMV
+//! (M = 1, the decode hot case). Shapes are scaled down by
+//! `CODEGEMM_SCALING_SCALE` (default 4; aspect ratios preserved) so the
+//! quantization setup stays CPU-tractable; the sharding overhead being
+//! measured is per-call and does not depend on the scale.
+//!
+//! Reported per row: mean GEMV latency and the speedup over the
+//! single-thread run of the same engine/shape.
+
+use codegemm::bench::harness::{black_box, run_bench, BenchOptions};
+use codegemm::bench::workloads::{scaled_block_shapes, GemmShape, LLAMA3_70B, LLAMA3_8B};
+use codegemm::config::QuantConfig;
+use codegemm::gemm::{
+    CodeGemmEngine, DenseEngine, DequantEngine, GemmEngine, LutGemmEngine,
+};
+use codegemm::parallel::{shard, ShardPlan, ShardedEngine};
+use codegemm::quant::bcq::BcqLinear;
+use codegemm::quant::{QuantizedLinear, Quantizer};
+use codegemm::util::prng::Prng;
+use codegemm::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+const ENGINES: [&str; 4] = ["codegemm", "dequant", "lutgemm", "dense"];
+
+fn scale_from_env() -> usize {
+    std::env::var("CODEGEMM_SCALING_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if std::env::var("CODEGEMM_BENCH_QUICK").is_ok() { 16 } else { 4 })
+}
+
+/// Pre-quantized state shared across thread counts for one shape.
+struct Prepared {
+    w: Vec<f32>,
+    q: QuantizedLinear,
+    shape: GemmShape,
+}
+
+impl Prepared {
+    fn new(shape: GemmShape, cfg: QuantConfig) -> Prepared {
+        let (n, k) = (shape.n, shape.k);
+        let w = Prng::seeded(11).normal_vec(n * k, 0.02);
+        let q = Quantizer::new(cfg).with_refinement(0).quantize(&w, n, k);
+        Prepared { w, q, shape }
+    }
+
+    /// Row-sharded engine of the named kind across `t` workers.
+    fn engine(&self, kind: &str, t: usize, pool: Arc<ThreadPool>) -> Box<dyn GemmEngine + Send> {
+        let (n, k) = (self.shape.n, self.shape.k);
+        let plan = ShardPlan::new(n, t, 1, 1);
+        match kind {
+            "codegemm" => Box::new(ShardedEngine::from_factory(plan, pool, |(r0, r1)| {
+                CodeGemmEngine::from_quantized(&shard::slice_rows(&self.q, r0, r1))
+            })),
+            "dequant" => Box::new(ShardedEngine::from_factory(plan, pool, |(r0, r1)| {
+                DequantEngine::from_quantized(&shard::slice_rows(&self.q, r0, r1))
+            })),
+            // BCQ quantization is per-row: quantizing each row slice is
+            // identical to slicing a full quantization.
+            "lutgemm" => Box::new(ShardedEngine::from_factory(plan, pool, |(r0, r1)| {
+                let ws = shard::dense_rows(&self.w, k, r0, r1);
+                let bcq = BcqLinear::quantize(&ws, r1 - r0, k, 3, 128).expect("bcq");
+                LutGemmEngine::new(bcq)
+            })),
+            "dense" => Box::new(ShardedEngine::from_factory(plan, pool, |(r0, r1)| {
+                DenseEngine::new(shard::dense_rows(&self.w, k, r0, r1), r1 - r0, k)
+            })),
+            other => panic!("unknown engine kind {other}"),
+        }
+    }
+}
+
+fn main() {
+    let opts = BenchOptions::from_env();
+    let scale = scale_from_env();
+    let cfg = QuantConfig::m1v4g128();
+    println!(
+        "# sharded GEMV scaling (shapes /{scale}, quant {}, host cores {})",
+        cfg.label(),
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    println!(
+        "{:<34} {:>9} {:>12} {:>9}",
+        "engine / shape", "threads", "mean us", "speedup"
+    );
+    for geom in [&LLAMA3_8B, &LLAMA3_70B] {
+        let shapes: Vec<_> = scaled_block_shapes(geom, 1, scale)
+            .into_iter()
+            .filter(|(l, _)| matches!(*l, "q_proj" | "gate_proj" | "down_proj"))
+            .collect();
+        for (label, s) in shapes {
+            let prep = Prepared::new(s, cfg);
+            for kind in ENGINES {
+                let mut base_us = 0.0f64;
+                for t in THREADS {
+                    let pool = Arc::new(ThreadPool::new(t));
+                    let mut eng = prep.engine(kind, t, pool);
+                    let x = Prng::seeded(12).normal_vec(s.k, 1.0);
+                    let name = format!("{}-{kind} {label} {}x{}", geom.name, s.n, s.k);
+                    let r = run_bench(&name, opts, || {
+                        black_box(eng.gemv(&x));
+                    });
+                    let mean = r.mean_us();
+                    if t == 1 {
+                        base_us = mean;
+                    }
+                    let speedup = if mean > 0.0 { base_us / mean } else { 0.0 };
+                    println!("{:<34} {:>9} {:>12.1} {:>8.2}x", name, t, mean, speedup);
+                }
+            }
+        }
+    }
+    println!(
+        "# acceptance: codegemm q_proj/gate_proj GEMV at 4 threads should be >= 2x the 1-thread row"
+    );
+}

@@ -182,6 +182,114 @@ impl KernelConfig {
     }
 }
 
+/// Sharded-execution configuration (the `parallel` section): how GEMM
+/// engines and the Llama forward pass fan out over the worker pool
+/// (`crate::parallel`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Worker threads / maximum shards per linear (0 ⇒ available
+    /// parallelism).
+    pub num_threads: usize,
+    /// Minimum rows (or reduction columns) per shard — layers too small
+    /// to split at this granularity stay serial.
+    pub shard_min_rows: usize,
+    /// Shard the attention projections (Q/K/V column-parallel, O
+    /// row-parallel).
+    pub shard_attn: bool,
+    /// Shard the MLP linears (gate/up column-parallel, down row-parallel).
+    pub shard_mlp: bool,
+    /// Shard the LM head (column-parallel).
+    pub shard_lm_head: bool,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        ParallelConfig {
+            num_threads: 0,
+            shard_min_rows: 64,
+            shard_attn: true,
+            shard_mlp: true,
+            shard_lm_head: true,
+        }
+    }
+}
+
+impl ParallelConfig {
+    /// Serial execution (single shard everywhere).
+    pub fn serial() -> ParallelConfig {
+        ParallelConfig { num_threads: 1, ..Default::default() }
+    }
+
+    /// All layer classes sharded across `n` threads.
+    pub fn with_threads(n: usize) -> ParallelConfig {
+        ParallelConfig { num_threads: n, ..Default::default() }
+    }
+
+    /// Resolved worker count (`num_threads`, or available parallelism
+    /// when 0).
+    pub fn effective_threads(&self) -> usize {
+        if self.num_threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.num_threads
+        }
+    }
+
+    /// True when this config cannot produce more than one shard.
+    pub fn is_serial(&self) -> bool {
+        self.effective_threads() <= 1
+            || !(self.shard_attn || self.shard_mlp || self.shard_lm_head)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.shard_min_rows == 0 {
+            bail!("shard_min_rows must be positive");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("num_threads", Json::from(self.num_threads)),
+            ("shard_min_rows", Json::from(self.shard_min_rows)),
+            ("shard_attn", Json::Bool(self.shard_attn)),
+            ("shard_mlp", Json::Bool(self.shard_mlp)),
+            ("shard_lm_head", Json::Bool(self.shard_lm_head)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ParallelConfig> {
+        let d = ParallelConfig::default();
+        let get_bool = |key: &str, dv: bool| -> Result<bool> {
+            match j.get(key) {
+                None => Ok(dv),
+                Some(v) => {
+                    v.as_bool().ok_or_else(|| anyhow::anyhow!("invalid bool field '{key}'"))
+                }
+            }
+        };
+        let cfg = ParallelConfig {
+            num_threads: match j.get("num_threads") {
+                None => d.num_threads,
+                Some(v) => {
+                    v.as_usize().ok_or_else(|| anyhow::anyhow!("invalid field 'num_threads'"))?
+                }
+            },
+            shard_min_rows: match j.get("shard_min_rows") {
+                None => d.shard_min_rows,
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("invalid field 'shard_min_rows'"))?,
+            },
+            shard_attn: get_bool("shard_attn", d.shard_attn)?,
+            shard_mlp: get_bool("shard_mlp", d.shard_mlp)?,
+            shard_lm_head: get_bool("shard_lm_head", d.shard_lm_head)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 /// Model architecture configuration (mirrors `python/compile/model.py`).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ModelConfig {
@@ -339,6 +447,39 @@ mod tests {
         assert!(m.n_params() > 100_000);
         let j = m.to_json();
         assert_eq!(ModelConfig::from_json(&j).unwrap(), m);
+    }
+
+    #[test]
+    fn parallel_config_roundtrip_and_defaults() {
+        let cfg = ParallelConfig { num_threads: 4, shard_min_rows: 32, shard_lm_head: false, ..Default::default() };
+        cfg.validate().unwrap();
+        let j = Json::parse(&cfg.to_json().to_string_pretty()).unwrap();
+        assert_eq!(ParallelConfig::from_json(&j).unwrap(), cfg);
+        // Missing fields fall back to defaults (older configs stay valid).
+        let j = Json::parse(r#"{"num_threads": 2}"#).unwrap();
+        let c = ParallelConfig::from_json(&j).unwrap();
+        assert_eq!(c.num_threads, 2);
+        assert_eq!(c.shard_min_rows, ParallelConfig::default().shard_min_rows);
+        assert!(c.shard_attn && c.shard_mlp && c.shard_lm_head);
+        // Invalid values are rejected.
+        let bad = Json::parse(r#"{"shard_min_rows": 0}"#).unwrap();
+        assert!(ParallelConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn parallel_config_serial_detection() {
+        assert!(ParallelConfig::serial().is_serial());
+        assert!(!ParallelConfig::with_threads(4).is_serial());
+        let off = ParallelConfig {
+            num_threads: 4,
+            shard_attn: false,
+            shard_mlp: false,
+            shard_lm_head: false,
+            ..Default::default()
+        };
+        assert!(off.is_serial());
+        assert_eq!(ParallelConfig::with_threads(3).effective_threads(), 3);
+        assert!(ParallelConfig::default().effective_threads() >= 1);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Serving configuration for the L3 coordinator.
 
+use super::ParallelConfig;
 use crate::util::json::Json;
 use anyhow::Result;
 
@@ -20,6 +21,9 @@ pub struct ServeConfig {
     pub queue_capacity: usize,
     /// Worker threads executing model steps.
     pub workers: usize,
+    /// Sharded-execution settings for the native backend (`parallel`
+    /// section; serial by default so existing configs are unchanged).
+    pub parallel: ParallelConfig,
 }
 
 impl Default for ServeConfig {
@@ -31,6 +35,7 @@ impl Default for ServeConfig {
             temperature: 0.0,
             queue_capacity: 256,
             workers: 1,
+            parallel: ParallelConfig::serial(),
         }
     }
 }
@@ -44,6 +49,7 @@ impl ServeConfig {
             ("temperature", Json::Num(self.temperature as f64)),
             ("queue_capacity", Json::from(self.queue_capacity)),
             ("workers", Json::from(self.workers)),
+            ("parallel", self.parallel.to_json()),
         ])
     }
 
@@ -55,6 +61,11 @@ impl ServeConfig {
             temperature: j.req_f64("temperature")? as f32,
             queue_capacity: j.req_usize("queue_capacity")?,
             workers: j.req_usize("workers")?,
+            // Optional section: absent ⇒ serial (older configs unchanged).
+            parallel: match j.get("parallel") {
+                Some(p) => ParallelConfig::from_json(p)?,
+                None => ParallelConfig::serial(),
+            },
         })
     }
 }
@@ -75,5 +86,26 @@ mod tests {
         let c = ServeConfig { max_batch: 4, temperature: 0.7, ..Default::default() };
         let j = Json::parse(&c.to_json().to_string_pretty()).unwrap();
         assert_eq!(ServeConfig::from_json(&j).unwrap(), c);
+    }
+
+    #[test]
+    fn json_roundtrip_with_parallel_section() {
+        let c = ServeConfig {
+            parallel: ParallelConfig { num_threads: 4, shard_min_rows: 128, ..Default::default() },
+            ..Default::default()
+        };
+        let j = Json::parse(&c.to_json().to_string_pretty()).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap(), c);
+    }
+
+    #[test]
+    fn missing_parallel_section_defaults_to_serial() {
+        let c = ServeConfig::default();
+        let mut j = c.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("parallel");
+        }
+        let parsed = ServeConfig::from_json(&j).unwrap();
+        assert!(parsed.parallel.is_serial());
     }
 }

@@ -9,9 +9,12 @@
 //! continuous batches out of per-slot steps (token-level prefill, as in
 //! Orca-style iteration-level scheduling).
 
+use crate::config::ParallelConfig;
 use crate::model::{EngineKind, KvCache, LlamaModel, ModelWeights};
 use crate::runtime::ModelRuntime;
+use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// One slot's work item for a step.
 #[derive(Clone, Copy, Debug)]
@@ -43,6 +46,25 @@ pub struct NativeBackend {
 impl NativeBackend {
     pub fn new(weights: &ModelWeights, kind: EngineKind, max_batch: usize) -> NativeBackend {
         let model = LlamaModel::load(weights, kind, None);
+        let caches = (0..max_batch).map(|_| model.new_cache()).collect();
+        NativeBackend { model, caches }
+    }
+
+    /// Sharded-model backend: every linear of every step fans out across
+    /// `pool` (`crate::parallel`), so the batcher's step latency scales
+    /// with the worker count instead of a single core. Falls back to the
+    /// serial model when `par` resolves to one shard.
+    pub fn new_parallel(
+        weights: &ModelWeights,
+        kind: EngineKind,
+        max_batch: usize,
+        par: &ParallelConfig,
+        pool: Arc<ThreadPool>,
+    ) -> NativeBackend {
+        if par.is_serial() {
+            return NativeBackend::new(weights, kind, max_batch);
+        }
+        let model = LlamaModel::load_parallel(weights, kind, None, par, pool);
         let caches = (0..max_batch).map(|_| model.new_cache()).collect();
         NativeBackend { model, caches }
     }
@@ -197,6 +219,30 @@ mod tests {
         b.step(&[SlotStep { slot: 1, token: 1, pos: 0 }]).unwrap();
         let out2 = b.step(&[SlotStep { slot: 1, token: 5, pos: 1 }]).unwrap();
         assert!(stats::rel_l2(&out2[0], &out[0]) < 1e-6);
+    }
+
+    #[test]
+    fn parallel_backend_matches_serial_backend() {
+        let w = ModelWeights::random(ModelConfig::tiny(), 11);
+        let mut serial = NativeBackend::new(&w, EngineKind::Dense, 2);
+        let par = ParallelConfig { num_threads: 3, shard_min_rows: 16, ..Default::default() };
+        let pool = Arc::new(ThreadPool::new(3));
+        let mut sharded = NativeBackend::new_parallel(&w, EngineKind::Dense, 2, &par, pool);
+        assert!(sharded.label().contains("shard3"), "{}", sharded.label());
+        let steps = [SlotStep { slot: 0, token: 9, pos: 0 }, SlotStep { slot: 1, token: 42, pos: 0 }];
+        let (a, b) = (serial.step(&steps).unwrap(), sharded.step(&steps).unwrap());
+        for (x, y) in a.iter().zip(&b) {
+            assert!(stats::rel_l2(x, y) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn parallel_backend_serial_config_falls_back() {
+        let w = ModelWeights::random(ModelConfig::tiny(), 12);
+        let pool = Arc::new(ThreadPool::new(1));
+        let be =
+            NativeBackend::new_parallel(&w, EngineKind::Dense, 1, &ParallelConfig::serial(), pool);
+        assert_eq!(be.label(), "native/fp32");
     }
 
     #[test]

@@ -9,6 +9,22 @@
 //!
 //! Activation/batch layout: `X` is batch-major (`x[b*k .. (b+1)*k]` is
 //! column `b`), outputs likewise (`y[b*n .. (b+1)*n]`).
+//!
+//! ## Parallel execution
+//!
+//! Every engine here is single-threaded by design — one engine models one
+//! GPU thread block's work. Multi-core execution is layered on top by
+//! `crate::parallel`: a `ShardPlan` splits the row dim, each shard gets a
+//! complete engine over its row slice (with its own Psumbook/LUT/decode
+//! scratch, like a thread-block-local table), and `ShardedEngine` fans
+//! `gemm`/`gemv` out over the worker pool, concatenating outputs in shard
+//! order. Because a row's accumulation never crosses shards, sharded
+//! outputs are bit-exact vs. serial; reduction-dim sharding (`TpLinear`)
+//! instead uses a deterministic ordered reduction and is exact up to
+//! float reassociation. Counters merge additively across shards
+//! (`lookups`/`read_ops`/`mac_flops` are conserved; per-row-block build
+//! work scales with the shard count, exactly as it does with GPU grid
+//! size).
 
 pub mod codegemm;
 pub mod dense;

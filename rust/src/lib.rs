@@ -18,6 +18,22 @@
 //!   (router / dynamic batcher / scheduler) with Python *never* on the
 //!   request path.
 //!
+//! ## Parallel execution (`parallel::`)
+//!
+//! The L3 engines and the Llama forward pass scale across cores the same
+//! way the GPU kernels scale across thread blocks: a [`parallel::ShardPlan`]
+//! assigns contiguous row ranges of each weight matrix to workers,
+//! [`parallel::ShardedEngine`] gives every shard its **own Psumbook/LUT
+//! scratch** (the CPU analogue of thread-block-local tables) and
+//! concatenates outputs in shard order — bit-exact against the serial
+//! engine — while [`parallel::TpLinear`] adds Megatron-style tensor
+//! parallelism for the model: Q/K/V/gate/up column-parallel, O/down
+//! row-parallel with a deterministic **ordered all-reduce**
+//! (`parallel::reduce`), so sharded decode is reproducible across runs
+//! and thread schedules. `config::ParallelConfig` selects thread count,
+//! minimum shard size and which layer classes shard;
+//! `coordinator::NativeBackend::new_parallel` serves the sharded model.
+//!
 //! ## Quick start
 //!
 //! (`no_run`: rustdoc test binaries do not inherit the cargo-config rpath
@@ -51,6 +67,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod gemm;
 pub mod model;
+pub mod parallel;
 pub mod quant;
 pub mod runtime;
 pub mod simulator;

@@ -11,7 +11,7 @@
 
 use codegemm::bench::harness::{run_bench, BenchOptions};
 use codegemm::bench::tables::{self, EvalContext};
-use codegemm::config::{ModelConfig, QuantConfig, ServeConfig};
+use codegemm::config::{ModelConfig, ParallelConfig, QuantConfig, ServeConfig};
 use codegemm::coordinator::{DecodeBackend, NativeBackend, PjrtBackend, Request, Server};
 use codegemm::gemm::{CodeGemmEngine, DenseEngine, DequantEngine, GemmEngine};
 use codegemm::model::{EngineKind, ModelWeights};
@@ -42,7 +42,7 @@ fn usage() -> String {
          USAGE: codegemm <subcommand> [options]\n\n\
          SUBCOMMANDS:\n  \
            tables    --table <1..10|fig4a|fig4b|fig5|all> [--artifacts DIR]\n  \
-           serve     [--artifacts DIR] [--backend pjrt|native] [--requests N] [--batch N]\n  \
+           serve     [--artifacts DIR] [--backend pjrt|native] [--requests N] [--batch N] [--threads N]\n  \
            quantize  --config m1v4g128 [--n 512] [--k 512]\n  \
            bench     [--n 1024] [--k 1024]\n  \
            doctor    [--artifacts DIR]\n",
@@ -103,15 +103,22 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .opt("requests", Some("32"), "number of requests")
         .opt("batch", Some("4"), "max batch (native backend)")
         .opt("max-new", Some("24"), "max new tokens per request")
-        .opt("prompt-len", Some("16"), "prompt length (tokens)");
+        .opt("prompt-len", Some("16"), "prompt length (tokens)")
+        .opt("threads", Some("1"), "shard the native model across N worker threads (0 = auto)");
     let m = cmd.parse(args)?;
     let artifacts = Path::new(m.str("artifacts")?);
     let n_requests = m.usize("requests")?;
     let max_new = m.usize("max-new")?;
     let prompt_len = m.usize("prompt-len")?;
     let want = m.str("backend")?;
+    let parallel = ParallelConfig { num_threads: m.usize("threads")?, ..Default::default() };
 
-    let cfg = ServeConfig { max_batch: m.usize("batch")?, max_new_tokens: max_new, ..Default::default() };
+    let cfg = ServeConfig {
+        max_batch: m.usize("batch")?,
+        max_new_tokens: max_new,
+        parallel,
+        ..Default::default()
+    };
     let (backend, label): (Box<dyn DecodeBackend>, String) =
         if want != "native" && artifacts.join("manifest.json").exists() {
             let rt = ModelRuntime::load(artifacts)?;
@@ -123,11 +130,17 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
                 anyhow::bail!("--backend pjrt requested but no artifacts at {}", artifacts.display());
             }
             let weights = load_or_random_weights(artifacts);
-            let be = NativeBackend::new(
-                &weights,
-                EngineKind::codegemm(QuantConfig::new(4, 1, 8, 32)?),
-                cfg.max_batch,
-            );
+            let kind = EngineKind::codegemm(QuantConfig::new(4, 1, 8, 32)?);
+            let be = if cfg.parallel.is_serial() {
+                NativeBackend::new(&weights, kind, cfg.max_batch)
+            } else {
+                let pool = std::sync::Arc::new(
+                    codegemm::util::threadpool::ThreadPool::with_threads(
+                        cfg.parallel.effective_threads(),
+                    ),
+                );
+                NativeBackend::new_parallel(&weights, kind, cfg.max_batch, &cfg.parallel, pool)
+            };
             let label = be.label();
             (Box::new(be), label)
         };

@@ -7,8 +7,11 @@ use crate::config::{KernelConfig, QuantConfig};
 use crate::gemm::{
     CodeGemmEngine, DenseEngine, DequantEngine, GemmEngine, LutGemmEngine, UniformGemmEngine,
 };
+use crate::parallel::{shard, ShardPlan, ShardedEngine, TpLinear};
 use crate::quant::calib::TuneLevel;
-use crate::quant::{bcq::BcqLinear, uniform::UniformLinear, Quantizer};
+use crate::quant::{bcq::BcqLinear, uniform::UniformLinear, QuantizedLinear, Quantizer};
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
 
 /// Which kernel/quantization to build engines with.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -67,6 +70,158 @@ impl EngineKind {
             }
         }
     }
+
+    /// Quantize the additive-codebook formats once over the full matrix
+    /// (shared by the sharded builders below, so codebooks are trained on
+    /// all rows and shard outputs stay bit-identical to the serial
+    /// engine's).
+    fn quantize_additive(
+        cfg: &QuantConfig,
+        tune: &TuneLevel,
+        w: &[f32],
+        n: usize,
+        k: usize,
+        h: Option<&[f32]>,
+    ) -> QuantizedLinear {
+        Quantizer::new(*cfg).with_refinement(tune.refine_rounds()).quantize_weighted(w, n, k, h)
+    }
+
+    /// Build a **row-sharded** (output-dim / column-parallel) engine:
+    /// quantize once, slice rows per shard, and fan `gemm` out over
+    /// `pool`. Bit-exact vs. the serial engine of the same kind.
+    pub fn build_sharded(
+        &self,
+        w: &[f32],
+        n: usize,
+        k: usize,
+        h: Option<&[f32]>,
+        plan: &ShardPlan,
+        pool: Arc<ThreadPool>,
+    ) -> Box<dyn GemmEngine + Send> {
+        if plan.is_serial() {
+            return self.build(w, n, k, h);
+        }
+        assert_eq!(plan.len, n, "plan must partition the output dim");
+        match self {
+            EngineKind::Dense => Box::new(ShardedEngine::from_factory(plan.clone(), pool, |(r0, r1)| {
+                DenseEngine::new(shard::dense_rows(w, k, r0, r1), r1 - r0, k)
+            })),
+            EngineKind::CodeGemm { cfg, kernel, tune } => {
+                let q = Self::quantize_additive(cfg, tune, w, n, k, h);
+                let codes = q.codes.unpack(); // once, not per shard
+                Box::new(ShardedEngine::from_factory(plan.clone(), pool, |(r0, r1)| {
+                    CodeGemmEngine::with_kernel(
+                        &shard::slice_rows_unpacked(&q, &codes, r0, r1),
+                        *kernel,
+                    )
+                }))
+            }
+            EngineKind::Dequant { cfg, tune } => {
+                let q = Self::quantize_additive(cfg, tune, w, n, k, h);
+                let codes = q.codes.unpack();
+                Box::new(ShardedEngine::from_factory(plan.clone(), pool, |(r0, r1)| {
+                    DequantEngine::from_quantized(&shard::slice_rows_unpacked(&q, &codes, r0, r1))
+                }))
+            }
+            // Uniform and BCQ quantization are purely per-row, so
+            // quantizing each row slice directly is bit-identical to
+            // slicing a full quantization.
+            EngineKind::Uniform { bits, group } => {
+                Box::new(ShardedEngine::from_factory(plan.clone(), pool, |(r0, r1)| {
+                    let ws = shard::dense_rows(w, k, r0, r1);
+                    let q = UniformLinear::quantize(&ws, r1 - r0, k, *bits, *group)
+                        .expect("uniform quantize");
+                    UniformGemmEngine::new(q)
+                }))
+            }
+            EngineKind::Lut { bits, group } => {
+                Box::new(ShardedEngine::from_factory(plan.clone(), pool, |(r0, r1)| {
+                    let ws = shard::dense_rows(w, k, r0, r1);
+                    let q = BcqLinear::quantize(&ws, r1 - r0, k, *bits, *group)
+                        .expect("bcq quantize");
+                    LutGemmEngine::new(q)
+                }))
+            }
+        }
+    }
+
+    /// Shard-boundary alignment required when partitioning the reduction
+    /// dim `k` for this kind: group scales (and code vectors) must never
+    /// straddle a shard boundary.
+    pub fn k_shard_align(&self, k: usize) -> usize {
+        match self {
+            EngineKind::Dense => 1,
+            EngineKind::CodeGemm { cfg, .. } | EngineKind::Dequant { cfg, .. } => {
+                cfg.g.map(|g| g.min(k)).unwrap_or(cfg.v)
+            }
+            EngineKind::Uniform { group, .. } | EngineKind::Lut { group, .. } => {
+                (*group).min(k).max(1)
+            }
+        }
+    }
+
+    /// Build a **row-parallel** (reduction-dim) engine: each shard holds
+    /// the full output height over a column range of the weights; partial
+    /// products combine via the deterministic ordered all-reduce.
+    /// Deterministic, but not bit-identical to serial (the k-sum is
+    /// reassociated).
+    pub fn build_row_sharded(
+        &self,
+        w: &[f32],
+        n: usize,
+        k: usize,
+        h: Option<&[f32]>,
+        plan: &ShardPlan,
+        pool: Arc<ThreadPool>,
+    ) -> Box<dyn GemmEngine + Send> {
+        if plan.is_serial() {
+            return self.build(w, n, k, h);
+        }
+        assert_eq!(plan.len, k, "plan must partition the reduction dim");
+        let engines: Vec<Box<dyn GemmEngine + Send>> = match self {
+            // Additive-codebook formats: quantize once, column-slice the
+            // quantized layer (same codebooks in every shard).
+            EngineKind::CodeGemm { cfg, kernel, tune } => {
+                let q = Self::quantize_additive(cfg, tune, w, n, k, h);
+                let codes = q.codes.unpack(); // once, not per shard
+                plan.shards
+                    .iter()
+                    .map(|&(c0, c1)| {
+                        Box::new(CodeGemmEngine::with_kernel(
+                            &shard::slice_cols_unpacked(&q, &codes, c0, c1),
+                            *kernel,
+                        )) as Box<dyn GemmEngine + Send>
+                    })
+                    .collect()
+            }
+            EngineKind::Dequant { cfg, tune } => {
+                let q = Self::quantize_additive(cfg, tune, w, n, k, h);
+                let codes = q.codes.unpack();
+                plan.shards
+                    .iter()
+                    .map(|&(c0, c1)| {
+                        Box::new(DequantEngine::from_quantized(&shard::slice_cols_unpacked(
+                            &q, &codes, c0, c1,
+                        )))
+                            as Box<dyn GemmEngine + Send>
+                    })
+                    .collect()
+            }
+            // Per-row/per-group formats: quantizing the column slice is
+            // identical to slicing (group-aligned boundaries guaranteed by
+            // `k_shard_align`).
+            _ => plan
+                .shards
+                .iter()
+                .map(|&(c0, c1)| {
+                    let ws = shard::dense_cols(w, k, c0, c1);
+                    let hs = h.map(|h| h[c0..c1].to_vec());
+                    self.build(&ws, n, c1 - c0, hs.as_deref())
+                })
+                .collect(),
+        };
+        Box::new(TpLinear::row(plan.clone(), engines, pool))
+    }
 }
 
 #[cfg(test)]
@@ -97,6 +252,50 @@ mod tests {
             assert_eq!(y.len(), n, "{}", kind.label());
             let rel = stats::rel_l2(&y, &y_ref);
             assert!(rel < 0.6, "{}: rel {rel}", kind.label());
+        }
+    }
+
+    #[test]
+    fn build_sharded_is_bit_exact_for_every_kind() {
+        let (n, k) = (48, 64);
+        let w = Prng::seeded(5).normal_vec(n * k, 0.05);
+        let x = Prng::seeded(6).normal_vec(k * 2, 1.0);
+        let pool = Arc::new(crate::util::threadpool::ThreadPool::new(3));
+        for kind in [
+            EngineKind::Dense,
+            EngineKind::codegemm(QuantConfig::new(4, 1, 6, 32).unwrap()),
+            EngineKind::Dequant { cfg: QuantConfig::new(4, 1, 6, 32).unwrap(), tune: TuneLevel::None },
+            EngineKind::Uniform { bits: 4, group: 32 },
+            EngineKind::Lut { bits: 3, group: 32 },
+        ] {
+            let mut serial = kind.build(&w, n, k, None);
+            let plan = ShardPlan::new(n, 3, 8, 1);
+            let mut sharded = kind.build_sharded(&w, n, k, None, &plan, Arc::clone(&pool));
+            // Sharding happens after (or commutes with) quantization, so
+            // the outputs are bit-identical, not merely close.
+            assert_eq!(serial.gemm(&x, 2), sharded.gemm(&x, 2), "{}", kind.label());
+        }
+    }
+
+    #[test]
+    fn build_row_sharded_matches_serial_closely() {
+        let (n, k) = (24, 128);
+        let w = Prng::seeded(7).normal_vec(n * k, 0.05);
+        let x = Prng::seeded(8).normal_vec(k, 1.0);
+        let pool = Arc::new(crate::util::threadpool::ThreadPool::new(3));
+        for kind in [
+            EngineKind::Dense,
+            EngineKind::codegemm(QuantConfig::new(4, 1, 6, 32).unwrap()),
+            EngineKind::Uniform { bits: 4, group: 32 },
+            EngineKind::Lut { bits: 3, group: 32 },
+        ] {
+            let mut serial = kind.build(&w, n, k, None);
+            let plan = ShardPlan::new(k, 3, 16, kind.k_shard_align(k));
+            let mut sharded = kind.build_row_sharded(&w, n, k, None, &plan, Arc::clone(&pool));
+            let (ys, yp) = (serial.gemv(&x), sharded.gemv(&x));
+            // k-split reassociates the reduction: equal up to float noise.
+            let rel = stats::rel_l2(&yp, &ys);
+            assert!(rel < 1e-4, "{}: rel {rel}", kind.label());
         }
     }
 

@@ -10,9 +10,12 @@
 use super::engine_factory::EngineKind;
 use super::kv::KvCache;
 use super::weights::ModelWeights;
-use crate::config::ModelConfig;
+use crate::config::{ModelConfig, ParallelConfig};
 use crate::gemm::GemmEngine;
+use crate::parallel::ShardPlan;
 use crate::util::stats::softmax_inplace;
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
 
 /// Engines for one decoder layer.
 struct LayerEngines {
@@ -38,6 +41,23 @@ pub struct LlamaModel {
     /// Precomputed RoPE tables: `cos/sin[pos * half + i]`.
     rope_cos: Vec<f32>,
     rope_sin: Vec<f32>,
+}
+
+/// Precompute RoPE tables (`cos/sin[pos * half + i]`).
+fn rope_tables(cfg: &ModelConfig) -> (Vec<f32>, Vec<f32>) {
+    let hd = cfg.head_dim();
+    let half = hd / 2;
+    let mut rope_cos = vec![0f32; cfg.max_seq * half];
+    let mut rope_sin = vec![0f32; cfg.max_seq * half];
+    for pos in 0..cfg.max_seq {
+        for i in 0..half {
+            let freq = 1.0 / cfg.rope_theta().powf(2.0 * i as f32 / hd as f32);
+            let angle = pos as f32 * freq;
+            rope_cos[pos * half + i] = angle.cos();
+            rope_sin[pos * half + i] = angle.sin();
+        }
+    }
+    (rope_cos, rope_sin)
 }
 
 /// RMS normalization: `y = x * w / rms(x)`.
@@ -75,7 +95,6 @@ impl LlamaModel {
     pub fn load(weights: &ModelWeights, kind: EngineKind, calib: Option<&[Vec<f32>]>) -> LlamaModel {
         let cfg = weights.cfg.clone();
         let d = cfg.hidden;
-        let hd = cfg.head_dim();
         let mut layers = Vec::with_capacity(cfg.n_layers);
         let mut li = 0usize;
         let h = |i: &mut usize| -> Option<&[f32]> {
@@ -98,20 +117,84 @@ impl LlamaModel {
             });
         }
         let lm_head = kind.build(&weights.lm_head, cfg.vocab, d, h(&mut li));
-        // RoPE tables.
-        let half = hd / 2;
-        let mut rope_cos = vec![0f32; cfg.max_seq * half];
-        let mut rope_sin = vec![0f32; cfg.max_seq * half];
-        for pos in 0..cfg.max_seq {
-            for i in 0..half {
-                let freq = 1.0 / cfg.rope_theta().powf(2.0 * i as f32 / hd as f32);
-                let angle = pos as f32 * freq;
-                rope_cos[pos * half + i] = angle.cos();
-                rope_sin[pos * half + i] = angle.sin();
-            }
-        }
+        let (rope_cos, rope_sin) = rope_tables(&cfg);
         LlamaModel {
             kind_label: kind.label(),
+            embedding: weights.embedding.clone(),
+            layers,
+            final_norm: weights.final_norm.clone(),
+            lm_head,
+            rope_cos,
+            rope_sin,
+            cfg,
+        }
+    }
+
+    /// Tensor-parallel load: every linear is sharded across `pool`
+    /// according to `par`, per layer class:
+    ///
+    /// - Q/K/V, gate/up and the LM head are **column-parallel** (output
+    ///   rows sharded, outputs concatenated — bit-exact vs. serial);
+    /// - O and down are **row-parallel** (reduction dim sharded,
+    ///   partials combined by the deterministic ordered all-reduce —
+    ///   deterministic, equal to serial up to float reassociation).
+    ///
+    /// Every shard engine keeps its own Psumbook/LUT scratch, mirroring
+    /// the per-thread-block tables of the GPU kernels.
+    pub fn load_parallel(
+        weights: &ModelWeights,
+        kind: EngineKind,
+        calib: Option<&[Vec<f32>]>,
+        par: &ParallelConfig,
+        pool: Arc<ThreadPool>,
+    ) -> LlamaModel {
+        let cfg = weights.cfg.clone();
+        let d = cfg.hidden;
+        let threads = par.effective_threads();
+        let min = par.shard_min_rows;
+        // Column-parallel (output-dim) builder for one linear.
+        let col = |w: &[f32], n: usize, k: usize, h: Option<&[f32]>, on: bool| {
+            if on {
+                let plan = ShardPlan::new(n, threads, min, 1);
+                kind.build_sharded(w, n, k, h, &plan, Arc::clone(&pool))
+            } else {
+                kind.build(w, n, k, h)
+            }
+        };
+        // Row-parallel (reduction-dim) builder for one linear.
+        let row = |w: &[f32], n: usize, k: usize, h: Option<&[f32]>, on: bool| {
+            if on {
+                let plan = ShardPlan::new(k, threads, min, kind.k_shard_align(k));
+                kind.build_row_sharded(w, n, k, h, &plan, Arc::clone(&pool))
+            } else {
+                kind.build(w, n, k, h)
+            }
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        let mut li = 0usize;
+        let h = |i: &mut usize| -> Option<&[f32]> {
+            let r = calib.map(|c| c[*i].as_slice());
+            *i += 1;
+            r
+        };
+        for l in &weights.layers {
+            let kv = cfg.kv_dim();
+            layers.push(LayerEngines {
+                wq: col(&l.wq, d, d, h(&mut li), par.shard_attn),
+                wk: col(&l.wk, kv, d, h(&mut li), par.shard_attn),
+                wv: col(&l.wv, kv, d, h(&mut li), par.shard_attn),
+                wo: row(&l.wo, d, d, h(&mut li), par.shard_attn),
+                w_gate: col(&l.w_gate, cfg.ffn, d, h(&mut li), par.shard_mlp),
+                w_up: col(&l.w_up, cfg.ffn, d, h(&mut li), par.shard_mlp),
+                w_down: row(&l.w_down, d, cfg.ffn, h(&mut li), par.shard_mlp),
+                attn_norm: l.attn_norm.clone(),
+                mlp_norm: l.mlp_norm.clone(),
+            });
+        }
+        let lm_head = col(&weights.lm_head, cfg.vocab, d, h(&mut li), par.shard_lm_head);
+        let (rope_cos, rope_sin) = rope_tables(&cfg);
+        LlamaModel {
+            kind_label: format!("{}+shard{}", kind.label(), threads),
             embedding: weights.embedding.clone(),
             layers,
             final_norm: weights.final_norm.clone(),
@@ -304,6 +387,57 @@ mod tests {
         let rel = stats::rel_l2(&lq, &ld);
         assert!(rel < 0.7, "quantized logits diverged: rel {rel}");
         assert!(rel > 1e-6, "quantized logits suspiciously identical");
+    }
+
+    #[test]
+    fn parallel_dense_model_matches_serial_closely() {
+        let w = tiny();
+        let mut serial = LlamaModel::load(&w, EngineKind::Dense, None);
+        let par = ParallelConfig { num_threads: 4, shard_min_rows: 16, ..Default::default() };
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut sharded = LlamaModel::load_parallel(&w, EngineKind::Dense, None, &par, pool);
+        let mut cs = serial.new_cache();
+        let mut cp = sharded.new_cache();
+        let ls = serial.prefill(&[5, 6, 7], &mut cs);
+        let lp = sharded.prefill(&[5, 6, 7], &mut cp);
+        // Column-parallel layers are bit-exact; row-parallel (wo/w_down)
+        // reassociate the k-sum, so allow float noise only.
+        let rel = crate::util::stats::rel_l2(&lp, &ls);
+        assert!(rel < 1e-5, "parallel vs serial rel {rel}");
+    }
+
+    #[test]
+    fn parallel_model_is_deterministic() {
+        let w = tiny();
+        let par = ParallelConfig { num_threads: 3, shard_min_rows: 16, ..Default::default() };
+        let run = || {
+            let pool = Arc::new(ThreadPool::new(3));
+            let mut m = LlamaModel::load_parallel(&w, EngineKind::Dense, None, &par, pool);
+            let mut c = m.new_cache();
+            m.prefill(&[10, 20, 30], &mut c)
+        };
+        // Ordered reduction ⇒ bitwise identical across runs and schedules.
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn parallel_quantized_model_matches_serial_quantized() {
+        let w = tiny();
+        let cfg = QuantConfig::new(4, 1, 6, 32).unwrap();
+        let kind = EngineKind::codegemm(cfg);
+        let mut serial = LlamaModel::load(&w, kind, None);
+        let par = ParallelConfig { num_threads: 2, shard_min_rows: 16, ..Default::default() };
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut sharded = LlamaModel::load_parallel(&w, kind, None, &par, pool);
+        let mut cs = serial.new_cache();
+        let mut cp = sharded.new_cache();
+        let ls = serial.prefill(&[3, 4], &mut cs);
+        let lp = sharded.prefill(&[3, 4], &mut cp);
+        // Same quantized weights (sharding happens after quantization);
+        // only the row-parallel reassociation differs.
+        let rel = crate::util::stats::rel_l2(&lp, &ls);
+        assert!(rel < 1e-4, "parallel quantized vs serial rel {rel}");
+        assert!(sharded.kind_label.contains("shard2"), "{}", sharded.kind_label);
     }
 
     #[test]

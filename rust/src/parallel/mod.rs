@@ -1,0 +1,40 @@
+//! Sharded multi-threaded execution for GEMM engines and the Llama
+//! forward pass (the L3 parallel subsystem).
+//!
+//! The paper's kernels win by partitioning table-lookup GEMM across
+//! parallel workers with *per-partition scratch* — thread-block-local
+//! Psumbooks on the GPU. This module is the CPU analogue, layered on
+//! [`crate::util::threadpool::ThreadPool`]:
+//!
+//! - [`plan::ShardPlan`] — deterministic, alignment-aware partition of a
+//!   weight matrix axis into contiguous shards.
+//! - [`shard`] — carve row/column shards out of quantized or dense
+//!   layers *after* quantization, so shard data is byte-identical to the
+//!   serial layer's rows.
+//! - [`sharded_engine::ShardedEngine`] — any [`crate::gemm::GemmEngine`]
+//!   row-sharded over the pool; each shard owns its Psumbook/LUT/decode
+//!   scratch; outputs concatenate in shard order and are **bit-exact**
+//!   vs. serial.
+//! - [`tensor_parallel::TpLinear`] — Megatron-style column-parallel
+//!   (Q/K/V, gate/up, LM head) and row-parallel (O, down) linears; the
+//!   row-parallel k-sum uses the deterministic ordered all-reduce of
+//!   [`reduce`].
+//! - [`reduce`] — shard-order concatenation, ordered all-reduce, and
+//!   counter merging.
+//!
+//! Model- and serving-level entry points:
+//! [`crate::model::LlamaModel::load_parallel`] builds a tensor-parallel
+//! model from any [`crate::model::EngineKind`];
+//! [`crate::coordinator::NativeBackend::new_parallel`] serves it, so
+//! every batcher step fans each linear out across the pool. Configured by
+//! [`crate::config::ParallelConfig`].
+
+pub mod plan;
+pub mod reduce;
+pub mod shard;
+pub mod sharded_engine;
+pub mod tensor_parallel;
+
+pub use plan::ShardPlan;
+pub use sharded_engine::ShardedEngine;
+pub use tensor_parallel::{TpLinear, TpMode};

@@ -1,0 +1,163 @@
+//! Deterministic shard ownership: split one axis of a weight matrix into
+//! contiguous half-open ranges, one per worker.
+//!
+//! The plan is pure data — the same `(len, max_shards, min_len, align)`
+//! inputs always produce the same ranges, so shard ownership (and
+//! therefore reduction order and output placement) is reproducible across
+//! runs and thread schedules.
+
+/// A partition of `[0, len)` into contiguous shards.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Total extent being partitioned (rows for output sharding, columns
+    /// for reduction-dim sharding).
+    pub len: usize,
+    /// Half-open `(start, end)` ranges, ascending, disjoint, covering
+    /// `[0, len)` exactly.
+    pub shards: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    /// Split `len` into at most `max_shards` shards of at least `min_len`
+    /// each. Every shard boundary except the final `len` is a multiple of
+    /// `align` (pass the vector length `v` or the normalization group `g`
+    /// when sharding the reduction dim of a quantized layer; `1` for row
+    /// sharding). When `len` is not a multiple of `align` the ragged tail
+    /// is attached to the last shard.
+    pub fn new(len: usize, max_shards: usize, min_len: usize, align: usize) -> ShardPlan {
+        if len == 0 {
+            return ShardPlan { len, shards: Vec::new() };
+        }
+        let align = align.max(1);
+        let units = len / align;
+        if units == 0 {
+            // Smaller than one aligned unit: a single shard owns it all.
+            return ShardPlan { len, shards: vec![(0, len)] };
+        }
+        let min_units = min_len.max(1).div_ceil(align).max(1);
+        let want = max_shards.max(1).min((units / min_units).max(1));
+        let base = units / want;
+        let extra = units % want;
+        let mut shards = Vec::with_capacity(want);
+        let mut start = 0usize;
+        for s in 0..want {
+            let take = (base + usize::from(s < extra)) * align;
+            let end = if s + 1 == want { len } else { start + take };
+            shards.push((start, end));
+            start = end;
+        }
+        debug_assert_eq!(start, len);
+        ShardPlan { len, shards }
+    }
+
+    /// The trivial single-shard plan (serial execution).
+    pub fn serial(len: usize) -> ShardPlan {
+        ShardPlan::new(len, 1, 1, 1)
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// `(start, end)` of shard `i`.
+    pub fn range(&self, i: usize) -> (usize, usize) {
+        self.shards[i]
+    }
+
+    /// Length of shard `i`.
+    pub fn shard_len(&self, i: usize) -> usize {
+        let (a, b) = self.shards[i];
+        b - a
+    }
+
+    /// True when the plan degenerates to serial execution.
+    pub fn is_serial(&self) -> bool {
+        self.shards.len() <= 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_cover(p: &ShardPlan) {
+        let mut pos = 0usize;
+        for &(a, b) in &p.shards {
+            assert_eq!(a, pos, "shards must be contiguous");
+            assert!(b > a, "shards must be non-empty");
+            pos = b;
+        }
+        assert_eq!(pos, p.len, "shards must cover [0, len)");
+    }
+
+    #[test]
+    fn even_split() {
+        let p = ShardPlan::new(64, 4, 1, 1);
+        assert_eq!(p.shards, vec![(0, 16), (16, 32), (32, 48), (48, 64)]);
+        assert_cover(&p);
+    }
+
+    #[test]
+    fn uneven_split_front_loads_remainder() {
+        let p = ShardPlan::new(10, 4, 1, 1);
+        assert_eq!(p.shards, vec![(0, 3), (3, 6), (6, 8), (8, 10)]);
+        assert_cover(&p);
+    }
+
+    #[test]
+    fn min_len_caps_shard_count() {
+        // 64 rows with min 32 per shard ⇒ at most 2 shards.
+        let p = ShardPlan::new(64, 8, 32, 1);
+        assert_eq!(p.num_shards(), 2);
+        assert_cover(&p);
+        // min larger than len ⇒ serial.
+        assert!(ShardPlan::new(16, 8, 64, 1).is_serial());
+    }
+
+    #[test]
+    fn aligned_boundaries() {
+        let p = ShardPlan::new(256, 3, 1, 32);
+        assert_cover(&p);
+        for &(a, _) in &p.shards {
+            assert_eq!(a % 32, 0, "start must be aligned");
+        }
+        assert_eq!(p.num_shards(), 3);
+    }
+
+    #[test]
+    fn ragged_tail_goes_to_last_shard() {
+        // 352 = 2*128 + 96: boundaries at multiples of 128, tail absorbed.
+        let p = ShardPlan::new(352, 2, 1, 128);
+        assert_eq!(p.shards, vec![(0, 128), (128, 352)]);
+        assert_cover(&p);
+    }
+
+    #[test]
+    fn smaller_than_one_unit_is_serial() {
+        let p = ShardPlan::new(96, 4, 1, 128);
+        assert_eq!(p.shards, vec![(0, 96)]);
+    }
+
+    #[test]
+    fn zero_len() {
+        let p = ShardPlan::new(0, 4, 1, 1);
+        assert_eq!(p.num_shards(), 0);
+        assert_eq!(p.len, 0);
+    }
+
+    #[test]
+    fn serial_and_accessors() {
+        let p = ShardPlan::serial(40);
+        assert!(p.is_serial());
+        assert_eq!(p.range(0), (0, 40));
+        assert_eq!(p.shard_len(0), 40);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = ShardPlan::new(1000, 7, 16, 8);
+        let b = ShardPlan::new(1000, 7, 16, 8);
+        assert_eq!(a, b);
+        assert_cover(&a);
+    }
+}

@@ -1,0 +1,97 @@
+//! Deterministic reductions for sharded execution.
+//!
+//! Two combining steps exist in the subsystem:
+//!
+//! - **Row concatenation** (output/column-parallel sharding): each shard
+//!   computed disjoint output rows, so combining is pure placement —
+//!   bit-exact by construction.
+//! - **Ordered all-reduce** (reduction-dim/row-parallel sharding): each
+//!   shard computed a partial sum over its column range; partials are
+//!   summed in *shard-index order*, a fixed association that makes the
+//!   result reproducible across runs and thread schedules (unlike atomic
+//!   or completion-order accumulation).
+
+use super::plan::ShardPlan;
+use crate::gemm::Counters;
+
+/// Stitch per-shard row outputs (each batch-major `shard_rows × m_batch`)
+/// into the full batch-major `n × m_batch` output, in shard order.
+pub fn concat_row_shards(parts: &[Vec<f32>], plan: &ShardPlan, m_batch: usize) -> Vec<f32> {
+    assert_eq!(parts.len(), plan.num_shards(), "one output per shard");
+    let n = plan.len;
+    let mut y = vec![0f32; n * m_batch];
+    for (part, &(r0, r1)) in parts.iter().zip(&plan.shards) {
+        let ns = r1 - r0;
+        assert_eq!(part.len(), ns * m_batch, "shard output shape mismatch");
+        for b in 0..m_batch {
+            y[b * n + r0..b * n + r1].copy_from_slice(&part[b * ns..(b + 1) * ns]);
+        }
+    }
+    y
+}
+
+/// Sum equal-length partial outputs in slice order (fixed association).
+pub fn ordered_sum(parts: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!parts.is_empty(), "ordered_sum needs at least one partial");
+    let mut out = parts[0].clone();
+    for p in &parts[1..] {
+        assert_eq!(p.len(), out.len(), "partial length mismatch");
+        for (o, x) in out.iter_mut().zip(p) {
+            *o += x;
+        }
+    }
+    out
+}
+
+/// Merge per-shard counters into one set (order-independent: counters are
+/// sums).
+pub fn merge_counters<'a>(parts: impl IntoIterator<Item = &'a Counters>) -> Counters {
+    let mut total = Counters::new();
+    for c in parts {
+        total.merge(c);
+    }
+    // Wall-clock seconds summed across shards over-count elapsed time
+    // under true parallelism; they remain useful as total CPU seconds.
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concat_places_rows_in_shard_order() {
+        let plan = ShardPlan::new(5, 2, 1, 1); // (0,3), (3,5)
+        let parts = vec![
+            vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0], // 3 rows × 2 batch cols
+            vec![4.0, 5.0, 40.0, 50.0],            // 2 rows × 2 batch cols
+        ];
+        let y = concat_row_shards(&parts, &plan, 2);
+        assert_eq!(y, vec![1.0, 2.0, 3.0, 4.0, 5.0, 10.0, 20.0, 30.0, 40.0, 50.0]);
+    }
+
+    #[test]
+    fn ordered_sum_is_fixed_association() {
+        let parts = vec![vec![1.0f32, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
+        assert_eq!(ordered_sum(&parts), vec![111.0, 222.0]);
+        // Same parts, same order ⇒ bitwise identical.
+        assert_eq!(ordered_sum(&parts), ordered_sum(&parts));
+    }
+
+    #[test]
+    fn merge_counters_sums() {
+        let a = Counters { mac_flops: 3, lookups: 1, calls: 1, ..Default::default() };
+        let b = Counters { mac_flops: 7, lookups: 2, calls: 1, ..Default::default() };
+        let t = merge_counters([&a, &b]);
+        assert_eq!(t.mac_flops, 10);
+        assert_eq!(t.lookups, 3);
+        assert_eq!(t.calls, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "one output per shard")]
+    fn concat_rejects_wrong_part_count() {
+        let plan = ShardPlan::new(4, 2, 1, 1);
+        let _ = concat_row_shards(&[vec![0.0; 2]], &plan, 1);
+    }
+}

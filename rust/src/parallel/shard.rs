@@ -1,0 +1,193 @@
+//! Shard extraction: carve a row range (output sharding) or a column
+//! range (reduction-dim sharding) out of a quantized or dense layer.
+//!
+//! Row slicing happens *after* quantization, so a shard's codebooks,
+//! codes and scales are byte-identical to the corresponding rows of the
+//! serial layer — which is what makes `ShardedEngine` bit-exact against
+//! the serial engine (row partitioning never reorders the per-row float
+//! accumulation). Column slicing is alignment-checked against `v` and the
+//! normalization group `g` so group scales never straddle a shard
+//! boundary.
+
+use crate::quant::{PackedCodes, QuantizedLinear};
+
+/// Rows `[r0, r1)` of a quantized layer as a standalone layer.
+///
+/// The codebooks are shared (cloned), the code stream for a row range is
+/// contiguous in the packed `[r][j][c]` order, and the per-row group
+/// scales slice directly.
+pub fn slice_rows(q: &QuantizedLinear, r0: usize, r1: usize) -> QuantizedLinear {
+    slice_rows_unpacked(q, &q.codes.unpack(), r0, r1)
+}
+
+/// [`slice_rows`] with the code stream already unpacked — callers
+/// carving many shards out of one layer unpack once and reuse it
+/// instead of paying the O(n·k/v·m) unpack per shard.
+pub fn slice_rows_unpacked(
+    q: &QuantizedLinear,
+    codes: &[u32],
+    r0: usize,
+    r1: usize,
+) -> QuantizedLinear {
+    assert!(r0 < r1 && r1 <= q.n, "row range [{r0}, {r1}) out of [0, {})", q.n);
+    let jn = q.vectors_per_row();
+    let m = q.cfg.m;
+    let gpr = q.groups_per_row();
+    assert_eq!(codes.len(), q.n * jn * m, "unpacked code stream length mismatch");
+    let sub = &codes[r0 * jn * m..r1 * jn * m];
+    let out = QuantizedLinear {
+        cfg: q.cfg,
+        n: r1 - r0,
+        k: q.k,
+        codebooks: q.codebooks.clone(),
+        codes: PackedCodes::pack(sub, q.codes.bits()).expect("codes stay in range"),
+        scales: q.scales[r0 * gpr..r1 * gpr].to_vec(),
+    };
+    debug_assert!(out.validate().is_ok());
+    out
+}
+
+/// Columns `[c0, c1)` of a quantized layer as a standalone layer (all
+/// rows, reduced reduction dim — the shard shape of row-parallel /
+/// tensor-parallel execution).
+///
+/// `c0` must be a multiple of `v` and of the group size `g` (when
+/// grouped); `c1` likewise, except that `c1 == k` is always allowed (the
+/// ragged final group stays intact inside the last shard).
+pub fn slice_cols(q: &QuantizedLinear, c0: usize, c1: usize) -> QuantizedLinear {
+    slice_cols_unpacked(q, &q.codes.unpack(), c0, c1)
+}
+
+/// [`slice_cols`] with the code stream already unpacked (see
+/// [`slice_rows_unpacked`]).
+pub fn slice_cols_unpacked(
+    q: &QuantizedLinear,
+    codes: &[u32],
+    c0: usize,
+    c1: usize,
+) -> QuantizedLinear {
+    let v = q.cfg.v;
+    assert!(c0 < c1 && c1 <= q.k, "col range [{c0}, {c1}) out of [0, {})", q.k);
+    assert_eq!(c0 % v, 0, "c0 ({c0}) must be a multiple of v ({v})");
+    assert!(c1 % v == 0 || c1 == q.k, "c1 ({c1}) must be a multiple of v ({v}) or k");
+    let jn = q.vectors_per_row();
+    let (j0, j1) = (c0 / v, c1 / v);
+    let m = q.cfg.m;
+    assert_eq!(codes.len(), q.n * jn * m, "unpacked code stream length mismatch");
+    let mut sub = Vec::with_capacity(q.n * (j1 - j0) * m);
+    for r in 0..q.n {
+        let base = (r * jn + j0) * m;
+        sub.extend_from_slice(&codes[base..base + (j1 - j0) * m]);
+    }
+    let scales = match q.cfg.g {
+        Some(g) => {
+            assert_eq!(c0 % g, 0, "c0 ({c0}) must be a multiple of g ({g})");
+            assert!(c1 % g == 0 || c1 == q.k, "c1 ({c1}) must be a multiple of g ({g}) or k");
+            let gpr = q.groups_per_row();
+            let (g0, g1) = (c0 / g, (c1 + g - 1) / g);
+            let mut s = Vec::with_capacity(q.n * (g1 - g0));
+            for r in 0..q.n {
+                s.extend_from_slice(&q.scales[r * gpr + g0..r * gpr + g1]);
+            }
+            s
+        }
+        // Row-wise normalization: the single per-row scale covers any
+        // column subset unchanged.
+        None => q.scales.clone(),
+    };
+    let out = QuantizedLinear {
+        cfg: q.cfg,
+        n: q.n,
+        k: c1 - c0,
+        codebooks: q.codebooks.clone(),
+        codes: PackedCodes::pack(&sub, q.codes.bits()).expect("codes stay in range"),
+        scales,
+    };
+    debug_assert!(out.validate().is_ok());
+    out
+}
+
+/// Rows `[r0, r1)` of a dense row-major `n × k` matrix.
+pub fn dense_rows(w: &[f32], k: usize, r0: usize, r1: usize) -> Vec<f32> {
+    w[r0 * k..r1 * k].to_vec()
+}
+
+/// Columns `[c0, c1)` of a dense row-major `n × k` matrix (all rows).
+pub fn dense_cols(w: &[f32], k: usize, c0: usize, c1: usize) -> Vec<f32> {
+    assert!(c0 < c1 && c1 <= k);
+    let n = w.len() / k;
+    let mut out = Vec::with_capacity(n * (c1 - c0));
+    for r in 0..n {
+        out.extend_from_slice(&w[r * k + c0..r * k + c1]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QuantConfig;
+    use crate::quant::Quantizer;
+    use crate::util::prng::Prng;
+
+    fn quantize(n: usize, k: usize, label: &str, seed: u64) -> QuantizedLinear {
+        let w = Prng::seeded(seed).normal_vec(n * k, 0.02);
+        Quantizer::new(QuantConfig::parse_label(label).unwrap()).quantize(&w, n, k)
+    }
+
+    #[test]
+    fn row_slice_dequantizes_to_row_slice() {
+        for label in ["m1v4g32", "m2v8g-1", "m1v8g16"] {
+            let q = quantize(24, 64, label, 1);
+            let full = q.dequantize();
+            for (r0, r1) in [(0usize, 8usize), (8, 24), (5, 6), (0, 24)] {
+                let s = slice_rows(&q, r0, r1);
+                s.validate().unwrap();
+                assert_eq!(s.dequantize(), full[r0 * 64..r1 * 64].to_vec(), "{label} rows {r0}..{r1}");
+            }
+        }
+    }
+
+    #[test]
+    fn col_slice_dequantizes_to_col_slice() {
+        for label in ["m1v4g32", "m2v8g-1", "m2v8g32"] {
+            let q = quantize(12, 128, label, 2);
+            let full = q.dequantize();
+            for (c0, c1) in [(0usize, 64usize), (64, 128), (32, 96), (0, 128)] {
+                let s = slice_cols(&q, c0, c1);
+                s.validate().unwrap();
+                let want = dense_cols(&full, 128, c0, c1);
+                assert_eq!(s.dequantize(), want, "{label} cols {c0}..{c1}");
+            }
+        }
+    }
+
+    #[test]
+    fn col_slice_ragged_final_group() {
+        // k=96 with g=64: last group is ragged (32 wide); slicing at the
+        // group boundary keeps it intact in the last shard.
+        let q = quantize(8, 96, "m1v4g64", 3);
+        let full = q.dequantize();
+        let a = slice_cols(&q, 0, 64);
+        let b = slice_cols(&q, 64, 96);
+        a.validate().unwrap();
+        b.validate().unwrap();
+        assert_eq!(a.dequantize(), dense_cols(&full, 96, 0, 64));
+        assert_eq!(b.dequantize(), dense_cols(&full, 96, 64, 96));
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of g")]
+    fn col_slice_rejects_group_straddle() {
+        let q = quantize(4, 128, "m1v4g32", 4);
+        let _ = slice_cols(&q, 16, 128);
+    }
+
+    #[test]
+    fn dense_helpers() {
+        // 2×4 matrix [[0,1,2,3],[4,5,6,7]]
+        let w: Vec<f32> = (0..8).map(|x| x as f32).collect();
+        assert_eq!(dense_rows(&w, 4, 1, 2), vec![4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(dense_cols(&w, 4, 1, 3), vec![1.0, 2.0, 5.0, 6.0]);
+    }
+}

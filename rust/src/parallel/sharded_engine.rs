@@ -1,0 +1,205 @@
+//! `ShardedEngine<E>`: run any [`GemmEngine`] row-sharded across the
+//! worker pool.
+//!
+//! Each shard is a complete inner engine over its own row range — with
+//! its *own* Psumbook / LUT / decode scratch, mirroring the
+//! thread-block-local tables of the GPU kernels — so shards share no
+//! mutable state and fan out over `ThreadPool::parallel_map` with no
+//! synchronization beyond the final join. Outputs are concatenated in
+//! shard order; since row partitioning never reorders any row's float
+//! accumulation, the result is **bit-exact** against the serial engine
+//! the shards were sliced from (the property tests assert `==`, not
+//! approximate equality).
+
+use super::plan::ShardPlan;
+use super::reduce;
+use crate::gemm::{Counters, GemmEngine};
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+/// Generic row-sharded wrapper around per-shard inner engines.
+pub struct ShardedEngine<E: GemmEngine + Send + 'static> {
+    plan: ShardPlan,
+    shards: Vec<E>,
+    pool: Arc<ThreadPool>,
+    k: usize,
+    counters: Counters,
+}
+
+impl<E: GemmEngine + Send + 'static> ShardedEngine<E> {
+    /// Wrap pre-built shard engines. `shards[i]` must compute the rows of
+    /// `plan.range(i)` (i.e. its `dims().0 == plan.shard_len(i)`), and
+    /// every shard must share the reduction dim `k`.
+    pub fn new(plan: ShardPlan, shards: Vec<E>, pool: Arc<ThreadPool>) -> ShardedEngine<E> {
+        assert_eq!(plan.num_shards(), shards.len(), "one engine per shard");
+        assert!(!shards.is_empty(), "need at least one shard");
+        let k = shards[0].dims().1;
+        for (i, e) in shards.iter().enumerate() {
+            let (r0, r1) = plan.range(i);
+            assert_eq!(e.dims().0, r1 - r0, "shard {i} row count mismatch");
+            assert_eq!(e.dims().1, k, "shard {i} reduction dim mismatch");
+        }
+        ShardedEngine { plan, shards, pool, k, counters: Counters::new() }
+    }
+
+    /// Build shard engines from a factory called with each row range.
+    pub fn from_factory(
+        plan: ShardPlan,
+        pool: Arc<ThreadPool>,
+        f: impl Fn((usize, usize)) -> E,
+    ) -> ShardedEngine<E> {
+        let shards = plan.shards.iter().map(|&r| f(r)).collect();
+        ShardedEngine::new(plan, shards, pool)
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.plan.num_shards()
+    }
+
+    /// Borrow the inner shard engines (tests / introspection).
+    pub fn shards(&self) -> &[E] {
+        &self.shards
+    }
+
+    fn refresh_counters(&mut self) {
+        self.counters = reduce::merge_counters(self.shards.iter().map(|e| e.counters()));
+        // One sharded call is one logical GEMM call, not `num_shards`.
+        self.counters.calls /= self.plan.num_shards().max(1) as u64;
+    }
+}
+
+impl<E: GemmEngine + Send + 'static> GemmEngine for ShardedEngine<E> {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.plan.len, self.k)
+    }
+
+    fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.k * m_batch);
+        // A shard job that panicked in an earlier call unwound through
+        // `parallel_map` while the engines were checked out — surface
+        // that state directly instead of a confusing downstream error.
+        assert_eq!(
+            self.shards.len(),
+            self.plan.num_shards(),
+            "sharded engine poisoned: a previous call panicked mid-fan-out"
+        );
+        if self.shards.len() == 1 {
+            let y = self.shards[0].gemm(x, m_batch);
+            self.refresh_counters();
+            return y;
+        }
+        // Shard engines are moved into the pool jobs and moved back with
+        // their outputs — no shared mutable state, no unsafe. The
+        // activation vector is shared read-only via Arc.
+        let xs: Arc<Vec<f32>> = Arc::new(x.to_vec());
+        let engines = std::mem::take(&mut self.shards);
+        let results = self.pool.parallel_map(engines, move |mut e: E| {
+            let y = e.gemm(&xs, m_batch);
+            (e, y)
+        });
+        let mut parts = Vec::with_capacity(results.len());
+        for (e, y) in results {
+            self.shards.push(e);
+            parts.push(y);
+        }
+        let y = reduce::concat_row_shards(&parts, &self.plan, m_batch);
+        self.refresh_counters();
+        y
+    }
+
+    fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    fn reset_counters(&mut self) {
+        for e in &mut self.shards {
+            e.reset_counters();
+        }
+        self.counters.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QuantConfig;
+    use crate::gemm::{CodeGemmEngine, DenseEngine};
+    use crate::parallel::shard;
+    use crate::quant::Quantizer;
+    use crate::util::prng::Prng;
+
+    fn pool() -> Arc<ThreadPool> {
+        Arc::new(ThreadPool::new(4))
+    }
+
+    #[test]
+    fn dense_sharded_is_bit_exact() {
+        let (n, k) = (37, 48);
+        let w = Prng::seeded(1).normal_vec(n * k, 1.0);
+        let x = Prng::seeded(2).normal_vec(k * 3, 1.0);
+        let mut serial = DenseEngine::new(w.clone(), n, k);
+        let plan = ShardPlan::new(n, 4, 1, 1);
+        let mut sharded = ShardedEngine::from_factory(plan, pool(), |(r0, r1)| {
+            DenseEngine::new(shard::dense_rows(&w, k, r0, r1), r1 - r0, k)
+        });
+        assert_eq!(sharded.dims(), (n, k));
+        assert_eq!(sharded.gemm(&x, 3), serial.gemm(&x, 3));
+        assert_eq!(sharded.counters().mac_flops, serial.counters().mac_flops);
+        assert_eq!(sharded.counters().calls, 1);
+    }
+
+    #[test]
+    fn codegemm_sharded_is_bit_exact() {
+        let (n, k) = (64, 128);
+        let w = Prng::seeded(3).normal_vec(n * k, 0.02);
+        let q = Quantizer::new(QuantConfig::parse_label("m2v8g32").unwrap()).quantize(&w, n, k);
+        let x = Prng::seeded(4).normal_vec(k, 1.0);
+        let mut serial = CodeGemmEngine::from_quantized(&q);
+        let plan = ShardPlan::new(n, 3, 8, 1);
+        let mut sharded = ShardedEngine::from_factory(plan, pool(), |(r0, r1)| {
+            CodeGemmEngine::from_quantized(&shard::slice_rows(&q, r0, r1))
+        });
+        assert_eq!(sharded.gemv(&x), serial.gemv(&x));
+        // Gather work is per-row, so merged lookups match the serial run.
+        assert_eq!(sharded.counters().lookups, serial.counters().lookups);
+        assert_eq!(sharded.counters().read_ops, serial.counters().read_ops);
+    }
+
+    #[test]
+    fn single_shard_stays_serial() {
+        let (n, k) = (8, 16);
+        let w = Prng::seeded(5).normal_vec(n * k, 1.0);
+        let x = Prng::seeded(6).normal_vec(k, 1.0);
+        let plan = ShardPlan::serial(n);
+        let mut sharded = ShardedEngine::from_factory(plan, pool(), |(r0, r1)| {
+            DenseEngine::new(shard::dense_rows(&w, k, r0, r1), r1 - r0, k)
+        });
+        assert_eq!(sharded.num_shards(), 1);
+        let y = sharded.gemv(&x);
+        assert_eq!(y, DenseEngine::new(w.clone(), n, k).gemv(&x));
+    }
+
+    #[test]
+    fn counters_reset_recursively() {
+        let (n, k) = (16, 16);
+        let w = Prng::seeded(7).normal_vec(n * k, 1.0);
+        let x = vec![1.0f32; k];
+        let plan = ShardPlan::new(n, 2, 1, 1);
+        let mut sharded = ShardedEngine::from_factory(plan, pool(), |(r0, r1)| {
+            DenseEngine::new(shard::dense_rows(&w, k, r0, r1), r1 - r0, k)
+        });
+        let _ = sharded.gemv(&x);
+        assert!(sharded.counters().mac_flops > 0);
+        sharded.reset_counters();
+        assert_eq!(sharded.counters().mac_flops, 0);
+        assert!(sharded.shards().iter().all(|e| e.counters().mac_flops == 0));
+    }
+}

@@ -1,0 +1,262 @@
+//! Tensor-parallel linear layers (Megatron-style, on the CPU pool).
+//!
+//! Two shard orientations, chosen per layer class by
+//! [`crate::model::LlamaModel::load_parallel`]:
+//!
+//! - **Column-parallel** ([`TpMode::Column`]): the *output* dim `n` is
+//!   sharded; every worker sees the full activation and computes a slice
+//!   of output rows; combining is concatenation (bit-exact). Used for
+//!   Q/K/V and gate/up projections and the LM head.
+//! - **Row-parallel** ([`TpMode::Row`]): the *reduction* dim `k` is
+//!   sharded; every worker computes a full-height partial product over
+//!   its column range; combining is the deterministic ordered all-reduce
+//!   of [`super::reduce::ordered_sum`]. Used for the O and down
+//!   projections, whose inputs arrive already sharded in head/ffn space.
+//!
+//! Row-parallel changes the association order of the k-sum, so it is
+//! *deterministic* but not bit-identical to the serial engine —
+//! outputs differ by float reassociation noise only.
+//!
+//! Relation to [`super::sharded_engine::ShardedEngine`]: `ShardedEngine`
+//! is the statically-dispatched column-parallel wrapper the factory uses
+//! for standalone engines (one concrete engine type per shard);
+//! `TpLinear` is the boxed, mode-carrying variant for model layers where
+//! row-parallel is needed and both orientations must share one type.
+
+use super::plan::ShardPlan;
+use super::reduce;
+use crate::gemm::{Counters, GemmEngine};
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+/// Shard orientation of a tensor-parallel linear.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TpMode {
+    /// Shard the output dim; concatenate shard outputs.
+    Column,
+    /// Shard the reduction dim; ordered all-reduce of partials.
+    Row,
+}
+
+type BoxedEngine = Box<dyn GemmEngine + Send>;
+
+/// A tensor-parallel linear layer over boxed inner engines.
+pub struct TpLinear {
+    mode: TpMode,
+    /// Partition of `n` (Column) or `k` (Row).
+    plan: ShardPlan,
+    shards: Vec<BoxedEngine>,
+    pool: Arc<ThreadPool>,
+    n: usize,
+    k: usize,
+    counters: Counters,
+}
+
+impl TpLinear {
+    /// Column-parallel: `shards[i]` computes output rows `plan.range(i)`
+    /// over the full reduction dim.
+    pub fn column(plan: ShardPlan, shards: Vec<BoxedEngine>, pool: Arc<ThreadPool>) -> TpLinear {
+        assert_eq!(plan.num_shards(), shards.len(), "one engine per shard");
+        assert!(!shards.is_empty(), "need at least one shard");
+        let k = shards[0].dims().1;
+        for (i, e) in shards.iter().enumerate() {
+            let (r0, r1) = plan.range(i);
+            assert_eq!(e.dims().0, r1 - r0, "column shard {i} row count mismatch");
+            assert_eq!(e.dims().1, k, "column shard {i} reduction dim mismatch");
+        }
+        let n = plan.len;
+        TpLinear { mode: TpMode::Column, plan, shards, pool, n, k, counters: Counters::new() }
+    }
+
+    /// Row-parallel: `shards[i]` computes the full `n` output rows over
+    /// reduction columns `plan.range(i)`.
+    pub fn row(plan: ShardPlan, shards: Vec<BoxedEngine>, pool: Arc<ThreadPool>) -> TpLinear {
+        assert_eq!(plan.num_shards(), shards.len(), "one engine per shard");
+        assert!(!shards.is_empty(), "need at least one shard");
+        let n = shards[0].dims().0;
+        for (i, e) in shards.iter().enumerate() {
+            let (c0, c1) = plan.range(i);
+            assert_eq!(e.dims().0, n, "row shard {i} output dim mismatch");
+            assert_eq!(e.dims().1, c1 - c0, "row shard {i} reduction width mismatch");
+        }
+        let k = plan.len;
+        TpLinear { mode: TpMode::Row, plan, shards, pool, n, k, counters: Counters::new() }
+    }
+
+    pub fn mode(&self) -> TpMode {
+        self.mode
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.plan.num_shards()
+    }
+
+    fn refresh_counters(&mut self) {
+        self.counters = reduce::merge_counters(self.shards.iter().map(|e| e.counters()));
+        self.counters.calls /= self.plan.num_shards().max(1) as u64;
+    }
+
+    /// Fan the per-shard inputs out over the pool, moving engines into
+    /// the jobs and back; returns per-shard outputs in shard order.
+    /// Inputs are `Arc`s so Column mode shares one activation buffer
+    /// across all shards instead of copying it per shard.
+    fn fan_out(&mut self, inputs: Vec<Arc<Vec<f32>>>, m_batch: usize) -> Vec<Vec<f32>> {
+        let engines = std::mem::take(&mut self.shards);
+        let items: Vec<(BoxedEngine, Arc<Vec<f32>>)> = engines.into_iter().zip(inputs).collect();
+        let results = self.pool.parallel_map(items, move |(mut e, xin)| {
+            let y = e.gemm(&xin, m_batch);
+            (e, y)
+        });
+        let mut parts = Vec::with_capacity(results.len());
+        for (e, y) in results {
+            self.shards.push(e);
+            parts.push(y);
+        }
+        parts
+    }
+}
+
+impl GemmEngine for TpLinear {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            TpMode::Column => "tp-column",
+            TpMode::Row => "tp-row",
+        }
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.n, self.k)
+    }
+
+    fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.k * m_batch);
+        assert_eq!(
+            self.shards.len(),
+            self.plan.num_shards(),
+            "tp linear poisoned: a previous call panicked mid-fan-out"
+        );
+        if self.shards.len() == 1 {
+            let y = self.shards[0].gemm(x, m_batch);
+            self.refresh_counters();
+            return y;
+        }
+        let y = match self.mode {
+            TpMode::Column => {
+                // Every shard reads the whole activation (one shared
+                // buffer; the Arc clone is free).
+                let xs = Arc::new(x.to_vec());
+                let inputs = vec![xs; self.plan.num_shards()];
+                let parts = self.fan_out(inputs, m_batch);
+                reduce::concat_row_shards(&parts, &self.plan, m_batch)
+            }
+            TpMode::Row => {
+                // Each shard reads its own column range of every batch col.
+                let k = self.k;
+                let inputs: Vec<Arc<Vec<f32>>> = self
+                    .plan
+                    .shards
+                    .iter()
+                    .map(|&(c0, c1)| {
+                        let mut xi = Vec::with_capacity((c1 - c0) * m_batch);
+                        for b in 0..m_batch {
+                            xi.extend_from_slice(&x[b * k + c0..b * k + c1]);
+                        }
+                        Arc::new(xi)
+                    })
+                    .collect();
+                let parts = self.fan_out(inputs, m_batch);
+                reduce::ordered_sum(&parts)
+            }
+        };
+        self.refresh_counters();
+        y
+    }
+
+    fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    fn reset_counters(&mut self) {
+        for e in &mut self.shards {
+            e.reset_counters();
+        }
+        self.counters.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::DenseEngine;
+    use crate::parallel::shard;
+    use crate::util::prng::Prng;
+    use crate::util::stats;
+
+    fn pool() -> Arc<ThreadPool> {
+        Arc::new(ThreadPool::new(4))
+    }
+
+    fn dense_column(w: &[f32], n: usize, k: usize, shards: usize) -> TpLinear {
+        let plan = ShardPlan::new(n, shards, 1, 1);
+        let engines: Vec<BoxedEngine> = plan
+            .shards
+            .iter()
+            .map(|&(r0, r1)| {
+                Box::new(DenseEngine::new(shard::dense_rows(w, k, r0, r1), r1 - r0, k))
+                    as BoxedEngine
+            })
+            .collect();
+        TpLinear::column(plan, engines, pool())
+    }
+
+    fn dense_row(w: &[f32], n: usize, k: usize, shards: usize) -> TpLinear {
+        let plan = ShardPlan::new(k, shards, 1, 1);
+        let engines: Vec<BoxedEngine> = plan
+            .shards
+            .iter()
+            .map(|&(c0, c1)| {
+                Box::new(DenseEngine::new(shard::dense_cols(w, k, c0, c1), n, c1 - c0))
+                    as BoxedEngine
+            })
+            .collect();
+        TpLinear::row(plan, engines, pool())
+    }
+
+    #[test]
+    fn column_parallel_is_bit_exact() {
+        let (n, k) = (30, 40);
+        let w = Prng::seeded(1).normal_vec(n * k, 1.0);
+        let x = Prng::seeded(2).normal_vec(k * 2, 1.0);
+        let mut serial = DenseEngine::new(w.clone(), n, k);
+        let mut tp = dense_column(&w, n, k, 3);
+        assert_eq!(tp.dims(), (n, k));
+        assert_eq!(tp.gemm(&x, 2), serial.gemm(&x, 2));
+    }
+
+    #[test]
+    fn row_parallel_matches_serial_up_to_reassociation() {
+        let (n, k) = (24, 64);
+        let w = Prng::seeded(3).normal_vec(n * k, 1.0);
+        let x = Prng::seeded(4).normal_vec(k * 2, 1.0);
+        let mut serial = DenseEngine::new(w.clone(), n, k);
+        let mut tp = dense_row(&w, n, k, 4);
+        assert_eq!(tp.dims(), (n, k));
+        let (y, y_ref) = (tp.gemm(&x, 2), serial.gemm(&x, 2));
+        assert!(stats::rel_l2(&y, &y_ref) < 1e-5, "reassociation noise only");
+        // MACs are conserved exactly under the k-split.
+        assert_eq!(tp.counters().mac_flops, serial.counters().mac_flops);
+    }
+
+    #[test]
+    fn row_parallel_is_deterministic() {
+        let (n, k) = (16, 48);
+        let w = Prng::seeded(5).normal_vec(n * k, 1.0);
+        let x = Prng::seeded(6).normal_vec(k, 1.0);
+        let run = || {
+            let mut tp = dense_row(&w, n, k, 3);
+            tp.gemv(&x)
+        };
+        // Ordered reduction ⇒ bitwise identical across runs/schedules.
+        assert_eq!(run(), run());
+    }
+}

@@ -1,8 +1,17 @@
 //! Fixed-size worker thread pool (offline stand-in for `rayon`/`tokio`).
 //!
-//! Drives the coordinator's request execution and parallel parameter
-//! sweeps. Scoped `parallel_map` keeps the API simple and safe.
+//! Drives the coordinator's request execution, parallel parameter sweeps,
+//! and the `parallel::` sharded GEMM engines (which share one pool via
+//! `Arc<ThreadPool>` across every linear layer). Scoped `parallel_map`
+//! keeps the API simple and safe.
+//!
+//! Panic behaviour: a panicking job never kills a worker thread (the
+//! unwind is caught, so the pool keeps its full width) and never wedges
+//! `parallel_map` — the first panic payload is re-thrown at the
+//! `parallel_map` caller once all jobs of that call have settled.
 
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -15,8 +24,12 @@ enum Msg {
 }
 
 /// A fixed pool of worker threads consuming a shared queue.
+///
+/// The sender side is wrapped in a `Mutex` so the pool is `Sync` on every
+/// supported toolchain (`mpsc::Sender` gained `Sync` only in newer Rust)
+/// — sharded engines hold `Arc<ThreadPool>` and must be `Send`.
 pub struct ThreadPool {
-    tx: mpsc::Sender<Msg>,
+    tx: Mutex<mpsc::Sender<Msg>>,
     handles: Vec<thread::JoinHandle<()>>,
     size: usize,
 }
@@ -34,16 +47,25 @@ impl ThreadPool {
                 thread::Builder::new()
                     .name(format!("codegemm-worker-{i}"))
                     .spawn(move || loop {
-                        let msg = { rx.lock().unwrap().recv() };
+                        // The lock guard is dropped before the job runs, so
+                        // a panicking job can never poison the receiver.
+                        let msg = { rx.lock().expect("job queue lock").recv() };
                         match msg {
-                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Run(job)) => {
+                                // Catch unwinds so a panicking job does not
+                                // kill this worker (which would shrink the
+                                // pool and wedge later calls). parallel_map
+                                // jobs catch their own panics first and
+                                // forward the payload to the caller.
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Ok(Msg::Shutdown) | Err(_) => break,
                         }
                     })
                     .expect("spawn worker"),
             );
         }
-        ThreadPool { tx, handles, size }
+        ThreadPool { tx: Mutex::new(tx), handles, size }
     }
 
     /// Pool sized to available parallelism.
@@ -52,16 +74,33 @@ impl ThreadPool {
         ThreadPool::new(n)
     }
 
+    /// Pool sized to `n`, or available parallelism when `n == 0`.
+    pub fn with_threads(n: usize) -> ThreadPool {
+        if n == 0 {
+            ThreadPool::default_size()
+        } else {
+            ThreadPool::new(n)
+        }
+    }
+
     pub fn size(&self) -> usize {
         self.size
     }
 
+    fn send(&self, msg: Msg) {
+        self.tx.lock().expect("pool sender lock").send(msg).expect("pool alive");
+    }
+
     /// Fire-and-forget job submission.
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
-        self.tx.send(Msg::Run(Box::new(job))).expect("pool alive");
+        self.send(Msg::Run(Box::new(job)));
     }
 
     /// Apply `f` to each item, preserving order, using the pool.
+    ///
+    /// If `f` panics for any item, the panic is re-thrown on the calling
+    /// thread (after the remaining items have settled) instead of
+    /// deadlocking — mirroring `std::thread::scope` semantics.
     pub fn parallel_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -70,20 +109,33 @@ impl ThreadPool {
     {
         let n = items.len();
         let f = Arc::new(f);
-        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        let (rtx, rrx) = mpsc::channel::<(usize, thread::Result<R>)>();
         for (i, item) in items.into_iter().enumerate() {
             let f = Arc::clone(&f);
             let rtx = rtx.clone();
             self.submit(move || {
-                let r = f(item);
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
                 let _ = rtx.send((i, r));
             });
         }
         drop(rtx);
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut panic: Option<Box<dyn Any + Send>> = None;
         for _ in 0..n {
             let (i, r) = rrx.recv().expect("worker result");
-            out[i] = Some(r);
+            match r {
+                Ok(v) => out[i] = Some(v),
+                // Keep draining so every job of this call settles before
+                // the unwind; only the first payload is re-thrown.
+                Err(p) => {
+                    if panic.is_none() {
+                        panic = Some(p);
+                    }
+                }
+            }
+        }
+        if let Some(p) = panic {
+            resume_unwind(p);
         }
         out.into_iter().map(|o| o.unwrap()).collect()
     }
@@ -92,7 +144,7 @@ impl ThreadPool {
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         for _ in 0..self.handles.len() {
-            let _ = self.tx.send(Msg::Shutdown);
+            self.send(Msg::Shutdown);
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -139,5 +191,55 @@ mod tests {
         assert_eq!(pool.size(), 1);
         let out = pool.parallel_map(vec![1, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn with_threads_zero_is_auto() {
+        let pool = ThreadPool::with_threads(0);
+        assert!(pool.size() >= 1);
+        assert_eq!(ThreadPool::with_threads(3).size(), 3);
+    }
+
+    #[test]
+    fn panicking_submit_job_does_not_kill_workers() {
+        let pool = ThreadPool::new(2);
+        for _ in 0..4 {
+            pool.submit(|| panic!("boom"));
+        }
+        // All workers must still be alive and processing.
+        let out = pool.parallel_map(vec![1, 2, 3, 4], |x| x * 10);
+        assert_eq!(out, vec![10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn parallel_map_propagates_panic() {
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_map(vec![0, 1, 2, 3], |x| {
+                if x == 2 {
+                    panic!("item failed");
+                }
+                x
+            })
+        }));
+        assert!(caught.is_err(), "panic must surface at the caller");
+        // The pool survives and later calls work.
+        let out = pool.parallel_map(vec![5, 6], |x| x + 1);
+        assert_eq!(out, vec![6, 7]);
+    }
+
+    #[test]
+    fn pool_is_shareable_across_threads() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let p = Arc::clone(&pool);
+            joins.push(thread::spawn(move || {
+                p.parallel_map(vec![t; 8], |x: usize| x * 2).iter().sum::<usize>()
+            }));
+        }
+        for (t, j) in joins.into_iter().enumerate() {
+            assert_eq!(j.join().unwrap(), t * 2 * 8);
+        }
     }
 }

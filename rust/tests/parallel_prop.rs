@@ -1,0 +1,226 @@
+//! Property tests for the `parallel::` subsystem (via `util::proptest`):
+//! over random shapes, quant configs and shard counts,
+//!
+//! - `ShardedEngine` output is **bit-identical** (`==`, not approximate)
+//!   to the wrapped serial engine, and
+//! - merged shard `Counters` equal the serial engine's counters for the
+//!   conserved quantities (MACs for dense/dequant/uniform, lookups and
+//!   read ops for the table-lookup kernels).
+
+use codegemm::config::QuantConfig;
+use codegemm::gemm::{
+    CodeGemmEngine, DenseEngine, DequantEngine, GemmEngine, LutGemmEngine, UniformGemmEngine,
+};
+use codegemm::parallel::{shard, ShardPlan, ShardedEngine, TpLinear};
+use codegemm::quant::bcq::BcqLinear;
+use codegemm::quant::uniform::UniformLinear;
+use codegemm::quant::Quantizer;
+use codegemm::util::proptest as pt;
+use codegemm::util::prng::Prng;
+use codegemm::util::stats;
+use codegemm::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+/// Random (v, m, b, g, n, k, shards, m_batch, seed) cases.
+fn gen_case() -> impl pt::Gen<(usize, usize, usize, i64, usize, usize, usize, usize, u64)> {
+    pt::gen_fn(|rng: &mut Prng| {
+        let v = [4usize, 8][rng.index(2)];
+        let m = 1 + rng.index(2);
+        let b = 3 + rng.index(4);
+        let g = [32i64, 64, -1][rng.index(3)];
+        let n = 8 * (1 + rng.index(8)); // 8..64 rows
+        let k = 32 * (1 + rng.index(4)); // 32..128 cols
+        let shards = 1 + rng.index(5); // 1..5
+        let mb = 1 + rng.index(3); // 1..3
+        (v, m, b, g, n, k, shards, mb, rng.next_u64())
+    })
+}
+
+#[test]
+fn prop_sharded_codegemm_bit_exact_and_lookups_conserved() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let cfg = pt::PropConfig { cases: 20, ..Default::default() };
+    pt::assert_prop("sharded codegemm == serial", cfg, &gen_case(), |&(v, m, b, g, n, k, shards, mb, seed)| {
+        let Ok(qc) = QuantConfig::new(v, m, b, g) else {
+            return Ok(()); // invalid combination — vacuous
+        };
+        let w = Prng::seeded(seed).normal_vec(n * k, 0.02);
+        let q = Quantizer::new(qc).quantize(&w, n, k);
+        let x = Prng::seeded(seed ^ 1).normal_vec(k * mb, 1.0);
+        let mut serial = CodeGemmEngine::from_quantized(&q);
+        let plan = ShardPlan::new(n, shards, 1, 1);
+        let mut sharded = ShardedEngine::from_factory(plan, Arc::clone(&pool), |(r0, r1)| {
+            CodeGemmEngine::from_quantized(&shard::slice_rows(&q, r0, r1))
+        });
+        let (ys, yp) = (serial.gemm(&x, mb), sharded.gemm(&x, mb));
+        pt::ensure(ys == yp, format!("output not bit-identical ({qc:?} {n}x{k}/{shards})"))?;
+        pt::ensure(
+            sharded.counters().lookups == serial.counters().lookups,
+            format!(
+                "lookups diverged: sharded {} vs serial {}",
+                sharded.counters().lookups,
+                serial.counters().lookups
+            ),
+        )?;
+        pt::ensure(
+            sharded.counters().read_ops == serial.counters().read_ops,
+            "read_ops diverged",
+        )
+    });
+}
+
+#[test]
+fn prop_sharded_dense_bit_exact_and_macs_conserved() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let cfg = pt::PropConfig { cases: 24, ..Default::default() };
+    pt::assert_prop("sharded dense == serial", cfg, &gen_case(), |&(_, _, _, _, n, k, shards, mb, seed)| {
+        let w = Prng::seeded(seed).normal_vec(n * k, 1.0);
+        let x = Prng::seeded(seed ^ 2).normal_vec(k * mb, 1.0);
+        let mut serial = DenseEngine::new(w.clone(), n, k);
+        let plan = ShardPlan::new(n, shards, 1, 1);
+        let mut sharded = ShardedEngine::from_factory(plan, Arc::clone(&pool), |(r0, r1)| {
+            DenseEngine::new(shard::dense_rows(&w, k, r0, r1), r1 - r0, k)
+        });
+        let (ys, yp) = (serial.gemm(&x, mb), sharded.gemm(&x, mb));
+        pt::ensure(ys == yp, format!("dense output not bit-identical ({n}x{k}/{shards})"))?;
+        pt::ensure(
+            sharded.counters().mac_flops == serial.counters().mac_flops,
+            "dense MACs diverged",
+        )?;
+        pt::ensure(sharded.counters().calls == serial.counters().calls, "calls diverged")
+    });
+}
+
+#[test]
+fn prop_sharded_dequant_bit_exact_and_work_conserved() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let cfg = pt::PropConfig { cases: 16, ..Default::default() };
+    pt::assert_prop("sharded dequant == serial", cfg, &gen_case(), |&(v, m, b, g, n, k, shards, mb, seed)| {
+        let Ok(qc) = QuantConfig::new(v, m, b, g) else {
+            return Ok(());
+        };
+        let w = Prng::seeded(seed).normal_vec(n * k, 0.02);
+        let q = Quantizer::new(qc).quantize(&w, n, k);
+        let x = Prng::seeded(seed ^ 3).normal_vec(k * mb, 1.0);
+        let mut serial = DequantEngine::from_quantized(&q);
+        let plan = ShardPlan::new(n, shards, 1, 1);
+        let mut sharded = ShardedEngine::from_factory(plan, Arc::clone(&pool), |(r0, r1)| {
+            DequantEngine::from_quantized(&shard::slice_rows(&q, r0, r1))
+        });
+        let (ys, yp) = (serial.gemm(&x, mb), sharded.gemm(&x, mb));
+        pt::ensure(ys == yp, "dequant output not bit-identical")?;
+        // Dequant decodes and multiplies per row: MACs and lookups are
+        // both conserved under row sharding.
+        pt::ensure(
+            sharded.counters().mac_flops == serial.counters().mac_flops,
+            "dequant MACs diverged",
+        )?;
+        pt::ensure(
+            sharded.counters().lookups == serial.counters().lookups,
+            "dequant lookups diverged",
+        )
+    });
+}
+
+#[test]
+fn prop_sharded_uniform_and_lut_bit_exact() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let cfg = pt::PropConfig { cases: 12, ..Default::default() };
+    pt::assert_prop("sharded uniform/lut == serial", cfg, &gen_case(), |&(_, _, _, _, n, k, shards, mb, seed)| {
+        let w = Prng::seeded(seed).normal_vec(n * k, 0.05);
+        let x = Prng::seeded(seed ^ 4).normal_vec(k * mb, 1.0);
+        let plan = ShardPlan::new(n, shards, 1, 1);
+
+        let uq = UniformLinear::quantize(&w, n, k, 4, 32).expect("uniform");
+        let mut serial_u = UniformGemmEngine::new(uq);
+        let mut sharded_u = ShardedEngine::from_factory(plan.clone(), Arc::clone(&pool), |(r0, r1)| {
+            let ws = shard::dense_rows(&w, k, r0, r1);
+            UniformGemmEngine::new(UniformLinear::quantize(&ws, r1 - r0, k, 4, 32).unwrap())
+        });
+        pt::ensure(serial_u.gemm(&x, mb) == sharded_u.gemm(&x, mb), "uniform not bit-identical")?;
+        pt::ensure(
+            sharded_u.counters().mac_flops == serial_u.counters().mac_flops,
+            "uniform MACs diverged",
+        )?;
+
+        let bq = BcqLinear::quantize(&w, n, k, 2, 32).expect("bcq");
+        let mut serial_l = LutGemmEngine::new(bq);
+        let mut sharded_l = ShardedEngine::from_factory(plan, Arc::clone(&pool), |(r0, r1)| {
+            let ws = shard::dense_rows(&w, k, r0, r1);
+            LutGemmEngine::new(BcqLinear::quantize(&ws, r1 - r0, k, 2, 32).unwrap())
+        });
+        pt::ensure(serial_l.gemm(&x, mb) == sharded_l.gemm(&x, mb), "lut not bit-identical")?;
+        pt::ensure(
+            sharded_l.counters().lookups == serial_l.counters().lookups,
+            "lut lookups diverged",
+        )
+    });
+}
+
+#[test]
+fn prop_shard_plans_cover_and_align() {
+    let gen = pt::gen_fn(|rng: &mut Prng| {
+        let align = [1usize, 4, 8, 32][rng.index(4)];
+        let len = align * (1 + rng.index(64)) + rng.index(align); // maybe ragged
+        let shards = 1 + rng.index(8);
+        let min = 1 + rng.index(48);
+        (len, shards, min, align)
+    });
+    pt::assert_prop(
+        "plans are disjoint aligned covers",
+        pt::PropConfig { cases: 200, ..Default::default() },
+        &gen,
+        |&(len, shards, min, align)| {
+            let p = ShardPlan::new(len, shards, min, align);
+            pt::ensure(p.num_shards() <= shards.max(1), "too many shards")?;
+            let mut pos = 0usize;
+            for (i, &(a, b)) in p.shards.iter().enumerate() {
+                pt::ensure(a == pos && b > a, format!("shard {i} not contiguous"))?;
+                pt::ensure(
+                    a % align == 0,
+                    format!("shard {i} start {a} not aligned to {align}"),
+                )?;
+                pos = b;
+            }
+            pt::ensure(pos == len, format!("cover ends at {pos}, want {len}"))
+        },
+    );
+}
+
+#[test]
+fn prop_row_parallel_deterministic_and_close() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let gen = pt::gen_fn(|rng: &mut Prng| {
+        let n = 8 * (1 + rng.index(6));
+        let k = 16 * (1 + rng.index(8));
+        let shards = 1 + rng.index(4);
+        (n, k, shards, rng.next_u64())
+    });
+    pt::assert_prop(
+        "row-parallel == serial up to reassociation, deterministic",
+        pt::PropConfig { cases: 24, ..Default::default() },
+        &gen,
+        |&(n, k, shards, seed)| {
+            let w = Prng::seeded(seed).normal_vec(n * k, 1.0);
+            let x = Prng::seeded(seed ^ 5).normal_vec(k, 1.0);
+            let mut serial = DenseEngine::new(w.clone(), n, k);
+            let mk = || {
+                let plan = ShardPlan::new(k, shards, 1, 1);
+                let engines: Vec<Box<dyn GemmEngine + Send>> = plan
+                    .shards
+                    .iter()
+                    .map(|&(c0, c1)| {
+                        Box::new(DenseEngine::new(shard::dense_cols(&w, k, c0, c1), n, c1 - c0))
+                            as Box<dyn GemmEngine + Send>
+                    })
+                    .collect();
+                TpLinear::row(plan, engines, Arc::clone(&pool))
+            };
+            let y1 = mk().gemv(&x);
+            let y2 = mk().gemv(&x);
+            pt::ensure(y1 == y2, "row-parallel must be deterministic")?;
+            let rel = stats::rel_l2(&y1, &serial.gemv(&x));
+            pt::ensure(rel < 1e-5, format!("row-parallel diverged: rel {rel}"))
+        },
+    );
+}

@@ -1,0 +1,246 @@
+//! Offline stand-in for the [`anyhow`](https://docs.rs/anyhow) crate.
+//!
+//! The build environment has no network access, so the real crate cannot
+//! be fetched; this vendored shim implements the subset the codebase
+//! uses with the same semantics:
+//!
+//! - [`Error`]: an opaque error value carrying a context chain.
+//! - [`Result<T>`]: alias with `Error` as the default error type.
+//! - `?` conversion from any `std::error::Error + Send + Sync + 'static`.
+//! - [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, prepending a message to the chain.
+//! - [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//! - `{e}` displays the outermost message; `{e:#}` displays the whole
+//!   chain joined by `": "` (matching anyhow's alternate formatting).
+
+use std::fmt::{self, Debug, Display};
+
+/// An error value: a chain of messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single displayable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context message to the chain.
+    pub fn context<C: Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages of the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Mirror anyhow's Debug: message, then the cause chain.
+        match self.chain.split_first() {
+            Some((head, rest)) if !rest.is_empty() => {
+                write!(f, "{head}\n\nCaused by:")?;
+                for (i, c) in rest.iter().enumerate() {
+                    write!(f, "\n    {i}: {c}")?;
+                }
+                Ok(())
+            }
+            Some((head, _)) => write!(f, "{head}"),
+            None => write!(f, "(empty error)"),
+        }
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+// Private extension trait so `Context` can be implemented for both
+// `Result<T, E: std::error::Error>` and `Result<T, Error>` without
+// overlapping impls (the same device the real anyhow uses: `Error` does
+// not implement `std::error::Error`, so the blanket impl skips it).
+mod ext {
+    use super::*;
+
+    pub trait StdError {
+        fn ext_context<C: Display>(self, context: C) -> Error;
+    }
+
+    impl<E> StdError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context<C: Display>(self, context: C) -> Error {
+            Error::from(self).context(context)
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context<C: Display>(self, context: C) -> Error {
+            self.context(context)
+        }
+    }
+}
+
+/// Attach context to errors (on `Result`) or turn `None` into an error
+/// (on `Option`).
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::StdError + Send + Sync + 'static,
+{
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "file missing");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_formats() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: file missing");
+        let e2 = Err::<(), Error>(e).with_context(|| "loading artifacts").unwrap_err();
+        assert_eq!(format!("{e2:#}"), "loading artifacts: reading manifest: file missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x == 0 {
+                bail!("zero is not allowed");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero is not allowed");
+        assert_eq!(f(-3).unwrap_err().to_string(), "negative input -3");
+        let e = anyhow!("custom {}", 7);
+        assert_eq!(e.to_string(), "custom 7");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

@@ -1,0 +1,403 @@
+//! Offline stub of the `xla`/PJRT bindings.
+//!
+//! The production build links the real XLA extension; this offline image
+//! cannot, so the subset of the API the codebase touches is provided
+//! here with two behaviours:
+//!
+//! - **Builder-graph programs work.** `XlaBuilder` records a tiny
+//!   expression graph (parameters, `add_`, `sqrt`) and `compile` +
+//!   `execute` evaluate it on host arrays — enough for the PJRT
+//!   self-test (`codegemm doctor`) to pass end-to-end.
+//! - **HLO-text artifacts do not.** `HloModuleProto::from_text_file`
+//!   returns a clear "offline stub" error, so the AOT/serve paths fail
+//!   loudly (and their tests skip when artifacts are absent).
+//!
+//! Handles hold `Rc`s like the real bindings, so none of these types are
+//! `Send`/`Sync` — the `unsafe impl Send` justifications in
+//! `codegemm::runtime` keep the same obligations.
+
+use std::fmt::{self, Display};
+use std::rc::Rc;
+
+/// Error type mirroring `xla::Error` (implements `std::error::Error`, so
+/// `?` converts into `anyhow::Error`).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error(m.into())
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+// --------------------------------------------------------------- literals
+
+/// Element types a [`Literal`] can hold (exposed only through the
+/// `NativeType` conversion trait).
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl Payload {
+    fn len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::Tuple(v) => v.len(),
+        }
+    }
+}
+
+/// Host-side tensor value (array or tuple), with dimensions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+/// Native element types supported by the stub.
+pub trait NativeType: Copy + 'static {
+    fn to_payload(data: &[Self]) -> Payload;
+    fn from_payload(p: &Payload) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn to_payload(data: &[Self]) -> Payload {
+        Payload::F32(data.to_vec())
+    }
+    fn from_payload(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn to_payload(data: &[Self]) -> Payload {
+        Payload::I32(data.to_vec())
+    }
+    fn from_payload(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { payload: T::to_payload(data), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.payload.len() {
+            return Err(Error::msg(format!(
+                "reshape: {} elements cannot view as {:?}",
+                self.payload.len(),
+                dims
+            )));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the raw elements into a host slice.
+    pub fn copy_raw_to<T: NativeType>(&self, dst: &mut [T]) -> Result<()> {
+        let src = T::from_payload(&self.payload)
+            .ok_or_else(|| Error::msg("copy_raw_to: element type mismatch"))?;
+        if src.len() != dst.len() {
+            return Err(Error::msg(format!(
+                "copy_raw_to: literal has {} elements, destination {}",
+                src.len(),
+                dst.len()
+            )));
+        }
+        dst.copy_from_slice(&src);
+        Ok(())
+    }
+
+    /// Clone the elements out as a `Vec`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_payload(&self.payload).ok_or_else(|| Error::msg("to_vec: element type mismatch"))
+    }
+
+    /// Destructure a 3-tuple literal.
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal)> {
+        match self.payload {
+            Payload::Tuple(mut v) if v.len() == 3 => {
+                let c = v.pop().unwrap();
+                let b = v.pop().unwrap();
+                let a = v.pop().unwrap();
+                Ok((a, b, c))
+            }
+            _ => Err(Error::msg("to_tuple3: literal is not a 3-tuple")),
+        }
+    }
+
+    /// Build a tuple literal (used by tests).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        let n = elems.len() as i64;
+        Literal { payload: Payload::Tuple(elems), dims: vec![n] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.payload.len()
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+// ---------------------------------------------------------------- builder
+
+/// Array shape (element type is tracked only at construction).
+#[derive(Clone, Debug)]
+pub struct Shape {
+    dims: Vec<i64>,
+}
+
+impl Shape {
+    pub fn array<T: NativeType>(dims: Vec<i64>) -> Shape {
+        Shape { dims }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[derive(Debug)]
+enum Node {
+    Parameter(usize),
+    Add(Rc<Node>, Rc<Node>),
+    Sqrt(Rc<Node>),
+}
+
+fn eval(node: &Node, args: &[&Literal]) -> Result<Vec<f32>> {
+    match node {
+        Node::Parameter(i) => args
+            .get(*i)
+            .ok_or_else(|| Error::msg(format!("missing argument {i}")))?
+            .to_vec::<f32>(),
+        Node::Add(a, b) => {
+            let (va, vb) = (eval(a, args)?, eval(b, args)?);
+            if va.len() != vb.len() {
+                return Err(Error::msg("add: shape mismatch"));
+            }
+            Ok(va.iter().zip(&vb).map(|(x, y)| x + y).collect())
+        }
+        Node::Sqrt(a) => Ok(eval(a, args)?.into_iter().map(f32::sqrt).collect()),
+    }
+}
+
+/// Records a small expression graph.
+pub struct XlaBuilder {
+    _name: String,
+}
+
+impl XlaBuilder {
+    pub fn new(name: &str) -> XlaBuilder {
+        XlaBuilder { _name: name.to_string() }
+    }
+
+    pub fn parameter_s(&self, index: i64, _shape: &Shape, _name: &str) -> Result<XlaOp> {
+        Ok(XlaOp { node: Rc::new(Node::Parameter(index as usize)) })
+    }
+}
+
+/// A node in the builder graph.
+#[derive(Clone)]
+pub struct XlaOp {
+    node: Rc<Node>,
+}
+
+impl XlaOp {
+    pub fn add_(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        Ok(XlaOp { node: Rc::new(Node::Add(self.node.clone(), rhs.node.clone())) })
+    }
+
+    pub fn sqrt(&self) -> Result<XlaOp> {
+        Ok(XlaOp { node: Rc::new(Node::Sqrt(self.node.clone())) })
+    }
+
+    pub fn build(&self) -> Result<XlaComputation> {
+        Ok(XlaComputation { root: Some(self.node.clone()) })
+    }
+}
+
+/// A computation: either a builder graph (executable by the stub) or an
+/// HLO proto (never constructible offline).
+pub struct XlaComputation {
+    root: Option<Rc<Node>>,
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { root: None }
+    }
+}
+
+/// Parsed HLO module. The offline stub cannot parse HLO text, so the only
+/// constructor always errors (callers attach the artifact path as
+/// context, producing an actionable message).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::msg(
+            "offline xla stub cannot parse HLO text (the real XLA extension is not linked)",
+        ))
+    }
+}
+
+// ------------------------------------------------------------------- PJRT
+
+/// Stand-in PJRT client. Holds an `Rc` so the type is intentionally not
+/// `Send`/`Sync`, matching the real bindings.
+pub struct PjRtClient {
+    _marker: Rc<()>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _marker: Rc::new(()) })
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match &comp.root {
+            Some(root) => {
+                Ok(PjRtLoadedExecutable { root: root.clone(), _marker: self._marker.clone() })
+            }
+            None => Err(Error::msg(
+                "offline xla stub cannot compile HLO protos (the real XLA extension is not linked)",
+            )),
+        }
+    }
+}
+
+/// Borrow-a-literal bound for `execute`'s generic argument (the real API
+/// accepts both `Literal` and `&Literal` argument slices).
+pub trait BorrowLiteral {
+    fn borrow_literal(&self) -> &Literal;
+}
+
+impl BorrowLiteral for Literal {
+    fn borrow_literal(&self) -> &Literal {
+        self
+    }
+}
+
+impl<'a> BorrowLiteral for &'a Literal {
+    fn borrow_literal(&self) -> &Literal {
+        *self
+    }
+}
+
+/// A compiled executable (builder graphs only, in the stub).
+pub struct PjRtLoadedExecutable {
+    root: Rc<Node>,
+    _marker: Rc<()>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with one argument list; returns per-device, per-output
+    /// buffers like the real API (`[0][0]` is the first output).
+    pub fn execute<T: BorrowLiteral>(&self, args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let refs: Vec<&Literal> = args.iter().map(|a| a.borrow_literal()).collect();
+        let out = eval(&self.root, &refs)?;
+        let n = out.len() as i64;
+        let lit = Literal { payload: Payload::F32(out), dims: vec![n] };
+        Ok(vec![vec![PjRtBuffer { lit }]])
+    }
+}
+
+/// Device buffer holding a result.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_graph_executes() {
+        let client = PjRtClient::cpu().unwrap();
+        let b = XlaBuilder::new("t");
+        let x = b.parameter_s(0, &Shape::array::<f32>(vec![4]), "x").unwrap();
+        let y = x.add_(&x).unwrap().sqrt().unwrap();
+        let exe = client.compile(&y.build().unwrap()).unwrap();
+        let input = Literal::vec1(&[2f32, 8.0, 18.0, 32.0]);
+        let out = exe.execute::<Literal>(&[input]).unwrap()[0][0].to_literal_sync().unwrap();
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![2f32, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn execute_accepts_literal_refs() {
+        let client = PjRtClient::cpu().unwrap();
+        let b = XlaBuilder::new("t");
+        let x = b.parameter_s(0, &Shape::array::<f32>(vec![2]), "x").unwrap();
+        let exe = client.compile(&x.build().unwrap()).unwrap();
+        let input = Literal::vec1(&[1f32, 2.0]);
+        let args: Vec<&Literal> = vec![&input];
+        let out = exe.execute::<&Literal>(&args).unwrap()[0][0].to_literal_sync().unwrap();
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![1f32, 2.0]);
+    }
+
+    #[test]
+    fn hlo_text_errors_clearly() {
+        let e = HloModuleProto::from_text_file("/tmp/x.hlo.txt").unwrap_err();
+        assert!(e.to_string().contains("offline xla stub"));
+    }
+
+    #[test]
+    fn literal_roundtrips() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+        let mut dst = [0i32; 4];
+        l.copy_raw_to(&mut dst).unwrap();
+        assert_eq!(dst, [1, 2, 3, 4]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn tuple3_destructures() {
+        let t = Literal::tuple(vec![
+            Literal::vec1(&[1f32]),
+            Literal::vec1(&[2f32]),
+            Literal::vec1(&[3f32]),
+        ]);
+        let (a, b, c) = t.to_tuple3().unwrap();
+        assert_eq!(a.to_vec::<f32>().unwrap(), vec![1.0]);
+        assert_eq!(b.to_vec::<f32>().unwrap(), vec![2.0]);
+        assert_eq!(c.to_vec::<f32>().unwrap(), vec![3.0]);
+        assert!(Literal::vec1(&[1f32]).to_tuple3().is_err());
+    }
+}
