@@ -1,21 +1,26 @@
 //! Bench: thread-scaling of the sharded engines (`codegemm::parallel`)
-//! on the paper's Llama-3 8B and 70B decoder-block layer shapes.
+//! on the paper's Llama-3 8B and 70B decoder-block layer shapes, plus the
+//! batch-scaling (`M`) sweep that makes the paper's build-amortization
+//! curve (Eq. 3) directly measurable.
 //!
-//! Matrix: threads {1, 2, 4, 8} × engines {codegemm, dequant, lutgemm,
-//! dense} × {q_proj, gate_proj, down_proj} of each geometry, GEMV
-//! (M = 1, the decode hot case). Shapes are scaled down by
-//! `CODEGEMM_SCALING_SCALE` (default 4; aspect ratios preserved) so the
-//! quantization setup stays CPU-tractable; the sharding overhead being
-//! measured is per-call and does not depend on the scale.
+//! Matrix 1 (threads): {1, 2, 4, 8} × engines {codegemm, dequant,
+//! lutgemm, dense} × {q_proj, gate_proj, down_proj} of each geometry,
+//! GEMV (M = 1, the decode hot case). Matrix 2 (batch): `M ∈ {1, 4, 16,
+//! 64}` through the zero-allocation `gemm_into` path — per-token latency
+//! should fall as M grows because the per-tile Psumbook build is shared
+//! by the whole batch. Shapes are scaled down by `CODEGEMM_SCALING_SCALE`
+//! (default 4; aspect ratios preserved) so the quantization setup stays
+//! CPU-tractable; the sharding overhead being measured is per-call and
+//! does not depend on the scale.
 //!
-//! Reported per row: mean GEMV latency and the speedup over the
-//! single-thread run of the same engine/shape.
+//! Reported per row: mean latency and the speedup over the
+//! single-thread (resp. per-token over M=1) run of the same engine/shape.
 
 use codegemm::bench::harness::{black_box, run_bench, BenchOptions};
 use codegemm::bench::workloads::{scaled_block_shapes, GemmShape, LLAMA3_70B, LLAMA3_8B};
 use codegemm::config::QuantConfig;
 use codegemm::gemm::{
-    CodeGemmEngine, DenseEngine, DequantEngine, GemmEngine, LutGemmEngine,
+    CodeGemmEngine, DenseEngine, DequantEngine, EngineScratch, GemmEngine, LutGemmEngine,
 };
 use codegemm::parallel::{shard, ShardPlan, ShardedEngine};
 use codegemm::quant::bcq::BcqLinear;
@@ -26,6 +31,8 @@ use std::sync::Arc;
 
 const THREADS: [usize; 4] = [1, 2, 4, 8];
 const ENGINES: [&str; 4] = ["codegemm", "dequant", "lutgemm", "dense"];
+/// Batch sizes for the prefill-amortization sweep (engine cap is 64).
+const M_SWEEP: [usize; 4] = [1, 4, 16, 64];
 
 fn scale_from_env() -> usize {
     std::env::var("CODEGEMM_SCALING_SCALE")
@@ -50,7 +57,7 @@ impl Prepared {
     }
 
     /// Row-sharded engine of the named kind across `t` workers.
-    fn engine(&self, kind: &str, t: usize, pool: Arc<ThreadPool>) -> Box<dyn GemmEngine + Send> {
+    fn engine(&self, kind: &str, t: usize, pool: Arc<ThreadPool>) -> Box<dyn GemmEngine + Send + Sync> {
         let (n, k) = (self.shape.n, self.shape.k);
         let plan = ShardPlan::new(n, t, 1, 1);
         match kind {
@@ -117,5 +124,58 @@ fn main() {
     }
     println!(
         "# acceptance: codegemm q_proj/gate_proj GEMV at 4 threads should be >= 2x the 1-thread row"
+    );
+
+    // ---- batch (M) sweep: build amortization across the prefill batch ----
+    println!(
+        "\n# batched prefill amortization (zero-allocation gemm_into, single thread): \
+         per-token latency should fall with M as the Psumbook build is shared"
+    );
+    println!(
+        "{:<34} {:>9} {:>12} {:>14} {:>9}",
+        "engine / shape", "M", "mean us", "us per token", "vs M=1"
+    );
+    for geom in [&LLAMA3_8B] {
+        let shapes: Vec<_> = scaled_block_shapes(geom, 1, scale)
+            .into_iter()
+            .filter(|(l, _)| matches!(*l, "q_proj" | "down_proj"))
+            .collect();
+        for (label, s) in shapes {
+            let prep = Prepared::new(s, cfg);
+            for kind in ["codegemm", "dequant"] {
+                let eng: Box<dyn GemmEngine + Send + Sync> = match kind {
+                    "codegemm" => Box::new(CodeGemmEngine::from_quantized(&prep.q)),
+                    _ => Box::new(DequantEngine::from_quantized(&prep.q)),
+                };
+                let mut scratch = EngineScratch::new();
+                let mut base_per_tok = 0.0f64;
+                for mb in M_SWEEP {
+                    let x = Prng::seeded(13).normal_vec(s.k * mb, 1.0);
+                    let mut y = vec![0f32; s.n * mb];
+                    let name = format!("{}-{kind} {label} {}x{} M{mb}", geom.name, s.n, s.k);
+                    let r = run_bench(&name, opts, || {
+                        eng.gemm_into(&x, mb, &mut y, &mut scratch);
+                        black_box(&y);
+                    });
+                    let per_tok = r.mean_us() / mb as f64;
+                    if mb == 1 {
+                        base_per_tok = per_tok;
+                    }
+                    let speedup = if per_tok > 0.0 { base_per_tok / per_tok } else { 0.0 };
+                    println!(
+                        "{:<34} {:>9} {:>12.1} {:>14.2} {:>8.2}x",
+                        name,
+                        mb,
+                        r.mean_us(),
+                        per_tok,
+                        speedup
+                    );
+                }
+            }
+        }
+    }
+    println!(
+        "# acceptance: codegemm per-token latency at M=16/64 should undercut its M=1 row \
+         (Eq. 3 build amortization)"
     );
 }

@@ -156,6 +156,20 @@ impl KernelConfig {
         Ok(KernelConfig { tile_w, tile_h })
     }
 
+    /// Clamp `tile_w` for a `(k, v)` layer: bounded by `k` and rounded
+    /// down to the nearest multiple of `v` (minimum one vector), so
+    /// engine construction never panics on non-default shapes. `k` must
+    /// be a positive multiple of `v` (every validated quantized layer
+    /// guarantees this). Shared by the CodeGEMM and dequant engines so
+    /// the rounding policy lives in one place.
+    pub fn align_tile_w(&mut self, k: usize, v: usize) {
+        self.tile_w = self.tile_w.min(k);
+        self.tile_w -= self.tile_w % v;
+        if self.tile_w == 0 {
+            self.tile_w = v;
+        }
+    }
+
     pub fn validate_for(&self, cfg: &QuantConfig, k: usize) -> Result<()> {
         if self.tile_w % cfg.v != 0 {
             bail!("tile_w ({}) must be a multiple of v ({})", self.tile_w, cfg.v);
@@ -436,6 +450,20 @@ mod tests {
         let q2 = QuantConfig::new(64, 1, 8, -1).unwrap();
         assert!(kc.validate_for(&q2, 4096).is_err()); // tile_w % v != 0
         assert!(kc.validate_for(&q, 4095).is_err()); // K % v != 0
+    }
+
+    #[test]
+    fn align_tile_w_rounds_down_and_floors_at_v() {
+        let clamp = |tw: usize, k: usize, v: usize| {
+            let mut kc = KernelConfig { tile_w: tw, tile_h: 8 };
+            kc.align_tile_w(k, v);
+            kc.tile_w
+        };
+        assert_eq!(clamp(32, 4096, 8), 32); // already aligned
+        assert_eq!(clamp(20, 4096, 8), 16); // round down
+        assert_eq!(clamp(3, 4096, 8), 8); // floor at one vector
+        assert_eq!(clamp(1000, 64, 8), 64); // clamp to k
+        assert_eq!(clamp(32, 4096, 64), 64); // tile smaller than v
     }
 
     #[test]

@@ -32,6 +32,24 @@ pub trait DecodeBackend: Send {
     /// Advance the given slots by one token each. Returns one logits
     /// vector (len `vocab`) per entry of `steps`, in order.
     fn step(&mut self, steps: &[SlotStep]) -> Result<Vec<Vec<f32>>>;
+    /// Prefill `tokens` (occupying positions `pos .. pos + tokens.len()`)
+    /// into `slot`, returning the logits after the final token. The
+    /// default steps token-by-token; backends with a batched forward
+    /// (`NativeBackend` → `LlamaModel::forward_batch`) override it so the
+    /// whole prompt runs as true `m_batch = tokens.len()` GEMMs.
+    fn prefill(&mut self, slot: usize, tokens: &[usize], pos: usize) -> Result<Vec<f32>> {
+        if tokens.is_empty() {
+            bail!("prefill needs at least one token");
+        }
+        let mut last = Vec::new();
+        for (i, &token) in tokens.iter().enumerate() {
+            last = self
+                .step(&[SlotStep { slot, token, pos: pos + i }])?
+                .pop()
+                .expect("one logits vector per step");
+        }
+        Ok(last)
+    }
     /// Recycle a slot for a new sequence.
     fn reset_slot(&mut self, slot: usize);
     fn label(&self) -> String;
@@ -93,6 +111,19 @@ impl DecodeBackend for NativeBackend {
             out.push(logits);
         }
         Ok(out)
+    }
+
+    /// Whole-prompt prefill through `LlamaModel::forward_batch`: one
+    /// batched GEMM pass per layer instead of `tokens.len()` GEMV passes,
+    /// so the Psumbook build amortizes across the prompt (paper Eq. 3).
+    fn prefill(&mut self, slot: usize, tokens: &[usize], pos: usize) -> Result<Vec<f32>> {
+        if slot >= self.caches.len() {
+            bail!("slot {slot} out of range");
+        }
+        if tokens.is_empty() {
+            bail!("prefill needs at least one token");
+        }
+        Ok(self.model.forward_batch(tokens, pos, &mut self.caches[slot]))
     }
 
     fn reset_slot(&mut self, slot: usize) {
@@ -219,6 +250,24 @@ mod tests {
         b.step(&[SlotStep { slot: 1, token: 1, pos: 0 }]).unwrap();
         let out2 = b.step(&[SlotStep { slot: 1, token: 5, pos: 1 }]).unwrap();
         assert!(stats::rel_l2(&out2[0], &out[0]) < 1e-6);
+    }
+
+    #[test]
+    fn batched_prefill_matches_stepped_prefill() {
+        let w = ModelWeights::random(ModelConfig::tiny(), 13);
+        let prompt = [3usize, 7, 11, 19];
+        let mut a = NativeBackend::new(&w, EngineKind::Dense, 1);
+        let la = a.prefill(0, &prompt, 0).unwrap();
+        let mut b = NativeBackend::new(&w, EngineKind::Dense, 1);
+        let mut lb = Vec::new();
+        for (i, &t) in prompt.iter().enumerate() {
+            lb = b.step(&[SlotStep { slot: 0, token: t, pos: i }]).unwrap().remove(0);
+        }
+        assert!(stats::rel_l2(&la, &lb) < 1e-6);
+        // Decode after either prefill continues identically.
+        let da = a.step(&[SlotStep { slot: 0, token: 42, pos: 4 }]).unwrap();
+        let db = b.step(&[SlotStep { slot: 0, token: 42, pos: 4 }]).unwrap();
+        assert!(stats::rel_l2(&da[0], &db[0]) < 1e-6);
     }
 
     #[test]

@@ -1,18 +1,21 @@
 //! Continuous (iteration-level) dynamic batcher.
 //!
-//! Orca/vLLM-style scheduling adapted to single-token stepping: each
-//! engine step advances every occupied slot by one token — prefilling
-//! sequences consume their next prompt token, decoding sequences consume
-//! their last sampled token — so new requests join the batch *between
-//! steps* without draining it ("continuous batching"). A configurable
-//! prefill admission cap keeps time-to-first-token bounded under decode
-//! load.
+//! Orca/vLLM-style scheduling over a two-phase step: prefilling
+//! sequences consume their prompt in **batched chunks of up to
+//! `MAX_PREFILL_CHUNK` tokens per step** (`DecodeBackend::prefill` →
+//! `forward_batch`, true `m_batch = chunk_len` GEMMs, where the Psumbook
+//! build amortizes — while the chunk cap bounds how long a long prompt
+//! can stall decoding slots), then all decoding sequences advance one
+//! token per step — so new requests join the batch *between* steps
+//! without draining it ("continuous batching"). `coordinator::metrics`
+//! reports prefill and decode **token** counts separately, making the
+//! prefill/decode split of a serving window directly observable.
 
 use super::backend::{DecodeBackend, SlotStep};
 use super::metrics::Metrics;
 use super::request::{FinishReason, InFlight, Request, Response};
 use crate::config::ServeConfig;
-use crate::model::Sampler;
+use crate::model::{Sampler, MAX_PREFILL_CHUNK};
 use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
@@ -85,82 +88,114 @@ impl Batcher {
         }
     }
 
-    /// Run one engine step over all occupied slots. Returns the number of
-    /// slots advanced (0 ⇒ idle).
+    /// Run one engine step: batched prefill for every prefilling slot
+    /// (up to one `MAX_PREFILL_CHUNK`-token chunk per slot per step, so a
+    /// long prompt cannot stall decoding slots for more than one chunk —
+    /// bounded head-of-line blocking), then one decode token for every
+    /// decoding slot. Returns the number of slots advanced (0 ⇒ idle).
     pub fn step(&mut self) -> usize {
         self.admit();
-        // Assemble this step's work: all decoding slots plus prefilling
-        // slots (token-level prefill joins the same batch).
+        let max_seq = self.backend.max_seq();
+        let t0 = Instant::now();
+        let mut advanced = 0usize;
+        let mut prefill_tokens = 0usize;
+        let mut just_prefilled = vec![false; self.slots.len()];
+
+        // Phase 1: batched prefill. Each prefilling slot consumes up to
+        // one engine-batch-sized prompt chunk per step (a partially
+        // prefilled slot simply resumes next step); the final position's
+        // logits seed the first sampled token.
+        for i in 0..self.slots.len() {
+            let (feed, pos) = match &self.slots[i] {
+                Slot::Busy(f) if f.is_prefilling() => {
+                    let remaining = &f.req.prompt[f.prefill_idx..];
+                    // Clamp to the context window (an over-long prompt
+                    // finishes with `FinishReason::Context` below) and to
+                    // the per-step chunk budget.
+                    let room = max_seq.saturating_sub(f.pos).min(MAX_PREFILL_CHUNK);
+                    (remaining[..remaining.len().min(room)].to_vec(), f.pos)
+                }
+                _ => continue,
+            };
+            let logits = self.backend.prefill(i, &feed, pos).expect("backend prefill failed");
+            prefill_tokens += feed.len();
+            advanced += 1;
+            just_prefilled[i] = true;
+            let Slot::Busy(f) = &mut self.slots[i] else { unreachable!() };
+            f.prefill_idx += feed.len();
+            f.pos += feed.len();
+            self.advance_after_logits(i, &logits, max_seq);
+        }
+
+        // Phase 2: one decode token for every slot already decoding.
         let mut steps: Vec<SlotStep> = Vec::new();
-        let mut prefill_n = 0usize;
-        let mut decode_n = 0usize;
         for (i, s) in self.slots.iter().enumerate() {
             if let Slot::Busy(f) = s {
-                steps.push(SlotStep { slot: i, token: f.next_input(), pos: f.pos });
-                if f.is_prefilling() {
-                    prefill_n += 1;
-                } else {
-                    decode_n += 1;
+                if !f.is_prefilling() && !just_prefilled[i] {
+                    steps.push(SlotStep { slot: i, token: f.next_input(), pos: f.pos });
                 }
             }
         }
-        if steps.is_empty() {
-            return 0;
-        }
-        let t0 = Instant::now();
-        let logits = self.backend.step(&steps).expect("backend step failed");
-        self.metrics.on_step(steps.len(), prefill_n, decode_n, t0.elapsed().as_secs_f64());
-        // Advance per-slot state.
-        let max_seq = self.backend.max_seq();
-        for (ss, lg) in steps.iter().zip(logits) {
-            let slot = &mut self.slots[ss.slot];
-            let Slot::Busy(f) = slot else { unreachable!() };
-            let was_prefilling = f.is_prefilling();
-            if was_prefilling {
-                f.prefill_idx += 1;
-            }
-            f.pos += 1;
-            let now_decoding = !f.is_prefilling();
-            let mut finish: Option<FinishReason> = None;
-            if now_decoding {
-                // Sample the next token from this step's logits (valid both
-                // for the final prefill token and for decode steps).
-                let tok = self.sampler.sample(&lg);
-                if f.first_token.is_none() {
-                    f.first_token = Some(Instant::now());
-                }
-                f.generated.push(tok);
-                if f.req.stop_token == Some(tok) {
-                    finish = Some(FinishReason::Stop);
-                } else if f.generated.len() >= f.req.max_new_tokens {
-                    finish = Some(FinishReason::Length);
-                }
-            }
-            if finish.is_none() && f.pos >= max_seq {
-                finish = Some(FinishReason::Context);
-            }
-            if let Some(reason) = finish {
-                let ttft = f
-                    .first_token
-                    .map(|t| (t - f.submitted).as_secs_f64())
-                    .unwrap_or_default();
-                let latency = f.submitted.elapsed().as_secs_f64();
-                let decode_time = (latency - ttft).max(1e-9);
-                let n_gen = f.generated.len();
-                let resp = Response {
-                    id: f.req.id,
-                    tokens: std::mem::take(&mut f.generated),
-                    finish: reason,
-                    ttft_s: ttft,
-                    latency_s: latency,
-                    tok_per_s: if n_gen > 1 { (n_gen - 1) as f64 / decode_time } else { 0.0 },
-                };
-                self.metrics.on_complete(ttft, latency);
-                self.finished.push(resp);
-                *slot = Slot::Free;
+        let decode_n = steps.len();
+        if decode_n > 0 {
+            let logits = self.backend.step(&steps).expect("backend step failed");
+            advanced += decode_n;
+            for (ss, lg) in steps.iter().zip(&logits) {
+                let Slot::Busy(f) = &mut self.slots[ss.slot] else { unreachable!() };
+                f.pos += 1;
+                self.advance_after_logits(ss.slot, lg, max_seq);
             }
         }
-        steps.len()
+        if advanced > 0 {
+            self.metrics.on_step(advanced, prefill_tokens, decode_n, t0.elapsed().as_secs_f64());
+        }
+        advanced
+    }
+
+    /// Shared post-GEMM bookkeeping for a slot whose position just
+    /// advanced past `logits`' token: sample when decoding, then retire
+    /// the sequence if any finish condition hit.
+    fn advance_after_logits(&mut self, slot_idx: usize, logits: &[f32], max_seq: usize) {
+        let slot = &mut self.slots[slot_idx];
+        let Slot::Busy(f) = slot else { unreachable!() };
+        let mut finish: Option<FinishReason> = None;
+        if !f.is_prefilling() {
+            // Sample the next token (valid both for the final prefill
+            // position's logits and for decode steps).
+            let tok = self.sampler.sample(logits);
+            if f.first_token.is_none() {
+                f.first_token = Some(Instant::now());
+            }
+            f.generated.push(tok);
+            if f.req.stop_token == Some(tok) {
+                finish = Some(FinishReason::Stop);
+            } else if f.generated.len() >= f.req.max_new_tokens {
+                finish = Some(FinishReason::Length);
+            }
+        }
+        if finish.is_none() && f.pos >= max_seq {
+            finish = Some(FinishReason::Context);
+        }
+        if let Some(reason) = finish {
+            let ttft = f
+                .first_token
+                .map(|t| (t - f.submitted).as_secs_f64())
+                .unwrap_or_default();
+            let latency = f.submitted.elapsed().as_secs_f64();
+            let decode_time = (latency - ttft).max(1e-9);
+            let n_gen = f.generated.len();
+            let resp = Response {
+                id: f.req.id,
+                tokens: std::mem::take(&mut f.generated),
+                finish: reason,
+                ttft_s: ttft,
+                latency_s: latency,
+                tok_per_s: if n_gen > 1 { (n_gen - 1) as f64 / decode_time } else { 0.0 },
+            };
+            self.metrics.on_complete(ttft, latency);
+            self.finished.push(resp);
+            *slot = Slot::Free;
+        }
     }
 
     /// Drain finished responses.

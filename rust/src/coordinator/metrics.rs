@@ -33,7 +33,9 @@ pub struct MetricsReport {
     pub submitted: u64,
     pub completed: u64,
     pub rejected: u64,
+    /// Prompt tokens consumed by batched prefill passes.
     pub prefill_tokens: u64,
+    /// Generated tokens consumed by decode steps.
     pub decode_tokens: u64,
     pub steps: u64,
     /// Mean occupied slots per step (batch efficiency).
@@ -58,6 +60,9 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    /// Record one batcher step: `occupied` slots advanced, consuming
+    /// `prefill` prompt tokens (batched prefill) and `decode` generated
+    /// tokens (one per decoding slot).
     pub fn on_step(&self, occupied: usize, prefill: usize, decode: usize, seconds: f64) {
         let mut g = self.inner.lock().unwrap();
         g.steps += 1;

@@ -7,13 +7,18 @@
 //! are measurable — and each row then gathers `m · t_w/v` partial sums
 //! per batch column, scaled by the group-normalization factors.
 //!
+//! The engine is immutable during execution: the activation staging tile
+//! and the Psumbook live in the caller's [`EngineScratch`] and are reused
+//! call-to-call (reshaped in place between tile geometries), so the
+//! decode hot loop never allocates.
+//!
 //! Complexity per call (paper Eq. 3):
 //! build `O(m·2^b·K·N_blocks·M)` + read `O(m·N·K/v·M)` ≈ `O(MNK·m/v)`.
 
 use crate::config::{KernelConfig, QuantConfig};
 use crate::gemm::psumbook::Psumbook;
+use crate::gemm::scratch::{grow_slice, EngineScratch};
 use crate::gemm::tiling::Tiles;
-use crate::gemm::traffic::Counters;
 use crate::gemm::GemmEngine;
 use crate::quant::QuantizedLinear;
 use crate::util::timer::Timer;
@@ -49,7 +54,7 @@ pub struct CodeGemmEngine {
     codes: Codes,
     scales: Vec<f32>,
     groups_per_row: usize,
-    counters: Counters,
+    scratch: EngineScratch,
 }
 
 impl CodeGemmEngine {
@@ -59,9 +64,9 @@ impl CodeGemmEngine {
 
     pub fn with_kernel(q: &QuantizedLinear, mut kernel: KernelConfig) -> CodeGemmEngine {
         q.validate().expect("valid quantized layer");
-        // Clamp tile_w to K and keep it v-aligned.
-        kernel.tile_w = kernel.tile_w.min(q.k);
-        assert!(kernel.tile_w % q.cfg.v == 0, "tile_w must be a multiple of v");
+        // Clamp tile_w to K, rounded down to a v multiple, instead of
+        // panicking on non-default shapes.
+        kernel.align_tile_w(q.k, q.cfg.v);
         let codes = if q.cfg.b <= 8 {
             Codes::U8(q.codes.unpack_u8().expect("b<=8"))
         } else {
@@ -77,7 +82,7 @@ impl CodeGemmEngine {
             codes,
             scales: q.scales.clone(),
             groups_per_row: q.groups_per_row(),
-            counters: Counters::new(),
+            scratch: EngineScratch::new(),
         }
     }
 
@@ -175,7 +180,7 @@ impl CodeGemmEngine {
         let gpr = self.groups_per_row;
         let n = self.n;
         let nc = self.cfg.n_centroids();
-        // Scratch per-batch group accumulator (mb is small: 1..16).
+        // Scratch per-batch group accumulator (mb is small: 1..64).
         let mut gacc = [0f32; 64];
         debug_assert!(mb <= 64);
         for r in rows.0..rows.1 {
@@ -221,83 +226,78 @@ impl GemmEngine for CodeGemmEngine {
         (self.n, self.k)
     }
 
-    fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32> {
+    fn gemm_into(&self, x: &[f32], m_batch: usize, y: &mut [f32], scratch: &mut EngineScratch) {
         assert_eq!(x.len(), self.k * m_batch);
+        assert_eq!(y.len(), self.n * m_batch);
         assert!(m_batch <= 64, "engine supports m_batch <= 64");
+        y.fill(0.0);
         let (n, k) = (self.n, self.k);
         let v = self.cfg.v;
         let m = self.cfg.m;
         let nc = self.cfg.n_centroids();
         let tw = self.kernel.tile_w;
         let th = self.kernel.tile_h;
-        let mut y = vec![0f32; n * m_batch];
-        // Activation tile staging buffer (batch-major, contiguous per col).
-        let mut x_tile = vec![0f32; tw * m_batch];
-        let mut book = Psumbook::empty(tw / v, m, nc, m_batch);
-        let n_row_blocks = Tiles::count(n, th) as u64;
+        let EngineScratch { counters, buf, book, .. } = scratch;
         for (r0, r1) in Tiles::new(n, th) {
             for (c0, c1) in Tiles::new(k, tw) {
                 let width = c1 - c0;
                 let jn_tile = width / v;
-                // Build phase: stage activations, compute Psumbook.
+                // Build phase: stage activations, compute the Psumbook
+                // (both in caller scratch, reshaped in place per tile).
                 let t = Timer::start();
+                let x_tile = grow_slice(buf, width * m_batch);
                 for b in 0..m_batch {
                     x_tile[b * width..(b + 1) * width].copy_from_slice(&x[b * k + c0..b * k + c1]);
                 }
-                if book.jn != jn_tile || book.mb != m_batch {
-                    book = Psumbook::empty(jn_tile, m, nc, m_batch);
+                if book.jn != jn_tile || book.m != m || book.nc != nc || book.mb != m_batch {
+                    book.reshape(jn_tile, m, nc, m_batch);
                 }
-                let build_macs = book.build(&self.codebooks, v, &x_tile[..width * m_batch]);
-                self.counters.build_seconds += t.elapsed_s();
-                self.counters.build_ops += build_macs;
-                self.counters.mac_flops += build_macs;
-                self.counters.scratch_bytes += book.footprint_bytes() as u64;
-                self.counters.activation_bytes += (width * m_batch * 2) as u64;
+                let build_macs = book.build(&self.codebooks, v, x_tile);
+                counters.build_seconds += t.elapsed_s();
+                counters.build_ops += build_macs;
+                counters.mac_flops += build_macs;
+                counters.scratch_bytes += book.footprint_bytes() as u64;
+                counters.activation_bytes += (width * m_batch * 2) as u64;
                 // Codebook is streamed on-chip once per (row-block, tile).
-                self.counters.weight_bytes += (m * nc * v * 2) as u64;
+                counters.weight_bytes += (m * nc * v * 2) as u64;
 
                 // Read phase: gather partial sums through the codes.
                 let t = Timer::start();
                 let j0 = c0 / v;
                 match (&self.codes, m_batch) {
                     (Codes::U8(codes), 1) => {
-                        self.gather_rows_b1(codes, &book, (r0, r1), j0, jn_tile, &mut y)
+                        self.gather_rows_b1(codes, book, (r0, r1), j0, jn_tile, y)
                     }
                     (Codes::U16(codes), 1) => {
-                        self.gather_rows_b1(codes, &book, (r0, r1), j0, jn_tile, &mut y)
+                        self.gather_rows_b1(codes, book, (r0, r1), j0, jn_tile, y)
                     }
                     (Codes::U8(codes), _) => {
-                        self.gather_rows(codes, &book, (r0, r1), j0, jn_tile, m_batch, &mut y)
+                        self.gather_rows(codes, book, (r0, r1), j0, jn_tile, m_batch, y)
                     }
                     (Codes::U16(codes), _) => {
-                        self.gather_rows(codes, &book, (r0, r1), j0, jn_tile, m_batch, &mut y)
+                        self.gather_rows(codes, book, (r0, r1), j0, jn_tile, m_batch, y)
                     }
                 }
-                self.counters.read_seconds += t.elapsed_s();
+                counters.read_seconds += t.elapsed_s();
                 let rows = (r1 - r0) as u64;
                 let gathers = rows * (jn_tile * m) as u64 * m_batch as u64;
-                self.counters.read_ops += gathers;
-                self.counters.lookups += gathers;
-                self.counters.scratch_bytes += gathers * 4;
-                self.counters.weight_bytes +=
-                    rows * (jn_tile * m * self.codes.bytes_per_code()) as u64;
+                counters.read_ops += gathers;
+                counters.lookups += gathers;
+                counters.scratch_bytes += gathers * 4;
+                counters.weight_bytes += rows * (jn_tile * m * self.codes.bytes_per_code()) as u64;
             }
         }
         // Scales stream: one per (row, group) per call.
-        self.counters.weight_bytes += (n * self.groups_per_row * 2) as u64;
-        self.counters.calls += 1;
-        // Suppress unused warning pattern for n_row_blocks (documented in
-        // counters via build_ops which already scales with row blocks).
-        let _ = n_row_blocks;
-        y
+        counters.weight_bytes += (n * self.groups_per_row * 2) as u64;
+        counters.calls += 1;
     }
 
-    fn counters(&self) -> &Counters {
-        &self.counters
+    fn scratch(&self) -> &EngineScratch {
+        &self.scratch
     }
 
-    fn reset_counters(&mut self) {
-        self.counters.reset();
+    fn scratch_mut(&mut self) -> &mut EngineScratch {
+        &mut self.scratch
     }
 }
 
@@ -351,6 +351,18 @@ mod tests {
         // K=80 with tile_w=32 leaves a 16-wide edge tile.
         let q = quantize(20, 80, "m1v8g16", 7);
         check_against_dense(&q, KernelConfig { tile_w: 32, tile_h: 6 }, 2, 8);
+    }
+
+    #[test]
+    fn misaligned_tile_w_is_rounded_down_not_panicking() {
+        // v=8: tile_w=20 rounds down to 16; tile_w=3 clamps up to v.
+        let q = quantize(16, 64, "m1v8g16", 19);
+        for tw in [20usize, 12, 3, 1000] {
+            let e = CodeGemmEngine::with_kernel(&q, KernelConfig { tile_w: tw, tile_h: 8 });
+            assert_eq!(e.kernel_config().tile_w % 8, 0, "tile_w {tw} not v-aligned");
+            assert!(e.kernel_config().tile_w >= 8 && e.kernel_config().tile_w <= 64);
+            check_against_dense(&q, KernelConfig { tile_w: tw, tile_h: 8 }, 2, 20);
+        }
     }
 
     #[test]

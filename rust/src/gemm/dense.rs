@@ -2,7 +2,7 @@
 //! quantized kernel, and the stand-in for the cuBLAS FP16 baseline in
 //! CPU-measured comparisons.
 
-use crate::gemm::traffic::Counters;
+use crate::gemm::scratch::EngineScratch;
 use crate::gemm::GemmEngine;
 
 /// Row-major dense weight engine.
@@ -11,13 +11,13 @@ pub struct DenseEngine {
     w: Vec<f32>,
     n: usize,
     k: usize,
-    counters: Counters,
+    scratch: EngineScratch,
 }
 
 impl DenseEngine {
     pub fn new(w: Vec<f32>, n: usize, k: usize) -> DenseEngine {
         assert_eq!(w.len(), n * k, "weight shape mismatch");
-        DenseEngine { w, n, k, counters: Counters::new() }
+        DenseEngine { w, n, k, scratch: EngineScratch::new() }
     }
 
     /// Borrow the weights (used by tests and the model runner).
@@ -35,10 +35,10 @@ impl GemmEngine for DenseEngine {
         (self.n, self.k)
     }
 
-    fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32> {
+    fn gemm_into(&self, x: &[f32], m_batch: usize, y: &mut [f32], scratch: &mut EngineScratch) {
         assert_eq!(x.len(), self.k * m_batch);
         let (n, k) = (self.n, self.k);
-        let mut y = vec![0f32; n * m_batch];
+        assert_eq!(y.len(), n * m_batch);
         for b in 0..m_batch {
             let xb = &x[b * k..(b + 1) * k];
             let yb = &mut y[b * n..(b + 1) * n];
@@ -65,20 +65,20 @@ impl GemmEngine for DenseEngine {
             }
         }
         let macs = (n * k * m_batch) as u64;
-        self.counters.mac_flops += macs;
-        self.counters.read_ops += macs;
-        self.counters.weight_bytes += (n * k * m_batch) as u64 * 2; // fp16 stream on device
-        self.counters.activation_bytes += (k * m_batch) as u64 * 2;
-        self.counters.calls += 1;
-        y
+        let counters = &mut scratch.counters;
+        counters.mac_flops += macs;
+        counters.read_ops += macs;
+        counters.weight_bytes += (n * k * m_batch) as u64 * 2; // fp16 stream on device
+        counters.activation_bytes += (k * m_batch) as u64 * 2;
+        counters.calls += 1;
     }
 
-    fn counters(&self) -> &Counters {
-        &self.counters
+    fn scratch(&self) -> &EngineScratch {
+        &self.scratch
     }
 
-    fn reset_counters(&mut self) {
-        self.counters.reset();
+    fn scratch_mut(&mut self) -> &mut EngineScratch {
+        &mut self.scratch
     }
 }
 

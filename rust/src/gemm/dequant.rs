@@ -2,15 +2,16 @@
 //! paper contrasts against, §2.3 / Figure 1a).
 //!
 //! For each weight tile the codes fetch centroids from the *full
-//! codebook*, reconstruct the FP weights into a scratch buffer, and a
+//! codebook*, reconstruct the FP weights into a scratch buffer (drawn
+//! from the caller's [`EngineScratch`], reused call-to-call), and a
 //! plain dot product follows. Computational complexity stays at
 //! `O(MNK)` (the paper's point) and the on-chip requirement is the whole
 //! codebook (`m · 2^b · v` halfwords) — which is why AQLM-1×16 falls off
 //! a cliff when `2^16` centroids no longer fit in shared memory.
 
 use crate::config::{KernelConfig, QuantConfig};
+use crate::gemm::scratch::{grow_slice, EngineScratch};
 use crate::gemm::tiling::Tiles;
-use crate::gemm::traffic::Counters;
 use crate::gemm::GemmEngine;
 use crate::quant::QuantizedLinear;
 use crate::util::timer::Timer;
@@ -27,7 +28,7 @@ pub struct DequantEngine {
     codes: Vec<u16>,
     scales: Vec<f32>,
     groups_per_row: usize,
-    counters: Counters,
+    scratch: EngineScratch,
 }
 
 impl DequantEngine {
@@ -37,8 +38,9 @@ impl DequantEngine {
 
     pub fn with_kernel(q: &QuantizedLinear, mut kernel: KernelConfig) -> DequantEngine {
         q.validate().expect("valid quantized layer");
-        kernel.tile_w = kernel.tile_w.min(q.k);
-        assert!(kernel.tile_w % q.cfg.v == 0);
+        // Same clamp as CodeGEMM: tile_w rounds down to a v multiple
+        // instead of asserting.
+        kernel.align_tile_w(q.k, q.cfg.v);
         DequantEngine {
             cfg: q.cfg,
             kernel,
@@ -49,7 +51,7 @@ impl DequantEngine {
             codes: q.codes.unpack().into_iter().map(|c| c as u16).collect(),
             scales: q.scales.clone(),
             groups_per_row: q.groups_per_row(),
-            counters: Counters::new(),
+            scratch: EngineScratch::new(),
         }
     }
 
@@ -68,8 +70,10 @@ impl GemmEngine for DequantEngine {
         (self.n, self.k)
     }
 
-    fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32> {
+    fn gemm_into(&self, x: &[f32], m_batch: usize, y: &mut [f32], scratch: &mut EngineScratch) {
         assert_eq!(x.len(), self.k * m_batch);
+        assert_eq!(y.len(), self.n * m_batch);
+        y.fill(0.0);
         let (n, k) = (self.n, self.k);
         let v = self.cfg.v;
         let m = self.cfg.m;
@@ -78,8 +82,8 @@ impl GemmEngine for DequantEngine {
         let tw = self.kernel.tile_w;
         let th = self.kernel.tile_h;
         let gpr = self.groups_per_row;
-        let mut y = vec![0f32; n * m_batch];
-        let mut wrow = vec![0f32; tw]; // decode scratch (one row-tile)
+        let EngineScratch { counters, buf, .. } = scratch;
+        let wrow = grow_slice(buf, tw); // decode scratch (one row-tile)
         for (r0, r1) in Tiles::new(n, th) {
             for (c0, c1) in Tiles::new(k, tw) {
                 let width = c1 - c0;
@@ -104,10 +108,10 @@ impl GemmEngine for DequantEngine {
                         let col = c0 + t_idx;
                         wrow[t_idx] *= self.scales[r * gpr + col / g];
                     }
-                    self.counters.build_seconds += t.elapsed_s();
+                    counters.build_seconds += t.elapsed_s();
                     let decode_ops = (jn_tile * m * v + width) as u64;
-                    self.counters.build_ops += decode_ops;
-                    self.counters.lookups += (jn_tile * m) as u64;
+                    counters.build_ops += decode_ops;
+                    counters.lookups += (jn_tile * m) as u64;
 
                     // Multiply phase: full dot per batch column — the
                     // unreduced O(MNK) compute the paper calls out.
@@ -120,30 +124,29 @@ impl GemmEngine for DequantEngine {
                         }
                         y[b * n + r] += acc;
                     }
-                    self.counters.read_seconds += t.elapsed_s();
+                    counters.read_seconds += t.elapsed_s();
                     let macs = (width * m_batch) as u64;
-                    self.counters.mac_flops += macs;
-                    self.counters.read_ops += macs;
-                    self.counters.scratch_bytes += (width * 4 * 2) as u64; // write + read decode buf
-                    self.counters.weight_bytes += (jn_tile * m * 2) as u64; // codes (u16 stream)
+                    counters.mac_flops += macs;
+                    counters.read_ops += macs;
+                    counters.scratch_bytes += (width * 4 * 2) as u64; // write + read decode buf
+                    counters.weight_bytes += (jn_tile * m * 2) as u64; // codes (u16 stream)
                 }
                 // Codebook residency charged once per (row-block, tile),
                 // as on the GPU where each thread block re-stages it.
-                self.counters.weight_bytes += self.codebook_bytes() as u64;
+                counters.weight_bytes += self.codebook_bytes() as u64;
             }
         }
-        self.counters.weight_bytes += (n * gpr * 2) as u64;
-        self.counters.activation_bytes += (k * m_batch * 2) as u64;
-        self.counters.calls += 1;
-        y
+        counters.weight_bytes += (n * gpr * 2) as u64;
+        counters.activation_bytes += (k * m_batch * 2) as u64;
+        counters.calls += 1;
     }
 
-    fn counters(&self) -> &Counters {
-        &self.counters
+    fn scratch(&self) -> &EngineScratch {
+        &self.scratch
     }
 
-    fn reset_counters(&mut self) {
-        self.counters.reset();
+    fn scratch_mut(&mut self) -> &mut EngineScratch {
+        &mut self.scratch
     }
 }
 
@@ -197,6 +200,17 @@ mod tests {
         let q = quantize(16, 32, "m2v8g32", 7);
         let e = DequantEngine::from_quantized(&q);
         assert_eq!(e.codebook_bytes(), 2 * 256 * 8 * 2);
+    }
+
+    #[test]
+    fn misaligned_tile_w_clamps_instead_of_panicking() {
+        let q = quantize(12, 64, "m1v8g32", 9);
+        let e = DequantEngine::with_kernel(&q, KernelConfig { tile_w: 21, tile_h: 4 });
+        assert_eq!(e.kernel.tile_w, 16);
+        let x = Prng::seeded(10).normal_vec(64, 1.0);
+        let y_ref = DenseEngine::new(q.dequantize(), 12, 64).gemv(&x);
+        let mut e = DequantEngine::with_kernel(&q, KernelConfig { tile_w: 21, tile_h: 4 });
+        assert!(stats::rel_l2(&e.gemv(&x), &y_ref) < 2e-5);
     }
 
     #[test]

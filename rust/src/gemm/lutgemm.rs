@@ -4,7 +4,7 @@
 //! indexes the table with 8 sign bits at a time, replacing 8 MACs by one
 //! lookup + add per plane.
 
-use crate::gemm::traffic::Counters;
+use crate::gemm::scratch::{grow_slice, EngineScratch};
 use crate::gemm::GemmEngine;
 use crate::quant::bcq::BcqLinear;
 use crate::util::timer::Timer;
@@ -12,18 +12,20 @@ use crate::util::timer::Timer;
 /// Sub-vector width of the lookup table (LUT-GEMM's μ).
 pub const MU: usize = 8;
 
-/// CPU implementation of the LUT-GEMM kernel over BCQ weights.
+/// CPU implementation of the LUT-GEMM kernel over BCQ weights. The chunk
+/// tables live in the caller's [`EngineScratch`] and are rebuilt in place
+/// per batch column — no per-call allocation.
 #[derive(Clone, Debug)]
 pub struct LutGemmEngine {
     bcq: BcqLinear,
-    counters: Counters,
+    scratch: EngineScratch,
 }
 
 impl LutGemmEngine {
     pub fn new(bcq: BcqLinear) -> LutGemmEngine {
         assert_eq!(bcq.k % MU, 0, "K must be a multiple of MU={MU}");
         assert_eq!(bcq.group % MU, 0, "group must be a multiple of MU");
-        LutGemmEngine { bcq, counters: Counters::new() }
+        LutGemmEngine { bcq, scratch: EngineScratch::new() }
     }
 
     /// LUT on-chip bytes per batch column: `2^μ · K/μ` f32 entries.
@@ -57,13 +59,14 @@ impl GemmEngine for LutGemmEngine {
         (self.bcq.n, self.bcq.k)
     }
 
-    fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32> {
+    fn gemm_into(&self, x: &[f32], m_batch: usize, y: &mut [f32], scratch: &mut EngineScratch) {
         let (n, k) = self.dims();
         assert_eq!(x.len(), k * m_batch);
+        assert_eq!(y.len(), n * m_batch);
         let q = self.bcq.q_bits;
         let chunks = k / MU;
-        let mut y = vec![0f32; n * m_batch];
-        let mut table = vec![0f32; chunks << MU];
+        let EngineScratch { counters, buf, .. } = scratch;
+        let table = grow_slice(buf, chunks << MU);
         for b in 0..m_batch {
             let xb = &x[b * k..(b + 1) * k];
             // Build phase: all chunk tables for this activation column.
@@ -73,9 +76,9 @@ impl GemmEngine for LutGemmEngine {
                 xc.copy_from_slice(&xb[ch * MU..(ch + 1) * MU]);
                 Self::build_chunk_table(&xc, &mut table[ch << MU..(ch + 1) << MU]);
             }
-            self.counters.build_seconds += t.elapsed_s();
-            self.counters.build_ops += (chunks << MU) as u64;
-            self.counters.scratch_bytes += ((chunks << MU) * 4) as u64;
+            counters.build_seconds += t.elapsed_s();
+            counters.build_ops += (chunks << MU) as u64;
+            counters.scratch_bytes += ((chunks << MU) * 4) as u64;
 
             // Read phase: per row/plane, index the tables by sign bits.
             let t = Timer::start();
@@ -92,26 +95,25 @@ impl GemmEngine for LutGemmEngine {
                 }
                 y[b * n + r] = acc;
             }
-            self.counters.read_seconds += t.elapsed_s();
+            counters.read_seconds += t.elapsed_s();
             let lookups = (n * q * chunks) as u64;
-            self.counters.read_ops += lookups;
-            self.counters.lookups += lookups;
-            self.counters.mac_flops += lookups; // one MAC (alpha × table) per lookup
-            self.counters.scratch_bytes += lookups * 4;
+            counters.read_ops += lookups;
+            counters.lookups += lookups;
+            counters.mac_flops += lookups; // one MAC (alpha × table) per lookup
+            counters.scratch_bytes += lookups * 4;
         }
         // Weight stream: bitplanes + alphas.
-        self.counters.weight_bytes += ((n * k * q) / 8 + n * (k / self.bcq.group) * q * 2) as u64;
-        self.counters.activation_bytes += (k * m_batch * 2) as u64;
-        self.counters.calls += 1;
-        y
+        counters.weight_bytes += ((n * k * q) / 8 + n * (k / self.bcq.group) * q * 2) as u64;
+        counters.activation_bytes += (k * m_batch * 2) as u64;
+        counters.calls += 1;
     }
 
-    fn counters(&self) -> &Counters {
-        &self.counters
+    fn scratch(&self) -> &EngineScratch {
+        &self.scratch
     }
 
-    fn reset_counters(&mut self) {
-        self.counters.reset();
+    fn scratch_mut(&mut self) -> &mut EngineScratch {
+        &mut self.scratch
     }
 }
 

@@ -10,27 +10,46 @@
 //! Activation/batch layout: `X` is batch-major (`x[b*k .. (b+1)*k]` is
 //! column `b`), outputs likewise (`y[b*n .. (b+1)*n]`).
 //!
+//! ## Execution model: `&self` engines, caller-owned outputs and scratch
+//!
+//! The core entry point is [`GemmEngine::gemm_into`]: the caller owns the
+//! output slice *and* an [`EngineScratch`] holding every internal buffer
+//! (Psumbook / LUT / decode staging) plus the work counters. Engines are
+//! therefore immutable (`&self`) during execution and `Sync`-shareable —
+//! one engine can serve many threads, each bringing its own scratch and a
+//! disjoint output region — and the decode hot loop performs **zero heap
+//! allocations after warmup**, because scratch buffers grow to their
+//! high-water mark once and are then reused verbatim. This mirrors what
+//! LUT-GEMM and VQ-LLM report for GPU table kernels: the inner loop must
+//! write into preallocated, tile-resident buffers or the allocator (and
+//! not the build/read split the paper measures) dominates.
+//!
+//! `gemm`/`gemv` remain as thin allocating compatibility wrappers driving
+//! `gemm_into` through the engine's built-in scratch.
+//!
 //! ## Parallel execution
 //!
 //! Every engine here is single-threaded by design — one engine models one
 //! GPU thread block's work. Multi-core execution is layered on top by
 //! `crate::parallel`: a `ShardPlan` splits the row dim, each shard gets a
-//! complete engine over its row slice (with its own Psumbook/LUT/decode
-//! scratch, like a thread-block-local table), and `ShardedEngine` fans
-//! `gemm`/`gemv` out over the worker pool, concatenating outputs in shard
-//! order. Because a row's accumulation never crosses shards, sharded
-//! outputs are bit-exact vs. serial; reduction-dim sharding (`TpLinear`)
-//! instead uses a deterministic ordered reduction and is exact up to
-//! float reassociation. Counters merge additively across shards
-//! (`lookups`/`read_ops`/`mac_flops` are conserved; per-row-block build
-//! work scales with the shard count, exactly as it does with GPU grid
-//! size).
+//! complete engine over its row slice, and `ShardedEngine` fans `gemm_into`
+//! out over the worker pool — each worker writing a disjoint sub-slice of
+//! the caller's output buffer with its own per-worker scratch (a
+//! thread-block-local table, like on the GPU). Because a row's
+//! accumulation never crosses shards, sharded outputs are bit-exact vs.
+//! serial; reduction-dim sharding (`TpLinear`) instead uses a
+//! deterministic ordered reduction and is exact up to float
+//! reassociation. Counters merge additively across shards
+//! ([`Counters::merge`]; `lookups`/`read_ops`/`mac_flops` are conserved,
+//! per-row-block build work scales with the shard count, exactly as it
+//! does with GPU grid size).
 
 pub mod codegemm;
 pub mod dense;
 pub mod dequant;
 pub mod lutgemm;
 pub mod psumbook;
+pub mod scratch;
 pub mod tiling;
 pub mod traffic;
 pub mod uniform_gemm;
@@ -40,6 +59,7 @@ pub use dense::DenseEngine;
 pub use dequant::DequantEngine;
 pub use lutgemm::LutGemmEngine;
 pub use psumbook::Psumbook;
+pub use scratch::EngineScratch;
 pub use traffic::Counters;
 pub use uniform_gemm::UniformGemmEngine;
 
@@ -51,18 +71,47 @@ pub trait GemmEngine {
     /// `(n, k)` weight dimensions.
     fn dims(&self) -> (usize, usize);
 
-    /// Single-vector product `y = W x` (`x.len() == k`).
+    /// Zero-allocation batched product: write `W · X` into the
+    /// caller-owned `y` (`n * m_batch`, batch-major, fully overwritten),
+    /// drawing every internal buffer from — and accumulating counters
+    /// into — the caller-owned `scratch`. `x.len() == k * m_batch`.
+    fn gemm_into(&self, x: &[f32], m_batch: usize, y: &mut [f32], scratch: &mut EngineScratch);
+
+    /// The engine's built-in scratch, used by the allocating
+    /// compatibility wrappers and the [`GemmEngine::counters`] view.
+    fn scratch(&self) -> &EngineScratch;
+    fn scratch_mut(&mut self) -> &mut EngineScratch;
+
+    /// Single-vector `gemm_into` (`y.len() == n`).
+    fn gemv_into(&self, x: &[f32], y: &mut [f32], scratch: &mut EngineScratch) {
+        self.gemm_into(x, 1, y, scratch);
+    }
+
+    /// Single-vector product `y = W x` (allocating compatibility wrapper).
     fn gemv(&mut self, x: &[f32]) -> Vec<f32> {
         self.gemm(x, 1)
     }
 
-    /// Batched product. `x.len() == k * m_batch`, returns `n * m_batch`.
-    fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32>;
+    /// Batched product (allocating compatibility wrapper over
+    /// [`GemmEngine::gemm_into`] and the built-in scratch).
+    fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32> {
+        let n = self.dims().0;
+        let mut y = vec![0f32; n * m_batch];
+        let mut scratch = std::mem::take(self.scratch_mut());
+        self.gemm_into(x, m_batch, &mut y, &mut scratch);
+        *self.scratch_mut() = scratch;
+        y
+    }
 
-    /// Work/traffic counters accumulated since the last reset.
-    fn counters(&self) -> &Counters;
+    /// Work/traffic counters accumulated by calls made through the
+    /// built-in scratch (i.e. the wrapper methods) since the last reset.
+    fn counters(&self) -> &Counters {
+        &self.scratch().counters
+    }
 
-    fn reset_counters(&mut self);
+    fn reset_counters(&mut self) {
+        self.scratch_mut().counters.reset();
+    }
 }
 
 #[cfg(test)]
@@ -124,5 +173,54 @@ mod tests {
         assert!(cg.counters().mac_flops > 0);
         cg.reset_counters();
         assert_eq!(cg.counters().mac_flops, 0);
+    }
+
+    /// `gemm_into` must match the wrapper bit-for-bit, overwrite whatever
+    /// garbage the output buffer held, and tolerate a scratch that was
+    /// last used by a *different* engine and shape.
+    #[test]
+    fn gemm_into_matches_wrapper_with_dirty_shared_scratch() {
+        let cfg = QuantConfig::new(4, 2, 6, 32).unwrap();
+        let (w, q) = setup(48, 64, cfg);
+        let x = Prng::seeded(7).normal_vec(64 * 2, 1.0);
+        let mut shared = EngineScratch::new();
+
+        let cg = CodeGemmEngine::from_quantized(&q);
+        let dq = DequantEngine::from_quantized(&q);
+        let dense = DenseEngine::new(w.clone(), 48, 64);
+
+        let mut y = vec![f32::NAN; 48 * 2];
+        cg.gemm_into(&x, 2, &mut y, &mut shared);
+        assert_eq!(y, CodeGemmEngine::from_quantized(&q).gemm(&x, 2));
+
+        // Same scratch, different engine family + batch size.
+        let mut y1 = vec![f32::NAN; 48];
+        dq.gemm_into(&x[..64], 1, &mut y1, &mut shared);
+        assert_eq!(y1, DequantEngine::from_quantized(&q).gemv(&x[..64]));
+
+        let mut yd = vec![f32::NAN; 48 * 2];
+        dense.gemm_into(&x, 2, &mut yd, &mut shared);
+        assert_eq!(yd, DenseEngine::new(w, 48, 64).gemm(&x, 2));
+
+        // The shared scratch accumulated counters from all three calls.
+        assert_eq!(shared.counters.calls, 3);
+    }
+
+    /// After the first call, repeated same-shape calls must not grow any
+    /// scratch buffer (the zero-allocation steady state).
+    #[test]
+    fn scratch_reaches_steady_state_after_warmup() {
+        let cfg = QuantConfig::new(4, 2, 6, 32).unwrap();
+        let (_, q) = setup(48, 64, cfg);
+        let x = Prng::seeded(8).normal_vec(64 * 4, 1.0);
+        let e = CodeGemmEngine::from_quantized(&q);
+        let mut scratch = EngineScratch::new();
+        let mut y = vec![0f32; 48 * 4];
+        e.gemm_into(&x, 4, &mut y, &mut scratch);
+        let footprint = scratch.footprint_bytes();
+        for _ in 0..3 {
+            e.gemm_into(&x, 4, &mut y, &mut scratch);
+        }
+        assert_eq!(scratch.footprint_bytes(), footprint, "steady state must not grow");
     }
 }

@@ -9,7 +9,7 @@
 //! innermost so batched gathers are contiguous loads.
 
 /// A built Psumbook for one tile.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Psumbook {
     /// Vectors in the tile (`t_w / v`).
     pub jn: usize,
@@ -26,6 +26,19 @@ impl Psumbook {
     /// Allocate an uninitialized book (zeroed).
     pub fn empty(jn: usize, m: usize, nc: usize, mb: usize) -> Psumbook {
         Psumbook { jn, m, nc, mb, data: vec![0f32; jn * m * nc * mb] }
+    }
+
+    /// Reshape in place for a new tile geometry, reusing the allocation
+    /// (grow-only capacity; `build` overwrites every entry in use). This
+    /// is what keeps a scratch-resident book allocation-free once it has
+    /// seen the largest tile of a workload.
+    pub fn reshape(&mut self, jn: usize, m: usize, nc: usize, mb: usize) {
+        self.jn = jn;
+        self.m = m;
+        self.nc = nc;
+        self.mb = mb;
+        self.data.clear();
+        self.data.resize(jn * m * nc * mb, 0.0);
     }
 
     /// Number of f32 entries.
@@ -166,6 +179,28 @@ mod tests {
         let book = Psumbook::empty(2, 2, 4, 1);
         let total: usize = (0..2).flat_map(|j| (0..2).map(move |c| (j, c))).map(|(j, c)| book.table(j, c).len()).sum();
         assert_eq!(total, book.len());
+    }
+
+    #[test]
+    fn reshape_reuses_capacity_and_builds_correctly() {
+        let (v, m, nc) = (4usize, 1usize, 8usize);
+        let codebooks = Prng::seeded(3).normal_vec(m * nc * v, 1.0);
+        let mut book = Psumbook::empty(4, m, nc, 2);
+        let cap = book.data.capacity();
+        // Shrink to a smaller geometry: no reallocation, correct entries.
+        book.reshape(2, m, nc, 1);
+        assert_eq!(book.data.capacity(), cap);
+        let x = Prng::seeded(4).normal_vec(2 * v, 1.0);
+        book.build(&codebooks, v, &x);
+        for j in 0..2 {
+            for i in 0..nc {
+                let mut expect = 0f32;
+                for t in 0..v {
+                    expect += codebooks[i * v + t] * x[j * v + t];
+                }
+                assert!((book.get(j, 0, i, 0) - expect).abs() < 1e-5);
+            }
+        }
     }
 
     #[test]

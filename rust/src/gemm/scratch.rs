@@ -1,0 +1,83 @@
+//! Caller-owned engine scratch: every buffer a [`crate::gemm::GemmEngine`]
+//! needs between the start and end of one `gemm_into` call, plus the work
+//! counters that call accumulates into.
+//!
+//! Moving this state out of the engines is what makes them `&self` (and
+//! therefore `Sync`-shareable across worker threads) and what makes the
+//! decode hot loop allocation-free: buffers grow to the high-water mark of
+//! the shapes they have seen and are then reused verbatim, so after one
+//! warmup pass no `gemm_into` call touches the allocator.
+//!
+//! One scratch can serve many engines of different shapes/configs in
+//! sequence (the model forward pass drives every linear of every layer
+//! through a single scratch); sharded and tensor-parallel wrappers hand
+//! each worker its own entry of [`EngineScratch::children`].
+
+use crate::gemm::psumbook::Psumbook;
+use crate::gemm::traffic::Counters;
+
+/// Reusable scratch + counters for `gemm_into` calls.
+#[derive(Clone, Debug, Default)]
+pub struct EngineScratch {
+    /// Work/traffic counters accumulated by every call made with this
+    /// scratch (engines add; callers read/reset).
+    pub counters: Counters,
+    /// Primary f32 staging: CodeGEMM's activation tile, the dequant
+    /// kernel's decode row, LUT-GEMM's chunk tables, and the
+    /// tensor-parallel input staging.
+    pub buf: Vec<f32>,
+    /// Secondary f32 staging: batched shard outputs and row-parallel
+    /// partial products in the sharded/TP wrappers.
+    pub buf2: Vec<f32>,
+    /// CodeGEMM's Psumbook (left empty by the other engines).
+    pub book: Psumbook,
+    /// Per-worker child scratches used by sharded / tensor-parallel
+    /// wrappers (one per shard; leaf engines ignore this).
+    pub children: Vec<EngineScratch>,
+}
+
+impl EngineScratch {
+    pub fn new() -> EngineScratch {
+        EngineScratch::default()
+    }
+
+    /// High-water f32 footprint of this scratch (excluding children).
+    pub fn footprint_bytes(&self) -> usize {
+        (self.buf.capacity() + self.buf2.capacity() + self.book.data.capacity()) * 4
+    }
+}
+
+/// Grow-only borrow: ensure `buf` holds at least `len` elements and hand
+/// back `&mut buf[..len]`. Contents are unspecified — callers overwrite.
+/// Growth only happens while a buffer is still below its high-water mark,
+/// which is what keeps steady-state calls allocation-free.
+pub fn grow_slice(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+    &mut buf[..len]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_slice_is_grow_only() {
+        let mut b = Vec::new();
+        assert_eq!(grow_slice(&mut b, 4).len(), 4);
+        let cap = b.capacity();
+        assert_eq!(grow_slice(&mut b, 2).len(), 2);
+        assert_eq!(b.capacity(), cap, "shrinking must not reallocate");
+        assert_eq!(grow_slice(&mut b, 4).len(), 4);
+        assert_eq!(b.capacity(), cap, "regrowth within capacity is free");
+    }
+
+    #[test]
+    fn default_scratch_is_empty() {
+        let s = EngineScratch::new();
+        assert_eq!(s.counters, Counters::default());
+        assert!(s.buf.is_empty() && s.buf2.is_empty() && s.children.is_empty());
+        assert!(s.book.is_empty());
+    }
+}

@@ -3,7 +3,7 @@
 //! and multiplies — data movement improves with the bit-width, compute
 //! does not.
 
-use crate::gemm::traffic::Counters;
+use crate::gemm::scratch::EngineScratch;
 use crate::gemm::GemmEngine;
 use crate::quant::uniform::UniformLinear;
 use crate::util::timer::Timer;
@@ -12,12 +12,12 @@ use crate::util::timer::Timer;
 #[derive(Clone, Debug)]
 pub struct UniformGemmEngine {
     q: UniformLinear,
-    counters: Counters,
+    scratch: EngineScratch,
 }
 
 impl UniformGemmEngine {
     pub fn new(q: UniformLinear) -> UniformGemmEngine {
-        UniformGemmEngine { q, counters: Counters::new() }
+        UniformGemmEngine { q, scratch: EngineScratch::new() }
     }
 }
 
@@ -30,12 +30,13 @@ impl GemmEngine for UniformGemmEngine {
         (self.q.n, self.q.k)
     }
 
-    fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32> {
+    fn gemm_into(&self, x: &[f32], m_batch: usize, y: &mut [f32], scratch: &mut EngineScratch) {
         let (n, k) = self.dims();
         assert_eq!(x.len(), k * m_batch);
+        assert_eq!(y.len(), n * m_batch);
         let group = self.q.group;
         let n_groups = self.q.n_groups();
-        let mut y = vec![0f32; n * m_batch];
+        let counters = &mut scratch.counters;
         let t = Timer::start();
         for b in 0..m_batch {
             let xb = &x[b * k..(b + 1) * k];
@@ -54,24 +55,22 @@ impl GemmEngine for UniformGemmEngine {
                 y[b * n + r] = acc;
             }
         }
-        self.counters.read_seconds += t.elapsed_s();
+        counters.read_seconds += t.elapsed_s();
         let macs = (n * k * m_batch) as u64;
-        self.counters.mac_flops += macs;
-        self.counters.read_ops += macs;
+        counters.mac_flops += macs;
+        counters.read_ops += macs;
         // Weight stream: packed ints + fp16 scales.
-        self.counters.weight_bytes +=
-            ((n * k * self.q.bits).div_ceil(8) + n * n_groups * 2) as u64;
-        self.counters.activation_bytes += (k * m_batch * 2) as u64;
-        self.counters.calls += 1;
-        y
+        counters.weight_bytes += ((n * k * self.q.bits).div_ceil(8) + n * n_groups * 2) as u64;
+        counters.activation_bytes += (k * m_batch * 2) as u64;
+        counters.calls += 1;
     }
 
-    fn counters(&self) -> &Counters {
-        &self.counters
+    fn scratch(&self) -> &EngineScratch {
+        &self.scratch
     }
 
-    fn reset_counters(&mut self) {
-        self.counters.reset();
+    fn scratch_mut(&mut self) -> &mut EngineScratch {
+        &mut self.scratch
     }
 }
 

@@ -45,7 +45,7 @@ impl EngineKind {
 
     /// Quantize `w` (row-major `n×k`) and construct the engine.
     /// `h` is an optional per-column calibration importance (diag H).
-    pub fn build(&self, w: &[f32], n: usize, k: usize, h: Option<&[f32]>) -> Box<dyn GemmEngine + Send> {
+    pub fn build(&self, w: &[f32], n: usize, k: usize, h: Option<&[f32]>) -> Box<dyn GemmEngine + Send + Sync> {
         match self {
             EngineKind::Dense => Box::new(DenseEngine::new(w.to_vec(), n, k)),
             EngineKind::CodeGemm { cfg, kernel, tune } => {
@@ -97,7 +97,7 @@ impl EngineKind {
         h: Option<&[f32]>,
         plan: &ShardPlan,
         pool: Arc<ThreadPool>,
-    ) -> Box<dyn GemmEngine + Send> {
+    ) -> Box<dyn GemmEngine + Send + Sync> {
         if plan.is_serial() {
             return self.build(w, n, k, h);
         }
@@ -173,12 +173,12 @@ impl EngineKind {
         h: Option<&[f32]>,
         plan: &ShardPlan,
         pool: Arc<ThreadPool>,
-    ) -> Box<dyn GemmEngine + Send> {
+    ) -> Box<dyn GemmEngine + Send + Sync> {
         if plan.is_serial() {
             return self.build(w, n, k, h);
         }
         assert_eq!(plan.len, k, "plan must partition the reduction dim");
-        let engines: Vec<Box<dyn GemmEngine + Send>> = match self {
+        let engines: Vec<Box<dyn GemmEngine + Send + Sync>> = match self {
             // Additive-codebook formats: quantize once, column-slice the
             // quantized layer (same codebooks in every shard).
             EngineKind::CodeGemm { cfg, kernel, tune } => {
@@ -190,7 +190,7 @@ impl EngineKind {
                         Box::new(CodeGemmEngine::with_kernel(
                             &shard::slice_cols_unpacked(&q, &codes, c0, c1),
                             *kernel,
-                        )) as Box<dyn GemmEngine + Send>
+                        )) as Box<dyn GemmEngine + Send + Sync>
                     })
                     .collect()
             }
@@ -203,7 +203,7 @@ impl EngineKind {
                         Box::new(DequantEngine::from_quantized(&shard::slice_cols_unpacked(
                             &q, &codes, c0, c1,
                         )))
-                            as Box<dyn GemmEngine + Send>
+                            as Box<dyn GemmEngine + Send + Sync>
                     })
                     .collect()
             }

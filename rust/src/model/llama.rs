@@ -6,28 +6,62 @@
 //! Architecture (matches `python/compile/model.py` exactly): token
 //! embedding → N × [RMSNorm → GQA attention with RoPE → residual →
 //! RMSNorm → SwiGLU MLP → residual] → RMSNorm → LM head.
+//!
+//! Execution model: every linear runs through the zero-allocation
+//! `gemm_into` core. The model owns one [`ForwardScratch`] holding every
+//! activation buffer plus a single shared [`EngineScratch`], reused
+//! across layers, steps and requests — after the first token the decode
+//! hot loop performs no heap allocation ([`LlamaModel::forward_into`]),
+//! and prefill runs as true batched GEMMs over the whole prompt
+//! ([`LlamaModel::forward_batch`]) so the Psumbook build cost amortizes
+//! across the batch dimension exactly as the paper's Eq. 3 predicts.
 
 use super::engine_factory::EngineKind;
 use super::kv::KvCache;
 use super::weights::ModelWeights;
 use crate::config::{ModelConfig, ParallelConfig};
-use crate::gemm::GemmEngine;
+use crate::gemm::scratch::grow_slice;
+use crate::gemm::{Counters, EngineScratch, GemmEngine};
 use crate::parallel::ShardPlan;
 use crate::util::stats::softmax_inplace;
 use crate::util::threadpool::ThreadPool;
 use std::sync::Arc;
 
+/// Engines cap `m_batch` at 64 (the Psumbook batch axis); longer prompts
+/// prefill in chunks of this size.
+pub const MAX_PREFILL_CHUNK: usize = 64;
+
 /// Engines for one decoder layer.
 struct LayerEngines {
-    wq: Box<dyn GemmEngine + Send>,
-    wk: Box<dyn GemmEngine + Send>,
-    wv: Box<dyn GemmEngine + Send>,
-    wo: Box<dyn GemmEngine + Send>,
-    w_gate: Box<dyn GemmEngine + Send>,
-    w_up: Box<dyn GemmEngine + Send>,
-    w_down: Box<dyn GemmEngine + Send>,
+    wq: Box<dyn GemmEngine + Send + Sync>,
+    wk: Box<dyn GemmEngine + Send + Sync>,
+    wv: Box<dyn GemmEngine + Send + Sync>,
+    wo: Box<dyn GemmEngine + Send + Sync>,
+    w_gate: Box<dyn GemmEngine + Send + Sync>,
+    w_up: Box<dyn GemmEngine + Send + Sync>,
+    w_down: Box<dyn GemmEngine + Send + Sync>,
     attn_norm: Vec<f32>,
     mlp_norm: Vec<f32>,
+}
+
+/// Reusable activation buffers for the forward pass — grown once to the
+/// largest shape seen (layer width × batch chunk), then reused across
+/// layers, steps and requests. Engines draw their own tile/table scratch
+/// from the single shared [`EngineScratch`].
+#[derive(Default)]
+struct ForwardScratch {
+    h: Vec<f32>,
+    normed: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn_out: Vec<f32>,
+    proj: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    act: Vec<f32>,
+    scores: Vec<f32>,
+    eng: EngineScratch,
 }
 
 /// A Llama model whose linears run through a chosen kernel engine.
@@ -37,10 +71,11 @@ pub struct LlamaModel {
     embedding: Vec<f32>,
     layers: Vec<LayerEngines>,
     final_norm: Vec<f32>,
-    lm_head: Box<dyn GemmEngine + Send>,
+    lm_head: Box<dyn GemmEngine + Send + Sync>,
     /// Precomputed RoPE tables: `cos/sin[pos * half + i]`.
     rope_cos: Vec<f32>,
     rope_sin: Vec<f32>,
+    scratch: ForwardScratch,
 }
 
 /// Precompute RoPE tables (`cos/sin[pos * half + i]`).
@@ -126,6 +161,7 @@ impl LlamaModel {
             lm_head,
             rope_cos,
             rope_sin,
+            scratch: ForwardScratch::default(),
             cfg,
         }
     }
@@ -134,13 +170,15 @@ impl LlamaModel {
     /// according to `par`, per layer class:
     ///
     /// - Q/K/V, gate/up and the LM head are **column-parallel** (output
-    ///   rows sharded, outputs concatenated — bit-exact vs. serial);
+    ///   rows sharded; on the decode path each worker writes its
+    ///   sub-slice of the caller's output buffer — bit-exact vs. serial);
     /// - O and down are **row-parallel** (reduction dim sharded,
     ///   partials combined by the deterministic ordered all-reduce —
     ///   deterministic, equal to serial up to float reassociation).
     ///
-    /// Every shard engine keeps its own Psumbook/LUT scratch, mirroring
-    /// the per-thread-block tables of the GPU kernels.
+    /// Every worker gets its own per-shard `EngineScratch` (Psumbook/LUT
+    /// scratch), mirroring the per-thread-block tables of the GPU
+    /// kernels.
     pub fn load_parallel(
         weights: &ModelWeights,
         kind: EngineKind,
@@ -201,6 +239,7 @@ impl LlamaModel {
             lm_head,
             rope_cos,
             rope_sin,
+            scratch: ForwardScratch::default(),
             cfg,
         }
     }
@@ -209,105 +248,199 @@ impl LlamaModel {
         KvCache::new(self.cfg.n_layers, self.cfg.max_seq, self.cfg.kv_dim())
     }
 
-    /// One decode step: token at position `pos` → logits over the vocab.
-    /// Appends this position's K/V to `cache`.
+    /// One decode step: token at position `pos` → logits over the vocab,
+    /// written into the caller-owned `logits` (`vocab` long). Appends
+    /// this position's K/V to `cache`. This is the zero-allocation hot
+    /// loop: every activation and engine buffer comes from the model's
+    /// reused scratch.
+    pub fn forward_into(
+        &mut self,
+        token: usize,
+        pos: usize,
+        cache: &mut KvCache,
+        logits: &mut [f32],
+    ) {
+        let mut s = std::mem::take(&mut self.scratch);
+        self.step_batch(&[token], pos, cache, Some(logits), &mut s);
+        self.scratch = s;
+    }
+
+    /// One decode step: token at position `pos` → logits over the vocab
+    /// (allocating wrapper over [`Self::forward_into`]).
     pub fn forward(&mut self, token: usize, pos: usize, cache: &mut KvCache) -> Vec<f32> {
+        let mut logits = vec![0f32; self.cfg.vocab];
+        self.forward_into(token, pos, cache, &mut logits);
+        logits
+    }
+
+    /// Batched prefill: run `tokens` (occupying positions
+    /// `pos0 .. pos0 + tokens.len()`) through every layer as true
+    /// `m_batch = tokens.len()` GEMMs — the regime where the Psumbook
+    /// build cost `O(m·2^b·K·N_blocks·M)` amortizes over the gather
+    /// (paper Eq. 3) — applying attention per position against the
+    /// shared KV cache. Returns the logits after the final token.
+    ///
+    /// Matches token-by-token [`Self::forward`] up to float
+    /// reassociation inside the engines' batched kernels (bit-exact for
+    /// the dense engine, ≤1e-5 rel-L2 for the table kernels).
+    pub fn forward_batch(
+        &mut self,
+        tokens: &[usize],
+        pos0: usize,
+        cache: &mut KvCache,
+    ) -> Vec<f32> {
+        assert!(!tokens.is_empty(), "forward_batch needs at least one token");
+        let mut logits = vec![0f32; self.cfg.vocab];
+        let mut s = std::mem::take(&mut self.scratch);
+        let mut pos = pos0;
+        let n_chunks = tokens.len().div_ceil(MAX_PREFILL_CHUNK);
+        for (ci, chunk) in tokens.chunks(MAX_PREFILL_CHUNK).enumerate() {
+            // The LM head (the largest single GEMM) only matters for the
+            // final position — skip it on non-final chunks.
+            let want = ci + 1 == n_chunks;
+            let out = if want { Some(logits.as_mut_slice()) } else { None };
+            self.step_batch(chunk, pos, cache, out, &mut s);
+            pos += chunk.len();
+        }
+        self.scratch = s;
+        logits
+    }
+
+    /// Run a whole prompt (from position 0), returning logits after the
+    /// final token.
+    pub fn prefill(&mut self, tokens: &[usize], cache: &mut KvCache) -> Vec<f32> {
+        self.forward_batch(tokens, 0, cache)
+    }
+
+    /// The shared forward core: one batch chunk of `m = tokens.len()`
+    /// positions through every layer (`m == 1` is the decode step).
+    /// When `logits` is `Some`, runs the LM head on the final position
+    /// and writes its logits; `None` skips the LM head entirely
+    /// (non-final prefill chunks only need the KV cache side effects).
+    fn step_batch(
+        &self,
+        tokens: &[usize],
+        pos0: usize,
+        cache: &mut KvCache,
+        logits: Option<&mut [f32]>,
+        s: &mut ForwardScratch,
+    ) {
         let cfg = &self.cfg;
+        let m = tokens.len();
+        debug_assert!(m >= 1 && m <= MAX_PREFILL_CHUNK);
         let d = cfg.hidden;
         let hd = cfg.head_dim();
         let kv_dim = cfg.kv_dim();
         let groups = cfg.n_heads / cfg.n_kv_heads;
-        assert!(token < cfg.vocab, "token {token} out of vocab");
-
-        let mut h = self.embedding[token * d..(token + 1) * d].to_vec();
-        let mut normed = vec![0f32; d];
         let half = hd / 2;
-        let cos = self.rope_cos[pos * half..(pos + 1) * half].to_vec();
-        let sin = self.rope_sin[pos * half..(pos + 1) * half].to_vec();
-        for (layer_i, l) in self.layers.iter_mut().enumerate() {
+
+        let h = grow_slice(&mut s.h, m * d);
+        for (b, &t) in tokens.iter().enumerate() {
+            assert!(t < cfg.vocab, "token {t} out of vocab");
+            h[b * d..(b + 1) * d].copy_from_slice(&self.embedding[t * d..(t + 1) * d]);
+        }
+        let normed = grow_slice(&mut s.normed, m * d);
+        let q = grow_slice(&mut s.q, m * d);
+        let kk = grow_slice(&mut s.k, m * kv_dim);
+        let vv = grow_slice(&mut s.v, m * kv_dim);
+        let attn_out = grow_slice(&mut s.attn_out, m * d);
+        let proj = grow_slice(&mut s.proj, m * d);
+        let gate = grow_slice(&mut s.gate, m * cfg.ffn);
+        let up = grow_slice(&mut s.up, m * cfg.ffn);
+        let act = grow_slice(&mut s.act, m * cfg.ffn);
+        // Sized to the full context up front so the buffer never grows
+        // mid-sequence (pos0 + m <= max_seq, enforced by the cache).
+        let scores = grow_slice(&mut s.scores, cfg.max_seq);
+        let eng = &mut s.eng;
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        for (layer_i, l) in self.layers.iter().enumerate() {
             // ---- attention ----
-            rmsnorm(&h, &l.attn_norm, &mut normed);
-            let mut q = l.wq.gemv(&normed);
-            let mut k = l.wk.gemv(&normed);
-            let v = l.wv.gemv(&normed);
-            rope_rotate(&mut q, hd, &cos, &sin);
-            rope_rotate(&mut k, hd, &cos, &sin);
-            cache.write(layer_i, pos, &k, &v);
-            let upto = pos + 1;
-            let keys = cache.keys(layer_i, upto).to_vec();
-            let vals = cache.values(layer_i, upto).to_vec();
-            let mut attn_out = vec![0f32; d];
-            let scale = 1.0 / (hd as f32).sqrt();
-            let mut scores = vec![0f32; upto];
-            for head in 0..cfg.n_heads {
-                let kv_head = head / groups;
-                let qh = &q[head * hd..(head + 1) * hd];
-                for (p, s) in scores.iter_mut().enumerate() {
-                    let kh = &keys[p * kv_dim + kv_head * hd..p * kv_dim + (kv_head + 1) * hd];
-                    *s = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
-                }
-                softmax_inplace(&mut scores);
-                let out = &mut attn_out[head * hd..(head + 1) * hd];
-                for (p, &s) in scores.iter().enumerate() {
-                    let vh = &vals[p * kv_dim + kv_head * hd..p * kv_dim + (kv_head + 1) * hd];
-                    for t in 0..hd {
-                        out[t] += s * vh[t];
+            for b in 0..m {
+                rmsnorm(&h[b * d..(b + 1) * d], &l.attn_norm, &mut normed[b * d..(b + 1) * d]);
+            }
+            l.wq.gemm_into(normed, m, q, eng);
+            l.wk.gemm_into(normed, m, kk, eng);
+            l.wv.gemm_into(normed, m, vv, eng);
+            for b in 0..m {
+                let pos = pos0 + b;
+                let cos = &self.rope_cos[pos * half..(pos + 1) * half];
+                let sin = &self.rope_sin[pos * half..(pos + 1) * half];
+                rope_rotate(&mut q[b * d..(b + 1) * d], hd, cos, sin);
+                rope_rotate(&mut kk[b * kv_dim..(b + 1) * kv_dim], hd, cos, sin);
+                cache.write(
+                    layer_i,
+                    pos,
+                    &kk[b * kv_dim..(b + 1) * kv_dim],
+                    &vv[b * kv_dim..(b + 1) * kv_dim],
+                );
+            }
+            attn_out.fill(0.0);
+            // Causal attention per position: position `pos0 + b` attends
+            // to `0..=pos0+b`, all already written above.
+            for b in 0..m {
+                let upto = pos0 + b + 1;
+                let keys = cache.keys(layer_i, upto);
+                let vals = cache.values(layer_i, upto);
+                let sc = &mut scores[..upto];
+                for head in 0..cfg.n_heads {
+                    let kv_head = head / groups;
+                    let qh = &q[b * d + head * hd..b * d + (head + 1) * hd];
+                    for (p, scv) in sc.iter_mut().enumerate() {
+                        let kh = &keys[p * kv_dim + kv_head * hd..p * kv_dim + (kv_head + 1) * hd];
+                        *scv = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+                    }
+                    softmax_inplace(sc);
+                    let out = &mut attn_out[b * d + head * hd..b * d + (head + 1) * hd];
+                    for (p, &scv) in sc.iter().enumerate() {
+                        let vh = &vals[p * kv_dim + kv_head * hd..p * kv_dim + (kv_head + 1) * hd];
+                        for t in 0..hd {
+                            out[t] += scv * vh[t];
+                        }
                     }
                 }
             }
-            let proj = l.wo.gemv(&attn_out);
-            for i in 0..d {
+            l.wo.gemm_into(attn_out, m, proj, eng);
+            for i in 0..m * d {
                 h[i] += proj[i];
             }
             // ---- MLP ----
-            rmsnorm(&h, &l.mlp_norm, &mut normed);
-            let gate = l.w_gate.gemv(&normed);
-            let up = l.w_up.gemv(&normed);
-            let act: Vec<f32> = gate.iter().zip(&up).map(|(&g, &u)| silu(g) * u).collect();
-            let down = l.w_down.gemv(&act);
-            for i in 0..d {
-                h[i] += down[i];
+            for b in 0..m {
+                rmsnorm(&h[b * d..(b + 1) * d], &l.mlp_norm, &mut normed[b * d..(b + 1) * d]);
+            }
+            l.w_gate.gemm_into(normed, m, gate, eng);
+            l.w_up.gemm_into(normed, m, up, eng);
+            for i in 0..m * cfg.ffn {
+                act[i] = silu(gate[i]) * up[i];
+            }
+            l.w_down.gemm_into(act, m, proj, eng);
+            for i in 0..m * d {
+                h[i] += proj[i];
             }
         }
-        rmsnorm(&h.clone(), &self.final_norm, &mut h);
-        self.lm_head.gemv(&h)
-    }
-
-    /// Run a whole prompt, returning logits after the final token.
-    pub fn prefill(&mut self, tokens: &[usize], cache: &mut KvCache) -> Vec<f32> {
-        let mut logits = Vec::new();
-        for (pos, &t) in tokens.iter().enumerate() {
-            logits = self.forward(t, pos, cache);
+        // LM head on the final position only (and only when requested).
+        if let Some(logits) = logits {
+            assert_eq!(logits.len(), cfg.vocab);
+            let normed_last = &mut normed[..d];
+            rmsnorm(&h[(m - 1) * d..m * d], &self.final_norm, normed_last);
+            self.lm_head.gemm_into(normed_last, 1, logits, eng);
         }
-        logits
     }
 
-    /// Sum of work/traffic counters across every engine in the model.
-    pub fn total_counters(&self) -> crate::gemm::Counters {
-        let mut total = crate::gemm::Counters::new();
-        let mut add = |c: &crate::gemm::Counters| {
-            total.mac_flops += c.mac_flops;
-            total.lookups += c.lookups;
-            total.weight_bytes += c.weight_bytes;
-            total.activation_bytes += c.activation_bytes;
-            total.scratch_bytes += c.scratch_bytes;
-            total.build_ops += c.build_ops;
-            total.read_ops += c.read_ops;
-            total.build_seconds += c.build_seconds;
-            total.read_seconds += c.read_seconds;
-            total.calls += c.calls;
-        };
+    /// Sum of work/traffic counters across the model: the shared forward
+    /// scratch (where `forward`/`forward_batch` accumulate) merged with
+    /// every engine's built-in counters (legacy direct-call paths).
+    pub fn total_counters(&self) -> Counters {
+        let mut total = self.scratch.eng.counters.clone();
         for l in &self.layers {
             for e in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_gate, &l.w_up, &l.w_down] {
-                add(e.counters());
+                total.merge(e.counters());
             }
         }
-        add(self.lm_head.counters());
+        total.merge(self.lm_head.counters());
         total
     }
 
-    /// Total quantized storage of all linear engines would occupy, bytes
-    /// (approximated from the per-layer dims × the engine's bit rate).
     pub fn config(&self) -> &ModelConfig {
         &self.cfg
     }
@@ -358,6 +491,70 @@ mod tests {
         m2.forward(8, 1, &mut c2);
         let l2 = m2.forward(9, 2, &mut c2);
         assert!(stats::rel_l2(&l1, &l2) < 1e-6);
+    }
+
+    #[test]
+    fn forward_batch_matches_sequential_forward() {
+        // The batched prefill must reproduce token-by-token decoding: the
+        // dense engine's batched path is per-column identical, so logits
+        // agree to float exactness; the KV caches must agree too.
+        let w = tiny();
+        let prompt = [5usize, 99, 7, 3, 250, 1];
+        let mut mb = LlamaModel::load(&w, EngineKind::Dense, None);
+        let mut cb = mb.new_cache();
+        let lb = mb.forward_batch(&prompt, 0, &mut cb);
+        let mut ms = LlamaModel::load(&w, EngineKind::Dense, None);
+        let mut cs = ms.new_cache();
+        let mut ls = Vec::new();
+        for (pos, &t) in prompt.iter().enumerate() {
+            ls = ms.forward(t, pos, &mut cs);
+        }
+        let rel = stats::rel_l2(&lb, &ls);
+        assert!(rel < 1e-6, "batched prefill diverged: rel {rel}");
+        assert_eq!(cb.len, cs.len);
+        // Decoding after either prefill gives the same continuation.
+        let a = mb.forward(42, prompt.len(), &mut cb);
+        let b = ms.forward(42, prompt.len(), &mut cs);
+        assert!(stats::rel_l2(&a, &b) < 1e-6);
+    }
+
+    #[test]
+    fn forward_batch_matches_sequential_forward_quantized() {
+        // Table kernels reassociate the batched gather: equal within the
+        // acceptance tolerance, not bitwise.
+        let w = tiny();
+        let cfg = QuantConfig::new(4, 1, 6, 32).unwrap();
+        let prompt = [11usize, 23, 5, 8];
+        let mut mb = LlamaModel::load(&w, EngineKind::codegemm(cfg), None);
+        let mut cb = mb.new_cache();
+        let lb = mb.forward_batch(&prompt, 0, &mut cb);
+        let mut ms = LlamaModel::load(&w, EngineKind::codegemm(cfg), None);
+        let mut cs = ms.new_cache();
+        let mut ls = Vec::new();
+        for (pos, &t) in prompt.iter().enumerate() {
+            ls = ms.forward(t, pos, &mut cs);
+        }
+        let rel = stats::rel_l2(&lb, &ls);
+        assert!(rel < 1e-5, "batched quantized prefill diverged: rel {rel}");
+    }
+
+    #[test]
+    fn forward_batch_chunks_long_prompts() {
+        // A prompt longer than MAX_PREFILL_CHUNK must prefill correctly
+        // across chunk boundaries.
+        let w = tiny();
+        let prompt: Vec<usize> = (0..MAX_PREFILL_CHUNK + 5).map(|i| (i * 7) % 250 + 1).collect();
+        let mut mb = LlamaModel::load(&w, EngineKind::Dense, None);
+        let mut cb = mb.new_cache();
+        let lb = mb.forward_batch(&prompt, 0, &mut cb);
+        let mut ms = LlamaModel::load(&w, EngineKind::Dense, None);
+        let mut cs = ms.new_cache();
+        let mut ls = Vec::new();
+        for (pos, &t) in prompt.iter().enumerate() {
+            ls = ms.forward(t, pos, &mut cs);
+        }
+        assert!(stats::rel_l2(&lb, &ls) < 1e-6);
+        assert_eq!(cb.len, prompt.len());
     }
 
     #[test]
@@ -447,8 +644,39 @@ mod tests {
         let mut c = m.new_cache();
         m.forward(1, 0, &mut c);
         let after_one = m.total_counters().calls;
+        assert!(after_one > 0, "forward must drive engine calls through the scratch");
         m.forward(2, 1, &mut c);
         let after_two = m.total_counters().calls;
         assert_eq!(after_two, 2 * after_one);
+    }
+
+    #[test]
+    fn decode_scratch_reaches_steady_state() {
+        // After the first decode token, further tokens must not grow any
+        // model-owned buffer (the zero-allocation hot loop).
+        let w = tiny();
+        let mut m = LlamaModel::load(&w, EngineKind::codegemm(QuantConfig::m1v4g128()), None);
+        let mut c = m.new_cache();
+        let mut logits = vec![0f32; m.cfg.vocab];
+        m.forward_into(1, 0, &mut c, &mut logits);
+        let fp = |s: &ForwardScratch| {
+            s.h.capacity()
+                + s.normed.capacity()
+                + s.q.capacity()
+                + s.k.capacity()
+                + s.v.capacity()
+                + s.attn_out.capacity()
+                + s.proj.capacity()
+                + s.gate.capacity()
+                + s.up.capacity()
+                + s.act.capacity()
+                + s.scores.capacity()
+                + s.eng.footprint_bytes()
+        };
+        let warm = fp(&m.scratch);
+        for pos in 1..5 {
+            m.forward_into(pos, pos, &mut c, &mut logits);
+        }
+        assert_eq!(fp(&m.scratch), warm, "decode hot loop grew a buffer");
     }
 }

@@ -14,6 +14,6 @@ pub mod weights;
 
 pub use engine_factory::EngineKind;
 pub use kv::KvCache;
-pub use llama::{rmsnorm, silu, LlamaModel};
+pub use llama::{rmsnorm, silu, LlamaModel, MAX_PREFILL_CHUNK};
 pub use sampler::{argmax, Sampler};
 pub use weights::{LayerWeights, ModelWeights};

@@ -1,0 +1,113 @@
+//! Shared fan-out scaffolding for the sharded / tensor-parallel
+//! wrappers: hand each worker a disjoint region of the caller's output
+//! buffer (or a block of reused staging for batched calls) plus its own
+//! child [`EngineScratch`], then fold the per-shard counters back as one
+//! logical GEMM call. Keeping this in one place means the sub-slice
+//! split, stage+scatter and counter-merge logic cannot drift between
+//! `ShardedEngine` and `TpLinear`.
+
+use super::plan::ShardPlan;
+use super::reduce;
+use crate::gemm::scratch::grow_slice;
+use crate::gemm::{Counters, EngineScratch, GemmEngine};
+use crate::util::threadpool::{ScopedJob, ThreadPool};
+
+/// A shard engine viewed dynamically, shareable across worker threads.
+pub(crate) type ShardRef<'a> = &'a (dyn GemmEngine + Send + Sync);
+
+/// Column-parallel fan-out: `engines[i]` computes output rows
+/// `plan.range(i)` over the full activation `x`. On the single-column
+/// (decode) path every worker writes a true sub-slice of `y`; batched
+/// calls stage per-shard blocks in the reused `buf2` and scatter once.
+/// Both paths are bit-exact vs. the serial engine. `children` must hold
+/// exactly one scratch per shard.
+pub(crate) fn column_fan_out(
+    pool: &ThreadPool,
+    engines: &[ShardRef<'_>],
+    plan: &ShardPlan,
+    x: &[f32],
+    m_batch: usize,
+    y: &mut [f32],
+    buf2: &mut Vec<f32>,
+    children: &mut [EngineScratch],
+) {
+    let ns = plan.num_shards();
+    debug_assert_eq!(engines.len(), ns);
+    debug_assert_eq!(children.len(), ns);
+    if m_batch == 1 {
+        let mut jobs: Vec<ScopedJob> = Vec::with_capacity(ns);
+        let mut rest: &mut [f32] = &mut *y;
+        for ((&e, &(r0, r1)), child) in engines.iter().zip(&plan.shards).zip(children.iter_mut()) {
+            let (ys, tail) = std::mem::take(&mut rest).split_at_mut(r1 - r0);
+            rest = tail;
+            jobs.push(Box::new(move || e.gemm_into(x, 1, ys, child)));
+        }
+        pool.scope_run(jobs);
+    } else {
+        let n = plan.len;
+        let stage = grow_slice(buf2, n * m_batch);
+        let mut jobs: Vec<ScopedJob> = Vec::with_capacity(ns);
+        let mut rest: &mut [f32] = &mut *stage;
+        for ((&e, &(r0, r1)), child) in engines.iter().zip(&plan.shards).zip(children.iter_mut()) {
+            let (ys, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * m_batch);
+            rest = tail;
+            jobs.push(Box::new(move || e.gemm_into(x, m_batch, ys, child)));
+        }
+        pool.scope_run(jobs);
+        reduce::scatter_row_shards(stage, plan, m_batch, y);
+    }
+}
+
+/// Fold one fan-out's per-shard counters into the caller's set and clear
+/// the children for the next call (one fan-out == one logical GEMM call,
+/// not `children.len()`).
+pub(crate) fn merge_children_into(counters: &mut Counters, children: &mut [EngineScratch]) {
+    let mut step = Counters::new();
+    for child in children.iter_mut() {
+        step.merge(&child.counters);
+        child.counters.reset();
+    }
+    step.calls = 1;
+    counters.merge(&step);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::DenseEngine;
+    use crate::parallel::shard;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn column_fan_out_matches_serial_both_paths() {
+        let (n, k) = (21, 16);
+        let w = Prng::seeded(1).normal_vec(n * k, 1.0);
+        let x = Prng::seeded(2).normal_vec(k * 2, 1.0);
+        let plan = ShardPlan::new(n, 3, 1, 1);
+        let shards: Vec<DenseEngine> = plan
+            .shards
+            .iter()
+            .map(|&(r0, r1)| DenseEngine::new(shard::dense_rows(&w, k, r0, r1), r1 - r0, k))
+            .collect();
+        let refs: Vec<ShardRef> = shards.iter().map(|e| e as ShardRef).collect();
+        let pool = ThreadPool::new(3);
+        let mut buf2 = Vec::new();
+        let mut children = vec![EngineScratch::new(); plan.num_shards()];
+        let mut serial = DenseEngine::new(w.clone(), n, k);
+
+        let mut y1 = vec![f32::NAN; n];
+        column_fan_out(&pool, &refs, &plan, &x[..k], 1, &mut y1, &mut buf2, &mut children);
+        assert_eq!(y1, serial.gemv(&x[..k]));
+
+        let mut y2 = vec![f32::NAN; n * 2];
+        column_fan_out(&pool, &refs, &plan, &x, 2, &mut y2, &mut buf2, &mut children);
+        assert_eq!(y2, serial.gemm(&x, 2));
+
+        let mut total = Counters::new();
+        merge_children_into(&mut total, &mut children);
+        // Two fan-outs' worth of shard work folded as... one merge call:
+        // callers merge after every fan-out; here both accumulate first.
+        assert_eq!(total.mac_flops, serial.counters().mac_flops);
+        assert!(children.iter().all(|c| c.counters.mac_flops == 0));
+    }
+}

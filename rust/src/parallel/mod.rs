@@ -12,15 +12,17 @@
 //!   layers *after* quantization, so shard data is byte-identical to the
 //!   serial layer's rows.
 //! - [`sharded_engine::ShardedEngine`] — any [`crate::gemm::GemmEngine`]
-//!   row-sharded over the pool; each shard owns its Psumbook/LUT/decode
-//!   scratch; outputs concatenate in shard order and are **bit-exact**
-//!   vs. serial.
+//!   row-sharded over the pool via the `&self` `gemm_into` core: workers
+//!   share the engines read-only, each writing a disjoint sub-slice of
+//!   the caller's output buffer with its own per-worker
+//!   [`crate::gemm::EngineScratch`] (Psumbook/LUT/decode scratch);
+//!   **bit-exact** vs. serial and allocation-free after warmup.
 //! - [`tensor_parallel::TpLinear`] — Megatron-style column-parallel
 //!   (Q/K/V, gate/up, LM head) and row-parallel (O, down) linears; the
 //!   row-parallel k-sum uses the deterministic ordered all-reduce of
 //!   [`reduce`].
-//! - [`reduce`] — shard-order concatenation, ordered all-reduce, and
-//!   counter merging.
+//! - [`reduce`] — shard-order scatter/concatenation, ordered all-reduce
+//!   (in-place and allocating variants), and counter merging.
 //!
 //! Model- and serving-level entry points:
 //! [`crate::model::LlamaModel::load_parallel`] builds a tensor-parallel
@@ -29,6 +31,7 @@
 //! every batcher step fans each linear out across the pool. Configured by
 //! [`crate::config::ParallelConfig`].
 
+pub(crate) mod fanout;
 pub mod plan;
 pub mod reduce;
 pub mod shard;

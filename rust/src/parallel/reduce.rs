@@ -30,6 +30,39 @@ pub fn concat_row_shards(parts: &[Vec<f32>], plan: &ShardPlan, m_batch: usize) -
     y
 }
 
+/// Scatter per-shard batch-major row blocks — stored back-to-back in
+/// shard order in `stage` (shard `i` occupies `shard_len(i) * m_batch`
+/// entries) — into the full batch-major `n × m_batch` output. The
+/// zero-allocation counterpart of [`concat_row_shards`]: workers write
+/// contiguous blocks of a reused staging buffer, one pass places them.
+pub fn scatter_row_shards(stage: &[f32], plan: &ShardPlan, m_batch: usize, y: &mut [f32]) {
+    let n = plan.len;
+    assert_eq!(y.len(), n * m_batch, "output shape mismatch");
+    let mut off = 0usize;
+    for &(r0, r1) in &plan.shards {
+        let rows = r1 - r0;
+        let part = &stage[off..off + rows * m_batch];
+        for b in 0..m_batch {
+            y[b * n + r0..b * n + r1].copy_from_slice(&part[b * rows..(b + 1) * rows]);
+        }
+        off += rows * m_batch;
+    }
+}
+
+/// Sum `parts.len() / len` equal `len`-sized partials stored back-to-back
+/// in `parts` into `y`, in storage order (fixed association — the
+/// zero-allocation counterpart of [`ordered_sum`]).
+pub fn ordered_sum_into(parts: &[f32], len: usize, y: &mut [f32]) {
+    assert!(len > 0 && parts.len() >= len && parts.len() % len == 0, "partial length mismatch");
+    assert_eq!(y.len(), len, "output length mismatch");
+    y.copy_from_slice(&parts[..len]);
+    for part in parts[len..].chunks_exact(len) {
+        for (o, p) in y.iter_mut().zip(part) {
+            *o += p;
+        }
+    }
+}
+
 /// Sum equal-length partial outputs in slice order (fixed association).
 pub fn ordered_sum(parts: &[Vec<f32>]) -> Vec<f32> {
     assert!(!parts.is_empty(), "ordered_sum needs at least one partial");
@@ -93,5 +126,27 @@ mod tests {
     fn concat_rejects_wrong_part_count() {
         let plan = ShardPlan::new(4, 2, 1, 1);
         let _ = concat_row_shards(&[vec![0.0; 2]], &plan, 1);
+    }
+
+    #[test]
+    fn scatter_matches_concat() {
+        let plan = ShardPlan::new(5, 2, 1, 1); // (0,3), (3,5)
+        let parts = vec![
+            vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0], // 3 rows × 2 batch cols
+            vec![4.0, 5.0, 40.0, 50.0],            // 2 rows × 2 batch cols
+        ];
+        let stage: Vec<f32> = parts.iter().flatten().copied().collect();
+        let mut y = vec![0f32; 10];
+        scatter_row_shards(&stage, &plan, 2, &mut y);
+        assert_eq!(y, concat_row_shards(&parts, &plan, 2));
+    }
+
+    #[test]
+    fn ordered_sum_into_matches_ordered_sum() {
+        let parts = vec![vec![1.0f32, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
+        let flat: Vec<f32> = parts.iter().flatten().copied().collect();
+        let mut y = vec![0f32; 2];
+        ordered_sum_into(&flat, 2, &mut y);
+        assert_eq!(y, ordered_sum(&parts));
     }
 }

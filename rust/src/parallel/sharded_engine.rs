@@ -1,32 +1,38 @@
 //! `ShardedEngine<E>`: run any [`GemmEngine`] row-sharded across the
 //! worker pool.
 //!
-//! Each shard is a complete inner engine over its own row range — with
-//! its *own* Psumbook / LUT / decode scratch, mirroring the
-//! thread-block-local tables of the GPU kernels — so shards share no
-//! mutable state and fan out over `ThreadPool::parallel_map` with no
-//! synchronization beyond the final join. Outputs are concatenated in
-//! shard order; since row partitioning never reorders any row's float
-//! accumulation, the result is **bit-exact** against the serial engine
-//! the shards were sliced from (the property tests assert `==`, not
-//! approximate equality).
+//! Each shard is a complete inner engine over its own row range, executed
+//! via the `&self` zero-allocation `gemm_into` core: workers share the
+//! engines read-only and every worker gets (a) a disjoint sub-slice of
+//! the *caller's* output buffer and (b) its own per-worker
+//! [`EngineScratch`] from the caller scratch's `children` — mirroring the
+//! thread-block-local Psumbook/LUT tables of the GPU kernels. There is no
+//! per-shard `Vec` allocation and no concatenation step on the single
+//! column (decode) path; batched calls stage per-shard blocks in the
+//! reused `buf2` and scatter once. Since row partitioning never reorders
+//! any row's float accumulation, the result is **bit-exact** against the
+//! serial engine the shards were sliced from (the property tests assert
+//! `==`, not approximate equality).
+//!
+//! A panicking shard propagates at the caller after all jobs of the call
+//! settle (`ThreadPool::scope_run`); the engine itself stays usable.
 
+use super::fanout::{self, ShardRef};
 use super::plan::ShardPlan;
-use super::reduce;
-use crate::gemm::{Counters, GemmEngine};
+use crate::gemm::{EngineScratch, GemmEngine};
 use crate::util::threadpool::ThreadPool;
 use std::sync::Arc;
 
 /// Generic row-sharded wrapper around per-shard inner engines.
-pub struct ShardedEngine<E: GemmEngine + Send + 'static> {
+pub struct ShardedEngine<E: GemmEngine + Send + Sync> {
     plan: ShardPlan,
     shards: Vec<E>,
     pool: Arc<ThreadPool>,
     k: usize,
-    counters: Counters,
+    scratch: EngineScratch,
 }
 
-impl<E: GemmEngine + Send + 'static> ShardedEngine<E> {
+impl<E: GemmEngine + Send + Sync> ShardedEngine<E> {
     /// Wrap pre-built shard engines. `shards[i]` must compute the rows of
     /// `plan.range(i)` (i.e. its `dims().0 == plan.shard_len(i)`), and
     /// every shard must share the reduction dim `k`.
@@ -39,7 +45,7 @@ impl<E: GemmEngine + Send + 'static> ShardedEngine<E> {
             assert_eq!(e.dims().0, r1 - r0, "shard {i} row count mismatch");
             assert_eq!(e.dims().1, k, "shard {i} reduction dim mismatch");
         }
-        ShardedEngine { plan, shards, pool, k, counters: Counters::new() }
+        ShardedEngine { plan, shards, pool, k, scratch: EngineScratch::new() }
     }
 
     /// Build shard engines from a factory called with each row range.
@@ -64,15 +70,9 @@ impl<E: GemmEngine + Send + 'static> ShardedEngine<E> {
     pub fn shards(&self) -> &[E] {
         &self.shards
     }
-
-    fn refresh_counters(&mut self) {
-        self.counters = reduce::merge_counters(self.shards.iter().map(|e| e.counters()));
-        // One sharded call is one logical GEMM call, not `num_shards`.
-        self.counters.calls /= self.plan.num_shards().max(1) as u64;
-    }
 }
 
-impl<E: GemmEngine + Send + 'static> GemmEngine for ShardedEngine<E> {
+impl<E: GemmEngine + Send + Sync> GemmEngine for ShardedEngine<E> {
     fn name(&self) -> &'static str {
         "sharded"
     }
@@ -81,49 +81,46 @@ impl<E: GemmEngine + Send + 'static> GemmEngine for ShardedEngine<E> {
         (self.plan.len, self.k)
     }
 
-    fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32> {
+    fn gemm_into(&self, x: &[f32], m_batch: usize, y: &mut [f32], scratch: &mut EngineScratch) {
         assert_eq!(x.len(), self.k * m_batch);
-        // A shard job that panicked in an earlier call unwound through
-        // `parallel_map` while the engines were checked out — surface
-        // that state directly instead of a confusing downstream error.
-        assert_eq!(
-            self.shards.len(),
-            self.plan.num_shards(),
-            "sharded engine poisoned: a previous call panicked mid-fan-out"
+        assert_eq!(y.len(), self.plan.len * m_batch);
+        let ns = self.plan.num_shards();
+        if ns == 1 {
+            // Serial fast path: run on the caller's thread with the
+            // caller's scratch directly.
+            return self.shards[0].gemm_into(x, m_batch, y, scratch);
+        }
+        let EngineScratch { counters, buf2, children, .. } = scratch;
+        if children.len() < ns {
+            children.resize_with(ns, EngineScratch::new);
+        }
+        let engines: Vec<ShardRef> = self.shards.iter().map(|e| e as ShardRef).collect();
+        fanout::column_fan_out(
+            &self.pool,
+            &engines,
+            &self.plan,
+            x,
+            m_batch,
+            y,
+            buf2,
+            &mut children[..ns],
         );
-        if self.shards.len() == 1 {
-            let y = self.shards[0].gemm(x, m_batch);
-            self.refresh_counters();
-            return y;
-        }
-        // Shard engines are moved into the pool jobs and moved back with
-        // their outputs — no shared mutable state, no unsafe. The
-        // activation vector is shared read-only via Arc.
-        let xs: Arc<Vec<f32>> = Arc::new(x.to_vec());
-        let engines = std::mem::take(&mut self.shards);
-        let results = self.pool.parallel_map(engines, move |mut e: E| {
-            let y = e.gemm(&xs, m_batch);
-            (e, y)
-        });
-        let mut parts = Vec::with_capacity(results.len());
-        for (e, y) in results {
-            self.shards.push(e);
-            parts.push(y);
-        }
-        let y = reduce::concat_row_shards(&parts, &self.plan, m_batch);
-        self.refresh_counters();
-        y
+        fanout::merge_children_into(counters, &mut children[..ns]);
     }
 
-    fn counters(&self) -> &Counters {
-        &self.counters
+    fn scratch(&self) -> &EngineScratch {
+        &self.scratch
+    }
+
+    fn scratch_mut(&mut self) -> &mut EngineScratch {
+        &mut self.scratch
     }
 
     fn reset_counters(&mut self) {
         for e in &mut self.shards {
             e.reset_counters();
         }
-        self.counters.reset();
+        self.scratch.counters.reset();
     }
 }
 
@@ -171,6 +168,35 @@ mod tests {
         // Gather work is per-row, so merged lookups match the serial run.
         assert_eq!(sharded.counters().lookups, serial.counters().lookups);
         assert_eq!(sharded.counters().read_ops, serial.counters().read_ops);
+    }
+
+    #[test]
+    fn gemm_into_writes_caller_buffer_without_allocating_outputs() {
+        let (n, k) = (24, 32);
+        let w = Prng::seeded(5).normal_vec(n * k, 1.0);
+        let x = Prng::seeded(6).normal_vec(k * 2, 1.0);
+        let plan = ShardPlan::new(n, 3, 1, 1);
+        let sharded = ShardedEngine::from_factory(plan, pool(), |(r0, r1)| {
+            DenseEngine::new(shard::dense_rows(&w, k, r0, r1), r1 - r0, k)
+        });
+        let mut scratch = EngineScratch::new();
+        // Dirty output buffers must be fully overwritten, for both the
+        // sub-slice (mb=1) and staging-scatter (mb>1) paths.
+        let mut y1 = vec![f32::NAN; n];
+        sharded.gemm_into(&x[..k], 1, &mut y1, &mut scratch);
+        assert_eq!(y1, DenseEngine::new(w.clone(), n, k).gemv(&x[..k]));
+        let mut y2 = vec![f32::NAN; n * 2];
+        sharded.gemm_into(&x, 2, &mut y2, &mut scratch);
+        assert_eq!(y2, DenseEngine::new(w.clone(), n, k).gemm(&x, 2));
+        // Caller scratch accumulated both logical calls.
+        assert_eq!(scratch.counters.calls, 2);
+        // Steady state: repeating the same shapes must not grow scratch.
+        let fp: usize = scratch.footprint_bytes()
+            + scratch.children.iter().map(|c| c.footprint_bytes()).sum::<usize>();
+        sharded.gemm_into(&x, 2, &mut y2, &mut scratch);
+        let fp2: usize = scratch.footprint_bytes()
+            + scratch.children.iter().map(|c| c.footprint_bytes()).sum::<usize>();
+        assert_eq!(fp, fp2, "warm scratch must not grow");
     }
 
     #[test]

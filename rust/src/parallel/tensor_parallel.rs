@@ -4,14 +4,22 @@
 //! [`crate::model::LlamaModel::load_parallel`]:
 //!
 //! - **Column-parallel** ([`TpMode::Column`]): the *output* dim `n` is
-//!   sharded; every worker sees the full activation and computes a slice
-//!   of output rows; combining is concatenation (bit-exact). Used for
-//!   Q/K/V and gate/up projections and the LM head.
+//!   sharded; every worker sees the full activation and writes a slice
+//!   of output rows — on the single-column decode path a true disjoint
+//!   sub-slice of the caller's output buffer (bit-exact combining, no
+//!   copies). Used for Q/K/V and gate/up projections and the LM head.
 //! - **Row-parallel** ([`TpMode::Row`]): the *reduction* dim `k` is
 //!   sharded; every worker computes a full-height partial product over
-//!   its column range; combining is the deterministic ordered all-reduce
-//!   of [`super::reduce::ordered_sum`]. Used for the O and down
+//!   its column range into a block of the reused staging buffer;
+//!   combining is the deterministic ordered all-reduce of
+//!   [`super::reduce::ordered_sum_into`]. Used for the O and down
 //!   projections, whose inputs arrive already sharded in head/ffn space.
+//!
+//! Execution follows the `gemm_into` model throughout: engines are shared
+//! `&self` across workers, every worker gets its own child
+//! [`EngineScratch`], and all staging (per-shard inputs in `buf`,
+//! partials / batched outputs in `buf2`) comes from the caller's scratch
+//! — zero heap allocation per call after warmup.
 //!
 //! Row-parallel changes the association order of the k-sum, so it is
 //! *deterministic* but not bit-identical to the serial engine —
@@ -23,22 +31,24 @@
 //! `TpLinear` is the boxed, mode-carrying variant for model layers where
 //! row-parallel is needed and both orientations must share one type.
 
+use super::fanout::{self, ShardRef};
 use super::plan::ShardPlan;
 use super::reduce;
-use crate::gemm::{Counters, GemmEngine};
-use crate::util::threadpool::ThreadPool;
+use crate::gemm::scratch::grow_slice;
+use crate::gemm::{EngineScratch, GemmEngine};
+use crate::util::threadpool::{ScopedJob, ThreadPool};
 use std::sync::Arc;
 
 /// Shard orientation of a tensor-parallel linear.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TpMode {
-    /// Shard the output dim; concatenate shard outputs.
+    /// Shard the output dim; shards write disjoint output rows.
     Column,
     /// Shard the reduction dim; ordered all-reduce of partials.
     Row,
 }
 
-type BoxedEngine = Box<dyn GemmEngine + Send>;
+type BoxedEngine = Box<dyn GemmEngine + Send + Sync>;
 
 /// A tensor-parallel linear layer over boxed inner engines.
 pub struct TpLinear {
@@ -49,7 +59,7 @@ pub struct TpLinear {
     pool: Arc<ThreadPool>,
     n: usize,
     k: usize,
-    counters: Counters,
+    scratch: EngineScratch,
 }
 
 impl TpLinear {
@@ -65,7 +75,7 @@ impl TpLinear {
             assert_eq!(e.dims().1, k, "column shard {i} reduction dim mismatch");
         }
         let n = plan.len;
-        TpLinear { mode: TpMode::Column, plan, shards, pool, n, k, counters: Counters::new() }
+        TpLinear { mode: TpMode::Column, plan, shards, pool, n, k, scratch: EngineScratch::new() }
     }
 
     /// Row-parallel: `shards[i]` computes the full `n` output rows over
@@ -80,7 +90,7 @@ impl TpLinear {
             assert_eq!(e.dims().1, c1 - c0, "row shard {i} reduction width mismatch");
         }
         let k = plan.len;
-        TpLinear { mode: TpMode::Row, plan, shards, pool, n, k, counters: Counters::new() }
+        TpLinear { mode: TpMode::Row, plan, shards, pool, n, k, scratch: EngineScratch::new() }
     }
 
     pub fn mode(&self) -> TpMode {
@@ -89,30 +99,6 @@ impl TpLinear {
 
     pub fn num_shards(&self) -> usize {
         self.plan.num_shards()
-    }
-
-    fn refresh_counters(&mut self) {
-        self.counters = reduce::merge_counters(self.shards.iter().map(|e| e.counters()));
-        self.counters.calls /= self.plan.num_shards().max(1) as u64;
-    }
-
-    /// Fan the per-shard inputs out over the pool, moving engines into
-    /// the jobs and back; returns per-shard outputs in shard order.
-    /// Inputs are `Arc`s so Column mode shares one activation buffer
-    /// across all shards instead of copying it per shard.
-    fn fan_out(&mut self, inputs: Vec<Arc<Vec<f32>>>, m_batch: usize) -> Vec<Vec<f32>> {
-        let engines = std::mem::take(&mut self.shards);
-        let items: Vec<(BoxedEngine, Arc<Vec<f32>>)> = engines.into_iter().zip(inputs).collect();
-        let results = self.pool.parallel_map(items, move |(mut e, xin)| {
-            let y = e.gemm(&xin, m_batch);
-            (e, y)
-        });
-        let mut parts = Vec::with_capacity(results.len());
-        for (e, y) in results {
-            self.shards.push(e);
-            parts.push(y);
-        }
-        parts
     }
 }
 
@@ -128,59 +114,84 @@ impl GemmEngine for TpLinear {
         (self.n, self.k)
     }
 
-    fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32> {
+    fn gemm_into(&self, x: &[f32], m_batch: usize, y: &mut [f32], scratch: &mut EngineScratch) {
         assert_eq!(x.len(), self.k * m_batch);
-        assert_eq!(
-            self.shards.len(),
-            self.plan.num_shards(),
-            "tp linear poisoned: a previous call panicked mid-fan-out"
-        );
-        if self.shards.len() == 1 {
-            let y = self.shards[0].gemm(x, m_batch);
-            self.refresh_counters();
-            return y;
+        assert_eq!(y.len(), self.n * m_batch);
+        let ns = self.plan.num_shards();
+        if ns == 1 {
+            return self.shards[0].gemm_into(x, m_batch, y, scratch);
         }
-        let y = match self.mode {
+        let EngineScratch { counters, buf, buf2, children, .. } = scratch;
+        if children.len() < ns {
+            children.resize_with(ns, EngineScratch::new);
+        }
+        match self.mode {
             TpMode::Column => {
-                // Every shard reads the whole activation (one shared
-                // buffer; the Arc clone is free).
-                let xs = Arc::new(x.to_vec());
-                let inputs = vec![xs; self.plan.num_shards()];
-                let parts = self.fan_out(inputs, m_batch);
-                reduce::concat_row_shards(&parts, &self.plan, m_batch)
+                // Output-dim sharding: the shared fan-out (sub-slices of
+                // `y` on the decode path, stage+scatter when batched).
+                let engines: Vec<ShardRef> = self.shards.iter().map(|b| &**b as ShardRef).collect();
+                fanout::column_fan_out(
+                    &self.pool,
+                    &engines,
+                    &self.plan,
+                    x,
+                    m_batch,
+                    y,
+                    buf2,
+                    &mut children[..ns],
+                );
             }
             TpMode::Row => {
-                // Each shard reads its own column range of every batch col.
-                let k = self.k;
-                let inputs: Vec<Arc<Vec<f32>>> = self
-                    .plan
-                    .shards
-                    .iter()
-                    .map(|&(c0, c1)| {
-                        let mut xi = Vec::with_capacity((c1 - c0) * m_batch);
-                        for b in 0..m_batch {
-                            xi.extend_from_slice(&x[b * k + c0..b * k + c1]);
-                        }
-                        Arc::new(xi)
-                    })
-                    .collect();
-                let parts = self.fan_out(inputs, m_batch);
-                reduce::ordered_sum(&parts)
+                // Stage each shard's column range of every batch column
+                // into `buf` (contiguous per shard), give each worker a
+                // full-height partial block of `buf2`, then combine with
+                // the deterministic ordered all-reduce.
+                let (n, k) = (self.n, self.k);
+                let xin_all = grow_slice(buf, k * m_batch);
+                let mut off = 0usize;
+                for &(c0, c1) in &self.plan.shards {
+                    let w = c1 - c0;
+                    for b in 0..m_batch {
+                        xin_all[off + b * w..off + (b + 1) * w]
+                            .copy_from_slice(&x[b * k + c0..b * k + c1]);
+                    }
+                    off += w * m_batch;
+                }
+                let parts = grow_slice(buf2, ns * n * m_batch);
+                let mut jobs: Vec<ScopedJob> = Vec::with_capacity(ns);
+                let mut xin_rest: &[f32] = xin_all;
+                let mut part_rest: &mut [f32] = &mut *parts;
+                for ((e, &(c0, c1)), child) in
+                    self.shards.iter().zip(&self.plan.shards).zip(children.iter_mut())
+                {
+                    let w = c1 - c0;
+                    let (xs, xtail) = xin_rest.split_at(w * m_batch);
+                    xin_rest = xtail;
+                    let (ys, ytail) = std::mem::take(&mut part_rest).split_at_mut(n * m_batch);
+                    part_rest = ytail;
+                    jobs.push(Box::new(move || e.gemm_into(xs, m_batch, ys, child)));
+                }
+                self.pool.scope_run(jobs);
+                reduce::ordered_sum_into(parts, n * m_batch, y);
             }
-        };
-        self.refresh_counters();
-        y
+        }
+        // Merge this call's per-shard counters (one logical GEMM call).
+        fanout::merge_children_into(counters, &mut children[..ns]);
     }
 
-    fn counters(&self) -> &Counters {
-        &self.counters
+    fn scratch(&self) -> &EngineScratch {
+        &self.scratch
+    }
+
+    fn scratch_mut(&mut self) -> &mut EngineScratch {
+        &mut self.scratch
     }
 
     fn reset_counters(&mut self) {
         for e in &mut self.shards {
             e.reset_counters();
         }
-        self.counters.reset();
+        self.scratch.counters.reset();
     }
 }
 
@@ -231,6 +242,19 @@ mod tests {
         let mut tp = dense_column(&w, n, k, 3);
         assert_eq!(tp.dims(), (n, k));
         assert_eq!(tp.gemm(&x, 2), serial.gemm(&x, 2));
+    }
+
+    #[test]
+    fn column_parallel_gemv_into_writes_sub_slices_bit_exact() {
+        let (n, k) = (31, 24);
+        let w = Prng::seeded(7).normal_vec(n * k, 1.0);
+        let x = Prng::seeded(8).normal_vec(k, 1.0);
+        let tp = dense_column(&w, n, k, 4);
+        let mut scratch = EngineScratch::new();
+        let mut y = vec![f32::NAN; n];
+        tp.gemv_into(&x, &mut y, &mut scratch);
+        assert_eq!(y, DenseEngine::new(w.clone(), n, k).gemv(&x));
+        assert_eq!(scratch.counters.calls, 1);
     }
 
     #[test]

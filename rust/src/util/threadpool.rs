@@ -18,6 +18,11 @@ use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// A borrowed job for [`ThreadPool::scope_run`]: may capture references
+/// into the caller's stack (`'env`), e.g. disjoint `&mut` sub-slices of
+/// one output buffer plus a per-worker scratch.
+pub type ScopedJob<'env> = Box<dyn FnOnce() + Send + 'env>;
+
 enum Msg {
     Run(Job),
     Shutdown,
@@ -139,6 +144,51 @@ impl ThreadPool {
         }
         out.into_iter().map(|o| o.unwrap()).collect()
     }
+
+    /// Run `jobs` on the pool, blocking until every job has settled — the
+    /// scoped-threads pattern (`std::thread::scope` semantics on a
+    /// persistent pool). Because this call only returns once all jobs
+    /// have completed, the jobs may borrow from the caller's stack; the
+    /// sharded GEMM engines use this to hand each worker a sub-slice of
+    /// the caller's output buffer and a `&mut` per-worker scratch with no
+    /// allocation or `Arc` traffic. If any job panics, the first payload
+    /// is re-thrown here after the remaining jobs of this call settle
+    /// (workers themselves never die — see `parallel_map`).
+    pub fn scope_run<'env>(&self, jobs: Vec<ScopedJob<'env>>) {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        let (rtx, rrx) = mpsc::channel::<thread::Result<()>>();
+        for job in jobs {
+            // SAFETY: erasing `'env` to `'static` is sound because the
+            // receive loop below blocks until every job has reported, so
+            // no job — nor anything it borrows — outlives this frame.
+            // (`Box<dyn FnOnce + Send + 'a>` has the same layout for any
+            // `'a`; only the lifetime bound is erased.)
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
+            let rtx = rtx.clone();
+            self.submit(move || {
+                let r = catch_unwind(AssertUnwindSafe(job));
+                let _ = rtx.send(r.map(|_| ()));
+            });
+        }
+        drop(rtx);
+        let mut panic: Option<Box<dyn Any + Send>> = None;
+        for _ in 0..n {
+            match rrx.recv().expect("worker result") {
+                Ok(()) => {}
+                Err(p) => {
+                    if panic.is_none() {
+                        panic = Some(p);
+                    }
+                }
+            }
+        }
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
+    }
 }
 
 impl Drop for ThreadPool {
@@ -226,6 +276,41 @@ mod tests {
         // The pool survives and later calls work.
         let out = pool.parallel_map(vec![5, 6], |x| x + 1);
         assert_eq!(out, vec![6, 7]);
+    }
+
+    #[test]
+    fn scope_run_jobs_borrow_stack_mutably() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0u32; 8];
+        let mut jobs: Vec<ScopedJob> = Vec::new();
+        for (ci, chunk) in data.chunks_mut(2).enumerate() {
+            jobs.push(Box::new(move || {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = (ci * 2 + i) as u32;
+                }
+            }));
+        }
+        pool.scope_run(jobs);
+        assert_eq!(data, (0..8).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn scope_run_empty_and_single() {
+        let pool = ThreadPool::new(2);
+        pool.scope_run(Vec::new());
+        let mut hit = false;
+        pool.scope_run(vec![Box::new(|| hit = true) as ScopedJob]);
+        assert!(hit);
+    }
+
+    #[test]
+    fn scope_run_propagates_panic_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let jobs: Vec<ScopedJob> = vec![Box::new(|| {}), Box::new(|| panic!("scoped boom"))];
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| pool.scope_run(jobs)));
+        assert!(caught.is_err(), "panic must surface at the caller");
+        let out = pool.parallel_map(vec![1, 2], |x| x + 1);
+        assert_eq!(out, vec![2, 3]);
     }
 
     #[test]

@@ -206,12 +206,12 @@ fn prop_row_parallel_deterministic_and_close() {
             let mut serial = DenseEngine::new(w.clone(), n, k);
             let mk = || {
                 let plan = ShardPlan::new(k, shards, 1, 1);
-                let engines: Vec<Box<dyn GemmEngine + Send>> = plan
+                let engines: Vec<Box<dyn GemmEngine + Send + Sync>> = plan
                     .shards
                     .iter()
                     .map(|&(c0, c1)| {
                         Box::new(DenseEngine::new(shard::dense_cols(&w, k, c0, c1), n, c1 - c0))
-                            as Box<dyn GemmEngine + Send>
+                            as Box<dyn GemmEngine + Send + Sync>
                     })
                     .collect();
                 TpLinear::row(plan, engines, Arc::clone(&pool))
