@@ -13,6 +13,14 @@
 //! CPU-tractable; the sharding overhead being measured is per-call and
 //! does not depend on the scale.
 //!
+//! Matrix 3 (shared vs private Psumbook): threads × `M ∈ {1, 4, 16,
+//! 64}` × 8B/70B q_proj, CodeGEMM sharded with per-shard *private*
+//! books vs the build-once/gather-many *shared* book. Reported per row:
+//! mean latency and the exact `build_share_ops` fraction — the shared
+//! schedule's build share must be ≤ the private one at every measured
+//! point (build MACs are attributed once per logical call instead of
+//! once per shard).
+//!
 //! Reported per row: mean latency and the speedup over the
 //! single-thread (resp. per-token over M=1) run of the same engine/shape.
 
@@ -177,5 +185,83 @@ fn main() {
     println!(
         "# acceptance: codegemm per-token latency at M=16/64 should undercut its M=1 row \
          (Eq. 3 build amortization)"
+    );
+
+    // ---- shared vs private Psumbook: build-share sweep ----
+    println!(
+        "\n# shared vs private Psumbook (build once / gather many): one book per k-tile \
+         gathered by all row shards vs per-shard private books"
+    );
+    println!(
+        "{:<44} {:>7} {:>4} {:>8} {:>12} {:>14} {:>12} {:>6}",
+        "shape", "threads", "M", "variant", "mean us", "b-MACs/call", "build share", "check"
+    );
+    let mut all_ok = true;
+    for geom in [&LLAMA3_8B, &LLAMA3_70B] {
+        let shapes: Vec<_> = scaled_block_shapes(geom, 1, scale)
+            .into_iter()
+            .filter(|(l, _)| matches!(*l, "q_proj"))
+            .collect();
+        for (label, s) in shapes {
+            let prep = Prepared::new(s, cfg);
+            let codes = prep.q.codes.unpack(); // once, not per shard/variant
+            for t in THREADS {
+                for mb in M_SWEEP {
+                    let x = Prng::seeded(15).normal_vec(s.k * mb, 1.0);
+                    let mut share = [0f64; 2];
+                    for (vi, shared) in [false, true].into_iter().enumerate() {
+                        let pool = Arc::new(ThreadPool::new(t));
+                        let plan = ShardPlan::new(s.n, t, 1, 1);
+                        let eng = ShardedEngine::from_factory(plan, pool, |(r0, r1)| {
+                            CodeGemmEngine::from_quantized(&shard::slice_rows_unpacked(
+                                &prep.q, &codes, r0, r1,
+                            ))
+                        })
+                        .with_shared_book(shared);
+                        let mut scratch = EngineScratch::new();
+                        let mut y = vec![0f32; s.n * mb];
+                        let variant = if shared { "shared" } else { "private" };
+                        let name = format!(
+                            "{}-codegemm {label} {}x{} t{t} M{mb} {variant}",
+                            geom.name, s.n, s.k
+                        );
+                        let r = run_bench(&name, opts, || {
+                            eng.gemm_into(&x, mb, &mut y, &mut scratch);
+                            black_box(&y);
+                        });
+                        // Counts are exact and identical every call, so the
+                        // share is invariant to the bench iteration count.
+                        share[vi] = scratch.counters.build_share_ops();
+                        let check = if vi == 0 {
+                            ""
+                        } else if share[1] <= share[0] + 1e-12 {
+                            "ok"
+                        } else {
+                            all_ok = false;
+                            "FAIL"
+                        };
+                        println!(
+                            "{:<44} {:>7} {:>4} {:>8} {:>12.1} {:>14.0} {:>12.4} {:>6}",
+                            format!("{}-{label} {}x{}", geom.name, s.n, s.k),
+                            t,
+                            mb,
+                            variant,
+                            r.mean_us(),
+                            scratch.counters.build_ops_per_call(),
+                            share[vi],
+                            check
+                        );
+                    }
+                }
+            }
+        }
+    }
+    println!(
+        "# acceptance: {}",
+        if all_ok {
+            "PASS — shared-book build share <= private-book build share at every (threads, M) point"
+        } else {
+            "FAIL — shared-book build share exceeded the private-book share somewhere above"
+        }
     );
 }

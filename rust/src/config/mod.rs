@@ -214,6 +214,11 @@ pub struct ParallelConfig {
     pub shard_mlp: bool,
     /// Shard the LM head (column-parallel).
     pub shard_lm_head: bool,
+    /// Build one shared Psumbook per k-tile, gathered by every row shard
+    /// (build once / gather many), instead of per-shard private books.
+    /// Only affects row-sharded CodeGEMM engines; outputs are bit-exact
+    /// either way.
+    pub shared_psumbook: bool,
 }
 
 impl Default for ParallelConfig {
@@ -224,6 +229,7 @@ impl Default for ParallelConfig {
             shard_attn: true,
             shard_mlp: true,
             shard_lm_head: true,
+            shared_psumbook: true,
         }
     }
 }
@@ -269,6 +275,7 @@ impl ParallelConfig {
             ("shard_attn", Json::Bool(self.shard_attn)),
             ("shard_mlp", Json::Bool(self.shard_mlp)),
             ("shard_lm_head", Json::Bool(self.shard_lm_head)),
+            ("shared_psumbook", Json::Bool(self.shared_psumbook)),
         ])
     }
 
@@ -298,6 +305,7 @@ impl ParallelConfig {
             shard_attn: get_bool("shard_attn", d.shard_attn)?,
             shard_mlp: get_bool("shard_mlp", d.shard_mlp)?,
             shard_lm_head: get_bool("shard_lm_head", d.shard_lm_head)?,
+            shared_psumbook: get_bool("shared_psumbook", d.shared_psumbook)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -479,7 +487,13 @@ mod tests {
 
     #[test]
     fn parallel_config_roundtrip_and_defaults() {
-        let cfg = ParallelConfig { num_threads: 4, shard_min_rows: 32, shard_lm_head: false, ..Default::default() };
+        let cfg = ParallelConfig {
+            num_threads: 4,
+            shard_min_rows: 32,
+            shard_lm_head: false,
+            shared_psumbook: false,
+            ..Default::default()
+        };
         cfg.validate().unwrap();
         let j = Json::parse(&cfg.to_json().to_string_pretty()).unwrap();
         assert_eq!(ParallelConfig::from_json(&j).unwrap(), cfg);
@@ -489,6 +503,7 @@ mod tests {
         assert_eq!(c.num_threads, 2);
         assert_eq!(c.shard_min_rows, ParallelConfig::default().shard_min_rows);
         assert!(c.shard_attn && c.shard_mlp && c.shard_lm_head);
+        assert!(c.shared_psumbook, "shared books are the default");
         // Invalid values are rejected.
         let bad = Json::parse(r#"{"shard_min_rows": 0}"#).unwrap();
         assert!(ParallelConfig::from_json(&bad).is_err());

@@ -7,6 +7,18 @@
 //! are measurable — and each row then gathers `m · t_w/v` partial sums
 //! per batch column, scaled by the group-normalization factors.
 //!
+//! ## Explicit build and gather phases
+//!
+//! The two phases are public API so schedulers can recombine them:
+//! [`CodeGemmEngine::build_book`] stages a k-tile of activations and
+//! (re)builds a caller-owned [`Psumbook`]; [`CodeGemmEngine::gather_into`]
+//! accumulates **all of this engine's rows** against an externally built
+//! book, counting only gather work. `gemm_into` is the serial composition
+//! (build per row-block, like a GPU thread block); the shared-book
+//! schedule in `crate::parallel::fanout` instead builds one book per
+//! (k-tile, batch) and has every row shard `gather_into` it read-only —
+//! build once, gather many (Eq. 3 amortization across shards).
+//!
 //! The engine is immutable during execution: the activation staging tile
 //! and the Psumbook live in the caller's [`EngineScratch`] and are reused
 //! call-to-call (reshaped in place between tile geometries), so the
@@ -19,6 +31,7 @@ use crate::config::{KernelConfig, QuantConfig};
 use crate::gemm::psumbook::Psumbook;
 use crate::gemm::scratch::{grow_slice, EngineScratch};
 use crate::gemm::tiling::Tiles;
+use crate::gemm::traffic::Counters;
 use crate::gemm::GemmEngine;
 use crate::quant::QuantizedLinear;
 use crate::util::timer::Timer;
@@ -99,6 +112,165 @@ impl CodeGemmEngine {
     /// the paper's §3.
     pub fn psumbook_bytes(&self) -> usize {
         (self.kernel.tile_w / self.cfg.v) * self.cfg.m * self.cfg.n_centroids() * 4
+    }
+
+    /// The flat `m × 2^b × v` codebook array (shared read-only by the
+    /// parallel shared-book build).
+    pub fn codebooks(&self) -> &[f32] {
+        &self.codebooks
+    }
+
+    /// Weight-stream bytes for the per-(row, group) scales, counted once
+    /// per logical call (row partitioning conserves this stream exactly).
+    pub(crate) fn scales_stream_bytes(&self) -> u64 {
+        (self.n * self.groups_per_row * 2) as u64
+    }
+
+    /// Stage the activation k-tile `[c0, c1)` batch-major into `buf`
+    /// (`x_tile[b*width..]` is column `b`'s slice), reusing the buffer's
+    /// allocation.
+    pub fn stage_tile<'b>(
+        &self,
+        x: &[f32],
+        m_batch: usize,
+        c0: usize,
+        c1: usize,
+        buf: &'b mut Vec<f32>,
+    ) -> &'b mut [f32] {
+        let k = self.k;
+        let width = c1 - c0;
+        debug_assert!(c0 < c1 && c1 <= k);
+        let x_tile = grow_slice(buf, width * m_batch);
+        for b in 0..m_batch {
+            x_tile[b * width..(b + 1) * width].copy_from_slice(&x[b * k + c0..b * k + c1]);
+        }
+        x_tile
+    }
+
+    /// Stage the k-tile `[c0, c1)` and reshape `book` for its geometry —
+    /// the common preamble of the serial build and the parallel
+    /// shared-book build (which then splits the build itself by
+    /// j-ranges).
+    pub(crate) fn prepare_tile<'b>(
+        &self,
+        x: &[f32],
+        m_batch: usize,
+        c0: usize,
+        c1: usize,
+        book: &mut Psumbook,
+        buf: &'b mut Vec<f32>,
+    ) -> &'b mut [f32] {
+        let (v, m, nc) = (self.cfg.v, self.cfg.m, self.cfg.n_centroids());
+        let width = c1 - c0;
+        debug_assert_eq!(width % v, 0, "tile width must be a v multiple");
+        let jn_tile = width / v;
+        if book.jn != jn_tile || book.m != m || book.nc != nc || book.mb != m_batch {
+            book.reshape(jn_tile, m, nc, m_batch);
+        }
+        self.stage_tile(x, m_batch, c0, c1, buf)
+    }
+
+    /// Attribute one k-tile's build work (MACs and traffic, from the
+    /// book's geometry) to `counters` — the single source of truth for
+    /// build accounting, shared by the serial engine and the shared-book
+    /// schedule so the two cannot drift apart. Returns the MACs counted.
+    pub(crate) fn count_build(&self, book: &Psumbook, counters: &mut Counters) -> u64 {
+        let v = self.cfg.v;
+        let build_macs = (book.jn * book.m * book.nc * v * book.mb) as u64;
+        counters.build_ops += build_macs;
+        counters.mac_flops += build_macs;
+        counters.scratch_bytes += book.footprint_bytes() as u64;
+        counters.activation_bytes += (book.jn * v * book.mb * 2) as u64;
+        // Codebook is streamed on-chip once per build.
+        counters.weight_bytes += (book.m * book.nc * v * 2) as u64;
+        build_macs
+    }
+
+    /// Build phase for one k-tile: stage the activations `[c0, c1)` into
+    /// `buf` and (re)build `book` in place for them, attributing build
+    /// MACs, bytes and wall-time to `counters`. The book depends only on
+    /// the k-tile — not on any row range — so one build can serve every
+    /// row (and row shard) that later [`CodeGemmEngine::gather_into`]s it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_book(
+        &self,
+        x: &[f32],
+        m_batch: usize,
+        c0: usize,
+        c1: usize,
+        book: &mut Psumbook,
+        buf: &mut Vec<f32>,
+        counters: &mut Counters,
+    ) {
+        let t = Timer::start();
+        let x_tile = self.prepare_tile(x, m_batch, c0, c1, book, buf);
+        let built = book.build(&self.codebooks, self.cfg.v, x_tile);
+        counters.build_seconds += t.elapsed_s();
+        let counted = self.count_build(book, counters);
+        debug_assert_eq!(built, counted, "attributed MACs must match the build");
+    }
+
+    /// Gather phase against an externally built book: accumulate **all**
+    /// of this engine's rows for the k-tile starting at column `c0`
+    /// (width `book.jn * v`) into the batch-major `y` (`n × m_batch`,
+    /// which must hold zeros or the partial sums of other k-tiles).
+    ///
+    /// Only gather work (read ops, lookups, code/scratch bytes) is
+    /// attributed to `counters` — build MACs belong to whoever built the
+    /// book, which is exactly what lets the shared-book schedule count
+    /// the build once per logical call regardless of how many row shards
+    /// gather from it. Wall-time is likewise the scheduler's to measure.
+    pub fn gather_into(
+        &self,
+        book: &Psumbook,
+        c0: usize,
+        m_batch: usize,
+        y: &mut [f32],
+        counters: &mut Counters,
+    ) {
+        assert_eq!(y.len(), self.n * m_batch);
+        assert!(m_batch <= 64, "engine supports m_batch <= 64");
+        assert_eq!(book.mb, m_batch, "book batch width mismatch");
+        assert_eq!(book.m, self.cfg.m, "book codebook count mismatch");
+        assert_eq!(book.nc, self.cfg.n_centroids(), "book centroid count mismatch");
+        // The gather indexes book.data unchecked, so the storage must
+        // actually match the geometry fields (Psumbook fields are pub) —
+        // this is the bound the release-mode SAFETY argument rests on.
+        assert_eq!(
+            book.data.len(),
+            book.jn * book.m * book.nc * book.mb,
+            "book storage does not match its geometry"
+        );
+        assert_eq!(c0 % self.cfg.v, 0, "tile start must be a v multiple");
+        assert!(c0 / self.cfg.v + book.jn <= self.jn, "k-tile out of range");
+        self.gather_block(book, c0, (0, self.n), m_batch, y, counters);
+    }
+
+    /// Gather-accumulate one row range against a built book, counting the
+    /// gather work.
+    fn gather_block(
+        &self,
+        book: &Psumbook,
+        c0: usize,
+        rows: (usize, usize),
+        m_batch: usize,
+        y: &mut [f32],
+        counters: &mut Counters,
+    ) {
+        let jn_tile = book.jn;
+        let j0 = c0 / self.cfg.v;
+        match (&self.codes, m_batch) {
+            (Codes::U8(codes), 1) => self.gather_rows_b1(codes, book, rows, j0, jn_tile, y),
+            (Codes::U16(codes), 1) => self.gather_rows_b1(codes, book, rows, j0, jn_tile, y),
+            (Codes::U8(codes), _) => self.gather_rows(codes, book, rows, j0, jn_tile, m_batch, y),
+            (Codes::U16(codes), _) => self.gather_rows(codes, book, rows, j0, jn_tile, m_batch, y),
+        }
+        let nrows = (rows.1 - rows.0) as u64;
+        let gathers = nrows * (jn_tile * self.cfg.m) as u64 * m_batch as u64;
+        counters.read_ops += gathers;
+        counters.lookups += gathers;
+        counters.scratch_bytes += gathers * 4;
+        counters.weight_bytes += nrows * (jn_tile * self.cfg.m * self.codes.bytes_per_code()) as u64;
     }
 
     /// Single-column gather fast path: flat unchecked indexing into the
@@ -232,63 +404,21 @@ impl GemmEngine for CodeGemmEngine {
         assert!(m_batch <= 64, "engine supports m_batch <= 64");
         y.fill(0.0);
         let (n, k) = (self.n, self.k);
-        let v = self.cfg.v;
-        let m = self.cfg.m;
-        let nc = self.cfg.n_centroids();
         let tw = self.kernel.tile_w;
         let th = self.kernel.tile_h;
         let EngineScratch { counters, buf, book, .. } = scratch;
+        // Serial composition of the two phases: rebuild per row-block
+        // (mirroring the GPU's per-thread-block tables), gather the block.
         for (r0, r1) in Tiles::new(n, th) {
             for (c0, c1) in Tiles::new(k, tw) {
-                let width = c1 - c0;
-                let jn_tile = width / v;
-                // Build phase: stage activations, compute the Psumbook
-                // (both in caller scratch, reshaped in place per tile).
+                self.build_book(x, m_batch, c0, c1, book, buf, counters);
                 let t = Timer::start();
-                let x_tile = grow_slice(buf, width * m_batch);
-                for b in 0..m_batch {
-                    x_tile[b * width..(b + 1) * width].copy_from_slice(&x[b * k + c0..b * k + c1]);
-                }
-                if book.jn != jn_tile || book.m != m || book.nc != nc || book.mb != m_batch {
-                    book.reshape(jn_tile, m, nc, m_batch);
-                }
-                let build_macs = book.build(&self.codebooks, v, x_tile);
-                counters.build_seconds += t.elapsed_s();
-                counters.build_ops += build_macs;
-                counters.mac_flops += build_macs;
-                counters.scratch_bytes += book.footprint_bytes() as u64;
-                counters.activation_bytes += (width * m_batch * 2) as u64;
-                // Codebook is streamed on-chip once per (row-block, tile).
-                counters.weight_bytes += (m * nc * v * 2) as u64;
-
-                // Read phase: gather partial sums through the codes.
-                let t = Timer::start();
-                let j0 = c0 / v;
-                match (&self.codes, m_batch) {
-                    (Codes::U8(codes), 1) => {
-                        self.gather_rows_b1(codes, book, (r0, r1), j0, jn_tile, y)
-                    }
-                    (Codes::U16(codes), 1) => {
-                        self.gather_rows_b1(codes, book, (r0, r1), j0, jn_tile, y)
-                    }
-                    (Codes::U8(codes), _) => {
-                        self.gather_rows(codes, book, (r0, r1), j0, jn_tile, m_batch, y)
-                    }
-                    (Codes::U16(codes), _) => {
-                        self.gather_rows(codes, book, (r0, r1), j0, jn_tile, m_batch, y)
-                    }
-                }
+                self.gather_block(book, c0, (r0, r1), m_batch, y, counters);
                 counters.read_seconds += t.elapsed_s();
-                let rows = (r1 - r0) as u64;
-                let gathers = rows * (jn_tile * m) as u64 * m_batch as u64;
-                counters.read_ops += gathers;
-                counters.lookups += gathers;
-                counters.scratch_bytes += gathers * 4;
-                counters.weight_bytes += rows * (jn_tile * m * self.codes.bytes_per_code()) as u64;
             }
         }
         // Scales stream: one per (row, group) per call.
-        counters.weight_bytes += (n * self.groups_per_row * 2) as u64;
+        counters.weight_bytes += self.scales_stream_bytes();
         counters.calls += 1;
     }
 
@@ -298,6 +428,10 @@ impl GemmEngine for CodeGemmEngine {
 
     fn scratch_mut(&mut self) -> &mut EngineScratch {
         &mut self.scratch
+    }
+
+    fn as_codegemm(&self) -> Option<&CodeGemmEngine> {
+        Some(self)
     }
 }
 
@@ -422,6 +556,39 @@ mod tests {
         let e16 = CodeGemmEngine::with_kernel(&q16, KernelConfig { tile_w: 32, tile_h: 2048 });
         let codebook_bytes = 1 * 256 * 16 * 2;
         assert!(e16.psumbook_bytes() < codebook_bytes);
+    }
+
+    /// Driving the public build/gather phases by hand (one build per
+    /// k-tile, all rows gathered from it) must be bit-identical to the
+    /// engine's own `gemm_into` when the row blocking matches (tile_h >=
+    /// n ⇒ the serial engine also builds once per k-tile).
+    #[test]
+    fn manual_build_gather_composition_matches_gemm_into() {
+        use crate::gemm::tiling::Tiles;
+        let q = quantize(24, 96, "m2v4g32", 21);
+        for mb in [1usize, 3] {
+            let x = Prng::seeded(22).normal_vec(q.k * mb, 1.0);
+            let e = CodeGemmEngine::with_kernel(&q, KernelConfig { tile_w: 32, tile_h: 4096 });
+            let mut y_ref = vec![f32::NAN; q.n * mb];
+            let mut scratch = EngineScratch::new();
+            e.gemm_into(&x, mb, &mut y_ref, &mut scratch);
+
+            let mut y = vec![0f32; q.n * mb];
+            let mut book = Psumbook::default();
+            let mut buf = Vec::new();
+            let mut counters = Counters::new();
+            for (c0, c1) in Tiles::new(q.k, e.kernel_config().tile_w) {
+                e.build_book(&x, mb, c0, c1, &mut book, &mut buf, &mut counters);
+                e.gather_into(&book, c0, mb, &mut y, &mut counters);
+            }
+            assert_eq!(y, y_ref, "mb={mb}");
+            // Work counts match the fused path exactly (minus the
+            // per-call scales stream and call count, which the scheduler
+            // owns).
+            assert_eq!(counters.build_ops, scratch.counters.build_ops);
+            assert_eq!(counters.read_ops, scratch.counters.read_ops);
+            assert_eq!(counters.lookups, scratch.counters.lookups);
+        }
     }
 
     #[test]

@@ -34,15 +34,19 @@
 //! `crate::parallel`: a `ShardPlan` splits the row dim, each shard gets a
 //! complete engine over its row slice, and `ShardedEngine` fans `gemm_into`
 //! out over the worker pool — each worker writing a disjoint sub-slice of
-//! the caller's output buffer with its own per-worker scratch (a
-//! thread-block-local table, like on the GPU). Because a row's
-//! accumulation never crosses shards, sharded outputs are bit-exact vs.
-//! serial; reduction-dim sharding (`TpLinear`) instead uses a
+//! the caller's output buffer with its own per-worker scratch. Because a
+//! row's accumulation never crosses shards, sharded outputs are bit-exact
+//! vs. serial; reduction-dim sharding (`TpLinear`) instead uses a
 //! deterministic ordered reduction and is exact up to float
 //! reassociation. Counters merge additively across shards
-//! ([`Counters::merge`]; `lookups`/`read_ops`/`mac_flops` are conserved,
-//! per-row-block build work scales with the shard count, exactly as it
-//! does with GPU grid size).
+//! ([`Counters::merge`]; `lookups`/`read_ops`/`mac_flops` are conserved).
+//! For CodeGEMM shards the default schedule is **build once / gather
+//! many**: one shared Psumbook per k-tile in the caller's scratch
+//! (assembled in parallel via [`psumbook::build_range`], gathered by
+//! every shard through [`CodeGemmEngine::gather_into`]), so build MACs
+//! are counted once per logical call regardless of shard count. Private
+//! per-shard tables (build work scaling with grid size, as on the GPU)
+//! remain available via `ShardedEngine::with_shared_book(false)`.
 
 pub mod codegemm;
 pub mod dense;
@@ -111,6 +115,15 @@ pub trait GemmEngine {
 
     fn reset_counters(&mut self) {
         self.scratch_mut().counters.reset();
+    }
+
+    /// Downcast hook for wrappers that specialize on the CodeGEMM engine:
+    /// `crate::parallel::ShardedEngine` uses it to detect that every row
+    /// shard is a [`CodeGemmEngine`] and switch to the shared-Psumbook
+    /// build-once/gather-many schedule. Other engines keep the `None`
+    /// default.
+    fn as_codegemm(&self) -> Option<&CodeGemmEngine> {
+        None
     }
 }
 

@@ -1,7 +1,24 @@
 //! The Psumbook (paper §3, Figure 3, Step 2): all inner products between
 //! codebook centroids and the activation sub-vectors of one weight tile,
-//! precomputed once per (row-block × k-tile) and then *gathered* through
-//! the code matrix instead of dequantizing weights.
+//! precomputed once and then *gathered* through the code matrix instead
+//! of dequantizing weights.
+//!
+//! ## Build once, gather many
+//!
+//! The book's entries depend only on the **k-tile of activations** and
+//! the codebooks — never on which output rows will read them. That is
+//! the paper's amortization lever (Eq. 3): one build serves every row
+//! (and, under row-sharded execution, every *shard*) that gathers from
+//! it. The serial [`crate::gemm::CodeGemmEngine`] rebuilds per row-block
+//! to mirror the GPU's per-thread-block tables; the shared-book schedule
+//! in `crate::parallel::fanout` instead builds one scratch-resident book
+//! per (k-tile, batch) and lets all row shards gather from it read-only.
+//!
+//! To make the build itself parallelizable, [`Psumbook::build_slice`]
+//! (and the free [`build_range`] it wraps) computes any vector sub-range
+//! `[j_lo, j_hi)` of the tile independently: the `j` axis is outermost
+//! in the layout, so workers can write disjoint `data` slices with no
+//! coordination and the result is bit-identical to a serial build.
 //!
 //! Layout: `data[((j·m + c)·2^b + i)·mb + b]` — the centroid axis `i` is
 //! innermost-but-one so each `(j, c)` table is a contiguous `2^b × mb`
@@ -20,6 +37,93 @@ pub struct Psumbook {
     /// Batch columns.
     pub mb: usize,
     pub data: Vec<f32>,
+}
+
+/// Build the book entries for the vector range `[j_lo, j_hi)` of a tile
+/// whose full extent is `jn` vectors, writing into `out` — the sub-slice
+/// of a book's `data` covering exactly that range
+/// (`(j_hi - j_lo) · m · nc · mb` floats). `x` is the **full** staged
+/// activation tile (`jn·v·mb`, batch-major), indexed by absolute `j`.
+///
+/// Exposed as a free function so the shared-book parallel build can fan
+/// j-ranges out over workers, each holding a disjoint `&mut` slice of
+/// one book's storage. Entries are computed identically regardless of
+/// how the range is partitioned, so any split is bit-identical to a
+/// serial [`Psumbook::build`]. Returns the MACs spent.
+#[allow(clippy::too_many_arguments)]
+pub fn build_range(
+    codebooks: &[f32],
+    v: usize,
+    x: &[f32],
+    jn: usize,
+    m: usize,
+    nc: usize,
+    mb: usize,
+    j_lo: usize,
+    j_hi: usize,
+    out: &mut [f32],
+) -> u64 {
+    let k_tile = jn * v;
+    debug_assert!(j_lo <= j_hi && j_hi <= jn);
+    debug_assert_eq!(x.len(), k_tile * mb);
+    debug_assert_eq!(codebooks.len(), m * nc * v);
+    debug_assert_eq!(out.len(), (j_hi - j_lo) * m * nc * mb);
+    if mb == 1 {
+        // Single-column fast path (the GEMV hot case): the activation
+        // sub-vector is hoisted out of the centroid loop and the v≤8
+        // dot product unrolls; table entries are written sequentially.
+        for j in j_lo..j_hi {
+            let xj = &x[j * v..(j + 1) * v];
+            let jo = j - j_lo;
+            for c in 0..m {
+                let cb = &codebooks[c * nc * v..(c + 1) * nc * v];
+                let o = &mut out[(jo * m + c) * nc..(jo * m + c + 1) * nc];
+                match v {
+                    4 => {
+                        let (x0, x1, x2, x3) = (xj[0], xj[1], xj[2], xj[3]);
+                        for (i, o) in o.iter_mut().enumerate() {
+                            let cent = &cb[i * 4..i * 4 + 4];
+                            *o = cent[0] * x0 + cent[1] * x1 + cent[2] * x2 + cent[3] * x3;
+                        }
+                    }
+                    8 => {
+                        for (i, o) in o.iter_mut().enumerate() {
+                            let cent = &cb[i * 8..i * 8 + 8];
+                            let a = cent[0] * xj[0] + cent[1] * xj[1] + cent[2] * xj[2] + cent[3] * xj[3];
+                            let b = cent[4] * xj[4] + cent[5] * xj[5] + cent[6] * xj[6] + cent[7] * xj[7];
+                            *o = a + b;
+                        }
+                    }
+                    _ => {
+                        for (i, o) in o.iter_mut().enumerate() {
+                            let cent = &cb[i * v..(i + 1) * v];
+                            *o = cent.iter().zip(xj).map(|(a, b)| a * b).sum();
+                        }
+                    }
+                }
+            }
+        }
+        return ((j_hi - j_lo) * m * nc * v) as u64;
+    }
+    for j in j_lo..j_hi {
+        let jo = j - j_lo;
+        for c in 0..m {
+            let cb = &codebooks[c * nc * v..(c + 1) * nc * v];
+            let base = (jo * m + c) * nc * mb;
+            for i in 0..nc {
+                let cent = &cb[i * v..(i + 1) * v];
+                for b in 0..mb {
+                    let xj = &x[b * k_tile + j * v..b * k_tile + (j + 1) * v];
+                    let mut acc = 0f32;
+                    for t in 0..v {
+                        acc += cent[t] * xj[t];
+                    }
+                    out[base + i * mb + b] = acc;
+                }
+            }
+        }
+    }
+    ((j_hi - j_lo) * m * nc * v * mb) as u64
 }
 
 impl Psumbook {
@@ -56,70 +160,43 @@ impl Psumbook {
         self.len() * 4
     }
 
-    /// Build the book for activations `x` laid out batch-major
+    /// Build the whole book for activations `x` laid out batch-major
     /// (`x[b*k_tile..]` is one column's tile slice, `k_tile = jn*v`).
     ///
     /// `codebooks` is the flat `m × nc × v` array from
     /// [`crate::quant::QuantizedLinear`]. Returns MAC count.
     pub fn build(&mut self, codebooks: &[f32], v: usize, x: &[f32]) -> u64 {
+        let jn = self.jn;
+        self.build_slice(codebooks, v, x, 0, jn)
+    }
+
+    /// Build only the vector range `[j_lo, j_hi)` of the book (the rest
+    /// of `data` is untouched). `x` is still the full staged tile. The
+    /// parallel shared-book build splits `[0, jn)` into worker ranges,
+    /// each writing its disjoint slice via [`build_range`]; covering the
+    /// whole range in any order reproduces [`Psumbook::build`] exactly.
+    pub fn build_slice(
+        &mut self,
+        codebooks: &[f32],
+        v: usize,
+        x: &[f32],
+        j_lo: usize,
+        j_hi: usize,
+    ) -> u64 {
         let (jn, m, nc, mb) = (self.jn, self.m, self.nc, self.mb);
-        let k_tile = jn * v;
-        debug_assert_eq!(x.len(), k_tile * mb);
-        debug_assert_eq!(codebooks.len(), m * nc * v);
-        if mb == 1 {
-            // Single-column fast path (the GEMV hot case): the activation
-            // sub-vector is hoisted out of the centroid loop and the v≤8
-            // dot product unrolls; table entries are written sequentially.
-            for j in 0..jn {
-                let xj = &x[j * v..(j + 1) * v];
-                for c in 0..m {
-                    let cb = &codebooks[c * nc * v..(c + 1) * nc * v];
-                    let out = &mut self.data[(j * m + c) * nc..(j * m + c + 1) * nc];
-                    match v {
-                        4 => {
-                            let (x0, x1, x2, x3) = (xj[0], xj[1], xj[2], xj[3]);
-                            for (i, o) in out.iter_mut().enumerate() {
-                                let cent = &cb[i * 4..i * 4 + 4];
-                                *o = cent[0] * x0 + cent[1] * x1 + cent[2] * x2 + cent[3] * x3;
-                            }
-                        }
-                        8 => {
-                            for (i, o) in out.iter_mut().enumerate() {
-                                let cent = &cb[i * 8..i * 8 + 8];
-                                let a = cent[0] * xj[0] + cent[1] * xj[1] + cent[2] * xj[2] + cent[3] * xj[3];
-                                let b = cent[4] * xj[4] + cent[5] * xj[5] + cent[6] * xj[6] + cent[7] * xj[7];
-                                *o = a + b;
-                            }
-                        }
-                        _ => {
-                            for (i, o) in out.iter_mut().enumerate() {
-                                let cent = &cb[i * v..(i + 1) * v];
-                                *o = cent.iter().zip(xj).map(|(a, b)| a * b).sum();
-                            }
-                        }
-                    }
-                }
-            }
-            return (jn * m * nc * v) as u64;
-        }
-        for j in 0..jn {
-            for c in 0..m {
-                let cb = &codebooks[c * nc * v..(c + 1) * nc * v];
-                let base = (j * m + c) * nc * mb;
-                for i in 0..nc {
-                    let cent = &cb[i * v..(i + 1) * v];
-                    for b in 0..mb {
-                        let xj = &x[b * k_tile + j * v..b * k_tile + (j + 1) * v];
-                        let mut acc = 0f32;
-                        for t in 0..v {
-                            acc += cent[t] * xj[t];
-                        }
-                        self.data[base + i * mb + b] = acc;
-                    }
-                }
-            }
-        }
-        (jn * m * nc * v * mb) as u64
+        let stride = m * nc * mb;
+        build_range(
+            codebooks,
+            v,
+            x,
+            jn,
+            m,
+            nc,
+            mb,
+            j_lo,
+            j_hi,
+            &mut self.data[j_lo * stride..j_hi * stride],
+        )
     }
 
     /// The contiguous `nc × mb` table for `(j, c)`.
@@ -165,6 +242,49 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Any partition of `[0, jn)` into `build_slice` calls must
+    /// reproduce the serial `build` bit-for-bit — the invariant the
+    /// parallel shared-book build rests on.
+    #[test]
+    fn sliced_builds_are_bit_identical_to_serial() {
+        for (v, m, nc, jn, mb) in [(4usize, 2usize, 8usize, 5usize, 1usize), (8, 1, 4, 6, 3)] {
+            let mut rng = Prng::seeded(7);
+            let codebooks = rng.normal_vec(m * nc * v, 1.0);
+            let x = rng.normal_vec(jn * v * mb, 1.0);
+            let mut serial = Psumbook::empty(jn, m, nc, mb);
+            let serial_macs = serial.build(&codebooks, v, &x);
+            for splits in [vec![0, jn], vec![0, 1, jn], vec![0, 2, 3, jn]] {
+                let mut sliced = Psumbook::empty(jn, m, nc, mb);
+                // Poison so untouched entries would be caught.
+                sliced.data.fill(f32::NAN);
+                let mut macs = 0u64;
+                for w in splits.windows(2) {
+                    macs += sliced.build_slice(&codebooks, v, &x, w[0], w[1]);
+                }
+                assert_eq!(macs, serial_macs, "MACs conserved across splits");
+                assert_eq!(sliced.data, serial.data, "split {splits:?} diverged");
+            }
+        }
+    }
+
+    /// `build_range` into externally split storage (the parallel-build
+    /// code path) matches the serial build.
+    #[test]
+    fn build_range_over_split_storage_matches_serial() {
+        let (v, m, nc, jn, mb) = (4usize, 1usize, 8usize, 6usize, 2usize);
+        let mut rng = Prng::seeded(8);
+        let codebooks = rng.normal_vec(m * nc * v, 1.0);
+        let x = rng.normal_vec(jn * v * mb, 1.0);
+        let mut serial = Psumbook::empty(jn, m, nc, mb);
+        serial.build(&codebooks, v, &x);
+        let mut data = vec![f32::NAN; jn * m * nc * mb];
+        let stride = m * nc * mb;
+        let (lo, hi) = data.split_at_mut(2 * stride);
+        build_range(&codebooks, v, &x, jn, m, nc, mb, 0, 2, lo);
+        build_range(&codebooks, v, &x, jn, m, nc, mb, 2, jn, hi);
+        assert_eq!(data, serial.data);
     }
 
     #[test]

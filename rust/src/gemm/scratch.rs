@@ -29,10 +29,16 @@ pub struct EngineScratch {
     /// Secondary f32 staging: batched shard outputs and row-parallel
     /// partial products in the sharded/TP wrappers.
     pub buf2: Vec<f32>,
-    /// CodeGEMM's Psumbook (left empty by the other engines).
+    /// CodeGEMM's Psumbook (left empty by the other engines). Under the
+    /// shared-book sharded schedule this is the **one** book per k-tile
+    /// that every row shard gathers from — it lives in the caller's
+    /// scratch, not the per-worker children, so a single build serves
+    /// the whole fan-out.
     pub book: Psumbook,
     /// Per-worker child scratches used by sharded / tensor-parallel
-    /// wrappers (one per shard; leaf engines ignore this).
+    /// wrappers (one per shard; leaf engines ignore this). On the
+    /// shared-book path children carry only the per-shard gather
+    /// counters — their buffers stay empty.
     pub children: Vec<EngineScratch>,
 }
 

@@ -66,6 +66,17 @@ impl Counters {
         }
     }
 
+    /// Build MACs per logical GEMM call — under the shared-Psumbook
+    /// schedule this is invariant to the row-shard count (one build per
+    /// k-tile per call), whereas private per-shard tables scale it by K.
+    pub fn build_ops_per_call(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.build_ops as f64 / self.calls as f64
+        }
+    }
+
     /// Total bytes moved (all classes).
     pub fn total_bytes(&self) -> u64 {
         self.weight_bytes + self.activation_bytes + self.scratch_bytes
@@ -103,6 +114,13 @@ mod tests {
         let c = Counters::new();
         assert_eq!(c.build_share_ops(), 0.0);
         assert_eq!(c.build_share_time(), 0.0);
+        assert_eq!(c.build_ops_per_call(), 0.0);
+    }
+
+    #[test]
+    fn build_ops_per_call_averages_over_calls() {
+        let c = Counters { build_ops: 120, calls: 3, ..Default::default() };
+        assert!((c.build_ops_per_call() - 40.0).abs() < 1e-12);
     }
 
     #[test]

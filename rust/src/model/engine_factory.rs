@@ -89,6 +89,11 @@ impl EngineKind {
     /// Build a **row-sharded** (output-dim / column-parallel) engine:
     /// quantize once, slice rows per shard, and fan `gemm` out over
     /// `pool`. Bit-exact vs. the serial engine of the same kind.
+    ///
+    /// `shared_book` selects the build-once/gather-many schedule for
+    /// CodeGEMM shards (one shared Psumbook per k-tile instead of one
+    /// private book per shard — see `ParallelConfig::shared_psumbook`);
+    /// the other kinds ignore it.
     pub fn build_sharded(
         &self,
         w: &[f32],
@@ -97,6 +102,7 @@ impl EngineKind {
         h: Option<&[f32]>,
         plan: &ShardPlan,
         pool: Arc<ThreadPool>,
+        shared_book: bool,
     ) -> Box<dyn GemmEngine + Send + Sync> {
         if plan.is_serial() {
             return self.build(w, n, k, h);
@@ -109,12 +115,17 @@ impl EngineKind {
             EngineKind::CodeGemm { cfg, kernel, tune } => {
                 let q = Self::quantize_additive(cfg, tune, w, n, k, h);
                 let codes = q.codes.unpack(); // once, not per shard
-                Box::new(ShardedEngine::from_factory(plan.clone(), pool, |(r0, r1)| {
-                    CodeGemmEngine::with_kernel(
-                        &shard::slice_rows_unpacked(&q, &codes, r0, r1),
-                        *kernel,
-                    )
-                }))
+                // Every shard gets the same kernel, so their aligned
+                // tile_w values agree and the shared k-tiles line up.
+                Box::new(
+                    ShardedEngine::from_factory(plan.clone(), pool, |(r0, r1)| {
+                        CodeGemmEngine::with_kernel(
+                            &shard::slice_rows_unpacked(&q, &codes, r0, r1),
+                            *kernel,
+                        )
+                    })
+                    .with_shared_book(shared_book),
+                )
             }
             EngineKind::Dequant { cfg, tune } => {
                 let q = Self::quantize_additive(cfg, tune, w, n, k, h);
@@ -142,6 +153,19 @@ impl EngineKind {
                     LutGemmEngine::new(q)
                 }))
             }
+        }
+    }
+
+    /// Row-shard boundary alignment for this kind (use with
+    /// [`ShardPlan::tiled`]): the CodeGEMM engine walks rows in `tile_h`
+    /// blocks, so row shards aligned to the block height keep the
+    /// private per-shard Psumbook build count congruent with the serial
+    /// engine's blocking (the shared-book schedule is indifferent, but
+    /// congruent plans make private-vs-shared comparisons exact).
+    pub fn row_shard_align(&self) -> usize {
+        match self {
+            EngineKind::CodeGemm { kernel, .. } => kernel.tile_h,
+            _ => 1,
         }
     }
 
@@ -270,10 +294,13 @@ mod tests {
         ] {
             let mut serial = kind.build(&w, n, k, None);
             let plan = ShardPlan::new(n, 3, 8, 1);
-            let mut sharded = kind.build_sharded(&w, n, k, None, &plan, Arc::clone(&pool));
-            // Sharding happens after (or commutes with) quantization, so
-            // the outputs are bit-identical, not merely close.
-            assert_eq!(serial.gemm(&x, 2), sharded.gemm(&x, 2), "{}", kind.label());
+            // Both Psumbook schedules must be bit-identical to serial:
+            // sharding happens after (or commutes with) quantization, and
+            // a shared book holds the same entries as private ones.
+            for shared in [true, false] {
+                let mut sharded = kind.build_sharded(&w, n, k, None, &plan, Arc::clone(&pool), shared);
+                assert_eq!(serial.gemm(&x, 2), sharded.gemm(&x, 2), "{} shared={shared}", kind.label());
+            }
         }
     }
 

@@ -190,11 +190,13 @@ impl LlamaModel {
         let d = cfg.hidden;
         let threads = par.effective_threads();
         let min = par.shard_min_rows;
-        // Column-parallel (output-dim) builder for one linear.
+        // Column-parallel (output-dim) builder for one linear. Row-shard
+        // boundaries align to the engine's row-block height so shard
+        // blocking stays congruent with the serial engine's k-tile walk.
         let col = |w: &[f32], n: usize, k: usize, h: Option<&[f32]>, on: bool| {
             if on {
-                let plan = ShardPlan::new(n, threads, min, 1);
-                kind.build_sharded(w, n, k, h, &plan, Arc::clone(&pool))
+                let plan = ShardPlan::tiled(n, threads, min, kind.row_shard_align());
+                kind.build_sharded(w, n, k, h, &plan, Arc::clone(&pool), par.shared_psumbook)
             } else {
                 kind.build(w, n, k, h)
             }

@@ -5,15 +5,46 @@
 //! logical GEMM call. Keeping this in one place means the sub-slice
 //! split, stage+scatter and counter-merge logic cannot drift between
 //! `ShardedEngine` and `TpLinear`.
+//!
+//! ## The shared-Psumbook schedule (build once, gather many)
+//!
+//! [`column_fan_out`] is the *private-table* schedule: every shard runs
+//! its complete engine, building its own Psumbook/LUT in its child
+//! scratch — K row shards of a CodeGEMM layer pay K× the build MACs.
+//! [`shared_book_fan_out`] is the CodeGEMM specialization the paper's
+//! Eq. 3 actually prices: per k-tile, **phase 1** builds one shared,
+//! scratch-resident Psumbook by fanning disjoint j-ranges of its storage
+//! out over the pool ([`psumbook::build_range`]), and **phase 2** fans
+//! the gather out over the row shards, each reading the book read-only
+//! into its disjoint output region. Build MACs/bytes/time are attributed
+//! once per logical call — independent of the shard count — so
+//! `Counters::build_share_ops` reflects the amortization; gather work is
+//! per-row and folds in from the child scratches as usual.
+//!
+//! Cost model caveat: unlike the private schedule's single rendezvous
+//! per call, the shared schedule synchronizes the pool per k-tile (a
+//! build barrier when the tile is wide enough to split, plus a gather
+//! barrier) and boxes fresh scoped jobs for each — the float buffers
+//! stay allocation-free after warmup, the job dispatch does not. The
+//! build-MAC savings must outweigh that dispatch; the scaling bench's
+//! shared-vs-private matrix measures exactly this trade, and pipelining
+//! tile `t+1`'s build under tile `t`'s gather is the ROADMAP next step.
 
 use super::plan::ShardPlan;
 use super::reduce;
+use crate::gemm::psumbook::{self, Psumbook};
 use crate::gemm::scratch::grow_slice;
-use crate::gemm::{Counters, EngineScratch, GemmEngine};
+use crate::gemm::tiling::Tiles;
+use crate::gemm::{CodeGemmEngine, Counters, EngineScratch, GemmEngine};
 use crate::util::threadpool::{ScopedJob, ThreadPool};
+use crate::util::timer::Timer;
 
 /// A shard engine viewed dynamically, shareable across worker threads.
 pub(crate) type ShardRef<'a> = &'a (dyn GemmEngine + Send + Sync);
+
+/// Minimum vectors per worker in the phase-1 parallel book build (below
+/// this, job dispatch costs more than the dot products it hides).
+const MIN_BUILD_VECS: usize = 4;
 
 /// Column-parallel fan-out: `engines[i]` computes output rows
 /// `plan.range(i)` over the full activation `x`. On the single-column
@@ -58,6 +89,155 @@ pub(crate) fn column_fan_out(
     }
 }
 
+/// True when `engines` can gather from one shared Psumbook per k-tile:
+/// every row shard must be the same quantized format (config **and**
+/// codebooks — shards sliced from one layer share them by construction)
+/// over the same reduction dim, with the same aligned tile width so the
+/// shared k-tiles line up with every shard's gather geometry.
+pub(crate) fn shared_book_compatible(engines: &[&CodeGemmEngine]) -> bool {
+    let Some(first) = engines.first() else {
+        return false;
+    };
+    let cfg = first.quant_config();
+    let tile_w = first.kernel_config().tile_w;
+    let k = first.dims().1;
+    engines.iter().all(|e| {
+        e.quant_config() == cfg
+            && e.kernel_config().tile_w == tile_w
+            && e.dims().1 == k
+            && e.codebooks() == first.codebooks()
+    })
+}
+
+/// Build-once/gather-many fan-out over row-sharded CodeGEMM engines.
+///
+/// For each k-tile: phase 1 builds **one** shared book in the caller's
+/// scratch (parallelized by j-ranges over the pool), phase 2 fans the
+/// gather out over the row shards reading that book read-only. Outputs
+/// are bit-exact vs. the serial engine (gather order per row is
+/// unchanged; book entries are identical however the build is split).
+/// Build work lands in the caller's counters exactly once per logical
+/// call; per-shard gather counters fold in via [`merge_children_into`].
+///
+/// Generic over the shard type so callers hand their shard slice over
+/// directly (no per-call ref collection); every shard must downcast via
+/// `as_codegemm` and satisfy [`shared_book_compatible`] — the caller is
+/// expected to have verified this once at construction.
+pub(crate) fn shared_book_fan_out<E: GemmEngine + Send + Sync>(
+    pool: &ThreadPool,
+    engines: &[E],
+    plan: &ShardPlan,
+    x: &[f32],
+    m_batch: usize,
+    y: &mut [f32],
+    scratch: &mut EngineScratch,
+) {
+    let ns = plan.num_shards();
+    debug_assert_eq!(engines.len(), ns);
+    debug_assert!(shared_book_compatible(
+        &engines.iter().map(|e| e.as_codegemm().expect("codegemm shard")).collect::<Vec<_>>()
+    ));
+    let EngineScratch { counters, buf, buf2, book, children } = scratch;
+    if children.len() < ns {
+        children.resize_with(ns, EngineScratch::new);
+    }
+    if m_batch == 1 {
+        shared_book_tiles(pool, engines, plan, x, 1, y, buf, book, &mut children[..ns], counters);
+    } else {
+        let stage = grow_slice(buf2, plan.len * m_batch);
+        shared_book_tiles(
+            pool,
+            engines,
+            plan,
+            x,
+            m_batch,
+            stage,
+            buf,
+            book,
+            &mut children[..ns],
+            counters,
+        );
+        reduce::scatter_row_shards(stage, plan, m_batch, y);
+    }
+    // Per-row group scales stream once per logical call (row partitioning
+    // conserves this stream exactly).
+    counters.weight_bytes += engines.iter().map(|e| e.scales_stream_bytes()).sum::<u64>();
+    merge_children_into(counters, &mut children[..ns]);
+}
+
+/// The per-k-tile two-phase loop of [`shared_book_fan_out`]. `dest`
+/// holds the per-shard output blocks back-to-back in shard order
+/// (`shard_len(i) * m_batch` each) — the caller's `y` itself on the
+/// single-column path, reused staging otherwise.
+#[allow(clippy::too_many_arguments)]
+fn shared_book_tiles<E: GemmEngine + Send + Sync>(
+    pool: &ThreadPool,
+    engines: &[E],
+    plan: &ShardPlan,
+    x: &[f32],
+    m_batch: usize,
+    dest: &mut [f32],
+    buf: &mut Vec<f32>,
+    book: &mut Psumbook,
+    children: &mut [EngineScratch],
+    counters: &mut Counters,
+) {
+    let e0 = engines[0].as_codegemm().expect("codegemm shard");
+    let cfg = e0.quant_config();
+    let (v, m, nc) = (cfg.v, cfg.m, cfg.n_centroids());
+    let k = e0.dims().1;
+    let tile_w = e0.kernel_config().tile_w;
+    debug_assert_eq!(dest.len(), plan.len * m_batch);
+    // Gathers accumulate across k-tiles: zero once up front.
+    dest.fill(0.0);
+    for (c0, c1) in Tiles::new(k, tile_w) {
+        let jn_tile = (c1 - c0) / v;
+        // Phase 1: build one shared book for this k-tile, fanned out by
+        // j-ranges (disjoint slices of the book's storage) over the pool.
+        let t = Timer::start();
+        let x_tile: &[f32] = e0.prepare_tile(x, m_batch, c0, c1, book, buf);
+        let build_plan = ShardPlan::new(jn_tile, pool.size(), MIN_BUILD_VECS, 1);
+        if build_plan.is_serial() {
+            book.build(e0.codebooks(), v, x_tile);
+        } else {
+            let stride = m * nc * m_batch;
+            let codebooks = e0.codebooks();
+            let mut jobs: Vec<ScopedJob> = Vec::with_capacity(build_plan.num_shards());
+            let mut rest: &mut [f32] = book.data.as_mut_slice();
+            for &(j0, j1) in &build_plan.shards {
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((j1 - j0) * stride);
+                rest = tail;
+                jobs.push(Box::new(move || {
+                    psumbook::build_range(codebooks, v, x_tile, jn_tile, m, nc, m_batch, j0, j1, chunk);
+                }));
+            }
+            pool.scope_run(jobs);
+        }
+        counters.build_seconds += t.elapsed_s();
+        // Build work is attributed ONCE per logical call, independent of
+        // the row-shard count — the amortization `build_share_*` prices.
+        // `count_build` is the same accounting the serial engine uses, so
+        // the shared-vs-private build-share comparison cannot drift.
+        e0.count_build(book, counters);
+
+        // Phase 2: every row shard gathers read-only from the shared book
+        // into its disjoint block of `dest`.
+        let t = Timer::start();
+        let book_ref: &Psumbook = book;
+        let mut jobs: Vec<ScopedJob> = Vec::with_capacity(engines.len());
+        let mut rest: &mut [f32] = &mut *dest;
+        for ((e, &(r0, r1)), child) in engines.iter().zip(&plan.shards).zip(children.iter_mut()) {
+            let e = e.as_codegemm().expect("codegemm shard");
+            let (ys, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * m_batch);
+            rest = tail;
+            let gather_counters = &mut child.counters;
+            jobs.push(Box::new(move || e.gather_into(book_ref, c0, m_batch, ys, gather_counters)));
+        }
+        pool.scope_run(jobs);
+        counters.read_seconds += t.elapsed_s();
+    }
+}
+
 /// Fold one fan-out's per-shard counters into the caller's set and clear
 /// the children for the next call (one fan-out == one logical GEMM call,
 /// not `children.len()`).
@@ -74,8 +254,10 @@ pub(crate) fn merge_children_into(counters: &mut Counters, children: &mut [Engin
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::QuantConfig;
     use crate::gemm::DenseEngine;
     use crate::parallel::shard;
+    use crate::quant::Quantizer;
     use crate::util::prng::Prng;
 
     #[test]
@@ -109,5 +291,55 @@ mod tests {
         // callers merge after every fan-out; here both accumulate first.
         assert_eq!(total.mac_flops, serial.counters().mac_flops);
         assert!(children.iter().all(|c| c.counters.mac_flops == 0));
+    }
+
+    #[test]
+    fn shared_book_fan_out_is_bit_exact_and_counts_build_once() {
+        let (n, k) = (24, 128);
+        let w = Prng::seeded(3).normal_vec(n * k, 0.02);
+        let q = Quantizer::new(QuantConfig::parse_label("m2v8g32").unwrap()).quantize(&w, n, k);
+        let plan = ShardPlan::new(n, 3, 1, 1);
+        let shards: Vec<CodeGemmEngine> = plan
+            .shards
+            .iter()
+            .map(|&(r0, r1)| CodeGemmEngine::from_quantized(&shard::slice_rows(&q, r0, r1)))
+            .collect();
+        let refs: Vec<&CodeGemmEngine> = shards.iter().collect();
+        assert!(shared_book_compatible(&refs));
+        let pool = ThreadPool::new(3);
+        let mut serial = CodeGemmEngine::from_quantized(&q);
+        for mb in [1usize, 2] {
+            let x = Prng::seeded(4 + mb as u64).normal_vec(k * mb, 1.0);
+            let mut scratch = EngineScratch::new();
+            let mut y = vec![f32::NAN; n * mb];
+            shared_book_fan_out(&pool, &shards, &plan, &x, mb, &mut y, &mut scratch);
+            serial.reset_counters();
+            assert_eq!(y, serial.gemm(&x, mb), "mb={mb}");
+            // One build per k-tile per logical call — the serial engine
+            // (tile_h >= n here) costs exactly the same build MACs, while
+            // the private-book schedule would cost 3x.
+            assert_eq!(scratch.counters.build_ops, serial.counters().build_ops);
+            assert_eq!(scratch.counters.read_ops, serial.counters().read_ops);
+            assert_eq!(scratch.counters.lookups, serial.counters().lookups);
+            assert_eq!(scratch.counters.calls, 1);
+        }
+    }
+
+    #[test]
+    fn shared_book_compatibility_rejects_mismatched_tiles() {
+        let (n, k) = (16, 64);
+        let w = Prng::seeded(5).normal_vec(n * k, 0.02);
+        let q = Quantizer::new(QuantConfig::parse_label("m1v8g32").unwrap()).quantize(&w, n, k);
+        let a = CodeGemmEngine::with_kernel(
+            &shard::slice_rows(&q, 0, 8),
+            crate::config::KernelConfig { tile_w: 32, tile_h: 8 },
+        );
+        let b = CodeGemmEngine::with_kernel(
+            &shard::slice_rows(&q, 8, 16),
+            crate::config::KernelConfig { tile_w: 16, tile_h: 8 },
+        );
+        assert!(shared_book_compatible(&[&a, &a]));
+        assert!(!shared_book_compatible(&[&a, &b]), "mismatched tile_w must not share");
+        assert!(!shared_book_compatible(&[]));
     }
 }

@@ -2,12 +2,31 @@
 //! forward pass (the L3 parallel subsystem).
 //!
 //! The paper's kernels win by partitioning table-lookup GEMM across
-//! parallel workers with *per-partition scratch* — thread-block-local
-//! Psumbooks on the GPU. This module is the CPU analogue, layered on
-//! [`crate::util::threadpool::ThreadPool`]:
+//! parallel workers. This module is the CPU analogue, layered on
+//! [`crate::util::threadpool::ThreadPool`], with **two table schedules**:
+//!
+//! - *Private tables* (the generic path): every shard's engine builds
+//!   its own Psumbook/LUT in its per-worker scratch — the GPU's
+//!   thread-block-local tables. Correct for any engine, but a K-way
+//!   sharded CodeGEMM layer pays K× the Psumbook build MACs.
+//! - *One shared Psumbook* (the CodeGEMM specialization): the book for a
+//!   k-tile depends only on the activations, never on the rows reading
+//!   it, so `fanout` builds it **once per (k-tile, batch)** in the
+//!   caller's scratch — phase 1 fans disjoint j-ranges of the build out
+//!   over the pool ([`crate::gemm::psumbook::build_range`]), phase 2
+//!   fans the gather out over the row shards reading the book read-only.
+//!   Build MACs are attributed once per logical call regardless of shard
+//!   count (the Eq. 3 amortization `Counters::build_share_ops`
+//!   measures), outputs stay bit-exact, and the build itself scales with
+//!   the pool instead of being duplicated across it.
+//!
+//! Pieces:
 //!
 //! - [`plan::ShardPlan`] — deterministic, alignment-aware partition of a
-//!   weight matrix axis into contiguous shards.
+//!   weight matrix axis into contiguous shards; `ShardPlan::tiled`
+//!   aligns row-shard boundaries to an engine's row-block height when
+//!   that costs no parallelism, keeping private-schedule build counts
+//!   congruent with the serial engine's blocking.
 //! - [`shard`] — carve row/column shards out of quantized or dense
 //!   layers *after* quantization, so shard data is byte-identical to the
 //!   serial layer's rows.
@@ -15,12 +34,18 @@
 //!   row-sharded over the pool via the `&self` `gemm_into` core: workers
 //!   share the engines read-only, each writing a disjoint sub-slice of
 //!   the caller's output buffer with its own per-worker
-//!   [`crate::gemm::EngineScratch`] (Psumbook/LUT/decode scratch);
-//!   **bit-exact** vs. serial and allocation-free after warmup.
+//!   [`crate::gemm::EngineScratch`]; **bit-exact** vs. serial, with all
+//!   scratch buffers grow-only after warmup (job dispatch still boxes
+//!   closures — per call on the private schedule, per k-tile on the
+//!   shared one). Uniform CodeGEMM shards (detected via
+//!   `GemmEngine::as_codegemm` + matching tile geometry) take the
+//!   shared-book schedule by default; `with_shared_book(false)` keeps
+//!   the private schedule measurable.
 //! - [`tensor_parallel::TpLinear`] — Megatron-style column-parallel
 //!   (Q/K/V, gate/up, LM head) and row-parallel (O, down) linears; the
 //!   row-parallel k-sum uses the deterministic ordered all-reduce of
-//!   [`reduce`].
+//!   [`reduce`]. (Row-parallel shards see different activation slices,
+//!   so there is no book to share across them.)
 //! - [`reduce`] — shard-order scatter/concatenation, ordered all-reduce
 //!   (in-place and allocating variants), and counter merging.
 //!
@@ -29,7 +54,8 @@
 //! model from any [`crate::model::EngineKind`];
 //! [`crate::coordinator::NativeBackend::new_parallel`] serves it, so
 //! every batcher step fans each linear out across the pool. Configured by
-//! [`crate::config::ParallelConfig`].
+//! [`crate::config::ParallelConfig`] (`shared_psumbook` selects the
+//! schedule).
 
 pub(crate) mod fanout;
 pub mod plan;

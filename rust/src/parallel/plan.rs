@@ -55,6 +55,31 @@ impl ShardPlan {
         ShardPlan::new(len, 1, 1, 1)
     }
 
+    /// Row plan aligned to a tiled engine's row-block height whenever
+    /// that alignment is *free*: shard boundaries land on `tile`
+    /// multiples so every shard's row-blocks coincide with the serial
+    /// engine's blocking. For CodeGEMM under the *private*
+    /// per-shard-Psumbook schedule this keeps the total build count
+    /// equal to the serial engine's (a shard straddling a row-block
+    /// boundary splits one block into two and pays an extra build per
+    /// k-tile). Alignment never costs parallelism: when the aligned
+    /// partition would produce fewer shards than a unit-aligned one
+    /// (extent smaller than `max_shards` full blocks), the unit plan
+    /// wins — gather parallelism dominates the build overhead it trades
+    /// away, and the shared-book schedule makes the build count
+    /// independent of shard boundaries regardless.
+    pub fn tiled(len: usize, max_shards: usize, min_len: usize, tile: usize) -> ShardPlan {
+        let tile = tile.max(1);
+        let unit = ShardPlan::new(len, max_shards, min_len, 1);
+        if tile > 1 {
+            let aligned = ShardPlan::new(len, max_shards, min_len, tile);
+            if aligned.num_shards() >= unit.num_shards() {
+                return aligned;
+            }
+        }
+        unit
+    }
+
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }
@@ -136,6 +161,30 @@ mod tests {
     fn smaller_than_one_unit_is_serial() {
         let p = ShardPlan::new(96, 4, 1, 128);
         assert_eq!(p.shards, vec![(0, 96)]);
+    }
+
+    #[test]
+    fn tiled_aligns_to_blocks_when_free() {
+        // The previously-misaligned case: 80 rows, 32-row blocks, 2
+        // shards. The unit-aligned plan splits mid-block — (0,40)(40,80)
+        // covers 4 partial blocks where the serial engine walks 3 —
+        // while the tiled plan lands on a block boundary at no cost in
+        // shard count.
+        let naive = ShardPlan::new(80, 2, 1, 1);
+        assert_eq!(naive.shards, vec![(0, 40), (40, 80)]);
+        let p = ShardPlan::tiled(80, 2, 1, 32);
+        assert_eq!(p.shards, vec![(0, 32), (32, 80)]);
+        // Alignment must never shrink parallelism: 64 rows only hold 2
+        // full blocks, so a 3-shard request stays unit-aligned.
+        let p = ShardPlan::tiled(64, 3, 1, 32);
+        assert_eq!(p.num_shards(), 3);
+        // Fewer than one full block likewise.
+        let p = ShardPlan::tiled(48, 4, 1, 64);
+        assert_eq!(p.num_shards(), 4);
+        // Degenerate tile behaves like unit alignment.
+        assert_eq!(ShardPlan::tiled(10, 2, 1, 0).num_shards(), 2);
+        // Aligned and unit plans agree when the split is already exact.
+        assert_eq!(ShardPlan::tiled(128, 4, 1, 32), ShardPlan::new(128, 4, 1, 32));
     }
 
     #[test]

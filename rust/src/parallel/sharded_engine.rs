@@ -5,8 +5,7 @@
 //! via the `&self` zero-allocation `gemm_into` core: workers share the
 //! engines read-only and every worker gets (a) a disjoint sub-slice of
 //! the *caller's* output buffer and (b) its own per-worker
-//! [`EngineScratch`] from the caller scratch's `children` — mirroring the
-//! thread-block-local Psumbook/LUT tables of the GPU kernels. There is no
+//! [`EngineScratch`] from the caller scratch's `children`. There is no
 //! per-shard `Vec` allocation and no concatenation step on the single
 //! column (decode) path; batched calls stage per-shard blocks in the
 //! reused `buf2` and scatter once. Since row partitioning never reorders
@@ -14,12 +13,30 @@
 //! serial engine the shards were sliced from (the property tests assert
 //! `==`, not approximate equality).
 //!
+//! ## Private tables vs. one shared Psumbook
+//!
+//! Generic shards run the *private-table* schedule: each worker's engine
+//! builds its own Psumbook/LUT in its child scratch (the thread-block-
+//! local tables of the GPU kernels) — which makes a K-way sharded
+//! CodeGEMM layer pay K× the Psumbook build MACs. When every shard is a
+//! [`CodeGemmEngine`] with matching quantization and tile geometry
+//! (detected at construction via [`GemmEngine::as_codegemm`]), the engine
+//! instead takes the **build-once/gather-many** path of
+//! `fanout::shared_book_fan_out`: per k-tile, phase 1 builds one shared
+//! book in the *caller's* scratch (parallelized by j-ranges), phase 2
+//! fans the gather out over the row shards reading it read-only. Same
+//! bit-exact outputs; build MACs attributed once per logical call
+//! regardless of shard count; scratch buffers stay grow-only, though
+//! the per-k-tile job dispatch itself is not allocation-free (see
+//! `fanout`). [`ShardedEngine::with_shared_book`] opts out (the private
+//! schedule remains available for measurement).
+//!
 //! A panicking shard propagates at the caller after all jobs of the call
 //! settle (`ThreadPool::scope_run`); the engine itself stays usable.
 
 use super::fanout::{self, ShardRef};
 use super::plan::ShardPlan;
-use crate::gemm::{EngineScratch, GemmEngine};
+use crate::gemm::{CodeGemmEngine, EngineScratch, GemmEngine};
 use crate::util::threadpool::ThreadPool;
 use std::sync::Arc;
 
@@ -30,6 +47,11 @@ pub struct ShardedEngine<E: GemmEngine + Send + Sync> {
     pool: Arc<ThreadPool>,
     k: usize,
     scratch: EngineScratch,
+    /// Take the shared-Psumbook schedule when the shards support it.
+    shared_book: bool,
+    /// All shards are CodeGEMM engines with matching book geometry
+    /// (computed once at construction).
+    shared_compatible: bool,
 }
 
 impl<E: GemmEngine + Send + Sync> ShardedEngine<E> {
@@ -45,7 +67,34 @@ impl<E: GemmEngine + Send + Sync> ShardedEngine<E> {
             assert_eq!(e.dims().0, r1 - r0, "shard {i} row count mismatch");
             assert_eq!(e.dims().1, k, "shard {i} reduction dim mismatch");
         }
-        ShardedEngine { plan, shards, pool, k, scratch: EngineScratch::new() }
+        let shared_compatible = {
+            let cgs: Option<Vec<&CodeGemmEngine>> =
+                shards.iter().map(|e| e.as_codegemm()).collect();
+            cgs.map_or(false, |cgs| fanout::shared_book_compatible(&cgs))
+        };
+        ShardedEngine {
+            plan,
+            shards,
+            pool,
+            k,
+            scratch: EngineScratch::new(),
+            shared_book: true,
+            shared_compatible,
+        }
+    }
+
+    /// Enable/disable the shared-Psumbook schedule (on by default; only
+    /// effective when the shards are compatible CodeGEMM engines). The
+    /// private per-shard-table schedule is kept available so the
+    /// build-share amortization is directly measurable.
+    pub fn with_shared_book(mut self, on: bool) -> ShardedEngine<E> {
+        self.shared_book = on;
+        self
+    }
+
+    /// True when calls will take the build-once/gather-many path.
+    pub fn uses_shared_book(&self) -> bool {
+        self.shared_book && self.shared_compatible && self.plan.num_shards() > 1
     }
 
     /// Build shard engines from a factory called with each row range.
@@ -89,6 +138,20 @@ impl<E: GemmEngine + Send + Sync> GemmEngine for ShardedEngine<E> {
             // Serial fast path: run on the caller's thread with the
             // caller's scratch directly.
             return self.shards[0].gemm_into(x, m_batch, y, scratch);
+        }
+        if self.shared_book && self.shared_compatible {
+            // Build-once/gather-many: one shared Psumbook per k-tile in
+            // the caller's scratch, gathered by every row shard
+            // (compatibility was proven once at construction).
+            return fanout::shared_book_fan_out(
+                &self.pool,
+                &self.shards,
+                &self.plan,
+                x,
+                m_batch,
+                y,
+                scratch,
+            );
         }
         let EngineScratch { counters, buf2, children, .. } = scratch;
         if children.len() < ns {
@@ -164,10 +227,45 @@ mod tests {
         let mut sharded = ShardedEngine::from_factory(plan, pool(), |(r0, r1)| {
             CodeGemmEngine::from_quantized(&shard::slice_rows(&q, r0, r1))
         });
+        assert!(sharded.uses_shared_book(), "uniform CodeGEMM shards share the book");
         assert_eq!(sharded.gemv(&x), serial.gemv(&x));
         // Gather work is per-row, so merged lookups match the serial run.
         assert_eq!(sharded.counters().lookups, serial.counters().lookups);
         assert_eq!(sharded.counters().read_ops, serial.counters().read_ops);
+        // Build once per k-tile (serial tile_h covers all rows here, so
+        // its build count is the shared schedule's).
+        assert_eq!(sharded.counters().build_ops, serial.counters().build_ops);
+    }
+
+    #[test]
+    fn private_book_schedule_still_available_and_bit_exact() {
+        let (n, k) = (32, 64);
+        let w = Prng::seeded(11).normal_vec(n * k, 0.02);
+        let q = Quantizer::new(QuantConfig::parse_label("m1v4g32").unwrap()).quantize(&w, n, k);
+        let x = Prng::seeded(12).normal_vec(k * 2, 1.0);
+        let mut serial = CodeGemmEngine::from_quantized(&q);
+        let plan = ShardPlan::new(n, 4, 1, 1);
+        let mk = |shared: bool| {
+            ShardedEngine::from_factory(plan.clone(), pool(), |(r0, r1)| {
+                CodeGemmEngine::from_quantized(&shard::slice_rows(&q, r0, r1))
+            })
+            .with_shared_book(shared)
+        };
+        let mut private = mk(false);
+        let mut shared = mk(true);
+        assert!(!private.uses_shared_book());
+        assert!(shared.uses_shared_book());
+        let y_ref = serial.gemm(&x, 2);
+        assert_eq!(private.gemm(&x, 2), y_ref);
+        assert_eq!(shared.gemm(&x, 2), y_ref);
+        // Private tables pay the build once per shard; the shared book
+        // pays it once per logical call.
+        assert_eq!(private.counters().build_ops, 4 * shared.counters().build_ops);
+        assert_eq!(private.counters().read_ops, shared.counters().read_ops);
+        assert!(
+            shared.counters().build_share_ops() < private.counters().build_share_ops(),
+            "amortization must shrink the build share"
+        );
     }
 
     #[test]

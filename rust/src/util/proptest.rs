@@ -2,7 +2,18 @@
 //! `proptest`). Runs a property over `cases` random inputs drawn from a
 //! generator; on failure it attempts greedy shrinking via user-provided
 //! simplification and reports the minimal counterexample with the seed.
+//!
+//! Besides the generic combinators, this module hosts the crate's
+//! *reusable engine-test generators*: [`GemmCase`] /[`GemmCaseGen`]
+//! produce seeded quantized-layer geometries (shape, quant config,
+//! shard count, batch) with helpers that materialize the weights,
+//! activations, quantized layer and engines — shared by the
+//! `gemm_into`, `parallel` and shared-Psumbook property suites instead
+//! of each hand-rolling its own setup.
 
+use crate::config::QuantConfig;
+use crate::gemm::CodeGemmEngine;
+use crate::quant::{QuantizedLinear, Quantizer};
 use crate::util::prng::Prng;
 
 /// A generator of random values for property tests.
@@ -75,6 +86,127 @@ pub fn f32_vec(min_len: usize, max_len: usize, std: f32) -> impl Gen<Vec<f32>> {
             }
             c
         },
+    }
+}
+
+/// One random quantized-layer GEMM scenario: codebook hyperparameters
+/// (`v`, `m`, `b`, `g`), layer shape (`n × k`), a row-shard count, a
+/// batch width and the seed that materializes deterministic weights and
+/// activations for it. Sampled combinations may be invalid (e.g. `g < v`)
+/// — [`GemmCase::quant_config`] returns `None` there and properties
+/// treat the case as vacuous.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmCase {
+    pub v: usize,
+    pub m: usize,
+    pub b: usize,
+    pub g: i64,
+    pub n: usize,
+    pub k: usize,
+    pub shards: usize,
+    pub mb: usize,
+    pub seed: u64,
+}
+
+impl GemmCase {
+    /// The quant config, when the sampled combination is valid.
+    pub fn quant_config(&self) -> Option<QuantConfig> {
+        QuantConfig::new(self.v, self.m, self.b, self.g).ok()
+    }
+
+    /// Deterministic dense weights for the case (`n × k`, given std).
+    pub fn weights(&self, std: f32) -> Vec<f32> {
+        Prng::seeded(self.seed).normal_vec(self.n * self.k, std)
+    }
+
+    /// Deterministic activations (`k × mb`, batch-major). `salt`
+    /// decorrelates multiple streams drawn from the same case.
+    pub fn activations(&self, salt: u64) -> Vec<f32> {
+        Prng::seeded(self.seed ^ salt).normal_vec(self.k * self.mb, 1.0)
+    }
+
+    /// Quantize the case's weights under its config (`None` when the
+    /// config is invalid).
+    pub fn quantized(&self, std: f32) -> Option<QuantizedLinear> {
+        let cfg = self.quant_config()?;
+        Some(Quantizer::new(cfg).quantize(&self.weights(std), self.n, self.k))
+    }
+
+    /// Serial CodeGEMM engine over the case's quantized layer.
+    pub fn codegemm_engine(&self, std: f32) -> Option<CodeGemmEngine> {
+        Some(CodeGemmEngine::from_quantized(&self.quantized(std)?))
+    }
+}
+
+/// Configurable generator of [`GemmCase`]s. Fields are slices of the
+/// admissible values per dimension, so suites can pin e.g.
+/// `bs: &[1, 2, 4]` or `mbs: &[1, 4, 64]` while sharing the shrinking
+/// logic (toward one shard, the first batch width, and the smallest
+/// shape).
+#[derive(Clone, Copy, Debug)]
+pub struct GemmCaseGen {
+    pub vs: &'static [usize],
+    pub ms: &'static [usize],
+    pub bs: &'static [usize],
+    pub gs: &'static [i64],
+    pub mbs: &'static [usize],
+    pub max_shards: usize,
+    /// `n` is drawn as `n_unit * {1..=n_steps}`.
+    pub n_unit: usize,
+    pub n_steps: usize,
+    /// `k` is drawn as `k_unit * {1..=k_steps}` (keep `k_unit` a multiple
+    /// of every `v` in `vs`).
+    pub k_unit: usize,
+    pub k_steps: usize,
+}
+
+impl Default for GemmCaseGen {
+    fn default() -> Self {
+        GemmCaseGen {
+            vs: &[4, 8],
+            ms: &[1, 2],
+            bs: &[3, 4, 5, 6],
+            gs: &[32, 64, -1],
+            mbs: &[1, 2, 3, 4, 5, 6, 7, 8],
+            max_shards: 5,
+            n_unit: 8,
+            n_steps: 8,
+            k_unit: 32,
+            k_steps: 4,
+        }
+    }
+}
+
+impl Gen<GemmCase> for GemmCaseGen {
+    fn generate(&self, rng: &mut Prng) -> GemmCase {
+        GemmCase {
+            v: self.vs[rng.index(self.vs.len())],
+            m: self.ms[rng.index(self.ms.len())],
+            b: self.bs[rng.index(self.bs.len())],
+            g: self.gs[rng.index(self.gs.len())],
+            n: self.n_unit * (1 + rng.index(self.n_steps)),
+            k: self.k_unit * (1 + rng.index(self.k_steps)),
+            shards: 1 + rng.index(self.max_shards),
+            mb: self.mbs[rng.index(self.mbs.len())],
+            seed: rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self, c: &GemmCase) -> Vec<GemmCase> {
+        let mut out = Vec::new();
+        if c.shards > 1 {
+            out.push(GemmCase { shards: 1, ..*c });
+        }
+        if c.mb != self.mbs[0] {
+            out.push(GemmCase { mb: self.mbs[0], ..*c });
+        }
+        if c.n > self.n_unit {
+            out.push(GemmCase { n: self.n_unit, ..*c });
+        }
+        if c.k > self.k_unit {
+            out.push(GemmCase { k: self.k_unit, ..*c });
+        }
+        out
     }
 }
 
@@ -203,6 +335,30 @@ mod tests {
             let v = g.generate(&mut rng);
             assert!((2..=8).contains(&v.len()));
         }
+    }
+
+    #[test]
+    fn gemm_cases_generate_consistent_shapes_and_shrink_smaller() {
+        let g = GemmCaseGen::default();
+        let mut rng = Prng::seeded(9);
+        for i in 0..50 {
+            let c = g.generate(&mut rng);
+            assert_eq!(c.k % c.v, 0, "k must stay a v multiple");
+            assert!(c.n >= 8 && c.mb >= 1 && c.shards >= 1 && c.shards <= 5);
+            assert_eq!(c.activations(1).len(), c.k * c.mb);
+            assert_eq!(c.weights(0.05).len(), c.n * c.k);
+            // Quantization is the expensive part — spot-check a few.
+            if i < 2 {
+                if let Some(q) = c.quantized(0.05) {
+                    assert_eq!((q.n, q.k), (c.n, c.k));
+                    assert!(c.codegemm_engine(0.05).is_some());
+                }
+            }
+        }
+        let big = GemmCase { v: 4, m: 1, b: 3, g: 32, n: 64, k: 128, shards: 4, mb: 8, seed: 1 };
+        let shrunk = g.shrink(&big);
+        assert!(!shrunk.is_empty());
+        assert!(shrunk.iter().all(|s| s.shards <= big.shards && s.n <= big.n && s.k <= big.k));
     }
 
     #[test]

@@ -20,27 +20,10 @@ use codegemm::model::{EngineKind, LlamaModel, ModelWeights};
 use codegemm::parallel::{shard, ShardPlan, ShardedEngine};
 use codegemm::quant::bcq::BcqLinear;
 use codegemm::quant::uniform::UniformLinear;
-use codegemm::quant::Quantizer;
 use codegemm::util::proptest as pt;
-use codegemm::util::prng::Prng;
 use codegemm::util::stats;
 use codegemm::util::threadpool::ThreadPool;
 use std::sync::Arc;
-
-/// Random (v, m, b, g, n, k, shards, m_batch, seed) cases.
-fn gen_case() -> impl pt::Gen<(usize, usize, usize, i64, usize, usize, usize, usize, u64)> {
-    pt::gen_fn(|rng: &mut Prng| {
-        let v = [4usize, 8][rng.index(2)];
-        let m = 1 + rng.index(2);
-        let b = 3 + rng.index(4);
-        let g = [32i64, 64, -1][rng.index(3)];
-        let n = 8 * (1 + rng.index(8)); // 8..64 rows
-        let k = 32 * (1 + rng.index(4)); // 32..128 cols
-        let shards = 1 + rng.index(5); // 1..5
-        let mb = 1 + rng.index(8); // 1..8
-        (v, m, b, g, n, k, shards, mb, rng.next_u64())
-    })
-}
 
 /// Check one engine family: `gemm_into` through the shared dirty scratch
 /// must be bit-identical to the legacy allocating wrapper.
@@ -67,15 +50,15 @@ fn prop_gemm_into_bit_identical_to_wrapper_across_engines() {
     pt::assert_prop(
         "gemm_into == gemm for every engine",
         cfg,
-        &gen_case(),
-        |&(v, m, b, g, n, k, _, mb, seed)| {
+        &pt::GemmCaseGen::default(),
+        |c: &pt::GemmCase| {
             let mut guard = shared.borrow_mut();
             let shared = &mut *guard;
-            let w = Prng::seeded(seed).normal_vec(n * k, 0.05);
-            let x = Prng::seeded(seed ^ 1).normal_vec(k * mb, 1.0);
+            let (n, k, mb) = (c.n, c.k, c.mb);
+            let w = c.weights(0.05);
+            let x = c.activations(1);
 
-            if let Ok(qc) = QuantConfig::new(v, m, b, g) {
-                let q = Quantizer::new(qc).quantize(&w, n, k);
+            if let Some(q) = c.quantized(0.05) {
                 check_engine(
                     &CodeGemmEngine::from_quantized(&q),
                     &mut CodeGemmEngine::from_quantized(&q),
@@ -120,18 +103,17 @@ fn prop_sharded_gemm_into_bit_identical_to_serial() {
     pt::assert_prop(
         "sharded gemm_into == serial gemm",
         cfg,
-        &gen_case(),
-        |&(v, m, b, g, n, k, shards, mb, seed)| {
+        &pt::GemmCaseGen::default(),
+        |c: &pt::GemmCase| {
             let mut guard = cell.borrow_mut();
             let scratch_ref = &mut *guard;
-            let Ok(qc) = QuantConfig::new(v, m, b, g) else {
+            let Some(q) = c.quantized(0.02) else {
                 return Ok(()); // invalid combination — vacuous
             };
-            let w = Prng::seeded(seed).normal_vec(n * k, 0.02);
-            let q = Quantizer::new(qc).quantize(&w, n, k);
-            let x = Prng::seeded(seed ^ 2).normal_vec(k * mb, 1.0);
+            let (n, mb) = (c.n, c.mb);
+            let x = c.activations(2);
             let mut serial = CodeGemmEngine::from_quantized(&q);
-            let plan = ShardPlan::new(n, shards, 1, 1);
+            let plan = ShardPlan::new(n, c.shards, 1, 1);
             let sharded = ShardedEngine::from_factory(plan, Arc::clone(&pool), |(r0, r1)| {
                 CodeGemmEngine::from_quantized(&shard::slice_rows(&q, r0, r1))
             });
@@ -139,7 +121,7 @@ fn prop_sharded_gemm_into_bit_identical_to_serial() {
             sharded.gemm_into(&x, mb, &mut y, scratch_ref);
             pt::ensure(
                 y == serial.gemm(&x, mb),
-                format!("sharded gemm_into diverged ({qc:?} {n}x{k}/{shards} mb={mb})"),
+                format!("sharded gemm_into diverged ({c:?})"),
             )?;
             // Conserved work, accumulated into the caller's scratch.
             pt::ensure(

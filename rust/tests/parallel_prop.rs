@@ -7,65 +7,60 @@
 //!   conserved quantities (MACs for dense/dequant/uniform, lookups and
 //!   read ops for the table-lookup kernels).
 
-use codegemm::config::QuantConfig;
 use codegemm::gemm::{
     CodeGemmEngine, DenseEngine, DequantEngine, GemmEngine, LutGemmEngine, UniformGemmEngine,
 };
 use codegemm::parallel::{shard, ShardPlan, ShardedEngine, TpLinear};
 use codegemm::quant::bcq::BcqLinear;
 use codegemm::quant::uniform::UniformLinear;
-use codegemm::quant::Quantizer;
 use codegemm::util::proptest as pt;
 use codegemm::util::prng::Prng;
 use codegemm::util::stats;
 use codegemm::util::threadpool::ThreadPool;
 use std::sync::Arc;
 
-/// Random (v, m, b, g, n, k, shards, m_batch, seed) cases.
-fn gen_case() -> impl pt::Gen<(usize, usize, usize, i64, usize, usize, usize, usize, u64)> {
-    pt::gen_fn(|rng: &mut Prng| {
-        let v = [4usize, 8][rng.index(2)];
-        let m = 1 + rng.index(2);
-        let b = 3 + rng.index(4);
-        let g = [32i64, 64, -1][rng.index(3)];
-        let n = 8 * (1 + rng.index(8)); // 8..64 rows
-        let k = 32 * (1 + rng.index(4)); // 32..128 cols
-        let shards = 1 + rng.index(5); // 1..5
-        let mb = 1 + rng.index(3); // 1..3
-        (v, m, b, g, n, k, shards, mb, rng.next_u64())
-    })
+/// Shared case generator (batch kept small: these suites stress shard
+/// geometry, not prefill width).
+fn gen_case() -> pt::GemmCaseGen {
+    pt::GemmCaseGen { mbs: &[1, 2, 3], ..Default::default() }
 }
 
 #[test]
 fn prop_sharded_codegemm_bit_exact_and_lookups_conserved() {
     let pool = Arc::new(ThreadPool::new(4));
     let cfg = pt::PropConfig { cases: 20, ..Default::default() };
-    pt::assert_prop("sharded codegemm == serial", cfg, &gen_case(), |&(v, m, b, g, n, k, shards, mb, seed)| {
-        let Ok(qc) = QuantConfig::new(v, m, b, g) else {
+    pt::assert_prop("sharded codegemm == serial", cfg, &gen_case(), |c: &pt::GemmCase| {
+        let Some(q) = c.quantized(0.02) else {
             return Ok(()); // invalid combination — vacuous
         };
-        let w = Prng::seeded(seed).normal_vec(n * k, 0.02);
-        let q = Quantizer::new(qc).quantize(&w, n, k);
-        let x = Prng::seeded(seed ^ 1).normal_vec(k * mb, 1.0);
+        let x = c.activations(1);
         let mut serial = CodeGemmEngine::from_quantized(&q);
-        let plan = ShardPlan::new(n, shards, 1, 1);
-        let mut sharded = ShardedEngine::from_factory(plan, Arc::clone(&pool), |(r0, r1)| {
-            CodeGemmEngine::from_quantized(&shard::slice_rows(&q, r0, r1))
-        });
-        let (ys, yp) = (serial.gemm(&x, mb), sharded.gemm(&x, mb));
-        pt::ensure(ys == yp, format!("output not bit-identical ({qc:?} {n}x{k}/{shards})"))?;
-        pt::ensure(
-            sharded.counters().lookups == serial.counters().lookups,
-            format!(
-                "lookups diverged: sharded {} vs serial {}",
-                sharded.counters().lookups,
-                serial.counters().lookups
-            ),
-        )?;
-        pt::ensure(
-            sharded.counters().read_ops == serial.counters().read_ops,
-            "read_ops diverged",
-        )
+        let ys = serial.gemm(&x, c.mb);
+        // Both Psumbook schedules: shared (one book per k-tile, the
+        // default) and private (per-shard books) must each stay
+        // bit-identical to serial and conserve the per-row gather work.
+        for shared in [true, false] {
+            let plan = ShardPlan::new(c.n, c.shards, 1, 1);
+            let mut sharded = ShardedEngine::from_factory(plan, Arc::clone(&pool), |(r0, r1)| {
+                CodeGemmEngine::from_quantized(&shard::slice_rows(&q, r0, r1))
+            })
+            .with_shared_book(shared);
+            let yp = sharded.gemm(&x, c.mb);
+            pt::ensure(ys == yp, format!("output not bit-identical (shared={shared}, {c:?})"))?;
+            pt::ensure(
+                sharded.counters().lookups == serial.counters().lookups,
+                format!(
+                    "lookups diverged (shared={shared}): sharded {} vs serial {}",
+                    sharded.counters().lookups,
+                    serial.counters().lookups
+                ),
+            )?;
+            pt::ensure(
+                sharded.counters().read_ops == serial.counters().read_ops,
+                format!("read_ops diverged (shared={shared})"),
+            )?;
+        }
+        Ok(())
     });
 }
 
@@ -73,16 +68,17 @@ fn prop_sharded_codegemm_bit_exact_and_lookups_conserved() {
 fn prop_sharded_dense_bit_exact_and_macs_conserved() {
     let pool = Arc::new(ThreadPool::new(4));
     let cfg = pt::PropConfig { cases: 24, ..Default::default() };
-    pt::assert_prop("sharded dense == serial", cfg, &gen_case(), |&(_, _, _, _, n, k, shards, mb, seed)| {
-        let w = Prng::seeded(seed).normal_vec(n * k, 1.0);
-        let x = Prng::seeded(seed ^ 2).normal_vec(k * mb, 1.0);
+    pt::assert_prop("sharded dense == serial", cfg, &gen_case(), |c: &pt::GemmCase| {
+        let (n, k) = (c.n, c.k);
+        let w = c.weights(1.0);
+        let x = c.activations(2);
         let mut serial = DenseEngine::new(w.clone(), n, k);
-        let plan = ShardPlan::new(n, shards, 1, 1);
+        let plan = ShardPlan::new(n, c.shards, 1, 1);
         let mut sharded = ShardedEngine::from_factory(plan, Arc::clone(&pool), |(r0, r1)| {
             DenseEngine::new(shard::dense_rows(&w, k, r0, r1), r1 - r0, k)
         });
-        let (ys, yp) = (serial.gemm(&x, mb), sharded.gemm(&x, mb));
-        pt::ensure(ys == yp, format!("dense output not bit-identical ({n}x{k}/{shards})"))?;
+        let (ys, yp) = (serial.gemm(&x, c.mb), sharded.gemm(&x, c.mb));
+        pt::ensure(ys == yp, format!("dense output not bit-identical ({c:?})"))?;
         pt::ensure(
             sharded.counters().mac_flops == serial.counters().mac_flops,
             "dense MACs diverged",
@@ -95,19 +91,17 @@ fn prop_sharded_dense_bit_exact_and_macs_conserved() {
 fn prop_sharded_dequant_bit_exact_and_work_conserved() {
     let pool = Arc::new(ThreadPool::new(4));
     let cfg = pt::PropConfig { cases: 16, ..Default::default() };
-    pt::assert_prop("sharded dequant == serial", cfg, &gen_case(), |&(v, m, b, g, n, k, shards, mb, seed)| {
-        let Ok(qc) = QuantConfig::new(v, m, b, g) else {
+    pt::assert_prop("sharded dequant == serial", cfg, &gen_case(), |c: &pt::GemmCase| {
+        let Some(q) = c.quantized(0.02) else {
             return Ok(());
         };
-        let w = Prng::seeded(seed).normal_vec(n * k, 0.02);
-        let q = Quantizer::new(qc).quantize(&w, n, k);
-        let x = Prng::seeded(seed ^ 3).normal_vec(k * mb, 1.0);
+        let x = c.activations(3);
         let mut serial = DequantEngine::from_quantized(&q);
-        let plan = ShardPlan::new(n, shards, 1, 1);
+        let plan = ShardPlan::new(c.n, c.shards, 1, 1);
         let mut sharded = ShardedEngine::from_factory(plan, Arc::clone(&pool), |(r0, r1)| {
             DequantEngine::from_quantized(&shard::slice_rows(&q, r0, r1))
         });
-        let (ys, yp) = (serial.gemm(&x, mb), sharded.gemm(&x, mb));
+        let (ys, yp) = (serial.gemm(&x, c.mb), sharded.gemm(&x, c.mb));
         pt::ensure(ys == yp, "dequant output not bit-identical")?;
         // Dequant decodes and multiplies per row: MACs and lookups are
         // both conserved under row sharding.
@@ -126,9 +120,10 @@ fn prop_sharded_dequant_bit_exact_and_work_conserved() {
 fn prop_sharded_uniform_and_lut_bit_exact() {
     let pool = Arc::new(ThreadPool::new(4));
     let cfg = pt::PropConfig { cases: 12, ..Default::default() };
-    pt::assert_prop("sharded uniform/lut == serial", cfg, &gen_case(), |&(_, _, _, _, n, k, shards, mb, seed)| {
-        let w = Prng::seeded(seed).normal_vec(n * k, 0.05);
-        let x = Prng::seeded(seed ^ 4).normal_vec(k * mb, 1.0);
+    pt::assert_prop("sharded uniform/lut == serial", cfg, &gen_case(), |c: &pt::GemmCase| {
+        let (n, k, mb, shards) = (c.n, c.k, c.mb, c.shards);
+        let w = c.weights(0.05);
+        let x = c.activations(4);
         let plan = ShardPlan::new(n, shards, 1, 1);
 
         let uq = UniformLinear::quantize(&w, n, k, 4, 32).expect("uniform");

@@ -1,0 +1,261 @@
+//! Property suite for the build-once/gather-many shared-Psumbook path
+//! (via the reusable `util::proptest` engine generators):
+//!
+//! - shared-book sharded CodeGEMM is **bit-exact** (`==`) vs. the serial
+//!   engine across shard counts × v ∈ {4, 8} × b ∈ {1, 2, 4} ×
+//!   m_batch ∈ {1, 4, 64}, through a deliberately dirty, reused shared
+//!   scratch, and warm scratch never grows;
+//! - Psumbook build MACs and `read_ops` are counted exactly once per
+//!   logical call independent of the shard count, and the private-book
+//!   schedule's build cost is pinned at `shards ×` the shared one (the
+//!   K=1 vs K=4 regression ratio), so `build_share_ops` shrinks;
+//! - shards with mismatched k-tile geometry refuse the shared book and
+//!   fall back to correct private-table execution, while uniform shard
+//!   construction (the `EngineKind`/factory path) lines its k-tiles up.
+
+use codegemm::config::{KernelConfig, QuantConfig};
+use codegemm::gemm::{CodeGemmEngine, DenseEngine, EngineScratch, GemmEngine};
+use codegemm::parallel::{shard, ShardPlan, ShardedEngine};
+use codegemm::quant::{QuantizedLinear, Quantizer};
+use codegemm::util::proptest as pt;
+use codegemm::util::prng::Prng;
+use codegemm::util::stats;
+use codegemm::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+/// The shared-book sweep the issue pins: small codebooks stress the
+/// gather indexing, M=64 stresses the batched staging/scatter path.
+fn gen_case() -> pt::GemmCaseGen {
+    pt::GemmCaseGen {
+        vs: &[4, 8],
+        bs: &[1, 2, 4],
+        mbs: &[1, 4, 64],
+        max_shards: 6,
+        ..Default::default()
+    }
+}
+
+fn quantize(n: usize, k: usize, label: &str, seed: u64) -> QuantizedLinear {
+    let w = Prng::seeded(seed).normal_vec(n * k, 0.02);
+    Quantizer::new(QuantConfig::parse_label(label).unwrap()).quantize(&w, n, k)
+}
+
+/// Row-sharded CodeGEMM over `q`, one shard per plan range.
+fn sharded(
+    q: &QuantizedLinear,
+    plan: ShardPlan,
+    pool: Arc<ThreadPool>,
+    kernel: KernelConfig,
+    shared: bool,
+) -> ShardedEngine<CodeGemmEngine> {
+    let codes = q.codes.unpack();
+    ShardedEngine::from_factory(plan, pool, |(r0, r1)| {
+        CodeGemmEngine::with_kernel(&shard::slice_rows_unpacked(q, &codes, r0, r1), kernel)
+    })
+    .with_shared_book(shared)
+}
+
+fn total_footprint(s: &EngineScratch) -> usize {
+    s.footprint_bytes() + s.children.iter().map(|c| c.footprint_bytes()).sum::<usize>()
+}
+
+#[test]
+fn prop_shared_book_bit_exact_vs_serial_with_dirty_scratch() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let cfg = pt::PropConfig { cases: 12, ..Default::default() };
+    // One scratch across every case and both calls per case: the reuse
+    // path (book reshape-in-place, grow-only staging, counter children)
+    // must never leak state between geometries.
+    let cell = std::cell::RefCell::new(EngineScratch::new());
+    pt::assert_prop(
+        "shared-book sharded codegemm == serial",
+        cfg,
+        &gen_case(),
+        |c: &pt::GemmCase| {
+            let mut guard = cell.borrow_mut();
+            let scratch = &mut *guard;
+            let Some(q) = c.quantized(0.02) else {
+                return Ok(()); // invalid combination — vacuous
+            };
+            let x = c.activations(1);
+            let mut serial = CodeGemmEngine::from_quantized(&q);
+            let plan = ShardPlan::new(c.n, c.shards, 1, 1);
+            let eng = sharded(&q, plan, Arc::clone(&pool), KernelConfig::default(), true);
+            pt::ensure(
+                eng.uses_shared_book() == (c.shards > 1),
+                "uniform CodeGEMM shards must take the shared-book path",
+            )?;
+            let y_ref = serial.gemm(&x, c.mb);
+            let mut y = vec![f32::NAN; c.n * c.mb];
+            eng.gemm_into(&x, c.mb, &mut y, scratch);
+            pt::ensure(y == y_ref, format!("shared-book output diverged ({c:?})"))?;
+            // Warm scratch: a second identical call must not grow any
+            // buffer (zero-allocation steady state), and must still be
+            // bit-exact against the serial result.
+            let fp = total_footprint(scratch);
+            y.fill(f32::NAN);
+            eng.gemm_into(&x, c.mb, &mut y, scratch);
+            pt::ensure(y == y_ref, "warm shared-book call diverged")?;
+            pt::ensure(
+                total_footprint(scratch) == fp,
+                format!("warm scratch grew: {} -> {}", fp, total_footprint(scratch)),
+            )
+        },
+    );
+}
+
+#[test]
+fn build_macs_and_read_ops_counted_once_per_call_for_any_shard_count() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let q = quantize(64, 128, "m2v8g32", 1);
+    for mb in [1usize, 2] {
+        let x = Prng::seeded(2).normal_vec(128 * mb, 1.0);
+        // Default tile_h covers all 64 rows, so the serial engine also
+        // builds exactly once per k-tile — the shared schedule must match
+        // it at every shard count.
+        let mut serial = CodeGemmEngine::from_quantized(&q);
+        let _ = serial.gemm(&x, mb);
+        let want = serial.counters().clone();
+        for shards in [1usize, 2, 4, 8] {
+            let eng = sharded(
+                &q,
+                ShardPlan::new(64, shards, 1, 1),
+                Arc::clone(&pool),
+                KernelConfig::default(),
+                true,
+            );
+            let mut scratch = EngineScratch::new();
+            let mut y = vec![0f32; 64 * mb];
+            eng.gemm_into(&x, mb, &mut y, &mut scratch);
+            let got = &scratch.counters;
+            assert_eq!(got.build_ops, want.build_ops, "build MACs (K={shards}, mb={mb})");
+            assert_eq!(got.read_ops, want.read_ops, "read ops (K={shards}, mb={mb})");
+            assert_eq!(got.lookups, want.lookups, "lookups (K={shards}, mb={mb})");
+            assert_eq!(got.calls, 1, "one logical call (K={shards})");
+        }
+    }
+}
+
+/// Regression pin for the amortization ratio: with K row shards, private
+/// per-shard books cost exactly K× the shared book's build MACs (each
+/// shard's row extent fits one row-block here), so `build_share_ops`
+/// shrinks under the shared schedule while gather work is conserved.
+#[test]
+fn private_vs_shared_build_ratio_pinned_at_shard_count() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let q = quantize(64, 128, "m1v4g32", 3);
+    let x = Prng::seeded(4).normal_vec(128, 1.0);
+    let mut serial = CodeGemmEngine::from_quantized(&q);
+    let _ = serial.gemv(&x);
+    let run = |shards: usize, shared: bool| {
+        let eng = sharded(
+            &q,
+            ShardPlan::new(64, shards, 1, 1),
+            Arc::clone(&pool),
+            KernelConfig::default(),
+            shared,
+        );
+        let mut scratch = EngineScratch::new();
+        let mut y = vec![0f32; 64];
+        eng.gemm_into(&x, 1, &mut y, &mut scratch);
+        scratch.counters
+    };
+    let shared_k4 = run(4, true);
+    let private_k4 = run(4, false);
+    let shared_k1 = run(1, true);
+    // K=1 vs K=4: the shared schedule's build cost is shard-invariant...
+    assert_eq!(shared_k4.build_ops, shared_k1.build_ops);
+    assert_eq!(shared_k4.build_ops, serial.counters().build_ops);
+    // ...while private books pay once per shard (the pinned K× ratio).
+    assert_eq!(private_k4.build_ops, 4 * shared_k4.build_ops);
+    // Gather work is per-row and conserved either way.
+    assert_eq!(private_k4.read_ops, shared_k4.read_ops);
+    assert_eq!(shared_k4.read_ops, serial.counters().read_ops);
+    // Net effect: the build share the traffic model reports shrinks.
+    assert!(
+        shared_k4.build_share_ops() < private_k4.build_share_ops(),
+        "shared {} !< private {}",
+        shared_k4.build_share_ops(),
+        private_k4.build_share_ops()
+    );
+}
+
+/// Dirty cross-schedule scratch reuse: the same caller scratch must
+/// serve private-book, shared-book and plain dense sharded calls in
+/// sequence without state leaking between them.
+#[test]
+fn shared_and_private_schedules_share_one_dirty_scratch() {
+    let pool = Arc::new(ThreadPool::new(3));
+    let q = quantize(48, 64, "m2v4g32", 5);
+    let x = Prng::seeded(6).normal_vec(64 * 3, 1.0);
+    let mut serial = CodeGemmEngine::from_quantized(&q);
+    let y_ref = serial.gemm(&x, 3);
+    let plan = ShardPlan::new(48, 3, 1, 1);
+    let mut scratch = EngineScratch::new();
+
+    let private = sharded(&q, plan.clone(), Arc::clone(&pool), KernelConfig::default(), false);
+    let mut y = vec![f32::NAN; 48 * 3];
+    private.gemm_into(&x, 3, &mut y, &mut scratch);
+    assert_eq!(y, y_ref);
+
+    let shared = sharded(&q, plan.clone(), Arc::clone(&pool), KernelConfig::default(), true);
+    y.fill(f32::NAN);
+    shared.gemm_into(&x, 3, &mut y, &mut scratch);
+    assert_eq!(y, y_ref);
+
+    // A different engine family through the same scratch still works.
+    let w = Prng::seeded(7).normal_vec(48 * 64, 1.0);
+    let dense = ShardedEngine::from_factory(plan, Arc::clone(&pool), |(r0, r1)| {
+        DenseEngine::new(shard::dense_rows(&w, 64, r0, r1), r1 - r0, 64)
+    });
+    let mut yd = vec![f32::NAN; 48 * 3];
+    dense.gemm_into(&x, 3, &mut yd, &mut scratch);
+    assert_eq!(yd, DenseEngine::new(w.clone(), 48, 64).gemm(&x, 3));
+    assert_eq!(scratch.counters.calls, 3);
+}
+
+/// The previously-misaligned case: shards whose aligned tile widths
+/// disagree cannot line their k-tiles up with one shared book. The
+/// engine must detect this at construction and fall back to the private
+/// schedule — still correct, just unamortized — while the uniform
+/// factory-style construction (same kernel for every shard, aligned via
+/// `KernelConfig::align_tile_w`) takes the shared path.
+#[test]
+fn mismatched_tile_geometry_refuses_shared_book_but_stays_correct() {
+    let pool = Arc::new(ThreadPool::new(2));
+    let q = quantize(32, 128, "m1v8g32", 7);
+    let codes = q.codes.unpack();
+    let plan = ShardPlan::new(32, 2, 1, 1);
+    let shards: Vec<CodeGemmEngine> = plan
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(i, &(r0, r1))| {
+            let kernel = KernelConfig { tile_w: if i == 0 { 32 } else { 16 }, tile_h: 8 };
+            CodeGemmEngine::with_kernel(&shard::slice_rows_unpacked(&q, &codes, r0, r1), kernel)
+        })
+        .collect();
+    let eng = ShardedEngine::new(plan.clone(), shards, Arc::clone(&pool));
+    assert!(!eng.uses_shared_book(), "mismatched tile_w must refuse the shared book");
+    let x = Prng::seeded(8).normal_vec(128, 1.0);
+    let mut y = vec![f32::NAN; 32];
+    let mut scratch = EngineScratch::new();
+    eng.gemm_into(&x, 1, &mut y, &mut scratch);
+    // Different per-shard tile widths reassociate each row's k-sum, so
+    // compare against the exact dequantized reference, not bit-equality.
+    let y_ref = DenseEngine::new(q.dequantize(), 32, 128).gemv(&x);
+    let rel = stats::rel_l2(&y, &y_ref);
+    assert!(rel < 2e-5, "private fallback diverged: rel {rel}");
+
+    // Same layer, same *requested* (misaligned) tile_w=20 for every
+    // shard: align_tile_w rounds each to 16, the k-tiles line up, and
+    // the shared path engages.
+    let kernel = KernelConfig { tile_w: 20, tile_h: 8 };
+    let uniform = sharded(&q, plan, Arc::clone(&pool), kernel, true);
+    assert!(uniform.shards().iter().all(|e| e.kernel_config().tile_w == 16));
+    assert!(uniform.uses_shared_book(), "aligned uniform shards must share");
+    let mut serial = CodeGemmEngine::with_kernel(&q, kernel);
+    let mut y2 = vec![f32::NAN; 32];
+    uniform.gemm_into(&x, 1, &mut y2, &mut scratch);
+    assert_eq!(y2, serial.gemv(&x));
+}
