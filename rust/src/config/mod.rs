@@ -4,7 +4,7 @@
 
 pub mod serve;
 
-pub use serve::ServeConfig;
+pub use serve::{KvConfig, ServeConfig};
 
 use crate::util::json::Json;
 use anyhow::{bail, Result};

@@ -2,7 +2,64 @@
 
 use super::ParallelConfig;
 use crate::util::json::Json;
-use anyhow::Result;
+use anyhow::{bail, Result};
+
+/// Paged KV-cache settings for the native backend (`kv` section): the
+/// page granularity of `kvcache::BlockPool` and the pool's total size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvConfig {
+    /// Tokens per pool page — also the chunked attention kernel's tile
+    /// height. Smaller pages waste less tail memory per sequence but make
+    /// the page table (and the attention tile loop) proportionally longer.
+    pub page_size: usize,
+    /// Total pool pages shared by every slot. `0` (the default) sizes the
+    /// pool to `slots × ceil(max_seq / page_size)` — the same capacity the
+    /// per-slot contiguous caches would hold, so default configs change
+    /// layout, not memory bounds. Set it lower to oversubscribe: the
+    /// batcher then admits on free pages instead of free slots.
+    pub pool_pages: usize,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        KvConfig { page_size: 16, pool_pages: 0 }
+    }
+}
+
+impl KvConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.page_size == 0 {
+            bail!("kv page_size must be positive");
+        }
+        Ok(())
+    }
+
+    /// Resolved pool size for `slots` serving slots of `max_seq` context.
+    pub fn pool_pages_for(&self, max_seq: usize, slots: usize) -> usize {
+        if self.pool_pages > 0 {
+            self.pool_pages
+        } else {
+            slots.max(1) * max_seq.div_ceil(self.page_size)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("page_size", Json::from(self.page_size)),
+            ("pool_pages", Json::from(self.pool_pages)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<KvConfig> {
+        let d = KvConfig::default();
+        let cfg = KvConfig {
+            page_size: j.opt_usize("page_size", d.page_size)?,
+            pool_pages: j.opt_usize("pool_pages", d.pool_pages)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
 
 /// Options for the request coordinator (router + batcher + scheduler).
 #[derive(Clone, Debug, PartialEq)]
@@ -21,9 +78,16 @@ pub struct ServeConfig {
     pub queue_capacity: usize,
     /// Worker threads executing model steps.
     pub workers: usize,
+    /// **Shared** per-step prefill token budget across all prefilling
+    /// slots (not per slot), so decode stall per step is bounded no matter
+    /// how many prompts are in flight. Prompts longer than the budget
+    /// resume on subsequent steps (round-robin across slots).
+    pub prefill_budget: usize,
     /// Sharded-execution settings for the native backend (`parallel`
     /// section; serial by default so existing configs are unchanged).
     pub parallel: ParallelConfig,
+    /// Paged KV-pool settings for the native backend (`kv` section).
+    pub kv: KvConfig,
 }
 
 impl Default for ServeConfig {
@@ -35,7 +99,9 @@ impl Default for ServeConfig {
             temperature: 0.0,
             queue_capacity: 256,
             workers: 1,
+            prefill_budget: 128,
             parallel: ParallelConfig::serial(),
+            kv: KvConfig::default(),
         }
     }
 }
@@ -49,11 +115,14 @@ impl ServeConfig {
             ("temperature", Json::Num(self.temperature as f64)),
             ("queue_capacity", Json::from(self.queue_capacity)),
             ("workers", Json::from(self.workers)),
+            ("prefill_budget", Json::from(self.prefill_budget)),
             ("parallel", self.parallel.to_json()),
+            ("kv", self.kv.to_json()),
         ])
     }
 
     pub fn from_json(j: &Json) -> Result<ServeConfig> {
+        let d = ServeConfig::default();
         Ok(ServeConfig {
             max_batch: j.req_usize("max_batch")?,
             batch_window_us: j.req_usize("batch_window_us")? as u64,
@@ -61,10 +130,18 @@ impl ServeConfig {
             temperature: j.req_f64("temperature")? as f32,
             queue_capacity: j.req_usize("queue_capacity")?,
             workers: j.req_usize("workers")?,
+            // Optional field: absent ⇒ default (older configs unchanged).
+            prefill_budget: j.opt_usize("prefill_budget", d.prefill_budget)?,
             // Optional section: absent ⇒ serial (older configs unchanged).
             parallel: match j.get("parallel") {
                 Some(p) => ParallelConfig::from_json(p)?,
                 None => ParallelConfig::serial(),
+            },
+            // Optional section: absent ⇒ default paging (older configs
+            // unchanged — the auto pool matches contiguous capacity).
+            kv: match j.get("kv") {
+                Some(k) => KvConfig::from_json(k)?,
+                None => KvConfig::default(),
             },
         })
     }
@@ -107,5 +184,44 @@ mod tests {
         }
         let parsed = ServeConfig::from_json(&j).unwrap();
         assert!(parsed.parallel.is_serial());
+    }
+
+    #[test]
+    fn kv_config_roundtrip_and_validation() {
+        let kv = KvConfig { page_size: 32, pool_pages: 100 };
+        kv.validate().unwrap();
+        let j = Json::parse(&kv.to_json().to_string_pretty()).unwrap();
+        assert_eq!(KvConfig::from_json(&j).unwrap(), kv);
+        // Missing fields fall back to defaults.
+        let j = Json::parse(r#"{"page_size": 8}"#).unwrap();
+        let c = KvConfig::from_json(&j).unwrap();
+        assert_eq!(c.page_size, 8);
+        assert_eq!(c.pool_pages, 0);
+        // page_size 0 is rejected.
+        let bad = Json::parse(r#"{"page_size": 0}"#).unwrap();
+        assert!(KvConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn kv_pool_auto_sizing() {
+        let kv = KvConfig { page_size: 16, pool_pages: 0 };
+        // 4 slots × ceil(130/16) = 4 × 9.
+        assert_eq!(kv.pool_pages_for(130, 4), 36);
+        // Explicit pool size wins.
+        let kv = KvConfig { page_size: 16, pool_pages: 7 };
+        assert_eq!(kv.pool_pages_for(130, 4), 7);
+    }
+
+    #[test]
+    fn missing_kv_and_budget_fields_default() {
+        let c = ServeConfig::default();
+        let mut j = c.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("kv");
+            map.remove("prefill_budget");
+        }
+        let parsed = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(parsed.kv, KvConfig::default());
+        assert_eq!(parsed.prefill_budget, ServeConfig::default().prefill_budget);
     }
 }

@@ -1,16 +1,24 @@
 //! Decode backends the coordinator can drive.
 //!
 //! - [`NativeBackend`] — the pure-Rust `LlamaModel` (any `EngineKind`),
-//!   always available; used for tests and CPU-reference serving.
+//!   always available; used for tests and CPU-reference serving. Its KV
+//!   state lives in one shared [`BlockPool`] page arena: every slot holds
+//!   a page table ([`SeqKv`]) that grows lazily during prefill/decode and
+//!   is reclaimed in full on [`DecodeBackend::reset_slot`], so pool pages
+//!   — not `slots × max_seq` — bound KV memory. The backend reports
+//!   occupancy through [`DecodeBackend::kv_stats`] and gates admission
+//!   through [`DecodeBackend::can_admit`].
 //! - [`PjrtBackend`] — the AOT path: `artifacts/*.hlo.txt` compiled on the
-//!   PJRT CPU client (`crate::runtime`), the production configuration.
+//!   PJRT CPU client (`crate::runtime`), the production configuration
+//!   (device-resident KV literals; no pool).
 //!
 //! Both expose slot-indexed single-token stepping; the batcher composes
-//! continuous batches out of per-slot steps (token-level prefill, as in
-//! Orca-style iteration-level scheduling).
+//! continuous batches out of per-slot steps (batched chunked prefill
+//! under a shared token budget + one decode token per decoding slot).
 
-use crate::config::ParallelConfig;
-use crate::model::{EngineKind, KvCache, LlamaModel, ModelWeights};
+use crate::config::{KvConfig, ParallelConfig};
+use crate::kvcache::{BlockPool, KvStats, PagedKv, SeqKv};
+use crate::model::{EngineKind, LlamaModel, ModelWeights};
 use crate::runtime::ModelRuntime;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Result};
@@ -33,11 +41,20 @@ pub trait DecodeBackend: Send {
     /// vector (len `vocab`) per entry of `steps`, in order.
     fn step(&mut self, steps: &[SlotStep]) -> Result<Vec<Vec<f32>>>;
     /// Prefill `tokens` (occupying positions `pos .. pos + tokens.len()`)
-    /// into `slot`, returning the logits after the final token. The
-    /// default steps token-by-token; backends with a batched forward
-    /// (`NativeBackend` → `LlamaModel::forward_batch`) override it so the
-    /// whole prompt runs as true `m_batch = tokens.len()` GEMMs.
-    fn prefill(&mut self, slot: usize, tokens: &[usize], pos: usize) -> Result<Vec<f32>> {
+    /// into `slot`. When `want_logits` is true, returns the logits after
+    /// the final token; when false (this chunk is not the end of the
+    /// prompt, so the scheduler would discard them) the backend may skip
+    /// the lm_head GEMM entirely and return `None`. The default steps
+    /// token-by-token; backends with a batched forward (`NativeBackend` →
+    /// `LlamaModel::forward_batch_logits`) override it so the whole chunk
+    /// runs as true `m_batch = tokens.len()` GEMMs.
+    fn prefill(
+        &mut self,
+        slot: usize,
+        tokens: &[usize],
+        pos: usize,
+        want_logits: bool,
+    ) -> Result<Option<Vec<f32>>> {
         if tokens.is_empty() {
             bail!("prefill needs at least one token");
         }
@@ -48,24 +65,74 @@ pub trait DecodeBackend: Send {
                 .pop()
                 .expect("one logits vector per step");
         }
-        Ok(last)
+        Ok(if want_logits { Some(last) } else { None })
     }
     /// Recycle a slot for a new sequence.
     fn reset_slot(&mut self, slot: usize);
+    /// Can a request whose sequence may occupy up to `max_tokens`
+    /// positions (prompt + generation budget, clamped to the context
+    /// window by pool-backed backends) be admitted right now? Pool-backed
+    /// backends check free pages against that *whole-lifetime* bound, so
+    /// an admitted sequence can never exhaust the pool mid-decode;
+    /// backends without a pool always accept — slot availability is then
+    /// the only bound.
+    fn can_admit(&self, max_tokens: usize) -> bool {
+        let _ = max_tokens;
+        true
+    }
+    /// Could a request of `max_tokens` lifetime positions fit an *empty*
+    /// pool? `false` means it can never be admitted (its page demand
+    /// exceeds the whole pool) and must be rejected rather than deferred
+    /// forever. Backends without a pool always say yes.
+    fn can_ever_admit(&self, max_tokens: usize) -> bool {
+        let _ = max_tokens;
+        true
+    }
+    /// Reserve KV capacity for a freshly admitted request in `slot`
+    /// (called right after [`Self::reset_slot`] at admission, with the
+    /// same `max_tokens` bound given to [`Self::can_admit`]). Pool-backed
+    /// backends pre-claim the sequence's whole-lifetime pages so that
+    /// (a) further `can_admit` checks *within the same scheduler step*
+    /// see the reduced free count — without this, several admissions
+    /// could jointly pass the gate — and (b) decode growth never touches
+    /// an exhausted free list. No-op default for backends without a pool.
+    fn reserve(&mut self, slot: usize, max_tokens: usize) {
+        let _ = (slot, max_tokens);
+    }
+    /// KV-pool occupancy snapshot (`None` for backends without a pool).
+    fn kv_stats(&self) -> Option<KvStats> {
+        None
+    }
     fn label(&self) -> String;
 }
 
-/// Pure-Rust backend: one `LlamaModel` + per-slot KV caches.
+/// Pure-Rust backend: one `LlamaModel`, one shared KV page pool, one
+/// page table per slot.
 pub struct NativeBackend {
     model: LlamaModel,
-    caches: Vec<KvCache>,
+    kv_pool: BlockPool,
+    seqs: Vec<SeqKv>,
 }
 
 impl NativeBackend {
+    /// Default paging: page size from `KvConfig::default()`, pool sized
+    /// to the same total capacity `max_batch` contiguous caches would
+    /// hold (so the default changes layout, not memory bounds).
     pub fn new(weights: &ModelWeights, kind: EngineKind, max_batch: usize) -> NativeBackend {
+        NativeBackend::with_kv(weights, kind, max_batch, &KvConfig::default())
+    }
+
+    /// Explicit paged-KV configuration (page size + pool pages — the
+    /// serving-capacity knob: a pool smaller than `max_batch × max_seq`
+    /// oversubscribes slots and lets the batcher admit on free pages).
+    pub fn with_kv(
+        weights: &ModelWeights,
+        kind: EngineKind,
+        max_batch: usize,
+        kv: &KvConfig,
+    ) -> NativeBackend {
         let model = LlamaModel::load(weights, kind, None);
-        let caches = (0..max_batch).map(|_| model.new_cache()).collect();
-        NativeBackend { model, caches }
+        NativeBackend::assemble(model, max_batch, kv)
     }
 
     /// Sharded-model backend: every linear of every step fans out across
@@ -79,18 +146,53 @@ impl NativeBackend {
         par: &ParallelConfig,
         pool: Arc<ThreadPool>,
     ) -> NativeBackend {
+        NativeBackend::new_parallel_kv(weights, kind, max_batch, par, pool, &KvConfig::default())
+    }
+
+    /// Sharded model + explicit paged-KV configuration.
+    pub fn new_parallel_kv(
+        weights: &ModelWeights,
+        kind: EngineKind,
+        max_batch: usize,
+        par: &ParallelConfig,
+        pool: Arc<ThreadPool>,
+        kv: &KvConfig,
+    ) -> NativeBackend {
         if par.is_serial() {
-            return NativeBackend::new(weights, kind, max_batch);
+            return NativeBackend::with_kv(weights, kind, max_batch, kv);
         }
         let model = LlamaModel::load_parallel(weights, kind, None, par, pool);
-        let caches = (0..max_batch).map(|_| model.new_cache()).collect();
-        NativeBackend { model, caches }
+        NativeBackend::assemble(model, max_batch, kv)
+    }
+
+    fn assemble(model: LlamaModel, max_batch: usize, kv: &KvConfig) -> NativeBackend {
+        let kv_pool = BlockPool::for_model(&model.cfg, kv, max_batch);
+        // Page tables pre-reserve their worst case so the decode hot loop
+        // never reallocates them.
+        let max_pages = kv_pool.layout().max_pages_per_seq();
+        let seqs = (0..max_batch).map(|_| SeqKv::with_capacity(max_pages)).collect();
+        NativeBackend { model, kv_pool, seqs }
+    }
+
+    /// The shared page pool (tests and capacity planning).
+    pub fn pool(&self) -> &BlockPool {
+        &self.kv_pool
+    }
+
+    /// Pages a new request needs at admission: enough for its whole
+    /// lifetime (`prompt + max_new` positions, clamped to the context
+    /// window, which also caps the claim at one sequence's maximum).
+    /// Claiming the full bound up front is what makes mid-decode pool
+    /// exhaustion impossible for admitted sequences.
+    fn admit_pages(&self, max_tokens: usize) -> usize {
+        let l = self.kv_pool.layout();
+        l.pages_for(max_tokens.min(l.max_seq))
     }
 }
 
 impl DecodeBackend for NativeBackend {
     fn max_batch(&self) -> usize {
-        self.caches.len()
+        self.seqs.len()
     }
 
     fn max_seq(&self) -> usize {
@@ -104,30 +206,64 @@ impl DecodeBackend for NativeBackend {
     fn step(&mut self, steps: &[SlotStep]) -> Result<Vec<Vec<f32>>> {
         let mut out = Vec::with_capacity(steps.len());
         for s in steps {
-            if s.slot >= self.caches.len() {
+            if s.slot >= self.seqs.len() {
                 bail!("slot {} out of range", s.slot);
             }
-            let logits = self.model.forward(s.token, s.pos, &mut self.caches[s.slot]);
+            let mut logits = vec![0f32; self.model.cfg.vocab];
+            let mut kv = PagedKv::bind(&mut self.kv_pool, &mut self.seqs[s.slot]);
+            self.model.forward_into(s.token, s.pos, &mut kv, &mut logits);
             out.push(logits);
         }
         Ok(out)
     }
 
-    /// Whole-prompt prefill through `LlamaModel::forward_batch`: one
-    /// batched GEMM pass per layer instead of `tokens.len()` GEMV passes,
-    /// so the Psumbook build amortizes across the prompt (paper Eq. 3).
-    fn prefill(&mut self, slot: usize, tokens: &[usize], pos: usize) -> Result<Vec<f32>> {
-        if slot >= self.caches.len() {
+    /// Whole-chunk prefill through `LlamaModel::forward_batch_logits`:
+    /// one batched GEMM pass per layer instead of `tokens.len()` GEMV
+    /// passes, so the Psumbook build amortizes across the prompt (paper
+    /// Eq. 3); the lm_head GEMM runs only when `want_logits`.
+    fn prefill(
+        &mut self,
+        slot: usize,
+        tokens: &[usize],
+        pos: usize,
+        want_logits: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        if slot >= self.seqs.len() {
             bail!("slot {slot} out of range");
         }
         if tokens.is_empty() {
             bail!("prefill needs at least one token");
         }
-        Ok(self.model.forward_batch(tokens, pos, &mut self.caches[slot]))
+        let mut kv = PagedKv::bind(&mut self.kv_pool, &mut self.seqs[slot]);
+        Ok(self.model.forward_batch_logits(tokens, pos, &mut kv, want_logits))
     }
 
     fn reset_slot(&mut self, slot: usize) {
-        self.caches[slot].clear();
+        // Full reclamation: every page goes back to the free list.
+        self.seqs[slot].release(&mut self.kv_pool);
+    }
+
+    fn can_admit(&self, max_tokens: usize) -> bool {
+        self.kv_pool.free_pages() >= self.admit_pages(max_tokens)
+    }
+
+    fn can_ever_admit(&self, max_tokens: usize) -> bool {
+        self.kv_pool.total_pages() >= self.admit_pages(max_tokens)
+    }
+
+    fn reserve(&mut self, slot: usize, max_tokens: usize) {
+        let need = self.admit_pages(max_tokens);
+        let ok = self.seqs[slot].claim(&mut self.kv_pool, need);
+        debug_assert!(ok, "reserve after can_admit cannot fail");
+    }
+
+    fn kv_stats(&self) -> Option<KvStats> {
+        let layout = self.kv_pool.layout();
+        Some(KvStats {
+            pool: self.kv_pool.stats(),
+            slot_bytes: self.seqs.iter().map(|s| s.n_pages() * layout.page_bytes()).collect(),
+            slot_bytes_used: self.seqs.iter().map(|s| layout.bytes_for(s.len())).collect(),
+        })
     }
 
     fn label(&self) -> String {
@@ -257,7 +393,7 @@ mod tests {
         let w = ModelWeights::random(ModelConfig::tiny(), 13);
         let prompt = [3usize, 7, 11, 19];
         let mut a = NativeBackend::new(&w, EngineKind::Dense, 1);
-        let la = a.prefill(0, &prompt, 0).unwrap();
+        let la = a.prefill(0, &prompt, 0, true).unwrap().expect("logits wanted");
         let mut b = NativeBackend::new(&w, EngineKind::Dense, 1);
         let mut lb = Vec::new();
         for (i, &t) in prompt.iter().enumerate() {
@@ -268,6 +404,61 @@ mod tests {
         let da = a.step(&[SlotStep { slot: 0, token: 42, pos: 4 }]).unwrap();
         let db = b.step(&[SlotStep { slot: 0, token: 42, pos: 4 }]).unwrap();
         assert!(stats::rel_l2(&da[0], &db[0]) < 1e-6);
+    }
+
+    #[test]
+    fn prefill_without_logits_skips_them_but_fills_the_cache() {
+        let w = ModelWeights::random(ModelConfig::tiny(), 13);
+        let prompt = [3usize, 7, 11, 19];
+        // Split prefill: first chunk wants no logits, second does.
+        let mut a = NativeBackend::new(&w, EngineKind::Dense, 1);
+        assert!(a.prefill(0, &prompt[..2], 0, false).unwrap().is_none());
+        let la = a.prefill(0, &prompt[2..], 2, true).unwrap().unwrap();
+        // Whole-prompt prefill for reference.
+        let mut b = NativeBackend::new(&w, EngineKind::Dense, 1);
+        let lb = b.prefill(0, &prompt, 0, true).unwrap().unwrap();
+        assert!(stats::rel_l2(&la, &lb) < 1e-6);
+    }
+
+    #[test]
+    fn pool_bounds_kv_bytes_not_slot_count() {
+        use crate::config::KvConfig;
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::random(cfg.clone(), 13);
+        // 8 slots over a pool of 8 pages of 16 tokens: total KV capacity
+        // is 128 tokens — far below 8 × max_seq.
+        let kv = KvConfig { page_size: 16, pool_pages: 8 };
+        let mut b = NativeBackend::with_kv(&w, EngineKind::Dense, 8, &kv);
+        // 4 short sequences: one page each.
+        for slot in 0..4 {
+            b.prefill(slot, &[1, 2, 3], 0, true).unwrap();
+        }
+        let stats = b.kv_stats().unwrap();
+        assert_eq!(stats.pool.used_pages, 4);
+        assert_eq!(stats.held_bytes(), 4 * stats.pool.page_bytes);
+        let contiguous = 2 * cfg.n_layers * cfg.max_seq * cfg.kv_dim() * 4;
+        assert!(stats.held_bytes() < 8 * contiguous, "paged must undercut N × max_seq");
+        // Per-slot gauges: held >= used, empty slots hold nothing.
+        for slot in 0..4 {
+            assert!(stats.slot_bytes[slot] >= stats.slot_bytes_used[slot]);
+            assert_eq!(stats.slot_bytes_used[slot], 2 * cfg.n_layers * 3 * cfg.kv_dim() * 4);
+        }
+        assert_eq!(stats.slot_bytes[7], 0);
+        // Admission gate over whole-lifetime footprints: 4 pages free ⇒
+        // a 3-token lifetime (1 page) fits, a 65-token one (5 pages)
+        // does not — and a 200-token lifetime exceeds the whole 8-page
+        // pool, so it can never be admitted.
+        assert!(b.can_admit(3));
+        assert!(!b.can_admit(65));
+        // …but 65 tokens would fit an empty pool (5 of 8 pages).
+        assert!(b.can_ever_admit(65));
+        // Reclamation frees the gate again.
+        for slot in 0..4 {
+            b.reset_slot(slot);
+        }
+        let stats = b.kv_stats().unwrap();
+        assert_eq!(stats.pool.free_pages, stats.pool.total_pages);
+        assert!(b.can_admit(65));
     }
 
     #[test]

@@ -1,21 +1,31 @@
 //! Continuous (iteration-level) dynamic batcher.
 //!
 //! Orca/vLLM-style scheduling over a two-phase step: prefilling
-//! sequences consume their prompt in **batched chunks of up to
-//! `MAX_PREFILL_CHUNK` tokens per step** (`DecodeBackend::prefill` →
-//! `forward_batch`, true `m_batch = chunk_len` GEMMs, where the Psumbook
-//! build amortizes — while the chunk cap bounds how long a long prompt
-//! can stall decoding slots), then all decoding sequences advance one
-//! token per step — so new requests join the batch *between* steps
-//! without draining it ("continuous batching"). `coordinator::metrics`
-//! reports prefill and decode **token** counts separately, making the
-//! prefill/decode split of a serving window directly observable.
+//! sequences consume their prompts in batched chunks under a **shared
+//! per-step prefill token budget** (`ServeConfig::prefill_budget`,
+//! spread round-robin across prefilling slots — so decode stall per step
+//! is bounded regardless of how many prompts are in flight, the
+//! per-slot-cap gap the roadmap called out), then all decoding sequences
+//! advance one token per step — so new requests join the batch *between*
+//! steps without draining it ("continuous batching"). Chunks run through
+//! `DecodeBackend::prefill` → `forward_batch_logits` as true `m_batch =
+//! chunk_len` GEMMs (Psumbook build amortized), and non-final chunks pass
+//! `want_logits = false` so the lm_head GEMM whose logits would be
+//! discarded is skipped.
+//!
+//! Admission is gated twice: a bounded queue (reject) and, for
+//! pool-backed backends, KV pages (`DecodeBackend::can_admit` — the head
+//! request waits until the prompt's pages plus one growth page are free,
+//! counted as a *deferral* in metrics, FIFO preserved). Completion
+//! reclaims the sequence's pages, unblocking the queue.
+//! `coordinator::metrics` reports prefill/decode token counts and the
+//! pool occupancy snapshot per step.
 
 use super::backend::{DecodeBackend, SlotStep};
 use super::metrics::Metrics;
 use super::request::{FinishReason, InFlight, Request, Response};
 use crate::config::ServeConfig;
-use crate::model::{Sampler, MAX_PREFILL_CHUNK};
+use crate::model::Sampler;
 use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
@@ -35,6 +45,10 @@ pub struct Batcher {
     sampler: Sampler,
     pub metrics: Arc<Metrics>,
     finished: Vec<Response>,
+    /// Rotating start slot for the prefill budget scan, so a tight budget
+    /// round-robins across prefilling slots instead of starving the
+    /// highest-numbered ones.
+    prefill_rr: usize,
 }
 
 impl Batcher {
@@ -48,6 +62,7 @@ impl Batcher {
             queue: VecDeque::new(),
             metrics,
             finished: Vec::new(),
+            prefill_rr: 0,
         }
     }
 
@@ -74,57 +89,125 @@ impl Batcher {
         self.occupied() == 0 && self.queue.is_empty()
     }
 
-    /// Move queued requests into free slots (the router step).
+    /// A request's worst-case KV footprint in positions: the whole
+    /// prompt plus its generation budget (backends clamp to the context
+    /// window). Admission gates and reservations both use this bound, so
+    /// an admitted sequence can never exhaust the pool mid-decode.
+    fn lifetime_tokens(req: &Request) -> usize {
+        req.prompt.len().saturating_add(req.max_new_tokens)
+    }
+
+    /// Move queued requests into free slots (the router step). FIFO: the
+    /// head request must fit the backend's KV pool
+    /// ([`DecodeBackend::can_admit`] over its whole-lifetime footprint)
+    /// or admission stops for this step — a deferral, counted in
+    /// metrics; later completions reclaim pages and unblock it. A head
+    /// request that could never fit even an *empty* pool is rejected
+    /// with [`FinishReason::Rejected`] instead of deferring forever.
     fn admit(&mut self) {
+        let mut deferred = false;
         for i in 0..self.slots.len() {
-            if self.queue.is_empty() {
+            // Drop queue heads that no amount of reclamation could ever
+            // admit (footprint > whole pool) — deferring them would
+            // livelock the queue behind an unsatisfiable request.
+            while let Some(req) = self.queue.front() {
+                if self.backend.can_ever_admit(Self::lifetime_tokens(req)) {
+                    break;
+                }
+                let req = self.queue.pop_front().unwrap();
+                self.metrics.on_infeasible();
+                self.finished.push(Response {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    finish: FinishReason::Rejected,
+                    ttft_s: 0.0,
+                    latency_s: 0.0,
+                    tok_per_s: 0.0,
+                });
+            }
+            let need_tokens = match self.queue.front() {
+                Some(req) => Self::lifetime_tokens(req),
+                None => break,
+            };
+            if !matches!(self.slots[i], Slot::Free) {
+                continue;
+            }
+            if !self.backend.can_admit(need_tokens) {
+                deferred = true;
                 break;
             }
-            if matches!(self.slots[i], Slot::Free) {
-                let req = self.queue.pop_front().unwrap();
-                self.backend.reset_slot(i);
-                self.slots[i] = Slot::Busy(InFlight::new(req));
-            }
+            let req = self.queue.pop_front().unwrap();
+            self.backend.reset_slot(i);
+            // Pre-claim the sequence's whole-lifetime pages so the next
+            // iteration's `can_admit` sees the reduced free count and
+            // decode growth never races the free list.
+            self.backend.reserve(i, need_tokens);
+            self.slots[i] = Slot::Busy(InFlight::new(req));
+        }
+        if deferred {
+            self.metrics.on_admit_defer();
         }
     }
 
-    /// Run one engine step: batched prefill for every prefilling slot
-    /// (up to one `MAX_PREFILL_CHUNK`-token chunk per slot per step, so a
-    /// long prompt cannot stall decoding slots for more than one chunk —
-    /// bounded head-of-line blocking), then one decode token for every
-    /// decoding slot. Returns the number of slots advanced (0 ⇒ idle).
+    /// Run one engine step: batched prefill across prefilling slots under
+    /// the shared `prefill_budget` token cap (decode stall per step is
+    /// bounded by the budget, not by the number of prefilling slots),
+    /// then one decode token for every decoding slot. Returns the number
+    /// of slots advanced (0 ⇒ idle).
     pub fn step(&mut self) -> usize {
         self.admit();
         let max_seq = self.backend.max_seq();
         let t0 = Instant::now();
         let mut advanced = 0usize;
         let mut prefill_tokens = 0usize;
-        let mut just_prefilled = vec![false; self.slots.len()];
+        let n = self.slots.len();
+        let mut just_prefilled = vec![false; n];
 
-        // Phase 1: batched prefill. Each prefilling slot consumes up to
-        // one engine-batch-sized prompt chunk per step (a partially
-        // prefilled slot simply resumes next step); the final position's
+        // Phase 1: batched prefill under the shared per-step token
+        // budget, scanned round-robin from a rotating start slot. A
+        // partially prefilled slot (or one skipped when the budget ran
+        // out) simply resumes on a later step; the final position's
         // logits seed the first sampled token.
-        for i in 0..self.slots.len() {
-            let (feed, pos) = match &self.slots[i] {
+        let mut budget = self.cfg.prefill_budget.max(1);
+        let start = if n > 0 { self.prefill_rr % n } else { 0 };
+        for off in 0..n {
+            if budget == 0 {
+                break;
+            }
+            let i = (start + off) % n;
+            let (feed, pos, finishes_prompt) = match &self.slots[i] {
                 Slot::Busy(f) if f.is_prefilling() => {
                     let remaining = &f.req.prompt[f.prefill_idx..];
                     // Clamp to the context window (an over-long prompt
                     // finishes with `FinishReason::Context` below) and to
-                    // the per-step chunk budget.
-                    let room = max_seq.saturating_sub(f.pos).min(MAX_PREFILL_CHUNK);
-                    (remaining[..remaining.len().min(room)].to_vec(), f.pos)
+                    // what's left of the shared step budget.
+                    let room = max_seq.saturating_sub(f.pos).min(budget);
+                    if room == 0 {
+                        continue;
+                    }
+                    let take = remaining.len().min(room);
+                    (remaining[..take].to_vec(), f.pos, take == remaining.len())
                 }
                 _ => continue,
             };
-            let logits = self.backend.prefill(i, &feed, pos).expect("backend prefill failed");
+            // Logits are only needed when this chunk completes the prompt
+            // (they seed the first sampled token); otherwise the backend
+            // skips the lm_head GEMM.
+            let logits = self
+                .backend
+                .prefill(i, &feed, pos, finishes_prompt)
+                .expect("backend prefill failed");
+            budget -= feed.len();
             prefill_tokens += feed.len();
             advanced += 1;
             just_prefilled[i] = true;
             let Slot::Busy(f) = &mut self.slots[i] else { unreachable!() };
             f.prefill_idx += feed.len();
             f.pos += feed.len();
-            self.advance_after_logits(i, &logits, max_seq);
+            self.advance_after_logits(i, logits.as_deref().unwrap_or(&[]), max_seq);
+        }
+        if n > 0 {
+            self.prefill_rr = (self.prefill_rr + 1) % n;
         }
 
         // Phase 2: one decode token for every slot already decoding.
@@ -148,6 +231,10 @@ impl Batcher {
         }
         if advanced > 0 {
             self.metrics.on_step(advanced, prefill_tokens, decode_n, t0.elapsed().as_secs_f64());
+            // Pool occupancy gauge (post-step, so reclamation shows up).
+            if let Some(kv) = self.backend.kv_stats() {
+                self.metrics.on_kv(kv);
+            }
         }
         advanced
     }
@@ -195,6 +282,10 @@ impl Batcher {
             self.metrics.on_complete(ttft, latency);
             self.finished.push(resp);
             *slot = Slot::Free;
+            // Reclaim the sequence's KV pages immediately (not at the
+            // slot's next assignment) so deferred requests can admit as
+            // soon as capacity exists.
+            self.backend.reset_slot(slot_idx);
         }
     }
 
@@ -324,5 +415,142 @@ mod tests {
         // Positions 0..119 hold the prompt; forwards at 119..=127 each
         // produce one sampled token ⇒ 9 generated, all 128 positions used.
         assert_eq!(out[0].tokens.len(), 9);
+    }
+
+    #[test]
+    fn shared_prefill_budget_bounds_tokens_per_step() {
+        // Two slots, both prefilling 40-token prompts, budget 16: each
+        // step consumes at most 16 prompt tokens *total* (not per slot),
+        // and the round-robin start lets both slots make progress.
+        let w = ModelWeights::random(ModelConfig::tiny(), 3);
+        let backend = Box::new(NativeBackend::new(&w, EngineKind::Dense, 2));
+        let cfg = ServeConfig {
+            max_batch: 2,
+            max_new_tokens: 2,
+            temperature: 0.0,
+            prefill_budget: 16,
+            ..Default::default()
+        };
+        let mut b = Batcher::new(backend, cfg, Arc::new(Metrics::new()));
+        let prompt: Vec<usize> = (0..40).map(|i| (i % 200) + 1).collect();
+        b.submit(Request::new(0, prompt.clone(), 2));
+        b.submit(Request::new(1, prompt.clone(), 2));
+        let mut before = 0u64;
+        while !b.is_idle() {
+            b.step();
+            let after = b.metrics.report().prefill_tokens;
+            assert!(after - before <= 16, "step consumed {} prefill tokens", after - before);
+            before = after;
+        }
+        let out = b.take_finished();
+        assert_eq!(out.len(), 2);
+        assert_eq!(b.metrics.report().prefill_tokens, 80);
+    }
+
+    #[test]
+    fn budget_constrained_batched_equals_sequential_greedy() {
+        // A tight shared budget changes scheduling, never outputs.
+        let prompts: Vec<Vec<usize>> = vec![
+            (0..20).map(|i| (i * 3) % 200 + 1).collect(),
+            (0..11).map(|i| (i * 7) % 200 + 1).collect(),
+            vec![9, 10, 11],
+        ];
+        let mk = |batch: usize| {
+            let w = ModelWeights::random(ModelConfig::tiny(), 3);
+            let backend = Box::new(NativeBackend::new(&w, EngineKind::Dense, batch));
+            let cfg = ServeConfig {
+                max_batch: batch,
+                max_new_tokens: 4,
+                temperature: 0.0,
+                prefill_budget: 8,
+                ..Default::default()
+            };
+            Batcher::new(backend, cfg, Arc::new(Metrics::new()))
+        };
+        let mut seq_out = Vec::new();
+        for p in &prompts {
+            let mut b = mk(1);
+            b.submit(Request::new(0, p.clone(), 4));
+            seq_out.push(b.run_to_completion().remove(0).tokens);
+        }
+        let mut b = mk(3);
+        for (i, p) in prompts.iter().enumerate() {
+            b.submit(Request::new(i as u64, p.clone(), 4));
+        }
+        let mut batched = b.run_to_completion();
+        batched.sort_by_key(|r| r.id);
+        for (i, r) in batched.iter().enumerate() {
+            assert_eq!(r.tokens, seq_out[i], "request {i} diverged under a tight budget");
+        }
+    }
+
+    #[test]
+    fn pool_exhaustion_defers_admission_then_reclaims() {
+        use crate::config::KvConfig;
+        // Pool of 2 pages × 4 tokens: one request's lifetime footprint
+        // (3 prompt + 3 generated → 2 pages) takes the whole pool, so a
+        // second request must wait for the first to finish and release
+        // its pages — admission is gated by pool pages, not by the 4
+        // free slots.
+        let w = ModelWeights::random(ModelConfig::tiny(), 3);
+        let kv = KvConfig { page_size: 4, pool_pages: 2 };
+        let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 4, &kv));
+        let cfg = ServeConfig {
+            max_batch: 4,
+            max_new_tokens: 3,
+            temperature: 0.0,
+            queue_capacity: 8,
+            ..Default::default()
+        };
+        let mut b = Batcher::new(backend, cfg, Arc::new(Metrics::new()));
+        for i in 0..3 {
+            b.submit(Request::new(i, vec![1, 2, 3], 3));
+        }
+        // First step: only one request fits the pool; the rest defer.
+        b.step();
+        assert_eq!(b.occupied(), 1, "pool must gate admission below slot count");
+        assert!(b.queue_depth() >= 1);
+        let out = b.run_to_completion();
+        assert_eq!(out.len(), 3, "deferred requests complete after reclamation");
+        assert!(out.iter().all(|r| r.tokens.len() == 3), "deferral must not truncate");
+        let report = b.metrics.report();
+        assert!(report.deferred > 0, "deferrals must be observable");
+        // Full reclamation: every page is back on the free list.
+        let kv_stats = report.kv.expect("pool-backed backend reports kv stats");
+        assert_eq!(kv_stats.pool.free_pages, kv_stats.pool.total_pages);
+        assert!(kv_stats.pool.freed >= 3, "each completed request frees its pages");
+    }
+
+    #[test]
+    fn impossible_request_rejected_not_livelocked() {
+        use crate::config::KvConfig;
+        // Pool capacity is 2 pages × 16 tokens = 32 positions; a request
+        // whose lifetime footprint (10 prompt + 30 generated = 40) can
+        // never fit must be rejected — deferring it would head-of-line
+        // block the queue forever. A feasible request behind it must
+        // still be served.
+        let w = ModelWeights::random(ModelConfig::tiny(), 3);
+        let kv = KvConfig { page_size: 16, pool_pages: 2 };
+        let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 2, &kv));
+        let cfg = ServeConfig {
+            max_batch: 2,
+            max_new_tokens: 30,
+            temperature: 0.0,
+            queue_capacity: 8,
+            ..Default::default()
+        };
+        let mut b = Batcher::new(backend, cfg, Arc::new(Metrics::new()));
+        b.submit(Request::new(1, (1..=10).collect(), 30));
+        b.submit(Request::new(2, vec![1, 2, 3], 4));
+        let mut out = b.run_to_completion();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].finish, FinishReason::Rejected);
+        assert!(out[0].tokens.is_empty());
+        assert_eq!(out[1].finish, FinishReason::Length);
+        assert_eq!(out[1].tokens.len(), 4);
+        let report = b.metrics.report();
+        assert_eq!(report.infeasible, 1);
+        assert_eq!(report.rejected, 0, "queue-full rejects are a separate counter");
     }
 }

@@ -1,6 +1,7 @@
-//! Serving metrics: counters and latency summaries, shared between the
-//! batcher thread and callers.
+//! Serving metrics: counters, latency summaries and KV-pool occupancy
+//! gauges, shared between the batcher thread and callers.
 
+use crate::kvcache::KvStats;
 use crate::util::stats::Summary;
 use std::sync::Mutex;
 
@@ -10,6 +11,11 @@ struct Inner {
     submitted: u64,
     completed: u64,
     rejected: u64,
+    /// Accepted requests later found unservable (footprint > whole pool),
+    /// finished with `FinishReason::Rejected`.
+    infeasible: u64,
+    /// Steps on which the queue head waited for KV pool pages.
+    deferred: u64,
     prefill_tokens: u64,
     decode_tokens: u64,
     steps: u64,
@@ -17,6 +23,10 @@ struct Inner {
     ttft: Vec<f64>,
     latency: Vec<f64>,
     step_seconds: Vec<f64>,
+    /// Latest pool snapshot from a pool-backed backend (gauge; the
+    /// churn and high-water counters inside it are lifetime totals, so
+    /// the latest snapshot carries the whole history).
+    kv: Option<KvStats>,
     started: Option<std::time::Instant>,
     finished: Option<std::time::Instant>,
 }
@@ -32,7 +42,15 @@ pub struct Metrics {
 pub struct MetricsReport {
     pub submitted: u64,
     pub completed: u64,
+    /// Requests dropped at submit time (queue full) — never counted as
+    /// submitted and never produce a `Response`.
     pub rejected: u64,
+    /// Submitted requests finished with `FinishReason::Rejected` because
+    /// their worst-case KV footprint exceeds the whole pool (so
+    /// `submitted == completed + infeasible` once the queue drains).
+    pub infeasible: u64,
+    /// Steps on which admission was deferred waiting for KV pool pages.
+    pub deferred: u64,
     /// Prompt tokens consumed by batched prefill passes.
     pub prefill_tokens: u64,
     /// Generated tokens consumed by decode steps.
@@ -45,6 +63,10 @@ pub struct MetricsReport {
     pub step_time: Summary,
     /// Aggregate decode throughput over the serving window (tok/s).
     pub tokens_per_s: f64,
+    /// Latest KV-pool snapshot (pool/page occupancy, high-water mark,
+    /// churn, per-slot held/filled bytes); `None` for backends without a
+    /// pool.
+    pub kv: Option<KvStats>,
 }
 
 impl Metrics {
@@ -58,6 +80,25 @@ impl Metrics {
 
     pub fn on_reject(&self) {
         self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// Record a submitted request finished as unservable (its KV
+    /// footprint exceeds the whole pool).
+    pub fn on_infeasible(&self) {
+        self.inner.lock().unwrap().infeasible += 1;
+    }
+
+    /// Record one step on which the queue head could not be admitted for
+    /// lack of free KV pool pages.
+    pub fn on_admit_defer(&self) {
+        self.inner.lock().unwrap().deferred += 1;
+    }
+
+    /// Record the latest KV-pool occupancy snapshot (gauge semantics:
+    /// the last snapshot wins — its high-water/churn counters are
+    /// pool-lifetime totals and therefore monotone).
+    pub fn on_kv(&self, kv: KvStats) {
+        self.inner.lock().unwrap().kv = Some(kv);
     }
 
     /// Record one batcher step: `occupied` slots advanced, consuming
@@ -99,6 +140,8 @@ impl Metrics {
             submitted: g.submitted,
             completed: g.completed,
             rejected: g.rejected,
+            infeasible: g.infeasible,
+            deferred: g.deferred,
             prefill_tokens: g.prefill_tokens,
             decode_tokens: g.decode_tokens,
             steps: g.steps,
@@ -107,14 +150,15 @@ impl Metrics {
             latency: summary(&g.latency),
             step_time: summary(&g.step_seconds),
             tokens_per_s: if window.is_finite() { g.decode_tokens as f64 / window } else { 0.0 },
+            kv: g.kv.clone(),
         }
     }
 }
 
 impl MetricsReport {
     pub fn render(&self) -> String {
-        format!(
-            "requests: {} submitted / {} completed / {} rejected\n\
+        let mut out = format!(
+            "requests: {} submitted / {} completed / {} rejected / {} infeasible / {} deferred\n\
              tokens:   {} prefill / {} decode ({:.1} tok/s decode)\n\
              batching: {} steps, mean occupancy {:.2}\n\
              ttft:     p50 {:.1} ms, p95 {:.1} ms\n\
@@ -122,6 +166,8 @@ impl MetricsReport {
             self.submitted,
             self.completed,
             self.rejected,
+            self.infeasible,
+            self.deferred,
             self.prefill_tokens,
             self.decode_tokens,
             self.tokens_per_s,
@@ -131,7 +177,22 @@ impl MetricsReport {
             self.ttft.p95 * 1e3,
             self.latency.p50 * 1e3,
             self.latency.p95 * 1e3,
-        )
+        );
+        if let Some(kv) = &self.kv {
+            out.push_str(&format!(
+                "\nkv pool:  {}/{} pages used (hwm {}), {} tok/page, \
+                 churn {} alloc / {} free, {} KiB held / {} KiB filled",
+                kv.pool.used_pages,
+                kv.pool.total_pages,
+                kv.pool.used_hwm,
+                kv.pool.page_size,
+                kv.pool.allocated,
+                kv.pool.freed,
+                kv.held_bytes() / 1024,
+                kv.used_bytes() / 1024,
+            ));
+        }
+        out
     }
 }
 
@@ -156,5 +217,31 @@ mod tests {
         assert_eq!(r.decode_tokens, 2);
         assert!((r.mean_batch - 2.0).abs() < 1e-9);
         assert!(r.render().contains("mean occupancy 2.00"));
+        assert!(r.kv.is_none(), "no pool snapshot recorded");
+    }
+
+    #[test]
+    fn kv_gauge_keeps_latest_snapshot_and_hwm() {
+        use crate::kvcache::PoolStats;
+        let m = Metrics::new();
+        m.on_admit_defer();
+        m.on_kv(KvStats {
+            pool: PoolStats { total_pages: 8, used_pages: 6, used_hwm: 6, ..Default::default() },
+            slot_bytes: vec![1024, 0],
+            slot_bytes_used: vec![512, 0],
+        });
+        m.on_kv(KvStats {
+            pool: PoolStats { total_pages: 8, used_pages: 1, used_hwm: 6, ..Default::default() },
+            slot_bytes: vec![256, 0],
+            slot_bytes_used: vec![128, 0],
+        });
+        let r = m.report();
+        assert_eq!(r.deferred, 1);
+        let kv = r.kv.expect("snapshot recorded");
+        assert_eq!(kv.pool.used_pages, 1, "gauge keeps the latest snapshot");
+        assert_eq!(kv.pool.used_hwm, 6, "lifetime high-water mark rides the snapshot");
+        assert_eq!(kv.held_bytes(), 256);
+        assert!(r.render().contains("kv pool:"));
+        assert!(r.render().contains("1 deferred"));
     }
 }

@@ -5,6 +5,32 @@
 //! pure-Rust model (always available) and the PJRT/AOT runtime (the
 //! production path — `artifacts/*.hlo.txt` compiled once, Python never on
 //! the request path).
+//!
+//! ## Memory model: the paged KV pool
+//!
+//! The native backend keeps all KV state in one shared
+//! [`crate::kvcache::BlockPool`] page arena (`ServeConfig::kv` selects
+//! page size and pool size): each slot holds a page table that grows
+//! lazily as its sequence extends and is reclaimed in full on
+//! completion. Serving capacity is therefore a function of **pool
+//! pages**, not `slots × max_seq` — admission is gated on free pages
+//! against the request's *whole-lifetime* footprint (prompt + generation
+//! budget, pre-claimed at admission so concurrent admissions cannot
+//! jointly oversubscribe and decode growth never races the free list).
+//! A request that does not fit yet *defers* (FIFO, counted in metrics)
+//! until a completion reclaims pages; one that could never fit even an
+//! empty pool finishes immediately with `FinishReason::Rejected`.
+//!
+//! ## Scheduling: budgeted prefill, continuous decode
+//!
+//! Each batcher step runs two phases: (1) batched prefill across
+//! prefilling slots under a **shared** `ServeConfig::prefill_budget`
+//! token cap, round-robin so a tight budget still makes progress on
+//! every prompt — bounding decode stall per step regardless of how many
+//! prompts arrive at once; non-final prefill chunks skip the lm_head
+//! GEMM (`want_logits = false`); (2) one decode token for every decoding
+//! slot. [`metrics::Metrics`] reports prefill/decode token splits,
+//! admission deferrals, and the KV pool occupancy/churn snapshot.
 
 pub mod backend;
 pub mod batcher;

@@ -34,6 +34,10 @@ pub enum FinishReason {
     Stop,
     /// Prompt + generation hit the model context limit.
     Context,
+    /// The request's worst-case KV footprint exceeds the whole pool — it
+    /// could never be admitted, so it is rejected (empty generation)
+    /// instead of deferring forever and head-of-line blocking the queue.
+    Rejected,
 }
 
 /// A finished generation.

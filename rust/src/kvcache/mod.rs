@@ -1,0 +1,116 @@
+//! Paged KV-cache pool: one shared fixed-size-page arena for every
+//! sequence and layer, plus the trait that lets the model walk any KV
+//! cache tile-by-tile.
+//!
+//! CodeGEMM's argument is about memory-subsystem utilization in
+//! memory-bound inference; on the serving side the same wall is the KV
+//! cache. The contiguous [`crate::model::KvCache`] allocates
+//! `2 × n_layers × max_seq × kv_dim` floats per request up front, so
+//! serving capacity degrades with the *worst-case* sequence length even
+//! when live sequences are short. This module replaces that with
+//! vLLM-style paging:
+//!
+//! - [`pool::BlockPool`] — the arena: one allocation carved into pages of
+//!   `page_size` tokens (all layers, K and V), a LIFO free list, and
+//!   churn/occupancy counters ([`pool::PoolStats`]). Pool pages bound
+//!   total KV memory; the batcher gates admission on free pages.
+//! - [`paged::SeqKv`] / [`paged::PagedKv`] — the per-sequence page table
+//!   and the handle that binds it to the pool for one model call, with
+//!   the contiguous cache's exact append/read semantics (bit-compatible;
+//!   property-pinned) but per-page `&[f32]` views. Pages are claimed
+//!   lazily on append and reclaimed wholesale when the request finishes.
+//! - [`KvStore`] — the capability the model actually needs: positional
+//!   writes plus tiled reads. The contiguous cache implements it as one
+//!   big tile; the paged cache as page-sized tiles. The chunked attention
+//!   kernel ([`crate::model::attention`]) is written against this trait,
+//!   so decode and prefill run identically over either representation.
+//!
+//! [`KvStats`] packages a pool snapshot with per-slot byte gauges for
+//! `coordinator::metrics`.
+
+pub mod paged;
+pub mod pool;
+
+pub use paged::{PagedKv, SeqKv};
+pub use pool::{BlockPool, KvLayout, PoolStats};
+
+/// What the model requires of a KV cache: append one position per layer,
+/// read back position ranges as contiguous `(keys, values)` tiles.
+///
+/// Tile `t` covers positions `t * tile_tokens() .. min((t+1) *
+/// tile_tokens(), upto)`; within a tile, position rows are contiguous
+/// (`kv_dim` floats each). A contiguous cache reports one `max_seq`-sized
+/// tile; a paged cache reports page-sized tiles. The attention kernel
+/// visits positions in ascending order either way, which is what keeps
+/// the tiled walk bit-exact against a flat loop.
+pub trait KvStore {
+    /// Number of positions filled so far.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Maximum position capacity (the model context window).
+    fn max_seq(&self) -> usize;
+
+    /// Floats per position per layer (for each of K and V).
+    fn kv_dim(&self) -> usize;
+
+    fn n_layers(&self) -> usize;
+
+    fn is_full(&self) -> bool {
+        self.len() >= self.max_seq()
+    }
+
+    /// Write K/V for `layer` at position `pos` (`pos <= len`; writing at
+    /// `len` on the last layer advances the cache).
+    fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]);
+
+    /// Drop all cached state (paged implementations also return their
+    /// pages to the pool).
+    fn clear(&mut self);
+
+    /// Tokens per read tile.
+    fn tile_tokens(&self) -> usize;
+
+    /// Number of tiles covering positions `0..upto`.
+    fn n_tiles(&self, upto: usize) -> usize {
+        upto.div_ceil(self.tile_tokens())
+    }
+
+    /// `(keys, values)` of tile `t`, trimmed to `upto`: positions
+    /// `t * tile_tokens() .. min((t+1) * tile_tokens(), upto)`.
+    fn tile(&self, layer: usize, t: usize, upto: usize) -> (&[f32], &[f32]);
+
+    /// Bytes of storage currently *held* by this sequence (pages claimed,
+    /// or the full contiguous allocation).
+    fn bytes(&self) -> usize;
+
+    /// Bytes actually *filled* (`2 × n_layers × len × kv_dim × 4`).
+    fn bytes_used(&self) -> usize;
+}
+
+/// KV occupancy snapshot a pool-backed serving backend reports to
+/// `coordinator::metrics`: the pool-level page accounting plus per-slot
+/// held/filled byte gauges.
+#[derive(Clone, Debug, Default)]
+pub struct KvStats {
+    pub pool: PoolStats,
+    /// Bytes held (pages claimed) per slot.
+    pub slot_bytes: Vec<usize>,
+    /// Bytes filled per slot.
+    pub slot_bytes_used: Vec<usize>,
+}
+
+impl KvStats {
+    /// Total bytes held across slots.
+    pub fn held_bytes(&self) -> usize {
+        self.slot_bytes.iter().sum()
+    }
+
+    /// Total bytes filled across slots.
+    pub fn used_bytes(&self) -> usize {
+        self.slot_bytes_used.iter().sum()
+    }
+}

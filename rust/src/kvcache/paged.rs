@@ -1,0 +1,269 @@
+//! The sequence-facing side of the paged pool: a per-sequence page table
+//! ([`SeqKv`]) plus the borrow that binds it to the shared arena for one
+//! model call ([`PagedKv`]).
+//!
+//! `PagedKv` implements [`crate::kvcache::KvStore`] with the same
+//! append/read semantics as the contiguous [`crate::model::KvCache`]
+//! (write per `(layer, pos)`, length advances when the last layer writes a
+//! new position) — bit-compatible by construction, property-pinned by
+//! `tests/paged_kv_prop.rs` — but exposes the cache as per-page `&[f32]`
+//! tiles instead of one contiguous slice. Pages are claimed lazily on
+//! append (free-list pop, no heap traffic) and returned wholesale by
+//! [`SeqKv::release`] when the request finishes.
+
+use super::pool::BlockPool;
+use super::KvStore;
+
+/// Per-sequence KV state: the page table and the fill length. Owns no
+/// storage — pages live in the [`BlockPool`]; `SeqKv` only names them.
+#[derive(Clone, Debug, Default)]
+pub struct SeqKv {
+    /// Physical page id per logical page index (`pos / page_size`).
+    pages: Vec<usize>,
+    /// Number of positions filled so far.
+    len: usize,
+}
+
+impl SeqKv {
+    /// An empty sequence whose page table can hold `max_pages` entries
+    /// without reallocating — pre-reserve with
+    /// [`super::pool::KvLayout::max_pages_per_seq`] to keep the decode
+    /// hot loop allocation-free.
+    pub fn with_capacity(max_pages: usize) -> SeqKv {
+        SeqKv { pages: Vec::with_capacity(max_pages), len: 0 }
+    }
+
+    /// Number of positions filled so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Pages currently held.
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Page-table capacity (for allocation-free-ness assertions).
+    pub fn page_capacity(&self) -> usize {
+        self.pages.capacity()
+    }
+
+    /// Return every page to `pool` and reset the fill (full reclamation;
+    /// the table keeps its capacity for the next sequence in this slot).
+    pub fn release(&mut self, pool: &mut BlockPool) {
+        for page in self.pages.drain(..) {
+            pool.free(page);
+        }
+        self.len = 0;
+    }
+
+    /// Pre-claim pages so this sequence holds at least `n_pages` — the
+    /// admission-time reservation: once claimed, appends up to
+    /// `n_pages × page_size` positions never touch the free list, and a
+    /// subsequent `can_admit` check sees the reduced free count (so
+    /// several admissions in one scheduler step cannot jointly
+    /// oversubscribe the pool). Returns false (claiming nothing further)
+    /// if the pool runs out mid-claim.
+    pub fn claim(&mut self, pool: &mut BlockPool, n_pages: usize) -> bool {
+        while self.pages.len() < n_pages {
+            match pool.try_alloc() {
+                Some(page) => self.pages.push(page),
+                None => return false,
+            }
+        }
+        true
+    }
+}
+
+/// A sequence's KV cache bound to the shared pool for the duration of one
+/// model call. Created per step by the owner of both halves (e.g. the
+/// serving backend, which owns the pool and one `SeqKv` per slot).
+pub struct PagedKv<'a> {
+    pool: &'a mut BlockPool,
+    seq: &'a mut SeqKv,
+}
+
+impl<'a> PagedKv<'a> {
+    pub fn bind(pool: &'a mut BlockPool, seq: &'a mut SeqKv) -> PagedKv<'a> {
+        PagedKv { pool, seq }
+    }
+}
+
+impl KvStore for PagedKv<'_> {
+    fn len(&self) -> usize {
+        self.seq.len
+    }
+
+    fn max_seq(&self) -> usize {
+        self.pool.layout().max_seq
+    }
+
+    fn kv_dim(&self) -> usize {
+        self.pool.layout().kv_dim
+    }
+
+    fn n_layers(&self) -> usize {
+        self.pool.layout().n_layers
+    }
+
+    fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let l = self.pool.layout();
+        assert!(pos < l.max_seq, "kv cache overflow: pos {pos} >= {}", l.max_seq);
+        let pi = pos / l.page_size;
+        // Lazy growth: claim pages up to the one holding `pos` (normally
+        // a single pop every `page_size` appends).
+        while self.seq.pages.len() <= pi {
+            let page = self.pool.try_alloc().unwrap_or_else(|| {
+                panic!(
+                    "kv pool exhausted: {} pages all in use (size the pool for the worst-case \
+                     concurrent footprint, or gate admission on free pages)",
+                    self.pool.total_pages()
+                )
+            });
+            self.seq.pages.push(page);
+        }
+        self.pool.write(self.seq.pages[pi], layer, pos % l.page_size, k, v);
+        if layer + 1 == l.n_layers && pos >= self.seq.len {
+            self.seq.len = pos + 1;
+        }
+    }
+
+    fn clear(&mut self) {
+        self.seq.release(self.pool);
+    }
+
+    fn tile_tokens(&self) -> usize {
+        self.pool.layout().page_size
+    }
+
+    fn tile(&self, layer: usize, t: usize, upto: usize) -> (&[f32], &[f32]) {
+        let ps = self.pool.layout().page_size;
+        debug_assert!(t * ps < upto, "tile {t} starts at or past upto {upto}");
+        let tokens = upto.min((t + 1) * ps) - t * ps;
+        let page = self.seq.pages[t];
+        (self.pool.k_tile(page, layer, tokens), self.pool.v_tile(page, layer, tokens))
+    }
+
+    fn bytes(&self) -> usize {
+        self.seq.pages.len() * self.pool.layout().page_bytes()
+    }
+
+    fn bytes_used(&self) -> usize {
+        self.pool.layout().bytes_for(self.seq.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pool::KvLayout;
+    use super::*;
+
+    fn pool() -> BlockPool {
+        BlockPool::new(KvLayout { n_layers: 2, kv_dim: 4, page_size: 4, max_seq: 16 }, 8)
+    }
+
+    #[test]
+    fn append_read_matches_contiguous_semantics() {
+        let mut pool = pool();
+        let mut seq = SeqKv::with_capacity(4);
+        {
+            let mut kv = PagedKv::bind(&mut pool, &mut seq);
+            let k = [1.0, 2.0, 3.0, 4.0];
+            let v = [5.0, 6.0, 7.0, 8.0];
+            kv.write(0, 0, &k, &v);
+            assert_eq!(kv.len(), 0, "len advances only on the last layer");
+            kv.write(1, 0, &k, &v);
+            assert_eq!(kv.len(), 1);
+            let (keys, vals) = kv.tile(0, 0, 1);
+            assert_eq!(keys, &k);
+            assert_eq!(vals, &v);
+        }
+        assert_eq!(seq.n_pages(), 1);
+    }
+
+    #[test]
+    fn lazy_growth_claims_one_page_per_page_span() {
+        let mut pool = pool();
+        let mut seq = SeqKv::with_capacity(4);
+        let mut kv = PagedKv::bind(&mut pool, &mut seq);
+        let row = [0.0f32; 4];
+        for pos in 0..9 {
+            kv.write(0, pos, &row, &row);
+            kv.write(1, pos, &row, &row);
+        }
+        assert_eq!(kv.len(), 9);
+        assert_eq!(kv.bytes_used(), 2 * 2 * 9 * 4 * 4);
+        drop(kv);
+        // 9 positions at 4 tokens/page ⇒ 3 pages.
+        assert_eq!(seq.n_pages(), 3);
+        assert_eq!(pool.used_pages(), 3);
+    }
+
+    #[test]
+    fn tiles_cover_positions_in_order() {
+        let mut pool = pool();
+        let mut seq = SeqKv::with_capacity(4);
+        let mut kv = PagedKv::bind(&mut pool, &mut seq);
+        for pos in 0..7 {
+            let k = [pos as f32; 4];
+            kv.write(0, pos, &k, &k);
+            kv.write(1, pos, &k, &k);
+        }
+        // upto = 6 spans tile 0 (positions 0..4) and tile 1 (4..6).
+        let (k0, _) = kv.tile(0, 0, 6);
+        assert_eq!(k0.len(), 4 * 4);
+        assert_eq!(k0[0], 0.0);
+        assert_eq!(k0[3 * 4], 3.0);
+        let (k1, v1) = kv.tile(0, 1, 6);
+        assert_eq!(k1.len(), 2 * 4);
+        assert_eq!(k1[0], 4.0);
+        assert_eq!(k1[4], 5.0);
+        assert_eq!(v1[4], 5.0);
+    }
+
+    #[test]
+    fn release_reclaims_everything_and_keeps_capacity() {
+        let mut pool = pool();
+        let mut seq = SeqKv::with_capacity(4);
+        {
+            let mut kv = PagedKv::bind(&mut pool, &mut seq);
+            let row = [0.0f32; 4];
+            for pos in 0..16 {
+                kv.write(0, pos, &row, &row);
+                kv.write(1, pos, &row, &row);
+            }
+        }
+        assert_eq!(pool.used_pages(), 4);
+        let cap = seq.page_capacity();
+        seq.release(&mut pool);
+        assert_eq!(pool.used_pages(), 0);
+        assert_eq!(pool.free_pages(), pool.total_pages());
+        assert_eq!(seq.len(), 0);
+        assert_eq!(seq.page_capacity(), cap, "release must keep the table allocation");
+    }
+
+    #[test]
+    #[should_panic(expected = "kv pool exhausted")]
+    fn exhaustion_panics_with_context() {
+        let mut pool =
+            BlockPool::new(KvLayout { n_layers: 1, kv_dim: 2, page_size: 1, max_seq: 16 }, 2);
+        let mut seq = SeqKv::with_capacity(16);
+        let mut kv = PagedKv::bind(&mut pool, &mut seq);
+        for pos in 0..3 {
+            kv.write(0, pos, &[0.0; 2], &[0.0; 2]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut pool = pool();
+        let mut seq = SeqKv::default();
+        let mut kv = PagedKv::bind(&mut pool, &mut seq);
+        kv.write(0, 16, &[0.0; 4], &[0.0; 4]);
+    }
+}

@@ -1,0 +1,285 @@
+//! Fixed-size-page KV arena shared by every sequence and layer.
+//!
+//! One [`BlockPool`] backs all serving slots: a single `f32` allocation
+//! carved into pages of [`KvLayout::page_size`] tokens, handed out through
+//! a LIFO free list and returned in full when a sequence finishes. Pool
+//! memory therefore bounds *concurrency × live tokens*, not
+//! `slots × max_seq` — the per-request worst-case allocation the
+//! contiguous [`crate::model::KvCache`] pays.
+//!
+//! Page layout (one page, `page_elems` floats):
+//!
+//! ```text
+//! [layer 0: K rows (page_size × kv_dim) | V rows (page_size × kv_dim)]
+//! [layer 1: K rows                      | V rows                     ]
+//! ...
+//! ```
+//!
+//! Keys of consecutive positions within a page are contiguous per layer,
+//! so the chunked attention kernel ([`crate::model::attention`]) walks a
+//! sequence page-by-page with the same inner loops it would run over a
+//! contiguous cache — the page size is the attention tile size.
+
+use crate::config::{KvConfig, ModelConfig};
+
+/// Geometry of every page in a pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvLayout {
+    pub n_layers: usize,
+    /// Floats per cached position per layer (for K; same for V).
+    pub kv_dim: usize,
+    /// Tokens per page — also the attention kernel's tile height.
+    pub page_size: usize,
+    /// Maximum sequence length (positions; bounds page tables, not pool
+    /// memory).
+    pub max_seq: usize,
+}
+
+impl KvLayout {
+    /// Floats in one page (all layers, K and V).
+    pub fn page_elems(&self) -> usize {
+        self.n_layers * 2 * self.page_size * self.kv_dim
+    }
+
+    /// Bytes in one page.
+    pub fn page_bytes(&self) -> usize {
+        self.page_elems() * 4
+    }
+
+    /// Pages needed to hold `tokens` positions.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_size)
+    }
+
+    /// Bytes filled by `positions` cached positions (K and V, all
+    /// layers) — the single source of the fill-bytes formula shared by
+    /// the paged handle and the serving metrics.
+    pub fn bytes_for(&self, positions: usize) -> usize {
+        2 * self.n_layers * positions * self.kv_dim * 4
+    }
+
+    /// Upper bound of pages one sequence can ever hold.
+    pub fn max_pages_per_seq(&self) -> usize {
+        self.pages_for(self.max_seq)
+    }
+
+    /// Offset of layer `layer`'s K block inside a page.
+    #[inline]
+    fn layer_off(&self, layer: usize) -> usize {
+        layer * 2 * self.page_size * self.kv_dim
+    }
+}
+
+/// Point-in-time pool occupancy and lifetime churn counters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub page_size: usize,
+    pub page_bytes: usize,
+    pub total_pages: usize,
+    pub free_pages: usize,
+    pub used_pages: usize,
+    /// High-water mark of simultaneously used pages.
+    pub used_hwm: usize,
+    /// Cumulative page allocations (churn).
+    pub allocated: u64,
+    /// Cumulative page frees (churn).
+    pub freed: u64,
+}
+
+/// The shared page arena: one allocation, a free list, churn counters.
+#[derive(Clone, Debug)]
+pub struct BlockPool {
+    layout: KvLayout,
+    data: Vec<f32>,
+    /// LIFO free list of page ids (recently freed pages are reused first,
+    /// keeping the hot working set small).
+    free: Vec<usize>,
+    allocated: u64,
+    freed: u64,
+    used_hwm: usize,
+}
+
+impl BlockPool {
+    /// A pool of `pages` pages with the given geometry.
+    pub fn new(layout: KvLayout, pages: usize) -> BlockPool {
+        assert!(layout.page_size >= 1, "page_size must be >= 1");
+        assert!(pages >= 1, "pool needs at least one page");
+        BlockPool {
+            data: vec![0.0; pages * layout.page_elems()],
+            free: (0..pages).rev().collect(),
+            layout,
+            allocated: 0,
+            freed: 0,
+            used_hwm: 0,
+        }
+    }
+
+    /// Pool sized for a model under a serving [`KvConfig`]:
+    /// `kv.pool_pages` pages, or (when 0, the "auto" default) enough
+    /// pages for `slots` sequences of `max_seq` tokens — the same total
+    /// capacity the contiguous per-slot caches would hold, so default
+    /// configs change layout, not memory bounds.
+    pub fn for_model(cfg: &ModelConfig, kv: &KvConfig, slots: usize) -> BlockPool {
+        let layout = KvLayout {
+            n_layers: cfg.n_layers,
+            kv_dim: cfg.kv_dim(),
+            page_size: kv.page_size,
+            max_seq: cfg.max_seq,
+        };
+        BlockPool::new(layout, kv.pool_pages_for(cfg.max_seq, slots))
+    }
+
+    pub fn layout(&self) -> KvLayout {
+        self.layout
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.data.len() / self.layout.page_elems()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.total_pages() - self.free.len()
+    }
+
+    /// Pop a page off the free list (`None` when the pool is exhausted —
+    /// callers gate admission on [`Self::free_pages`], see the batcher).
+    pub fn try_alloc(&mut self) -> Option<usize> {
+        let page = self.free.pop()?;
+        self.allocated += 1;
+        self.used_hwm = self.used_hwm.max(self.used_pages());
+        Some(page)
+    }
+
+    /// Return a page to the free list.
+    pub fn free(&mut self, page: usize) {
+        debug_assert!(page < self.total_pages(), "freeing page {page} out of range");
+        debug_assert!(!self.free.contains(&page), "double free of page {page}");
+        self.free.push(page);
+        self.freed += 1;
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            page_size: self.layout.page_size,
+            page_bytes: self.layout.page_bytes(),
+            total_pages: self.total_pages(),
+            free_pages: self.free_pages(),
+            used_pages: self.used_pages(),
+            used_hwm: self.used_hwm,
+            allocated: self.allocated,
+            freed: self.freed,
+        }
+    }
+
+    /// Keys of the first `tokens` positions of `page` for `layer`
+    /// (contiguous rows of `kv_dim`).
+    #[inline]
+    pub fn k_tile(&self, page: usize, layer: usize, tokens: usize) -> &[f32] {
+        let l = self.layout;
+        debug_assert!(tokens <= l.page_size);
+        let base = page * l.page_elems() + l.layer_off(layer);
+        &self.data[base..base + tokens * l.kv_dim]
+    }
+
+    /// Values of the first `tokens` positions of `page` for `layer`.
+    #[inline]
+    pub fn v_tile(&self, page: usize, layer: usize, tokens: usize) -> &[f32] {
+        let l = self.layout;
+        debug_assert!(tokens <= l.page_size);
+        let base = page * l.page_elems() + l.layer_off(layer) + l.page_size * l.kv_dim;
+        &self.data[base..base + tokens * l.kv_dim]
+    }
+
+    /// Write one position's K/V rows into `page` at in-page index `idx`.
+    /// Pages are not zeroed on allocation — every position is written
+    /// before the attention kernel can read it (reads are bounded by the
+    /// sequence length), so recycled pages may carry stale floats that
+    /// are never observed.
+    pub fn write(&mut self, page: usize, layer: usize, idx: usize, k: &[f32], v: &[f32]) {
+        let l = self.layout;
+        debug_assert!(idx < l.page_size);
+        debug_assert_eq!(k.len(), l.kv_dim);
+        debug_assert_eq!(v.len(), l.kv_dim);
+        let base = page * l.page_elems() + l.layer_off(layer);
+        let ko = base + idx * l.kv_dim;
+        self.data[ko..ko + l.kv_dim].copy_from_slice(k);
+        let vo = base + l.page_size * l.kv_dim + idx * l.kv_dim;
+        self.data[vo..vo + l.kv_dim].copy_from_slice(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> KvLayout {
+        KvLayout { n_layers: 2, kv_dim: 4, page_size: 8, max_seq: 32 }
+    }
+
+    #[test]
+    fn geometry() {
+        let l = layout();
+        assert_eq!(l.page_elems(), 2 * 2 * 8 * 4);
+        assert_eq!(l.pages_for(0), 0);
+        assert_eq!(l.pages_for(8), 1);
+        assert_eq!(l.pages_for(9), 2);
+        assert_eq!(l.max_pages_per_seq(), 4);
+    }
+
+    #[test]
+    fn alloc_free_roundtrip_and_churn() {
+        let mut p = BlockPool::new(layout(), 3);
+        assert_eq!(p.free_pages(), 3);
+        let a = p.try_alloc().unwrap();
+        let b = p.try_alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.used_pages(), 2);
+        p.free(a);
+        assert_eq!(p.free_pages(), 2);
+        // LIFO: the page just freed is reused next.
+        assert_eq!(p.try_alloc().unwrap(), a);
+        let s = p.stats();
+        assert_eq!(s.allocated, 3);
+        assert_eq!(s.freed, 1);
+        assert_eq!(s.used_hwm, 2);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut p = BlockPool::new(layout(), 1);
+        assert!(p.try_alloc().is_some());
+        assert!(p.try_alloc().is_none());
+    }
+
+    #[test]
+    fn write_then_read_tiles() {
+        let mut p = BlockPool::new(layout(), 2);
+        let page = p.try_alloc().unwrap();
+        let k = [1.0, 2.0, 3.0, 4.0];
+        let v = [5.0, 6.0, 7.0, 8.0];
+        p.write(page, 1, 3, &k, &v);
+        let keys = p.k_tile(page, 1, 4);
+        assert_eq!(&keys[3 * 4..4 * 4], &k);
+        let vals = p.v_tile(page, 1, 4);
+        assert_eq!(&vals[3 * 4..4 * 4], &v);
+        // The other layer's tile is unaffected at that index… (stale or
+        // zero-init contents, but disjoint storage).
+        p.write(page, 0, 3, &v, &k);
+        assert_eq!(&p.k_tile(page, 1, 4)[3 * 4..4 * 4], &k);
+    }
+
+    #[test]
+    fn for_model_auto_sizing_matches_contiguous_capacity() {
+        let cfg = ModelConfig::tiny();
+        let kv = KvConfig { page_size: 16, pool_pages: 0 };
+        let p = BlockPool::for_model(&cfg, &kv, 4);
+        // 4 slots × ceil(128/16) pages each.
+        assert_eq!(p.total_pages(), 4 * 8);
+        let total_bytes = p.total_pages() * p.layout().page_bytes();
+        assert_eq!(total_bytes, 4 * 2 * cfg.n_layers * cfg.max_seq * cfg.kv_dim() * 4);
+    }
+}

@@ -34,6 +34,20 @@
 //! minimum shard size and which layer classes shard;
 //! `coordinator::NativeBackend::new_parallel` serves the sharded model.
 //!
+//! ## Paged KV cache (`kvcache::`)
+//!
+//! Serving-side memory is pooled the way vLLM pools it: one
+//! [`kvcache::BlockPool`] page arena backs every slot, each sequence
+//! holds a page table ([`kvcache::SeqKv`]) that grows lazily on append
+//! and is reclaimed wholesale on completion, and the model reads the
+//! cache through the tiled [`kvcache::KvStore`] trait — the chunked GQA
+//! attention kernel (`model::attention`, bit-exact against the flat
+//! loop) walks page-sized tiles, so the page size is an attention tiling
+//! knob exactly like the GEMM tile dims. The batcher gates admission on
+//! free pages and spreads a **shared per-step prefill token budget**
+//! across prefilling slots (`config::ServeConfig::prefill_budget`), so
+//! long prompts cannot stall decoding slots.
+//!
 //! ## Quick start
 //!
 //! (`no_run`: rustdoc test binaries do not inherit the cargo-config rpath
@@ -66,6 +80,7 @@ pub mod config;
 pub mod coordinator;
 pub mod eval;
 pub mod gemm;
+pub mod kvcache;
 pub mod model;
 pub mod parallel;
 pub mod quant;

@@ -104,7 +104,9 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .opt("batch", Some("4"), "max batch (native backend)")
         .opt("max-new", Some("24"), "max new tokens per request")
         .opt("prompt-len", Some("16"), "prompt length (tokens)")
-        .opt("threads", Some("1"), "shard the native model across N worker threads (0 = auto)");
+        .opt("threads", Some("1"), "shard the native model across N worker threads (0 = auto)")
+        .opt("page-size", Some("16"), "KV pool page size in tokens (native backend)")
+        .opt("pool-pages", Some("0"), "KV pool pages shared by all slots (0 = auto)");
     let m = cmd.parse(args)?;
     let artifacts = Path::new(m.str("artifacts")?);
     let n_requests = m.usize("requests")?;
@@ -113,10 +115,16 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     let want = m.str("backend")?;
     let parallel = ParallelConfig { num_threads: m.usize("threads")?, ..Default::default() };
 
+    let kv = codegemm::config::KvConfig {
+        page_size: m.usize("page-size")?,
+        pool_pages: m.usize("pool-pages")?,
+    };
+    kv.validate()?;
     let cfg = ServeConfig {
         max_batch: m.usize("batch")?,
         max_new_tokens: max_new,
         parallel,
+        kv,
         ..Default::default()
     };
     let (backend, label): (Box<dyn DecodeBackend>, String) =
@@ -132,14 +140,21 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             let weights = load_or_random_weights(artifacts);
             let kind = EngineKind::codegemm(QuantConfig::new(4, 1, 8, 32)?);
             let be = if cfg.parallel.is_serial() {
-                NativeBackend::new(&weights, kind, cfg.max_batch)
+                NativeBackend::with_kv(&weights, kind, cfg.max_batch, &cfg.kv)
             } else {
                 let pool = std::sync::Arc::new(
                     codegemm::util::threadpool::ThreadPool::with_threads(
                         cfg.parallel.effective_threads(),
                     ),
                 );
-                NativeBackend::new_parallel(&weights, kind, cfg.max_batch, &cfg.parallel, pool)
+                NativeBackend::new_parallel_kv(
+                    &weights,
+                    kind,
+                    cfg.max_batch,
+                    &cfg.parallel,
+                    pool,
+                    &cfg.kv,
+                )
             };
             let label = be.label();
             (Box::new(be), label)

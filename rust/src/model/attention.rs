@@ -1,0 +1,224 @@
+//! Chunked GQA attention over a tiled KV cache.
+//!
+//! The kernel walks the cache tile-by-tile through
+//! [`crate::kvcache::KvStore`] — page-sized tiles for the paged pool, one
+//! whole-cache tile for the contiguous [`super::KvCache`] — in two passes
+//! per head:
+//!
+//! 1. **scores**: `q · k` for every cached position, written into the
+//!    caller's scores scratch, then a single softmax over `0..upto`;
+//! 2. **values**: the softmax-weighted V accumulation into the output
+//!    head.
+//!
+//! Positions are visited in ascending order in both passes and every
+//! per-position float op is identical to the flat loop this kernel
+//! replaced in `llama.rs`, so the result is **bit-exact** for any tile
+//! size (property-pinned by `tests/paged_kv_prop.rs` across page sizes ×
+//! heads × prompt lengths). Two passes were chosen over online softmax
+//! precisely to keep that guarantee — the scores buffer is `max_seq`
+//! floats of reused scratch, which is noise next to the cache itself.
+//!
+//! Used by both the decode step (`m = 1`) and batched prefill (causal:
+//! position `pos0 + b` attends to `0..=pos0 + b`, all already appended).
+
+use crate::config::ModelConfig;
+use crate::kvcache::KvStore;
+use crate::util::stats::softmax_inplace;
+
+/// Head geometry for one attention call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AttnShape {
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+}
+
+impl AttnShape {
+    pub fn of(cfg: &ModelConfig) -> AttnShape {
+        AttnShape { n_heads: cfg.n_heads, n_kv_heads: cfg.n_kv_heads, head_dim: cfg.head_dim() }
+    }
+
+    /// Query heads per KV head (GQA group width).
+    pub fn groups(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+}
+
+/// One query position's GQA attention against `kv` positions `0..upto`
+/// of `layer`.
+///
+/// - `q`: the RoPE-rotated query row (`n_heads × head_dim`);
+/// - `scores`: caller scratch, at least `upto` long (overwritten);
+/// - `out`: the attention output row (`n_heads × head_dim`, overwritten).
+pub fn attend<C: KvStore + ?Sized>(
+    kv: &C,
+    layer: usize,
+    shape: &AttnShape,
+    q: &[f32],
+    upto: usize,
+    scale: f32,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    let hd = shape.head_dim;
+    let kv_dim = shape.kv_dim();
+    let groups = shape.groups();
+    debug_assert!(upto >= 1 && upto <= kv.max_seq());
+    debug_assert_eq!(q.len(), shape.n_heads * hd);
+    debug_assert_eq!(out.len(), shape.n_heads * hd);
+    debug_assert!(scores.len() >= upto);
+    let tt = kv.tile_tokens();
+    let n_tiles = kv.n_tiles(upto);
+    let sc = &mut scores[..upto];
+    out.fill(0.0);
+    for head in 0..shape.n_heads {
+        let kv_head = head / groups;
+        let qh = &q[head * hd..(head + 1) * hd];
+        // Pass 1: raw scores, tile by tile, positions in ascending order.
+        for t in 0..n_tiles {
+            let (keys, _) = kv.tile(layer, t, upto);
+            let p0 = t * tt;
+            let n_in = keys.len() / kv_dim;
+            for j in 0..n_in {
+                let kh = &keys[j * kv_dim + kv_head * hd..j * kv_dim + (kv_head + 1) * hd];
+                sc[p0 + j] = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+            }
+        }
+        softmax_inplace(sc);
+        // Pass 2: softmax-weighted V accumulation, same position order.
+        let oh = &mut out[head * hd..(head + 1) * hd];
+        for t in 0..n_tiles {
+            let (_, vals) = kv.tile(layer, t, upto);
+            let p0 = t * tt;
+            let n_in = vals.len() / kv_dim;
+            for j in 0..n_in {
+                let w = sc[p0 + j];
+                let vh = &vals[j * kv_dim + kv_head * hd..j * kv_dim + (kv_head + 1) * hd];
+                for x in 0..hd {
+                    oh[x] += w * vh[x];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{BlockPool, KvLayout, PagedKv, SeqKv};
+    use crate::model::KvCache;
+    use crate::util::prng::Prng;
+
+    /// The flat reference loop the kernel replaced (pre-extraction
+    /// `llama.rs` attention body, verbatim math).
+    fn attend_flat(
+        cache: &KvCache,
+        layer: usize,
+        shape: &AttnShape,
+        q: &[f32],
+        upto: usize,
+        scale: f32,
+        scores: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let hd = shape.head_dim;
+        let kv_dim = shape.kv_dim();
+        let groups = shape.groups();
+        let keys = cache.keys(layer, upto);
+        let vals = cache.values(layer, upto);
+        let sc = &mut scores[..upto];
+        out.fill(0.0);
+        for head in 0..shape.n_heads {
+            let kv_head = head / groups;
+            let qh = &q[head * hd..(head + 1) * hd];
+            for (p, scv) in sc.iter_mut().enumerate() {
+                let kh = &keys[p * kv_dim + kv_head * hd..p * kv_dim + (kv_head + 1) * hd];
+                *scv = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+            }
+            softmax_inplace(sc);
+            let oh = &mut out[head * hd..(head + 1) * hd];
+            for (p, &scv) in sc.iter().enumerate() {
+                let vh = &vals[p * kv_dim + kv_head * hd..p * kv_dim + (kv_head + 1) * hd];
+                for x in 0..hd {
+                    oh[x] += scv * vh[x];
+                }
+            }
+        }
+    }
+
+    fn fill_both(
+        rng: &mut Prng,
+        cache: &mut KvCache,
+        paged: &mut PagedKv<'_>,
+        n_layers: usize,
+        kv_dim: usize,
+        positions: usize,
+    ) {
+        for pos in 0..positions {
+            for layer in 0..n_layers {
+                let k = rng.normal_vec(kv_dim, 1.0);
+                let v = rng.normal_vec(kv_dim, 1.0);
+                cache.write(layer, pos, &k, &v);
+                paged.write(layer, pos, &k, &v);
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_attention_bit_exact_vs_flat_for_any_page_size() {
+        let shape = AttnShape { n_heads: 4, n_kv_heads: 2, head_dim: 8 };
+        let kv_dim = shape.kv_dim();
+        let (n_layers, max_seq) = (2, 40);
+        let scale = 1.0 / (shape.head_dim as f32).sqrt();
+        for page_size in [1usize, 3, 4, 7, 16, 64] {
+            let layout = KvLayout { n_layers, kv_dim, page_size, max_seq };
+            let mut pool = BlockPool::new(layout, layout.max_pages_per_seq());
+            let mut seq = SeqKv::with_capacity(layout.max_pages_per_seq());
+            let mut cache = KvCache::new(n_layers, max_seq, kv_dim);
+            let mut paged = PagedKv::bind(&mut pool, &mut seq);
+            let mut rng = Prng::seeded(7 + page_size as u64);
+            // Lengths straddling page boundaries on purpose.
+            fill_both(&mut rng, &mut cache, &mut paged, n_layers, kv_dim, 37);
+            let q = rng.normal_vec(shape.n_heads * shape.head_dim, 1.0);
+            let mut scores = vec![0f32; max_seq];
+            let mut a = vec![0f32; q.len()];
+            let mut b = vec![0f32; q.len()];
+            let mut c = vec![0f32; q.len()];
+            for upto in [1usize, page_size.min(37), 17, 36, 37] {
+                for layer in 0..n_layers {
+                    attend_flat(&cache, layer, &shape, &q, upto, scale, &mut scores, &mut a);
+                    attend(&cache, layer, &shape, &q, upto, scale, &mut scores, &mut b);
+                    attend(&paged, layer, &shape, &q, upto, scale, &mut scores, &mut c);
+                    assert_eq!(a, b, "contiguous tiled != flat (page {page_size}, upto {upto})");
+                    assert_eq!(a, c, "paged tiled != flat (page {page_size}, upto {upto})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mqa_and_mha_group_widths() {
+        // groups = n_heads (MQA, one KV head) and groups = 1 (MHA).
+        for (n_heads, n_kv_heads) in [(4, 1), (4, 4)] {
+            let shape = AttnShape { n_heads, n_kv_heads, head_dim: 4 };
+            let kv_dim = shape.kv_dim();
+            let layout = KvLayout { n_layers: 1, kv_dim, page_size: 2, max_seq: 8 };
+            let mut pool = BlockPool::new(layout, layout.max_pages_per_seq());
+            let mut seq = SeqKv::with_capacity(layout.max_pages_per_seq());
+            let mut cache = KvCache::new(1, 8, kv_dim);
+            let mut paged = PagedKv::bind(&mut pool, &mut seq);
+            let mut rng = Prng::seeded(11);
+            fill_both(&mut rng, &mut cache, &mut paged, 1, kv_dim, 5);
+            let q = rng.normal_vec(n_heads * 4, 1.0);
+            let mut scores = vec![0f32; 8];
+            let (mut a, mut b) = (vec![0f32; q.len()], vec![0f32; q.len()]);
+            attend_flat(&cache, 0, &shape, &q, 5, 0.5, &mut scores, &mut a);
+            attend(&paged, 0, &shape, &q, 5, 0.5, &mut scores, &mut b);
+            assert_eq!(a, b);
+        }
+    }
+}

@@ -1,4 +1,14 @@
-//! Per-sequence key/value cache for autoregressive decoding.
+//! Per-sequence **contiguous** key/value cache for autoregressive
+//! decoding: one `max_seq`-sized allocation per layer, made up front.
+//!
+//! This is the simple representation used by direct model runs (eval,
+//! benches, examples). The serving backend uses the paged pool instead
+//! ([`crate::kvcache`]), which bounds memory by pool pages rather than
+//! `slots × max_seq`. Both implement [`crate::kvcache::KvStore`] — the
+//! contiguous cache reads back as a single whole-cache tile — so every
+//! model forward path works identically over either.
+
+use crate::kvcache::KvStore;
 
 /// KV cache for one sequence across all layers.
 #[derive(Clone, Debug)]
@@ -25,9 +35,15 @@ impl KvCache {
         }
     }
 
-    /// Bytes held by this cache (capacity, not fill).
+    /// Bytes held by this cache (capacity: the full `max_seq` allocation,
+    /// regardless of fill — see [`Self::bytes_used`] for the fill).
     pub fn bytes(&self) -> usize {
         2 * self.n_layers * self.max_seq * self.kv_dim * 4
+    }
+
+    /// Bytes actually filled (`len` positions across all layers).
+    pub fn bytes_used(&self) -> usize {
+        2 * self.n_layers * self.len * self.kv_dim * 4
     }
 
     pub fn is_full(&self) -> bool {
@@ -62,6 +78,52 @@ impl KvCache {
     /// Drop all cached state (reuse the allocation).
     pub fn clear(&mut self) {
         self.len = 0;
+    }
+}
+
+/// The contiguous cache as a tile source: one whole-cache tile, so the
+/// chunked attention kernel degenerates to the flat loop it replaced
+/// (bit-exact by construction).
+impl KvStore for KvCache {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn kv_dim(&self) -> usize {
+        self.kv_dim
+    }
+
+    fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        KvCache::write(self, layer, pos, k, v)
+    }
+
+    fn clear(&mut self) {
+        KvCache::clear(self)
+    }
+
+    fn tile_tokens(&self) -> usize {
+        self.max_seq
+    }
+
+    fn tile(&self, layer: usize, t: usize, upto: usize) -> (&[f32], &[f32]) {
+        debug_assert_eq!(t, 0, "contiguous cache has a single tile");
+        (self.keys(layer, upto), self.values(layer, upto))
+    }
+
+    fn bytes(&self) -> usize {
+        KvCache::bytes(self)
+    }
+
+    fn bytes_used(&self) -> usize {
+        KvCache::bytes_used(self)
     }
 }
 
@@ -104,5 +166,29 @@ mod tests {
         c.clear();
         assert_eq!(c.len, 0);
         assert!(!c.is_full());
+    }
+
+    #[test]
+    fn bytes_reports_capacity_and_fill_separately() {
+        let mut c = KvCache::new(2, 8, 4);
+        assert_eq!(c.bytes(), 2 * 2 * 8 * 4 * 4);
+        assert_eq!(c.bytes_used(), 0);
+        c.write(0, 0, &[0.0; 4], &[0.0; 4]);
+        c.write(1, 0, &[0.0; 4], &[0.0; 4]);
+        assert_eq!(c.bytes_used(), 2 * 2 * 1 * 4 * 4);
+        assert!(c.bytes_used() <= c.bytes());
+    }
+
+    #[test]
+    fn contiguous_cache_is_a_single_tile() {
+        let mut c = KvCache::new(1, 8, 2);
+        let k = [1.0, 2.0];
+        let v = [3.0, 4.0];
+        c.write(0, 0, &k, &v);
+        assert_eq!(KvStore::tile_tokens(&c), 8);
+        assert_eq!(KvStore::n_tiles(&c, 1), 1);
+        let (keys, vals) = KvStore::tile(&c, 0, 0, 1);
+        assert_eq!(keys, &k);
+        assert_eq!(vals, &v);
     }
 }

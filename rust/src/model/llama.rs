@@ -15,15 +15,23 @@
 //! and prefill runs as true batched GEMMs over the whole prompt
 //! ([`LlamaModel::forward_batch`]) so the Psumbook build cost amortizes
 //! across the batch dimension exactly as the paper's Eq. 3 predicts.
+//!
+//! Every forward path is generic over [`KvStore`]: the same code decodes
+//! against the contiguous per-sequence [`KvCache`] and against the paged
+//! pool (`kvcache::PagedKv`). Attention itself lives in
+//! [`super::attention`] — a chunked GQA kernel that walks the cache
+//! tile-by-tile (page-sized tiles under paging) and is bit-exact against
+//! the flat loop it replaced.
 
+use super::attention::{attend, AttnShape};
 use super::engine_factory::EngineKind;
 use super::kv::KvCache;
 use super::weights::ModelWeights;
 use crate::config::{ModelConfig, ParallelConfig};
 use crate::gemm::scratch::grow_slice;
 use crate::gemm::{Counters, EngineScratch, GemmEngine};
+use crate::kvcache::KvStore;
 use crate::parallel::ShardPlan;
-use crate::util::stats::softmax_inplace;
 use crate::util::threadpool::ThreadPool;
 use std::sync::Arc;
 
@@ -252,14 +260,14 @@ impl LlamaModel {
 
     /// One decode step: token at position `pos` → logits over the vocab,
     /// written into the caller-owned `logits` (`vocab` long). Appends
-    /// this position's K/V to `cache`. This is the zero-allocation hot
-    /// loop: every activation and engine buffer comes from the model's
-    /// reused scratch.
-    pub fn forward_into(
+    /// this position's K/V to `cache` (contiguous or paged). This is the
+    /// zero-allocation hot loop: every activation and engine buffer comes
+    /// from the model's reused scratch.
+    pub fn forward_into<C: KvStore>(
         &mut self,
         token: usize,
         pos: usize,
-        cache: &mut KvCache,
+        cache: &mut C,
         logits: &mut [f32],
     ) {
         let mut s = std::mem::take(&mut self.scratch);
@@ -269,7 +277,7 @@ impl LlamaModel {
 
     /// One decode step: token at position `pos` → logits over the vocab
     /// (allocating wrapper over [`Self::forward_into`]).
-    pub fn forward(&mut self, token: usize, pos: usize, cache: &mut KvCache) -> Vec<f32> {
+    pub fn forward<C: KvStore>(&mut self, token: usize, pos: usize, cache: &mut C) -> Vec<f32> {
         let mut logits = vec![0f32; self.cfg.vocab];
         self.forward_into(token, pos, cache, &mut logits);
         logits
@@ -285,32 +293,52 @@ impl LlamaModel {
     /// Matches token-by-token [`Self::forward`] up to float
     /// reassociation inside the engines' batched kernels (bit-exact for
     /// the dense engine, ≤1e-5 rel-L2 for the table kernels).
-    pub fn forward_batch(
+    pub fn forward_batch<C: KvStore>(
         &mut self,
         tokens: &[usize],
         pos0: usize,
-        cache: &mut KvCache,
+        cache: &mut C,
     ) -> Vec<f32> {
+        self.forward_batch_logits(tokens, pos0, cache, true)
+            .expect("logits requested")
+    }
+
+    /// [`Self::forward_batch`] with the LM head optional: when
+    /// `want_logits` is false the final chunk also skips the lm_head GEMM
+    /// (the largest single GEMM in the model) and `None` is returned —
+    /// the right call for prefill chunks that are *not* the end of the
+    /// prompt, whose logits the scheduler would discard.
+    pub fn forward_batch_logits<C: KvStore>(
+        &mut self,
+        tokens: &[usize],
+        pos0: usize,
+        cache: &mut C,
+        want_logits: bool,
+    ) -> Option<Vec<f32>> {
         assert!(!tokens.is_empty(), "forward_batch needs at least one token");
-        let mut logits = vec![0f32; self.cfg.vocab];
+        let mut logits = if want_logits { vec![0f32; self.cfg.vocab] } else { Vec::new() };
         let mut s = std::mem::take(&mut self.scratch);
         let mut pos = pos0;
         let n_chunks = tokens.len().div_ceil(MAX_PREFILL_CHUNK);
         for (ci, chunk) in tokens.chunks(MAX_PREFILL_CHUNK).enumerate() {
-            // The LM head (the largest single GEMM) only matters for the
-            // final position — skip it on non-final chunks.
-            let want = ci + 1 == n_chunks;
+            // The LM head only matters for the final position — skip it
+            // on non-final chunks (and entirely when unwanted).
+            let want = want_logits && ci + 1 == n_chunks;
             let out = if want { Some(logits.as_mut_slice()) } else { None };
             self.step_batch(chunk, pos, cache, out, &mut s);
             pos += chunk.len();
         }
         self.scratch = s;
-        logits
+        if want_logits {
+            Some(logits)
+        } else {
+            None
+        }
     }
 
     /// Run a whole prompt (from position 0), returning logits after the
     /// final token.
-    pub fn prefill(&mut self, tokens: &[usize], cache: &mut KvCache) -> Vec<f32> {
+    pub fn prefill<C: KvStore>(&mut self, tokens: &[usize], cache: &mut C) -> Vec<f32> {
         self.forward_batch(tokens, 0, cache)
     }
 
@@ -319,11 +347,11 @@ impl LlamaModel {
     /// When `logits` is `Some`, runs the LM head on the final position
     /// and writes its logits; `None` skips the LM head entirely
     /// (non-final prefill chunks only need the KV cache side effects).
-    fn step_batch(
+    fn step_batch<C: KvStore>(
         &self,
         tokens: &[usize],
         pos0: usize,
-        cache: &mut KvCache,
+        cache: &mut C,
         logits: Option<&mut [f32]>,
         s: &mut ForwardScratch,
     ) {
@@ -333,7 +361,7 @@ impl LlamaModel {
         let d = cfg.hidden;
         let hd = cfg.head_dim();
         let kv_dim = cfg.kv_dim();
-        let groups = cfg.n_heads / cfg.n_kv_heads;
+        let shape = AttnShape::of(cfg);
         let half = hd / 2;
 
         let h = grow_slice(&mut s.h, m * d);
@@ -377,30 +405,22 @@ impl LlamaModel {
                     &vv[b * kv_dim..(b + 1) * kv_dim],
                 );
             }
-            attn_out.fill(0.0);
-            // Causal attention per position: position `pos0 + b` attends
-            // to `0..=pos0+b`, all already written above.
+            // Causal attention per position through the chunked kernel:
+            // position `pos0 + b` attends to `0..=pos0+b`, all already
+            // written above; the kernel walks the cache tile-by-tile
+            // (page-sized tiles under paging, one tile contiguous).
             for b in 0..m {
                 let upto = pos0 + b + 1;
-                let keys = cache.keys(layer_i, upto);
-                let vals = cache.values(layer_i, upto);
-                let sc = &mut scores[..upto];
-                for head in 0..cfg.n_heads {
-                    let kv_head = head / groups;
-                    let qh = &q[b * d + head * hd..b * d + (head + 1) * hd];
-                    for (p, scv) in sc.iter_mut().enumerate() {
-                        let kh = &keys[p * kv_dim + kv_head * hd..p * kv_dim + (kv_head + 1) * hd];
-                        *scv = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
-                    }
-                    softmax_inplace(sc);
-                    let out = &mut attn_out[b * d + head * hd..b * d + (head + 1) * hd];
-                    for (p, &scv) in sc.iter().enumerate() {
-                        let vh = &vals[p * kv_dim + kv_head * hd..p * kv_dim + (kv_head + 1) * hd];
-                        for t in 0..hd {
-                            out[t] += scv * vh[t];
-                        }
-                    }
-                }
+                attend(
+                    &*cache,
+                    layer_i,
+                    &shape,
+                    &q[b * d..(b + 1) * d],
+                    upto,
+                    scale,
+                    scores,
+                    &mut attn_out[b * d..(b + 1) * d],
+                );
             }
             l.wo.gemm_into(attn_out, m, proj, eng);
             for i in 0..m * d {

@@ -5,13 +5,35 @@
 //! resulting models are compared on perplexity and task accuracy
 //! (`crate::eval`), reproducing the paper's Tables 4/5 and Figure 4(b)
 //! trends on the tiny model.
+//!
+//! ## KV cache and attention
+//!
+//! Every forward path ([`LlamaModel::forward_into`] decode,
+//! [`LlamaModel::forward_batch`] batched prefill) is generic over
+//! [`crate::kvcache::KvStore`], so the same code runs against two cache
+//! representations:
+//!
+//! - [`KvCache`] (this module) — one contiguous `max_seq` allocation per
+//!   sequence, used by direct model runs (eval, benches, examples);
+//! - `kvcache::PagedKv` — page-table views into the shared
+//!   `kvcache::BlockPool` arena, used by the serving backend so pool
+//!   pages (not `slots × max_seq`) bound KV memory.
+//!
+//! Attention is a real kernel now, not an inline loop:
+//! [`attention::attend`] is a chunked two-pass GQA kernel that walks the
+//! cache tile-by-tile (tile height = pool page size) and is **bit-exact**
+//! against the flat loop for any tile size — so paging is purely a memory
+//! layout decision, never a numerics one. The page size is thereby an
+//! attention tiling knob to tune like the GEMM `tile_w`/`tile_h`.
 
+pub mod attention;
 pub mod engine_factory;
 pub mod kv;
 pub mod llama;
 pub mod sampler;
 pub mod weights;
 
+pub use attention::{attend, AttnShape};
 pub use engine_factory::EngineKind;
 pub use kv::KvCache;
 pub use llama::{rmsnorm, silu, LlamaModel, MAX_PREFILL_CHUNK};

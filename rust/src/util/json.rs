@@ -91,6 +91,18 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing/invalid integer field '{key}'"))
     }
 
+    /// Optional-field helper: `default` when the key is absent, an error
+    /// when present but not a non-negative integer (so typos fail loudly
+    /// instead of silently falling back).
+    pub fn opt_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.as_usize().ok_or_else(|| anyhow::anyhow!("invalid integer field '{key}'"))
+            }
+        }
+    }
+
     pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
         self.get(key)
             .and_then(|v| v.as_f64())

@@ -1,0 +1,107 @@
+//! Long-context serving smoke test: a prompt that dwarfs the pool page
+//! size runs end-to-end through the coordinator on a tiny model —
+//! budgeted multi-step prefill, paged attention over many pages, decode,
+//! completion, and full pool reclamation.
+//!
+//! This is the CI guard for the paged-KV serving path at context lengths
+//! the unit tests don't reach (prompt ≫ page_size, many pages per
+//! sequence, prefill spanning several scheduler steps).
+
+use codegemm::config::{KvConfig, ModelConfig, ServeConfig};
+use codegemm::coordinator::{Batcher, Metrics, NativeBackend, Request};
+use codegemm::model::{EngineKind, ModelWeights};
+use std::sync::Arc;
+
+/// A tiny model with a long context window (the stock tiny config stops
+/// at 128 positions).
+fn long_ctx_config() -> ModelConfig {
+    ModelConfig {
+        name: "tiny-long".into(),
+        vocab: 256,
+        hidden: 64,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 2,
+        ffn: 128,
+        max_seq: 384,
+        rope_theta_milli: 10_000_000,
+    }
+}
+
+#[test]
+fn long_prompt_serves_and_reclaims_through_paged_pool() {
+    let cfg_model = long_ctx_config();
+    let w = ModelWeights::random(cfg_model.clone(), 17);
+    // 16-token pages, auto pool (2 slots × ceil(384/16) = 48 pages).
+    let kv = KvConfig { page_size: 16, pool_pages: 0 };
+    let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 2, &kv));
+    let cfg = ServeConfig {
+        max_batch: 2,
+        max_new_tokens: 4,
+        temperature: 0.0,
+        // Prompt ≫ budget: prefill must span several scheduler steps.
+        prefill_budget: 96,
+        kv,
+        ..Default::default()
+    };
+    let mut b = Batcher::new(backend, cfg, Arc::new(Metrics::new()));
+
+    let prompt: Vec<usize> = (0..300).map(|i| (i * 7) % 255 + 1).collect();
+    assert!(b.submit(Request::new(1, prompt.clone(), 4)));
+    let out = b.run_to_completion();
+
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].tokens.len(), 4, "finish: {:?}", out[0].finish);
+    let report = b.metrics.report();
+    assert_eq!(report.prefill_tokens, 300);
+    assert_eq!(report.decode_tokens as usize, 3, "first token comes from prefill logits");
+    // Budgeted prefill: 300 tokens at ≤96/step needs ≥ 4 prefill steps.
+    assert!(report.steps >= 4 + 3, "steps: {}", report.steps);
+
+    // Admission claims the whole lifetime up front: ceil(304/16) = 19
+    // pages; the pool high-water mark must see it and completion must
+    // return every page.
+    let kv_stats = report.kv.expect("pool-backed backend");
+    assert!(kv_stats.pool.used_hwm >= 19, "hwm: {}", kv_stats.pool.used_hwm);
+    assert_eq!(kv_stats.pool.free_pages, kv_stats.pool.total_pages, "full reclamation");
+    assert_eq!(kv_stats.pool.used_pages, 0);
+}
+
+#[test]
+fn long_prompt_greedy_output_matches_direct_model_run() {
+    // The scheduler's chunking (budget 96 → steps of 96/96/96/12, each
+    // internally chunked at MAX_PREFILL_CHUNK) must not change greedy
+    // outputs vs a single whole-prompt prefill on the bare model.
+    let cfg_model = long_ctx_config();
+    let w = ModelWeights::random(cfg_model.clone(), 17);
+    let prompt: Vec<usize> = (0..300).map(|i| (i * 7) % 255 + 1).collect();
+
+    // Direct model run (contiguous cache).
+    let mut model = codegemm::model::LlamaModel::load(&w, EngineKind::Dense, None);
+    let mut cache = model.new_cache();
+    let mut logits = model.forward_batch(&prompt, 0, &mut cache);
+    let mut want = Vec::new();
+    for step in 0..4 {
+        let tok = codegemm::model::argmax(&logits);
+        want.push(tok);
+        if step < 3 {
+            logits = model.forward(tok, prompt.len() + step, &mut cache);
+        }
+    }
+
+    // Served run (paged pool, budgeted prefill).
+    let kv = KvConfig { page_size: 16, pool_pages: 0 };
+    let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 2, &kv));
+    let cfg = ServeConfig {
+        max_batch: 2,
+        max_new_tokens: 4,
+        temperature: 0.0,
+        prefill_budget: 96,
+        kv,
+        ..Default::default()
+    };
+    let mut b = Batcher::new(backend, cfg, Arc::new(Metrics::new()));
+    b.submit(Request::new(1, prompt, 4));
+    let out = b.run_to_completion();
+    assert_eq!(out[0].tokens, want, "scheduled serving diverged from the direct model run");
+}

@@ -1,0 +1,184 @@
+//! Property tests pinning the paged KV cache to the contiguous one
+//! (via `util::proptest`):
+//!
+//! - a full model forward (batched prefill + decode) over `kvcache::PagedKv`
+//!   is **bit-identical** (`==`, not approximate) to the same forward over
+//!   the contiguous `model::KvCache`, across page sizes × head geometries
+//!   × prompt lengths (including lengths straddling page boundaries) —
+//!   the acceptance bar for the chunked attention kernel: paging is a
+//!   memory layout decision, never a numerics one;
+//! - cache metadata (fill length, `bytes_used`) agrees between the two
+//!   representations;
+//! - decoding with paging enabled stays allocation-free after warmup
+//!   (page-table capacity and pool storage never grow).
+
+use codegemm::config::{ModelConfig, QuantConfig};
+use codegemm::kvcache::{BlockPool, KvLayout, KvStore, PagedKv, SeqKv};
+use codegemm::model::{argmax, EngineKind, LlamaModel, ModelWeights};
+use codegemm::util::proptest as pt;
+
+/// One random paged-vs-contiguous scenario.
+#[derive(Clone, Copy, Debug)]
+struct KvCase {
+    page_size: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+    prompt_len: usize,
+    decode_steps: usize,
+    seed: u64,
+}
+
+const PAGE_SIZES: [usize; 8] = [1, 2, 3, 4, 5, 8, 16, 64];
+const HEADS: [(usize, usize); 4] = [(2, 1), (4, 2), (4, 4), (4, 1)];
+const MAX_SEQ: usize = 48;
+
+fn gen_case() -> impl pt::Gen<KvCase> {
+    pt::gen_fn(|rng| {
+        let (n_heads, n_kv_heads) = HEADS[rng.index(HEADS.len())];
+        KvCase {
+            page_size: PAGE_SIZES[rng.index(PAGE_SIZES.len())],
+            n_heads,
+            n_kv_heads,
+            head_dim: if rng.index(2) == 0 { 4 } else { 8 },
+            // Straddles page boundaries for every page size above.
+            prompt_len: 1 + rng.index(40),
+            decode_steps: rng.index(4),
+            seed: rng.next_u64(),
+        }
+    })
+}
+
+fn model_config(c: &KvCase) -> ModelConfig {
+    ModelConfig {
+        name: "paged-prop".into(),
+        vocab: 48,
+        hidden: c.n_heads * c.head_dim,
+        n_layers: 2,
+        n_heads: c.n_heads,
+        n_kv_heads: c.n_kv_heads,
+        ffn: 3 * c.n_heads * c.head_dim,
+        max_seq: MAX_SEQ,
+        rope_theta_milli: 10_000_000,
+    }
+}
+
+fn prompt_for(c: &KvCase, vocab: usize) -> Vec<usize> {
+    (0..c.prompt_len).map(|i| (i * 13 + c.seed as usize) % vocab).collect()
+}
+
+/// Run prefill + a few decode steps under both cache representations and
+/// demand bitwise-equal logits at every step.
+fn check_case(c: &KvCase, kind: EngineKind) -> Result<(), String> {
+    let cfg = model_config(c);
+    let w = ModelWeights::random(cfg.clone(), c.seed);
+    let mut model = LlamaModel::load(&w, kind, None);
+    let prompt = prompt_for(c, cfg.vocab);
+
+    // Contiguous reference.
+    let mut flat = model.new_cache();
+    let lf = model.forward_batch(&prompt, 0, &mut flat);
+
+    // Paged run through the pool.
+    let layout = KvLayout {
+        n_layers: cfg.n_layers,
+        kv_dim: cfg.kv_dim(),
+        page_size: c.page_size,
+        max_seq: MAX_SEQ,
+    };
+    let mut pool = BlockPool::new(layout, layout.max_pages_per_seq());
+    let mut seq = SeqKv::with_capacity(layout.max_pages_per_seq());
+    let mut paged = PagedKv::bind(&mut pool, &mut seq);
+    let lp = model.forward_batch(&prompt, 0, &mut paged);
+
+    pt::ensure(lf == lp, format!("prefill logits not bit-identical ({c:?})"))?;
+    pt::ensure(
+        flat.len == paged.len() && paged.len() == prompt.len(),
+        format!("cache fill diverged: flat {} vs paged {} ({c:?})", flat.len, paged.len()),
+    )?;
+    pt::ensure(
+        KvStore::bytes_used(&flat) == paged.bytes_used(),
+        format!("bytes_used diverged ({c:?})"),
+    )?;
+    // Held bytes: the paged side holds whole pages; both bound the fill.
+    pt::ensure(paged.bytes() >= paged.bytes_used(), format!("held < filled ({c:?})"))?;
+
+    // Greedy decode must stay bitwise locked step by step.
+    let (mut lf, mut lp) = (lf, lp);
+    for step in 0..c.decode_steps {
+        let pos = prompt.len() + step;
+        if pos >= MAX_SEQ {
+            break;
+        }
+        let (tf, tp) = (argmax(&lf), argmax(&lp));
+        pt::ensure(tf == tp, format!("greedy token diverged at step {step} ({c:?})"))?;
+        lf = model.forward(tf, pos, &mut flat);
+        lp = model.forward(tp, pos, &mut paged);
+        pt::ensure(lf == lp, format!("decode logits not bit-identical at step {step} ({c:?})"))?;
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_paged_prefill_and_decode_bit_exact_dense() {
+    let cfg = pt::PropConfig { cases: 28, ..Default::default() };
+    pt::assert_prop("paged == contiguous (dense)", cfg, &gen_case(), |c: &KvCase| {
+        check_case(c, EngineKind::Dense)
+    });
+}
+
+#[test]
+fn prop_paged_bit_exact_quantized_engine() {
+    // The cache representation must also be invisible to table-kernel
+    // engines: attention is the only consumer of the cache, so even a
+    // quantized model's logits are bitwise identical across paging.
+    let cfg = pt::PropConfig { cases: 6, seed: 0xFEED_BEEF, ..Default::default() };
+    // Row-wise normalization (g = -1): valid for every sampled layer
+    // width (all are multiples of v = 4).
+    let quant = QuantConfig::new(4, 1, 6, -1).unwrap();
+    pt::assert_prop("paged == contiguous (codegemm)", cfg, &gen_case(), |c: &KvCase| {
+        // Quantization requires hidden % v == 0 — all sampled dims are
+        // multiples of 8, so every case is valid.
+        check_case(c, EngineKind::codegemm(quant))
+    });
+}
+
+#[test]
+fn paged_decode_is_allocation_free_after_warmup() {
+    let c = KvCase {
+        page_size: 4,
+        n_heads: 4,
+        n_kv_heads: 2,
+        head_dim: 8,
+        prompt_len: 6,
+        decode_steps: 0,
+        seed: 99,
+    };
+    let cfg = model_config(&c);
+    let w = ModelWeights::random(cfg.clone(), c.seed);
+    let mut model = LlamaModel::load(&w, EngineKind::Dense, None);
+    let layout = KvLayout {
+        n_layers: cfg.n_layers,
+        kv_dim: cfg.kv_dim(),
+        page_size: c.page_size,
+        max_seq: MAX_SEQ,
+    };
+    let mut pool = BlockPool::new(layout, layout.max_pages_per_seq());
+    let mut seq = SeqKv::with_capacity(layout.max_pages_per_seq());
+    let mut logits = vec![0f32; cfg.vocab];
+    {
+        let mut paged = PagedKv::bind(&mut pool, &mut seq);
+        model.forward_into(1, 0, &mut paged, &mut logits);
+    }
+    let warm_cap = seq.page_capacity();
+    // Decode across several page boundaries: pages are claimed from the
+    // free list (pool churn) but no buffer grows.
+    for pos in 1..30 {
+        let mut paged = PagedKv::bind(&mut pool, &mut seq);
+        let tok = argmax(&logits);
+        model.forward_into(tok, pos, &mut paged, &mut logits);
+    }
+    assert_eq!(seq.page_capacity(), warm_cap, "page table reallocated during decode");
+    assert_eq!(seq.n_pages(), 30usize.div_ceil(c.page_size));
+    assert_eq!(pool.stats().allocated as usize, seq.n_pages(), "one pop per page span");
+}
