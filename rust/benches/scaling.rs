@@ -28,7 +28,8 @@ use codegemm::bench::harness::{black_box, run_bench, BenchOptions};
 use codegemm::bench::workloads::{scaled_block_shapes, GemmShape, LLAMA3_70B, LLAMA3_8B};
 use codegemm::config::QuantConfig;
 use codegemm::gemm::{
-    CodeGemmEngine, DenseEngine, DequantEngine, EngineScratch, GemmEngine, LutGemmEngine,
+    CodeGemmEngine, DenseEngine, DequantEngine, EngineScratch, GemmEngine, GemmGroup, GroupMember,
+    LutGemmEngine,
 };
 use codegemm::kvcache::{BlockPool, KvLayout, KvStore, PagedKv, SeqKv};
 use codegemm::model::{attend, AttnShape, KvCache};
@@ -309,7 +310,7 @@ fn main() {
                 }
             }
             let q = rng.normal_vec(shape.n_heads * shape.head_dim, 1.0);
-            let mut scores = vec![0f32; ctx];
+            let mut scores = vec![0f32; shape.scores_len(ctx)];
             let mut out = vec![0f32; q.len()];
             let variant = if page == 0 { "flat".to_string() } else { format!("{page}") };
             let held_kib = if page == 0 { flat.bytes() } else { paged.bytes() } / 1024;
@@ -347,5 +348,131 @@ fn main() {
         "# acceptance: per-page latency should track the flat baseline closely at every \
          context (tiling overhead is bookkeeping only), while pool KiB for short contexts \
          stays proportional to ctx rather than max_seq"
+    );
+
+    // ---- matrix 5: fused projection groups (build once, gather Q/K/V) ----
+    // Fused vs unfused over threads × M × the 8B/70B attention (Q/K/V)
+    // and MLP (gate/up) sets, all members sliced from one joint
+    // quantization (exactly what `EngineKind::build_projection_set`
+    // loads). "b/r" is the iteration-invariant build-to-read op ratio;
+    // "factor" (on the fused row) is unfused-b/r over fused-b/r — the
+    // per-layer build-MAC drop, which must reach the member count at
+    // every point (3× for Q/K/V, 2× for gate/up; more at t=1 where the
+    // unfused serial engines also re-build per row block).
+    println!(
+        "\n# fused projection groups: one Psumbook build per k-tile shared by Q/K/V \
+         (resp. gate/up) vs one build per projection"
+    );
+    println!(
+        "{:<46} {:>7} {:>4} {:>9} {:>12} {:>10} {:>12} {:>7} {:>6}",
+        "group / shape", "threads", "M", "variant", "mean us", "b/r", "build share", "factor", "check"
+    );
+    let mut fused_ok = true;
+    for geom in [&LLAMA3_8B, &LLAMA3_70B] {
+        let shapes = scaled_block_shapes(geom, 1, scale);
+        let pick = |label: &str| shapes.iter().find(|(l, _)| *l == label).expect("shape").1;
+        for (set_label, member_shapes) in [
+            ("qkv", vec![pick("q_proj"), pick("k_proj"), pick("v_proj")]),
+            ("gate_up", vec![pick("gate_proj"), pick("up_proj")]),
+        ] {
+            let n_members = member_shapes.len();
+            let k = member_shapes[0].k;
+            let n_total: usize = member_shapes.iter().map(|s| s.n).sum();
+            let w = Prng::seeded(17).normal_vec(n_total * k, 0.02);
+            let q = Quantizer::new(cfg).with_refinement(0).quantize(&w, n_total, k);
+            let codes = q.codes.unpack(); // once per set
+            let mut ranges = Vec::with_capacity(n_members);
+            let mut r0 = 0usize;
+            for s in &member_shapes {
+                ranges.push((r0, r0 + s.n));
+                r0 += s.n;
+            }
+            for t in THREADS {
+                for mb in M_SWEEP {
+                    let x = Prng::seeded(18).normal_vec(k * mb, 1.0);
+                    let mut build_read = [0f64; 2];
+                    let mut share = [0f64; 2];
+                    for (vi, fused) in [false, true].into_iter().enumerate() {
+                        let pool = if t > 1 { Some(Arc::new(ThreadPool::new(t))) } else { None };
+                        let members: Vec<GroupMember> = ranges
+                            .iter()
+                            .map(|&(a, b)| {
+                                let mq = shard::slice_rows_unpacked(&q, &codes, a, b);
+                                if t > 1 {
+                                    let plan = ShardPlan::new(b - a, t, 1, 1);
+                                    let mcodes = mq.codes.unpack();
+                                    let shards = plan
+                                        .shards
+                                        .iter()
+                                        .map(|&(s0, s1)| {
+                                            CodeGemmEngine::from_quantized(
+                                                &shard::slice_rows_unpacked(&mq, &mcodes, s0, s1),
+                                            )
+                                        })
+                                        .collect();
+                                    GroupMember::sharded(plan, shards)
+                                } else {
+                                    GroupMember::serial(CodeGemmEngine::from_quantized(&mq))
+                                }
+                            })
+                            .collect();
+                        let group = GemmGroup::new(members, pool).with_fused(fused);
+                        let mut outs: Vec<Vec<f32>> =
+                            member_shapes.iter().map(|s| vec![0f32; s.n * mb]).collect();
+                        let mut scratch = EngineScratch::new();
+                        let variant = if fused { "fused" } else { "unfused" };
+                        let name = format!(
+                            "{}-{set_label} {}x{k} t{t} M{mb} {variant}",
+                            geom.name, n_total
+                        );
+                        let r = run_bench(&name, opts, || {
+                            {
+                                let mut views: Vec<&mut [f32]> =
+                                    outs.iter_mut().map(|y| y.as_mut_slice()).collect();
+                                group.gemm_group_into(&x, mb, &mut views, &mut scratch);
+                            }
+                            black_box(&outs);
+                        });
+                        // Exact counts scale uniformly with iterations, so
+                        // these ratios are iteration-invariant.
+                        build_read[vi] = scratch.counters.build_ops as f64
+                            / scratch.counters.read_ops.max(1) as f64;
+                        share[vi] = scratch.counters.build_share_ops();
+                        let (factor_s, check) = if vi == 0 {
+                            (String::new(), "")
+                        } else {
+                            let factor = build_read[0] / build_read[1];
+                            let ok = share[1] <= share[0] + 1e-12
+                                && factor >= n_members as f64 * 0.999;
+                            if !ok {
+                                fused_ok = false;
+                            }
+                            (format!("{factor:.2}x"), if ok { "ok" } else { "FAIL" })
+                        };
+                        println!(
+                            "{:<46} {:>7} {:>4} {:>9} {:>12.1} {:>10.4} {:>12.4} {:>7} {:>6}",
+                            format!("{}-{set_label} {}x{}", geom.name, n_total, k),
+                            t,
+                            mb,
+                            variant,
+                            r.mean_us(),
+                            build_read[vi],
+                            share[vi],
+                            factor_s,
+                            check
+                        );
+                    }
+                }
+            }
+        }
+    }
+    println!(
+        "# acceptance: {}",
+        if fused_ok {
+            "PASS — fused build share <= unfused at every point, and the M-invariant \
+             build-MAC factor reaches the member count (3x qkv / 2x gate-up)"
+        } else {
+            "FAIL — a fused point fell short of the group amortization factor above"
+        }
     );
 }

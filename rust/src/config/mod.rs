@@ -216,9 +216,18 @@ pub struct ParallelConfig {
     pub shard_lm_head: bool,
     /// Build one shared Psumbook per k-tile, gathered by every row shard
     /// (build once / gather many), instead of per-shard private books.
-    /// Only affects row-sharded CodeGEMM engines; outputs are bit-exact
-    /// either way.
+    /// Only affects CodeGEMM engines; outputs are bit-exact either way.
+    /// `false` is the private-table measurement baseline and therefore
+    /// also vetoes `fused_projections` (a fused group inherently shares
+    /// its build).
     pub shared_psumbook: bool,
+    /// Fuse the projections sharing one input activation (Q/K/V,
+    /// gate/up) around a single Psumbook build per k-tile
+    /// (`gemm::GemmGroup`) instead of building the book once per
+    /// projection. Only affects CodeGEMM-class engines; outputs are
+    /// bit-exact either way — per-layer build MACs drop ~3× (attention)
+    /// / ~2× (MLP) at decode.
+    pub fused_projections: bool,
 }
 
 impl Default for ParallelConfig {
@@ -230,6 +239,7 @@ impl Default for ParallelConfig {
             shard_mlp: true,
             shard_lm_head: true,
             shared_psumbook: true,
+            fused_projections: true,
         }
     }
 }
@@ -243,6 +253,15 @@ impl ParallelConfig {
     /// All layer classes sharded across `n` threads.
     pub fn with_threads(n: usize) -> ParallelConfig {
         ParallelConfig { num_threads: n, ..Default::default() }
+    }
+
+    /// The fused-projection schedule actually in effect:
+    /// `fused_projections` gated by `shared_psumbook` — the
+    /// private-table baseline must veto fusion on *every* path,
+    /// including serial and unsharded layer classes where no
+    /// `GemmGroup`-level toggle would otherwise see `shared_psumbook`.
+    pub fn fused_projections_effective(&self) -> bool {
+        self.fused_projections && self.shared_psumbook
     }
 
     /// Resolved worker count (`num_threads`, or available parallelism
@@ -276,6 +295,7 @@ impl ParallelConfig {
             ("shard_mlp", Json::Bool(self.shard_mlp)),
             ("shard_lm_head", Json::Bool(self.shard_lm_head)),
             ("shared_psumbook", Json::Bool(self.shared_psumbook)),
+            ("fused_projections", Json::Bool(self.fused_projections)),
         ])
     }
 
@@ -306,6 +326,7 @@ impl ParallelConfig {
             shard_mlp: get_bool("shard_mlp", d.shard_mlp)?,
             shard_lm_head: get_bool("shard_lm_head", d.shard_lm_head)?,
             shared_psumbook: get_bool("shared_psumbook", d.shared_psumbook)?,
+            fused_projections: get_bool("fused_projections", d.fused_projections)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -504,9 +525,27 @@ mod tests {
         assert_eq!(c.shard_min_rows, ParallelConfig::default().shard_min_rows);
         assert!(c.shard_attn && c.shard_mlp && c.shard_lm_head);
         assert!(c.shared_psumbook, "shared books are the default");
+        assert!(c.fused_projections, "fused projection groups are the default");
+        // The toggle round-trips off, too.
+        let j = Json::parse(r#"{"fused_projections": false}"#).unwrap();
+        assert!(!ParallelConfig::from_json(&j).unwrap().fused_projections);
         // Invalid values are rejected.
         let bad = Json::parse(r#"{"shard_min_rows": 0}"#).unwrap();
         assert!(ParallelConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn private_table_baseline_vetoes_fused_projections() {
+        // shared_psumbook = false requests private per-tile tables
+        // everywhere — a fused group inherently shares its build, so
+        // the effective fused flag must drop on every path.
+        let base = ParallelConfig::default();
+        assert!(base.fused_projections_effective());
+        let private = ParallelConfig { shared_psumbook: false, ..Default::default() };
+        assert!(private.fused_projections, "raw toggle untouched");
+        assert!(!private.fused_projections_effective(), "baseline must veto fusion");
+        let unfused = ParallelConfig { fused_projections: false, ..Default::default() };
+        assert!(!unfused.fused_projections_effective());
     }
 
     #[test]

@@ -27,9 +27,30 @@ impl Default for KvConfig {
 }
 
 impl KvConfig {
+    /// Largest accepted page size (tokens). A page is the pool's
+    /// allocation quantum — `n_layers × 2 × page_size × kv_dim` floats —
+    /// so a fat-fingered `--page-size 100000000` would try to allocate
+    /// gigabyte pages; reject it at parse time instead of OOMing.
+    pub const MAX_PAGE_SIZE: usize = 1 << 20;
+
+    /// Validate at config parse: every construction path (JSON sections,
+    /// the `serve --page-size/--pool-pages` flags, direct construction
+    /// via [`crate::kvcache::BlockPool::for_model`]) runs this, so a
+    /// zero or absurd page size fails with a clean error instead of a
+    /// divide-by-zero or an unusable pool deeper in the stack.
+    /// (`pool_pages == 0` is valid: it means auto-size, see
+    /// [`KvConfig::pool_pages_for`].)
     pub fn validate(&self) -> Result<()> {
         if self.page_size == 0 {
-            bail!("kv page_size must be positive");
+            bail!("kv page_size must be positive (tokens per pool page)");
+        }
+        if self.page_size > Self::MAX_PAGE_SIZE {
+            bail!(
+                "kv page_size {} exceeds the maximum {} (one page is the pool's \
+                 allocation quantum)",
+                self.page_size,
+                Self::MAX_PAGE_SIZE
+            );
         }
         Ok(())
     }
@@ -39,7 +60,9 @@ impl KvConfig {
         if self.pool_pages > 0 {
             self.pool_pages
         } else {
-            slots.max(1) * max_seq.div_ceil(self.page_size)
+            // `max(1)` guards unvalidated direct construction — validated
+            // configs always have page_size >= 1.
+            slots.max(1) * max_seq.div_ceil(self.page_size.max(1))
         }
     }
 
@@ -200,6 +223,40 @@ mod tests {
         // page_size 0 is rejected.
         let bad = Json::parse(r#"{"page_size": 0}"#).unwrap();
         assert!(KvConfig::from_json(&bad).is_err());
+    }
+
+    /// The serve CLI builds a `KvConfig` straight from `--page-size` /
+    /// `--pool-pages` and validates it; both degenerate page sizes must
+    /// fail with a clean error, and a zero-page-size config must never
+    /// reach the pool math (divide-by-zero) even unvalidated.
+    #[test]
+    fn kv_rejects_degenerate_page_sizes_cleanly() {
+        let zero = KvConfig { page_size: 0, pool_pages: 0 };
+        let err = zero.validate().unwrap_err().to_string();
+        assert!(err.contains("page_size"), "unhelpful error: {err}");
+        // Unvalidated direct use must not divide by zero.
+        assert!(zero.pool_pages_for(128, 4) >= 1);
+
+        let huge = KvConfig { page_size: KvConfig::MAX_PAGE_SIZE + 1, pool_pages: 0 };
+        assert!(huge.validate().is_err());
+        let max = KvConfig { page_size: KvConfig::MAX_PAGE_SIZE, pool_pages: 0 };
+        max.validate().unwrap();
+        // pool_pages = 0 is the documented auto-sizing value, not an error.
+        KvConfig { page_size: 16, pool_pages: 0 }.validate().unwrap();
+    }
+
+    /// A bad `kv` section must fail the whole `ServeConfig` parse (the
+    /// JSON path the server loads), not limp into an unusable pool.
+    #[test]
+    fn serve_config_rejects_bad_kv_section() {
+        let mut j = ServeConfig::default().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert(
+                "kv".into(),
+                Json::parse(r#"{"page_size": 0, "pool_pages": 4}"#).unwrap(),
+            );
+        }
+        assert!(ServeConfig::from_json(&j).is_err());
     }
 
     #[test]

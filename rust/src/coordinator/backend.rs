@@ -17,6 +17,7 @@
 //! under a shared token budget + one decode token per decoding slot).
 
 use crate::config::{KvConfig, ParallelConfig};
+use crate::gemm::Counters;
 use crate::kvcache::{BlockPool, KvStats, PagedKv, SeqKv};
 use crate::model::{EngineKind, LlamaModel, ModelWeights};
 use crate::runtime::ModelRuntime;
@@ -103,6 +104,15 @@ pub trait DecodeBackend: Send {
     fn kv_stats(&self) -> Option<KvStats> {
         None
     }
+    /// Cumulative GEMM work/traffic counters across the backend's model
+    /// (`None` when the backend has no engine-level accounting, e.g. the
+    /// compiled PJRT path). Gauge semantics: counters only grow, so the
+    /// latest snapshot carries the whole serving history — the metrics
+    /// report derives the build share and the fused-projection fanout
+    /// from it.
+    fn engine_counters(&self) -> Option<Counters> {
+        None
+    }
     fn label(&self) -> String;
 }
 
@@ -131,7 +141,20 @@ impl NativeBackend {
         max_batch: usize,
         kv: &KvConfig,
     ) -> NativeBackend {
-        let model = LlamaModel::load(weights, kind, None);
+        NativeBackend::with_kv_fused(weights, kind, max_batch, kv, true)
+    }
+
+    /// [`Self::with_kv`] with the fused-projection schedule explicit —
+    /// the serial backend construction (no worker pool spawned), still
+    /// honoring `ParallelConfig::fused_projections`.
+    pub fn with_kv_fused(
+        weights: &ModelWeights,
+        kind: EngineKind,
+        max_batch: usize,
+        kv: &KvConfig,
+        fused_projections: bool,
+    ) -> NativeBackend {
+        let model = LlamaModel::load_with_options(weights, kind, None, fused_projections);
         NativeBackend::assemble(model, max_batch, kv)
     }
 
@@ -159,7 +182,16 @@ impl NativeBackend {
         kv: &KvConfig,
     ) -> NativeBackend {
         if par.is_serial() {
-            return NativeBackend::with_kv(weights, kind, max_batch, kv);
+            // Serial shard plan, but the fused-projection toggle (gated
+            // by the private-table baseline) still applies — it is
+            // orthogonal to sharding.
+            return NativeBackend::with_kv_fused(
+                weights,
+                kind,
+                max_batch,
+                kv,
+                par.fused_projections_effective(),
+            );
         }
         let model = LlamaModel::load_parallel(weights, kind, None, par, pool);
         NativeBackend::assemble(model, max_batch, kv)
@@ -264,6 +296,10 @@ impl DecodeBackend for NativeBackend {
             slot_bytes: self.seqs.iter().map(|s| s.n_pages() * layout.page_bytes()).collect(),
             slot_bytes_used: self.seqs.iter().map(|s| layout.bytes_for(s.len())).collect(),
         })
+    }
+
+    fn engine_counters(&self) -> Option<Counters> {
+        Some(self.model.total_counters())
     }
 
     fn label(&self) -> String {

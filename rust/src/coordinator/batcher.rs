@@ -235,6 +235,10 @@ impl Batcher {
             if let Some(kv) = self.backend.kv_stats() {
                 self.metrics.on_kv(kv);
             }
+            // Engine work gauge (cumulative counters: latest wins).
+            if let Some(eng) = self.backend.engine_counters() {
+                self.metrics.on_engine(eng);
+            }
         }
         advanced
     }

@@ -1,6 +1,7 @@
-//! Serving metrics: counters, latency summaries and KV-pool occupancy
-//! gauges, shared between the batcher thread and callers.
+//! Serving metrics: counters, latency summaries, KV-pool occupancy and
+//! engine-work gauges, shared between the batcher thread and callers.
 
+use crate::gemm::Counters;
 use crate::kvcache::KvStats;
 use crate::util::stats::Summary;
 use std::sync::Mutex;
@@ -27,6 +28,9 @@ struct Inner {
     /// churn and high-water counters inside it are lifetime totals, so
     /// the latest snapshot carries the whole history).
     kv: Option<KvStats>,
+    /// Latest cumulative engine work counters (gauge, same rationale) —
+    /// the source of the build-share and fused-projection-fanout lines.
+    engine: Option<Counters>,
     started: Option<std::time::Instant>,
     finished: Option<std::time::Instant>,
 }
@@ -67,6 +71,10 @@ pub struct MetricsReport {
     /// churn, per-slot held/filled bytes); `None` for backends without a
     /// pool.
     pub kv: Option<KvStats>,
+    /// Latest cumulative engine work counters (`None` for backends
+    /// without engine-level accounting): GEMM calls, Psumbook
+    /// build-vs-gather split, and the fused-projection fanout per call.
+    pub engine: Option<Counters>,
 }
 
 impl Metrics {
@@ -99,6 +107,13 @@ impl Metrics {
     /// pool-lifetime totals and therefore monotone).
     pub fn on_kv(&self, kv: KvStats) {
         self.inner.lock().unwrap().kv = Some(kv);
+    }
+
+    /// Record the latest cumulative engine counters (gauge semantics:
+    /// engine counters only grow, so the last snapshot carries the whole
+    /// serving history).
+    pub fn on_engine(&self, counters: Counters) {
+        self.inner.lock().unwrap().engine = Some(counters);
     }
 
     /// Record one batcher step: `occupied` slots advanced, consuming
@@ -151,6 +166,7 @@ impl Metrics {
             step_time: summary(&g.step_seconds),
             tokens_per_s: if window.is_finite() { g.decode_tokens as f64 / window } else { 0.0 },
             kv: g.kv.clone(),
+            engine: g.engine.clone(),
         }
     }
 }
@@ -192,6 +208,15 @@ impl MetricsReport {
                 kv.used_bytes() / 1024,
             ));
         }
+        if let Some(e) = &self.engine {
+            out.push_str(&format!(
+                "\nengine:   {} gemm calls, build share {:.1}% (ops), \
+                 fused-projection fanout {:.2}/call",
+                e.calls,
+                100.0 * e.build_share_ops(),
+                e.fanout_per_call(),
+            ));
+        }
         out
     }
 }
@@ -218,6 +243,26 @@ mod tests {
         assert!((r.mean_batch - 2.0).abs() < 1e-9);
         assert!(r.render().contains("mean occupancy 2.00"));
         assert!(r.kv.is_none(), "no pool snapshot recorded");
+    }
+
+    #[test]
+    fn engine_gauge_reports_build_share_and_fanout() {
+        let m = Metrics::new();
+        // Stale snapshot, then the cumulative one: latest wins.
+        m.on_engine(Counters { calls: 1, ..Default::default() });
+        m.on_engine(Counters {
+            calls: 4,
+            build_ops: 10,
+            read_ops: 30,
+            group_fanout: 10,
+            ..Default::default()
+        });
+        let r = m.report();
+        let e = r.engine.as_ref().expect("engine snapshot recorded");
+        assert_eq!(e.calls, 4);
+        let rendered = r.render();
+        assert!(rendered.contains("build share 25.0%"), "{rendered}");
+        assert!(rendered.contains("fanout 2.50/call"), "{rendered}");
     }
 
     #[test]

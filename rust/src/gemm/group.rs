@@ -1,0 +1,516 @@
+//! Fused projection groups: N CodeGEMM engines that share one input
+//! activation (Q/K/V of an attention block, gate/up of a SwiGLU MLP)
+//! executed as **one** build-once/gather-many call.
+//!
+//! The Psumbook for a k-tile depends only on the staged activations and
+//! the codebooks — never on which output rows read it (`psumbook`). A
+//! layer's Q/K/V projections consume the *same* normed hidden vector, so
+//! when they also share codebooks (the factory quantizes the stacked
+//! `[wq; wk; wv]` rows jointly, exactly like row shards are sliced from
+//! one quantized layer), one book per k-tile can serve every row of
+//! every projection. [`GemmGroup`] is that scheduler:
+//!
+//! - **serial** (no worker pool): per k-tile, build the book once in the
+//!   caller's [`EngineScratch`], then every member gathers all of its
+//!   rows from it into its own caller-owned output slice;
+//! - **sharded** (worker pool): `parallel::fanout::shared_book_fan_out_multi`
+//!   builds the book by j-ranges over the pool (phase 1) and fans the
+//!   gather out over the full **shard × member matrix** (phase 2) — the
+//!   book is shared across *both* axes.
+//!
+//! Outputs are bit-exact vs. running the members independently: each
+//! row still accumulates its k-tiles in ascending order against
+//! bit-identical book entries. Build MACs/bytes/time are attributed
+//! **once per group call** regardless of member or shard count
+//! ([`Counters::group_fanout`] records how many member GEMMs shared each
+//! build), so at decode (`M = 1`) a fused Q/K/V drops per-layer build
+//! work 3× and gate/up 2× — the Eq. 3 amortization extended across
+//! projections, the regime LUT-GEMM and VQ-LLM report as decisive for
+//! table-kernel throughput.
+//!
+//! Members whose formats do not match (different `QuantConfig`, tile
+//! width or codebooks), or a group constructed with fusion disabled
+//! ([`GemmGroup::with_fused`]), fall back to correct **independent**
+//! execution: each member runs exactly as an ungrouped (possibly
+//! row-sharded) engine would, one logical call per member.
+
+use crate::gemm::scratch::EngineScratch;
+use crate::gemm::tiling::Tiles;
+use crate::gemm::{CodeGemmEngine, GemmEngine};
+use crate::parallel::fanout::{self, GroupMemberRef, ShardRef};
+use crate::parallel::ShardPlan;
+use crate::util::threadpool::ThreadPool;
+use crate::util::timer::Timer;
+use std::sync::Arc;
+
+/// One projection of a fused group: its row shards plus the plan that
+/// places them (a serial member is one shard covering all rows).
+pub struct GroupMember {
+    plan: ShardPlan,
+    shards: Vec<CodeGemmEngine>,
+}
+
+impl GroupMember {
+    /// An unsharded member: one engine owning every output row.
+    pub fn serial(engine: CodeGemmEngine) -> GroupMember {
+        let n = engine.dims().0;
+        GroupMember { plan: ShardPlan::serial(n), shards: vec![engine] }
+    }
+
+    /// A row-sharded member: `shards[i]` computes the rows of
+    /// `plan.range(i)`.
+    pub fn sharded(plan: ShardPlan, shards: Vec<CodeGemmEngine>) -> GroupMember {
+        assert_eq!(plan.num_shards(), shards.len(), "one engine per shard");
+        assert!(!shards.is_empty(), "member needs at least one shard");
+        for (i, e) in shards.iter().enumerate() {
+            let (r0, r1) = plan.range(i);
+            assert_eq!(e.dims().0, r1 - r0, "shard {i} row count mismatch");
+        }
+        GroupMember { plan, shards }
+    }
+
+    /// Output rows of this member.
+    pub fn n(&self) -> usize {
+        self.plan.len
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn shards(&self) -> &[CodeGemmEngine] {
+        &self.shards
+    }
+}
+
+/// A set of CodeGEMM engines over the same activations fused around one
+/// shared Psumbook build per k-tile. See the module docs for the
+/// schedule; see `model::ProjectionSet` for the layer-level wiring.
+pub struct GemmGroup {
+    members: Vec<GroupMember>,
+    /// Reduction dim shared by every member.
+    k: usize,
+    /// Aligned k-tile width shared by every member shard (valid when
+    /// `fusable`).
+    tile_w: usize,
+    /// Fused schedule requested (the `fused_projections` toggle).
+    fused: bool,
+    /// All member shards share config/codebooks/tile geometry (computed
+    /// once at construction) — the precondition for one shared book.
+    fusable: bool,
+    /// Per member: its *own* shards are book-compatible with each other
+    /// (the independent fallback then still shares one book per member,
+    /// as an ungrouped `ShardedEngine` would).
+    member_compat: Vec<bool>,
+    /// Use per-member shared books on the independent fallback
+    /// (`ParallelConfig::shared_psumbook`).
+    shared_psumbook: bool,
+    /// Worker pool for sharded members / the parallel fused schedule.
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl GemmGroup {
+    /// Wrap pre-built members. All shards of all members must share the
+    /// reduction dim `k`; sharded members require a worker pool. Whether
+    /// the group can actually fuse (identical `QuantConfig`, codebooks
+    /// and aligned tile width across every shard of every member) is
+    /// detected here once — incompatible members are *not* an error,
+    /// they simply execute on the independent fallback.
+    pub fn new(members: Vec<GroupMember>, pool: Option<Arc<ThreadPool>>) -> GemmGroup {
+        assert!(!members.is_empty(), "group needs at least one member");
+        let k = members[0].shards[0].dims().1;
+        for (i, m) in members.iter().enumerate() {
+            for e in &m.shards {
+                assert_eq!(e.dims().1, k, "member {i} reduction dim mismatch");
+            }
+            assert!(pool.is_some() || m.plan.is_serial(), "sharded member {i} needs a worker pool");
+        }
+        let all: Vec<&CodeGemmEngine> = members.iter().flat_map(|m| m.shards.iter()).collect();
+        let fusable = fanout::shared_book_compatible(&all);
+        let member_compat: Vec<bool> = members
+            .iter()
+            .map(|m| fanout::shared_book_compatible(&m.shards.iter().collect::<Vec<_>>()))
+            .collect();
+        let tile_w = members[0].shards[0].kernel_config().tile_w;
+        GemmGroup {
+            members,
+            k,
+            tile_w,
+            fused: true,
+            fusable,
+            member_compat,
+            shared_psumbook: true,
+            pool,
+        }
+    }
+
+    /// Enable/disable the fused schedule (on by default). Off, members
+    /// execute independently — same outputs, one build per member — so
+    /// the group amortization stays directly measurable.
+    pub fn with_fused(mut self, on: bool) -> GemmGroup {
+        self.fused = on;
+        self
+    }
+
+    /// Honor `ParallelConfig::shared_psumbook` (on by default). Off
+    /// means *private per-tile tables everywhere* — the measurement
+    /// baseline — so it vetoes the fused schedule too (fusion IS
+    /// build-sharing) and the independent fallback uses private
+    /// per-shard books instead of one book per member.
+    pub fn with_shared_psumbook(mut self, on: bool) -> GemmGroup {
+        self.shared_psumbook = on;
+        self
+    }
+
+    /// True when calls take the one-shared-build fused path. Requires
+    /// the shared-Psumbook toggle: `shared_psumbook = false` requests
+    /// private tables, which a fused group cannot provide.
+    pub fn uses_fused(&self) -> bool {
+        self.fused && self.fusable && self.shared_psumbook
+    }
+
+    /// True when every member shard shares format and tile geometry.
+    pub fn is_fusable(&self) -> bool {
+        self.fusable
+    }
+
+    pub fn num_members(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn members(&self) -> &[GroupMember] {
+        &self.members
+    }
+
+    /// `(n, k)` of member `i`.
+    pub fn member_dims(&self, i: usize) -> (usize, usize) {
+        (self.members[i].n(), self.k)
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Run the whole group against one activation batch: member `i`'s
+    /// `n_i × m_batch` product is written into `outs[i]` (batch-major,
+    /// fully overwritten), with every internal buffer drawn from — and
+    /// all work counters accumulated into — the caller-owned `scratch`.
+    ///
+    /// Fused: one logical call (`calls += 1`), build work counted once,
+    /// `group_fanout += members`. Independent fallback: one logical call
+    /// per member, exactly as ungrouped engines would count.
+    pub fn gemm_group_into(
+        &self,
+        x: &[f32],
+        m_batch: usize,
+        outs: &mut [&mut [f32]],
+        scratch: &mut EngineScratch,
+    ) {
+        assert_eq!(outs.len(), self.members.len(), "one output slice per member");
+        assert_eq!(x.len(), self.k * m_batch, "activation length mismatch");
+        assert!(m_batch >= 1 && m_batch <= 64, "engine supports m_batch <= 64");
+        for (member, y) in self.members.iter().zip(outs.iter()) {
+            assert_eq!(y.len(), member.n() * m_batch, "member output length mismatch");
+        }
+        if !self.uses_fused() {
+            return self.independent(x, m_batch, outs, scratch);
+        }
+        match &self.pool {
+            Some(pool) => {
+                let refs: Vec<GroupMemberRef<'_, CodeGemmEngine>> = self
+                    .members
+                    .iter()
+                    .map(|m| GroupMemberRef { engines: &m.shards, plan: &m.plan })
+                    .collect();
+                fanout::shared_book_fan_out_multi(pool, &refs, x, m_batch, outs, scratch);
+            }
+            None => self.fused_serial(x, m_batch, outs, scratch),
+        }
+        scratch.counters.group_fanout += self.members.len() as u64;
+    }
+
+    /// Serial fused schedule: per k-tile, build the one book on the
+    /// caller's thread, then each member gathers all of its rows from it
+    /// (members are unsharded here — construction requires a pool
+    /// otherwise).
+    fn fused_serial(
+        &self,
+        x: &[f32],
+        m_batch: usize,
+        outs: &mut [&mut [f32]],
+        scratch: &mut EngineScratch,
+    ) {
+        debug_assert!(self.members.iter().all(|m| m.plan.is_serial()));
+        let e0 = &self.members[0].shards[0];
+        let EngineScratch { counters, buf, book, .. } = scratch;
+        // Gathers accumulate across k-tiles: zero once up front.
+        for y in outs.iter_mut() {
+            y.fill(0.0);
+        }
+        for (c0, c1) in Tiles::new(self.k, self.tile_w) {
+            // One build serves every member (attributed once, the same
+            // accounting as the serial engine's own build phase).
+            e0.build_book(x, m_batch, c0, c1, book, buf, counters);
+            let t = Timer::start();
+            for (member, y) in self.members.iter().zip(outs.iter_mut()) {
+                member.shards[0].gather_into(book, c0, m_batch, y, counters);
+            }
+            counters.read_seconds += t.elapsed_s();
+        }
+        // Each member streams its own per-(row, group) scales once per
+        // logical call.
+        counters.weight_bytes +=
+            self.members.iter().map(|m| m.shards[0].scales_stream_bytes()).sum::<u64>();
+        counters.calls += 1;
+    }
+
+    /// Independent fallback: each member executes exactly as an
+    /// ungrouped engine of the same shape would — serial `gemm_into`, or
+    /// the per-member shared-book / private-table fan-out when sharded.
+    fn independent(
+        &self,
+        x: &[f32],
+        m_batch: usize,
+        outs: &mut [&mut [f32]],
+        scratch: &mut EngineScratch,
+    ) {
+        for ((member, compat), y) in
+            self.members.iter().zip(&self.member_compat).zip(outs.iter_mut())
+        {
+            if member.plan.is_serial() {
+                member.shards[0].gemm_into(x, m_batch, y, scratch);
+                continue;
+            }
+            let pool = self.pool.as_ref().expect("sharded member needs a pool");
+            if self.shared_psumbook && *compat {
+                fanout::shared_book_fan_out(pool, &member.shards, &member.plan, x, m_batch, y, scratch);
+            } else {
+                let ns = member.plan.num_shards();
+                let EngineScratch { counters, buf2, children, .. } = scratch;
+                if children.len() < ns {
+                    children.resize_with(ns, EngineScratch::new);
+                }
+                let engines: Vec<ShardRef> = member.shards.iter().map(|e| e as ShardRef).collect();
+                fanout::column_fan_out(
+                    pool,
+                    &engines,
+                    &member.plan,
+                    x,
+                    m_batch,
+                    y,
+                    buf2,
+                    &mut children[..ns],
+                );
+                fanout::merge_children_into(counters, &mut children[..ns]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QuantConfig;
+    use crate::gemm::Counters;
+    use crate::parallel::shard;
+    use crate::quant::{QuantizedLinear, Quantizer};
+    use crate::util::prng::Prng;
+
+    /// Quantize the stacked member rows jointly (shared codebooks — the
+    /// factory's group construction) and slice members back out.
+    fn stacked(ns: &[usize], k: usize, label: &str, seed: u64) -> (QuantizedLinear, Vec<QuantizedLinear>) {
+        let n_total: usize = ns.iter().sum();
+        let w = Prng::seeded(seed).normal_vec(n_total * k, 0.02);
+        let q = Quantizer::new(QuantConfig::parse_label(label).unwrap()).quantize(&w, n_total, k);
+        let codes = q.codes.unpack();
+        let mut parts = Vec::new();
+        let mut r = 0usize;
+        for &n in ns {
+            parts.push(shard::slice_rows_unpacked(&q, &codes, r, r + n));
+            r += n;
+        }
+        (q, parts)
+    }
+
+    fn serial_group(parts: &[QuantizedLinear]) -> GemmGroup {
+        GemmGroup::new(
+            parts.iter().map(|p| GroupMember::serial(CodeGemmEngine::from_quantized(p))).collect(),
+            None,
+        )
+    }
+
+    /// Independent reference: each member's serial engine on its own.
+    fn reference(parts: &[QuantizedLinear], x: &[f32], mb: usize) -> (Vec<Vec<f32>>, Counters) {
+        let mut counters = Counters::new();
+        let ys = parts
+            .iter()
+            .map(|p| {
+                let mut e = CodeGemmEngine::from_quantized(p);
+                let y = e.gemm(x, mb);
+                counters.merge(e.counters());
+                y
+            })
+            .collect();
+        (ys, counters)
+    }
+
+    #[test]
+    fn fused_group_is_bit_exact_vs_independent_members() {
+        let (ns, k) = ([24usize, 8, 8], 96);
+        let (_, parts) = stacked(&ns, k, "m2v4g32", 1);
+        let group = serial_group(&parts);
+        assert!(group.is_fusable() && group.uses_fused());
+        for mb in [1usize, 3] {
+            let x = Prng::seeded(2 + mb as u64).normal_vec(k * mb, 1.0);
+            let (y_ref, _) = reference(&parts, &x, mb);
+            let mut outs: Vec<Vec<f32>> = ns.iter().map(|&n| vec![f32::NAN; n * mb]).collect();
+            let mut scratch = EngineScratch::new();
+            {
+                let mut views: Vec<&mut [f32]> = outs.iter_mut().map(|y| y.as_mut_slice()).collect();
+                group.gemm_group_into(&x, mb, &mut views, &mut scratch);
+            }
+            for (i, (y, want)) in outs.iter().zip(&y_ref).enumerate() {
+                assert_eq!(y, want, "member {i} diverged (mb={mb})");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_group_counts_build_once_and_records_fanout() {
+        // tile_h (default 2048) covers every member's rows, so each
+        // independent member builds exactly once per k-tile: the fused
+        // group's build MACs must be the independent total divided by
+        // the member count — the pinned group factor.
+        let (ns, k) = ([16usize, 16, 16], 128);
+        let (_, parts) = stacked(&ns, k, "m1v4g32", 3);
+        let group = serial_group(&parts);
+        let x = Prng::seeded(4).normal_vec(k, 1.0);
+        let (_, independent) = reference(&parts, &x, 1);
+        let mut outs: Vec<Vec<f32>> = ns.iter().map(|&n| vec![0f32; n]).collect();
+        let mut scratch = EngineScratch::new();
+        {
+            let mut views: Vec<&mut [f32]> = outs.iter_mut().map(|y| y.as_mut_slice()).collect();
+            group.gemm_group_into(&x, 1, &mut views, &mut scratch);
+        }
+        let fused = &scratch.counters;
+        assert_eq!(independent.build_ops, 3 * fused.build_ops, "3-member group builds once");
+        assert_eq!(independent.read_ops, fused.read_ops, "gather work conserved");
+        assert_eq!(independent.lookups, fused.lookups);
+        assert_eq!(fused.calls, 1, "one logical call for the whole group");
+        assert_eq!(fused.group_fanout, 3, "three members shared each build");
+        assert_eq!(independent.calls, 3);
+        assert_eq!(independent.group_fanout, 0, "plain calls record no fanout");
+        assert!(fused.build_share_ops() < independent.build_share_ops());
+    }
+
+    #[test]
+    fn unfused_group_matches_fused_bit_exactly() {
+        let (ns, k) = ([16usize, 8], 64);
+        let (_, parts) = stacked(&ns, k, "m1v8g32", 5);
+        let x = Prng::seeded(6).normal_vec(k * 2, 1.0);
+        let run = |fused: bool| {
+            let group = serial_group(&parts).with_fused(fused);
+            let mut outs: Vec<Vec<f32>> = ns.iter().map(|&n| vec![f32::NAN; n * 2]).collect();
+            let mut scratch = EngineScratch::new();
+            {
+                let mut views: Vec<&mut [f32]> = outs.iter_mut().map(|y| y.as_mut_slice()).collect();
+                group.gemm_group_into(&x, 2, &mut views, &mut scratch);
+            }
+            (outs, scratch.counters)
+        };
+        let (y_on, c_on) = run(true);
+        let (y_off, c_off) = run(false);
+        assert_eq!(y_on, y_off, "fused and unfused schedules must agree bitwise");
+        assert_eq!(c_off.build_ops, 2 * c_on.build_ops);
+        assert_eq!(c_off.group_fanout, 0);
+        assert_eq!(c_on.group_fanout, 2);
+        // The private-table baseline (`shared_psumbook = false`) vetoes
+        // fusion — a fused group inherently shares its build.
+        let private = serial_group(&parts).with_shared_psumbook(false);
+        assert!(private.is_fusable() && !private.uses_fused());
+    }
+
+    #[test]
+    fn mismatched_member_configs_fall_back_to_independent_calls() {
+        // Members quantized separately (different codebooks) cannot
+        // share a book; the group must detect this and still compute
+        // each member correctly.
+        let k = 64;
+        let qa = {
+            let w = Prng::seeded(7).normal_vec(16 * k, 0.02);
+            Quantizer::new(QuantConfig::parse_label("m1v4g32").unwrap()).quantize(&w, 16, k)
+        };
+        let qb = {
+            let w = Prng::seeded(8).normal_vec(8 * k, 0.02);
+            Quantizer::new(QuantConfig::parse_label("m2v8g32").unwrap()).quantize(&w, 8, k)
+        };
+        let group = GemmGroup::new(
+            vec![
+                GroupMember::serial(CodeGemmEngine::from_quantized(&qa)),
+                GroupMember::serial(CodeGemmEngine::from_quantized(&qb)),
+            ],
+            None,
+        );
+        assert!(!group.is_fusable(), "mismatched formats must not fuse");
+        let x = Prng::seeded(9).normal_vec(k, 1.0);
+        let mut ya = vec![f32::NAN; 16];
+        let mut yb = vec![f32::NAN; 8];
+        let mut scratch = EngineScratch::new();
+        group.gemm_group_into(&x, 1, &mut [&mut ya[..], &mut yb[..]], &mut scratch);
+        assert_eq!(ya, CodeGemmEngine::from_quantized(&qa).gemv(&x));
+        assert_eq!(yb, CodeGemmEngine::from_quantized(&qb).gemv(&x));
+        assert_eq!(scratch.counters.calls, 2, "independent fallback: one call per member");
+        assert_eq!(scratch.counters.group_fanout, 0);
+    }
+
+    #[test]
+    fn sharded_fused_group_matches_serial_fused_group() {
+        let (ns, k) = ([24usize, 12, 12], 128);
+        let (_, parts) = stacked(&ns, k, "m2v8g32", 11);
+        let pool = Arc::new(ThreadPool::new(3));
+        let sharded_group = GemmGroup::new(
+            parts
+                .iter()
+                .map(|p| {
+                    let plan = ShardPlan::new(p.n, 3, 1, 1);
+                    let codes = p.codes.unpack();
+                    let shards = plan
+                        .shards
+                        .iter()
+                        .map(|&(r0, r1)| {
+                            CodeGemmEngine::from_quantized(&shard::slice_rows_unpacked(
+                                p, &codes, r0, r1,
+                            ))
+                        })
+                        .collect();
+                    GroupMember::sharded(plan, shards)
+                })
+                .collect(),
+            Some(pool),
+        );
+        assert!(sharded_group.uses_fused());
+        let serial = serial_group(&parts);
+        for mb in [1usize, 4] {
+            let x = Prng::seeded(12 + mb as u64).normal_vec(k * mb, 1.0);
+            let run = |g: &GemmGroup| {
+                let mut outs: Vec<Vec<f32>> = ns.iter().map(|&n| vec![f32::NAN; n * mb]).collect();
+                let mut scratch = EngineScratch::new();
+                {
+                    let mut views: Vec<&mut [f32]> =
+                        outs.iter_mut().map(|y| y.as_mut_slice()).collect();
+                    g.gemm_group_into(&x, mb, &mut views, &mut scratch);
+                }
+                (outs, scratch.counters)
+            };
+            let (y_serial, c_serial) = run(&serial);
+            let (y_sharded, c_sharded) = run(&sharded_group);
+            assert_eq!(y_serial, y_sharded, "shard × member gather diverged (mb={mb})");
+            // Build counted once per call on both schedules; gather work
+            // conserved across the shard × member split.
+            assert_eq!(c_serial.build_ops, c_sharded.build_ops);
+            assert_eq!(c_serial.read_ops, c_sharded.read_ops);
+            assert_eq!(c_sharded.calls, 1);
+            assert_eq!(c_sharded.group_fanout, 3);
+        }
+    }
+}

@@ -47,10 +47,26 @@
 //! are counted once per logical call regardless of shard count. Private
 //! per-shard tables (build work scaling with grid size, as on the GPU)
 //! remain available via `ShardedEngine::with_shared_book(false)`.
+//!
+//! ## Fused projection groups
+//!
+//! Projections that consume the *same* activation vector (a layer's
+//! Q/K/V, an MLP's gate/up) and share codebooks (quantized jointly over
+//! their stacked rows) fuse into one [`GemmGroup`] call: per k-tile, ONE
+//! Psumbook is built and then gathered by every row of every member —
+//! the Eq. 3 amortization extended across *both* the row shards and the
+//! member projections (the shard × member gather matrix of
+//! `crate::parallel::fanout`). Build work is counted once per group call
+//! ([`Counters::group_fanout`] records the members amortizing it), so
+//! decode-time build MACs per layer drop ~3× for attention and ~2× for
+//! the MLP. Mismatched member formats — or the `fused_projections`
+//! toggle turned off — fall back to independent per-member calls with
+//! identical (bit-exact) outputs.
 
 pub mod codegemm;
 pub mod dense;
 pub mod dequant;
+pub mod group;
 pub mod lutgemm;
 pub mod psumbook;
 pub mod scratch;
@@ -61,6 +77,7 @@ pub mod uniform_gemm;
 pub use codegemm::CodeGemmEngine;
 pub use dense::DenseEngine;
 pub use dequant::DequantEngine;
+pub use group::{GemmGroup, GroupMember};
 pub use lutgemm::LutGemmEngine;
 pub use psumbook::Psumbook;
 pub use scratch::EngineScratch;
@@ -98,12 +115,23 @@ pub trait GemmEngine {
 
     /// Batched product (allocating compatibility wrapper over
     /// [`GemmEngine::gemm_into`] and the built-in scratch).
+    ///
+    /// The built-in scratch is taken out for the duration of the call
+    /// (so `gemm_into` can borrow `self` immutably) and restored **on
+    /// the unwind path too**: a panicking `gemm_into` (e.g. a shape
+    /// assert) must not discard the scratch buffers and the counters
+    /// accumulated by earlier successful calls.
     fn gemm(&mut self, x: &[f32], m_batch: usize) -> Vec<f32> {
         let n = self.dims().0;
         let mut y = vec![0f32; n * m_batch];
         let mut scratch = std::mem::take(self.scratch_mut());
-        self.gemm_into(x, m_batch, &mut y, &mut scratch);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.gemm_into(x, m_batch, &mut y, &mut scratch)
+        }));
         *self.scratch_mut() = scratch;
+        if let Err(payload) = result {
+            std::panic::resume_unwind(payload);
+        }
         y
     }
 
@@ -217,6 +245,35 @@ mod tests {
 
         // The shared scratch accumulated counters from all three calls.
         assert_eq!(shared.counters.calls, 3);
+    }
+
+    /// A panic inside `gemm_into` (here: a shape assert) must not lose
+    /// the engine's built-in scratch: the wrapper restores it on the
+    /// unwind path, so counters from earlier calls survive and the
+    /// engine keeps working afterwards.
+    #[test]
+    fn wrapper_restores_scratch_when_gemm_into_panics() {
+        let cfg = QuantConfig::new(4, 1, 6, 32).unwrap();
+        let (_, q) = setup(32, 64, cfg);
+        let mut e = CodeGemmEngine::from_quantized(&q);
+        let x = Prng::seeded(23).normal_vec(64, 1.0);
+        let y_ok = e.gemv(&x);
+        let counters_before = e.counters().clone();
+        assert_eq!(counters_before.calls, 1);
+        let footprint_before = e.scratch().footprint_bytes();
+        assert!(footprint_before > 0, "warm scratch must hold buffers");
+
+        // Wrong activation length trips the engine's shape assert.
+        let bad = vec![0f32; 7];
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| e.gemm(&bad, 1)));
+        assert!(panicked.is_err(), "shape mismatch must panic");
+
+        // Scratch (buffers + accumulated counters) survived the unwind …
+        assert_eq!(*e.counters(), counters_before, "counters lost on panic");
+        assert_eq!(e.scratch().footprint_bytes(), footprint_before, "buffers lost on panic");
+        // … and the engine still computes correctly.
+        assert_eq!(e.gemv(&x), y_ok);
+        assert_eq!(e.counters().calls, 2);
     }
 
     /// After the first call, repeated same-shape calls must not grow any

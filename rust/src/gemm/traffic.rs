@@ -29,6 +29,12 @@ pub struct Counters {
     pub read_seconds: f64,
     /// Number of GEMV/GEMM calls.
     pub calls: u64,
+    /// Member GEMMs served by fused projection-group calls: every
+    /// build-once/gather-many *group* call adds its member count (Q/K/V
+    /// ⇒ 3, gate/up ⇒ 2), so `group_fanout / calls` is the average
+    /// number of projections amortizing each shared Psumbook build.
+    /// Plain (ungrouped) calls leave it untouched.
+    pub group_fanout: u64,
 }
 
 impl Counters {
@@ -77,6 +83,21 @@ impl Counters {
         }
     }
 
+    /// Member GEMMs per logical call across fused projection groups —
+    /// the group analogue of [`Counters::build_ops_per_call`]. `calls`
+    /// counts *every* logical GEMM (ungrouped O/down/lm_head included),
+    /// so a fully fused decode layer — 4 calls (qkv, wo, gate_up, down)
+    /// carrying `group_fanout` 5 — reports 1.25; an unfused forward
+    /// reports 0 (no call shared its build). Feeds the coordinator's
+    /// engine gauge.
+    pub fn fanout_per_call(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.group_fanout as f64 / self.calls as f64
+        }
+    }
+
     /// Total bytes moved (all classes).
     pub fn total_bytes(&self) -> u64 {
         self.weight_bytes + self.activation_bytes + self.scratch_bytes
@@ -94,6 +115,7 @@ impl Counters {
         self.build_seconds += other.build_seconds;
         self.read_seconds += other.read_seconds;
         self.calls += other.calls;
+        self.group_fanout += other.group_fanout;
     }
 }
 
@@ -126,11 +148,21 @@ mod tests {
     #[test]
     fn merge_adds() {
         let mut a = Counters { mac_flops: 1, lookups: 2, calls: 1, ..Default::default() };
-        let b = Counters { mac_flops: 10, lookups: 20, calls: 1, ..Default::default() };
+        let b = Counters { mac_flops: 10, lookups: 20, calls: 1, group_fanout: 3, ..Default::default() };
         a.merge(&b);
         assert_eq!(a.mac_flops, 11);
         assert_eq!(a.lookups, 22);
         assert_eq!(a.calls, 2);
+        assert_eq!(a.group_fanout, 3);
+    }
+
+    #[test]
+    fn fanout_per_call_averages_group_members_over_calls() {
+        // One fused Q/K/V call (3 members), one fused gate/up call (2),
+        // two plain calls: 5 fused members over 4 logical calls.
+        let c = Counters { group_fanout: 5, calls: 4, ..Default::default() };
+        assert!((c.fanout_per_call() - 1.25).abs() < 1e-12);
+        assert_eq!(Counters::new().fanout_per_call(), 0.0);
     }
 
     #[test]

@@ -120,6 +120,10 @@ impl BlockPool {
     /// capacity the contiguous per-slot caches would hold, so default
     /// configs change layout, not memory bounds.
     pub fn for_model(cfg: &ModelConfig, kv: &KvConfig, slots: usize) -> BlockPool {
+        // Config paths (JSON, serve CLI) validate at parse; this guards
+        // direct construction with the same clean message instead of a
+        // divide-by-zero in the page math.
+        kv.validate().expect("invalid KvConfig");
         let layout = KvLayout {
             n_layers: cfg.n_layers,
             kv_dim: cfg.kv_dim(),

@@ -106,14 +106,28 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .opt("prompt-len", Some("16"), "prompt length (tokens)")
         .opt("threads", Some("1"), "shard the native model across N worker threads (0 = auto)")
         .opt("page-size", Some("16"), "KV pool page size in tokens (native backend)")
-        .opt("pool-pages", Some("0"), "KV pool pages shared by all slots (0 = auto)");
+        .opt("pool-pages", Some("0"), "KV pool pages shared by all slots (0 = auto)")
+        .opt(
+            "fused-projections",
+            Some("on"),
+            "fuse Q/K/V and gate/up around one Psumbook build per k-tile (on|off)",
+        );
     let m = cmd.parse(args)?;
     let artifacts = Path::new(m.str("artifacts")?);
     let n_requests = m.usize("requests")?;
     let max_new = m.usize("max-new")?;
     let prompt_len = m.usize("prompt-len")?;
     let want = m.str("backend")?;
-    let parallel = ParallelConfig { num_threads: m.usize("threads")?, ..Default::default() };
+    let fused_projections = match m.str("fused-projections")? {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => anyhow::bail!("--fused-projections expects on|off, got '{other}'"),
+    };
+    let parallel = ParallelConfig {
+        num_threads: m.usize("threads")?,
+        fused_projections,
+        ..Default::default()
+    };
 
     let kv = codegemm::config::KvConfig {
         page_size: m.usize("page-size")?,
@@ -139,8 +153,17 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             }
             let weights = load_or_random_weights(artifacts);
             let kind = EngineKind::codegemm(QuantConfig::new(4, 1, 8, 32)?);
+            // Both branches honor the fused-projections toggle; the
+            // worker pool is only spawned when the config actually
+            // shards.
             let be = if cfg.parallel.is_serial() {
-                NativeBackend::with_kv(&weights, kind, cfg.max_batch, &cfg.kv)
+                NativeBackend::with_kv_fused(
+                    &weights,
+                    kind,
+                    cfg.max_batch,
+                    &cfg.kv,
+                    cfg.parallel.fused_projections_effective(),
+                )
             } else {
                 let pool = std::sync::Arc::new(
                     codegemm::util::threadpool::ThreadPool::with_threads(

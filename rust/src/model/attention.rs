@@ -2,21 +2,29 @@
 //!
 //! The kernel walks the cache tile-by-tile through
 //! [`crate::kvcache::KvStore`] — page-sized tiles for the paged pool, one
-//! whole-cache tile for the contiguous [`super::KvCache`] — in two passes
-//! per head:
+//! whole-cache tile for the contiguous [`super::KvCache`] — in two
+//! passes:
 //!
-//! 1. **scores**: `q · k` for every cached position, written into the
-//!    caller's scores scratch, then a single softmax over `0..upto`;
-//! 2. **values**: the softmax-weighted V accumulation into the output
+//! 1. **scores**: `q · k` for every cached position and every head,
+//!    written into the caller's scores scratch (one `upto`-long row per
+//!    head), then a single softmax per head over `0..upto`;
+//! 2. **values**: the softmax-weighted V accumulation into each output
 //!    head.
 //!
-//! Positions are visited in ascending order in both passes and every
-//! per-position float op is identical to the flat loop this kernel
-//! replaced in `llama.rs`, so the result is **bit-exact** for any tile
-//! size (property-pinned by `tests/paged_kv_prop.rs` across page sizes ×
-//! heads × prompt lengths). Two passes were chosen over online softmax
-//! precisely to keep that guarantee — the scores buffer is `max_seq`
-//! floats of reused scratch, which is noise next to the cache itself.
+//! Both passes iterate **tiles outer, heads inner**: each tile is
+//! resolved through [`KvStore::tile`] exactly once per pass and its
+//! contiguous K (resp. V) rows are reused by every head — `2 × n_tiles`
+//! page-table resolutions per call, not `2 × n_heads × n_tiles` (the
+//! paged store walks a page table per resolution, so the head loop was
+//! multiplying pure bookkeeping). Per (head, position) the float ops and
+//! their order are identical to the flat loop this kernel replaced in
+//! `llama.rs` — positions ascend within each head in both passes — so
+//! the result stays **bit-exact** for any tile size (property-pinned by
+//! `tests/paged_kv_prop.rs` across page sizes × heads × prompt lengths).
+//! Two passes were chosen over online softmax precisely to keep that
+//! guarantee — the scores buffer is `n_heads × max_seq` floats of reused
+//! scratch ([`AttnShape::scores_len`]), which is noise next to the cache
+//! itself.
 //!
 //! Used by both the decode step (`m = 1`) and batched prefill (causal:
 //! position `pos0 + b` attends to `0..=pos0 + b`, all already appended).
@@ -46,13 +54,22 @@ impl AttnShape {
     pub fn kv_dim(&self) -> usize {
         self.n_kv_heads * self.head_dim
     }
+
+    /// Scores-scratch length [`attend`] needs for a call over `upto`
+    /// positions: one row per query head (size the buffer once with
+    /// `scores_len(max_seq)`).
+    pub fn scores_len(&self, upto: usize) -> usize {
+        self.n_heads * upto
+    }
 }
 
 /// One query position's GQA attention against `kv` positions `0..upto`
 /// of `layer`.
 ///
 /// - `q`: the RoPE-rotated query row (`n_heads × head_dim`);
-/// - `scores`: caller scratch, at least `upto` long (overwritten);
+/// - `scores`: caller scratch, at least [`AttnShape::scores_len`]
+///   (`n_heads × upto`) long (overwritten) — one row per head, so the
+///   tile loop can sit outside the head loop;
 /// - `out`: the attention output row (`n_heads × head_dim`, overwritten).
 pub fn attend<C: KvStore + ?Sized>(
     kv: &C,
@@ -70,33 +87,44 @@ pub fn attend<C: KvStore + ?Sized>(
     debug_assert!(upto >= 1 && upto <= kv.max_seq());
     debug_assert_eq!(q.len(), shape.n_heads * hd);
     debug_assert_eq!(out.len(), shape.n_heads * hd);
-    debug_assert!(scores.len() >= upto);
+    debug_assert!(scores.len() >= shape.scores_len(upto));
     let tt = kv.tile_tokens();
     let n_tiles = kv.n_tiles(upto);
-    let sc = &mut scores[..upto];
+    let sc = &mut scores[..shape.n_heads * upto];
     out.fill(0.0);
-    for head in 0..shape.n_heads {
-        let kv_head = head / groups;
-        let qh = &q[head * hd..(head + 1) * hd];
-        // Pass 1: raw scores, tile by tile, positions in ascending order.
-        for t in 0..n_tiles {
-            let (keys, _) = kv.tile(layer, t, upto);
-            let p0 = t * tt;
-            let n_in = keys.len() / kv_dim;
+    // Pass 1: raw scores — tiles outer, so each tile (one page-table
+    // resolution on the paged store) serves every head; per head,
+    // positions are still visited in ascending order.
+    for t in 0..n_tiles {
+        let (keys, _) = kv.tile(layer, t, upto);
+        let p0 = t * tt;
+        let n_in = keys.len() / kv_dim;
+        for head in 0..shape.n_heads {
+            let kv_head = head / groups;
+            let qh = &q[head * hd..(head + 1) * hd];
+            let sc_h = &mut sc[head * upto..(head + 1) * upto];
             for j in 0..n_in {
                 let kh = &keys[j * kv_dim + kv_head * hd..j * kv_dim + (kv_head + 1) * hd];
-                sc[p0 + j] = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+                sc_h[p0 + j] = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
             }
         }
-        softmax_inplace(sc);
-        // Pass 2: softmax-weighted V accumulation, same position order.
-        let oh = &mut out[head * hd..(head + 1) * hd];
-        for t in 0..n_tiles {
-            let (_, vals) = kv.tile(layer, t, upto);
-            let p0 = t * tt;
-            let n_in = vals.len() / kv_dim;
+    }
+    for head in 0..shape.n_heads {
+        softmax_inplace(&mut sc[head * upto..(head + 1) * upto]);
+    }
+    // Pass 2: softmax-weighted V accumulation, tiles outer again; each
+    // output head still accumulates positions in ascending order, so
+    // the result is bit-exact vs. the heads-outer loop this replaced.
+    for t in 0..n_tiles {
+        let (_, vals) = kv.tile(layer, t, upto);
+        let p0 = t * tt;
+        let n_in = vals.len() / kv_dim;
+        for head in 0..shape.n_heads {
+            let kv_head = head / groups;
+            let sc_h = &sc[head * upto..(head + 1) * upto];
+            let oh = &mut out[head * hd..(head + 1) * hd];
             for j in 0..n_in {
-                let w = sc[p0 + j];
+                let w = sc_h[p0 + j];
                 let vh = &vals[j * kv_dim + kv_head * hd..j * kv_dim + (kv_head + 1) * hd];
                 for x in 0..hd {
                     oh[x] += w * vh[x];
@@ -184,13 +212,14 @@ mod tests {
             // Lengths straddling page boundaries on purpose.
             fill_both(&mut rng, &mut cache, &mut paged, n_layers, kv_dim, 37);
             let q = rng.normal_vec(shape.n_heads * shape.head_dim, 1.0);
-            let mut scores = vec![0f32; max_seq];
+            let mut flat_scores = vec![0f32; max_seq];
+            let mut scores = vec![0f32; shape.scores_len(max_seq)];
             let mut a = vec![0f32; q.len()];
             let mut b = vec![0f32; q.len()];
             let mut c = vec![0f32; q.len()];
             for upto in [1usize, page_size.min(37), 17, 36, 37] {
                 for layer in 0..n_layers {
-                    attend_flat(&cache, layer, &shape, &q, upto, scale, &mut scores, &mut a);
+                    attend_flat(&cache, layer, &shape, &q, upto, scale, &mut flat_scores, &mut a);
                     attend(&cache, layer, &shape, &q, upto, scale, &mut scores, &mut b);
                     attend(&paged, layer, &shape, &q, upto, scale, &mut scores, &mut c);
                     assert_eq!(a, b, "contiguous tiled != flat (page {page_size}, upto {upto})");
@@ -214,9 +243,10 @@ mod tests {
             let mut rng = Prng::seeded(11);
             fill_both(&mut rng, &mut cache, &mut paged, 1, kv_dim, 5);
             let q = rng.normal_vec(n_heads * 4, 1.0);
-            let mut scores = vec![0f32; 8];
+            let mut flat_scores = vec![0f32; 8];
+            let mut scores = vec![0f32; shape.scores_len(8)];
             let (mut a, mut b) = (vec![0f32; q.len()], vec![0f32; q.len()]);
-            attend_flat(&cache, 0, &shape, &q, 5, 0.5, &mut scores, &mut a);
+            attend_flat(&cache, 0, &shape, &q, 5, 0.5, &mut flat_scores, &mut a);
             attend(&paged, 0, &shape, &q, 5, 0.5, &mut scores, &mut b);
             assert_eq!(a, b);
         }

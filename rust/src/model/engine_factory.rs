@@ -2,16 +2,87 @@
 //! method in the paper's evaluation. This is how a model is "loaded under"
 //! a kernel: `EngineKind::CodeGemm { .. }` quantizes each linear with the
 //! additive-codebook pipeline and wraps it in the Psumbook engine.
+//!
+//! Projections that share one input activation (a layer's Q/K/V, an
+//! MLP's gate/up) load through [`EngineKind::build_projection_set`]
+//! instead of one `build` per linear: the additive-codebook kinds
+//! quantize the **stacked** member rows jointly — one codebook set
+//! trained over all members, each sliced back out row-identically, the
+//! same post-quantization slicing row shards use — which gives CodeGEMM
+//! members the shared codebooks a fused [`GemmGroup`] needs to gather
+//! from one Psumbook build per k-tile.
 
-use crate::config::{KernelConfig, QuantConfig};
+use crate::config::{KernelConfig, ParallelConfig, QuantConfig};
 use crate::gemm::{
-    CodeGemmEngine, DenseEngine, DequantEngine, GemmEngine, LutGemmEngine, UniformGemmEngine,
+    CodeGemmEngine, Counters, DenseEngine, DequantEngine, EngineScratch, GemmEngine, GemmGroup,
+    GroupMember, LutGemmEngine, UniformGemmEngine,
 };
 use crate::parallel::{shard, ShardPlan, ShardedEngine, TpLinear};
 use crate::quant::calib::TuneLevel;
 use crate::quant::{bcq::BcqLinear, uniform::UniformLinear, QuantizedLinear, Quantizer};
 use crate::util::threadpool::ThreadPool;
 use std::sync::Arc;
+
+/// A set of linears sharing one input activation (a layer's Q/K/V or
+/// gate/up), executed either as one fused [`GemmGroup`] call or as
+/// independent per-member engines. Built by
+/// [`EngineKind::build_projection_set`]; the model's forward pass calls
+/// [`ProjectionSet::gemm_set_into`] once per set.
+pub enum ProjectionSet {
+    /// CodeGEMM members quantized jointly (shared codebooks) fused
+    /// around one Psumbook build per k-tile. The group's own `fused`
+    /// flag still selects the schedule — off, members run independently
+    /// with bit-identical outputs.
+    Fused(GemmGroup),
+    /// One engine per member, executed back-to-back (non-codebook kinds,
+    /// or kinds with nothing to share).
+    Independent(Vec<Box<dyn GemmEngine + Send + Sync>>),
+}
+
+impl ProjectionSet {
+    /// Run every member against `x`, writing member `i`'s batch-major
+    /// `n_i × m_batch` product into `outs[i]` (fully overwritten).
+    pub fn gemm_set_into(
+        &self,
+        x: &[f32],
+        m_batch: usize,
+        outs: &mut [&mut [f32]],
+        scratch: &mut EngineScratch,
+    ) {
+        match self {
+            ProjectionSet::Fused(group) => group.gemm_group_into(x, m_batch, outs, scratch),
+            ProjectionSet::Independent(engines) => {
+                assert_eq!(engines.len(), outs.len(), "one output slice per member");
+                for (e, y) in engines.iter().zip(outs.iter_mut()) {
+                    e.gemm_into(x, m_batch, y, scratch);
+                }
+            }
+        }
+    }
+
+    /// True when calls take the one-shared-build fused path.
+    pub fn is_fused(&self) -> bool {
+        matches!(self, ProjectionSet::Fused(g) if g.uses_fused())
+    }
+
+    pub fn num_members(&self) -> usize {
+        match self {
+            ProjectionSet::Fused(g) => g.num_members(),
+            ProjectionSet::Independent(engines) => engines.len(),
+        }
+    }
+
+    /// Fold the members' built-in counters (accumulated only by legacy
+    /// direct-call paths) into `total`. Fused groups route all work
+    /// through the caller's scratch and contribute nothing here.
+    pub fn merge_counters(&self, total: &mut Counters) {
+        if let ProjectionSet::Independent(engines) = self {
+            for e in engines {
+                total.merge(e.counters());
+            }
+        }
+    }
+}
 
 /// Which kernel/quantization to build engines with.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -84,6 +155,171 @@ impl EngineKind {
         h: Option<&[f32]>,
     ) -> QuantizedLinear {
         Quantizer::new(*cfg).with_refinement(tune.refine_rounds()).quantize_weighted(w, n, k, h)
+    }
+
+    /// Quantize a projection set's **stacked** rows jointly: one codebook
+    /// set trained over every member, so members sliced back out share
+    /// codebooks (the fused-group precondition) while each keeps its own
+    /// rows' codes and scales byte-identical to its slice.
+    fn quantize_stacked(
+        cfg: &QuantConfig,
+        tune: &TuneLevel,
+        parts: &[(&[f32], usize)],
+        k: usize,
+        hs: &[Option<&[f32]>],
+    ) -> QuantizedLinear {
+        let n_total: usize = parts.iter().map(|p| p.1).sum();
+        let mut stacked = Vec::with_capacity(n_total * k);
+        for &(w, n) in parts {
+            assert_eq!(w.len(), n * k, "member weight shape mismatch");
+            stacked.extend_from_slice(w);
+        }
+        let h = Self::merge_importances(hs, k);
+        Self::quantize_additive(cfg, tune, &stacked, n_total, k, h.as_deref())
+    }
+
+    /// Element-wise mean of the members' per-column importances. The
+    /// members consume the same input activation, so their diag-H
+    /// calibration describes the same `k` columns; averaging keeps every
+    /// member's signal without favoring one.
+    fn merge_importances(hs: &[Option<&[f32]>], k: usize) -> Option<Vec<f32>> {
+        let present: Vec<&[f32]> = hs.iter().flatten().copied().collect();
+        if present.is_empty() {
+            return None;
+        }
+        let mut merged = vec![0f32; k];
+        for h in &present {
+            assert_eq!(h.len(), k, "importance length mismatch");
+            for (m, v) in merged.iter_mut().zip(h.iter()) {
+                *m += *v;
+            }
+        }
+        let inv = 1.0 / present.len() as f32;
+        for m in &mut merged {
+            *m *= inv;
+        }
+        Some(merged)
+    }
+
+    /// Build the engines for a set of projections sharing one input
+    /// activation: `parts[i] = (w_i, n_i)` (row-major `n_i × k` each),
+    /// `hs[i]` the member's optional per-column calibration importance.
+    ///
+    /// The additive-codebook kinds quantize the stacked rows jointly
+    /// ([`Self::quantize_stacked`]) — **unconditionally**, so the
+    /// `fused` toggle changes only the schedule and a model is bit-exact
+    /// with it on or off (build MACs differ by the member count). This
+    /// is a deliberate numerics change vs. per-linear quantization:
+    /// codebooks are trained across the set's stacked rows; callers who
+    /// need the old per-projection codebooks build each linear through
+    /// [`EngineKind::build`] instead. For CodeGEMM the joint codebooks
+    /// make the members book-compatible and the set becomes a fused
+    /// [`GemmGroup`] — one Psumbook build per k-tile serving every
+    /// member. Dequant shares the format (the accuracy tables compare
+    /// the two kernels on identical weights) but has no table to share;
+    /// it and all other kinds build independent per-member engines.
+    ///
+    /// `shard_over` row-shards every member across the pool
+    /// (column-parallel, exactly like [`EngineKind::build_sharded`]);
+    /// under a fused group the shared book then serves the full
+    /// shard × member gather matrix.
+    pub fn build_projection_set(
+        &self,
+        parts: &[(&[f32], usize)],
+        k: usize,
+        hs: &[Option<&[f32]>],
+        fused: bool,
+        shard_over: Option<(&ParallelConfig, &Arc<ThreadPool>)>,
+    ) -> ProjectionSet {
+        assert!(!parts.is_empty(), "projection set needs at least one member");
+        assert_eq!(parts.len(), hs.len(), "one importance slot per member");
+        let member_plan = |n: usize| -> Option<ShardPlan> {
+            shard_over.map(|(par, _)| {
+                ShardPlan::tiled(n, par.effective_threads(), par.shard_min_rows, self.row_shard_align())
+            })
+        };
+        match self {
+            EngineKind::CodeGemm { cfg, kernel, tune } => {
+                let q = Self::quantize_stacked(cfg, tune, parts, k, hs);
+                let codes = q.codes.unpack(); // once, not per member/shard
+                let mut members = Vec::with_capacity(parts.len());
+                let mut r0 = 0usize;
+                for &(_, n) in parts {
+                    let mq = shard::slice_rows_unpacked(&q, &codes, r0, r0 + n);
+                    r0 += n;
+                    let member = match member_plan(n) {
+                        Some(plan) if !plan.is_serial() => {
+                            let mcodes = mq.codes.unpack();
+                            let shards = plan
+                                .shards
+                                .iter()
+                                .map(|&(s0, s1)| {
+                                    CodeGemmEngine::with_kernel(
+                                        &shard::slice_rows_unpacked(&mq, &mcodes, s0, s1),
+                                        *kernel,
+                                    )
+                                })
+                                .collect();
+                            GroupMember::sharded(plan, shards)
+                        }
+                        _ => GroupMember::serial(CodeGemmEngine::with_kernel(&mq, *kernel)),
+                    };
+                    members.push(member);
+                }
+                let pool = shard_over.map(|(_, pool)| Arc::clone(pool));
+                let shared = shard_over.map_or(true, |(par, _)| par.shared_psumbook);
+                ProjectionSet::Fused(
+                    GemmGroup::new(members, pool).with_fused(fused).with_shared_psumbook(shared),
+                )
+            }
+            EngineKind::Dequant { cfg, tune } => {
+                let q = Self::quantize_stacked(cfg, tune, parts, k, hs);
+                let codes = q.codes.unpack();
+                let mut engines: Vec<Box<dyn GemmEngine + Send + Sync>> =
+                    Vec::with_capacity(parts.len());
+                let mut r0 = 0usize;
+                for &(_, n) in parts {
+                    let mq = shard::slice_rows_unpacked(&q, &codes, r0, r0 + n);
+                    r0 += n;
+                    engines.push(match (member_plan(n), shard_over) {
+                        (Some(plan), Some((_, pool))) if !plan.is_serial() => {
+                            let mcodes = mq.codes.unpack();
+                            Box::new(ShardedEngine::from_factory(
+                                plan,
+                                Arc::clone(pool),
+                                |(s0, s1)| {
+                                    DequantEngine::from_quantized(&shard::slice_rows_unpacked(
+                                        &mq, &mcodes, s0, s1,
+                                    ))
+                                },
+                            ))
+                        }
+                        _ => Box::new(DequantEngine::from_quantized(&mq)),
+                    });
+                }
+                ProjectionSet::Independent(engines)
+            }
+            // Dense and the per-row formats: one independent engine per
+            // member, sharded exactly as `build_sharded` would.
+            _ => ProjectionSet::Independent(
+                parts
+                    .iter()
+                    .zip(hs)
+                    .map(|(&(w, n), h)| match (member_plan(n), shard_over) {
+                        (Some(plan), Some((par, pool))) => self.build_sharded(
+                            w,
+                            n,
+                            k,
+                            *h,
+                            &plan,
+                            Arc::clone(pool),
+                            par.shared_psumbook,
+                        ),
+                        _ => self.build(w, n, k, *h),
+                    })
+                    .collect(),
+            ),
+        }
     }
 
     /// Build a **row-sharded** (output-dim / column-parallel) engine:
@@ -324,6 +560,74 @@ mod tests {
             let rel = stats::rel_l2(&yp, &ys);
             assert!(rel < 1e-4, "{}: rel {rel}", kind.label());
         }
+    }
+
+    #[test]
+    fn projection_set_fuses_codegemm_and_stays_independent_elsewhere() {
+        let (n1, n2, k) = (24usize, 16usize, 64usize);
+        let w1 = Prng::seeded(21).normal_vec(n1 * k, 0.05);
+        let w2 = Prng::seeded(22).normal_vec(n2 * k, 0.05);
+        let x = Prng::seeded(23).normal_vec(k * 2, 1.0);
+        let parts: [(&[f32], usize); 2] = [(&w1, n1), (&w2, n2)];
+        let hs = [None, None];
+
+        let run = |set: &super::ProjectionSet| {
+            let mut y1 = vec![f32::NAN; n1 * 2];
+            let mut y2 = vec![f32::NAN; n2 * 2];
+            let mut scratch = crate::gemm::EngineScratch::new();
+            set.gemm_set_into(&x, 2, &mut [&mut y1[..], &mut y2[..]], &mut scratch);
+            (y1, y2, scratch.counters)
+        };
+
+        // CodeGEMM: fused group; toggling the schedule off is bit-exact
+        // (same joint quantization) but pays one build per member.
+        let kind = EngineKind::codegemm(QuantConfig::new(4, 1, 6, 32).unwrap());
+        let fused = kind.build_projection_set(&parts, k, &hs, true, None);
+        let unfused = kind.build_projection_set(&parts, k, &hs, false, None);
+        assert!(fused.is_fused());
+        assert!(!unfused.is_fused());
+        assert_eq!(fused.num_members(), 2);
+        let (f1, f2, cf) = run(&fused);
+        let (u1, u2, cu) = run(&unfused);
+        assert_eq!(f1, u1);
+        assert_eq!(f2, u2);
+        assert_eq!(cu.build_ops, 2 * cf.build_ops, "2-member group builds once");
+        assert_eq!(cf.group_fanout, 2);
+
+        // Dense: independent members, each exactly the standalone engine.
+        let dense_set = EngineKind::Dense.build_projection_set(&parts, k, &hs, true, None);
+        assert!(!dense_set.is_fused());
+        let (d1, d2, _) = run(&dense_set);
+        assert_eq!(d1, DenseEngine::new(w1.clone(), n1, k).gemm(&x, 2));
+        assert_eq!(d2, DenseEngine::new(w2.clone(), n2, k).gemm(&x, 2));
+    }
+
+    #[test]
+    fn sharded_projection_set_matches_serial_set_bit_exactly() {
+        let (n1, n2, k) = (32usize, 16usize, 64usize);
+        let w1 = Prng::seeded(31).normal_vec(n1 * k, 0.05);
+        let w2 = Prng::seeded(32).normal_vec(n2 * k, 0.05);
+        let x = Prng::seeded(33).normal_vec(k, 1.0);
+        let parts: [(&[f32], usize); 2] = [(&w1, n1), (&w2, n2)];
+        let hs = [None, None];
+        let kind = EngineKind::codegemm(QuantConfig::new(4, 1, 6, 32).unwrap());
+        let par = crate::config::ParallelConfig {
+            num_threads: 3,
+            shard_min_rows: 8,
+            ..Default::default()
+        };
+        let pool = Arc::new(crate::util::threadpool::ThreadPool::new(3));
+        let serial = kind.build_projection_set(&parts, k, &hs, true, None);
+        let sharded = kind.build_projection_set(&parts, k, &hs, true, Some((&par, &pool)));
+        assert!(sharded.is_fused());
+        let run = |set: &super::ProjectionSet| {
+            let mut y1 = vec![f32::NAN; n1];
+            let mut y2 = vec![f32::NAN; n2];
+            let mut scratch = crate::gemm::EngineScratch::new();
+            set.gemm_set_into(&x, 1, &mut [&mut y1[..], &mut y2[..]], &mut scratch);
+            (y1, y2)
+        };
+        assert_eq!(run(&serial), run(&sharded), "shard × member gather diverged");
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //! the flat loop it replaced.
 
 use super::attention::{attend, AttnShape};
-use super::engine_factory::EngineKind;
+use super::engine_factory::{EngineKind, ProjectionSet};
 use super::kv::KvCache;
 use super::weights::ModelWeights;
 use crate::config::{ModelConfig, ParallelConfig};
@@ -39,14 +39,17 @@ use std::sync::Arc;
 /// prefill in chunks of this size.
 pub const MAX_PREFILL_CHUNK: usize = 64;
 
-/// Engines for one decoder layer.
+/// Engines for one decoder layer. The projections sharing one input
+/// activation — Q/K/V over the attn-normed hidden state, gate/up over
+/// the MLP-normed one — are [`ProjectionSet`]s: under CodeGEMM they fuse
+/// around one shared Psumbook build per k-tile (`gemm::GemmGroup`),
+/// which is where the decode-time build work per layer drops ~3× for
+/// attention and ~2× for the MLP. O and down consume *different*
+/// activations and stay standalone engines.
 struct LayerEngines {
-    wq: Box<dyn GemmEngine + Send + Sync>,
-    wk: Box<dyn GemmEngine + Send + Sync>,
-    wv: Box<dyn GemmEngine + Send + Sync>,
+    qkv: ProjectionSet,
     wo: Box<dyn GemmEngine + Send + Sync>,
-    w_gate: Box<dyn GemmEngine + Send + Sync>,
-    w_up: Box<dyn GemmEngine + Send + Sync>,
+    gate_up: ProjectionSet,
     w_down: Box<dyn GemmEngine + Send + Sync>,
     attn_norm: Vec<f32>,
     mlp_norm: Vec<f32>,
@@ -134,8 +137,23 @@ pub fn rope_rotate(x: &mut [f32], head_dim: usize, cos: &[f32], sin: &[f32]) {
 impl LlamaModel {
     /// Quantize (if applicable) and load `weights` under engine `kind`.
     /// `calib` optionally provides per-linear column importances keyed by
-    /// the same order as `ModelWeights::linears()`.
+    /// the same order as `ModelWeights::linears()`. Projections sharing
+    /// an input activation (Q/K/V, gate/up) load as fused sets.
     pub fn load(weights: &ModelWeights, kind: EngineKind, calib: Option<&[Vec<f32>]>) -> LlamaModel {
+        Self::load_with_options(weights, kind, calib, true)
+    }
+
+    /// [`Self::load`] with the fused-projection schedule explicit.
+    /// Quantization is identical either way (the stacked joint
+    /// quantization happens regardless), so a model loaded with
+    /// `fused_projections` off is **bit-exact** vs. one loaded with it
+    /// on — only the Psumbook build count per layer differs.
+    pub fn load_with_options(
+        weights: &ModelWeights,
+        kind: EngineKind,
+        calib: Option<&[Vec<f32>]>,
+        fused_projections: bool,
+    ) -> LlamaModel {
         let cfg = weights.cfg.clone();
         let d = cfg.hidden;
         let mut layers = Vec::with_capacity(cfg.n_layers);
@@ -147,14 +165,31 @@ impl LlamaModel {
         };
         for l in &weights.layers {
             let kv = cfg.kv_dim();
+            // Calibration order matches `ModelWeights::linears()`:
+            // wq, wk, wv, wo, w_gate, w_up, w_down.
+            let h_qkv = [h(&mut li), h(&mut li), h(&mut li)];
+            let qkv = kind.build_projection_set(
+                &[(l.wq.as_slice(), d), (l.wk.as_slice(), kv), (l.wv.as_slice(), kv)],
+                d,
+                &h_qkv,
+                fused_projections,
+                None,
+            );
+            let wo = kind.build(&l.wo, d, d, h(&mut li));
+            let h_mlp = [h(&mut li), h(&mut li)];
+            let gate_up = kind.build_projection_set(
+                &[(l.w_gate.as_slice(), cfg.ffn), (l.w_up.as_slice(), cfg.ffn)],
+                d,
+                &h_mlp,
+                fused_projections,
+                None,
+            );
+            let w_down = kind.build(&l.w_down, d, cfg.ffn, h(&mut li));
             layers.push(LayerEngines {
-                wq: kind.build(&l.wq, d, d, h(&mut li)),
-                wk: kind.build(&l.wk, kv, d, h(&mut li)),
-                wv: kind.build(&l.wv, kv, d, h(&mut li)),
-                wo: kind.build(&l.wo, d, d, h(&mut li)),
-                w_gate: kind.build(&l.w_gate, cfg.ffn, d, h(&mut li)),
-                w_up: kind.build(&l.w_up, cfg.ffn, d, h(&mut li)),
-                w_down: kind.build(&l.w_down, d, cfg.ffn, h(&mut li)),
+                qkv,
+                wo,
+                gate_up,
+                w_down,
                 attn_norm: l.attn_norm.clone(),
                 mlp_norm: l.mlp_norm.clone(),
             });
@@ -227,14 +262,33 @@ impl LlamaModel {
         };
         for l in &weights.layers {
             let kv = cfg.kv_dim();
+            // Q/K/V and gate/up load as projection sets: column-parallel
+            // row shards per member when the layer class shards, fused
+            // around one shared Psumbook build when the kind supports it
+            // (the book is then shared across shards *and* members).
+            let h_qkv = [h(&mut li), h(&mut li), h(&mut li)];
+            let qkv = kind.build_projection_set(
+                &[(l.wq.as_slice(), d), (l.wk.as_slice(), kv), (l.wv.as_slice(), kv)],
+                d,
+                &h_qkv,
+                par.fused_projections_effective(),
+                if par.shard_attn { Some((par, &pool)) } else { None },
+            );
+            let wo = row(&l.wo, d, d, h(&mut li), par.shard_attn);
+            let h_mlp = [h(&mut li), h(&mut li)];
+            let gate_up = kind.build_projection_set(
+                &[(l.w_gate.as_slice(), cfg.ffn), (l.w_up.as_slice(), cfg.ffn)],
+                d,
+                &h_mlp,
+                par.fused_projections_effective(),
+                if par.shard_mlp { Some((par, &pool)) } else { None },
+            );
+            let w_down = row(&l.w_down, d, cfg.ffn, h(&mut li), par.shard_mlp);
             layers.push(LayerEngines {
-                wq: col(&l.wq, d, d, h(&mut li), par.shard_attn),
-                wk: col(&l.wk, kv, d, h(&mut li), par.shard_attn),
-                wv: col(&l.wv, kv, d, h(&mut li), par.shard_attn),
-                wo: row(&l.wo, d, d, h(&mut li), par.shard_attn),
-                w_gate: col(&l.w_gate, cfg.ffn, d, h(&mut li), par.shard_mlp),
-                w_up: col(&l.w_up, cfg.ffn, d, h(&mut li), par.shard_mlp),
-                w_down: row(&l.w_down, d, cfg.ffn, h(&mut li), par.shard_mlp),
+                qkv,
+                wo,
+                gate_up,
+                w_down,
                 attn_norm: l.attn_norm.clone(),
                 mlp_norm: l.mlp_norm.clone(),
             });
@@ -378,9 +432,11 @@ impl LlamaModel {
         let gate = grow_slice(&mut s.gate, m * cfg.ffn);
         let up = grow_slice(&mut s.up, m * cfg.ffn);
         let act = grow_slice(&mut s.act, m * cfg.ffn);
-        // Sized to the full context up front so the buffer never grows
-        // mid-sequence (pos0 + m <= max_seq, enforced by the cache).
-        let scores = grow_slice(&mut s.scores, cfg.max_seq);
+        // Sized to the full context up front (one row per head — the
+        // attention kernel iterates tiles outer / heads inner) so the
+        // buffer never grows mid-sequence (pos0 + m <= max_seq,
+        // enforced by the cache).
+        let scores = grow_slice(&mut s.scores, shape.scores_len(cfg.max_seq));
         let eng = &mut s.eng;
         let scale = 1.0 / (hd as f32).sqrt();
 
@@ -389,9 +445,9 @@ impl LlamaModel {
             for b in 0..m {
                 rmsnorm(&h[b * d..(b + 1) * d], &l.attn_norm, &mut normed[b * d..(b + 1) * d]);
             }
-            l.wq.gemm_into(normed, m, q, eng);
-            l.wk.gemm_into(normed, m, kk, eng);
-            l.wv.gemm_into(normed, m, vv, eng);
+            // One grouped call: under a fused CodeGEMM set the Psumbook
+            // for each k-tile is built once and gathered by Q, K and V.
+            l.qkv.gemm_set_into(normed, m, &mut [&mut *q, &mut *kk, &mut *vv], eng);
             for b in 0..m {
                 let pos = pos0 + b;
                 let cos = &self.rope_cos[pos * half..(pos + 1) * half];
@@ -430,8 +486,7 @@ impl LlamaModel {
             for b in 0..m {
                 rmsnorm(&h[b * d..(b + 1) * d], &l.mlp_norm, &mut normed[b * d..(b + 1) * d]);
             }
-            l.w_gate.gemm_into(normed, m, gate, eng);
-            l.w_up.gemm_into(normed, m, up, eng);
+            l.gate_up.gemm_set_into(normed, m, &mut [&mut *gate, &mut *up], eng);
             for i in 0..m * cfg.ffn {
                 act[i] = silu(gate[i]) * up[i];
             }
@@ -451,16 +506,25 @@ impl LlamaModel {
 
     /// Sum of work/traffic counters across the model: the shared forward
     /// scratch (where `forward`/`forward_batch` accumulate) merged with
-    /// every engine's built-in counters (legacy direct-call paths).
+    /// every engine's built-in counters (legacy direct-call paths;
+    /// projection sets route everything through the shared scratch).
     pub fn total_counters(&self) -> Counters {
         let mut total = self.scratch.eng.counters.clone();
         for l in &self.layers {
-            for e in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_gate, &l.w_up, &l.w_down] {
+            l.qkv.merge_counters(&mut total);
+            l.gate_up.merge_counters(&mut total);
+            for e in [&l.wo, &l.w_down] {
                 total.merge(e.counters());
             }
         }
         total.merge(self.lm_head.counters());
         total
+    }
+
+    /// True when every layer's Q/K/V and gate/up sets take the fused
+    /// one-shared-build schedule (introspection for tests and labels).
+    pub fn uses_fused_projections(&self) -> bool {
+        self.layers.iter().all(|l| l.qkv.is_fused() && l.gate_up.is_fused())
     }
 
     pub fn config(&self) -> &ModelConfig {
@@ -657,6 +721,67 @@ mod tests {
         let rel = crate::util::stats::rel_l2(&lp, &ls);
         assert!(rel < 1e-4, "parallel quantized vs serial rel {rel}");
         assert!(sharded.kind_label.contains("shard2"), "{}", sharded.kind_label);
+    }
+
+    /// The fused-projection toggle changes the *schedule*, never the
+    /// weights (joint quantization happens either way), so logits are
+    /// bit-identical with it on and off — while the fused model pays
+    /// 3× / 2× fewer Psumbook builds per layer.
+    #[test]
+    fn fused_projections_bit_exact_and_build_macs_drop() {
+        let w = tiny();
+        let cfg = QuantConfig::new(4, 1, 6, 32).unwrap();
+        let kind = EngineKind::codegemm(cfg);
+        let prompt = [5usize, 99, 7];
+        let run = |fused: bool| {
+            let mut m = LlamaModel::load_with_options(&w, kind, None, fused);
+            assert_eq!(m.uses_fused_projections(), fused);
+            let mut c = m.new_cache();
+            let logits = m.prefill(&prompt, &mut c);
+            let counters = m.total_counters();
+            (logits, counters)
+        };
+        let (l_on, c_on) = run(true);
+        let (l_off, c_off) = run(false);
+        assert_eq!(l_on, l_off, "fused and unfused schedules must agree bitwise");
+        // Regression pin for the group factor: per layer the unfused
+        // forward pays 2 extra Q/K/V builds + 1 extra gate/up build —
+        // i.e. 3 extra full k-sweeps of `k·m·2^b·M` build MACs each
+        // (every member sees the same reduction dim `d` and one prefill
+        // chunk of M = prompt_len columns). Gather work is conserved.
+        let sweep = (w.cfg.hidden * cfg.m * cfg.n_centroids() * prompt.len()) as u64;
+        assert_eq!(
+            c_off.build_ops - c_on.build_ops,
+            (w.cfg.n_layers as u64) * 3 * sweep,
+            "unfused {} vs fused {} build MACs",
+            c_off.build_ops,
+            c_on.build_ops
+        );
+        assert_eq!(c_on.read_ops, c_off.read_ops, "gather work must be conserved");
+        assert!(c_on.group_fanout > 0 && c_off.group_fanout == 0);
+    }
+
+    #[test]
+    fn fused_projections_bit_exact_under_sharding() {
+        let w = tiny();
+        let cfg = QuantConfig::new(4, 1, 6, 32).unwrap();
+        let kind = EngineKind::codegemm(cfg);
+        let prompt = [3usize, 4, 11];
+        let run = |fused: bool| {
+            let par = ParallelConfig {
+                num_threads: 3,
+                shard_min_rows: 16,
+                fused_projections: fused,
+                ..Default::default()
+            };
+            let pool = Arc::new(ThreadPool::new(3));
+            let mut m = LlamaModel::load_parallel(&w, kind, None, &par, pool);
+            let mut c = m.new_cache();
+            m.prefill(&prompt, &mut c)
+        };
+        // Sharded fused vs sharded unfused: same joint quantization, the
+        // book is bit-identical however many members/shards gather it.
+        assert_eq!(run(true), run(false), "sharded fused forward diverged");
     }
 
     #[test]

@@ -21,10 +21,22 @@
 //!
 //! Attention is a real kernel now, not an inline loop:
 //! [`attention::attend`] is a chunked two-pass GQA kernel that walks the
-//! cache tile-by-tile (tile height = pool page size) and is **bit-exact**
-//! against the flat loop for any tile size — so paging is purely a memory
-//! layout decision, never a numerics one. The page size is thereby an
-//! attention tiling knob to tune like the GEMM `tile_w`/`tile_h`.
+//! cache tile-by-tile (tile height = pool page size, tiles outer so each
+//! page-table resolution serves every head) and is **bit-exact** against
+//! the flat loop for any tile size — so paging is purely a memory layout
+//! decision, never a numerics one. The page size is thereby an attention
+//! tiling knob to tune like the GEMM `tile_w`/`tile_h`.
+//!
+//! ## Fused projection groups
+//!
+//! The linears sharing one input activation — Q/K/V over the attn-normed
+//! hidden state, gate/up over the MLP-normed one — load as
+//! [`ProjectionSet`]s ([`EngineKind::build_projection_set`]): under
+//! CodeGEMM the members are quantized jointly (stacked rows, shared
+//! codebooks) and execute as one `gemm::GemmGroup` call that builds each
+//! k-tile's Psumbook once for all members —
+//! `ParallelConfig::fused_projections` toggles the schedule with
+//! bit-identical outputs.
 
 pub mod attention;
 pub mod engine_factory;
@@ -34,7 +46,7 @@ pub mod sampler;
 pub mod weights;
 
 pub use attention::{attend, AttnShape};
-pub use engine_factory::EngineKind;
+pub use engine_factory::{EngineKind, ProjectionSet};
 pub use kv::KvCache;
 pub use llama::{rmsnorm, silu, LlamaModel, MAX_PREFILL_CHUNK};
 pub use sampler::{argmax, Sampler};

@@ -11,15 +11,20 @@
 //! [`column_fan_out`] is the *private-table* schedule: every shard runs
 //! its complete engine, building its own Psumbook/LUT in its child
 //! scratch — K row shards of a CodeGEMM layer pay K× the build MACs.
-//! [`shared_book_fan_out`] is the CodeGEMM specialization the paper's
-//! Eq. 3 actually prices: per k-tile, **phase 1** builds one shared,
-//! scratch-resident Psumbook by fanning disjoint j-ranges of its storage
-//! out over the pool ([`psumbook::build_range`]), and **phase 2** fans
-//! the gather out over the row shards, each reading the book read-only
-//! into its disjoint output region. Build MACs/bytes/time are attributed
-//! once per logical call — independent of the shard count — so
-//! `Counters::build_share_ops` reflects the amortization; gather work is
-//! per-row and folds in from the child scratches as usual.
+//! [`shared_book_fan_out_multi`] is the CodeGEMM specialization the
+//! paper's Eq. 3 actually prices, generalized to a **projection group**:
+//! per k-tile, **phase 1** builds one shared, scratch-resident Psumbook
+//! by fanning disjoint j-ranges of its storage out over the pool
+//! ([`psumbook::build_range`]), and **phase 2** fans the gather out over
+//! the **shard × member matrix** — every row shard of every fused member
+//! projection (Q/K/V, gate/up) reading the book read-only into its
+//! disjoint output region. Build MACs/bytes/time are attributed once per
+//! logical call — independent of the shard count *and* the member count
+//! — so `Counters::build_share_ops` reflects the amortization (and
+//! `Counters::group_fanout` records how many member GEMMs each build
+//! served); gather work is per-row and folds in from the child scratches
+//! as usual. [`shared_book_fan_out`] is the single-member case used by
+//! `ShardedEngine`; `gemm::GemmGroup` drives the multi-member form.
 //!
 //! Cost model caveat: unlike the private schedule's single rendezvous
 //! per call, the shared schedule synchronizes the pool per k-tile (a
@@ -45,6 +50,15 @@ pub(crate) type ShardRef<'a> = &'a (dyn GemmEngine + Send + Sync);
 /// Minimum vectors per worker in the phase-1 parallel book build (below
 /// this, job dispatch costs more than the dot products it hides).
 const MIN_BUILD_VECS: usize = 4;
+
+/// One member of a fused projection group as the scheduler sees it: its
+/// row shards plus the plan that places them. A lone sharded engine is
+/// the single-member case; `gemm::GemmGroup` passes one entry per fused
+/// projection (Q/K/V, gate/up).
+pub(crate) struct GroupMemberRef<'a, E: GemmEngine + Send + Sync> {
+    pub engines: &'a [E],
+    pub plan: &'a ShardPlan,
+}
 
 /// Column-parallel fan-out: `engines[i]` computes output rows
 /// `plan.range(i)` over the full activation `x`. On the single-column
@@ -109,7 +123,8 @@ pub(crate) fn shared_book_compatible(engines: &[&CodeGemmEngine]) -> bool {
     })
 }
 
-/// Build-once/gather-many fan-out over row-sharded CodeGEMM engines.
+/// Build-once/gather-many fan-out over row-sharded CodeGEMM engines —
+/// the single-member case of [`shared_book_fan_out_multi`].
 ///
 /// For each k-tile: phase 1 builds **one** shared book in the caller's
 /// scratch (parallelized by j-ranges over the pool), phase 2 fans the
@@ -132,64 +147,118 @@ pub(crate) fn shared_book_fan_out<E: GemmEngine + Send + Sync>(
     y: &mut [f32],
     scratch: &mut EngineScratch,
 ) {
-    let ns = plan.num_shards();
-    debug_assert_eq!(engines.len(), ns);
-    debug_assert!(shared_book_compatible(
-        &engines.iter().map(|e| e.as_codegemm().expect("codegemm shard")).collect::<Vec<_>>()
-    ));
-    let EngineScratch { counters, buf, buf2, book, children } = scratch;
-    if children.len() < ns {
-        children.resize_with(ns, EngineScratch::new);
-    }
-    if m_batch == 1 {
-        shared_book_tiles(pool, engines, plan, x, 1, y, buf, book, &mut children[..ns], counters);
-    } else {
-        let stage = grow_slice(buf2, plan.len * m_batch);
-        shared_book_tiles(
-            pool,
-            engines,
-            plan,
-            x,
-            m_batch,
-            stage,
-            buf,
-            book,
-            &mut children[..ns],
-            counters,
-        );
-        reduce::scatter_row_shards(stage, plan, m_batch, y);
-    }
-    // Per-row group scales stream once per logical call (row partitioning
-    // conserves this stream exactly).
-    counters.weight_bytes += engines.iter().map(|e| e.scales_stream_bytes()).sum::<u64>();
-    merge_children_into(counters, &mut children[..ns]);
+    shared_book_fan_out_multi(
+        pool,
+        &[GroupMemberRef { engines, plan }],
+        x,
+        m_batch,
+        &mut [y],
+        scratch,
+    );
 }
 
-/// The per-k-tile two-phase loop of [`shared_book_fan_out`]. `dest`
-/// holds the per-shard output blocks back-to-back in shard order
-/// (`shard_len(i) * m_batch` each) — the caller's `y` itself on the
-/// single-column path, reused staging otherwise.
+/// Build-once/gather-many fan-out over a **projection group**: several
+/// members (row-sharded CodeGEMM engine sets over the *same* activations
+/// and codebooks — Q/K/V of one layer, gate/up of one MLP) execute as a
+/// single logical call. Per k-tile, phase 1 builds ONE shared book in
+/// the caller's scratch (fanned out by j-ranges over the pool), phase 2
+/// fans the gather out over the full **shard × member matrix**, every
+/// job reading the book read-only into its disjoint region of its
+/// member's output. The book is thus shared across *both* axes: the row
+/// shards within each member (PR 3's amortization) and the member
+/// projections themselves (the group amortization — build MACs counted
+/// once serve `Σ members` gathers).
+///
+/// `dests[i]` is member `i`'s batch-major output (`plan.len × m_batch`,
+/// fully overwritten). Build MACs/bytes/time land in the caller's
+/// counters exactly once per call regardless of shard count *and*
+/// member count; per-shard gather counters fold in via
+/// [`merge_children_into`] (`calls += 1` for the whole group). Every
+/// shard of every member must satisfy [`shared_book_compatible`] —
+/// callers verify once at construction.
+pub(crate) fn shared_book_fan_out_multi<E: GemmEngine + Send + Sync>(
+    pool: &ThreadPool,
+    members: &[GroupMemberRef<'_, E>],
+    x: &[f32],
+    m_batch: usize,
+    dests: &mut [&mut [f32]],
+    scratch: &mut EngineScratch,
+) {
+    debug_assert_eq!(members.len(), dests.len());
+    debug_assert!(shared_book_compatible(
+        &members
+            .iter()
+            .flat_map(|m| m.engines.iter())
+            .map(|e| e.as_codegemm().expect("codegemm shard"))
+            .collect::<Vec<_>>()
+    ));
+    let total_shards: usize = members.iter().map(|m| m.engines.len()).sum();
+    let EngineScratch { counters, buf, buf2, book, children } = scratch;
+    if children.len() < total_shards {
+        children.resize_with(total_shards, EngineScratch::new);
+    }
+    let children = &mut children[..total_shards];
+    if m_batch == 1 {
+        // Decode path: every (member, shard) job writes a true sub-slice
+        // of its member's caller-owned output.
+        let mut blocks: Vec<&mut [f32]> = dests.iter_mut().map(|d| &mut **d).collect();
+        shared_book_tiles(pool, members, x, 1, &mut blocks, buf, book, children, counters);
+    } else {
+        // Batched path: stage per-member blocks back-to-back in reused
+        // staging and scatter each member once at the end.
+        let total_rows: usize = members.iter().map(|m| m.plan.len).sum();
+        let stage = grow_slice(buf2, total_rows * m_batch);
+        let mut blocks: Vec<&mut [f32]> = Vec::with_capacity(members.len());
+        let mut rest: &mut [f32] = stage;
+        for member in members {
+            let (block, tail) = std::mem::take(&mut rest).split_at_mut(member.plan.len * m_batch);
+            blocks.push(block);
+            rest = tail;
+        }
+        shared_book_tiles(pool, members, x, m_batch, &mut blocks, buf, book, children, counters);
+        for ((member, block), dest) in members.iter().zip(&blocks).zip(dests.iter_mut()) {
+            reduce::scatter_row_shards(&**block, member.plan, m_batch, dest);
+        }
+    }
+    // Per-row group scales stream once per logical call (row partitioning
+    // conserves this stream exactly; each member streams its own rows').
+    counters.weight_bytes += members
+        .iter()
+        .flat_map(|m| m.engines.iter())
+        .map(|e| e.as_codegemm().expect("codegemm shard").scales_stream_bytes())
+        .sum::<u64>();
+    merge_children_into(counters, children);
+}
+
+/// The per-k-tile two-phase loop of [`shared_book_fan_out_multi`].
+/// `dest_blocks[i]` holds member `i`'s per-shard output blocks
+/// back-to-back in shard order (`shard_len(s) * m_batch` each) — the
+/// caller's own output slices on the single-column path, reused staging
+/// otherwise.
 #[allow(clippy::too_many_arguments)]
 fn shared_book_tiles<E: GemmEngine + Send + Sync>(
     pool: &ThreadPool,
-    engines: &[E],
-    plan: &ShardPlan,
+    members: &[GroupMemberRef<'_, E>],
     x: &[f32],
     m_batch: usize,
-    dest: &mut [f32],
+    dest_blocks: &mut [&mut [f32]],
     buf: &mut Vec<f32>,
     book: &mut Psumbook,
     children: &mut [EngineScratch],
     counters: &mut Counters,
 ) {
-    let e0 = engines[0].as_codegemm().expect("codegemm shard");
+    let e0 = members[0].engines[0].as_codegemm().expect("codegemm shard");
     let cfg = e0.quant_config();
     let (v, m, nc) = (cfg.v, cfg.m, cfg.n_centroids());
     let k = e0.dims().1;
     let tile_w = e0.kernel_config().tile_w;
-    debug_assert_eq!(dest.len(), plan.len * m_batch);
     // Gathers accumulate across k-tiles: zero once up front.
-    dest.fill(0.0);
+    for (member, block) in members.iter().zip(dest_blocks.iter_mut()) {
+        debug_assert_eq!(block.len(), member.plan.len * m_batch);
+        block.fill(0.0);
+    }
+    let total_shards: usize = members.iter().map(|m| m.engines.len()).sum();
+    debug_assert_eq!(children.len(), total_shards);
     for (c0, c1) in Tiles::new(k, tile_w) {
         let jn_tile = (c1 - c0) / v;
         // Phase 1: build one shared book for this k-tile, fanned out by
@@ -215,23 +284,29 @@ fn shared_book_tiles<E: GemmEngine + Send + Sync>(
         }
         counters.build_seconds += t.elapsed_s();
         // Build work is attributed ONCE per logical call, independent of
-        // the row-shard count — the amortization `build_share_*` prices.
-        // `count_build` is the same accounting the serial engine uses, so
-        // the shared-vs-private build-share comparison cannot drift.
+        // the shard count and the member count — the amortization
+        // `build_share_*` / `group_fanout` price. `count_build` is the
+        // same accounting the serial engine uses, so the shared-vs-
+        // private and fused-vs-independent comparisons cannot drift.
         e0.count_build(book, counters);
 
-        // Phase 2: every row shard gathers read-only from the shared book
-        // into its disjoint block of `dest`.
+        // Phase 2: the shard × member matrix gathers read-only from the
+        // shared book, each job into its disjoint block of its member's
+        // dest.
         let t = Timer::start();
         let book_ref: &Psumbook = book;
-        let mut jobs: Vec<ScopedJob> = Vec::with_capacity(engines.len());
-        let mut rest: &mut [f32] = &mut *dest;
-        for ((e, &(r0, r1)), child) in engines.iter().zip(&plan.shards).zip(children.iter_mut()) {
-            let e = e.as_codegemm().expect("codegemm shard");
-            let (ys, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * m_batch);
-            rest = tail;
-            let gather_counters = &mut child.counters;
-            jobs.push(Box::new(move || e.gather_into(book_ref, c0, m_batch, ys, gather_counters)));
+        let mut jobs: Vec<ScopedJob> = Vec::with_capacity(total_shards);
+        let mut child_iter = children.iter_mut();
+        for (member, block) in members.iter().zip(dest_blocks.iter_mut()) {
+            let mut rest: &mut [f32] = &mut **block;
+            for (e, &(r0, r1)) in member.engines.iter().zip(&member.plan.shards) {
+                let child = child_iter.next().expect("one child scratch per shard");
+                let e = e.as_codegemm().expect("codegemm shard");
+                let (ys, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * m_batch);
+                rest = tail;
+                let gather_counters = &mut child.counters;
+                jobs.push(Box::new(move || e.gather_into(book_ref, c0, m_batch, ys, gather_counters)));
+            }
         }
         pool.scope_run(jobs);
         counters.read_seconds += t.elapsed_s();

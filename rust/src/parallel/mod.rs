@@ -20,6 +20,16 @@
 //!   measures), outputs stay bit-exact, and the build itself scales with
 //!   the pool instead of being duplicated across it.
 //!
+//! The shared book generalizes across a second axis: a **fused
+//! projection group** (`crate::gemm::GemmGroup` — a layer's Q/K/V or
+//! gate/up over one activation, quantized jointly so members share
+//! codebooks) hands `fanout::shared_book_fan_out_multi` one member per
+//! projection, and phase 2 becomes the full **shard × member gather
+//! matrix** reading the single build. One build then serves every row
+//! of every projection of the layer — build MACs per decode layer drop
+//! ~3× (attention) / ~2× (MLP) on top of the shard amortization, with
+//! `Counters::group_fanout` recording the members each build served.
+//!
 //! Pieces:
 //!
 //! - [`plan::ShardPlan`] — deterministic, alignment-aware partition of a

@@ -1,0 +1,241 @@
+//! Property suite for fused projection groups (`gemm::GemmGroup`), via
+//! the reusable `util::proptest` generators:
+//!
+//! - a fused Q/K/V-shaped group (members sliced from one joint
+//!   quantization, mimicking `EngineKind::build_projection_set`) is
+//!   **bit-exact** (`==`) vs. running its members independently, across
+//!   v ∈ {4, 8} × m_batch ∈ {1, 4, 64} × serial/sharded execution,
+//!   through a deliberately dirty, reused shared scratch, with warm
+//!   scratch never growing;
+//! - Psumbook build MACs are counted once per *group* call — the
+//!   independent schedule pays exactly `members ×` (the regression-pinned
+//!   group factor: 3× for Q/K/V, 2× for gate/up), gather work is
+//!   conserved, and `Counters::group_fanout` records the members each
+//!   build served;
+//! - members with mismatched configs refuse to fuse and fall back to
+//!   correct independent execution.
+
+use codegemm::config::QuantConfig;
+use codegemm::gemm::{CodeGemmEngine, Counters, EngineScratch, GemmEngine, GemmGroup, GroupMember};
+use codegemm::parallel::{shard, ShardPlan};
+use codegemm::quant::{QuantizedLinear, Quantizer};
+use codegemm::util::proptest as pt;
+use codegemm::util::prng::Prng;
+use codegemm::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+/// The sweep the issue pins: both paper vector widths, decode (M=1),
+/// small-batch and full-chunk (M=64) prefill, serial and sharded.
+fn gen_case() -> pt::GemmCaseGen {
+    pt::GemmCaseGen {
+        vs: &[4, 8],
+        bs: &[2, 3, 4],
+        mbs: &[1, 4, 64],
+        max_shards: 4,
+        ..Default::default()
+    }
+}
+
+/// Q/K/V-shaped member heights for a case: one full-width member and two
+/// narrower ones (d, kv, kv).
+fn member_heights(c: &pt::GemmCase) -> [usize; 3] {
+    [c.n, (c.n / 2).max(4), (c.n / 2).max(4)]
+}
+
+/// Joint quantization over the stacked member rows (the factory's group
+/// construction), sliced back into per-member layers.
+fn stacked_members(c: &pt::GemmCase, ns: &[usize]) -> Option<Vec<QuantizedLinear>> {
+    let cfg = c.quant_config()?;
+    let n_total: usize = ns.iter().sum();
+    let w = Prng::seeded(c.seed).normal_vec(n_total * c.k, 0.02);
+    let q = Quantizer::new(cfg).quantize(&w, n_total, c.k);
+    let codes = q.codes.unpack();
+    let mut parts = Vec::with_capacity(ns.len());
+    let mut r = 0usize;
+    for &n in ns {
+        parts.push(shard::slice_rows_unpacked(&q, &codes, r, r + n));
+        r += n;
+    }
+    Some(parts)
+}
+
+fn serial_group(parts: &[QuantizedLinear]) -> GemmGroup {
+    GemmGroup::new(
+        parts.iter().map(|p| GroupMember::serial(CodeGemmEngine::from_quantized(p))).collect(),
+        None,
+    )
+}
+
+fn sharded_group(parts: &[QuantizedLinear], shards: usize, pool: &Arc<ThreadPool>) -> GemmGroup {
+    GemmGroup::new(
+        parts
+            .iter()
+            .map(|p| {
+                let plan = ShardPlan::new(p.n, shards, 1, 1);
+                if plan.is_serial() {
+                    return GroupMember::serial(CodeGemmEngine::from_quantized(p));
+                }
+                let codes = p.codes.unpack();
+                let engines = plan
+                    .shards
+                    .iter()
+                    .map(|&(r0, r1)| {
+                        CodeGemmEngine::from_quantized(&shard::slice_rows_unpacked(
+                            p, &codes, r0, r1,
+                        ))
+                    })
+                    .collect();
+                GroupMember::sharded(plan, engines)
+            })
+            .collect(),
+        Some(Arc::clone(pool)),
+    )
+}
+
+fn run_group(
+    group: &GemmGroup,
+    ns: &[usize],
+    x: &[f32],
+    mb: usize,
+    scratch: &mut EngineScratch,
+) -> Vec<Vec<f32>> {
+    let mut outs: Vec<Vec<f32>> = ns.iter().map(|&n| vec![f32::NAN; n * mb]).collect();
+    {
+        let mut views: Vec<&mut [f32]> = outs.iter_mut().map(|y| y.as_mut_slice()).collect();
+        group.gemm_group_into(x, mb, &mut views, scratch);
+    }
+    outs
+}
+
+fn total_footprint(s: &EngineScratch) -> usize {
+    s.footprint_bytes() + s.children.iter().map(|c| c.footprint_bytes()).sum::<usize>()
+}
+
+#[test]
+fn prop_fused_group_bit_exact_vs_independent_with_dirty_scratch() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let cfg = pt::PropConfig { cases: 12, ..Default::default() };
+    // One scratch across every case and every schedule: book reshape,
+    // grow-only staging and counter children must never leak state
+    // between geometries or schedules.
+    let cell = std::cell::RefCell::new(EngineScratch::new());
+    pt::assert_prop("fused group == independent members", cfg, &gen_case(), |c: &pt::GemmCase| {
+        let mut guard = cell.borrow_mut();
+        let scratch = &mut *guard;
+        let ns = member_heights(c);
+        let Some(parts) = stacked_members(c, &ns) else {
+            return Ok(()); // invalid combination — vacuous
+        };
+        let x = c.activations(1);
+        // Independent reference: each member's own serial engine.
+        let reference: Vec<Vec<f32>> = parts
+            .iter()
+            .map(|p| {
+                let mut e = CodeGemmEngine::from_quantized(p);
+                e.gemm(&x, c.mb)
+            })
+            .collect();
+
+        let fused = serial_group(&parts);
+        pt::ensure(fused.uses_fused(), "jointly quantized members must fuse")?;
+        let y_fused = run_group(&fused, &ns, &x, c.mb, scratch);
+        pt::ensure(y_fused == reference, format!("serial fused diverged ({c:?})"))?;
+
+        // Sharded members: the shared book now serves shard × member.
+        let sharded = sharded_group(&parts, c.shards, &pool);
+        let y_sharded = run_group(&sharded, &ns, &x, c.mb, scratch);
+        pt::ensure(y_sharded == reference, format!("sharded fused diverged ({c:?})"))?;
+
+        // The explicit unfused schedule matches bitwise too.
+        let unfused = serial_group(&parts).with_fused(false);
+        let y_unfused = run_group(&unfused, &ns, &x, c.mb, scratch);
+        pt::ensure(y_unfused == reference, format!("unfused fallback diverged ({c:?})"))?;
+
+        // Warm repeat of the largest variant must not grow any buffer.
+        let fp = total_footprint(scratch);
+        let y_again = run_group(&sharded, &ns, &x, c.mb, scratch);
+        pt::ensure(y_again == reference, "warm sharded call diverged")?;
+        pt::ensure(
+            total_footprint(scratch) == fp,
+            format!("warm scratch grew: {} -> {}", fp, total_footprint(scratch)),
+        )
+    });
+}
+
+#[test]
+fn prop_group_build_counted_once_and_fanout_recorded() {
+    let cfg = pt::PropConfig { cases: 10, seed: 0xF0_5ED, ..Default::default() };
+    pt::assert_prop("group build ops == independent / members", cfg, &gen_case(), |c| {
+        let ns = member_heights(c);
+        let Some(parts) = stacked_members(c, &ns) else {
+            return Ok(());
+        };
+        let x = c.activations(2);
+        let run = |fused: bool| -> Counters {
+            let group = serial_group(&parts).with_fused(fused);
+            let mut scratch = EngineScratch::new();
+            run_group(&group, &ns, &x, c.mb, &mut scratch);
+            scratch.counters
+        };
+        let on = run(true);
+        let off = run(false);
+        // Every member's rows fit one row block (tile_h default 2048), so
+        // the independent schedule builds each k-tile exactly once per
+        // member: the pinned group factor.
+        pt::ensure(
+            off.build_ops == 3 * on.build_ops,
+            format!("build {} != 3 x {} ({c:?})", off.build_ops, on.build_ops),
+        )?;
+        pt::ensure(off.read_ops == on.read_ops, "gather work not conserved")?;
+        pt::ensure(off.lookups == on.lookups, "lookups not conserved")?;
+        pt::ensure(on.calls == 1 && on.group_fanout == 3, "fused call accounting")?;
+        pt::ensure(off.calls == 3 && off.group_fanout == 0, "independent call accounting")?;
+        pt::ensure(
+            on.build_share_ops() < off.build_share_ops() || on.build_ops == 0,
+            "fusion must shrink the build share",
+        )
+    });
+}
+
+#[test]
+fn mismatched_member_configs_fall_back_but_stay_correct() {
+    let k = 64usize;
+    let quantize = |n: usize, label: &str, seed: u64| {
+        let w = Prng::seeded(seed).normal_vec(n * k, 0.02);
+        Quantizer::new(QuantConfig::parse_label(label).unwrap()).quantize(&w, n, k)
+    };
+    // Different codebooks (separate quantizations) and even different
+    // formats: the group must refuse to fuse and still be correct.
+    let qa = quantize(24, "m1v4g32", 1);
+    let qb = quantize(16, "m2v8g32", 2);
+    let group = GemmGroup::new(
+        vec![
+            GroupMember::serial(CodeGemmEngine::from_quantized(&qa)),
+            GroupMember::serial(CodeGemmEngine::from_quantized(&qb)),
+        ],
+        None,
+    );
+    assert!(!group.is_fusable());
+    assert!(!group.uses_fused());
+    for mb in [1usize, 4] {
+        let x = Prng::seeded(3 + mb as u64).normal_vec(k * mb, 1.0);
+        let mut scratch = EngineScratch::new();
+        let mut ya = vec![f32::NAN; 24 * mb];
+        let mut yb = vec![f32::NAN; 16 * mb];
+        group.gemm_group_into(&x, mb, &mut [&mut ya[..], &mut yb[..]], &mut scratch);
+        assert_eq!(ya, CodeGemmEngine::from_quantized(&qa).gemm(&x, mb), "member a (mb={mb})");
+        assert_eq!(yb, CodeGemmEngine::from_quantized(&qb).gemm(&x, mb), "member b (mb={mb})");
+        assert_eq!(scratch.counters.group_fanout, 0, "no fanout on the fallback");
+    }
+    // Two separately-quantized members of the *same* config still must
+    // not fuse: their codebooks differ.
+    let qc = quantize(16, "m1v4g32", 9);
+    let same_cfg = GemmGroup::new(
+        vec![
+            GroupMember::serial(CodeGemmEngine::from_quantized(&qa)),
+            GroupMember::serial(CodeGemmEngine::from_quantized(&qc)),
+        ],
+        None,
+    );
+    assert!(!same_cfg.is_fusable(), "distinct codebooks must not share a book");
+}
