@@ -22,6 +22,7 @@ use crate::kvcache::{BlockPool, KvStats, PagedKv, SeqKv};
 use crate::model::{EngineKind, LlamaModel, ModelWeights};
 use crate::runtime::ModelRuntime;
 use crate::util::threadpool::ThreadPool;
+use crate::util::timer::PhaseTimer;
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
@@ -111,6 +112,14 @@ pub trait DecodeBackend: Send {
     /// report derives the build share and the fused-projection fanout
     /// from it.
     fn engine_counters(&self) -> Option<Counters> {
+        None
+    }
+    /// Cumulative model-forward phase attribution (`model/gemm`,
+    /// `model/attention`, `model/lm_head` seconds; `None` when the
+    /// backend has no per-phase instrumentation, e.g. the compiled PJRT
+    /// path). Gauge semantics: the timer accumulates over the model's
+    /// whole life, so the latest snapshot carries the history.
+    fn phases(&self) -> Option<PhaseTimer> {
         None
     }
     fn label(&self) -> String;
@@ -300,6 +309,10 @@ impl DecodeBackend for NativeBackend {
 
     fn engine_counters(&self) -> Option<Counters> {
         Some(self.model.total_counters())
+    }
+
+    fn phases(&self) -> Option<PhaseTimer> {
+        Some(self.model.phases().clone())
     }
 
     fn label(&self) -> String {

@@ -26,9 +26,21 @@ use super::metrics::Metrics;
 use super::request::{FinishReason, InFlight, Request, Response};
 use crate::config::ServeConfig;
 use crate::model::Sampler;
+use crate::obs::trace::{self, SpanRecord};
 use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Span-schema name for a finish reason (`obs::trace` is stringly typed
+/// so the trace schema stays decoupled from the enum).
+fn finish_str(reason: FinishReason) -> &'static str {
+    match reason {
+        FinishReason::Length => trace::FINISH_LENGTH,
+        FinishReason::Stop => trace::FINISH_STOP,
+        FinishReason::Context => trace::FINISH_CONTEXT,
+        FinishReason::Rejected => trace::FINISH_REJECTED,
+    }
+}
 
 /// Slot state.
 enum Slot {
@@ -49,6 +61,10 @@ pub struct Batcher {
     /// round-robins across prefilling slots instead of starving the
     /// highest-numbered ones.
     prefill_rr: usize,
+    /// Sampling seconds accumulated by `advance_after_logits` since the
+    /// last drain — lets `step` subtract sampling out of the prefill and
+    /// decode phases so `sched/*` attribution is exclusive.
+    sample_s: f64,
 }
 
 impl Batcher {
@@ -63,6 +79,7 @@ impl Batcher {
             metrics,
             finished: Vec::new(),
             prefill_rr: 0,
+            sample_s: 0.0,
         }
     }
 
@@ -115,7 +132,20 @@ impl Batcher {
                     break;
                 }
                 let req = self.queue.pop_front().unwrap();
-                self.metrics.on_infeasible();
+                let queue_wait_s = req.created.elapsed().as_secs_f64();
+                self.metrics.on_infeasible(&SpanRecord {
+                    id: req.id,
+                    prompt_tokens: req.prompt.len(),
+                    generated_tokens: 0,
+                    finish: trace::FINISH_REJECTED,
+                    queue_wait_s,
+                    prefill_s: 0.0,
+                    ttft_s: 0.0,
+                    decode_s: 0.0,
+                    latency_s: queue_wait_s,
+                    tpot_s: 0.0,
+                    prefill_chunks: 0,
+                });
                 self.finished.push(Response {
                     id: req.id,
                     tokens: Vec::new(),
@@ -204,11 +234,20 @@ impl Batcher {
             let Slot::Busy(f) = &mut self.slots[i] else { unreachable!() };
             f.prefill_idx += feed.len();
             f.pos += feed.len();
+            f.prefill_chunks += 1;
+            if finishes_prompt {
+                f.prefill_done = Some(Instant::now());
+            }
             self.advance_after_logits(i, logits.as_deref().unwrap_or(&[]), max_seq);
         }
         if n > 0 {
             self.prefill_rr = (self.prefill_rr + 1) % n;
         }
+        // Sampling time inside phase 1 (final-chunk logits seed the first
+        // token) — drained so the sched/* phases stay exclusive.
+        let sample_p1 = std::mem::take(&mut self.sample_s);
+        let prefill_s = t0.elapsed().as_secs_f64() - sample_p1;
+        let t1 = Instant::now();
 
         // Phase 2: one decode token for every slot already decoding.
         let mut steps: Vec<SlotStep> = Vec::new();
@@ -229,8 +268,17 @@ impl Batcher {
                 self.advance_after_logits(ss.slot, lg, max_seq);
             }
         }
+        let sample_p2 = std::mem::take(&mut self.sample_s);
+        let decode_s = t1.elapsed().as_secs_f64() - sample_p2;
         if advanced > 0 {
             self.metrics.on_step(advanced, prefill_tokens, decode_n, t0.elapsed().as_secs_f64());
+            // Scheduler phase attribution: prefill and decode wall time
+            // with sampling carved out into its own phase.
+            self.metrics.on_step_phases(&[
+                ("sched/prefill", prefill_s.max(0.0)),
+                ("sched/decode", decode_s.max(0.0)),
+                ("sched/sample", sample_p1 + sample_p2),
+            ]);
             // Pool occupancy gauge (post-step, so reclamation shows up).
             if let Some(kv) = self.backend.kv_stats() {
                 self.metrics.on_kv(kv);
@@ -238,6 +286,10 @@ impl Batcher {
             // Engine work gauge (cumulative counters: latest wins).
             if let Some(eng) = self.backend.engine_counters() {
                 self.metrics.on_engine(eng);
+            }
+            // Model forward phase gauge (cumulative timer: latest wins).
+            if let Some(p) = self.backend.phases() {
+                self.metrics.on_model_phases(p);
             }
         }
         advanced
@@ -253,7 +305,9 @@ impl Batcher {
         if !f.is_prefilling() {
             // Sample the next token (valid both for the final prefill
             // position's logits and for decode steps).
+            let ts = Instant::now();
             let tok = self.sampler.sample(logits);
+            self.sample_s += ts.elapsed().as_secs_f64();
             if f.first_token.is_none() {
                 f.first_token = Some(Instant::now());
             }
@@ -268,22 +322,41 @@ impl Batcher {
             finish = Some(FinishReason::Context);
         }
         if let Some(reason) = finish {
-            let ttft = f
-                .first_token
-                .map(|t| (t - f.submitted).as_secs_f64())
-                .unwrap_or_default();
-            let latency = f.submitted.elapsed().as_secs_f64();
-            let decode_time = (latency - ttft).max(1e-9);
+            // Lifecycle attribution, all anchored at submit time
+            // (`req.created`) so TTFT/latency are client-visible:
+            // queue wait → prefill → first token → decode → finish.
+            let now = Instant::now();
+            let created = f.req.created;
+            let ttft = f.first_token.map(|t| (t - created).as_secs_f64()).unwrap_or_default();
+            let latency = (now - created).as_secs_f64();
+            let decode_time = f.first_token.map(|t| (now - t).as_secs_f64()).unwrap_or(0.0);
             let n_gen = f.generated.len();
+            let span = SpanRecord {
+                id: f.req.id,
+                prompt_tokens: f.req.prompt.len(),
+                generated_tokens: n_gen,
+                finish: finish_str(reason),
+                queue_wait_s: (f.admitted - created).as_secs_f64(),
+                prefill_s: f.prefill_done.map(|t| (t - f.admitted).as_secs_f64()).unwrap_or(0.0),
+                ttft_s: ttft,
+                decode_s: decode_time,
+                latency_s: latency,
+                tpot_s: if n_gen > 1 { decode_time / (n_gen - 1) as f64 } else { 0.0 },
+                prefill_chunks: f.prefill_chunks,
+            };
             let resp = Response {
                 id: f.req.id,
                 tokens: std::mem::take(&mut f.generated),
                 finish: reason,
                 ttft_s: ttft,
                 latency_s: latency,
-                tok_per_s: if n_gen > 1 { (n_gen - 1) as f64 / decode_time } else { 0.0 },
+                tok_per_s: if n_gen > 1 {
+                    (n_gen - 1) as f64 / decode_time.max(1e-9)
+                } else {
+                    0.0
+                },
             };
-            self.metrics.on_complete(ttft, latency);
+            self.metrics.on_complete(&span);
             self.finished.push(resp);
             *slot = Slot::Free;
             // Reclaim the sequence's KV pages immediately (not at the

@@ -1,12 +1,40 @@
-//! Serving metrics: counters, latency summaries, KV-pool occupancy and
-//! engine-work gauges, shared between the batcher thread and callers.
+//! Serving metrics over **fixed-memory** recorders: counters, streaming
+//! latency histograms (`obs::hist` — no per-sample buffer grows with
+//! request count), a bounded ring of request lifecycle spans
+//! (`obs::trace`), per-step phase attribution, and the KV-pool /
+//! engine-work gauges — shared between the batcher thread and callers.
+//!
+//! Semantics per recorder:
+//!
+//! - **Counters** (`submitted`, `completed`, tokens, steps, …) and
+//!   **histograms** (`ttft`, `latency`, `tpot`, `queue_wait`,
+//!   `step_time`) accumulate incrementally.
+//! - **Scheduler phases** (`sched/prefill`, `sched/decode`,
+//!   `sched/sample`) accumulate incrementally per step via
+//!   [`Metrics::on_step_phases`].
+//! - **Gauges** keep the latest snapshot, which carries the whole
+//!   history because the underlying values are monotone: the KV-pool
+//!   snapshot ([`Metrics::on_kv`] — its high-water/churn counters are
+//!   pool-lifetime totals), the engine counters ([`Metrics::on_engine`]
+//!   — cumulative MAC/seconds tallies), and the model-forward phase
+//!   timer ([`Metrics::on_model_phases`] — `model/*` seconds accumulate
+//!   inside the model's scratch).
+//!
+//! [`MetricsReport::phases`] merges all three phase sources into one
+//! attribution list (`sched/*`, `model/*`, plus `engine/build` /
+//! `engine/gather` derived from the counters' seconds split), so a
+//! single report answers "where did the serving time go" from the
+//! scheduler down to the paper's Table 6 build-vs-gather split.
 
 use crate::gemm::Counters;
 use crate::kvcache::KvStats;
+use crate::obs::hist::Histogram;
+use crate::obs::trace::{SpanRecord, TraceLog};
 use crate::util::stats::Summary;
+use crate::util::timer::PhaseTimer;
 use std::sync::Mutex;
 
-/// Raw metric samples (seconds).
+/// Fixed-memory metric state (seconds for all times).
 #[derive(Debug, Default)]
 struct Inner {
     submitted: u64,
@@ -21,9 +49,22 @@ struct Inner {
     decode_tokens: u64,
     steps: u64,
     batched_slots: u64,
-    ttft: Vec<f64>,
-    latency: Vec<f64>,
-    step_seconds: Vec<f64>,
+    ttft: Histogram,
+    latency: Histogram,
+    tpot: Histogram,
+    queue_wait: Histogram,
+    step_time: Histogram,
+    /// Exact total of recorded step seconds — the throughput fallback
+    /// window when `started == finished` (a single recorded step).
+    step_seconds_sum: f64,
+    /// Scheduler-phase seconds (`sched/*`), accumulated per step.
+    sched_phases: PhaseTimer,
+    /// Latest model-forward phase snapshot (`model/*`; gauge — the
+    /// timer accumulates inside the model scratch, so the latest
+    /// snapshot carries the whole history).
+    model_phases: Option<PhaseTimer>,
+    /// Bounded ring of recent request spans.
+    spans: TraceLog,
     /// Latest pool snapshot from a pool-backed backend (gauge; the
     /// churn and high-water counters inside it are lifetime totals, so
     /// the latest snapshot carries the whole history).
@@ -62,11 +103,29 @@ pub struct MetricsReport {
     pub steps: u64,
     /// Mean occupied slots per step (batch efficiency).
     pub mean_batch: f64,
+    /// Summaries from the streaming histograms: mean/std/min/max exact,
+    /// percentiles within the histogram bucket error (~2.2%).
     pub ttft: Summary,
     pub latency: Summary,
+    /// Time per output token after the first, per request (only requests
+    /// generating ≥ 2 tokens contribute).
+    pub tpot: Summary,
+    /// Submit → admission wait, per request.
+    pub queue_wait: Summary,
     pub step_time: Summary,
-    /// Aggregate decode throughput over the serving window (tok/s).
+    /// Aggregate decode throughput over the serving window (tok/s). When
+    /// the wall window is degenerate (a single recorded step), the
+    /// summed step seconds serve as the window; 0 when nothing ran.
     pub tokens_per_s: f64,
+    /// Merged per-phase seconds: `sched/*` (batcher step phases),
+    /// `model/*` (forward timer), `engine/build` / `engine/gather`
+    /// (derived from the engine counters' seconds split).
+    pub phases: Vec<(String, f64)>,
+    /// Recent request lifecycle spans, oldest → newest (bounded ring —
+    /// at most `TraceLog::DEFAULT_CAPACITY`).
+    pub spans: Vec<SpanRecord>,
+    /// Spans ever recorded (including ones evicted from the ring).
+    pub spans_total: u64,
     /// Latest KV-pool snapshot (pool/page occupancy, high-water mark,
     /// churn, per-slot held/filled bytes); `None` for backends without a
     /// pool.
@@ -91,9 +150,13 @@ impl Metrics {
     }
 
     /// Record a submitted request finished as unservable (its KV
-    /// footprint exceeds the whole pool).
-    pub fn on_infeasible(&self) {
-        self.inner.lock().unwrap().infeasible += 1;
+    /// footprint exceeds the whole pool). The span documents the
+    /// rejection (zero tokens, `finish = "rejected"`).
+    pub fn on_infeasible(&self, span: &SpanRecord) {
+        let mut g = self.inner.lock().unwrap();
+        g.infeasible += 1;
+        g.queue_wait.record(span.queue_wait_s);
+        g.spans.push(span.clone());
     }
 
     /// Record one step on which the queue head could not be admitted for
@@ -116,6 +179,22 @@ impl Metrics {
         self.inner.lock().unwrap().engine = Some(counters);
     }
 
+    /// Record the latest model-forward phase timer (`model/*` phases;
+    /// gauge semantics — the timer accumulates across the model's whole
+    /// life, so the latest snapshot carries the history).
+    pub fn on_model_phases(&self, phases: PhaseTimer) {
+        self.inner.lock().unwrap().model_phases = Some(phases);
+    }
+
+    /// Accumulate scheduler-phase seconds for one step (incremental:
+    /// each call adds onto the running totals).
+    pub fn on_step_phases(&self, phases: &[(&str, f64)]) {
+        let mut g = self.inner.lock().unwrap();
+        for (name, s) in phases {
+            g.sched_phases.add(name, *s);
+        }
+    }
+
     /// Record one batcher step: `occupied` slots advanced, consuming
     /// `prefill` prompt tokens (batched prefill) and `decode` generated
     /// tokens (one per decoding slot).
@@ -125,32 +204,69 @@ impl Metrics {
         g.batched_slots += occupied as u64;
         g.prefill_tokens += prefill as u64;
         g.decode_tokens += decode as u64;
-        g.step_seconds.push(seconds);
+        g.step_time.record(seconds);
+        g.step_seconds_sum += seconds;
         let now = std::time::Instant::now();
         g.started.get_or_insert(now);
         g.finished = Some(now);
     }
 
-    pub fn on_complete(&self, ttft_s: f64, latency_s: f64) {
+    /// Record a finished request from its lifecycle span: latency
+    /// histograms (TTFT, latency, queue wait, TPOT for requests that
+    /// generated ≥ 2 tokens) plus the span ring.
+    pub fn on_complete(&self, span: &SpanRecord) {
         let mut g = self.inner.lock().unwrap();
         g.completed += 1;
-        g.ttft.push(ttft_s);
-        g.latency.push(latency_s);
+        g.ttft.record(span.ttft_s);
+        g.latency.record(span.latency_s);
+        g.queue_wait.record(span.queue_wait_s);
+        if span.generated_tokens > 1 {
+            g.tpot.record(span.tpot_s);
+        }
+        g.spans.push(span.clone());
+    }
+
+    /// Bytes held by the metric recorders themselves — constant for the
+    /// sink's lifetime regardless of request count (pinned by tests).
+    pub fn footprint_bytes(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        [&g.ttft, &g.latency, &g.tpot, &g.queue_wait, &g.step_time]
+            .iter()
+            .map(|h| h.footprint_bytes())
+            .sum::<usize>()
+            + g.spans.footprint_bytes()
     }
 
     pub fn report(&self) -> MetricsReport {
         let g = self.inner.lock().unwrap();
+        // Wall window between the first and last recorded step. With a
+        // single step the endpoints coincide and the window is
+        // degenerate — fall back to the summed step seconds (exact for
+        // one step), or report 0 throughput when nothing ran.
         let window = match (g.started, g.finished) {
-            (Some(a), Some(b)) => (b - a).as_secs_f64().max(1e-9),
-            _ => f64::INFINITY,
-        };
-        let summary = |xs: &[f64]| {
-            if xs.is_empty() {
-                Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0 }
-            } else {
-                Summary::of(xs)
+            (Some(a), Some(b)) => {
+                let w = (b - a).as_secs_f64();
+                if w > 0.0 {
+                    Some(w)
+                } else if g.step_seconds_sum > 0.0 {
+                    Some(g.step_seconds_sum)
+                } else {
+                    None
+                }
             }
+            _ => None,
         };
+        let mut phases: Vec<(String, f64)> =
+            g.sched_phases.phases().iter().cloned().collect();
+        if let Some(mp) = &g.model_phases {
+            phases.extend(mp.phases().iter().cloned());
+        }
+        if let Some(e) = &g.engine {
+            if e.build_seconds + e.read_seconds > 0.0 {
+                phases.push(("engine/build".to_string(), e.build_seconds));
+                phases.push(("engine/gather".to_string(), e.read_seconds));
+            }
+        }
         MetricsReport {
             submitted: g.submitted,
             completed: g.completed,
@@ -161,10 +277,15 @@ impl Metrics {
             decode_tokens: g.decode_tokens,
             steps: g.steps,
             mean_batch: if g.steps > 0 { g.batched_slots as f64 / g.steps as f64 } else { 0.0 },
-            ttft: summary(&g.ttft),
-            latency: summary(&g.latency),
-            step_time: summary(&g.step_seconds),
-            tokens_per_s: if window.is_finite() { g.decode_tokens as f64 / window } else { 0.0 },
+            ttft: g.ttft.summary(),
+            latency: g.latency.summary(),
+            tpot: g.tpot.summary(),
+            queue_wait: g.queue_wait.summary(),
+            step_time: g.step_time.summary(),
+            tokens_per_s: window.map(|w| g.decode_tokens as f64 / w).unwrap_or(0.0),
+            phases,
+            spans: g.spans.recent(),
+            spans_total: g.spans.total(),
             kv: g.kv.clone(),
             engine: g.engine.clone(),
         }
@@ -172,13 +293,43 @@ impl Metrics {
 }
 
 impl MetricsReport {
+    /// Seconds attributed to `phase` (0 when absent).
+    pub fn phase_seconds(&self, phase: &str) -> f64 {
+        self.phases.iter().find(|(n, _)| n == phase).map(|(_, s)| *s).unwrap_or(0.0)
+    }
+
+    /// Share of `phase` within its namespace (`sched/`, `model/`,
+    /// `engine/` — the prefix up to `/`), so scheduler, model and engine
+    /// attributions each sum to 1 independently.
+    pub fn phase_share(&self, phase: &str) -> f64 {
+        let ns = phase.split('/').next().unwrap_or("");
+        let total: f64 = self
+            .phases
+            .iter()
+            .filter(|(n, _)| n.split('/').next().unwrap_or("") == ns)
+            .map(|(_, s)| s)
+            .sum();
+        if total > 0.0 {
+            self.phase_seconds(phase) / total
+        } else {
+            0.0
+        }
+    }
+
+    /// Engine Psumbook build share by MACs, straight from the counters
+    /// gauge (`None` without engine accounting).
+    pub fn build_share_ops(&self) -> Option<f64> {
+        self.engine.as_ref().map(|e| e.build_share_ops())
+    }
+
     pub fn render(&self) -> String {
         let mut out = format!(
             "requests: {} submitted / {} completed / {} rejected / {} infeasible / {} deferred\n\
              tokens:   {} prefill / {} decode ({:.1} tok/s decode)\n\
              batching: {} steps, mean occupancy {:.2}\n\
              ttft:     p50 {:.1} ms, p95 {:.1} ms\n\
-             latency:  p50 {:.1} ms, p95 {:.1} ms",
+             latency:  p50 {:.1} ms, p95 {:.1} ms\n\
+             tpot:     p50 {:.2} ms, p95 {:.2} ms (queue wait p95 {:.1} ms)",
             self.submitted,
             self.completed,
             self.rejected,
@@ -193,7 +344,19 @@ impl MetricsReport {
             self.ttft.p95 * 1e3,
             self.latency.p50 * 1e3,
             self.latency.p95 * 1e3,
+            self.tpot.p50 * 1e3,
+            self.tpot.p95 * 1e3,
+            self.queue_wait.p95 * 1e3,
         );
+        if !self.phases.is_empty() {
+            let mut parts: Vec<String> = self
+                .phases
+                .iter()
+                .map(|(n, _)| format!("{n} {:.1}%", 100.0 * self.phase_share(n)))
+                .collect();
+            parts.sort();
+            out.push_str(&format!("\nphases:   {}", parts.join(" · ")));
+        }
         if let Some(kv) = &self.kv {
             out.push_str(&format!(
                 "\nkv pool:  {}/{} pages used (hwm {}), {} tok/page, \
@@ -217,6 +380,12 @@ impl MetricsReport {
                 e.fanout_per_call(),
             ));
         }
+        if self.spans_total > 0 {
+            out.push_str(&format!("\nspans:    {} recorded; most recent:", self.spans_total));
+            for s in self.spans.iter().rev().take(4).rev() {
+                out.push_str(&format!("\n  {}", s.render()));
+            }
+        }
         out
     }
 }
@@ -224,6 +393,23 @@ impl MetricsReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::trace::FINISH_LENGTH;
+
+    fn span(id: u64, ttft_s: f64, latency_s: f64) -> SpanRecord {
+        SpanRecord {
+            id,
+            prompt_tokens: 2,
+            generated_tokens: 4,
+            finish: FINISH_LENGTH,
+            queue_wait_s: 0.001,
+            prefill_s: 0.002,
+            ttft_s,
+            decode_s: latency_s - ttft_s,
+            latency_s,
+            tpot_s: (latency_s - ttft_s) / 3.0,
+            prefill_chunks: 1,
+        }
+    }
 
     #[test]
     fn accumulates() {
@@ -233,7 +419,7 @@ mod tests {
         m.on_reject();
         m.on_step(2, 2, 0, 0.001);
         m.on_step(2, 0, 2, 0.001);
-        m.on_complete(0.01, 0.05);
+        m.on_complete(&span(1, 0.01, 0.05));
         let r = m.report();
         assert_eq!(r.submitted, 2);
         assert_eq!(r.rejected, 1);
@@ -243,6 +429,93 @@ mod tests {
         assert!((r.mean_batch - 2.0).abs() < 1e-9);
         assert!(r.render().contains("mean occupancy 2.00"));
         assert!(r.kv.is_none(), "no pool snapshot recorded");
+        assert_eq!(r.spans_total, 1);
+        assert_eq!(r.spans[0].id, 1);
+    }
+
+    #[test]
+    fn histogram_percentiles_track_samples_within_bucket_error() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            let lat = i as f64 * 1e-3;
+            m.on_complete(&span(i, lat / 2.0, lat));
+        }
+        let r = m.report();
+        assert_eq!(r.completed, 100);
+        let tol = Histogram::relative_error_bound() + 0.02; // + rank granularity
+        assert!((r.latency.p50 - 0.050).abs() / 0.050 <= tol, "p50 {}", r.latency.p50);
+        assert!((r.latency.p99 - 0.099).abs() / 0.099 <= tol, "p99 {}", r.latency.p99);
+        assert!((r.latency.mean - 0.0505).abs() < 1e-12, "mean stays exact");
+    }
+
+    #[test]
+    fn tpot_recorded_and_rendered() {
+        let m = Metrics::new();
+        m.on_complete(&span(1, 0.01, 0.04)); // tpot = 0.01
+        let r = m.report();
+        assert_eq!(r.tpot.n, 1);
+        assert!((r.tpot.p50 - 0.01).abs() < 1e-9);
+        assert!(r.render().contains("tpot:"), "{}", r.render());
+    }
+
+    #[test]
+    fn throughput_window_degenerate_single_step_uses_step_seconds() {
+        let m = Metrics::new();
+        // One step: started == finished, but 10 decode tokens over a
+        // recorded 0.5 s of step time must report 20 tok/s, not 1e10.
+        m.on_step(1, 0, 10, 0.5);
+        let r = m.report();
+        assert!((r.tokens_per_s - 20.0).abs() < 1.0, "tok/s {}", r.tokens_per_s);
+    }
+
+    #[test]
+    fn throughput_zero_when_nothing_ran() {
+        let m = Metrics::new();
+        assert_eq!(m.report().tokens_per_s, 0.0);
+    }
+
+    #[test]
+    fn phases_merge_sched_model_and_engine() {
+        let m = Metrics::new();
+        m.on_step_phases(&[("sched/prefill", 0.3), ("sched/decode", 0.1)]);
+        m.on_step_phases(&[("sched/decode", 0.1)]);
+        let mut mp = PhaseTimer::new();
+        mp.add("model/gemm", 0.6);
+        mp.add("model/attention", 0.2);
+        m.on_model_phases(mp);
+        m.on_engine(Counters {
+            build_seconds: 0.25,
+            read_seconds: 0.75,
+            build_ops: 1,
+            read_ops: 3,
+            ..Default::default()
+        });
+        let r = m.report();
+        assert_eq!(r.phase_seconds("sched/prefill"), 0.3);
+        assert_eq!(r.phase_seconds("sched/decode"), 0.2, "incremental accumulation");
+        assert_eq!(r.phase_seconds("model/gemm"), 0.6);
+        assert!((r.phase_share("sched/prefill") - 0.6).abs() < 1e-12);
+        assert!((r.phase_share("model/gemm") - 0.75).abs() < 1e-12);
+        assert!((r.phase_share("engine/build") - 0.25).abs() < 1e-12);
+        assert_eq!(r.build_share_ops(), Some(0.25));
+        assert!(r.render().contains("phases:"), "{}", r.render());
+    }
+
+    #[test]
+    fn metrics_memory_constant_under_many_requests() {
+        let m = Metrics::new();
+        m.on_complete(&span(0, 0.01, 0.02));
+        m.on_step(1, 1, 1, 0.001);
+        let fp = m.footprint_bytes();
+        for i in 1..5_000 {
+            m.on_complete(&span(i, 0.01 + (i % 7) as f64 * 1e-3, 0.05));
+            m.on_step(1, 0, 1, 0.001 * ((i % 5) as f64 + 1.0));
+        }
+        assert_eq!(m.footprint_bytes(), fp, "per-request memory must not grow");
+        let r = m.report();
+        assert_eq!(r.completed, 5_000);
+        assert_eq!(r.spans_total, 5_000);
+        assert!(r.spans.len() <= TraceLog::DEFAULT_CAPACITY);
     }
 
     #[test]

@@ -31,6 +31,17 @@
 //! GEMM (`want_logits = false`); (2) one decode token for every decoding
 //! slot. [`metrics::Metrics`] reports prefill/decode token splits,
 //! admission deferrals, and the KV pool occupancy/churn snapshot.
+//!
+//! ## Observability
+//!
+//! [`metrics::Metrics`] is fixed-memory: latency distributions live in
+//! [`crate::obs::hist::Histogram`] buckets, per-request lifecycle spans
+//! ([`crate::obs::trace::SpanRecord`]) in a bounded ring, and per-step
+//! phase timings (`sched/*` from the batcher, `model/*` from the forward
+//! pass, `engine/*` from the GEMM counters) in a
+//! [`crate::util::timer::PhaseTimer`]. The `bench-serve` CLI drives this
+//! stack with seeded workloads ([`crate::obs::loadgen`]) and exports a
+//! schema-versioned artifact ([`crate::obs::export`]).
 
 pub mod backend;
 pub mod batcher;

@@ -12,11 +12,21 @@ pub struct Request {
     pub temperature: f32,
     /// Stop generating at this token if produced (e.g. a newline byte).
     pub stop_token: Option<usize>,
+    /// Submit time — the anchor for queue-wait and client-visible TTFT
+    /// attribution in the request's lifecycle span.
+    pub created: Instant,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<usize>, max_new_tokens: usize) -> Request {
-        Request { id, prompt, max_new_tokens, temperature: 0.0, stop_token: None }
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            temperature: 0.0,
+            stop_token: None,
+            created: Instant::now(),
+        }
     }
 
     /// Byte-level helper: prompt from text.
@@ -65,8 +75,15 @@ impl Response {
 #[derive(Debug)]
 pub struct InFlight {
     pub req: Request,
-    pub submitted: Instant,
+    /// Admission time (when the request won a slot); queue wait is
+    /// `admitted - req.created`.
+    pub admitted: Instant,
     pub first_token: Option<Instant>,
+    /// When the final prompt chunk was consumed (prefill attribution).
+    pub prefill_done: Option<Instant>,
+    /// Scheduler steps that fed prompt tokens (> 1 ⇒ the shared prefill
+    /// budget split this prompt across steps).
+    pub prefill_chunks: u32,
     /// Tokens generated so far.
     pub generated: Vec<usize>,
     /// Next prompt index still to prefill (== prompt.len() ⇒ decoding).
@@ -77,7 +94,16 @@ pub struct InFlight {
 
 impl InFlight {
     pub fn new(req: Request) -> InFlight {
-        InFlight { req, submitted: Instant::now(), first_token: None, generated: Vec::new(), prefill_idx: 0, pos: 0 }
+        InFlight {
+            req,
+            admitted: Instant::now(),
+            first_token: None,
+            prefill_done: None,
+            prefill_chunks: 0,
+            generated: Vec::new(),
+            prefill_idx: 0,
+            pos: 0,
+        }
     }
 
     pub fn is_prefilling(&self) -> bool {

@@ -82,6 +82,7 @@ pub mod eval;
 pub mod gemm;
 pub mod kvcache;
 pub mod model;
+pub mod obs;
 pub mod parallel;
 pub mod quant;
 pub mod runtime;

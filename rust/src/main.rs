@@ -1,13 +1,17 @@
 //! `codegemm` — leader entrypoint + CLI.
 //!
 //! Subcommands:
-//! - `tables`    regenerate the paper's tables/figures (model vs paper)
-//! - `serve`     run the serving coordinator on the AOT artifacts (or the
-//!               native backend) against a synthetic request workload
-//! - `quantize`  quantize a layer and report footprint / error / engine
-//!               agreement
-//! - `bench`     quick CPU-engine micro-benchmarks (full suite: cargo bench)
-//! - `doctor`    environment self-checks (PJRT client, artifacts)
+//! - `tables`      regenerate the paper's tables/figures (model vs paper)
+//! - `serve`       run the serving coordinator on the AOT artifacts (or the
+//!                 native backend) against a synthetic request workload
+//! - `bench-serve` trace-driven scenario harness: seeded workload mix →
+//!                 serving coordinator → versioned `BENCH_<n>.json`
+//!                 artifact, with an optional regression diff vs a
+//!                 previous artifact
+//! - `quantize`    quantize a layer and report footprint / error / engine
+//!                 agreement
+//! - `bench`       quick CPU-engine micro-benchmarks (full suite: cargo bench)
+//! - `doctor`      environment self-checks (PJRT client, artifacts)
 
 use codegemm::bench::harness::{run_bench, BenchOptions};
 use codegemm::bench::tables::{self, EvalContext};
@@ -15,6 +19,7 @@ use codegemm::config::{ModelConfig, ParallelConfig, QuantConfig, ServeConfig};
 use codegemm::coordinator::{DecodeBackend, NativeBackend, PjrtBackend, Request, Server};
 use codegemm::gemm::{CodeGemmEngine, DenseEngine, DequantEngine, GemmEngine};
 use codegemm::model::{EngineKind, ModelWeights};
+use codegemm::obs::{check_slo, compare, drive, generate, BenchArtifact, WorkloadMix};
 use codegemm::quant::footprint::bits_per_weight;
 use codegemm::quant::Quantizer;
 use codegemm::runtime::{pjrt_self_test, ModelRuntime};
@@ -43,6 +48,8 @@ fn usage() -> String {
          SUBCOMMANDS:\n  \
            tables    --table <1..10|fig4a|fig4b|fig5|all> [--artifacts DIR]\n  \
            serve     [--artifacts DIR] [--backend pjrt|native] [--requests N] [--batch N] [--threads N]\n  \
+           bench-serve [--workload chat|rag|longform|bursty|mixed] [--seed N] [--requests N]\n              \
+                     [--out BENCH_6.json] [--baseline PREV.json] [--threshold 0.2] [--advisory]\n  \
            quantize  --config m1v4g128 [--n 512] [--k 512]\n  \
            bench     [--n 1024] [--k 1024]\n  \
            doctor    [--artifacts DIR]\n",
@@ -59,6 +66,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
     match sub.as_str() {
         "tables" => cmd_tables(rest),
         "serve" => cmd_serve(rest),
+        "bench-serve" => cmd_bench_serve(rest),
         "quantize" => cmd_quantize(rest),
         "bench" => cmd_bench(rest),
         "doctor" => cmd_doctor(rest),
@@ -208,6 +216,103 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         total_tokens,
         n_requests
     );
+    Ok(())
+}
+
+// ------------------------------------------------------------ bench-serve
+
+fn cmd_bench_serve(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "bench-serve",
+        "seeded serving scenario → versioned BENCH artifact (+ regression diff)",
+    )
+    .opt("workload", Some("chat"), "chat | rag | longform | bursty | mixed")
+    .opt("seed", Some("7"), "workload seed (same seed ⇒ same request trace)")
+    .opt("requests", Some("0"), "request count (0 = 48, or 12 under CODEGEMM_BENCH_QUICK=1)")
+    .opt("batch", Some("4"), "max batch")
+    .opt("out", Some("BENCH_6.json"), "artifact output path")
+    .opt("baseline", None, "previous BENCH artifact to diff against")
+    .opt("threshold", Some("0.2"), "relative regression threshold for the comparator")
+    .flag("advisory", "report comparator findings without failing (exit 0)")
+    .opt("artifacts", Some("artifacts"), "weights dir (weights.f32.bin used when present)");
+    let m = cmd.parse(args)?;
+
+    let workload = m.str("workload")?;
+    let Some(mix) = WorkloadMix::by_name(workload) else {
+        anyhow::bail!("unknown workload '{workload}' (valid: {:?})", WorkloadMix::names());
+    };
+    let seed = m.usize("seed")? as u64;
+    let quick = std::env::var("CODEGEMM_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let n_requests = match m.usize("requests")? {
+        0 if quick => 12,
+        0 => 48,
+        n => n,
+    };
+
+    let model_cfg = ModelConfig::tiny();
+    let weights = load_or_random_weights(Path::new(m.str("artifacts")?));
+    let kind = EngineKind::codegemm(QuantConfig::new(4, 1, 8, 32)?);
+    let cfg = ServeConfig { max_batch: m.usize("batch")?, temperature: 0.0, ..Default::default() };
+    let backend = NativeBackend::with_kv_fused(
+        &weights,
+        kind,
+        cfg.max_batch,
+        &cfg.kv,
+        cfg.parallel.fused_projections_effective(),
+    );
+    let label = backend.label();
+    println!("backend: {label}  workload: {} ({n_requests} requests, seed {seed})", mix.name);
+
+    let trace = generate(&mix, seed, n_requests, model_cfg.vocab);
+    let server = Server::start(Box::new(backend), cfg);
+    let t0 = std::time::Instant::now();
+    let responses = drive(&server, &trace);
+    let wall = t0.elapsed().as_secs_f64();
+    let report = server.shutdown();
+    println!("{}", report.render());
+    let generated: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    println!("wall: {wall:.2}s — {generated} tokens generated");
+
+    let violations = check_slo(&mix.slo, &report);
+    if violations.is_empty() {
+        println!(
+            "slo: all met (ttft p99 ≤ {:.0} ms, tpot p95 ≤ {:.0} ms, decode ≥ {:.0} tok/s)",
+            mix.slo.ttft_p99_s * 1e3,
+            mix.slo.tpot_p95_s * 1e3,
+            mix.slo.min_decode_tok_s,
+        );
+    } else {
+        for v in &violations {
+            println!("slo: VIOLATION — {v}");
+        }
+    }
+
+    let out = std::path::PathBuf::from(m.str("out")?);
+    let bench_id = out.file_stem().and_then(|s| s.to_str()).unwrap_or("BENCH").to_string();
+    let artifact =
+        BenchArtifact::from_report(&bench_id, mix.name, seed, n_requests, &label, &report, violations);
+    artifact.save(&out)?;
+    println!("artifact: {} (schema v{})", out.display(), artifact.schema_version);
+
+    if let Some(base_path) = m.get("baseline") {
+        let threshold = m.f64("threshold")?;
+        let baseline = BenchArtifact::load(Path::new(base_path))?;
+        let findings = compare(&baseline, &artifact, threshold);
+        if findings.is_empty() {
+            println!(
+                "comparator: no regressions vs {base_path} (threshold {:.0}%)",
+                100.0 * threshold
+            );
+        } else {
+            for f in &findings {
+                println!("comparator: {f}");
+            }
+            if !m.flag("advisory") {
+                anyhow::bail!("{} regression(s) vs baseline {base_path}", findings.len());
+            }
+            println!("comparator: advisory mode — not failing the run");
+        }
+    }
     Ok(())
 }
 

@@ -33,7 +33,9 @@ use crate::gemm::{Counters, EngineScratch, GemmEngine};
 use crate::kvcache::KvStore;
 use crate::parallel::ShardPlan;
 use crate::util::threadpool::ThreadPool;
+use crate::util::timer::PhaseTimer;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Engines cap `m_batch` at 64 (the Psumbook batch axis); longer prompts
 /// prefill in chunks of this size.
@@ -73,6 +75,12 @@ struct ForwardScratch {
     act: Vec<f32>,
     scores: Vec<f32>,
     eng: EngineScratch,
+    /// Cumulative per-phase wall time of every forward through this
+    /// scratch: `model/gemm` (all linears), `model/attention`
+    /// (RoPE + KV write + attention kernel), `model/lm_head`. Riding in
+    /// the scratch keeps `step_batch` on `&self` and the accounting on
+    /// the same take/put path as the activation buffers.
+    timer: PhaseTimer,
 }
 
 /// A Llama model whose linears run through a chosen kernel engine.
@@ -438,6 +446,7 @@ impl LlamaModel {
         // enforced by the cache).
         let scores = grow_slice(&mut s.scores, shape.scores_len(cfg.max_seq));
         let eng = &mut s.eng;
+        let timer = &mut s.timer;
         let scale = 1.0 / (hd as f32).sqrt();
 
         for (layer_i, l) in self.layers.iter().enumerate() {
@@ -447,7 +456,10 @@ impl LlamaModel {
             }
             // One grouped call: under a fused CodeGEMM set the Psumbook
             // for each k-tile is built once and gathered by Q, K and V.
+            let tg = Instant::now();
             l.qkv.gemm_set_into(normed, m, &mut [&mut *q, &mut *kk, &mut *vv], eng);
+            timer.add("model/gemm", tg.elapsed().as_secs_f64());
+            let ta = Instant::now();
             for b in 0..m {
                 let pos = pos0 + b;
                 let cos = &self.rope_cos[pos * half..(pos + 1) * half];
@@ -478,7 +490,10 @@ impl LlamaModel {
                     &mut attn_out[b * d..(b + 1) * d],
                 );
             }
+            timer.add("model/attention", ta.elapsed().as_secs_f64());
+            let tg = Instant::now();
             l.wo.gemm_into(attn_out, m, proj, eng);
+            timer.add("model/gemm", tg.elapsed().as_secs_f64());
             for i in 0..m * d {
                 h[i] += proj[i];
             }
@@ -486,11 +501,15 @@ impl LlamaModel {
             for b in 0..m {
                 rmsnorm(&h[b * d..(b + 1) * d], &l.mlp_norm, &mut normed[b * d..(b + 1) * d]);
             }
+            let tg = Instant::now();
             l.gate_up.gemm_set_into(normed, m, &mut [&mut *gate, &mut *up], eng);
+            timer.add("model/gemm", tg.elapsed().as_secs_f64());
             for i in 0..m * cfg.ffn {
                 act[i] = silu(gate[i]) * up[i];
             }
+            let tg = Instant::now();
             l.w_down.gemm_into(act, m, proj, eng);
+            timer.add("model/gemm", tg.elapsed().as_secs_f64());
             for i in 0..m * d {
                 h[i] += proj[i];
             }
@@ -500,7 +519,9 @@ impl LlamaModel {
             assert_eq!(logits.len(), cfg.vocab);
             let normed_last = &mut normed[..d];
             rmsnorm(&h[(m - 1) * d..m * d], &self.final_norm, normed_last);
+            let tl = Instant::now();
             self.lm_head.gemm_into(normed_last, 1, logits, eng);
+            timer.add("model/lm_head", tl.elapsed().as_secs_f64());
         }
     }
 
@@ -519,6 +540,14 @@ impl LlamaModel {
         }
         total.merge(self.lm_head.counters());
         total
+    }
+
+    /// Cumulative per-phase forward wall time (`model/gemm`,
+    /// `model/attention`, `model/lm_head`) accumulated by every forward
+    /// through this model's scratch — the step-phase breakdown the
+    /// serving metrics surface next to the engine's build/gather split.
+    pub fn phases(&self) -> &PhaseTimer {
+        &self.scratch.timer
     }
 
     /// True when every layer's Q/K/V and gate/up sets take the fused

@@ -1,0 +1,384 @@
+//! Versioned perf artifact (`BENCH_<n>.json`) and the regression
+//! comparator that diffs two artifacts.
+//!
+//! ## BENCH JSON schema (version 1)
+//!
+//! Top-level object fields:
+//!
+//! - `schema_version` (int) — see the versioning policy below
+//! - `bench_id`, `workload`, `backend` (str); `seed`, `requests` (int)
+//! - headline gauges (floats): `decode_tok_s`, `ttft_p50_s`/`ttft_p99_s`,
+//!   `tpot_p50_s`/`tpot_p99_s`, `latency_p50_s`/`latency_p99_s`,
+//!   `queue_wait_p99_s`, `mean_batch`, `build_share_ops`
+//! - counters (ints): `completed`, `rejected`, `infeasible`, `deferred`,
+//!   `kv_used_hwm_pages`, `kv_total_pages`
+//! - `phase_shares` — array of `{name, share}` step-phase attribution
+//!   rows (shares of the total attributed seconds)
+//! - `slo_violations` — array of strings (empty ⇒ all SLOs met)
+//! - `spans` — array of span objects (see `obs::trace` for the fields);
+//!   the timing-free part of each span is the run's *structural trace*,
+//!   identical across same-seed runs
+//!
+//! ## Versioning policy
+//!
+//! `SCHEMA_VERSION` bumps only on breaking changes (field removal,
+//! rename, or semantic change); adding fields is allowed within a
+//! version. [`BenchArtifact::load`] refuses artifacts from a *newer*
+//! schema (forward compatibility is not promised) and accepts older
+//! ones as far as the required fields allow.
+//!
+//! ## Comparator
+//!
+//! [`compare`] flags regressions beyond a relative `threshold` on the
+//! throughput/latency headline gauges: decode tok/s dropping, or p99
+//! TTFT / p99 TPOT rising. It returns human-readable findings; the
+//! `bench-serve` CLI exits nonzero on any finding unless run in
+//! advisory mode.
+
+use crate::coordinator::MetricsReport;
+use crate::util::json::Json;
+
+/// Current BENCH artifact schema version.
+pub const SCHEMA_VERSION: usize = 1;
+
+/// One serving-bench result, shaped for `BENCH_<n>.json`.
+#[derive(Clone, Debug)]
+pub struct BenchArtifact {
+    pub schema_version: usize,
+    pub bench_id: String,
+    pub workload: String,
+    pub seed: u64,
+    pub requests: usize,
+    pub backend: String,
+    pub decode_tok_s: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub tpot_p50_s: f64,
+    pub tpot_p99_s: f64,
+    pub latency_p50_s: f64,
+    pub latency_p99_s: f64,
+    pub queue_wait_p99_s: f64,
+    pub mean_batch: f64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub infeasible: u64,
+    pub deferred: u64,
+    /// Step-phase attribution: `(phase name, share of attributed time)`.
+    pub phase_shares: Vec<(String, f64)>,
+    /// Engine Psumbook build share by MACs (0 when the backend has no
+    /// engine counters).
+    pub build_share_ops: f64,
+    pub kv_used_hwm_pages: usize,
+    pub kv_total_pages: usize,
+    pub slo_violations: Vec<String>,
+    /// Retained request spans (see `obs::trace` for the object schema).
+    pub spans: Vec<Json>,
+}
+
+impl BenchArtifact {
+    /// Build an artifact from a finished run's metrics report.
+    pub fn from_report(
+        bench_id: &str,
+        workload: &str,
+        seed: u64,
+        requests: usize,
+        backend: &str,
+        report: &MetricsReport,
+        slo_violations: Vec<String>,
+    ) -> BenchArtifact {
+        let total: f64 = report.phases.iter().map(|(_, s)| s).sum();
+        let phase_shares = report
+            .phases
+            .iter()
+            .map(|(n, s)| (n.clone(), if total > 0.0 { s / total } else { 0.0 }))
+            .collect();
+        let (hwm, pages) = report
+            .kv
+            .as_ref()
+            .map(|kv| (kv.pool.used_hwm, kv.pool.total_pages))
+            .unwrap_or((0, 0));
+        BenchArtifact {
+            schema_version: SCHEMA_VERSION,
+            bench_id: bench_id.to_string(),
+            workload: workload.to_string(),
+            seed,
+            requests,
+            backend: backend.to_string(),
+            decode_tok_s: report.tokens_per_s,
+            ttft_p50_s: report.ttft.p50,
+            ttft_p99_s: report.ttft.p99,
+            tpot_p50_s: report.tpot.p50,
+            tpot_p99_s: report.tpot.p99,
+            latency_p50_s: report.latency.p50,
+            latency_p99_s: report.latency.p99,
+            queue_wait_p99_s: report.queue_wait.p99,
+            mean_batch: report.mean_batch,
+            completed: report.completed,
+            rejected: report.rejected,
+            infeasible: report.infeasible,
+            deferred: report.deferred,
+            phase_shares,
+            build_share_ops: report.build_share_ops().unwrap_or(0.0),
+            kv_used_hwm_pages: hwm,
+            kv_total_pages: pages,
+            slo_violations,
+            spans: report.spans.iter().map(|s| s.to_json()).collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::from(self.schema_version)),
+            ("bench_id", Json::from(self.bench_id.as_str())),
+            ("workload", Json::from(self.workload.as_str())),
+            ("seed", Json::from(self.seed as usize)),
+            ("requests", Json::from(self.requests)),
+            ("backend", Json::from(self.backend.as_str())),
+            ("decode_tok_s", Json::Num(self.decode_tok_s)),
+            ("ttft_p50_s", Json::Num(self.ttft_p50_s)),
+            ("ttft_p99_s", Json::Num(self.ttft_p99_s)),
+            ("tpot_p50_s", Json::Num(self.tpot_p50_s)),
+            ("tpot_p99_s", Json::Num(self.tpot_p99_s)),
+            ("latency_p50_s", Json::Num(self.latency_p50_s)),
+            ("latency_p99_s", Json::Num(self.latency_p99_s)),
+            ("queue_wait_p99_s", Json::Num(self.queue_wait_p99_s)),
+            ("mean_batch", Json::Num(self.mean_batch)),
+            ("completed", Json::from(self.completed as usize)),
+            ("rejected", Json::from(self.rejected as usize)),
+            ("infeasible", Json::from(self.infeasible as usize)),
+            ("deferred", Json::from(self.deferred as usize)),
+            (
+                "phase_shares",
+                Json::Arr(
+                    self.phase_shares
+                        .iter()
+                        .map(|(n, s)| {
+                            Json::obj(vec![
+                                ("name", Json::from(n.as_str())),
+                                ("share", Json::Num(*s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("build_share_ops", Json::Num(self.build_share_ops)),
+            ("kv_used_hwm_pages", Json::from(self.kv_used_hwm_pages)),
+            ("kv_total_pages", Json::from(self.kv_total_pages)),
+            (
+                "slo_violations",
+                Json::Arr(self.slo_violations.iter().map(|v| Json::from(v.as_str())).collect()),
+            ),
+            ("spans", Json::Arr(self.spans.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<BenchArtifact> {
+        let version = j.req_usize("schema_version")?;
+        if version > SCHEMA_VERSION {
+            anyhow::bail!(
+                "artifact schema_version {version} is newer than supported {SCHEMA_VERSION}"
+            );
+        }
+        let phase_shares = j
+            .req_arr("phase_shares")?
+            .iter()
+            .map(|p| Ok((p.req_str("name")?.to_string(), p.req_f64("share")?)))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let slo_violations = j
+            .req_arr("slo_violations")?
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("slo_violations entries must be strings"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(BenchArtifact {
+            schema_version: version,
+            bench_id: j.req_str("bench_id")?.to_string(),
+            workload: j.req_str("workload")?.to_string(),
+            seed: j.req_usize("seed")? as u64,
+            requests: j.req_usize("requests")?,
+            backend: j.req_str("backend")?.to_string(),
+            decode_tok_s: j.req_f64("decode_tok_s")?,
+            ttft_p50_s: j.req_f64("ttft_p50_s")?,
+            ttft_p99_s: j.req_f64("ttft_p99_s")?,
+            tpot_p50_s: j.req_f64("tpot_p50_s")?,
+            tpot_p99_s: j.req_f64("tpot_p99_s")?,
+            latency_p50_s: j.req_f64("latency_p50_s")?,
+            latency_p99_s: j.req_f64("latency_p99_s")?,
+            queue_wait_p99_s: j.req_f64("queue_wait_p99_s")?,
+            mean_batch: j.req_f64("mean_batch")?,
+            completed: j.req_usize("completed")? as u64,
+            rejected: j.req_usize("rejected")? as u64,
+            infeasible: j.req_usize("infeasible")? as u64,
+            deferred: j.req_usize("deferred")? as u64,
+            phase_shares,
+            build_share_ops: j.req_f64("build_share_ops")?,
+            kv_used_hwm_pages: j.req_usize("kv_used_hwm_pages")?,
+            kv_total_pages: j.req_usize("kv_total_pages")?,
+            slo_violations,
+            spans: j.req_arr("spans")?.to_vec(),
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty() + "\n")?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<BenchArtifact> {
+        let text = std::fs::read_to_string(path)?;
+        BenchArtifact::from_json(&Json::parse(&text)?)
+    }
+
+    /// The timing-free projection of the span list (sorted by request
+    /// id): two same-seed runs must produce identical structural traces.
+    pub fn structural_trace(&self) -> Vec<String> {
+        let mut rows: Vec<(usize, String)> = self
+            .spans
+            .iter()
+            .filter_map(|s| {
+                let id = s.req_usize("id").ok()?;
+                Some((
+                    id,
+                    format!(
+                        "{}:{}:{}:{}",
+                        id,
+                        s.req_usize("prompt_tokens").ok()?,
+                        s.req_usize("generated_tokens").ok()?,
+                        s.req_str("finish").ok()?
+                    ),
+                ))
+            })
+            .collect();
+        rows.sort_by_key(|(id, _)| *id);
+        rows.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+/// Diff `current` against `baseline`; a finding is any headline gauge
+/// moving the wrong way by more than `threshold` (relative, e.g. 0.2 =
+/// 20%). Latency gauges with a sub-microsecond baseline are skipped —
+/// they are below timer resolution and would only produce noise.
+pub fn compare(baseline: &BenchArtifact, current: &BenchArtifact, threshold: f64) -> Vec<String> {
+    let mut findings = Vec::new();
+    if baseline.decode_tok_s > 0.0
+        && current.decode_tok_s < baseline.decode_tok_s * (1.0 - threshold)
+    {
+        findings.push(format!(
+            "decode throughput regressed {:.1}% ({:.1} → {:.1} tok/s)",
+            100.0 * (1.0 - current.decode_tok_s / baseline.decode_tok_s),
+            baseline.decode_tok_s,
+            current.decode_tok_s,
+        ));
+    }
+    let lat = [
+        ("ttft p99", baseline.ttft_p99_s, current.ttft_p99_s),
+        ("tpot p99", baseline.tpot_p99_s, current.tpot_p99_s),
+    ];
+    for (name, base, cur) in lat {
+        if base > 1e-6 && cur > base * (1.0 + threshold) {
+            findings.push(format!(
+                "{name} regressed {:.1}% ({:.2} → {:.2} ms)",
+                100.0 * (cur / base - 1.0),
+                base * 1e3,
+                cur * 1e3,
+            ));
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact(decode_tok_s: f64) -> BenchArtifact {
+        BenchArtifact {
+            schema_version: SCHEMA_VERSION,
+            bench_id: "BENCH_T".into(),
+            workload: "chat".into(),
+            seed: 7,
+            requests: 8,
+            backend: "native/test".into(),
+            decode_tok_s,
+            ttft_p50_s: 0.01,
+            ttft_p99_s: 0.02,
+            tpot_p50_s: 0.001,
+            tpot_p99_s: 0.002,
+            latency_p50_s: 0.05,
+            latency_p99_s: 0.09,
+            queue_wait_p99_s: 0.001,
+            mean_batch: 2.0,
+            completed: 8,
+            rejected: 0,
+            infeasible: 0,
+            deferred: 1,
+            phase_shares: vec![("model/gemm".into(), 0.6), ("model/attention".into(), 0.4)],
+            build_share_ops: 0.25,
+            kv_used_hwm_pages: 5,
+            kv_total_pages: 8,
+            slo_violations: vec![],
+            spans: vec![Json::obj(vec![
+                ("id", Json::from(1usize)),
+                ("prompt_tokens", Json::from(4usize)),
+                ("generated_tokens", Json::from(8usize)),
+                ("finish", Json::from("length")),
+            ])],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_fields() {
+        let a = artifact(100.0);
+        let b = BenchArtifact::from_json(&a.to_json()).unwrap();
+        assert_eq!(b.schema_version, SCHEMA_VERSION);
+        assert_eq!(b.bench_id, "BENCH_T");
+        assert_eq!(b.seed, 7);
+        assert_eq!(b.decode_tok_s, 100.0);
+        assert_eq!(b.phase_shares, a.phase_shares);
+        assert_eq!(b.structural_trace(), vec!["1:4:8:length".to_string()]);
+    }
+
+    #[test]
+    fn newer_schema_is_refused() {
+        let mut j = artifact(1.0).to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("schema_version".into(), Json::from(SCHEMA_VERSION + 1));
+        }
+        assert!(BenchArtifact::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn comparator_flags_decode_regression_beyond_threshold() {
+        let base = artifact(100.0);
+        // 25% drop > 20% threshold → finding; 10% drop → none.
+        assert_eq!(compare(&base, &artifact(75.0), 0.2).len(), 1);
+        assert!(compare(&base, &artifact(90.0), 0.2).is_empty());
+        // Improvements never flag.
+        assert!(compare(&base, &artifact(140.0), 0.2).is_empty());
+    }
+
+    #[test]
+    fn comparator_flags_latency_regressions() {
+        let base = artifact(100.0);
+        let mut cur = artifact(100.0);
+        cur.ttft_p99_s = base.ttft_p99_s * 1.5;
+        cur.tpot_p99_s = base.tpot_p99_s * 1.3;
+        let findings = compare(&base, &cur, 0.2);
+        assert_eq!(findings.len(), 2, "{findings:?}");
+        assert!(findings[0].contains("ttft p99"));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let path = std::env::temp_dir().join(format!("codegemm_bench_{}.json", std::process::id()));
+        let a = artifact(42.0);
+        a.save(&path).unwrap();
+        let b = BenchArtifact::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(b.decode_tok_s, 42.0);
+        assert_eq!(b.spans.len(), 1);
+    }
+}

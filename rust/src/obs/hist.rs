@@ -1,0 +1,304 @@
+//! Streaming log-bucketed histograms with **fixed memory**, mergeable
+//! state and percentile queries.
+//!
+//! ## Error model
+//!
+//! Buckets are geometric: bucket `i` covers
+//! `[MIN_VALUE·G^i, MIN_VALUE·G^(i+1))` with growth factor
+//! `G = 2^(1/BUCKETS_PER_OCTAVE)`. A recorded value is represented by the
+//! geometric midpoint of its bucket, so any quantile query is within a
+//! **relative error of `G^(1/2) − 1`** of the true order statistic
+//! (≈ 2.2% at the default 16 buckets/octave), independent of how many
+//! samples were recorded. Quantile results are additionally clamped to
+//! the exactly-tracked `[min, max]`, so 0th/100th percentiles are exact.
+//!
+//! The bucket array is allocated once at construction
+//! ([`Histogram::footprint_bytes`] is constant forever after): recording
+//! the 10^9th sample costs the same memory as the first. `count`, `sum`,
+//! `sum_sq`, `min` and `max` are tracked exactly, so `mean` and `std`
+//! carry no bucket error at all.
+//!
+//! ## Mergeability
+//!
+//! All histograms share one bucket geometry, so [`Histogram::merge`] is
+//! element-wise addition — commutative and associative (pinned by
+//! property tests in `tests/obs_prop.rs`), which is what lets per-shard
+//! or per-replica recorders be combined without resampling.
+
+use crate::util::stats::Summary;
+
+/// Smallest resolvable value (seconds-flavored: 1 ns). Everything at or
+/// below it lands in bucket 0.
+pub const MIN_VALUE: f64 = 1e-9;
+
+/// Buckets per doubling of the value. 16 ⇒ ≤ 2.2% relative quantile error.
+pub const BUCKETS_PER_OCTAVE: usize = 16;
+
+/// Octaves covered above [`MIN_VALUE`]: 60 doublings spans 1 ns ..
+/// ~1.15e9 s. Values beyond the top land in the last bucket (and `max`
+/// stays exact).
+pub const OCTAVES: usize = 60;
+
+/// Total bucket count.
+pub const N_BUCKETS: usize = BUCKETS_PER_OCTAVE * OCTAVES;
+
+/// A streaming histogram over positive values (latencies, durations).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Fixed-size bucket counts — the only O(buckets) storage; never
+    /// grows after construction.
+    counts: Box<[u64]>,
+    count: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0u64; N_BUCKETS].into_boxed_slice(),
+            count: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Bucket index for a value (total: non-finite and non-positive
+    /// values clamp into the extreme buckets).
+    fn bucket(v: f64) -> usize {
+        if !(v > MIN_VALUE) {
+            return 0;
+        }
+        let i = ((v / MIN_VALUE).log2() * BUCKETS_PER_OCTAVE as f64) as usize;
+        i.min(N_BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of bucket `i` — the representative value
+    /// returned by quantile queries.
+    fn representative(i: usize) -> f64 {
+        MIN_VALUE * ((i as f64 + 0.5) / BUCKETS_PER_OCTAVE as f64).exp2()
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.counts[Self::bucket(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Element-wise merge — associative and commutative because every
+    /// histogram shares the same bucket geometry.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact population standard deviation (0 for < 2 samples).
+    pub fn std_dev(&self) -> f64 {
+        if self.count < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sum_sq / self.count as f64 - m * m).max(0.0).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Quantile query, `q` in `[0, 1]`: walk the cumulative bucket counts
+    /// to the target rank, return the bucket's geometric midpoint clamped
+    /// to the exact `[min, max]`. 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > target {
+                return Self::representative(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Percentile query, `p` in `[0, 100]` (matches `util::stats`).
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.quantile(p / 100.0)
+    }
+
+    /// Summary view matching `util::stats::Summary` (mean/std/min/max
+    /// exact, p50/p95/p99 within bucket error).
+    pub fn summary(&self) -> Summary {
+        Summary {
+            n: self.count as usize,
+            mean: self.mean(),
+            std: self.std_dev(),
+            min: self.min(),
+            p50: self.quantile(0.50),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            max: self.max(),
+        }
+    }
+
+    /// Heap + inline footprint — constant for the histogram's lifetime
+    /// (the memory-boundedness contract; pinned by tests).
+    pub fn footprint_bytes(&self) -> usize {
+        std::mem::size_of::<Histogram>() + self.counts.len() * std::mem::size_of::<u64>()
+    }
+
+    /// Worst-case relative quantile error of this bucket geometry (the
+    /// half-bucket width): values are reported at their bucket's
+    /// geometric midpoint.
+    pub fn relative_error_bound() -> f64 {
+        (0.5 / BUCKETS_PER_OCTAVE as f64).exp2() - 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_total() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        let s = h.summary();
+        assert_eq!(s.n, 0);
+        assert_eq!(s.p99, 0.0);
+    }
+
+    #[test]
+    fn single_sample_is_exact_at_extremes() {
+        let mut h = Histogram::new();
+        h.record(0.125);
+        // min/max clamp makes every quantile of a single sample exact.
+        assert_eq!(h.quantile(0.0), 0.125);
+        assert_eq!(h.quantile(0.5), 0.125);
+        assert_eq!(h.quantile(1.0), 0.125);
+        assert_eq!(h.mean(), 0.125);
+    }
+
+    #[test]
+    fn quantiles_within_relative_error() {
+        let mut h = Histogram::new();
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64 * 1e-3).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        let tol = Histogram::relative_error_bound() + 1e-3; // + rank granularity
+        for (q, exact) in [(0.5, 0.5), (0.95, 0.95), (0.99, 0.99)] {
+            let got = h.quantile(q);
+            let rel = (got - exact).abs() / exact;
+            assert!(rel <= tol + 0.01, "q{q}: got {got}, exact {exact}, rel {rel}");
+        }
+        assert!((h.mean() - 0.5005).abs() < 1e-9, "mean is exact");
+    }
+
+    #[test]
+    fn degenerate_values_clamp_not_panic() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(-5.0);
+        h.record(1e300); // far beyond the top octave
+        h.record(f64::NAN); // dropped
+        h.record(f64::INFINITY); // dropped
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max(), 1e300);
+        assert_eq!(h.min(), -5.0);
+        // Top-bucket representative is clamped to the exact max.
+        assert_eq!(h.quantile(1.0), 1e300);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let (mut a, mut b, mut both) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for i in 0..100 {
+            let x = 1e-4 * (i + 1) as f64;
+            if i % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+            both.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.quantile(0.5), both.quantile(0.5));
+        assert_eq!(a.sum(), both.sum());
+        assert_eq!(a.min(), both.min());
+        assert_eq!(a.max(), both.max());
+    }
+
+    #[test]
+    fn footprint_is_constant() {
+        let mut h = Histogram::new();
+        let fp0 = h.footprint_bytes();
+        for i in 0..50_000 {
+            h.record((i % 997) as f64 * 1e-5 + 1e-6);
+        }
+        assert_eq!(h.footprint_bytes(), fp0, "recording must never allocate");
+    }
+}

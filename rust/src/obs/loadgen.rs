@@ -1,0 +1,238 @@
+//! Trace-driven scenario harness: seeded workload mixes, arrival
+//! processes and SLO declarations for the serving coordinator.
+//!
+//! A [`WorkloadMix`] names a set of request classes (prompt/generation
+//! length ranges + mix weights), an [`Arrival`] process, and the
+//! [`Slo`] the mix is served against. [`generate`] expands a mix into a
+//! concrete request trace **deterministically from a seed** (same seed ⇒
+//! same prompts, lengths and arrival offsets, bit-for-bit — the property
+//! the BENCH artifact's repeatability contract rests on), and [`drive`]
+//! plays the trace through a [`crate::coordinator::Server`].
+//!
+//! The built-in mixes mirror the traffic classes the ROADMAP calls out:
+//! chat (short prompt / short gen), RAG (long prompt / short gen),
+//! long-form generation, a bursty Poisson-arrival chat mix, and a
+//! weighted blend of all three request classes.
+
+use crate::coordinator::{Request, Server};
+use crate::util::prng::Prng;
+
+/// One request class in a mix.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadClass {
+    pub name: &'static str,
+    /// Relative mix weight (unnormalized).
+    pub weight: f64,
+    /// Prompt length range `[lo, hi]`, tokens.
+    pub prompt: (usize, usize),
+    /// Generation budget range `[lo, hi]`, tokens.
+    pub gen: (usize, usize),
+}
+
+/// Arrival process for a mix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// All requests submitted up front (offline/batch serving).
+    Batch,
+    /// Poisson arrivals at `rate_per_s` (bursty online serving); offsets
+    /// are drawn from the seeded PRNG, so the trace stays deterministic.
+    Poisson { rate_per_s: f64 },
+}
+
+/// Declared service-level objectives for a mix (advisory: the harness
+/// reports pass/fail next to the measured percentiles).
+#[derive(Clone, Copy, Debug)]
+pub struct Slo {
+    /// p99 time-to-first-token bound (seconds).
+    pub ttft_p99_s: f64,
+    /// p95 time-per-output-token bound (seconds).
+    pub tpot_p95_s: f64,
+    /// Minimum aggregate decode throughput (tokens/second).
+    pub min_decode_tok_s: f64,
+}
+
+/// A named workload mix.
+#[derive(Clone, Debug)]
+pub struct WorkloadMix {
+    pub name: &'static str,
+    pub classes: Vec<WorkloadClass>,
+    pub arrival: Arrival,
+    pub slo: Slo,
+}
+
+const CHAT: WorkloadClass =
+    WorkloadClass { name: "chat", weight: 1.0, prompt: (4, 16), gen: (8, 16) };
+const RAG: WorkloadClass =
+    WorkloadClass { name: "rag", weight: 1.0, prompt: (48, 96), gen: (4, 12) };
+const LONGFORM: WorkloadClass =
+    WorkloadClass { name: "longform", weight: 1.0, prompt: (4, 8), gen: (32, 64) };
+
+/// Default (deliberately loose, CPU-reference-model-friendly) SLOs.
+const DEFAULT_SLO: Slo =
+    Slo { ttft_p99_s: 5.0, tpot_p95_s: 0.5, min_decode_tok_s: 1.0 };
+
+impl WorkloadMix {
+    /// Look up a built-in mix by name.
+    pub fn by_name(name: &str) -> Option<WorkloadMix> {
+        let mix = |name, classes: Vec<WorkloadClass>, arrival| WorkloadMix {
+            name,
+            classes,
+            arrival,
+            slo: DEFAULT_SLO,
+        };
+        match name {
+            "chat" => Some(mix("chat", vec![CHAT], Arrival::Batch)),
+            "rag" => Some(mix("rag", vec![RAG], Arrival::Batch)),
+            "longform" => Some(mix("longform", vec![LONGFORM], Arrival::Batch)),
+            "bursty" => Some(mix("bursty", vec![CHAT], Arrival::Poisson { rate_per_s: 50.0 })),
+            "mixed" => Some(WorkloadMix {
+                name: "mixed",
+                classes: vec![
+                    WorkloadClass { weight: 3.0, ..CHAT },
+                    WorkloadClass { weight: 1.0, ..RAG },
+                    WorkloadClass { weight: 1.0, ..LONGFORM },
+                ],
+                arrival: Arrival::Poisson { rate_per_s: 50.0 },
+                slo: DEFAULT_SLO,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Names accepted by [`WorkloadMix::by_name`].
+    pub fn names() -> &'static [&'static str] {
+        &["chat", "rag", "longform", "bursty", "mixed"]
+    }
+}
+
+/// One concrete request of a generated trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenRequest {
+    /// Trace-local id (0-based submission order).
+    pub id: u64,
+    /// Arrival offset from the trace start (seconds; 0 under batch
+    /// arrivals).
+    pub at_s: f64,
+    /// Which class of the mix produced it.
+    pub class: &'static str,
+    pub prompt: Vec<usize>,
+    pub max_new_tokens: usize,
+}
+
+/// Expand `mix` into `n` concrete requests, deterministically from
+/// `seed`. Tokens are drawn in `[1, vocab)` (0 is reserved).
+pub fn generate(mix: &WorkloadMix, seed: u64, n: usize, vocab: usize) -> Vec<GenRequest> {
+    assert!(vocab >= 2, "vocab too small for token draws");
+    let mut rng = Prng::seeded(seed);
+    let weights: Vec<f64> = mix.classes.iter().map(|c| c.weight).collect();
+    let mut at = 0.0f64;
+    (0..n as u64)
+        .map(|id| {
+            let class = &mix.classes[rng.weighted_index(&weights)];
+            let span = |(lo, hi): (usize, usize), rng: &mut Prng| {
+                lo + rng.index(hi - lo + 1)
+            };
+            let prompt_len = span(class.prompt, &mut rng);
+            let max_new = span(class.gen, &mut rng);
+            let prompt: Vec<usize> =
+                (0..prompt_len).map(|_| rng.index(vocab - 1) + 1).collect();
+            if let Arrival::Poisson { rate_per_s } = mix.arrival {
+                // Exponential inter-arrival; guard ln(0).
+                at += -(1.0 - rng.uniform()).ln() / rate_per_s.max(1e-9);
+            }
+            GenRequest { id, at_s: at, class: class.name, prompt, max_new_tokens: max_new }
+        })
+        .collect()
+}
+
+/// Play a generated trace through the server: submit each request at its
+/// arrival offset (sleeping between arrivals when the trace has them),
+/// then wait for every response. Returns responses in submission order.
+pub fn drive(server: &Server, trace: &[GenRequest]) -> Vec<crate::coordinator::Response> {
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::with_capacity(trace.len());
+    for r in trace {
+        let wait = r.at_s - t0.elapsed().as_secs_f64();
+        if wait > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+        }
+        handles.push(server.submit(Request::new(r.id, r.prompt.clone(), r.max_new_tokens)));
+    }
+    handles.into_iter().map(|h| h.wait()).collect()
+}
+
+/// Evaluate the declared SLOs against a metrics report. Returns
+/// human-readable violations (empty ⇒ all SLOs met).
+pub fn check_slo(slo: &Slo, report: &crate::coordinator::MetricsReport) -> Vec<String> {
+    let mut v = Vec::new();
+    if report.ttft.p99 > slo.ttft_p99_s {
+        v.push(format!(
+            "ttft p99 {:.1} ms exceeds SLO {:.1} ms",
+            report.ttft.p99 * 1e3,
+            slo.ttft_p99_s * 1e3
+        ));
+    }
+    if report.tpot.p95 > slo.tpot_p95_s {
+        v.push(format!(
+            "tpot p95 {:.1} ms exceeds SLO {:.1} ms",
+            report.tpot.p95 * 1e3,
+            slo.tpot_p95_s * 1e3
+        ));
+    }
+    if report.tokens_per_s < slo.min_decode_tok_s && report.decode_tokens > 0 {
+        v.push(format!(
+            "decode throughput {:.1} tok/s below SLO {:.1} tok/s",
+            report.tokens_per_s, slo.min_decode_tok_s
+        ));
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let mix = WorkloadMix::by_name("mixed").unwrap();
+        let a = generate(&mix, 7, 32, 256);
+        let b = generate(&mix, 7, 32, 256);
+        assert_eq!(a, b, "same seed must reproduce the trace bit-for-bit");
+        let c = generate(&mix, 8, 32, 256);
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn class_ranges_respected() {
+        for name in WorkloadMix::names() {
+            let mix = WorkloadMix::by_name(name).unwrap();
+            let trace = generate(&mix, 3, 64, 256);
+            assert_eq!(trace.len(), 64);
+            for r in &trace {
+                let class = mix.classes.iter().find(|c| c.name == r.class).unwrap();
+                assert!(r.prompt.len() >= class.prompt.0 && r.prompt.len() <= class.prompt.1);
+                assert!(r.max_new_tokens >= class.gen.0 && r.max_new_tokens <= class.gen.1);
+                assert!(r.prompt.iter().all(|&t| t >= 1 && t < 256));
+                // The tiny reference model's window fits every class.
+                assert!(r.prompt.len() + r.max_new_tokens <= 128);
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_increase_batch_stay_zero() {
+        let bursty = WorkloadMix::by_name("bursty").unwrap();
+        let trace = generate(&bursty, 5, 16, 256);
+        for w in trace.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s, "arrival offsets must be monotone");
+        }
+        assert!(trace.last().unwrap().at_s > 0.0);
+        let chat = WorkloadMix::by_name("chat").unwrap();
+        assert!(generate(&chat, 5, 16, 256).iter().all(|r| r.at_s == 0.0));
+    }
+
+    #[test]
+    fn unknown_mix_is_none() {
+        assert!(WorkloadMix::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,36 @@
+//! Observability: the measurement substrate the ROADMAP's perf items
+//! report through.
+//!
+//! - [`hist`] — fixed-memory log-bucketed streaming histograms
+//!   (mergeable; p50/p95/p99 within a ~2.2% relative error bound; see
+//!   the module docs for the bucket geometry and error model). These
+//!   back `coordinator::Metrics`, replacing per-sample `Vec<f64>`
+//!   buffers that grew without bound under sustained traffic.
+//! - [`trace`] — per-request lifecycle spans (submit → admit → prefill
+//!   chunks → first token → decode → finish) with queue-wait / prefill /
+//!   decode attribution, retained in a bounded ring. The span schema is
+//!   documented in the module header.
+//! - [`loadgen`] — seeded workload mixes (chat, RAG, long-form, bursty
+//!   Poisson, mixed) with declared SLOs, expanded deterministically into
+//!   request traces and driven through `coordinator::Server`.
+//! - [`export`] — the schema-versioned `BENCH_<n>.json` artifact
+//!   (headline gauges + phase shares + spans) and the regression
+//!   comparator used by the `bench-serve` CLI and CI. Schema and
+//!   versioning policy live in the module header.
+//!
+//! Step-phase attribution follows a namespace convention:
+//! `sched/*` phases come from the batcher (prefill / decode / sample
+//! wall time per step), `model/*` from `LlamaModel`'s forward timer
+//! (gemm / attention / lm_head), and `engine/*` from the engines'
+//! cumulative `gemm::Counters` (Psumbook build vs gather seconds — the
+//! paper's Table 6 split).
+
+pub mod export;
+pub mod hist;
+pub mod loadgen;
+pub mod trace;
+
+pub use export::{compare, BenchArtifact, SCHEMA_VERSION};
+pub use hist::Histogram;
+pub use loadgen::{check_slo, drive, generate, Arrival, GenRequest, Slo, WorkloadClass, WorkloadMix};
+pub use trace::{SpanRecord, TraceLog};

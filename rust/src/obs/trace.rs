@@ -1,0 +1,227 @@
+//! Request lifecycle tracing: one [`SpanRecord`] per finished request,
+//! kept in a bounded ring ([`TraceLog`]).
+//!
+//! ## Span schema
+//!
+//! A request's life is `submit → (queue) → admit → prefill chunks →
+//! first token → decode → finish`; the span attributes wall time to each
+//! segment:
+//!
+//! | field            | meaning                                         |
+//! |------------------|-------------------------------------------------|
+//! | `queue_wait_s`   | submit → admission into a slot                  |
+//! | `prefill_s`      | admission → last prompt chunk consumed          |
+//! | `ttft_s`         | submit → first generated token (client-visible) |
+//! | `decode_s`       | first token → finish                            |
+//! | `latency_s`      | submit → finish (= queue + prefill + decode up  |
+//! |                  | to scheduler quantization)                      |
+//! | `tpot_s`         | decode seconds per generated token after the    |
+//! |                  | first (0 when < 2 tokens were generated)        |
+//! | `prefill_chunks` | scheduler steps that fed prompt tokens (> 1 ⇒   |
+//! |                  | the shared prefill budget split this prompt)    |
+//!
+//! Token counts and the finish reason make the *structural* part of a
+//! span: two runs of the same seeded workload produce identical
+//! structural spans (timing fields aside), which is what the scenario
+//! harness's determinism check compares ([`SpanRecord::structural_key`]).
+//!
+//! The ring keeps the most recent [`TraceLog::capacity`] spans — memory
+//! is bounded no matter how many requests are served; `total()` still
+//! counts every span ever pushed.
+
+use crate::util::json::Json;
+
+/// Why a traced request finished (stringly-typed so the trace schema is
+/// decoupled from `coordinator::FinishReason`).
+pub const FINISH_LENGTH: &str = "length";
+pub const FINISH_STOP: &str = "stop";
+pub const FINISH_CONTEXT: &str = "context";
+pub const FINISH_REJECTED: &str = "rejected";
+
+/// Lifecycle record of one finished request. Times in seconds; `*_s`
+/// segments as documented in the module header.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanRecord {
+    pub id: u64,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub finish: &'static str,
+    pub queue_wait_s: f64,
+    pub prefill_s: f64,
+    pub ttft_s: f64,
+    pub decode_s: f64,
+    pub latency_s: f64,
+    pub tpot_s: f64,
+    pub prefill_chunks: u32,
+}
+
+impl SpanRecord {
+    /// The timing-free projection of the span: everything two runs of
+    /// the same seeded workload must agree on exactly.
+    pub fn structural_key(&self) -> (u64, usize, usize, &'static str) {
+        (self.id, self.prompt_tokens, self.generated_tokens, self.finish)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::from(self.id as usize)),
+            ("prompt_tokens", Json::from(self.prompt_tokens)),
+            ("generated_tokens", Json::from(self.generated_tokens)),
+            ("finish", Json::from(self.finish)),
+            ("queue_wait_s", Json::Num(self.queue_wait_s)),
+            ("prefill_s", Json::Num(self.prefill_s)),
+            ("ttft_s", Json::Num(self.ttft_s)),
+            ("decode_s", Json::Num(self.decode_s)),
+            ("latency_s", Json::Num(self.latency_s)),
+            ("tpot_s", Json::Num(self.tpot_s)),
+            ("prefill_chunks", Json::from(self.prefill_chunks as usize)),
+        ])
+    }
+
+    /// One-line rendering for `MetricsReport::render`.
+    pub fn render(&self) -> String {
+        format!(
+            "id {} [{}]: {}+{} tok, wait {:.1} ms, prefill {:.1} ms ({} chunks), \
+             ttft {:.1} ms, decode {:.1} ms",
+            self.id,
+            self.finish,
+            self.prompt_tokens,
+            self.generated_tokens,
+            self.queue_wait_s * 1e3,
+            self.prefill_s * 1e3,
+            self.prefill_chunks,
+            self.ttft_s * 1e3,
+            self.decode_s * 1e3,
+        )
+    }
+}
+
+/// Bounded ring of recent spans. Push is O(1); memory is
+/// `capacity × size_of::<SpanRecord>` forever.
+#[derive(Clone, Debug)]
+pub struct TraceLog {
+    spans: Vec<SpanRecord>,
+    /// Next write position in the ring.
+    head: usize,
+    /// Spans ever pushed (not just retained).
+    total: u64,
+    capacity: usize,
+}
+
+impl Default for TraceLog {
+    fn default() -> Self {
+        TraceLog::with_capacity(TraceLog::DEFAULT_CAPACITY)
+    }
+}
+
+impl TraceLog {
+    /// Default retained-span budget: enough to inspect a serving burst,
+    /// small enough to be irrelevant next to the model.
+    pub const DEFAULT_CAPACITY: usize = 256;
+
+    pub fn with_capacity(capacity: usize) -> TraceLog {
+        let capacity = capacity.max(1);
+        TraceLog { spans: Vec::with_capacity(capacity), head: 0, total: 0, capacity }
+    }
+
+    pub fn push(&mut self, span: SpanRecord) {
+        if self.spans.len() < self.capacity {
+            self.spans.push(span);
+        } else {
+            self.spans[self.head] = span;
+        }
+        self.head = (self.head + 1) % self.capacity;
+        self.total += 1;
+    }
+
+    /// Spans ever recorded (including evicted ones).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Retained spans, oldest → newest.
+    pub fn recent(&self) -> Vec<SpanRecord> {
+        if self.spans.len() < self.capacity {
+            return self.spans.clone();
+        }
+        let mut out = Vec::with_capacity(self.capacity);
+        for i in 0..self.capacity {
+            out.push(self.spans[(self.head + i) % self.capacity].clone());
+        }
+        out
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Ring storage footprint — constant once the ring has filled.
+    pub fn footprint_bytes(&self) -> usize {
+        std::mem::size_of::<TraceLog>()
+            + self.spans.capacity() * std::mem::size_of::<SpanRecord>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: u64) -> SpanRecord {
+        SpanRecord {
+            id,
+            prompt_tokens: 3,
+            generated_tokens: 4,
+            finish: FINISH_LENGTH,
+            queue_wait_s: 0.001,
+            prefill_s: 0.002,
+            ttft_s: 0.003,
+            decode_s: 0.004,
+            latency_s: 0.007,
+            tpot_s: 0.001,
+            prefill_chunks: 1,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_most_recent() {
+        let mut log = TraceLog::with_capacity(4);
+        for id in 0..10 {
+            log.push(span(id));
+        }
+        assert_eq!(log.total(), 10);
+        let ids: Vec<u64> = log.recent().iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9], "oldest → newest of the last 4");
+    }
+
+    #[test]
+    fn footprint_bounded_under_many_pushes() {
+        let mut log = TraceLog::with_capacity(8);
+        for id in 0..8 {
+            log.push(span(id));
+        }
+        let fp = log.footprint_bytes();
+        for id in 8..10_000 {
+            log.push(span(id));
+        }
+        assert_eq!(log.footprint_bytes(), fp);
+        assert_eq!(log.total(), 10_000);
+    }
+
+    #[test]
+    fn span_json_has_schema_fields() {
+        let j = span(7).to_json();
+        assert_eq!(j.req_usize("id").unwrap(), 7);
+        assert_eq!(j.req_str("finish").unwrap(), FINISH_LENGTH);
+        assert_eq!(j.req_usize("prefill_chunks").unwrap(), 1);
+        assert!((j.req_f64("ttft_s").unwrap() - 0.003).abs() < 1e-12);
+    }
+
+    #[test]
+    fn structural_key_ignores_timing() {
+        let mut a = span(1);
+        let mut b = span(1);
+        a.ttft_s = 0.5;
+        b.ttft_s = 0.9;
+        assert_eq!(a.structural_key(), b.structural_key());
+    }
+}

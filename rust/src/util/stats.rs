@@ -18,9 +18,13 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Linear-interpolated percentile, `p` in `[0, 100]`.
+/// Linear-interpolated percentile, `p` in `[0, 100]`. Total: an empty
+/// slice reports 0 (the same convention as [`mean`]), so metric paths
+/// never have to special-case "no samples yet".
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
-    assert!(!sorted.is_empty(), "percentile of empty slice");
+    if sorted.is_empty() {
+        return 0.0;
+    }
     if sorted.len() == 1 {
         return sorted[0];
     }
@@ -124,8 +128,18 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// The all-zero summary of an empty sample set. `Summary::of(&[])`
+    /// returns this, so callers never hand-roll a zeroed struct.
+    pub fn empty() -> Summary {
+        Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0 }
+    }
+
+    /// Summarize a sample set. Total: empty input yields
+    /// [`Summary::empty`] instead of panicking.
     pub fn of(xs: &[f64]) -> Summary {
-        assert!(!xs.is_empty());
+        if xs.is_empty() {
+            return Summary::empty();
+        }
         let mut v = xs.to_vec();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Summary {
@@ -159,6 +173,15 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert_eq!(percentile(&xs, 50.0), 2.5);
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+    }
+
+    #[test]
+    fn empty_inputs_are_total() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.p99, 0.0);
+        assert_eq!(s.mean, 0.0);
     }
 
     #[test]

@@ -1,0 +1,202 @@
+//! Property and integration tests for the `obs::` subsystem: histogram
+//! merge/quantile laws and fixed-memory bounds, end-to-end span / phase
+//! attribution through a real serving run, scenario determinism, and the
+//! BENCH artifact comparator.
+
+use codegemm::config::{ModelConfig, QuantConfig, ServeConfig};
+use codegemm::coordinator::{DecodeBackend, MetricsReport, NativeBackend, Server};
+use codegemm::model::{EngineKind, ModelWeights};
+use codegemm::obs::{compare, drive, generate, BenchArtifact, Histogram, WorkloadMix};
+use codegemm::util::prng::Prng;
+use codegemm::util::stats;
+
+// ---------------------------------------------------------------- hist laws
+
+#[test]
+fn merge_is_associative_and_commutative_across_random_splits() {
+    for seed in 0..5u64 {
+        let mut rng = Prng::seeded(seed);
+        // Random samples over ~7 octaves, split randomly into 3 shards.
+        let mut parts = [Histogram::new(), Histogram::new(), Histogram::new()];
+        let mut all = Histogram::new();
+        for _ in 0..3_000 {
+            let x = rng.range_f64(1e-6, 10.0);
+            parts[rng.index(3)].record(x);
+            all.record(x);
+        }
+        let [a, b, c] = parts;
+        // (a ⊕ b) ⊕ c
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        // a ⊕ (b ⊕ c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        // c ⊕ b ⊕ a (commuted order)
+        let mut cba = c.clone();
+        cba.merge(&b);
+        cba.merge(&a);
+        for h in [&ab_c, &a_bc, &cba] {
+            assert_eq!(h.count(), all.count());
+            assert_eq!(h.sum(), all.sum(), "sum is exact under merge");
+            assert_eq!(h.min(), all.min());
+            assert_eq!(h.max(), all.max());
+            for i in 0..=20 {
+                let q = i as f64 / 20.0;
+                assert_eq!(
+                    h.quantile(q),
+                    all.quantile(q),
+                    "seed {seed} q {q}: merged shards must equal combined recording"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn quantile_error_bounded_vs_exact_on_random_samples() {
+    let mut rng = Prng::seeded(11);
+    let mut xs: Vec<f64> = (0..10_000).map(|_| rng.range_f64(1e-4, 5.0)).collect();
+    let mut h = Histogram::new();
+    for &x in &xs {
+        h.record(x);
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let tol = Histogram::relative_error_bound() + 0.01; // + rank granularity
+    for p in [10.0, 50.0, 90.0, 95.0, 99.0] {
+        let exact = stats::percentile(&xs, p);
+        let got = h.percentile(p);
+        let rel = (got - exact).abs() / exact;
+        assert!(rel <= tol, "p{p}: got {got}, exact {exact}, rel err {rel} > {tol}");
+    }
+    // Moments stay exact regardless of bucketing.
+    let mean_exact = stats::mean(&xs);
+    assert!((h.mean() - mean_exact).abs() / mean_exact < 1e-12);
+}
+
+#[test]
+fn histogram_memory_fixed_under_over_a_million_samples() {
+    let mut h = Histogram::new();
+    let fp0 = h.footprint_bytes();
+    let mut rng = Prng::seeded(3);
+    for _ in 0..1_200_000 {
+        h.record(rng.range_f64(1e-8, 1e3));
+    }
+    assert_eq!(h.count(), 1_200_000);
+    assert_eq!(h.footprint_bytes(), fp0, "1M+ samples must not allocate");
+    assert!(fp0 < 16 * 1024, "histogram stays under 16 KiB ({fp0} bytes)");
+}
+
+// ------------------------------------------------------- serving integration
+
+fn run_scenario(weights_seed: u64, workload_seed: u64, n: usize) -> (BenchArtifact, MetricsReport) {
+    let cfg_model = ModelConfig::tiny();
+    let w = ModelWeights::random(cfg_model.clone(), weights_seed);
+    let kind = EngineKind::codegemm(QuantConfig::new(4, 1, 8, 32).unwrap());
+    let cfg = ServeConfig { max_batch: 4, temperature: 0.0, ..Default::default() };
+    let backend = NativeBackend::with_kv_fused(&w, kind, cfg.max_batch, &cfg.kv, true);
+    let label = backend.label();
+    let server = Server::start(Box::new(backend), cfg);
+    let mix = WorkloadMix::by_name("chat").unwrap();
+    let trace = generate(&mix, workload_seed, n, cfg_model.vocab);
+    let responses = drive(&server, &trace);
+    assert_eq!(responses.len(), n);
+    let report = server.shutdown();
+    let artifact =
+        BenchArtifact::from_report("BENCH_T", "chat", workload_seed, n, &label, &report, vec![]);
+    (artifact, report)
+}
+
+#[test]
+fn serving_run_populates_spans_phases_and_reconciles_engine_share() {
+    let (artifact, report) = run_scenario(3, 7, 6);
+    assert_eq!(report.completed, 6);
+
+    // Spans: one per completed request, with a coherent lifecycle.
+    assert_eq!(report.spans.len(), 6);
+    assert_eq!(report.spans_total, 6);
+    for s in &report.spans {
+        assert!(s.prompt_tokens >= 4 && s.prompt_tokens <= 16, "chat-class prompt");
+        assert!(s.generated_tokens >= 1);
+        assert!(s.ttft_s > 0.0);
+        assert!(s.latency_s >= s.ttft_s, "latency contains ttft");
+        assert!(s.prefill_chunks >= 1);
+        if s.generated_tokens > 1 {
+            assert!(s.tpot_s > 0.0, "tpot recorded for multi-token generations");
+        }
+    }
+
+    // Phase attribution: scheduler, model and engine namespaces all
+    // populated by the run, each namespace's shares summing to 1.
+    for phase in ["sched/prefill", "sched/decode", "model/gemm", "model/attention", "model/lm_head"]
+    {
+        assert!(report.phase_seconds(phase) > 0.0, "phase {phase} must be attributed");
+    }
+    let sched_sum: f64 = ["sched/prefill", "sched/decode", "sched/sample"]
+        .iter()
+        .map(|p| report.phase_share(p))
+        .sum();
+    assert!((sched_sum - 1.0).abs() < 1e-9, "sched shares sum to 1, got {sched_sum}");
+
+    // Engine reconciliation: the report's build share is exactly the
+    // counters' ops-based share, and the engine/* phase seconds are
+    // exactly the counters' build/read seconds split.
+    let eng = report.engine.clone().expect("codegemm backend reports engine counters");
+    assert!(eng.build_ops > 0 && eng.read_ops > 0);
+    assert_eq!(report.build_share_ops(), Some(eng.build_share_ops()));
+    let share = report.build_share_ops().unwrap();
+    assert!(share > 0.0 && share < 1.0, "build share {share} must be a proper fraction");
+    assert!((report.phase_seconds("engine/build") - eng.build_seconds).abs() < 1e-12);
+    assert!((report.phase_seconds("engine/gather") - eng.read_seconds).abs() < 1e-12);
+
+    // The rendered report surfaces all of it.
+    let rendered = report.render();
+    for needle in ["phases:", "spans:", "engine:", "kv pool:", "tpot:"] {
+        assert!(rendered.contains(needle), "render missing '{needle}':\n{rendered}");
+    }
+
+    // And the artifact carries the same headline data.
+    assert_eq!(artifact.completed, 6);
+    assert_eq!(artifact.spans.len(), 6);
+    assert!(artifact.build_share_ops > 0.0);
+    assert!(!artifact.phase_shares.is_empty());
+}
+
+#[test]
+fn same_seed_scenarios_produce_identical_structural_traces() {
+    let (a, ra) = run_scenario(3, 7, 6);
+    let (b, rb) = run_scenario(3, 7, 6);
+    assert_eq!(
+        a.structural_trace(),
+        b.structural_trace(),
+        "same seed must reproduce the request trace (timing aside)"
+    );
+    let keys = |r: &MetricsReport| {
+        let mut k: Vec<_> = r.spans.iter().map(|s| s.structural_key()).collect();
+        k.sort();
+        k
+    };
+    assert_eq!(keys(&ra), keys(&rb));
+    // Different workload seed ⇒ different structural trace.
+    let (c, _) = run_scenario(3, 8, 6);
+    assert_ne!(a.structural_trace(), c.structural_trace());
+}
+
+#[test]
+fn comparator_flags_injected_decode_regression() {
+    let (base, _) = run_scenario(3, 7, 4);
+    assert!(base.decode_tok_s > 0.0, "scenario must measure decode throughput");
+    let mut cur = base.clone();
+    cur.decode_tok_s = base.decode_tok_s * 0.75; // 25% drop > 20% threshold
+    let findings = compare(&base, &cur, 0.2);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert!(findings[0].contains("decode throughput"));
+    // Within threshold ⇒ clean.
+    cur.decode_tok_s = base.decode_tok_s * 0.9;
+    assert!(compare(&base, &cur, 0.2).is_empty());
+    // Artifact JSON roundtrip keeps comparator behavior identical.
+    let rt = BenchArtifact::from_json(&base.to_json()).unwrap();
+    assert!(compare(&rt, &base, 0.2).is_empty());
+}
