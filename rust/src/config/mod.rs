@@ -135,16 +135,76 @@ impl QuantConfig {
     }
 }
 
-/// Kernel tiling parameters (paper §3: defaults t_w = 32, t_h = 2048).
+/// Which gather/build kernel implementation the CodeGEMM engine runs
+/// (`gemm::simd` dispatches on the resolved value; see
+/// [`crate::gemm::simd::resolve`]). The `CODEGEMM_KERNEL` environment
+/// variable (same spellings) overrides this at engine construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum KernelImpl {
+    /// Pick the fastest available path (AVX2 when detected, else the
+    /// portable unrolled kernels).
+    #[default]
+    Auto,
+    /// Reference implementation — one row / batch column at a time.
+    Scalar,
+    /// Portable lane-parallel kernels (manual 8/16-wide unroll, no
+    /// `std::arch`).
+    Unrolled,
+    /// Explicit AVX2 (`std::arch::x86_64`) kernels; downgrades to
+    /// `Unrolled` when the host lacks AVX2.
+    Avx2,
+}
+
+impl KernelImpl {
+    pub fn parse(s: &str) -> Option<KernelImpl> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(KernelImpl::Auto),
+            "scalar" => Some(KernelImpl::Scalar),
+            "unrolled" => Some(KernelImpl::Unrolled),
+            "avx2" => Some(KernelImpl::Avx2),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelImpl::Auto => "auto",
+            KernelImpl::Scalar => "scalar",
+            KernelImpl::Unrolled => "unrolled",
+            KernelImpl::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Kernel tiling parameters (paper §3: defaults t_w = 32, t_h = 2048)
+/// plus the kernel-dispatch knobs added with the SIMD layer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct KernelConfig {
     pub tile_w: usize,
     pub tile_h: usize,
+    /// Gather/build implementation (see [`KernelImpl`]).
+    pub kernel_impl: KernelImpl,
+    /// Requested SIMD lane width: `0` = auto (8), `1` = scalar, values
+    /// are normalized to the supported widths {1, 8, 16} by
+    /// [`KernelConfig::effective_lanes`]. Tiling depends only on this
+    /// knob — never on `kernel_impl` — so engines configured for
+    /// different impls tile identically and stay bit-comparable.
+    pub simd_lanes: usize,
+    /// Software-pipeline the shared-book schedule: overlap tile `t+1`'s
+    /// Psumbook build with tile `t`'s gather (double-buffered book
+    /// scratch). Bit-exact either way; default on.
+    pub pipeline_tiles: bool,
 }
 
 impl Default for KernelConfig {
     fn default() -> Self {
-        KernelConfig { tile_w: 32, tile_h: 2048 }
+        KernelConfig {
+            tile_w: 32,
+            tile_h: 2048,
+            kernel_impl: KernelImpl::Auto,
+            simd_lanes: 0,
+            pipeline_tiles: true,
+        }
     }
 }
 
@@ -153,20 +213,44 @@ impl KernelConfig {
         if tile_w == 0 || tile_h == 0 {
             bail!("tile dims must be positive");
         }
-        Ok(KernelConfig { tile_w, tile_h })
+        Ok(KernelConfig { tile_w, tile_h, ..KernelConfig::default() })
+    }
+
+    /// The lane width the SIMD gather kernels advance per step,
+    /// normalized from the `simd_lanes` request: `0` (auto) and `2..=8`
+    /// map to 8, `1` stays scalar, anything larger maps to 16.
+    pub fn effective_lanes(&self) -> usize {
+        match self.simd_lanes {
+            0 => 8,
+            1 => 1,
+            2..=8 => 8,
+            _ => 16,
+        }
     }
 
     /// Clamp `tile_w` for a `(k, v)` layer: bounded by `k` and rounded
-    /// down to the nearest multiple of `v` (minimum one vector), so
-    /// engine construction never panics on non-default shapes. `k` must
-    /// be a positive multiple of `v` (every validated quantized layer
-    /// guarantees this). Shared by the CodeGEMM and dequant engines so
-    /// the rounding policy lives in one place.
+    /// down to the nearest multiple of both `v` and the active SIMD lane
+    /// width (minimum one vector), so engine construction never panics
+    /// on non-default shapes. When the lane-aligned width would be zero
+    /// (tile smaller than one lane block), alignment falls back to the
+    /// `v` multiple alone — the lane kernels handle any tile width; the
+    /// alignment only keeps k-tile boundaries (and therefore the scale
+    /// runs inside each tile) identical across lane configurations.
+    /// `k` must be a positive multiple of `v` (every validated quantized
+    /// layer guarantees this). Shared by the CodeGEMM and dequant
+    /// engines so the rounding policy lives in one place.
     pub fn align_tile_w(&mut self, k: usize, v: usize) {
+        // v and the lane width are both powers of two, so lcm = max.
+        let lane_mult = v.max(self.effective_lanes());
         self.tile_w = self.tile_w.min(k);
-        self.tile_w -= self.tile_w % v;
-        if self.tile_w == 0 {
-            self.tile_w = v;
+        let lane_aligned = self.tile_w - self.tile_w % lane_mult;
+        if lane_aligned > 0 {
+            self.tile_w = lane_aligned;
+        } else {
+            self.tile_w -= self.tile_w % v;
+            if self.tile_w == 0 {
+                self.tile_w = v;
+            }
         }
     }
 
@@ -188,11 +272,34 @@ impl KernelConfig {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![("tile_w", Json::from(self.tile_w)), ("tile_h", Json::from(self.tile_h))])
+        Json::obj(vec![
+            ("tile_w", Json::from(self.tile_w)),
+            ("tile_h", Json::from(self.tile_h)),
+            ("kernel_impl", Json::Str(self.kernel_impl.as_str().to_string())),
+            ("simd_lanes", Json::from(self.simd_lanes)),
+            ("pipeline_tiles", Json::Bool(self.pipeline_tiles)),
+        ])
     }
 
+    /// Parse from JSON. `tile_w`/`tile_h` are required; the dispatch
+    /// knobs are optional with defaults so configs written before the
+    /// SIMD layer still parse.
     pub fn from_json(j: &Json) -> Result<KernelConfig> {
-        KernelConfig::new(j.req_usize("tile_w")?, j.req_usize("tile_h")?)
+        let mut cfg = KernelConfig::new(j.req_usize("tile_w")?, j.req_usize("tile_h")?)?;
+        if let Some(v) = j.get("kernel_impl") {
+            let s = v.as_str().ok_or_else(|| anyhow::anyhow!("invalid field 'kernel_impl'"))?;
+            cfg.kernel_impl = KernelImpl::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown kernel_impl '{s}'"))?;
+        }
+        if let Some(v) = j.get("simd_lanes") {
+            cfg.simd_lanes =
+                v.as_usize().ok_or_else(|| anyhow::anyhow!("invalid field 'simd_lanes'"))?;
+        }
+        if let Some(v) = j.get("pipeline_tiles") {
+            cfg.pipeline_tiles =
+                v.as_bool().ok_or_else(|| anyhow::anyhow!("invalid field 'pipeline_tiles'"))?;
+        }
+        Ok(cfg)
     }
 }
 
@@ -484,7 +591,7 @@ mod tests {
     #[test]
     fn align_tile_w_rounds_down_and_floors_at_v() {
         let clamp = |tw: usize, k: usize, v: usize| {
-            let mut kc = KernelConfig { tile_w: tw, tile_h: 8 };
+            let mut kc = KernelConfig { tile_w: tw, tile_h: 8, ..Default::default() };
             kc.align_tile_w(k, v);
             kc.tile_w
         };
@@ -493,6 +600,66 @@ mod tests {
         assert_eq!(clamp(3, 4096, 8), 8); // floor at one vector
         assert_eq!(clamp(1000, 64, 8), 64); // clamp to k
         assert_eq!(clamp(32, 4096, 64), 64); // tile smaller than v
+    }
+
+    #[test]
+    fn align_tile_w_honors_simd_lane_width() {
+        let clamp = |tw: usize, lanes: usize, k: usize, v: usize| {
+            let mut kc =
+                KernelConfig { tile_w: tw, tile_h: 8, simd_lanes: lanes, ..Default::default() };
+            kc.align_tile_w(k, v);
+            kc.tile_w
+        };
+        // Default lanes (0 ⇒ 8): v=4 tiles round to 8-multiples.
+        assert_eq!(clamp(20, 0, 4096, 4), 16);
+        assert_eq!(clamp(24, 0, 4096, 4), 24);
+        // 16 lanes: round down to the 16-multiple when one fits …
+        assert_eq!(clamp(20, 16, 4096, 4), 16);
+        assert_eq!(clamp(40, 16, 4096, 4), 32);
+        // … and fall back to the v-multiple when it doesn't.
+        assert_eq!(clamp(12, 16, 4096, 4), 12);
+        // Scalar lanes leave the v rule unchanged.
+        assert_eq!(clamp(20, 1, 4096, 4), 20);
+        // k clamp still applies before lane alignment.
+        assert_eq!(clamp(1000, 16, 24, 4), 16);
+    }
+
+    #[test]
+    fn kernel_impl_parse_and_roundtrip() {
+        for imp in [KernelImpl::Auto, KernelImpl::Scalar, KernelImpl::Unrolled, KernelImpl::Avx2] {
+            assert_eq!(KernelImpl::parse(imp.as_str()), Some(imp));
+        }
+        assert_eq!(KernelImpl::parse(" AVX2 "), Some(KernelImpl::Avx2));
+        assert_eq!(KernelImpl::parse("sse9"), None);
+
+        let cfg = KernelConfig {
+            tile_w: 64,
+            tile_h: 128,
+            kernel_impl: KernelImpl::Unrolled,
+            simd_lanes: 16,
+            pipeline_tiles: false,
+        };
+        let j = Json::parse(&cfg.to_json().to_string_pretty()).unwrap();
+        assert_eq!(KernelConfig::from_json(&j).unwrap(), cfg);
+        // Pre-SIMD artifacts (tile dims only) still parse, with defaults.
+        let old = Json::parse(r#"{"tile_w": 16, "tile_h": 8}"#).unwrap();
+        let parsed = KernelConfig::from_json(&old).unwrap();
+        assert_eq!(parsed, KernelConfig { tile_w: 16, tile_h: 8, ..Default::default() });
+        assert!(KernelConfig::from_json(
+            &Json::parse(r#"{"tile_w": 16, "tile_h": 8, "kernel_impl": "sse9"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn effective_lanes_normalizes() {
+        let with = |lanes| KernelConfig { simd_lanes: lanes, ..Default::default() };
+        assert_eq!(with(0).effective_lanes(), 8);
+        assert_eq!(with(1).effective_lanes(), 1);
+        assert_eq!(with(4).effective_lanes(), 8);
+        assert_eq!(with(8).effective_lanes(), 8);
+        assert_eq!(with(16).effective_lanes(), 16);
+        assert_eq!(with(99).effective_lanes(), 16);
     }
 
     #[test]

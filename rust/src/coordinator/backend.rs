@@ -17,7 +17,7 @@
 //! under a shared token budget + one decode token per decoding slot).
 
 use crate::config::{KvConfig, ParallelConfig};
-use crate::gemm::Counters;
+use crate::gemm::{Counters, KernelSel};
 use crate::kvcache::{BlockPool, KvStats, PagedKv, SeqKv};
 use crate::model::{EngineKind, LlamaModel, ModelWeights};
 use crate::runtime::ModelRuntime;
@@ -122,6 +122,15 @@ pub trait DecodeBackend: Send {
     fn phases(&self) -> Option<PhaseTimer> {
         None
     }
+    /// The CodeGEMM kernel selection (implementation + lane width) the
+    /// backend's engines dispatch to, resolved once at construction
+    /// against the host CPU and the `CODEGEMM_KERNEL` override. `None`
+    /// when the backend has no CodeGEMM kernel layer (compiled PJRT
+    /// path, or a non-CodeGEMM `EngineKind`). Surfaces in the metrics
+    /// report and the `BENCH_<n>.json` gauges.
+    fn kernel_sel(&self) -> Option<KernelSel> {
+        None
+    }
     fn label(&self) -> String;
 }
 
@@ -131,6 +140,9 @@ pub struct NativeBackend {
     model: LlamaModel,
     kv_pool: BlockPool,
     seqs: Vec<SeqKv>,
+    /// Resolved kernel dispatch of the `EngineKind` the model was built
+    /// with (`None` for non-CodeGEMM kinds) — fixed at construction.
+    kernel: Option<KernelSel>,
 }
 
 impl NativeBackend {
@@ -163,8 +175,9 @@ impl NativeBackend {
         kv: &KvConfig,
         fused_projections: bool,
     ) -> NativeBackend {
+        let sel = kind.kernel_sel();
         let model = LlamaModel::load_with_options(weights, kind, None, fused_projections);
-        NativeBackend::assemble(model, max_batch, kv)
+        NativeBackend::assemble(model, max_batch, kv, sel)
     }
 
     /// Sharded-model backend: every linear of every step fans out across
@@ -202,17 +215,23 @@ impl NativeBackend {
                 par.fused_projections_effective(),
             );
         }
+        let sel = kind.kernel_sel();
         let model = LlamaModel::load_parallel(weights, kind, None, par, pool);
-        NativeBackend::assemble(model, max_batch, kv)
+        NativeBackend::assemble(model, max_batch, kv, sel)
     }
 
-    fn assemble(model: LlamaModel, max_batch: usize, kv: &KvConfig) -> NativeBackend {
+    fn assemble(
+        model: LlamaModel,
+        max_batch: usize,
+        kv: &KvConfig,
+        kernel: Option<KernelSel>,
+    ) -> NativeBackend {
         let kv_pool = BlockPool::for_model(&model.cfg, kv, max_batch);
         // Page tables pre-reserve their worst case so the decode hot loop
         // never reallocates them.
         let max_pages = kv_pool.layout().max_pages_per_seq();
         let seqs = (0..max_batch).map(|_| SeqKv::with_capacity(max_pages)).collect();
-        NativeBackend { model, kv_pool, seqs }
+        NativeBackend { model, kv_pool, seqs, kernel }
     }
 
     /// The shared page pool (tests and capacity planning).
@@ -313,6 +332,10 @@ impl DecodeBackend for NativeBackend {
 
     fn phases(&self) -> Option<PhaseTimer> {
         Some(self.model.phases().clone())
+    }
+
+    fn kernel_sel(&self) -> Option<KernelSel> {
+        self.kernel
     }
 
     fn label(&self) -> String {

@@ -287,6 +287,11 @@ impl Batcher {
             if let Some(eng) = self.backend.engine_counters() {
                 self.metrics.on_engine(eng);
             }
+            // Kernel dispatch gauge (fixed at backend construction, so
+            // re-recording the same value each step is idempotent).
+            if let Some(sel) = self.backend.kernel_sel() {
+                self.metrics.on_kernel(sel);
+            }
             // Model forward phase gauge (cumulative timer: latest wins).
             if let Some(p) = self.backend.phases() {
                 self.metrics.on_model_phases(p);

@@ -26,7 +26,7 @@
 //! single report answers "where did the serving time go" from the
 //! scheduler down to the paper's Table 6 build-vs-gather split.
 
-use crate::gemm::Counters;
+use crate::gemm::{Counters, KernelSel};
 use crate::kvcache::KvStats;
 use crate::obs::hist::Histogram;
 use crate::obs::trace::{SpanRecord, TraceLog};
@@ -72,6 +72,9 @@ struct Inner {
     /// Latest cumulative engine work counters (gauge, same rationale) —
     /// the source of the build-share and fused-projection-fanout lines.
     engine: Option<Counters>,
+    /// Resolved CodeGEMM kernel dispatch (gauge; fixed per backend
+    /// construction, so any snapshot is the whole story).
+    kernel: Option<KernelSel>,
     started: Option<std::time::Instant>,
     finished: Option<std::time::Instant>,
 }
@@ -134,6 +137,9 @@ pub struct MetricsReport {
     /// without engine-level accounting): GEMM calls, Psumbook
     /// build-vs-gather split, and the fused-projection fanout per call.
     pub engine: Option<Counters>,
+    /// Resolved CodeGEMM kernel dispatch — implementation + lane width
+    /// (`None` for backends without a CodeGEMM kernel layer).
+    pub kernel: Option<KernelSel>,
 }
 
 impl Metrics {
@@ -177,6 +183,13 @@ impl Metrics {
     /// serving history).
     pub fn on_engine(&self, counters: Counters) {
         self.inner.lock().unwrap().engine = Some(counters);
+    }
+
+    /// Record the resolved CodeGEMM kernel selection (gauge; the
+    /// dispatch is fixed at backend construction, so re-recording the
+    /// same value is the expected idempotent case).
+    pub fn on_kernel(&self, sel: KernelSel) {
+        self.inner.lock().unwrap().kernel = Some(sel);
     }
 
     /// Record the latest model-forward phase timer (`model/*` phases;
@@ -288,6 +301,7 @@ impl Metrics {
             spans_total: g.spans.total(),
             kv: g.kv.clone(),
             engine: g.engine.clone(),
+            kernel: g.kernel,
         }
     }
 }
@@ -379,6 +393,9 @@ impl MetricsReport {
                 100.0 * e.build_share_ops(),
                 e.fanout_per_call(),
             ));
+            if let Some(k) = &self.kernel {
+                out.push_str(&format!(", kernel {} ×{} lanes", k.label(), k.lanes));
+            }
         }
         if self.spans_total > 0 {
             out.push_str(&format!("\nspans:    {} recorded; most recent:", self.spans_total));
@@ -530,12 +547,15 @@ mod tests {
             group_fanout: 10,
             ..Default::default()
         });
+        m.on_kernel(KernelSel { imp: crate::config::KernelImpl::Unrolled, lanes: 8 });
         let r = m.report();
         let e = r.engine.as_ref().expect("engine snapshot recorded");
         assert_eq!(e.calls, 4);
+        assert_eq!(r.kernel.map(|k| k.lanes), Some(8));
         let rendered = r.render();
         assert!(rendered.contains("build share 25.0%"), "{rendered}");
         assert!(rendered.contains("fanout 2.50/call"), "{rendered}");
+        assert!(rendered.contains("kernel unrolled ×8 lanes"), "{rendered}");
     }
 
     #[test]

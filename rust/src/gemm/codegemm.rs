@@ -24,12 +24,24 @@
 //! call-to-call (reshaped in place between tile geometries), so the
 //! decode hot loop never allocates.
 //!
+//! ## Kernel dispatch
+//!
+//! The build and gather inner loops live in [`crate::gemm::simd`]: a
+//! [`simd::KernelSel`] is resolved once at construction from the
+//! `KernelConfig` knobs (`kernel_impl`, `simd_lanes`), the
+//! `CODEGEMM_KERNEL` environment override, and runtime CPU detection.
+//! [`CodeGemmEngine::build_book`] and the gather entry points route
+//! through it; all implementations are bit-identical (lane-order-stable
+//! accumulation — see the `simd` module docs), so the selection is
+//! purely a speed knob.
+//!
 //! Complexity per call (paper Eq. 3):
 //! build `O(m·2^b·K·N_blocks·M)` + read `O(m·N·K/v·M)` ≈ `O(MNK·m/v)`.
 
 use crate::config::{KernelConfig, QuantConfig};
 use crate::gemm::psumbook::Psumbook;
 use crate::gemm::scratch::{grow_slice, EngineScratch};
+use crate::gemm::simd::{self, GatherCtx, KernelSel};
 use crate::gemm::tiling::Tiles;
 use crate::gemm::traffic::Counters;
 use crate::gemm::GemmEngine;
@@ -59,6 +71,9 @@ impl Codes {
 pub struct CodeGemmEngine {
     cfg: QuantConfig,
     kernel: KernelConfig,
+    /// Kernel implementation resolved once at construction (config knobs
+    /// × `CODEGEMM_KERNEL` env override × CPU detection).
+    sel: KernelSel,
     n: usize,
     k: usize,
     /// Vectors per row (K / v).
@@ -77,9 +92,10 @@ impl CodeGemmEngine {
 
     pub fn with_kernel(q: &QuantizedLinear, mut kernel: KernelConfig) -> CodeGemmEngine {
         q.validate().expect("valid quantized layer");
-        // Clamp tile_w to K, rounded down to a v multiple, instead of
-        // panicking on non-default shapes.
+        // Clamp tile_w to K, rounded down to a v (and SIMD lane)
+        // multiple, instead of panicking on non-default shapes.
         kernel.align_tile_w(q.k, q.cfg.v);
+        let sel = simd::resolve(&kernel);
         let codes = if q.cfg.b <= 8 {
             Codes::U8(q.codes.unpack_u8().expect("b<=8"))
         } else {
@@ -88,6 +104,7 @@ impl CodeGemmEngine {
         CodeGemmEngine {
             cfg: q.cfg,
             kernel,
+            sel,
             n: q.n,
             k: q.k,
             jn: q.k / q.cfg.v,
@@ -101,6 +118,11 @@ impl CodeGemmEngine {
 
     pub fn kernel_config(&self) -> KernelConfig {
         self.kernel
+    }
+
+    /// The resolved kernel implementation + lane width this engine runs.
+    pub fn kernel_sel(&self) -> KernelSel {
+        self.sel
     }
 
     pub fn quant_config(&self) -> QuantConfig {
@@ -204,7 +226,20 @@ impl CodeGemmEngine {
     ) {
         let t = Timer::start();
         let x_tile = self.prepare_tile(x, m_batch, c0, c1, book, buf);
-        let built = book.build(&self.codebooks, self.cfg.v, x_tile);
+        let (jn, m, nc, mb) = (book.jn, book.m, book.nc, book.mb);
+        let built = simd::build_range(
+            self.sel,
+            &self.codebooks,
+            self.cfg.v,
+            x_tile,
+            jn,
+            m,
+            nc,
+            mb,
+            0,
+            jn,
+            &mut book.data,
+        );
         counters.build_seconds += t.elapsed_s();
         let counted = self.count_build(book, counters);
         debug_assert_eq!(built, counted, "attributed MACs must match the build");
@@ -259,11 +294,26 @@ impl CodeGemmEngine {
     ) {
         let jn_tile = book.jn;
         let j0 = c0 / self.cfg.v;
+        let ctx = GatherCtx {
+            m: self.cfg.m,
+            v: self.cfg.v,
+            g: self.cfg.group_size(self.k),
+            gpr: self.groups_per_row,
+            jn: self.jn,
+            n: self.n,
+            nc: self.cfg.n_centroids(),
+            scales: &self.scales,
+        };
+        let sel = self.sel;
         match (&self.codes, m_batch) {
-            (Codes::U8(codes), 1) => self.gather_rows_b1(codes, book, rows, j0, jn_tile, y),
-            (Codes::U16(codes), 1) => self.gather_rows_b1(codes, book, rows, j0, jn_tile, y),
-            (Codes::U8(codes), _) => self.gather_rows(codes, book, rows, j0, jn_tile, m_batch, y),
-            (Codes::U16(codes), _) => self.gather_rows(codes, book, rows, j0, jn_tile, m_batch, y),
+            (Codes::U8(codes), 1) => simd::gather_b1(sel, &ctx, codes, book, rows, j0, jn_tile, y),
+            (Codes::U16(codes), 1) => simd::gather_b1(sel, &ctx, codes, book, rows, j0, jn_tile, y),
+            (Codes::U8(codes), _) => {
+                simd::gather_mb(sel, &ctx, codes, book, rows, j0, jn_tile, m_batch, y)
+            }
+            (Codes::U16(codes), _) => {
+                simd::gather_mb(sel, &ctx, codes, book, rows, j0, jn_tile, m_batch, y)
+            }
         }
         let nrows = (rows.1 - rows.0) as u64;
         let gathers = nrows * (jn_tile * self.cfg.m) as u64 * m_batch as u64;
@@ -273,120 +323,6 @@ impl CodeGemmEngine {
         counters.weight_bytes += nrows * (jn_tile * self.cfg.m * self.codes.bytes_per_code()) as u64;
     }
 
-    /// Single-column gather fast path: flat unchecked indexing into the
-    /// (L1-resident) Psumbook; the per-group scale is applied once per
-    /// run of vectors sharing it.
-    fn gather_rows_b1<C: Copy + Into<usize>>(
-        &self,
-        codes: &[C],
-        book: &Psumbook,
-        rows: (usize, usize),
-        j0: usize,
-        jn_tile: usize,
-        y: &mut [f32],
-    ) {
-        let m = self.cfg.m;
-        let v = self.cfg.v;
-        let g = self.cfg.group_size(self.k);
-        let vectors_per_group = g / v;
-        let gpr = self.groups_per_row;
-        let nc = self.cfg.n_centroids();
-        let data = book.data.as_slice();
-        debug_assert_eq!(data.len(), jn_tile * m * nc);
-        for r in rows.0..rows.1 {
-            let base = (r * self.jn + j0) * m;
-            let row_codes = &codes[base..base + jn_tile * m];
-            let row_scales = &self.scales[r * gpr..(r + 1) * gpr];
-            let mut acc_row = 0f32;
-            let mut j = 0usize;
-            while j < jn_tile {
-                let abs_j = j0 + j;
-                let group = (abs_j * v) / g;
-                let run_end_abs = ((group + 1) * vectors_per_group).min(j0 + jn_tile);
-                let run = run_end_abs - abs_j;
-                // SAFETY: `idx < jn_tile*m` by construction and every code
-                // is `< nc` (enforced by `QuantizedLinear::validate`), so
-                // `slot = idx*nc + code < jn_tile*m*nc = data.len()`.
-                // Two accumulators break the serial add dependency chain.
-                let (lo, hi) = (j * m, (j + run) * m);
-                let (mut acc0, mut acc1) = (0f32, 0f32);
-                let mut idx = lo;
-                while idx + 1 < hi {
-                    unsafe {
-                        let c0: usize = (*row_codes.get_unchecked(idx)).into();
-                        let c1: usize = (*row_codes.get_unchecked(idx + 1)).into();
-                        debug_assert!(c0 < nc && c1 < nc);
-                        acc0 += *data.get_unchecked(idx * nc + c0);
-                        acc1 += *data.get_unchecked((idx + 1) * nc + c1);
-                    }
-                    idx += 2;
-                }
-                if idx < hi {
-                    let code: usize = unsafe { (*row_codes.get_unchecked(idx)).into() };
-                    debug_assert!(code < nc);
-                    acc0 += unsafe { *data.get_unchecked(idx * nc + code) };
-                }
-                acc_row += row_scales[group] * (acc0 + acc1);
-                j += run;
-            }
-            y[r] += acc_row;
-        }
-    }
-
-    /// Gather-accumulate one row-block against a built Psumbook.
-    #[allow(clippy::too_many_arguments)]
-    fn gather_rows<C: Copy + Into<usize>>(
-        &self,
-        codes: &[C],
-        book: &Psumbook,
-        rows: (usize, usize),
-        j0: usize,
-        jn_tile: usize,
-        mb: usize,
-        y: &mut [f32],
-    ) {
-        let m = self.cfg.m;
-        let v = self.cfg.v;
-        let g = self.cfg.group_size(self.k);
-        let vectors_per_group = g / v;
-        let gpr = self.groups_per_row;
-        let n = self.n;
-        let nc = self.cfg.n_centroids();
-        // Scratch per-batch group accumulator (mb is small: 1..64).
-        let mut gacc = [0f32; 64];
-        debug_assert!(mb <= 64);
-        for r in rows.0..rows.1 {
-            // Row's code slice for this tile is contiguous: [(r*jn)+j0 .. +jn_tile] × m.
-            let base = (r * self.jn + j0) * m;
-            let row_codes = &codes[base..base + jn_tile * m];
-            let row_scales = &self.scales[r * gpr..(r + 1) * gpr];
-            let mut j = 0usize;
-            while j < jn_tile {
-                // Run of vectors sharing one group scale.
-                let abs_j = j0 + j;
-                let group = (abs_j * v) / g;
-                let run_end_abs = ((group + 1) * vectors_per_group).min(j0 + jn_tile);
-                let run = run_end_abs - abs_j;
-                gacc[..mb].fill(0.0);
-                let data = book.data.as_slice();
-                // SAFETY: idx < jn_tile·m and code < nc (validated), so
-                // (idx·nc + code)·mb + b < data.len().
-                for idx in j * m..(j + run) * m {
-                    let code: usize = unsafe { (*row_codes.get_unchecked(idx)).into() };
-                    debug_assert!(code < nc);
-                    let off = (idx * nc + code) * mb;
-                    for (b, g) in gacc[..mb].iter_mut().enumerate() {
-                        *g += unsafe { *data.get_unchecked(off + b) };
-                    }
-                }
-                let s = row_scales[group];
-                for b in 0..mb {
-                    y[b * n + r] += s * gacc[b];
-                }
-                j += run;
-            }
-        }
-    }
 }
 
 impl GemmEngine for CodeGemmEngine {
@@ -462,7 +398,7 @@ mod tests {
     fn matches_dense_across_tile_configs() {
         let q = quantize(64, 128, "m2v8g32", 1);
         for (tw, th) in [(32, 2048), (32, 16), (64, 32), (128, 64), (8, 7)] {
-            check_against_dense(&q, KernelConfig { tile_w: tw, tile_h: th }, 1, 2);
+            check_against_dense(&q, KernelConfig { tile_w: tw, tile_h: th, ..Default::default() }, 1, 2);
         }
     }
 
@@ -477,14 +413,14 @@ mod tests {
     #[test]
     fn matches_dense_rowwise_norm() {
         let q = quantize(32, 96, "m2v4", 5);
-        check_against_dense(&q, KernelConfig { tile_w: 24, tile_h: 10 }, 3, 6);
+        check_against_dense(&q, KernelConfig { tile_w: 24, tile_h: 10, ..Default::default() }, 3, 6);
     }
 
     #[test]
     fn ragged_edge_tiles() {
         // K=80 with tile_w=32 leaves a 16-wide edge tile.
         let q = quantize(20, 80, "m1v8g16", 7);
-        check_against_dense(&q, KernelConfig { tile_w: 32, tile_h: 6 }, 2, 8);
+        check_against_dense(&q, KernelConfig { tile_w: 32, tile_h: 6, ..Default::default() }, 2, 8);
     }
 
     #[test]
@@ -492,10 +428,10 @@ mod tests {
         // v=8: tile_w=20 rounds down to 16; tile_w=3 clamps up to v.
         let q = quantize(16, 64, "m1v8g16", 19);
         for tw in [20usize, 12, 3, 1000] {
-            let e = CodeGemmEngine::with_kernel(&q, KernelConfig { tile_w: tw, tile_h: 8 });
+            let e = CodeGemmEngine::with_kernel(&q, KernelConfig { tile_w: tw, tile_h: 8, ..Default::default() });
             assert_eq!(e.kernel_config().tile_w % 8, 0, "tile_w {tw} not v-aligned");
             assert!(e.kernel_config().tile_w >= 8 && e.kernel_config().tile_w <= 64);
-            check_against_dense(&q, KernelConfig { tile_w: tw, tile_h: 8 }, 2, 20);
+            check_against_dense(&q, KernelConfig { tile_w: tw, tile_h: 8, ..Default::default() }, 2, 20);
         }
     }
 
@@ -506,7 +442,7 @@ mod tests {
         let q = quantize(256, 128, "m2v8g128", 9);
         let x = Prng::seeded(10).normal_vec(128, 1.0);
         let share = |th: usize| {
-            let mut e = CodeGemmEngine::with_kernel(&q, KernelConfig { tile_w: 32, tile_h: th });
+            let mut e = CodeGemmEngine::with_kernel(&q, KernelConfig { tile_w: 32, tile_h: th, ..Default::default() });
             let _ = e.gemv(&x);
             e.counters().build_share_ops()
         };
@@ -522,7 +458,7 @@ mod tests {
         let q = quantize(128, 128, "m2v8g128", 11);
         let share = |mb: usize| {
             let x = Prng::seeded(12).normal_vec(128 * mb, 1.0);
-            let mut e = CodeGemmEngine::with_kernel(&q, KernelConfig { tile_w: 32, tile_h: 128 });
+            let mut e = CodeGemmEngine::with_kernel(&q, KernelConfig { tile_w: 32, tile_h: 128, ..Default::default() });
             let _ = e.gemm(&x, mb);
             e.counters().build_share_ops()
         };
@@ -553,7 +489,7 @@ mod tests {
         // at v=8: 8×2=16B per centroid — equal here; at v=16: book 2×4=8B
         // per centroid vs 32B codebook.
         let q16 = quantize(32, 128, "m1v16g128", 15);
-        let e16 = CodeGemmEngine::with_kernel(&q16, KernelConfig { tile_w: 32, tile_h: 2048 });
+        let e16 = CodeGemmEngine::with_kernel(&q16, KernelConfig { tile_w: 32, tile_h: 2048, ..Default::default() });
         let codebook_bytes = 1 * 256 * 16 * 2;
         assert!(e16.psumbook_bytes() < codebook_bytes);
     }
@@ -568,7 +504,7 @@ mod tests {
         let q = quantize(24, 96, "m2v4g32", 21);
         for mb in [1usize, 3] {
             let x = Prng::seeded(22).normal_vec(q.k * mb, 1.0);
-            let e = CodeGemmEngine::with_kernel(&q, KernelConfig { tile_w: 32, tile_h: 4096 });
+            let e = CodeGemmEngine::with_kernel(&q, KernelConfig { tile_w: 32, tile_h: 4096, ..Default::default() });
             let mut y_ref = vec![f32::NAN; q.n * mb];
             let mut scratch = EngineScratch::new();
             e.gemm_into(&x, mb, &mut y_ref, &mut scratch);
@@ -597,6 +533,6 @@ mod tests {
         let w = Prng::seeded(16).normal_vec(n * k, 0.02);
         let cfg = QuantConfig::new(4, 1, 10, -1).unwrap(); // 1024 centroids
         let q = Quantizer::new(cfg).quantize(&w, n, k);
-        check_against_dense(&q, KernelConfig { tile_w: 16, tile_h: 8 }, 1, 17);
+        check_against_dense(&q, KernelConfig { tile_w: 16, tile_h: 8, ..Default::default() }, 1, 17);
     }
 }

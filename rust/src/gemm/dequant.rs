@@ -205,11 +205,11 @@ mod tests {
     #[test]
     fn misaligned_tile_w_clamps_instead_of_panicking() {
         let q = quantize(12, 64, "m1v8g32", 9);
-        let e = DequantEngine::with_kernel(&q, KernelConfig { tile_w: 21, tile_h: 4 });
+        let e = DequantEngine::with_kernel(&q, KernelConfig { tile_w: 21, tile_h: 4, ..Default::default() });
         assert_eq!(e.kernel.tile_w, 16);
         let x = Prng::seeded(10).normal_vec(64, 1.0);
         let y_ref = DenseEngine::new(q.dequantize(), 12, 64).gemv(&x);
-        let mut e = DequantEngine::with_kernel(&q, KernelConfig { tile_w: 21, tile_h: 4 });
+        let mut e = DequantEngine::with_kernel(&q, KernelConfig { tile_w: 21, tile_h: 4, ..Default::default() });
         assert!(stats::rel_l2(&e.gemv(&x), &y_ref) < 2e-5);
     }
 
@@ -219,8 +219,8 @@ mod tests {
         // weight-side traffic must exceed CodeGEMM's on the same layer.
         let q = quantize(128, 128, "m2v8g128", 8);
         let x = Prng::seeded(9).normal_vec(128, 1.0);
-        let mut dq = DequantEngine::with_kernel(&q, KernelConfig { tile_w: 32, tile_h: 64 });
-        let mut cg = CodeGemmEngine::with_kernel(&q, KernelConfig { tile_w: 32, tile_h: 64 });
+        let mut dq = DequantEngine::with_kernel(&q, KernelConfig { tile_w: 32, tile_h: 64, ..Default::default() });
+        let mut cg = CodeGemmEngine::with_kernel(&q, KernelConfig { tile_w: 32, tile_h: 64, ..Default::default() });
         let _ = dq.gemv(&x);
         let _ = cg.gemv(&x);
         assert!(

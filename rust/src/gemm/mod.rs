@@ -62,6 +62,23 @@
 //! the MLP. Mismatched member formats — or the `fused_projections`
 //! toggle turned off — fall back to independent per-member calls with
 //! identical (bit-exact) outputs.
+//!
+//! ## Kernel dispatch and the software pipeline
+//!
+//! Both CodeGEMM phases run through runtime-dispatched SIMD kernels in
+//! [`simd`]: the Psumbook build vectorizes over centroids and the gather
+//! lane-parallelizes over output rows (decode) or batch columns
+//! (prefill), with an AVX2 path selected via CPU detection and a
+//! portable unrolled-lane fallback. The implementation and lane width
+//! are [`crate::config::KernelConfig`] knobs (`kernel_impl`,
+//! `simd_lanes`), resolved once per engine by [`simd::resolve`] and
+//! overridable via the `CODEGEMM_KERNEL` env var; every variant is
+//! **bit-exact** against the scalar reference because lanes are always
+//! independent accumulators — no reduction is ever split across lanes.
+//! On top, the shared-book schedule software-pipelines its k-tiles
+//! (`KernelConfig::pipeline_tiles`): tile `t+1`'s book build runs inside
+//! the same pool scope as tile `t`'s gather, double-buffered through
+//! [`EngineScratch::book`]/`book2` — see `crate::parallel::fanout`.
 
 pub mod codegemm;
 pub mod dense;
@@ -70,6 +87,7 @@ pub mod group;
 pub mod lutgemm;
 pub mod psumbook;
 pub mod scratch;
+pub mod simd;
 pub mod tiling;
 pub mod traffic;
 pub mod uniform_gemm;
@@ -81,6 +99,7 @@ pub use group::{GemmGroup, GroupMember};
 pub use lutgemm::LutGemmEngine;
 pub use psumbook::Psumbook;
 pub use scratch::EngineScratch;
+pub use simd::KernelSel;
 pub use traffic::Counters;
 pub use uniform_gemm::UniformGemmEngine;
 

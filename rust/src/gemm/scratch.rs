@@ -35,6 +35,11 @@ pub struct EngineScratch {
     /// scratch, not the per-worker children, so a single build serves
     /// the whole fan-out.
     pub book: Psumbook,
+    /// The software pipeline's spare Psumbook: under the pipelined
+    /// shared-book schedule (`KernelConfig::pipeline_tiles`) tile `t+1`
+    /// builds here while tile `t`'s gather reads `book`, then the two
+    /// swap roles. Left empty by every other path.
+    pub book2: Psumbook,
     /// Per-worker child scratches used by sharded / tensor-parallel
     /// wrappers (one per shard; leaf engines ignore this). On the
     /// shared-book path children carry only the per-shard gather
@@ -49,7 +54,11 @@ impl EngineScratch {
 
     /// High-water f32 footprint of this scratch (excluding children).
     pub fn footprint_bytes(&self) -> usize {
-        (self.buf.capacity() + self.buf2.capacity() + self.book.data.capacity()) * 4
+        (self.buf.capacity()
+            + self.buf2.capacity()
+            + self.book.data.capacity()
+            + self.book2.data.capacity())
+            * 4
     }
 }
 
@@ -84,6 +93,6 @@ mod tests {
         let s = EngineScratch::new();
         assert_eq!(s.counters, Counters::default());
         assert!(s.buf.is_empty() && s.buf2.is_empty() && s.children.is_empty());
-        assert!(s.book.is_empty());
+        assert!(s.book.is_empty() && s.book2.is_empty());
     }
 }

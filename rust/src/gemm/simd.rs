@@ -1,0 +1,941 @@
+//! SIMD kernel layer for the two CodeGEMM phases: the Psumbook **build**
+//! (centroid × activation-subvector inner products) and the code-indexed
+//! **gather**.
+//!
+//! ## Dispatch model
+//!
+//! A [`KernelSel`] is resolved once per engine from the [`KernelConfig`]
+//! knobs (`kernel_impl`, `simd_lanes`) plus runtime CPU detection:
+//!
+//! * [`KernelImpl::Scalar`] — the reference implementation, one row at a
+//!   time (the exact kernels the engine shipped with pre-SIMD).
+//! * [`KernelImpl::Unrolled`] — portable lane-parallel path: 8 or 16 rows
+//!   (single-column) / 8 batch columns (batched) advance in lock-step
+//!   through manually unrolled accumulator arrays the autovectorizer can
+//!   chew on. No `std::arch`, works on every target.
+//! * [`KernelImpl::Avx2`] — explicit `std::arch::x86_64` path: 8 rows per
+//!   `__m256` with `vgatherdps` Psumbook lookups, and an 8-centroid-wide
+//!   FMA-shaped build. Selected only when `is_x86_feature_detected!`
+//!   confirms AVX2; silently downgrades to `Unrolled` otherwise.
+//! * [`KernelImpl::Auto`] (default) — `Avx2` when available, else
+//!   `Unrolled`.
+//!
+//! The `CODEGEMM_KERNEL` environment variable (`scalar` | `unrolled` |
+//! `avx2` | `auto`) overrides the config knob — that is what lets CI run
+//! the whole suite once per kernel path with no per-test plumbing.
+//!
+//! ## Bit-exactness by construction
+//!
+//! Every SIMD path maps **independent accumulators** onto lanes: output
+//! rows for the single-column gather, batch columns for the batched
+//! gather, centroids for the build. Each lane replays *exactly* the
+//! scalar per-accumulator operation sequence — same adds, same order,
+//! same mul-then-add scale application (no FMA contraction) — so scalar
+//! and SIMD results are bit-identical, not epsilon-close. Floating-point
+//! reassociation never happens because no scalar reduction is ever split
+//! *across* lanes. `tests/simd_prop.rs` pins this with `assert_eq` (and
+//! the tiling layer keeps `tile_w` lane-aligned via
+//! [`KernelConfig::align_tile_w`], so every impl sees identical k-tile
+//! boundaries and therefore identical group-scale run structure).
+
+use crate::config::{KernelConfig, KernelImpl};
+use crate::gemm::psumbook::{self, Psumbook};
+
+/// A resolved kernel selection: which implementation runs and how many
+/// lanes it advances per step. Produced by [`resolve`]; immutable for
+/// the life of an engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelSel {
+    pub imp: KernelImpl,
+    pub lanes: usize,
+}
+
+impl KernelSel {
+    /// Stable label for metrics / bench artifacts.
+    pub fn label(&self) -> &'static str {
+        match self.imp {
+            KernelImpl::Scalar => "scalar",
+            KernelImpl::Unrolled => "unrolled",
+            KernelImpl::Avx2 => "avx2",
+            // `resolve` never returns Auto; keep a label anyway.
+            KernelImpl::Auto => "auto",
+        }
+    }
+}
+
+/// Runtime AVX2 detection (false on non-x86_64 targets).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Resolve the configured kernel against the host CPU and the
+/// `CODEGEMM_KERNEL` environment override (which wins over the config so
+/// CI can force every engine in the process onto one path).
+pub fn resolve(cfg: &KernelConfig) -> KernelSel {
+    let env = std::env::var("CODEGEMM_KERNEL").ok().and_then(|s| KernelImpl::parse(&s));
+    resolve_with(cfg, env)
+}
+
+/// [`resolve`] with the environment override made explicit (testable
+/// regardless of the process environment).
+pub fn resolve_with(cfg: &KernelConfig, env_override: Option<KernelImpl>) -> KernelSel {
+    let mut imp = env_override.unwrap_or(cfg.kernel_impl);
+    // Lane count comes from the config alone — never from the impl or
+    // the environment — so engines configured for different impls tile
+    // identically and stay bit-comparable.
+    let mut lanes = cfg.effective_lanes();
+    if imp == KernelImpl::Auto {
+        imp = if avx2_available() { KernelImpl::Avx2 } else { KernelImpl::Unrolled };
+    }
+    if imp == KernelImpl::Avx2 && !avx2_available() {
+        imp = KernelImpl::Unrolled;
+    }
+    if imp == KernelImpl::Avx2 {
+        // __m256 is 8 f32 lanes; the gather kernel is written for exactly 8.
+        lanes = 8;
+    }
+    if lanes == 1 && imp != KernelImpl::Scalar {
+        imp = KernelImpl::Scalar;
+    }
+    if imp == KernelImpl::Scalar {
+        lanes = 1;
+    }
+    KernelSel { imp, lanes }
+}
+
+/// Read-only engine geometry the gather kernels need, bundled so they
+/// can be free functions (shared by the engine and the remainder
+/// handling of every SIMD path).
+pub(crate) struct GatherCtx<'a> {
+    /// Codebooks per vector.
+    pub m: usize,
+    /// Sub-vector width.
+    pub v: usize,
+    /// Effective group size (scale granularity) in weights.
+    pub g: usize,
+    /// Groups per row.
+    pub gpr: usize,
+    /// Vectors per full row (`K / v`).
+    pub jn: usize,
+    /// Output rows of the whole engine (row stride of batched `y`).
+    pub n: usize,
+    /// Centroids per codebook (`2^b`).
+    pub nc: usize,
+    /// Per-(row, group) scales, `n × gpr`.
+    pub scales: &'a [f32],
+}
+
+// ---------------------------------------------------------------------------
+// Single-column (m_batch == 1) gather: lanes = output rows.
+// ---------------------------------------------------------------------------
+
+/// Dispatch the single-column gather for rows `[rows.0, rows.1)` of the
+/// k-tile starting at vector `j0` (width `jn_tile` vectors) against a
+/// built book, accumulating into `y[r] +=`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gather_b1<C: Copy + Into<usize>>(
+    sel: KernelSel,
+    ctx: &GatherCtx,
+    codes: &[C],
+    book: &Psumbook,
+    rows: (usize, usize),
+    j0: usize,
+    jn_tile: usize,
+    y: &mut [f32],
+) {
+    let data = book.data.as_slice();
+    debug_assert_eq!(data.len(), jn_tile * ctx.m * ctx.nc);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if sel.imp == KernelImpl::Avx2 {
+            let blocks_end = rows.0 + (rows.1 - rows.0) / 8 * 8;
+            if rows.0 < blocks_end {
+                // SAFETY: `resolve` only selects Avx2 when the host
+                // reports the feature; row blocks are full (8 rows).
+                unsafe { gather_b1_avx2(ctx, codes, data, rows.0, blocks_end, j0, jn_tile, y) };
+            }
+            gather_b1_scalar(ctx, codes, data, blocks_end, rows.1, j0, jn_tile, y);
+            return;
+        }
+    }
+    match sel.imp {
+        KernelImpl::Unrolled | KernelImpl::Avx2 => {
+            if sel.lanes >= 16 {
+                gather_b1_lanes::<C, 16>(ctx, codes, data, rows, j0, jn_tile, y)
+            } else {
+                gather_b1_lanes::<C, 8>(ctx, codes, data, rows, j0, jn_tile, y)
+            }
+        }
+        _ => gather_b1_scalar(ctx, codes, data, rows.0, rows.1, j0, jn_tile, y),
+    }
+}
+
+/// Reference single-column gather (one row at a time): flat unchecked
+/// indexing into the (L1-resident) Psumbook; the per-group scale is
+/// applied once per run of vectors sharing it. Every SIMD path must
+/// reproduce this per-row operation sequence exactly — it also serves
+/// as their remainder handler for row counts not divisible by the lane
+/// width.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gather_b1_scalar<C: Copy + Into<usize>>(
+    ctx: &GatherCtx,
+    codes: &[C],
+    data: &[f32],
+    r_lo: usize,
+    r_hi: usize,
+    j0: usize,
+    jn_tile: usize,
+    y: &mut [f32],
+) {
+    let (m, v, g) = (ctx.m, ctx.v, ctx.g);
+    let vectors_per_group = g / v;
+    let (gpr, nc) = (ctx.gpr, ctx.nc);
+    for r in r_lo..r_hi {
+        let base = (r * ctx.jn + j0) * m;
+        let row_codes = &codes[base..base + jn_tile * m];
+        let row_scales = &ctx.scales[r * gpr..(r + 1) * gpr];
+        let mut acc_row = 0f32;
+        let mut j = 0usize;
+        while j < jn_tile {
+            let abs_j = j0 + j;
+            let group = (abs_j * v) / g;
+            let run_end_abs = ((group + 1) * vectors_per_group).min(j0 + jn_tile);
+            let run = run_end_abs - abs_j;
+            // SAFETY: `idx < jn_tile*m` by construction and every code
+            // is `< nc` (enforced by `QuantizedLinear::validate`), so
+            // `slot = idx*nc + code < jn_tile*m*nc = data.len()`.
+            // Two accumulators break the serial add dependency chain.
+            let (lo, hi) = (j * m, (j + run) * m);
+            let (mut acc0, mut acc1) = (0f32, 0f32);
+            let mut idx = lo;
+            while idx + 1 < hi {
+                unsafe {
+                    let c0: usize = (*row_codes.get_unchecked(idx)).into();
+                    let c1: usize = (*row_codes.get_unchecked(idx + 1)).into();
+                    debug_assert!(c0 < nc && c1 < nc);
+                    acc0 += *data.get_unchecked(idx * nc + c0);
+                    acc1 += *data.get_unchecked((idx + 1) * nc + c1);
+                }
+                idx += 2;
+            }
+            if idx < hi {
+                let code: usize = unsafe { (*row_codes.get_unchecked(idx)).into() };
+                debug_assert!(code < nc);
+                acc0 += unsafe { *data.get_unchecked(idx * nc + code) };
+            }
+            acc_row += row_scales[group] * (acc0 + acc1);
+            j += run;
+        }
+        y[r] += acc_row;
+    }
+}
+
+/// Portable lane-parallel single-column gather: `L` rows advance in
+/// lock-step, each lane owning the same accumulator pair the scalar path
+/// keeps for that row (bit-exact per row; remainder rows fall back to
+/// [`gather_b1_scalar`]).
+#[allow(clippy::too_many_arguments)]
+fn gather_b1_lanes<C: Copy + Into<usize>, const L: usize>(
+    ctx: &GatherCtx,
+    codes: &[C],
+    data: &[f32],
+    rows: (usize, usize),
+    j0: usize,
+    jn_tile: usize,
+    y: &mut [f32],
+) {
+    let (m, v, g) = (ctx.m, ctx.v, ctx.g);
+    let vectors_per_group = g / v;
+    let (gpr, nc) = (ctx.gpr, ctx.nc);
+    let blocks_end = rows.0 + (rows.1 - rows.0) / L * L;
+    let mut r0 = rows.0;
+    while r0 < blocks_end {
+        let mut base = [0usize; L];
+        for (l, b) in base.iter_mut().enumerate() {
+            *b = ((r0 + l) * ctx.jn + j0) * m;
+        }
+        let mut acc_row = [0f32; L];
+        let mut j = 0usize;
+        while j < jn_tile {
+            let abs_j = j0 + j;
+            let group = (abs_j * v) / g;
+            let run_end_abs = ((group + 1) * vectors_per_group).min(j0 + jn_tile);
+            let run = run_end_abs - abs_j;
+            let (lo, hi) = (j * m, (j + run) * m);
+            let mut acc0 = [0f32; L];
+            let mut acc1 = [0f32; L];
+            let mut idx = lo;
+            while idx + 1 < hi {
+                // SAFETY: same bound as the scalar path, per lane:
+                // `base[l] + idx < (r0+l+1)*jn*m <= codes.len()` and
+                // `idx*nc + code < data.len()`.
+                for l in 0..L {
+                    unsafe {
+                        let c0: usize = (*codes.get_unchecked(base[l] + idx)).into();
+                        let c1: usize = (*codes.get_unchecked(base[l] + idx + 1)).into();
+                        debug_assert!(c0 < nc && c1 < nc);
+                        acc0[l] += *data.get_unchecked(idx * nc + c0);
+                        acc1[l] += *data.get_unchecked((idx + 1) * nc + c1);
+                    }
+                }
+                idx += 2;
+            }
+            if idx < hi {
+                for l in 0..L {
+                    let code: usize = unsafe { (*codes.get_unchecked(base[l] + idx)).into() };
+                    debug_assert!(code < nc);
+                    acc0[l] += unsafe { *data.get_unchecked(idx * nc + code) };
+                }
+            }
+            for l in 0..L {
+                let s = ctx.scales[(r0 + l) * gpr + group];
+                acc_row[l] += s * (acc0[l] + acc1[l]);
+            }
+            j += run;
+        }
+        for l in 0..L {
+            y[r0 + l] += acc_row[l];
+        }
+        r0 += L;
+    }
+    gather_b1_scalar(ctx, codes, data, blocks_end, rows.1, j0, jn_tile, y);
+}
+
+/// AVX2 single-column gather: 8 rows per `__m256`, Psumbook lookups via
+/// `vgatherdps`. Lane `l` of every vector op is row `r0 + l`'s scalar
+/// accumulator, so results are bit-identical to [`gather_b1_scalar`].
+///
+/// Caller guarantees `(r_hi - r_lo) % 8 == 0` and AVX2 support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn gather_b1_avx2<C: Copy + Into<usize>>(
+    ctx: &GatherCtx,
+    codes: &[C],
+    data: &[f32],
+    r_lo: usize,
+    r_hi: usize,
+    j0: usize,
+    jn_tile: usize,
+    y: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+
+    #[inline(always)]
+    unsafe fn slots<C: Copy + Into<usize>>(
+        codes: &[C],
+        base: &[usize; 8],
+        idx: usize,
+        nc: usize,
+    ) -> __m256i {
+        let row = idx * nc;
+        // SAFETY (caller): base[l] + idx < codes.len(); codes < nc.
+        let c = |l: usize| -> i32 {
+            let code: usize = (*codes.get_unchecked(base[l] + idx)).into();
+            (row + code) as i32
+        };
+        _mm256_setr_epi32(c(0), c(1), c(2), c(3), c(4), c(5), c(6), c(7))
+    }
+
+    let (m, v, g) = (ctx.m, ctx.v, ctx.g);
+    let vectors_per_group = g / v;
+    let (gpr, nc) = (ctx.gpr, ctx.nc);
+    debug_assert!(data.len() <= i32::MAX as usize);
+    debug_assert_eq!((r_hi - r_lo) % 8, 0);
+    let dp = data.as_ptr();
+    let mut r0 = r_lo;
+    while r0 < r_hi {
+        let mut base = [0usize; 8];
+        for (l, b) in base.iter_mut().enumerate() {
+            *b = ((r0 + l) * ctx.jn + j0) * m;
+        }
+        let mut acc_row = _mm256_setzero_ps();
+        let mut j = 0usize;
+        while j < jn_tile {
+            let abs_j = j0 + j;
+            let group = (abs_j * v) / g;
+            let run_end_abs = ((group + 1) * vectors_per_group).min(j0 + jn_tile);
+            let run = run_end_abs - abs_j;
+            let (lo, hi) = (j * m, (j + run) * m);
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut idx = lo;
+            while idx + 1 < hi {
+                let s0 = slots(codes, &base, idx, nc);
+                let s1 = slots(codes, &base, idx + 1, nc);
+                acc0 = _mm256_add_ps(acc0, _mm256_i32gather_ps::<4>(dp, s0));
+                acc1 = _mm256_add_ps(acc1, _mm256_i32gather_ps::<4>(dp, s1));
+                idx += 2;
+            }
+            if idx < hi {
+                let s0 = slots(codes, &base, idx, nc);
+                acc0 = _mm256_add_ps(acc0, _mm256_i32gather_ps::<4>(dp, s0));
+            }
+            let s = |l: usize| ctx.scales[(r0 + l) * gpr + group];
+            let sv = _mm256_setr_ps(s(0), s(1), s(2), s(3), s(4), s(5), s(6), s(7));
+            // mul then add (matches the scalar `+= s * (acc0 + acc1)`,
+            // no FMA contraction).
+            acc_row = _mm256_add_ps(acc_row, _mm256_mul_ps(sv, _mm256_add_ps(acc0, acc1)));
+            j += run;
+        }
+        let yp = y.as_mut_ptr().add(r0);
+        _mm256_storeu_ps(yp, _mm256_add_ps(_mm256_loadu_ps(yp), acc_row));
+        r0 += 8;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched (m_batch > 1) gather: lanes = batch columns.
+// ---------------------------------------------------------------------------
+
+/// Dispatch the batched gather (the batch axis is innermost in the book,
+/// so lanes ride contiguous loads instead of `vgatherdps`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gather_mb<C: Copy + Into<usize>>(
+    sel: KernelSel,
+    ctx: &GatherCtx,
+    codes: &[C],
+    book: &Psumbook,
+    rows: (usize, usize),
+    j0: usize,
+    jn_tile: usize,
+    mb: usize,
+    y: &mut [f32],
+) {
+    let data = book.data.as_slice();
+    debug_assert_eq!(data.len(), jn_tile * ctx.m * ctx.nc * mb);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if sel.imp == KernelImpl::Avx2 {
+            // SAFETY: `resolve` only selects Avx2 when detected.
+            unsafe { gather_mb_avx2(ctx, codes, data, rows, j0, jn_tile, mb, y) };
+            return;
+        }
+    }
+    match sel.imp {
+        KernelImpl::Unrolled | KernelImpl::Avx2 => {
+            gather_mb_chunked(ctx, codes, data, rows, j0, jn_tile, mb, y)
+        }
+        _ => gather_mb_scalar(ctx, codes, data, rows, j0, jn_tile, mb, y),
+    }
+}
+
+/// Reference batched gather (one batch column at a time inside the
+/// per-vector loop). The SIMD paths regroup the `b` loop into 8-wide
+/// chunks, which leaves every per-`b` accumulation sequence untouched —
+/// hence bit-exact.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gather_mb_scalar<C: Copy + Into<usize>>(
+    ctx: &GatherCtx,
+    codes: &[C],
+    data: &[f32],
+    rows: (usize, usize),
+    j0: usize,
+    jn_tile: usize,
+    mb: usize,
+    y: &mut [f32],
+) {
+    let (m, v, g) = (ctx.m, ctx.v, ctx.g);
+    let vectors_per_group = g / v;
+    let (gpr, n, nc) = (ctx.gpr, ctx.n, ctx.nc);
+    // Scratch per-batch group accumulator (mb is small: 1..64).
+    let mut gacc = [0f32; 64];
+    debug_assert!(mb <= 64);
+    for r in rows.0..rows.1 {
+        // Row's code slice for this tile is contiguous: [(r*jn)+j0 .. +jn_tile] × m.
+        let base = (r * ctx.jn + j0) * m;
+        let row_codes = &codes[base..base + jn_tile * m];
+        let row_scales = &ctx.scales[r * gpr..(r + 1) * gpr];
+        let mut j = 0usize;
+        while j < jn_tile {
+            // Run of vectors sharing one group scale.
+            let abs_j = j0 + j;
+            let group = (abs_j * v) / g;
+            let run_end_abs = ((group + 1) * vectors_per_group).min(j0 + jn_tile);
+            let run = run_end_abs - abs_j;
+            gacc[..mb].fill(0.0);
+            // SAFETY: idx < jn_tile·m and code < nc (validated), so
+            // (idx·nc + code)·mb + b < data.len().
+            for idx in j * m..(j + run) * m {
+                let code: usize = unsafe { (*row_codes.get_unchecked(idx)).into() };
+                debug_assert!(code < nc);
+                let off = (idx * nc + code) * mb;
+                for (b, acc) in gacc[..mb].iter_mut().enumerate() {
+                    *acc += unsafe { *data.get_unchecked(off + b) };
+                }
+            }
+            let s = row_scales[group];
+            for b in 0..mb {
+                y[b * n + r] += s * gacc[b];
+            }
+            j += run;
+        }
+    }
+}
+
+/// Portable batched gather: identical to [`gather_mb_scalar`] except the
+/// per-vector batch loop runs in manually unrolled 8-wide chunks.
+#[allow(clippy::too_many_arguments)]
+fn gather_mb_chunked<C: Copy + Into<usize>>(
+    ctx: &GatherCtx,
+    codes: &[C],
+    data: &[f32],
+    rows: (usize, usize),
+    j0: usize,
+    jn_tile: usize,
+    mb: usize,
+    y: &mut [f32],
+) {
+    let (m, v, g) = (ctx.m, ctx.v, ctx.g);
+    let vectors_per_group = g / v;
+    let (gpr, n, nc) = (ctx.gpr, ctx.n, ctx.nc);
+    let mut gacc = [0f32; 64];
+    debug_assert!(mb <= 64);
+    for r in rows.0..rows.1 {
+        let base = (r * ctx.jn + j0) * m;
+        let row_codes = &codes[base..base + jn_tile * m];
+        let row_scales = &ctx.scales[r * gpr..(r + 1) * gpr];
+        let mut j = 0usize;
+        while j < jn_tile {
+            let abs_j = j0 + j;
+            let group = (abs_j * v) / g;
+            let run_end_abs = ((group + 1) * vectors_per_group).min(j0 + jn_tile);
+            let run = run_end_abs - abs_j;
+            gacc[..mb].fill(0.0);
+            for idx in j * m..(j + run) * m {
+                let code: usize = unsafe { (*row_codes.get_unchecked(idx)).into() };
+                debug_assert!(code < nc);
+                let off = (idx * nc + code) * mb;
+                // SAFETY: off + mb <= data.len() (same bound as the
+                // reference path); b + t < mb <= 64 for gacc.
+                let mut b = 0usize;
+                while b + 8 <= mb {
+                    for t in 0..8 {
+                        unsafe {
+                            *gacc.get_unchecked_mut(b + t) += *data.get_unchecked(off + b + t);
+                        }
+                    }
+                    b += 8;
+                }
+                while b < mb {
+                    unsafe {
+                        *gacc.get_unchecked_mut(b) += *data.get_unchecked(off + b);
+                    }
+                    b += 1;
+                }
+            }
+            let s = row_scales[group];
+            for b in 0..mb {
+                y[b * n + r] += s * gacc[b];
+            }
+            j += run;
+        }
+    }
+}
+
+/// AVX2 batched gather: the 8-wide batch chunks become `vaddps` on
+/// contiguous loads (the batch axis is innermost in the book layout).
+/// Lane `l` is batch column `b + l`'s scalar accumulator — bit-exact.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn gather_mb_avx2<C: Copy + Into<usize>>(
+    ctx: &GatherCtx,
+    codes: &[C],
+    data: &[f32],
+    rows: (usize, usize),
+    j0: usize,
+    jn_tile: usize,
+    mb: usize,
+    y: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let (m, v, g) = (ctx.m, ctx.v, ctx.g);
+    let vectors_per_group = g / v;
+    let (gpr, n, nc) = (ctx.gpr, ctx.n, ctx.nc);
+    let mut gacc = [0f32; 64];
+    debug_assert!(mb <= 64);
+    let dp = data.as_ptr();
+    for r in rows.0..rows.1 {
+        let base = (r * ctx.jn + j0) * m;
+        let row_codes = &codes[base..base + jn_tile * m];
+        let row_scales = &ctx.scales[r * gpr..(r + 1) * gpr];
+        let mut j = 0usize;
+        while j < jn_tile {
+            let abs_j = j0 + j;
+            let group = (abs_j * v) / g;
+            let run_end_abs = ((group + 1) * vectors_per_group).min(j0 + jn_tile);
+            let run = run_end_abs - abs_j;
+            gacc[..mb].fill(0.0);
+            for idx in j * m..(j + run) * m {
+                let code: usize = (*row_codes.get_unchecked(idx)).into();
+                debug_assert!(code < nc);
+                let off = (idx * nc + code) * mb;
+                // SAFETY: off + mb <= data.len(); gacc holds >= mb floats.
+                let mut b = 0usize;
+                while b + 8 <= mb {
+                    let gv = _mm256_loadu_ps(gacc.as_ptr().add(b));
+                    let dv = _mm256_loadu_ps(dp.add(off + b));
+                    _mm256_storeu_ps(gacc.as_mut_ptr().add(b), _mm256_add_ps(gv, dv));
+                    b += 8;
+                }
+                while b < mb {
+                    *gacc.get_unchecked_mut(b) += *data.get_unchecked(off + b);
+                    b += 1;
+                }
+            }
+            let s = row_scales[group];
+            for b in 0..mb {
+                y[b * n + r] += s * gacc[b];
+            }
+            j += run;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Psumbook build: lanes = centroids.
+// ---------------------------------------------------------------------------
+
+/// Build the book entries for vector range `[j_lo, j_hi)`, dispatching
+/// to the AVX2 build when selected and applicable (single column,
+/// `v ∈ {4, 8}`, at least one full 8-centroid chunk) and to the scalar
+/// reference [`psumbook::build_range`] otherwise. The AVX2 build
+/// reproduces the scalar per-entry dot-product association exactly, so
+/// mixing paths (e.g. a batched tile after single-column tiles) is
+/// always bit-exact. Returns the MACs spent.
+#[allow(clippy::too_many_arguments)]
+pub fn build_range(
+    sel: KernelSel,
+    codebooks: &[f32],
+    v: usize,
+    x: &[f32],
+    jn: usize,
+    m: usize,
+    nc: usize,
+    mb: usize,
+    j_lo: usize,
+    j_hi: usize,
+    out: &mut [f32],
+) -> u64 {
+    // nc is a power of two, so nc % 8 == 0 ⇔ nc >= 8.
+    let use_avx2 = sel.imp == KernelImpl::Avx2 && mb == 1 && (v == 4 || v == 8) && nc % 8 == 0;
+    #[cfg(target_arch = "x86_64")]
+    {
+        if use_avx2 {
+            // SAFETY: Avx2 is only selected when detected.
+            return unsafe {
+                if v == 4 {
+                    build_range_avx2_v4(codebooks, x, jn, m, nc, j_lo, j_hi, out)
+                } else {
+                    build_range_avx2_v8(codebooks, x, jn, m, nc, j_lo, j_hi, out)
+                }
+            };
+        }
+    }
+    let _ = use_avx2;
+    psumbook::build_range(codebooks, v, x, jn, m, nc, mb, j_lo, j_hi, out)
+}
+
+/// AVX2 single-column build, `v = 4`: 8 centroids per `__m256`, strided
+/// `vgatherdps` codebook loads, combined exactly like the scalar
+/// `c0·x0 + c1·x1 + c2·x2 + c3·x3` (left-associated adds, no FMA).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn build_range_avx2_v4(
+    codebooks: &[f32],
+    x: &[f32],
+    jn: usize,
+    m: usize,
+    nc: usize,
+    j_lo: usize,
+    j_hi: usize,
+    out: &mut [f32],
+) -> u64 {
+    use std::arch::x86_64::*;
+    const V: usize = 4;
+    debug_assert!(j_lo <= j_hi && j_hi <= jn);
+    debug_assert_eq!(x.len(), jn * V);
+    debug_assert_eq!(codebooks.len(), m * nc * V);
+    debug_assert_eq!(out.len(), (j_hi - j_lo) * m * nc);
+    debug_assert_eq!(nc % 8, 0);
+    let vidx = _mm256_setr_epi32(
+        0,
+        V as i32,
+        2 * V as i32,
+        3 * V as i32,
+        4 * V as i32,
+        5 * V as i32,
+        6 * V as i32,
+        7 * V as i32,
+    );
+    for j in j_lo..j_hi {
+        let xj = &x[j * V..(j + 1) * V];
+        let (x0, x1, x2, x3) = (
+            _mm256_set1_ps(xj[0]),
+            _mm256_set1_ps(xj[1]),
+            _mm256_set1_ps(xj[2]),
+            _mm256_set1_ps(xj[3]),
+        );
+        let jo = j - j_lo;
+        for c in 0..m {
+            let cbp = codebooks.as_ptr().add(c * nc * V);
+            let op = out.as_mut_ptr().add((jo * m + c) * nc);
+            let mut i = 0usize;
+            while i < nc {
+                // g_t[l] = cb[(i+l)*V + t] — component t of 8 centroids.
+                let base = cbp.add(i * V);
+                let g0 = _mm256_i32gather_ps::<4>(base, vidx);
+                let g1 = _mm256_i32gather_ps::<4>(base.add(1), vidx);
+                let g2 = _mm256_i32gather_ps::<4>(base.add(2), vidx);
+                let g3 = _mm256_i32gather_ps::<4>(base.add(3), vidx);
+                let mut t = _mm256_add_ps(_mm256_mul_ps(g0, x0), _mm256_mul_ps(g1, x1));
+                t = _mm256_add_ps(t, _mm256_mul_ps(g2, x2));
+                t = _mm256_add_ps(t, _mm256_mul_ps(g3, x3));
+                _mm256_storeu_ps(op.add(i), t);
+                i += 8;
+            }
+        }
+    }
+    ((j_hi - j_lo) * m * nc * V) as u64
+}
+
+/// AVX2 single-column build, `v = 8`: as `v = 4` but with the scalar
+/// path's two 4-term halves summed at the end (`(a) + (b)`), preserving
+/// its association exactly.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn build_range_avx2_v8(
+    codebooks: &[f32],
+    x: &[f32],
+    jn: usize,
+    m: usize,
+    nc: usize,
+    j_lo: usize,
+    j_hi: usize,
+    out: &mut [f32],
+) -> u64 {
+    use std::arch::x86_64::*;
+    const V: usize = 8;
+    debug_assert!(j_lo <= j_hi && j_hi <= jn);
+    debug_assert_eq!(x.len(), jn * V);
+    debug_assert_eq!(codebooks.len(), m * nc * V);
+    debug_assert_eq!(out.len(), (j_hi - j_lo) * m * nc);
+    debug_assert_eq!(nc % 8, 0);
+    let vidx = _mm256_setr_epi32(
+        0,
+        V as i32,
+        2 * V as i32,
+        3 * V as i32,
+        4 * V as i32,
+        5 * V as i32,
+        6 * V as i32,
+        7 * V as i32,
+    );
+    for j in j_lo..j_hi {
+        let xj = &x[j * V..(j + 1) * V];
+        let xb: [_; 8] = [
+            _mm256_set1_ps(xj[0]),
+            _mm256_set1_ps(xj[1]),
+            _mm256_set1_ps(xj[2]),
+            _mm256_set1_ps(xj[3]),
+            _mm256_set1_ps(xj[4]),
+            _mm256_set1_ps(xj[5]),
+            _mm256_set1_ps(xj[6]),
+            _mm256_set1_ps(xj[7]),
+        ];
+        let jo = j - j_lo;
+        for c in 0..m {
+            let cbp = codebooks.as_ptr().add(c * nc * V);
+            let op = out.as_mut_ptr().add((jo * m + c) * nc);
+            let mut i = 0usize;
+            while i < nc {
+                let base = cbp.add(i * V);
+                let g = |t: usize| _mm256_i32gather_ps::<4>(base.add(t), vidx);
+                let mut a = _mm256_add_ps(_mm256_mul_ps(g(0), xb[0]), _mm256_mul_ps(g(1), xb[1]));
+                a = _mm256_add_ps(a, _mm256_mul_ps(g(2), xb[2]));
+                a = _mm256_add_ps(a, _mm256_mul_ps(g(3), xb[3]));
+                let mut b = _mm256_add_ps(_mm256_mul_ps(g(4), xb[4]), _mm256_mul_ps(g(5), xb[5]));
+                b = _mm256_add_ps(b, _mm256_mul_ps(g(6), xb[6]));
+                b = _mm256_add_ps(b, _mm256_mul_ps(g(7), xb[7]));
+                _mm256_storeu_ps(op.add(i), _mm256_add_ps(a, b));
+                i += 8;
+            }
+        }
+    }
+    ((j_hi - j_lo) * m * nc * V) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn resolve_scalar_and_lane_interactions() {
+        let cfg = |imp: KernelImpl, lanes: usize| KernelConfig {
+            kernel_impl: imp,
+            simd_lanes: lanes,
+            ..KernelConfig::default()
+        };
+        // Scalar always collapses to 1 lane.
+        let s = resolve_with(&cfg(KernelImpl::Scalar, 16), None);
+        assert_eq!(s, KernelSel { imp: KernelImpl::Scalar, lanes: 1 });
+        // One lane forces scalar regardless of impl.
+        let s = resolve_with(&cfg(KernelImpl::Unrolled, 1), None);
+        assert_eq!(s, KernelSel { imp: KernelImpl::Scalar, lanes: 1 });
+        // Unrolled keeps the configured lane width.
+        let s = resolve_with(&cfg(KernelImpl::Unrolled, 16), None);
+        assert_eq!(s, KernelSel { imp: KernelImpl::Unrolled, lanes: 16 });
+        // Env override wins over config.
+        let s = resolve_with(&cfg(KernelImpl::Unrolled, 8), Some(KernelImpl::Scalar));
+        assert_eq!(s, KernelSel { imp: KernelImpl::Scalar, lanes: 1 });
+        // Auto / Avx2 resolve to a concrete impl matching the host.
+        for imp in [KernelImpl::Auto, KernelImpl::Avx2] {
+            let s = resolve_with(&cfg(imp, 0), None);
+            if avx2_available() {
+                assert_eq!(s, KernelSel { imp: KernelImpl::Avx2, lanes: 8 });
+            } else {
+                assert_eq!(s, KernelSel { imp: KernelImpl::Unrolled, lanes: 8 });
+            }
+        }
+    }
+
+    /// Synthetic gather case: random codes/scales/book entries (the
+    /// gather only reads the book, so its contents need not be a real
+    /// build).
+    struct Case {
+        ctx_m: usize,
+        v: usize,
+        g: usize,
+        gpr: usize,
+        jn: usize,
+        n: usize,
+        nc: usize,
+        scales: Vec<f32>,
+        codes: Vec<u8>,
+        data: Vec<f32>,
+    }
+
+    fn mk_case(n: usize, jn: usize, jn_tile: usize, m: usize, nc: usize, v: usize, mb: usize) -> Case {
+        let k = jn * v;
+        let g = k / 2; // two scale groups per row
+        let gpr = k / g;
+        let mut rng = Prng::seeded(42);
+        let scales: Vec<f32> = rng.normal_vec(n * gpr, 1.0);
+        let codes: Vec<u8> =
+            (0..n * jn * m).map(|i| (rng.normal_vec(1, 1.0)[0].abs() * i as f32) as u8 % nc as u8).collect();
+        let data = rng.normal_vec(jn_tile * m * nc * mb, 1.0);
+        Case { ctx_m: m, v, g, gpr, jn, n, nc, scales, codes, data }
+    }
+
+    fn ctx(c: &Case) -> GatherCtx<'_> {
+        GatherCtx {
+            m: c.ctx_m,
+            v: c.v,
+            g: c.g,
+            gpr: c.gpr,
+            jn: c.jn,
+            n: c.n,
+            nc: c.nc,
+            scales: &c.scales,
+        }
+    }
+
+    #[test]
+    fn lane_gathers_match_scalar_bitwise() {
+        // n=13 exercises the remainder path of every lane width.
+        let (n, jn, jn_tile, j0) = (13usize, 8usize, 4usize, 2usize);
+        let case = mk_case(n, jn, jn_tile, 2, 16, 4, 1);
+        let ctx = ctx(&case);
+        let mut y_ref = vec![0.1f32; n];
+        gather_b1_scalar(&ctx, &case.codes, &case.data, 0, n, j0, jn_tile, &mut y_ref);
+        let mut y8 = vec![0.1f32; n];
+        gather_b1_lanes::<u8, 8>(&ctx, &case.codes, &case.data, (0, n), j0, jn_tile, &mut y8);
+        assert_eq!(y8, y_ref);
+        let mut y16 = vec![0.1f32; n];
+        gather_b1_lanes::<u8, 16>(&ctx, &case.codes, &case.data, (0, n), j0, jn_tile, &mut y16);
+        assert_eq!(y16, y_ref);
+        #[cfg(target_arch = "x86_64")]
+        if avx2_available() {
+            let mut ya = vec![0.1f32; n];
+            let sel = KernelSel { imp: KernelImpl::Avx2, lanes: 8 };
+            let book = Psumbook { jn: jn_tile, m: 2, nc: 16, mb: 1, data: case.data.clone() };
+            gather_b1(sel, &ctx, &case.codes, &book, (0, n), j0, jn_tile, &mut ya);
+            assert_eq!(ya, y_ref);
+        }
+    }
+
+    #[test]
+    fn batched_gathers_match_scalar_bitwise() {
+        // mb=19 exercises both the 8-wide chunks and the remainder.
+        let (n, jn, jn_tile, j0, mb) = (5usize, 6usize, 6usize, 0usize, 19usize);
+        let case = mk_case(n, jn, jn_tile, 1, 8, 8, mb);
+        let ctx = ctx(&case);
+        let mut y_ref = vec![0.5f32; n * mb];
+        gather_mb_scalar(&ctx, &case.codes, &case.data, (0, n), j0, jn_tile, mb, &mut y_ref);
+        let mut y_ch = vec![0.5f32; n * mb];
+        gather_mb_chunked(&ctx, &case.codes, &case.data, (0, n), j0, jn_tile, mb, &mut y_ch);
+        assert_eq!(y_ch, y_ref);
+        #[cfg(target_arch = "x86_64")]
+        if avx2_available() {
+            let mut ya = vec![0.5f32; n * mb];
+            unsafe {
+                gather_mb_avx2(&ctx, &case.codes, &case.data, (0, n), j0, jn_tile, mb, &mut ya)
+            };
+            assert_eq!(ya, y_ref);
+        }
+    }
+
+    #[test]
+    fn avx2_build_matches_scalar_bitwise() {
+        if !avx2_available() {
+            return;
+        }
+        let sel = KernelSel { imp: KernelImpl::Avx2, lanes: 8 };
+        for (v, m, nc, jn) in [(4usize, 2usize, 8usize, 5usize), (8, 1, 16, 3), (4, 1, 256, 2)] {
+            let mut rng = Prng::seeded(9);
+            let codebooks = rng.normal_vec(m * nc * v, 1.0);
+            let x = rng.normal_vec(jn * v, 1.0);
+            let mut scalar = vec![f32::NAN; jn * m * nc];
+            let macs_s =
+                psumbook::build_range(&codebooks, v, &x, jn, m, nc, 1, 0, jn, &mut scalar);
+            let mut simd = vec![f32::NAN; jn * m * nc];
+            let macs_v = build_range(sel, &codebooks, v, &x, jn, m, nc, 1, 0, jn, &mut simd);
+            assert_eq!(macs_v, macs_s);
+            assert_eq!(simd, scalar, "v={v} m={m} nc={nc}");
+            // Split ranges write identical slices.
+            let stride = m * nc;
+            let mut split = vec![f32::NAN; jn * m * nc];
+            let (lo, hi) = split.split_at_mut(stride);
+            build_range(sel, &codebooks, v, &x, jn, m, nc, 1, 0, 1, lo);
+            build_range(sel, &codebooks, v, &x, jn, m, nc, 1, 1, jn, hi);
+            assert_eq!(split, scalar);
+        }
+    }
+
+    #[test]
+    fn small_nc_build_falls_back_to_scalar() {
+        // nc=4 (< one AVX2 chunk) must route to the scalar build even
+        // when Avx2 is selected.
+        let sel = KernelSel { imp: KernelImpl::Avx2, lanes: 8 };
+        let (v, m, nc, jn) = (4usize, 1usize, 4usize, 3usize);
+        let mut rng = Prng::seeded(10);
+        let codebooks = rng.normal_vec(m * nc * v, 1.0);
+        let x = rng.normal_vec(jn * v, 1.0);
+        let mut a = vec![0f32; jn * m * nc];
+        let mut b = vec![0f32; jn * m * nc];
+        build_range(sel, &codebooks, v, &x, jn, m, nc, 1, 0, jn, &mut a);
+        psumbook::build_range(&codebooks, v, &x, jn, m, nc, 1, 0, jn, &mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -15,7 +15,7 @@
 
 use codegemm::bench::harness::{run_bench, BenchOptions};
 use codegemm::bench::tables::{self, EvalContext};
-use codegemm::config::{ModelConfig, ParallelConfig, QuantConfig, ServeConfig};
+use codegemm::config::{KernelConfig, KernelImpl, ModelConfig, ParallelConfig, QuantConfig, ServeConfig};
 use codegemm::coordinator::{DecodeBackend, NativeBackend, PjrtBackend, Request, Server};
 use codegemm::gemm::{CodeGemmEngine, DenseEngine, DequantEngine, GemmEngine};
 use codegemm::model::{EngineKind, ModelWeights};
@@ -47,7 +47,8 @@ fn usage() -> String {
          USAGE: codegemm <subcommand> [options]\n\n\
          SUBCOMMANDS:\n  \
            tables    --table <1..10|fig4a|fig4b|fig5|all> [--artifacts DIR]\n  \
-           serve     [--artifacts DIR] [--backend pjrt|native] [--requests N] [--batch N] [--threads N]\n  \
+           serve     [--artifacts DIR] [--backend pjrt|native] [--requests N] [--batch N] [--threads N]\n              \
+                     [--kernel-impl auto|scalar|unrolled|avx2] [--simd-lanes 0|1|8|16] [--pipeline-tiles on|off]\n  \
            bench-serve [--workload chat|rag|longform|bursty|mixed] [--seed N] [--requests N]\n              \
                      [--out BENCH_6.json] [--baseline PREV.json] [--threshold 0.2] [--advisory]\n  \
            quantize  --config m1v4g128 [--n 512] [--k 512]\n  \
@@ -119,6 +120,21 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             "fused-projections",
             Some("on"),
             "fuse Q/K/V and gate/up around one Psumbook build per k-tile (on|off)",
+        )
+        .opt(
+            "kernel-impl",
+            Some("auto"),
+            "CodeGEMM kernel: auto (AVX2 when the CPU has it) | scalar | unrolled | avx2",
+        )
+        .opt(
+            "simd-lanes",
+            Some("0"),
+            "gather/build lane width: 0 = auto, 1 = scalar, 8 or 16 unrolled lanes",
+        )
+        .opt(
+            "pipeline-tiles",
+            Some("on"),
+            "overlap the next k-tile's Psumbook build with the current tile's gather (on|off)",
         );
     let m = cmd.parse(args)?;
     let artifacts = Path::new(m.str("artifacts")?);
@@ -130,6 +146,21 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         "on" | "true" | "1" => true,
         "off" | "false" | "0" => false,
         other => anyhow::bail!("--fused-projections expects on|off, got '{other}'"),
+    };
+    let impl_arg = m.str("kernel-impl")?;
+    let kernel_impl = KernelImpl::parse(impl_arg).ok_or_else(|| {
+        anyhow::anyhow!("--kernel-impl expects auto|scalar|unrolled|avx2, got '{impl_arg}'")
+    })?;
+    let pipeline_tiles = match m.str("pipeline-tiles")? {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => anyhow::bail!("--pipeline-tiles expects on|off, got '{other}'"),
+    };
+    let kernel = KernelConfig {
+        kernel_impl,
+        simd_lanes: m.usize("simd-lanes")?,
+        pipeline_tiles,
+        ..KernelConfig::default()
     };
     let parallel = ParallelConfig {
         num_threads: m.usize("threads")?,
@@ -160,7 +191,10 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
                 anyhow::bail!("--backend pjrt requested but no artifacts at {}", artifacts.display());
             }
             let weights = load_or_random_weights(artifacts);
-            let kind = EngineKind::codegemm(QuantConfig::new(4, 1, 8, 32)?);
+            let kind = EngineKind::codegemm_with_kernel(QuantConfig::new(4, 1, 8, 32)?, kernel);
+            if let Some(sel) = kind.kernel_sel() {
+                println!("kernel:  {} ({} lanes)", sel.label(), sel.lanes);
+            }
             // Both branches honor the fused-projections toggle; the
             // worker pool is only spawned when the config actually
             // shards.

@@ -101,7 +101,24 @@ pub enum EngineKind {
 
 impl EngineKind {
     pub fn codegemm(cfg: QuantConfig) -> EngineKind {
-        EngineKind::CodeGemm { cfg, kernel: KernelConfig::default(), tune: TuneLevel::Calibrated }
+        EngineKind::codegemm_with_kernel(cfg, KernelConfig::default())
+    }
+
+    /// [`Self::codegemm`] with explicit kernel-dispatch knobs (the
+    /// `serve --kernel-impl/--simd-lanes` path).
+    pub fn codegemm_with_kernel(cfg: QuantConfig, kernel: KernelConfig) -> EngineKind {
+        EngineKind::CodeGemm { cfg, kernel, tune: TuneLevel::Calibrated }
+    }
+
+    /// The kernel selection engines of this kind will dispatch to,
+    /// resolved against the host CPU and the `CODEGEMM_KERNEL` override
+    /// — without building an engine (`resolve` reads only the config).
+    /// `None` for kinds with no CodeGEMM kernel layer.
+    pub fn kernel_sel(&self) -> Option<crate::gemm::KernelSel> {
+        match self {
+            EngineKind::CodeGemm { kernel, .. } => Some(crate::gemm::simd::resolve(kernel)),
+            _ => None,
+        }
     }
 
     pub fn label(&self) -> String {

@@ -10,6 +10,9 @@
 //! - headline gauges (floats): `decode_tok_s`, `ttft_p50_s`/`ttft_p99_s`,
 //!   `tpot_p50_s`/`tpot_p99_s`, `latency_p50_s`/`latency_p99_s`,
 //!   `queue_wait_p99_s`, `mean_batch`, `build_share_ops`
+//! - kernel dispatch gauges: `kernel_impl` (str) and `simd_lanes` (int)
+//!   — the resolved CodeGEMM kernel the run dispatched to (added within
+//!   schema v1; older artifacts lack them and parse as `""` / `0`)
 //! - counters (ints): `completed`, `rejected`, `infeasible`, `deferred`,
 //!   `kv_used_hwm_pages`, `kv_total_pages`
 //! - `phase_shares` — array of `{name, share}` step-phase attribution
@@ -68,6 +71,13 @@ pub struct BenchArtifact {
     /// Engine Psumbook build share by MACs (0 when the backend has no
     /// engine counters).
     pub build_share_ops: f64,
+    /// Resolved CodeGEMM kernel implementation label (`scalar` /
+    /// `unrolled` / `avx2`; `""` when the backend has no kernel layer or
+    /// the artifact predates the gauge).
+    pub kernel_impl: String,
+    /// Lane width of the resolved kernel (0 when absent, matching
+    /// `kernel_impl`).
+    pub simd_lanes: usize,
     pub kv_used_hwm_pages: usize,
     pub kv_total_pages: usize,
     pub slo_violations: Vec<String>,
@@ -119,6 +129,8 @@ impl BenchArtifact {
             deferred: report.deferred,
             phase_shares,
             build_share_ops: report.build_share_ops().unwrap_or(0.0),
+            kernel_impl: report.kernel.map(|k| k.label().to_string()).unwrap_or_default(),
+            simd_lanes: report.kernel.map(|k| k.lanes).unwrap_or(0),
             kv_used_hwm_pages: hwm,
             kv_total_pages: pages,
             slo_violations,
@@ -162,6 +174,8 @@ impl BenchArtifact {
                 ),
             ),
             ("build_share_ops", Json::Num(self.build_share_ops)),
+            ("kernel_impl", Json::from(self.kernel_impl.as_str())),
+            ("simd_lanes", Json::from(self.simd_lanes)),
             ("kv_used_hwm_pages", Json::from(self.kv_used_hwm_pages)),
             ("kv_total_pages", Json::from(self.kv_total_pages)),
             (
@@ -215,6 +229,14 @@ impl BenchArtifact {
             deferred: j.req_usize("deferred")? as u64,
             phase_shares,
             build_share_ops: j.req_f64("build_share_ops")?,
+            // Kernel gauges arrived within schema v1 — older artifacts
+            // (e.g. the committed BENCH baselines) simply lack them.
+            kernel_impl: j
+                .get("kernel_impl")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            simd_lanes: j.opt_usize("simd_lanes", 0)?,
             kv_used_hwm_pages: j.req_usize("kv_used_hwm_pages")?,
             kv_total_pages: j.req_usize("kv_total_pages")?,
             slo_violations,
@@ -317,6 +339,8 @@ mod tests {
             deferred: 1,
             phase_shares: vec![("model/gemm".into(), 0.6), ("model/attention".into(), 0.4)],
             build_share_ops: 0.25,
+            kernel_impl: "unrolled".into(),
+            simd_lanes: 8,
             kv_used_hwm_pages: 5,
             kv_total_pages: 8,
             slo_violations: vec![],
@@ -338,7 +362,24 @@ mod tests {
         assert_eq!(b.seed, 7);
         assert_eq!(b.decode_tok_s, 100.0);
         assert_eq!(b.phase_shares, a.phase_shares);
+        assert_eq!(b.kernel_impl, "unrolled");
+        assert_eq!(b.simd_lanes, 8);
         assert_eq!(b.structural_trace(), vec!["1:4:8:length".to_string()]);
+    }
+
+    #[test]
+    fn artifacts_without_kernel_gauges_still_parse() {
+        // Committed baselines predate the kernel dispatch gauges; they
+        // must load with the documented "" / 0 defaults.
+        let mut j = artifact(50.0).to_json();
+        if let Json::Obj(o) = &mut j {
+            o.remove("kernel_impl");
+            o.remove("simd_lanes");
+        }
+        let b = BenchArtifact::from_json(&j).unwrap();
+        assert_eq!(b.kernel_impl, "");
+        assert_eq!(b.simd_lanes, 0);
+        assert_eq!(b.decode_tok_s, 50.0);
     }
 
     #[test]

@@ -26,19 +26,37 @@
 //! as usual. [`shared_book_fan_out`] is the single-member case used by
 //! `ShardedEngine`; `gemm::GemmGroup` drives the multi-member form.
 //!
+//! ## Software-pipelined k-tiles
+//!
+//! With `KernelConfig::pipeline_tiles` on (the default), the per-tile
+//! build barrier disappears from the steady state: tile `t+1`'s book is
+//! built **inside the same pool scope** as tile `t`'s shard × member
+//! gather, writing the *other* buffer of a double-buffered book pair
+//! (`EngineScratch::book` / `book2`, swapped every tile). Only tile 0
+//! pays a dedicated build barrier (the prologue); every later build
+//! rides the gather barrier, keeping build latency off the critical
+//! path — one pipeline stage deep, exactly the overlap the GPU kernel
+//! gets from issuing the next tile's table build while warps gather the
+//! current one. Outputs are bit-exact either way (each tile's book is
+//! built by the same [`crate::gemm::simd::build_range`] calls, only
+//! earlier), and build MACs are still counted exactly once per tile at
+//! staging time. Timing attribution shifts: `build_seconds` covers the
+//! prologue build only, while the overlapped scopes land in
+//! `read_seconds` — the split measures the *exposed* (non-overlapped)
+//! build cost, which is the pipeline's whole point.
+//!
 //! Cost model caveat: unlike the private schedule's single rendezvous
-//! per call, the shared schedule synchronizes the pool per k-tile (a
-//! build barrier when the tile is wide enough to split, plus a gather
-//! barrier) and boxes fresh scoped jobs for each — the float buffers
-//! stay allocation-free after warmup, the job dispatch does not. The
+//! per call, the shared schedule still synchronizes the pool once per
+//! k-tile and boxes fresh scoped jobs for each — the float buffers stay
+//! allocation-free after warmup, the job dispatch does not. The
 //! build-MAC savings must outweigh that dispatch; the scaling bench's
-//! shared-vs-private matrix measures exactly this trade, and pipelining
-//! tile `t+1`'s build under tile `t`'s gather is the ROADMAP next step.
+//! shared-vs-private matrix measures exactly this trade.
 
 use super::plan::ShardPlan;
 use super::reduce;
-use crate::gemm::psumbook::{self, Psumbook};
+use crate::gemm::psumbook::Psumbook;
 use crate::gemm::scratch::grow_slice;
+use crate::gemm::simd;
 use crate::gemm::tiling::Tiles;
 use crate::gemm::{CodeGemmEngine, Counters, EngineScratch, GemmEngine};
 use crate::util::threadpool::{ScopedJob, ThreadPool};
@@ -193,7 +211,7 @@ pub(crate) fn shared_book_fan_out_multi<E: GemmEngine + Send + Sync>(
             .collect::<Vec<_>>()
     ));
     let total_shards: usize = members.iter().map(|m| m.engines.len()).sum();
-    let EngineScratch { counters, buf, buf2, book, children } = scratch;
+    let EngineScratch { counters, buf, buf2, book, book2, children } = scratch;
     if children.len() < total_shards {
         children.resize_with(total_shards, EngineScratch::new);
     }
@@ -202,7 +220,7 @@ pub(crate) fn shared_book_fan_out_multi<E: GemmEngine + Send + Sync>(
         // Decode path: every (member, shard) job writes a true sub-slice
         // of its member's caller-owned output.
         let mut blocks: Vec<&mut [f32]> = dests.iter_mut().map(|d| &mut **d).collect();
-        shared_book_tiles(pool, members, x, 1, &mut blocks, buf, book, children, counters);
+        shared_book_tiles(pool, members, x, 1, &mut blocks, buf, book, book2, children, counters);
     } else {
         // Batched path: stage per-member blocks back-to-back in reused
         // staging and scatter each member once at the end.
@@ -215,7 +233,9 @@ pub(crate) fn shared_book_fan_out_multi<E: GemmEngine + Send + Sync>(
             blocks.push(block);
             rest = tail;
         }
-        shared_book_tiles(pool, members, x, m_batch, &mut blocks, buf, book, children, counters);
+        shared_book_tiles(
+            pool, members, x, m_batch, &mut blocks, buf, book, book2, children, counters,
+        );
         for ((member, block), dest) in members.iter().zip(&blocks).zip(dests.iter_mut()) {
             reduce::scatter_row_shards(&**block, member.plan, m_batch, dest);
         }
@@ -230,11 +250,77 @@ pub(crate) fn shared_book_fan_out_multi<E: GemmEngine + Send + Sync>(
     merge_children_into(counters, children);
 }
 
+/// Append one scoped job per j-range of the phase-1 parallel book build
+/// (a single job when the tile is too narrow to split — still a win
+/// under the pipeline, where it overlaps the previous tile's gather).
+/// `book` must already be reshaped for the tile (via `prepare_tile`);
+/// each job writes its disjoint slice of the book's storage through the
+/// engine's resolved SIMD build kernel.
+fn append_build_jobs<'env>(
+    jobs: &mut Vec<ScopedJob<'env>>,
+    pool_size: usize,
+    e0: &'env CodeGemmEngine,
+    x_tile: &'env [f32],
+    book: &'env mut Psumbook,
+) {
+    let (jn_tile, m, nc, mb) = (book.jn, book.m, book.nc, book.mb);
+    let v = e0.quant_config().v;
+    let sel = e0.kernel_sel();
+    let codebooks = e0.codebooks();
+    let build_plan = ShardPlan::new(jn_tile, pool_size, MIN_BUILD_VECS, 1);
+    let stride = m * nc * mb;
+    let mut rest: &mut [f32] = book.data.as_mut_slice();
+    for &(j0, j1) in &build_plan.shards {
+        let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((j1 - j0) * stride);
+        rest = tail;
+        jobs.push(Box::new(move || {
+            simd::build_range(sel, codebooks, v, x_tile, jn_tile, m, nc, mb, j0, j1, chunk);
+        }));
+    }
+}
+
+/// Append the phase-2 shard × member gather jobs for the k-tile starting
+/// at column `c0`, each reading `book` read-only into its disjoint block
+/// of its member's dest and counting into its own child scratch.
+#[allow(clippy::too_many_arguments)]
+fn append_gather_jobs<'env, 'b, E: GemmEngine + Send + Sync>(
+    jobs: &mut Vec<ScopedJob<'env>>,
+    members: &'env [GroupMemberRef<'env, E>],
+    book: &'env Psumbook,
+    c0: usize,
+    m_batch: usize,
+    dest_blocks: &'env mut [&'b mut [f32]],
+    children: &'env mut [EngineScratch],
+) {
+    let mut child_iter = children.iter_mut();
+    for (member, block) in members.iter().zip(dest_blocks.iter_mut()) {
+        let mut rest: &mut [f32] = &mut **block;
+        for (e, &(r0, r1)) in member.engines.iter().zip(&member.plan.shards) {
+            let child = child_iter.next().expect("one child scratch per shard");
+            let e = e.as_codegemm().expect("codegemm shard");
+            let (ys, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * m_batch);
+            rest = tail;
+            let gather_counters = &mut child.counters;
+            jobs.push(Box::new(move || e.gather_into(book, c0, m_batch, ys, gather_counters)));
+        }
+    }
+}
+
 /// The per-k-tile two-phase loop of [`shared_book_fan_out_multi`].
 /// `dest_blocks[i]` holds member `i`'s per-shard output blocks
 /// back-to-back in shard order (`shard_len(s) * m_batch` each) — the
 /// caller's own output slices on the single-column path, reused staging
 /// otherwise.
+///
+/// With `pipeline_tiles` on and more than one tile, the loop runs
+/// software-pipelined: tile 0's build is the prologue barrier, then each
+/// pool scope runs tile `t`'s gathers *and* tile `t+1`'s build jobs
+/// together, the build writing the spare book (`book2`) while the
+/// gathers read the current one; the two swap roles every tile. Build
+/// work is attributed once per tile at staging time either way, so
+/// counters are schedule-independent; `build_seconds` holds only the
+/// exposed (prologue) build time under the pipeline, the overlapped
+/// scopes landing in `read_seconds`.
 #[allow(clippy::too_many_arguments)]
 fn shared_book_tiles<E: GemmEngine + Send + Sync>(
     pool: &ThreadPool,
@@ -244,12 +330,11 @@ fn shared_book_tiles<E: GemmEngine + Send + Sync>(
     dest_blocks: &mut [&mut [f32]],
     buf: &mut Vec<f32>,
     book: &mut Psumbook,
+    book2: &mut Psumbook,
     children: &mut [EngineScratch],
     counters: &mut Counters,
 ) {
     let e0 = members[0].engines[0].as_codegemm().expect("codegemm shard");
-    let cfg = e0.quant_config();
-    let (v, m, nc) = (cfg.v, cfg.m, cfg.n_centroids());
     let k = e0.dims().1;
     let tile_w = e0.kernel_config().tile_w;
     // Gathers accumulate across k-tiles: zero once up front.
@@ -259,57 +344,73 @@ fn shared_book_tiles<E: GemmEngine + Send + Sync>(
     }
     let total_shards: usize = members.iter().map(|m| m.engines.len()).sum();
     debug_assert_eq!(children.len(), total_shards);
-    for (c0, c1) in Tiles::new(k, tile_w) {
-        let jn_tile = (c1 - c0) / v;
-        // Phase 1: build one shared book for this k-tile, fanned out by
-        // j-ranges (disjoint slices of the book's storage) over the pool.
+    let tiles: Vec<(usize, usize)> = Tiles::new(k, tile_w).collect();
+    let pipelined = e0.kernel_config().pipeline_tiles && tiles.len() > 1;
+
+    if !pipelined {
+        for &(c0, c1) in &tiles {
+            // Phase 1: build one shared book for this k-tile, fanned out
+            // by j-ranges (disjoint slices of the book's storage).
+            let t = Timer::start();
+            let x_tile: &[f32] = e0.prepare_tile(x, m_batch, c0, c1, book, buf);
+            // Build work is attributed ONCE per logical call, independent
+            // of the shard count and the member count — the amortization
+            // `build_share_*` / `group_fanout` price. `count_build` is
+            // the same accounting the serial engine uses, so the shared-
+            // vs-private and fused-vs-independent comparisons cannot
+            // drift.
+            e0.count_build(book, counters);
+            let mut jobs: Vec<ScopedJob> = Vec::new();
+            append_build_jobs(&mut jobs, pool.size(), e0, x_tile, book);
+            pool.scope_run(jobs);
+            counters.build_seconds += t.elapsed_s();
+
+            // Phase 2: the shard × member matrix gathers read-only from
+            // the shared book, each job into its disjoint block of its
+            // member's dest.
+            let t = Timer::start();
+            let mut jobs: Vec<ScopedJob> = Vec::with_capacity(total_shards);
+            append_gather_jobs(&mut jobs, members, book, c0, m_batch, dest_blocks, children);
+            pool.scope_run(jobs);
+            counters.read_seconds += t.elapsed_s();
+        }
+        return;
+    }
+
+    // Pipelined schedule. Prologue: tile 0's build is the only exposed
+    // build barrier.
+    {
+        let (c0, c1) = tiles[0];
         let t = Timer::start();
         let x_tile: &[f32] = e0.prepare_tile(x, m_batch, c0, c1, book, buf);
-        let build_plan = ShardPlan::new(jn_tile, pool.size(), MIN_BUILD_VECS, 1);
-        if build_plan.is_serial() {
-            book.build(e0.codebooks(), v, x_tile);
-        } else {
-            let stride = m * nc * m_batch;
-            let codebooks = e0.codebooks();
-            let mut jobs: Vec<ScopedJob> = Vec::with_capacity(build_plan.num_shards());
-            let mut rest: &mut [f32] = book.data.as_mut_slice();
-            for &(j0, j1) in &build_plan.shards {
-                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((j1 - j0) * stride);
-                rest = tail;
-                jobs.push(Box::new(move || {
-                    psumbook::build_range(codebooks, v, x_tile, jn_tile, m, nc, m_batch, j0, j1, chunk);
-                }));
-            }
-            pool.scope_run(jobs);
-        }
-        counters.build_seconds += t.elapsed_s();
-        // Build work is attributed ONCE per logical call, independent of
-        // the shard count and the member count — the amortization
-        // `build_share_*` / `group_fanout` price. `count_build` is the
-        // same accounting the serial engine uses, so the shared-vs-
-        // private and fused-vs-independent comparisons cannot drift.
         e0.count_build(book, counters);
-
-        // Phase 2: the shard × member matrix gathers read-only from the
-        // shared book, each job into its disjoint block of its member's
-        // dest.
+        let mut jobs: Vec<ScopedJob> = Vec::new();
+        append_build_jobs(&mut jobs, pool.size(), e0, x_tile, book);
+        pool.scope_run(jobs);
+        counters.build_seconds += t.elapsed_s();
+    }
+    // Steady state: one scope per tile runs tile t's gathers against
+    // `cur` together with tile t+1's build into `nxt`. The scope's
+    // barrier makes the freshly built book safe to gather from next
+    // iteration, when the buffers swap. The single staging `buf` is safe
+    // to re-stage each iteration: tile t's activations were only read by
+    // its *build*, which completed at the previous barrier — gathers
+    // read the book, never the staging.
+    let mut cur: &mut Psumbook = book;
+    let mut nxt: &mut Psumbook = book2;
+    for ti in 0..tiles.len() {
+        let (c0, _) = tiles[ti];
         let t = Timer::start();
-        let book_ref: &Psumbook = book;
-        let mut jobs: Vec<ScopedJob> = Vec::with_capacity(total_shards);
-        let mut child_iter = children.iter_mut();
-        for (member, block) in members.iter().zip(dest_blocks.iter_mut()) {
-            let mut rest: &mut [f32] = &mut **block;
-            for (e, &(r0, r1)) in member.engines.iter().zip(&member.plan.shards) {
-                let child = child_iter.next().expect("one child scratch per shard");
-                let e = e.as_codegemm().expect("codegemm shard");
-                let (ys, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * m_batch);
-                rest = tail;
-                let gather_counters = &mut child.counters;
-                jobs.push(Box::new(move || e.gather_into(book_ref, c0, m_batch, ys, gather_counters)));
-            }
+        let mut jobs: Vec<ScopedJob> = Vec::with_capacity(total_shards + pool.size());
+        append_gather_jobs(&mut jobs, members, &*cur, c0, m_batch, dest_blocks, children);
+        if let Some(&(n0, n1)) = tiles.get(ti + 1) {
+            let x_next: &[f32] = e0.prepare_tile(x, m_batch, n0, n1, nxt, buf);
+            e0.count_build(nxt, counters);
+            append_build_jobs(&mut jobs, pool.size(), e0, x_next, &mut *nxt);
         }
         pool.scope_run(jobs);
         counters.read_seconds += t.elapsed_s();
+        std::mem::swap(&mut cur, &mut nxt);
     }
 }
 
@@ -407,11 +508,11 @@ mod tests {
         let q = Quantizer::new(QuantConfig::parse_label("m1v8g32").unwrap()).quantize(&w, n, k);
         let a = CodeGemmEngine::with_kernel(
             &shard::slice_rows(&q, 0, 8),
-            crate::config::KernelConfig { tile_w: 32, tile_h: 8 },
+            crate::config::KernelConfig { tile_w: 32, tile_h: 8, ..Default::default() },
         );
         let b = CodeGemmEngine::with_kernel(
             &shard::slice_rows(&q, 8, 16),
-            crate::config::KernelConfig { tile_w: 16, tile_h: 8 },
+            crate::config::KernelConfig { tile_w: 16, tile_h: 8, ..Default::default() },
         );
         assert!(shared_book_compatible(&[&a, &a]));
         assert!(!shared_book_compatible(&[&a, &b]), "mismatched tile_w must not share");

@@ -231,7 +231,7 @@ fn mismatched_tile_geometry_refuses_shared_book_but_stays_correct() {
         .iter()
         .enumerate()
         .map(|(i, &(r0, r1))| {
-            let kernel = KernelConfig { tile_w: if i == 0 { 32 } else { 16 }, tile_h: 8 };
+            let kernel = KernelConfig { tile_w: if i == 0 { 32 } else { 16 }, tile_h: 8, ..Default::default() };
             CodeGemmEngine::with_kernel(&shard::slice_rows_unpacked(&q, &codes, r0, r1), kernel)
         })
         .collect();
@@ -250,7 +250,7 @@ fn mismatched_tile_geometry_refuses_shared_book_but_stays_correct() {
     // Same layer, same *requested* (misaligned) tile_w=20 for every
     // shard: align_tile_w rounds each to 16, the k-tiles line up, and
     // the shared path engages.
-    let kernel = KernelConfig { tile_w: 20, tile_h: 8 };
+    let kernel = KernelConfig { tile_w: 20, tile_h: 8, ..Default::default() };
     let uniform = sharded(&q, plan, Arc::clone(&pool), kernel, true);
     assert!(uniform.shards().iter().all(|e| e.kernel_config().tile_w == 16));
     assert!(uniform.uses_shared_book(), "aligned uniform shards must share");

@@ -1,0 +1,210 @@
+//! Property suite for the SIMD kernel layer and the software-pipelined
+//! shared-book schedule (via the reusable `util::proptest` generators):
+//!
+//! - every kernel variant (scalar, unrolled 8/16-lane, AVX2 when the
+//!   host has it, auto) is **bit-exact** (`==`) against the scalar
+//!   reference across v ∈ {4, 8} × b ∈ {1, 2, 4} × m_batch ∈ {1, 4, 64}
+//!   — lanes are independent accumulators, so no float reassociation;
+//! - the pipelined shared-book schedule (`pipeline_tiles`) produces
+//!   bit-identical outputs to the unpipelined one through a deliberately
+//!   dirty, reused scratch, and the warm double-buffered scratch
+//!   (including the spare `book2`) never grows;
+//! - build MACs / read ops / lookups are schedule-independent: the
+//!   pipeline counts each tile's build exactly once at staging time.
+//!
+//! The compared engines always share one pinned `tile_w` (a multiple of
+//! every lane width), so `align_tile_w` resolves identically for every
+//! variant and the k-tiling — hence the per-accumulator op order — is
+//! the same everywhere. `CODEGEMM_KERNEL` may override the impl choice
+//! process-wide (the CI matrix legs do this); the equalities here hold
+//! under any override since they pin geometry, not implementation.
+
+use codegemm::config::{KernelConfig, KernelImpl, QuantConfig};
+use codegemm::gemm::{CodeGemmEngine, EngineScratch, GemmEngine};
+use codegemm::parallel::{shard, ShardPlan, ShardedEngine};
+use codegemm::quant::{QuantizedLinear, Quantizer};
+use codegemm::util::proptest as pt;
+use codegemm::util::prng::Prng;
+use codegemm::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+/// The SIMD sweep the issue pins: small codebooks stress the gather
+/// indexing, M=64 stresses the batched lane path. `k_unit = 32` keeps
+/// every drawn `k` a multiple of the widest lane group, so a pinned
+/// `tile_w` aligns identically for every lane count.
+fn gen_case() -> pt::GemmCaseGen {
+    pt::GemmCaseGen {
+        vs: &[4, 8],
+        bs: &[1, 2, 4],
+        mbs: &[1, 4, 64],
+        max_shards: 6,
+        ..Default::default()
+    }
+}
+
+/// Kernel variants under test, as (requested impl, requested lanes).
+/// `resolve` may downgrade (Avx2 on a non-AVX2 host runs unrolled;
+/// `CODEGEMM_KERNEL` overrides all of them) — bit-exactness must hold
+/// regardless of what each request resolves to.
+const VARIANTS: &[(KernelImpl, usize)] = &[
+    (KernelImpl::Unrolled, 8),
+    (KernelImpl::Unrolled, 16),
+    (KernelImpl::Avx2, 8),
+    (KernelImpl::Auto, 0),
+];
+
+fn kernel(imp: KernelImpl, lanes: usize, pipeline: bool) -> KernelConfig {
+    KernelConfig {
+        tile_w: 64,
+        tile_h: 8,
+        kernel_impl: imp,
+        simd_lanes: lanes,
+        pipeline_tiles: pipeline,
+    }
+}
+
+fn quantize(n: usize, k: usize, label: &str, seed: u64) -> QuantizedLinear {
+    let w = Prng::seeded(seed).normal_vec(n * k, 0.02);
+    Quantizer::new(QuantConfig::parse_label(label).unwrap()).quantize(&w, n, k)
+}
+
+/// Row-sharded CodeGEMM over `q` on the shared-book schedule.
+fn sharded(
+    q: &QuantizedLinear,
+    plan: ShardPlan,
+    pool: Arc<ThreadPool>,
+    kc: KernelConfig,
+) -> ShardedEngine<CodeGemmEngine> {
+    let codes = q.codes.unpack();
+    ShardedEngine::from_factory(plan, pool, |(r0, r1)| {
+        CodeGemmEngine::with_kernel(&shard::slice_rows_unpacked(q, &codes, r0, r1), kc)
+    })
+    .with_shared_book(true)
+}
+
+fn total_footprint(s: &EngineScratch) -> usize {
+    s.footprint_bytes() + s.children.iter().map(|c| c.footprint_bytes()).sum::<usize>()
+}
+
+#[test]
+fn prop_every_kernel_variant_is_bit_exact_vs_scalar() {
+    let cfg = pt::PropConfig { cases: 12, ..Default::default() };
+    pt::assert_prop("simd kernels == scalar, bitwise", cfg, &gen_case(), |c: &pt::GemmCase| {
+        let Some(q) = c.quantized(0.02) else {
+            return Ok(()); // invalid combination — vacuous
+        };
+        let x = c.activations(1);
+        let scalar_kc = kernel(KernelImpl::Scalar, 1, true);
+        let mut scalar = CodeGemmEngine::with_kernel(&q, scalar_kc);
+        let y_ref = scalar.gemm(&x, c.mb);
+        for &(imp, lanes) in VARIANTS {
+            let kc = kernel(imp, lanes, true);
+            let mut e = CodeGemmEngine::with_kernel(&q, kc);
+            // Identical k-tiling is the precondition for bit-exactness:
+            // the pinned tile_w must survive lane alignment unchanged.
+            pt::ensure(
+                e.kernel_config().tile_w == scalar.kernel_config().tile_w,
+                format!("tile_w diverged under lanes={lanes} ({c:?})"),
+            )?;
+            let y = e.gemm(&x, c.mb);
+            pt::ensure(
+                y == y_ref,
+                format!("{:?}/{} diverged from scalar ({c:?})", imp, lanes),
+            )?;
+            // Same work counted whatever the lane width: the kernels
+            // vectorize the op stream, they don't change it.
+            pt::ensure(
+                e.counters().read_ops == scalar.counters().read_ops
+                    && e.counters().build_ops == scalar.counters().build_ops,
+                format!("counters diverged under {:?}/{}", imp, lanes),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipelined_matches_unpipelined_with_dirty_scratch() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let cfg = pt::PropConfig { cases: 10, ..Default::default() };
+    // One scratch per schedule across every case: book/book2 reshape in
+    // place, staging is grow-only, children persist — no state may leak
+    // between geometries or schedules.
+    let cell = std::cell::RefCell::new((EngineScratch::new(), EngineScratch::new()));
+    pt::assert_prop(
+        "pipelined shared-book == unpipelined, bitwise",
+        cfg,
+        &gen_case(),
+        |c: &pt::GemmCase| {
+            let mut guard = cell.borrow_mut();
+            let (s_on, s_off) = &mut *guard;
+            let Some(q) = c.quantized(0.02) else {
+                return Ok(());
+            };
+            let x = c.activations(1);
+            // tile_w 32 with k up to 128 gives up to four k-tiles, so the
+            // steady-state overlap actually runs (one tile => prologue only).
+            let kc_on = KernelConfig { tile_w: 32, ..kernel(KernelImpl::Auto, 0, true) };
+            let kc_off = KernelConfig { pipeline_tiles: false, ..kc_on };
+            let plan = ShardPlan::new(c.n, c.shards, 1, 1);
+            let on = sharded(&q, plan.clone(), Arc::clone(&pool), kc_on);
+            let off = sharded(&q, plan, Arc::clone(&pool), kc_off);
+            let mut y_on = vec![f32::NAN; c.n * c.mb];
+            let mut y_off = vec![f32::NAN; c.n * c.mb];
+            on.gemm_into(&x, c.mb, &mut y_on, s_on);
+            off.gemm_into(&x, c.mb, &mut y_off, s_off);
+            pt::ensure(y_on == y_off, format!("pipeline diverged ({c:?})"))?;
+            // And both match the serial engine on the same k-tiling.
+            let mut serial = CodeGemmEngine::with_kernel(&q, kc_on);
+            pt::ensure(y_on == serial.gemm(&x, c.mb), format!("shared-book diverged ({c:?})"))?;
+            // Warm no-growth, double buffer included: a second identical
+            // call must leave the footprint (book + book2 + staging +
+            // children) untouched and stay bit-exact.
+            let fp = total_footprint(s_on);
+            y_on.fill(f32::NAN);
+            on.gemm_into(&x, c.mb, &mut y_on, s_on);
+            pt::ensure(y_on == y_off, "warm pipelined call diverged")?;
+            pt::ensure(
+                total_footprint(s_on) == fp,
+                format!("warm pipelined scratch grew: {} -> {}", fp, total_footprint(s_on)),
+            )
+        },
+    );
+}
+
+/// The pipeline shifts *when* builds run, never *how much* is counted:
+/// tile `t+1`'s build MACs are attributed at staging time, exactly once,
+/// so every conserved counter is schedule-independent. Only the timing
+/// split moves (`build_seconds` holds just the prologue under the
+/// pipeline; overlapped build time lands in `read_seconds`).
+#[test]
+fn pipeline_counts_build_once_and_conserves_counters() {
+    let pool = Arc::new(ThreadPool::new(4));
+    let q = quantize(64, 128, "m2v8g32", 11);
+    for mb in [1usize, 3] {
+        let x = Prng::seeded(12).normal_vec(128 * mb, 1.0);
+        let run = |pipeline: bool| {
+            let kc = KernelConfig { tile_w: 32, ..kernel(KernelImpl::Auto, 0, pipeline) };
+            let eng = sharded(&q, ShardPlan::new(64, 4, 1, 1), Arc::clone(&pool), kc);
+            assert!(eng.uses_shared_book());
+            let mut scratch = EngineScratch::new();
+            let mut y = vec![f32::NAN; 64 * mb];
+            eng.gemm_into(&x, mb, &mut y, &mut scratch);
+            (y, scratch)
+        };
+        let (y_on, s_on) = run(true);
+        let (y_off, s_off) = run(false);
+        assert_eq!(y_on, y_off, "mb={mb}");
+        let (on, off) = (&s_on.counters, &s_off.counters);
+        assert_eq!(on.build_ops, off.build_ops, "build MACs counted once per tile (mb={mb})");
+        assert_eq!(on.read_ops, off.read_ops, "gather work conserved (mb={mb})");
+        assert_eq!(on.lookups, off.lookups, "lookups conserved (mb={mb})");
+        assert_eq!(on.mac_flops, off.mac_flops, "total MACs conserved (mb={mb})");
+        assert_eq!(on.calls, 1);
+        assert_eq!(off.calls, 1);
+        // The pipeline's signature: the spare book materializes only on
+        // the pipelined schedule (128/32 = 4 tiles => steady state ran).
+        assert!(!s_on.book2.is_empty(), "pipelined run must use the spare book");
+        assert!(s_off.book2.is_empty(), "unpipelined run must leave book2 untouched");
+    }
+}
