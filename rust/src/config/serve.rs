@@ -4,8 +4,44 @@ use super::ParallelConfig;
 use crate::util::json::Json;
 use anyhow::{bail, Result};
 
+/// What the batcher does when admission would defer for lack of pool
+/// pages but a lower-priority slot is mid-decode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PreemptMode {
+    /// Never preempt: pure admission deferral (the pre-preemption
+    /// behavior).
+    Off,
+    /// Swap the victim's private pages to a host-side spill arena and
+    /// bulk-copy them back on resume (host memory for compute).
+    #[default]
+    Spill,
+    /// Drop the victim's pages and replay prompt + already-sampled
+    /// tokens through prefill on resume (compute for host memory).
+    Recompute,
+}
+
+impl PreemptMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PreemptMode::Off => "off",
+            PreemptMode::Spill => "spill",
+            PreemptMode::Recompute => "recompute",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<PreemptMode> {
+        match s {
+            "off" => Ok(PreemptMode::Off),
+            "spill" => Ok(PreemptMode::Spill),
+            "recompute" => Ok(PreemptMode::Recompute),
+            other => bail!("unknown preempt mode {other:?} (expected off|spill|recompute)"),
+        }
+    }
+}
+
 /// Paged KV-cache settings for the native backend (`kv` section): the
-/// page granularity of `kvcache::BlockPool` and the pool's total size.
+/// page granularity of `kvcache::BlockPool`, the pool's total size, and
+/// the multi-tenant policies (prefix sharing, preemption).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct KvConfig {
     /// Tokens per pool page — also the chunked attention kernel's tile
@@ -18,11 +54,22 @@ pub struct KvConfig {
     /// layout, not memory bounds. Set it lower to oversubscribe: the
     /// batcher then admits on free pages instead of free slots.
     pub pool_pages: usize,
+    /// Share full prompt-prefix pages across requests (hash-identified,
+    /// copy-on-write; `kvcache::prefix`). On by default — sharing is
+    /// bit-exact, so the only cost is the index bookkeeping.
+    pub prefix_cache: bool,
+    /// Preemption policy when the pool saturates (see [`PreemptMode`]).
+    pub preempt: PreemptMode,
 }
 
 impl Default for KvConfig {
     fn default() -> Self {
-        KvConfig { page_size: 16, pool_pages: 0 }
+        KvConfig {
+            page_size: 16,
+            pool_pages: 0,
+            prefix_cache: true,
+            preempt: PreemptMode::default(),
+        }
     }
 }
 
@@ -70,6 +117,8 @@ impl KvConfig {
         Json::obj(vec![
             ("page_size", Json::from(self.page_size)),
             ("pool_pages", Json::from(self.pool_pages)),
+            ("prefix_cache", Json::Bool(self.prefix_cache)),
+            ("preempt", Json::Str(self.preempt.as_str().to_string())),
         ])
     }
 
@@ -78,6 +127,16 @@ impl KvConfig {
         let cfg = KvConfig {
             page_size: j.opt_usize("page_size", d.page_size)?,
             pool_pages: j.opt_usize("pool_pages", d.pool_pages)?,
+            // Optional fields: absent ⇒ defaults (older configs parse
+            // unchanged).
+            prefix_cache: j
+                .get("prefix_cache")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(d.prefix_cache),
+            preempt: match j.get("preempt").and_then(|v| v.as_str()) {
+                Some(s) => PreemptMode::parse(s)?,
+                None => d.preempt,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -211,17 +270,28 @@ mod tests {
 
     #[test]
     fn kv_config_roundtrip_and_validation() {
-        let kv = KvConfig { page_size: 32, pool_pages: 100 };
+        let kv = KvConfig {
+            page_size: 32,
+            pool_pages: 100,
+            prefix_cache: false,
+            preempt: PreemptMode::Recompute,
+        };
         kv.validate().unwrap();
         let j = Json::parse(&kv.to_json().to_string_pretty()).unwrap();
         assert_eq!(KvConfig::from_json(&j).unwrap(), kv);
-        // Missing fields fall back to defaults.
+        // Missing fields fall back to defaults — configs written before
+        // prefix caching / preemption existed parse unchanged.
         let j = Json::parse(r#"{"page_size": 8}"#).unwrap();
         let c = KvConfig::from_json(&j).unwrap();
         assert_eq!(c.page_size, 8);
         assert_eq!(c.pool_pages, 0);
+        assert!(c.prefix_cache);
+        assert_eq!(c.preempt, PreemptMode::Spill);
         // page_size 0 is rejected.
         let bad = Json::parse(r#"{"page_size": 0}"#).unwrap();
+        assert!(KvConfig::from_json(&bad).is_err());
+        // Unknown preempt modes are rejected, not silently defaulted.
+        let bad = Json::parse(r#"{"preempt": "yolo"}"#).unwrap();
         assert!(KvConfig::from_json(&bad).is_err());
     }
 
@@ -231,18 +301,18 @@ mod tests {
     /// reach the pool math (divide-by-zero) even unvalidated.
     #[test]
     fn kv_rejects_degenerate_page_sizes_cleanly() {
-        let zero = KvConfig { page_size: 0, pool_pages: 0 };
+        let zero = KvConfig { page_size: 0, ..KvConfig::default() };
         let err = zero.validate().unwrap_err().to_string();
         assert!(err.contains("page_size"), "unhelpful error: {err}");
         // Unvalidated direct use must not divide by zero.
         assert!(zero.pool_pages_for(128, 4) >= 1);
 
-        let huge = KvConfig { page_size: KvConfig::MAX_PAGE_SIZE + 1, pool_pages: 0 };
+        let huge = KvConfig { page_size: KvConfig::MAX_PAGE_SIZE + 1, ..KvConfig::default() };
         assert!(huge.validate().is_err());
-        let max = KvConfig { page_size: KvConfig::MAX_PAGE_SIZE, pool_pages: 0 };
+        let max = KvConfig { page_size: KvConfig::MAX_PAGE_SIZE, ..KvConfig::default() };
         max.validate().unwrap();
         // pool_pages = 0 is the documented auto-sizing value, not an error.
-        KvConfig { page_size: 16, pool_pages: 0 }.validate().unwrap();
+        KvConfig { page_size: 16, pool_pages: 0, ..KvConfig::default() }.validate().unwrap();
     }
 
     /// A bad `kv` section must fail the whole `ServeConfig` parse (the
@@ -261,11 +331,11 @@ mod tests {
 
     #[test]
     fn kv_pool_auto_sizing() {
-        let kv = KvConfig { page_size: 16, pool_pages: 0 };
+        let kv = KvConfig { page_size: 16, pool_pages: 0, ..KvConfig::default() };
         // 4 slots × ceil(130/16) = 4 × 9.
         assert_eq!(kv.pool_pages_for(130, 4), 36);
         // Explicit pool size wins.
-        let kv = KvConfig { page_size: 16, pool_pages: 7 };
+        let kv = KvConfig { page_size: 16, pool_pages: 7, ..KvConfig::default() };
         assert_eq!(kv.pool_pages_for(130, 4), 7);
     }
 

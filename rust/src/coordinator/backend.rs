@@ -18,7 +18,7 @@
 
 use crate::config::{KvConfig, ParallelConfig};
 use crate::gemm::{Counters, KernelSel};
-use crate::kvcache::{BlockPool, KvStats, PagedKv, SeqKv};
+use crate::kvcache::{BlockPool, KvStats, PagedKv, SeqKv, SpilledKv};
 use crate::model::{EngineKind, LlamaModel, ModelWeights};
 use crate::runtime::ModelRuntime;
 use crate::util::threadpool::ThreadPool;
@@ -101,6 +101,49 @@ pub trait DecodeBackend: Send {
     fn reserve(&mut self, slot: usize, max_tokens: usize) {
         let _ = (slot, max_tokens);
     }
+    /// Prompt-aware admission gate: like [`Self::can_admit`], but a
+    /// prefix-caching backend discounts the pages the prompt can pin
+    /// from the index instead of allocating — so a request whose prompt
+    /// is mostly cached fits a pool a cold request would not. Default:
+    /// the prompt changes nothing.
+    fn can_admit_prompt(&self, prompt: &[usize], max_tokens: usize) -> bool {
+        let _ = prompt;
+        self.can_admit(max_tokens)
+    }
+    /// [`Self::reserve`] with prefix-cache pinning: pins the prompt's
+    /// cached full pages (plus a pre-claimed copy-on-write spare when the
+    /// sequence will write into a pinned page) and claims the rest.
+    /// Returns the number of prompt positions already served by pinned
+    /// pages — the caller starts prefill at that index instead of 0.
+    /// Default: plain reserve, nothing matched.
+    fn reserve_with_prefix(&mut self, slot: usize, prompt: &[usize], max_tokens: usize) -> usize {
+        let _ = prompt;
+        self.reserve(slot, max_tokens);
+        0
+    }
+    /// Register `slot`'s full prompt pages in the prefix index once its
+    /// prompt is completely prefilled (they are immutable from then on —
+    /// prompt positions are never rewritten). No-op default.
+    fn publish_prefix(&mut self, slot: usize, tokens: &[usize]) {
+        let _ = (slot, tokens);
+    }
+    /// Swap `slot`'s KV state out to host memory and release its pages
+    /// (preemption). `None` means the backend cannot spill — the batcher
+    /// falls back to recompute-from-prompt. The slot still needs
+    /// [`Self::reset_slot`] semantics afterwards only on the fallback
+    /// path; a successful spill leaves the slot empty.
+    fn spill(&mut self, slot: usize) -> Option<SpilledKv> {
+        let _ = slot;
+        None
+    }
+    /// Re-admit a spilled sequence into `slot`: claim its whole-lifetime
+    /// pages again (same `max_tokens` bound as admission) and bulk-copy
+    /// the spilled contents back. `false` (claiming nothing) when the
+    /// pool cannot hold it yet.
+    fn restore(&mut self, slot: usize, spill: &SpilledKv, max_tokens: usize) -> bool {
+        let _ = (slot, spill, max_tokens);
+        false
+    }
     /// KV-pool occupancy snapshot (`None` for backends without a pool).
     fn kv_stats(&self) -> Option<KvStats> {
         None
@@ -143,6 +186,26 @@ pub struct NativeBackend {
     /// Resolved kernel dispatch of the `EngineKind` the model was built
     /// with (`None` for non-CodeGEMM kinds) — fixed at construction.
     kernel: Option<KernelSel>,
+    /// Prefix sharing toggle (from `KvConfig::prefix_cache`).
+    prefix_cache: bool,
+}
+
+/// What admission's prefix consultation resolved for one prompt.
+#[derive(Clone, Copy, Debug, Default)]
+struct PrefixPlan {
+    /// Index pages to pin (head of the page table).
+    pin: usize,
+    /// How many of those are currently cached — pinning them shrinks the
+    /// allocatable set, so the admission gate subtracts them (a
+    /// conservative upper bound when the match is clamped).
+    cached_pins: usize,
+    /// Prompt positions the pins serve; prefill starts here. Capped at
+    /// `min(prompt, max_seq) - 1` so at least the final prompt position
+    /// is recomputed — its logits feed the first sample.
+    matched: usize,
+    /// `matched` ends inside the last pinned page, so the sequence's
+    /// recompute will write into it: pre-claim the copy-on-write spare.
+    cow: bool,
 }
 
 impl NativeBackend {
@@ -231,7 +294,7 @@ impl NativeBackend {
         // never reallocates them.
         let max_pages = kv_pool.layout().max_pages_per_seq();
         let seqs = (0..max_batch).map(|_| SeqKv::with_capacity(max_pages)).collect();
-        NativeBackend { model, kv_pool, seqs, kernel }
+        NativeBackend { model, kv_pool, seqs, kernel, prefix_cache: kv.prefix_cache }
     }
 
     /// The shared page pool (tests and capacity planning).
@@ -247,6 +310,33 @@ impl NativeBackend {
     fn admit_pages(&self, max_tokens: usize) -> usize {
         let l = self.kv_pool.layout();
         l.pages_for(max_tokens.min(l.max_seq))
+    }
+
+    /// Price a prompt against the prefix index. Deterministic between
+    /// `can_admit_prompt` and `reserve_with_prefix` within one admission
+    /// decision: nothing in between allocates, and releases/publishes
+    /// only grow the match.
+    fn prefix_plan(&self, prompt: &[usize]) -> PrefixPlan {
+        let l = self.kv_pool.layout();
+        // At least the final prompt position is always recomputed (its
+        // logits produce the first sample), which also forces CoW — and
+        // thus a private copy — on a fully page-aligned whole-prompt hit.
+        let limit = prompt.len().min(l.max_seq).saturating_sub(1);
+        if !self.prefix_cache || limit == 0 {
+            return PrefixPlan::default();
+        }
+        let (avail, cached) = self.kv_pool.prefix_peek_detail(prompt);
+        let matched = (avail * l.page_size).min(limit);
+        if matched == 0 {
+            return PrefixPlan::default();
+        }
+        let pin = l.pages_for(matched);
+        PrefixPlan {
+            pin,
+            cached_pins: cached.min(pin),
+            matched,
+            cow: matched % l.page_size != 0,
+        }
     }
 }
 
@@ -315,6 +405,89 @@ impl DecodeBackend for NativeBackend {
         let need = self.admit_pages(max_tokens);
         let ok = self.seqs[slot].claim(&mut self.kv_pool, need);
         debug_assert!(ok, "reserve after can_admit cannot fail");
+    }
+
+    fn can_admit_prompt(&self, prompt: &[usize], max_tokens: usize) -> bool {
+        let plan = self.prefix_plan(prompt);
+        if plan.pin == 0 {
+            return self.can_admit(max_tokens);
+        }
+        // Pinned pages are not allocated — but pinning a *cached* page
+        // removes it from the allocatable set, so subtract those.
+        let need = self.admit_pages(max_tokens) - plan.pin + plan.cow as usize;
+        self.kv_pool.free_pages() - plan.cached_pins >= need
+    }
+
+    fn reserve_with_prefix(&mut self, slot: usize, prompt: &[usize], max_tokens: usize) -> usize {
+        if !self.prefix_cache {
+            self.reserve(slot, max_tokens);
+            return 0;
+        }
+        let plan = self.prefix_plan(prompt);
+        // Always consult the index (a planned non-match passes
+        // `max_pages = 0`) so hit/miss counters see every admission.
+        let pinned = self.kv_pool.prefix_acquire(prompt, plan.pin);
+        debug_assert_eq!(pinned.len(), plan.pin, "peek and acquire disagree");
+        if !pinned.is_empty() {
+            self.seqs[slot].set_prefix(&pinned, plan.matched);
+            if plan.cow {
+                let ok = self.seqs[slot].claim_cow_spare(&mut self.kv_pool);
+                debug_assert!(ok, "cow-spare claim after can_admit_prompt cannot fail");
+            }
+        }
+        let need = self.admit_pages(max_tokens);
+        let ok = self.seqs[slot].claim(&mut self.kv_pool, need);
+        debug_assert!(ok, "reserve after can_admit_prompt cannot fail");
+        plan.matched
+    }
+
+    fn publish_prefix(&mut self, slot: usize, tokens: &[usize]) {
+        if !self.prefix_cache {
+            return;
+        }
+        let ps = self.kv_pool.layout().page_size;
+        let full = tokens.len() / ps;
+        if full == 0 {
+            return;
+        }
+        let seq = &self.seqs[slot];
+        debug_assert!(seq.pages().len() >= full, "publishing pages the slot does not hold");
+        let pages = seq.pages()[..full].to_vec();
+        self.kv_pool.publish_prefix(&tokens[..full * ps], &pages);
+    }
+
+    fn spill(&mut self, slot: usize) -> Option<SpilledKv> {
+        let l = self.kv_pool.layout();
+        let len = self.seqs[slot].len();
+        let n = l.pages_for(len);
+        let pe = l.page_elems();
+        let mut data = vec![0f32; n * pe];
+        for (i, &page) in self.seqs[slot].pages()[..n].iter().enumerate() {
+            data[i * pe..(i + 1) * pe].copy_from_slice(self.kv_pool.page_data(page));
+        }
+        // Copy everything first, release last: a panic mid-copy leaves
+        // the pages held, so the batcher's recompute fallback can still
+        // `reset_slot` cleanly.
+        self.seqs[slot].release(&mut self.kv_pool);
+        Some(SpilledKv { len, data })
+    }
+
+    fn restore(&mut self, slot: usize, spill: &SpilledKv, max_tokens: usize) -> bool {
+        let need = self.admit_pages(max_tokens);
+        if self.kv_pool.free_pages() < need {
+            return false;
+        }
+        debug_assert!(self.seqs[slot].pages().is_empty(), "restore into an occupied slot");
+        let ok = self.seqs[slot].claim(&mut self.kv_pool, need);
+        debug_assert!(ok, "claim after the free-page check cannot fail");
+        let pe = self.kv_pool.layout().page_elems();
+        let n = self.kv_pool.layout().pages_for(spill.len);
+        for i in 0..n {
+            let page = self.seqs[slot].pages()[i];
+            self.kv_pool.write_page(page, &spill.data[i * pe..(i + 1) * pe]);
+        }
+        self.seqs[slot].set_len(spill.len);
+        true
     }
 
     fn kv_stats(&self) -> Option<KvStats> {
@@ -499,7 +672,7 @@ mod tests {
         let w = ModelWeights::random(cfg.clone(), 13);
         // 8 slots over a pool of 8 pages of 16 tokens: total KV capacity
         // is 128 tokens — far below 8 × max_seq.
-        let kv = KvConfig { page_size: 16, pool_pages: 8 };
+        let kv = KvConfig { page_size: 16, pool_pages: 8, ..KvConfig::default() };
         let mut b = NativeBackend::with_kv(&w, EngineKind::Dense, 8, &kv);
         // 4 short sequences: one page each.
         for slot in 0..4 {
@@ -531,6 +704,60 @@ mod tests {
         let stats = b.kv_stats().unwrap();
         assert_eq!(stats.pool.free_pages, stats.pool.total_pages);
         assert!(b.can_admit(65));
+    }
+
+    #[test]
+    fn prefix_reuse_matches_cold_prefill_bitwise() {
+        let w = ModelWeights::random(ModelConfig::tiny(), 17);
+        let kv = KvConfig { page_size: 16, pool_pages: 0, ..KvConfig::default() };
+        let mut b = NativeBackend::with_kv(&w, EngineKind::Dense, 2, &kv);
+        let prompt: Vec<usize> = (0..40).map(|i| (i * 7 + 3) % 50).collect();
+        let lifetime = prompt.len() + 8;
+        // Cold admission on slot 0: nothing cached yet.
+        assert!(b.can_admit_prompt(&prompt, lifetime));
+        assert_eq!(b.reserve_with_prefix(0, &prompt, lifetime), 0);
+        let cold = b.prefill(0, &prompt, 0, true).unwrap().unwrap();
+        b.publish_prefix(0, &prompt);
+        assert_eq!(b.pool().stats().prefix_pages, 2, "two full 16-token pages of 40");
+        // Warm admission on slot 1 pins both full pages and resumes
+        // prefill at position 32.
+        let matched = b.reserve_with_prefix(1, &prompt, lifetime);
+        assert_eq!(matched, 32);
+        let warm = b.prefill(1, &prompt[32..], 32, true).unwrap().unwrap();
+        assert_eq!(cold, warm, "prefix reuse must be bit-exact");
+        let s = b.pool().stats();
+        assert_eq!(s.prefix_hits, 1);
+        assert_eq!(s.prefix_misses, 1);
+        assert_eq!(s.prefix_hit_tokens, 32);
+        // Drain: zero used pages and refcounts; prefix pages stay cached
+        // and allocatable.
+        b.reset_slot(0);
+        b.reset_slot(1);
+        let s = b.pool().stats();
+        assert_eq!(s.used_pages, 0);
+        assert_eq!(s.live_refs, 0);
+        assert_eq!(s.free_pages, s.total_pages);
+        assert_eq!(s.cached_pages, 2);
+    }
+
+    #[test]
+    fn spill_restore_roundtrip_is_bit_exact() {
+        let w = ModelWeights::random(ModelConfig::tiny(), 19);
+        let prompt = [3usize, 7, 11, 19, 23];
+        let mut a = NativeBackend::new(&w, EngineKind::Dense, 1);
+        a.reserve(0, 16);
+        a.prefill(0, &prompt, 0, true).unwrap();
+        let la = a.step(&[SlotStep { slot: 0, token: 42, pos: 5 }]).unwrap().remove(0);
+
+        let mut b = NativeBackend::new(&w, EngineKind::Dense, 1);
+        b.reserve(0, 16);
+        b.prefill(0, &prompt, 0, true).unwrap();
+        let spill = b.spill(0).expect("native backend spills");
+        assert_eq!(spill.len, 5);
+        assert_eq!(b.pool().used_pages(), 0, "spill releases the victim's pages");
+        assert!(b.restore(0, &spill, 16));
+        let lb = b.step(&[SlotStep { slot: 0, token: 42, pos: 5 }]).unwrap().remove(0);
+        assert_eq!(la, lb, "spill/restore must be bit-exact");
     }
 
     #[test]

@@ -14,20 +14,38 @@
 //! discarded is skipped.
 //!
 //! Admission is gated twice: a bounded queue (reject) and, for
-//! pool-backed backends, KV pages (`DecodeBackend::can_admit` — the head
-//! request waits until the prompt's pages plus one growth page are free,
-//! counted as a *deferral* in metrics, FIFO preserved). Completion
+//! pool-backed backends, KV pages (`DecodeBackend::can_admit_prompt` —
+//! the head request waits until its whole-lifetime page bound fits,
+//! counted as a *deferral* in metrics, FIFO preserved). The prompt-aware
+//! gate lets prefix-cache hits admit into a pool a cold prompt would
+//! not fit: pinned shared pages are not allocated
+//! (`DecodeBackend::reserve_with_prefix` starts prefill past the
+//! matched positions), and a fully prefilled prompt publishes its full
+//! pages back to the index (`DecodeBackend::publish_prefix`).
+//!
+//! **Preemption** (`KvConfig::preempt`): when the gate would defer a
+//! candidate and a decoding slot of *strictly lower* priority exists,
+//! the batcher swaps that victim out — spilling its KV to the host
+//! arena (`PreemptMode::Spill`, with a recompute fallback when the
+//! backend cannot spill or panics mid-spill) or dropping the KV and
+//! queueing an exact replay stream (`PreemptMode::Recompute`). Victims
+//! wait in a FIFO resume queue that outranks fresh admissions of the
+//! same priority, so preempted work cannot starve; resumed replays
+//! never re-sample (their tokens are already fixed), which keeps
+//! preempted serving bit-exact with uncontended serving. Completion
 //! reclaims the sequence's pages, unblocking the queue.
-//! `coordinator::metrics` reports prefill/decode token counts and the
-//! pool occupancy snapshot per step.
+//! `coordinator::metrics` reports prefill/decode token counts,
+//! preemption/resume counters and the pool occupancy snapshot per step.
 
 use super::backend::{DecodeBackend, SlotStep};
 use super::metrics::Metrics;
 use super::request::{FinishReason, InFlight, Request, Response};
-use crate::config::ServeConfig;
+use crate::config::{PreemptMode, ServeConfig};
+use crate::kvcache::SpillArena;
 use crate::model::Sampler;
 use crate::obs::trace::{self, SpanRecord};
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -54,6 +72,13 @@ pub struct Batcher {
     cfg: ServeConfig,
     slots: Vec<Slot>,
     queue: VecDeque<Request>,
+    /// Preempted requests waiting to win a slot back, FIFO. Spill-mode
+    /// entries have their KV in `spill_arena` (keyed by request id);
+    /// recompute-mode entries carry their replay stream in
+    /// `InFlight::replay`.
+    resume_q: VecDeque<InFlight>,
+    /// Host-memory KV of spilled (preempted) sequences.
+    spill_arena: SpillArena,
     sampler: Sampler,
     pub metrics: Arc<Metrics>,
     finished: Vec<Response>,
@@ -76,6 +101,8 @@ impl Batcher {
             cfg,
             slots: (0..n).map(|_| Slot::Free).collect(),
             queue: VecDeque::new(),
+            resume_q: VecDeque::new(),
+            spill_arena: SpillArena::new(),
             metrics,
             finished: Vec::new(),
             prefill_rr: 0,
@@ -103,7 +130,7 @@ impl Batcher {
     }
 
     pub fn is_idle(&self) -> bool {
-        self.occupied() == 0 && self.queue.is_empty()
+        self.occupied() == 0 && self.queue.is_empty() && self.resume_q.is_empty()
     }
 
     /// A request's worst-case KV footprint in positions: the whole
@@ -114,16 +141,36 @@ impl Batcher {
         req.prompt.len().saturating_add(req.max_new_tokens)
     }
 
-    /// Move queued requests into free slots (the router step). FIFO: the
-    /// head request must fit the backend's KV pool
-    /// ([`DecodeBackend::can_admit`] over its whole-lifetime footprint)
+    /// Move waiting requests into free slots (the router step). The
+    /// resume queue goes first, FIFO — preempted work already won
+    /// admission once, so fresh arrivals of the same priority must not
+    /// starve it (only *strictly higher* priority may bypass a blocked
+    /// resume head). Then the fresh queue, FIFO: the head request must
+    /// fit the backend's KV pool ([`DecodeBackend::can_admit_prompt`]
+    /// over its whole-lifetime footprint, discounting prefix-cache pins)
     /// or admission stops for this step — a deferral, counted in
-    /// metrics; later completions reclaim pages and unblock it. A head
+    /// metrics. A candidate that does not fit may preempt a decoding
+    /// slot of strictly lower priority ([`Batcher::preempt`]); with no
+    /// victim, later completions reclaim pages and unblock it. A head
     /// request that could never fit even an *empty* pool is rejected
     /// with [`FinishReason::Rejected`] instead of deferring forever.
     fn admit(&mut self) {
         let mut deferred = false;
-        for i in 0..self.slots.len() {
+        'slots: for i in 0..self.slots.len() {
+            if !matches!(self.slots[i], Slot::Free) {
+                continue;
+            }
+            // Preempted work first (FIFO).
+            let mut resume_blocked: Option<i32> = None;
+            if let Some(f) = self.resume_q.pop_front() {
+                match self.try_resume(i, f) {
+                    Ok(()) => continue 'slots,
+                    Err(f) => {
+                        resume_blocked = Some(f.req.priority);
+                        self.resume_q.push_front(f);
+                    }
+                }
+            }
             // Drop queue heads that no amount of reclamation could ever
             // admit (footprint > whole pool) — deferring them would
             // livelock the queue behind an unsatisfiable request.
@@ -145,6 +192,8 @@ impl Batcher {
                     latency_s: queue_wait_s,
                     tpot_s: 0.0,
                     prefill_chunks: 0,
+                    preemptions: 0,
+                    prefix_hit_tokens: 0,
                 });
                 self.finished.push(Response {
                     id: req.id,
@@ -155,28 +204,173 @@ impl Batcher {
                     tok_per_s: 0.0,
                 });
             }
-            let need_tokens = match self.queue.front() {
-                Some(req) => Self::lifetime_tokens(req),
-                None => break,
+            let head_priority = match self.queue.front() {
+                Some(req) => req.priority,
+                None => {
+                    if resume_blocked.is_some() {
+                        deferred = true;
+                    }
+                    break;
+                }
             };
-            if !matches!(self.slots[i], Slot::Free) {
-                continue;
+            // A blocked resume head holds back fresh work at or below
+            // its priority; strictly higher priority may bypass it.
+            if let Some(rp) = resume_blocked {
+                if head_priority <= rp {
+                    deferred = true;
+                    break;
+                }
             }
-            if !self.backend.can_admit(need_tokens) {
+            let req = self.queue.pop_front().unwrap();
+            let need_tokens = Self::lifetime_tokens(&req);
+            let fits = loop {
+                if self.backend.can_admit_prompt(&req.prompt, need_tokens) {
+                    break true;
+                }
+                if !self.preempt_lower_than(req.priority) {
+                    break false;
+                }
+            };
+            if !fits {
+                self.queue.push_front(req);
                 deferred = true;
                 break;
             }
-            let req = self.queue.pop_front().unwrap();
             self.backend.reset_slot(i);
-            // Pre-claim the sequence's whole-lifetime pages so the next
-            // iteration's `can_admit` sees the reduced free count and
-            // decode growth never races the free list.
-            self.backend.reserve(i, need_tokens);
-            self.slots[i] = Slot::Busy(InFlight::new(req));
+            // Pin the prompt's cached prefix pages and pre-claim the
+            // rest of the sequence's whole-lifetime pages, so the next
+            // iteration's gate sees the reduced free count and decode
+            // growth never races the free list. Prefill starts past the
+            // matched positions.
+            let matched = self.backend.reserve_with_prefix(i, &req.prompt, need_tokens);
+            let mut f = InFlight::new(req);
+            f.prefill_idx = matched;
+            f.pos = matched;
+            f.prefix_hit_tokens = matched;
+            self.slots[i] = Slot::Busy(f);
         }
         if deferred {
             self.metrics.on_admit_defer();
         }
+    }
+
+    /// Try to put a preempted request back into `slot`. Spill-mode
+    /// entries bulk-restore their saved KV; recompute-mode entries
+    /// re-enter the admission path with their replay stream (and may hit
+    /// the prefix cache for the prompt pages they published before
+    /// preemption). Either path may itself preempt strictly
+    /// lower-priority decoders. Returns the request on failure so the
+    /// caller re-queues it.
+    fn try_resume(&mut self, slot: usize, mut f: InFlight) -> Result<(), InFlight> {
+        let need_tokens = Self::lifetime_tokens(&f.req);
+        let pri = f.req.priority;
+        self.backend.reset_slot(slot);
+        if let Some(spill) = self.spill_arena.take(f.req.id) {
+            loop {
+                if self.backend.restore(slot, &spill, need_tokens) {
+                    self.metrics.on_resume();
+                    self.slots[slot] = Slot::Busy(f);
+                    return Ok(());
+                }
+                if !self.preempt_lower_than(pri) {
+                    break;
+                }
+            }
+            self.spill_arena.insert(f.req.id, spill);
+            Err(f)
+        } else {
+            loop {
+                if self.backend.can_admit_prompt(f.feed(), need_tokens) {
+                    break;
+                }
+                if !self.preempt_lower_than(pri) {
+                    return Err(f);
+                }
+            }
+            let matched = self.backend.reserve_with_prefix(slot, f.feed(), need_tokens);
+            f.prefill_idx = matched;
+            f.pos = matched;
+            f.prefix_hit_tokens += matched;
+            self.metrics.on_resume();
+            self.slots[slot] = Slot::Busy(f);
+            Ok(())
+        }
+    }
+
+    /// Preempt one decoding slot of *strictly* lower priority than
+    /// `pri`, if any (lowest priority first; ties broken toward the
+    /// longest sequence — the most pages reclaimed). Returns whether a
+    /// victim was swapped out (its pages are then back in the pool).
+    fn preempt_lower_than(&mut self, pri: i32) -> bool {
+        if self.cfg.kv.preempt == PreemptMode::Off {
+            return false;
+        }
+        match self.find_victim(pri) {
+            Some(j) => {
+                self.preempt(j);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The preemption victim for a candidate of priority `pri`: a
+    /// decoding (never prefilling) slot with strictly lower priority,
+    /// preferring the lowest priority and, among equals, the longest
+    /// sequence.
+    fn find_victim(&self, pri: i32) -> Option<usize> {
+        let mut best: Option<(i32, usize, usize)> = None;
+        for (j, s) in self.slots.iter().enumerate() {
+            if let Slot::Busy(f) = s {
+                if f.is_prefilling() || f.req.priority >= pri {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((bp, bpos, _)) => {
+                        f.req.priority < bp || (f.req.priority == bp && f.pos > bpos)
+                    }
+                };
+                if better {
+                    best = Some((f.req.priority, f.pos, j));
+                }
+            }
+        }
+        best.map(|(_, _, j)| j)
+    }
+
+    /// Swap the decoding sequence in `victim` out of its slot. Spill
+    /// mode copies its KV to the host arena (falling back to recompute
+    /// when the backend cannot spill, or panics mid-spill — the pages
+    /// are still held then, so `reset_slot` reclaims them); recompute
+    /// mode drops the KV and queues an exact replay stream: the prompt
+    /// plus every sampled token except the last, which becomes the next
+    /// decode input once the replay has been prefilled. Either way the
+    /// victim's pages are back in the pool when this returns.
+    fn preempt(&mut self, victim: usize) {
+        let Slot::Busy(mut f) = std::mem::replace(&mut self.slots[victim], Slot::Free) else {
+            unreachable!("preempt targets busy slots")
+        };
+        f.preemptions += 1;
+        let mut spilled = false;
+        if self.cfg.kv.preempt == PreemptMode::Spill {
+            if let Ok(Some(s)) = catch_unwind(AssertUnwindSafe(|| self.backend.spill(victim))) {
+                self.spill_arena.insert(f.req.id, s);
+                spilled = true;
+            }
+        }
+        if !spilled {
+            self.backend.reset_slot(victim);
+            let g = f.generated.len();
+            debug_assert!(g > 0, "victims are decoding, so they sampled at least one token");
+            let mut replay = f.req.prompt.clone();
+            replay.extend_from_slice(&f.generated[..g.saturating_sub(1)]);
+            f.replay = Some(replay);
+            f.prefill_idx = 0;
+            f.pos = 0;
+        }
+        self.metrics.on_preempt(spilled);
+        self.resume_q.push_back(f);
     }
 
     /// Run one engine step: batched prefill across prefilling slots under
@@ -185,7 +379,9 @@ impl Batcher {
     /// then one decode token for every decoding slot. Returns the number
     /// of slots advanced (0 ⇒ idle).
     pub fn step(&mut self) -> usize {
+        let ta = Instant::now();
         self.admit();
+        let admit_s = ta.elapsed().as_secs_f64();
         let max_seq = self.backend.max_seq();
         let t0 = Instant::now();
         let mut advanced = 0usize;
@@ -205,9 +401,11 @@ impl Batcher {
                 break;
             }
             let i = (start + off) % n;
-            let (feed, pos, finishes_prompt) = match &self.slots[i] {
+            let (feed, pos, finishes_feed, want_logits) = match &self.slots[i] {
                 Slot::Busy(f) if f.is_prefilling() => {
-                    let remaining = &f.req.prompt[f.prefill_idx..];
+                    // The feed is the prompt, or the replay stream while
+                    // resuming a recompute-mode preemption.
+                    let remaining = &f.feed()[f.prefill_idx..];
                     // Clamp to the context window (an over-long prompt
                     // finishes with `FinishReason::Context` below) and to
                     // what's left of the shared step budget.
@@ -216,16 +414,19 @@ impl Batcher {
                         continue;
                     }
                     let take = remaining.len().min(room);
-                    (remaining[..take].to_vec(), f.pos, take == remaining.len())
+                    let fin = take == remaining.len();
+                    // Logits are only needed when this chunk completes a
+                    // *prompt* (they seed the first sampled token). A
+                    // replay's final chunk never samples — its next token
+                    // is already fixed — so the lm_head GEMM is skipped
+                    // for every replay chunk too.
+                    (remaining[..take].to_vec(), f.pos, fin, fin && f.generated.is_empty())
                 }
                 _ => continue,
             };
-            // Logits are only needed when this chunk completes the prompt
-            // (they seed the first sampled token); otherwise the backend
-            // skips the lm_head GEMM.
             let logits = self
                 .backend
-                .prefill(i, &feed, pos, finishes_prompt)
+                .prefill(i, &feed, pos, want_logits)
                 .expect("backend prefill failed");
             budget -= feed.len();
             prefill_tokens += feed.len();
@@ -235,10 +436,20 @@ impl Batcher {
             f.prefill_idx += feed.len();
             f.pos += feed.len();
             f.prefill_chunks += 1;
-            if finishes_prompt {
+            let publish = if finishes_feed {
                 f.prefill_done = Some(Instant::now());
+                // The prompt's pages are complete (a replay stream
+                // starts with the prompt, so this holds on resume too)
+                // and immutable from here on: publish the full ones for
+                // other admissions to pin.
+                Some(f.req.prompt.clone())
+            } else {
+                None
+            };
+            if let Some(prompt) = publish {
+                self.backend.publish_prefix(i, &prompt);
             }
-            self.advance_after_logits(i, logits.as_deref().unwrap_or(&[]), max_seq);
+            self.advance_after_logits(i, logits.as_deref().unwrap_or(&[]), max_seq, false);
         }
         if n > 0 {
             self.prefill_rr = (self.prefill_rr + 1) % n;
@@ -265,7 +476,7 @@ impl Batcher {
             for (ss, lg) in steps.iter().zip(&logits) {
                 let Slot::Busy(f) = &mut self.slots[ss.slot] else { unreachable!() };
                 f.pos += 1;
-                self.advance_after_logits(ss.slot, lg, max_seq);
+                self.advance_after_logits(ss.slot, lg, max_seq, true);
             }
         }
         let sample_p2 = std::mem::take(&mut self.sample_s);
@@ -275,6 +486,7 @@ impl Batcher {
             // Scheduler phase attribution: prefill and decode wall time
             // with sampling carved out into its own phase.
             self.metrics.on_step_phases(&[
+                ("sched/admit", admit_s),
                 ("sched/prefill", prefill_s.max(0.0)),
                 ("sched/decode", decode_s.max(0.0)),
                 ("sched/sample", sample_p1 + sample_p2),
@@ -302,12 +514,15 @@ impl Batcher {
 
     /// Shared post-GEMM bookkeeping for a slot whose position just
     /// advanced past `logits`' token: sample when decoding, then retire
-    /// the sequence if any finish condition hit.
-    fn advance_after_logits(&mut self, slot_idx: usize, logits: &[f32], max_seq: usize) {
+    /// the sequence if any finish condition hit. `decode_phase` is false
+    /// for prefill-chunk calls — there, sampling happens only off a
+    /// *prompt's* final logits (`generated` still empty); a finished
+    /// recompute replay must not re-sample the token it already holds.
+    fn advance_after_logits(&mut self, slot_idx: usize, logits: &[f32], max_seq: usize, decode_phase: bool) {
         let slot = &mut self.slots[slot_idx];
         let Slot::Busy(f) = slot else { unreachable!() };
         let mut finish: Option<FinishReason> = None;
-        if !f.is_prefilling() {
+        if !f.is_prefilling() && (decode_phase || f.generated.is_empty()) {
             // Sample the next token (valid both for the final prefill
             // position's logits and for decode steps).
             let ts = Instant::now();
@@ -348,6 +563,8 @@ impl Batcher {
                 latency_s: latency,
                 tpot_s: if n_gen > 1 { decode_time / (n_gen - 1) as f64 } else { 0.0 },
                 prefill_chunks: f.prefill_chunks,
+                preemptions: f.preemptions,
+                prefix_hit_tokens: f.prefix_hit_tokens,
             };
             let resp = Response {
                 id: f.req.id,
@@ -575,7 +792,7 @@ mod tests {
         // its pages — admission is gated by pool pages, not by the 4
         // free slots.
         let w = ModelWeights::random(ModelConfig::tiny(), 3);
-        let kv = KvConfig { page_size: 4, pool_pages: 2 };
+        let kv = KvConfig { page_size: 4, pool_pages: 2, ..KvConfig::default() };
         let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 4, &kv));
         let cfg = ServeConfig {
             max_batch: 4,
@@ -612,7 +829,7 @@ mod tests {
         // block the queue forever. A feasible request behind it must
         // still be served.
         let w = ModelWeights::random(ModelConfig::tiny(), 3);
-        let kv = KvConfig { page_size: 16, pool_pages: 2 };
+        let kv = KvConfig { page_size: 16, pool_pages: 2, ..KvConfig::default() };
         let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 2, &kv));
         let cfg = ServeConfig {
             max_batch: 2,
@@ -634,5 +851,146 @@ mod tests {
         let report = b.metrics.report();
         assert_eq!(report.infeasible, 1);
         assert_eq!(report.rejected, 0, "queue-full rejects are a separate counter");
+    }
+
+    /// Contended serving (a high-priority arrival preempts a decoding
+    /// low-priority slot) must produce bitwise the tokens of uncontended
+    /// serving, in both preemption modes.
+    fn preemption_is_bit_exact(mode: crate::config::PreemptMode) {
+        use crate::config::{KvConfig, PreemptMode};
+        let w = ModelWeights::random(ModelConfig::tiny(), 3);
+        // 4 pages × 4 tokens: each request's lifetime (3 prompt + 6
+        // generated → 3 pages) leaves too little for a second, so the
+        // high-priority arrival must preempt.
+        let kv = KvConfig { page_size: 4, pool_pages: 4, preempt: mode, ..KvConfig::default() };
+        let cfg = ServeConfig {
+            max_batch: 2,
+            max_new_tokens: 6,
+            temperature: 0.0,
+            queue_capacity: 8,
+            kv: kv.clone(),
+            ..Default::default()
+        };
+        // Uncontended references: each request alone in a fresh batcher.
+        let reference = |prompt: Vec<usize>| {
+            let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 2, &kv));
+            let mut b = Batcher::new(backend, cfg.clone(), Arc::new(Metrics::new()));
+            b.submit(Request::new(0, prompt, 6));
+            b.run_to_completion().remove(0).tokens
+        };
+        let want_low = reference(vec![1, 2, 3]);
+        let want_high = reference(vec![4, 5, 6]);
+
+        let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 2, &kv));
+        let mut b = Batcher::new(backend, cfg, Arc::new(Metrics::new()));
+        b.submit(Request::new(1, vec![1, 2, 3], 6)); // priority 0
+        b.step(); // prefill low
+        b.step(); // low decodes — a valid preemption victim now
+        b.submit(Request::new(2, vec![4, 5, 6], 6).with_priority(1));
+        let mut out = b.run_to_completion();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].tokens, want_low, "preempted request diverged");
+        assert_eq!(out[1].tokens, want_high, "preempting request diverged");
+        assert!(out.iter().all(|r| r.finish == FinishReason::Length));
+        let report = b.metrics.report();
+        assert!(report.preemptions >= 1, "the high-priority arrival must preempt");
+        assert_eq!(report.resumes as usize, report.preemptions as usize, "every victim resumes");
+        match mode {
+            PreemptMode::Spill => assert_eq!(report.preempt_spills, report.preemptions),
+            PreemptMode::Recompute => assert_eq!(report.preempt_recomputes, report.preemptions),
+            PreemptMode::Off => unreachable!(),
+        }
+        // Victim spans carry their preemption count.
+        assert!(report.spans.iter().any(|s| s.id == 1 && s.preemptions >= 1));
+        // Full reclamation at drain.
+        let kv_stats = report.kv.expect("pool-backed backend reports kv stats");
+        assert_eq!(kv_stats.pool.used_pages, 0);
+        assert_eq!(kv_stats.pool.live_refs, 0);
+        assert_eq!(kv_stats.pool.free_pages, kv_stats.pool.total_pages);
+    }
+
+    #[test]
+    fn spill_preemption_bit_exact_and_fully_reclaimed() {
+        preemption_is_bit_exact(crate::config::PreemptMode::Spill);
+    }
+
+    #[test]
+    fn recompute_preemption_bit_exact_and_fully_reclaimed() {
+        preemption_is_bit_exact(crate::config::PreemptMode::Recompute);
+    }
+
+    #[test]
+    fn preempt_off_never_preempts_even_across_priorities() {
+        use crate::config::{KvConfig, PreemptMode};
+        let w = ModelWeights::random(ModelConfig::tiny(), 3);
+        let kv =
+            KvConfig { page_size: 4, pool_pages: 4, preempt: PreemptMode::Off, ..KvConfig::default() };
+        let cfg = ServeConfig {
+            max_batch: 2,
+            max_new_tokens: 6,
+            temperature: 0.0,
+            queue_capacity: 8,
+            kv: kv.clone(),
+            ..Default::default()
+        };
+        let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 2, &kv));
+        let mut b = Batcher::new(backend, cfg, Arc::new(Metrics::new()));
+        b.submit(Request::new(1, vec![1, 2, 3], 6));
+        b.step();
+        b.step();
+        b.submit(Request::new(2, vec![4, 5, 6], 6).with_priority(1));
+        let out = b.run_to_completion();
+        assert_eq!(out.len(), 2, "the high-priority request waits for reclamation instead");
+        let report = b.metrics.report();
+        assert_eq!(report.preemptions, 0);
+        assert!(report.deferred > 0, "it defers while the low-priority slot drains");
+    }
+
+    #[test]
+    fn shared_prompt_second_admission_hits_prefix_cache() {
+        use crate::config::KvConfig;
+        let w = ModelWeights::random(ModelConfig::tiny(), 3);
+        let kv = KvConfig { page_size: 4, pool_pages: 16, ..KvConfig::default() };
+        let cfg = ServeConfig {
+            max_batch: 2,
+            max_new_tokens: 2,
+            temperature: 0.0,
+            queue_capacity: 8,
+            kv: kv.clone(),
+            ..Default::default()
+        };
+        let prompt: Vec<usize> = (1..=9).collect(); // 2 full pages + 1
+        // Sequential reference for the same prompt.
+        let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 2, &kv));
+        let mut solo = Batcher::new(backend, cfg.clone(), Arc::new(Metrics::new()));
+        solo.submit(Request::new(0, prompt.clone(), 2));
+        let want = solo.run_to_completion().remove(0).tokens;
+
+        let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 2, &kv));
+        let mut b = Batcher::new(backend, cfg, Arc::new(Metrics::new()));
+        b.submit(Request::new(1, prompt.clone(), 2));
+        let first = loop {
+            b.step();
+            let done = b.take_finished();
+            if !done.is_empty() {
+                break done;
+            }
+        };
+        assert_eq!(first[0].tokens, want);
+        // Second request with the same prompt: its first 2 pages (8
+        // tokens) come from the cache.
+        b.submit(Request::new(2, prompt.clone(), 2));
+        let out = b.run_to_completion();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens, want, "cache hit must not change outputs");
+        let report = b.metrics.report();
+        let kv_stats = report.kv.expect("kv stats");
+        assert_eq!(kv_stats.pool.prefix_hits, 1, "second admission hits");
+        assert_eq!(kv_stats.pool.prefix_hit_tokens, 8);
+        assert!(report.spans.iter().any(|s| s.id == 2 && s.prefix_hit_tokens == 8));
+        assert!((report.prefix_hit_rate() - 0.5).abs() < 1e-12, "1 hit / 2 probes");
+        assert_eq!(kv_stats.pool.used_pages, 0, "drained");
+        assert_eq!(kv_stats.pool.free_pages, kv_stats.pool.total_pages);
     }
 }

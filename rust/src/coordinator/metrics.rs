@@ -45,6 +45,15 @@ struct Inner {
     infeasible: u64,
     /// Steps on which the queue head waited for KV pool pages.
     deferred: u64,
+    /// Decoding slots swapped out to admit higher-priority work.
+    preemptions: u64,
+    /// Preemptions that spilled KV to the host arena.
+    preempt_spills: u64,
+    /// Preemptions that dropped KV for replay (including spill-path
+    /// fallbacks after a failed/panicked spill).
+    preempt_recomputes: u64,
+    /// Preempted requests re-admitted to a slot.
+    resumes: u64,
     prefill_tokens: u64,
     decode_tokens: u64,
     steps: u64,
@@ -99,6 +108,16 @@ pub struct MetricsReport {
     pub infeasible: u64,
     /// Steps on which admission was deferred waiting for KV pool pages.
     pub deferred: u64,
+    /// Decoding slots swapped out to admit higher-priority work.
+    pub preemptions: u64,
+    /// Preemptions that spilled KV to the host arena (the rest dropped
+    /// their KV for recompute-on-resume).
+    pub preempt_spills: u64,
+    /// Preemptions resolved by recompute — explicit recompute mode plus
+    /// spill-path fallbacks.
+    pub preempt_recomputes: u64,
+    /// Preempted requests re-admitted to a slot.
+    pub resumes: u64,
     /// Prompt tokens consumed by batched prefill passes.
     pub prefill_tokens: u64,
     /// Generated tokens consumed by decode steps.
@@ -169,6 +188,24 @@ impl Metrics {
     /// lack of free KV pool pages.
     pub fn on_admit_defer(&self) {
         self.inner.lock().unwrap().deferred += 1;
+    }
+
+    /// Record one preemption: a decoding slot swapped out for
+    /// higher-priority work. `spilled` says whether its KV reached the
+    /// host arena (false ⇒ dropped for recompute, including fallbacks).
+    pub fn on_preempt(&self, spilled: bool) {
+        let mut g = self.inner.lock().unwrap();
+        g.preemptions += 1;
+        if spilled {
+            g.preempt_spills += 1;
+        } else {
+            g.preempt_recomputes += 1;
+        }
+    }
+
+    /// Record a preempted request winning a slot again.
+    pub fn on_resume(&self) {
+        self.inner.lock().unwrap().resumes += 1;
     }
 
     /// Record the latest KV-pool occupancy snapshot (gauge semantics:
@@ -286,6 +323,10 @@ impl Metrics {
             rejected: g.rejected,
             infeasible: g.infeasible,
             deferred: g.deferred,
+            preemptions: g.preemptions,
+            preempt_spills: g.preempt_spills,
+            preempt_recomputes: g.preempt_recomputes,
+            resumes: g.resumes,
             prefill_tokens: g.prefill_tokens,
             decode_tokens: g.decode_tokens,
             steps: g.steps,
@@ -336,6 +377,19 @@ impl MetricsReport {
         self.engine.as_ref().map(|e| e.build_share_ops())
     }
 
+    /// Fraction of prefix-cache probes that pinned at least one shared
+    /// page, straight from the KV-pool gauge. 0.0 when the backend has
+    /// no pool or no probe ever ran (prefix cache off / no admissions).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let Some(kv) = &self.kv else { return 0.0 };
+        let probes = kv.pool.prefix_hits + kv.pool.prefix_misses;
+        if probes == 0 {
+            0.0
+        } else {
+            kv.pool.prefix_hits as f64 / probes as f64
+        }
+    }
+
     pub fn render(&self) -> String {
         let mut out = format!(
             "requests: {} submitted / {} completed / {} rejected / {} infeasible / {} deferred\n\
@@ -371,6 +425,12 @@ impl MetricsReport {
             parts.sort();
             out.push_str(&format!("\nphases:   {}", parts.join(" · ")));
         }
+        if self.preemptions > 0 {
+            out.push_str(&format!(
+                "\npreempt:  {} preemptions ({} spilled / {} recomputed), {} resumes",
+                self.preemptions, self.preempt_spills, self.preempt_recomputes, self.resumes,
+            ));
+        }
         if let Some(kv) = &self.kv {
             out.push_str(&format!(
                 "\nkv pool:  {}/{} pages used (hwm {}), {} tok/page, \
@@ -384,6 +444,20 @@ impl MetricsReport {
                 kv.held_bytes() / 1024,
                 kv.used_bytes() / 1024,
             ));
+            if kv.pool.prefix_hits + kv.pool.prefix_misses > 0 {
+                out.push_str(&format!(
+                    "\nprefix:   hit rate {:.1}% ({} hits / {} misses), \
+                     {} tokens served from cache, {} shared pages, \
+                     {} evictions, {} CoW copies",
+                    100.0 * self.prefix_hit_rate(),
+                    kv.pool.prefix_hits,
+                    kv.pool.prefix_misses,
+                    kv.pool.prefix_hit_tokens,
+                    kv.pool.prefix_pages,
+                    kv.pool.evictions,
+                    kv.pool.cow_copies,
+                ));
+            }
         }
         if let Some(e) = &self.engine {
             out.push_str(&format!(
@@ -425,6 +499,8 @@ mod tests {
             latency_s,
             tpot_s: (latency_s - ttft_s) / 3.0,
             prefill_chunks: 1,
+            preemptions: 0,
+            prefix_hit_tokens: 0,
         }
     }
 
@@ -556,6 +632,44 @@ mod tests {
         assert!(rendered.contains("build share 25.0%"), "{rendered}");
         assert!(rendered.contains("fanout 2.50/call"), "{rendered}");
         assert!(rendered.contains("kernel unrolled ×8 lanes"), "{rendered}");
+    }
+
+    #[test]
+    fn preempt_counters_and_prefix_hit_rate() {
+        use crate::kvcache::PoolStats;
+        let m = Metrics::new();
+        m.on_preempt(true);
+        m.on_preempt(false);
+        m.on_preempt(false);
+        m.on_resume();
+        m.on_resume();
+        m.on_kv(KvStats {
+            pool: PoolStats {
+                total_pages: 8,
+                prefix_hits: 3,
+                prefix_misses: 1,
+                prefix_hit_tokens: 96,
+                ..Default::default()
+            },
+            slot_bytes: vec![0],
+            slot_bytes_used: vec![0],
+        });
+        let r = m.report();
+        assert_eq!(r.preemptions, 3);
+        assert_eq!(r.preempt_spills, 1);
+        assert_eq!(r.preempt_recomputes, 2);
+        assert_eq!(r.resumes, 2);
+        assert!((r.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        let rendered = r.render();
+        assert!(rendered.contains("3 preemptions (1 spilled / 2 recomputed), 2 resumes"), "{rendered}");
+        assert!(rendered.contains("hit rate 75.0%"), "{rendered}");
+        assert!(rendered.contains("96 tokens served from cache"), "{rendered}");
+    }
+
+    #[test]
+    fn prefix_hit_rate_zero_without_pool_or_probes() {
+        let m = Metrics::new();
+        assert_eq!(m.report().prefix_hit_rate(), 0.0);
     }
 
     #[test]

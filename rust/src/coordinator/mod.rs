@@ -21,7 +21,19 @@
 //! until a completion reclaims pages; one that could never fit even an
 //! empty pool finishes immediately with `FinishReason::Rejected`.
 //!
-//! ## Scheduling: budgeted prefill, continuous decode
+//! Pages are **refcounted and shareable** (`KvConfig::prefix_cache`):
+//! once a prompt is fully prefilled, its full pages are published to a
+//! content-hash prefix index, and later admissions with the same prompt
+//! head pin those pages instead of allocating — the prompt-aware gate
+//! (`DecodeBackend::can_admit_prompt`) discounts them, so a mostly
+//! cached prompt fits a pool a cold one would not. Shared pages are
+//! immutable; a sequence that must write into one (the hit ended inside
+//! it) diverges through a pre-claimed copy-on-write spare. Pages whose
+//! last holder releases them park in a FIFO *cached* state, revivable
+//! by the next hit and evictable under allocation pressure — so the
+//! cache costs no reserved capacity.
+//!
+//! ## Scheduling: budgeted prefill, continuous decode, preemption
 //!
 //! Each batcher step runs two phases: (1) batched prefill across
 //! prefilling slots under a **shared** `ServeConfig::prefill_budget`
@@ -29,8 +41,18 @@
 //! every prompt — bounding decode stall per step regardless of how many
 //! prompts arrive at once; non-final prefill chunks skip the lm_head
 //! GEMM (`want_logits = false`); (2) one decode token for every decoding
-//! slot. [`metrics::Metrics`] reports prefill/decode token splits,
-//! admission deferrals, and the KV pool occupancy/churn snapshot.
+//! slot.
+//!
+//! When admission would defer and a decoding slot holds *strictly*
+//! lower-priority work (`Request::priority`), the batcher **preempts**
+//! it (`KvConfig::preempt`): spill mode copies the victim's KV to a
+//! host arena and restores it bulk on resume; recompute mode drops the
+//! KV and replays prompt + sampled tokens through prefill (resumed
+//! replays never re-sample, so outputs stay bit-exact either way).
+//! Victims resume from a FIFO queue that outranks fresh arrivals of
+//! equal priority. [`metrics::Metrics`] reports prefill/decode token
+//! splits, admission deferrals, preemptions/resumes, prefix-cache
+//! hit rates, and the KV pool occupancy/churn snapshot.
 //!
 //! ## Observability
 //!

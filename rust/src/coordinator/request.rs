@@ -12,6 +12,11 @@ pub struct Request {
     pub temperature: f32,
     /// Stop generating at this token if produced (e.g. a newline byte).
     pub stop_token: Option<usize>,
+    /// Scheduling priority. Higher wins: when the pool saturates, an
+    /// admission candidate may preempt a decoding slot of *strictly*
+    /// lower priority (so the default 0-vs-0 workload never preempts and
+    /// behaves exactly as before preemption existed).
+    pub priority: i32,
     /// Submit time — the anchor for queue-wait and client-visible TTFT
     /// attribution in the request's lifecycle span.
     pub created: Instant,
@@ -25,6 +30,7 @@ impl Request {
             max_new_tokens,
             temperature: 0.0,
             stop_token: None,
+            priority: 0,
             created: Instant::now(),
         }
     }
@@ -32,6 +38,11 @@ impl Request {
     /// Byte-level helper: prompt from text.
     pub fn from_text(id: u64, text: &str, max_new_tokens: usize) -> Request {
         Request::new(id, text.bytes().map(|b| b as usize).collect(), max_new_tokens)
+    }
+
+    pub fn with_priority(mut self, priority: i32) -> Request {
+        self.priority = priority;
+        self
     }
 }
 
@@ -86,10 +97,20 @@ pub struct InFlight {
     pub prefill_chunks: u32,
     /// Tokens generated so far.
     pub generated: Vec<usize>,
-    /// Next prompt index still to prefill (== prompt.len() ⇒ decoding).
+    /// Next feed index still to prefill (== feed().len() ⇒ decoding).
     pub prefill_idx: usize,
     /// Current sequence position in the KV cache.
     pub pos: usize,
+    /// Recompute-mode resume: the exact token stream to replay through
+    /// prefill — the prompt plus every already-sampled token except the
+    /// last (which becomes the next decode input). `None` for ordinary
+    /// prefill and spill-mode resume.
+    pub replay: Option<Vec<usize>>,
+    /// Times this request was swapped out of a slot.
+    pub preemptions: u32,
+    /// Prompt tokens served from pinned prefix-cache pages instead of
+    /// prefill at (re-)admission.
+    pub prefix_hit_tokens: usize,
 }
 
 impl InFlight {
@@ -103,17 +124,27 @@ impl InFlight {
             generated: Vec::new(),
             prefill_idx: 0,
             pos: 0,
+            replay: None,
+            preemptions: 0,
+            prefix_hit_tokens: 0,
         }
     }
 
-    pub fn is_prefilling(&self) -> bool {
-        self.prefill_idx < self.req.prompt.len()
+    /// The token stream prefill consumes: the replay stream while
+    /// resuming a recompute-mode preemption, the prompt otherwise.
+    pub fn feed(&self) -> &[usize] {
+        self.replay.as_deref().unwrap_or(&self.req.prompt)
     }
 
-    /// The token to feed next (prompt during prefill, last generated after).
+    pub fn is_prefilling(&self) -> bool {
+        self.prefill_idx < self.feed().len()
+    }
+
+    /// The token to feed next (feed stream during prefill, last generated
+    /// after).
     pub fn next_input(&self) -> usize {
         if self.is_prefilling() {
-            self.req.prompt[self.prefill_idx]
+            self.feed()[self.prefill_idx]
         } else {
             *self.generated.last().expect("decode phase implies a generated token or last prompt token")
         }

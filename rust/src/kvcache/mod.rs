@@ -11,28 +11,66 @@
 //! vLLM-style paging:
 //!
 //! - [`pool::BlockPool`] — the arena: one allocation carved into pages of
-//!   `page_size` tokens (all layers, K and V), a LIFO free list, and
-//!   churn/occupancy counters ([`pool::PoolStats`]). Pool pages bound
-//!   total KV memory; the batcher gates admission on free pages.
+//!   `page_size` tokens (all layers, K and V), per-page refcounts, a LIFO
+//!   free list, and churn/occupancy counters ([`pool::PoolStats`]). Pool
+//!   pages bound total KV memory; the batcher gates admission on free
+//!   pages.
 //! - [`paged::SeqKv`] / [`paged::PagedKv`] — the per-sequence page table
 //!   and the handle that binds it to the pool for one model call, with
 //!   the contiguous cache's exact append/read semantics (bit-compatible;
 //!   property-pinned) but per-page `&[f32]` views. Pages are claimed
-//!   lazily on append and reclaimed wholesale when the request finishes.
+//!   lazily on append and dereferenced wholesale when the request
+//!   finishes.
 //! - [`KvStore`] — the capability the model actually needs: positional
 //!   writes plus tiled reads. The contiguous cache implements it as one
 //!   big tile; the paged cache as page-sized tiles. The chunked attention
 //!   kernel ([`crate::model::attention`]) is written against this trait,
 //!   so decode and prefill run identically over either representation.
 //!
+//! # Sharing: the page lifecycle
+//!
+//! Pages are refcounted so identical prompt prefixes are stored once
+//! (the shared-system-prompt scenario that dominates chat traffic):
+//!
+//! - **owned** — refcount 1, unregistered: the ordinary private page;
+//!   writable in place.
+//! - **shared** — the [`prefix::PrefixIndex`] names a full prompt page by
+//!   the chain hash of its token ids; admission
+//!   ([`pool::BlockPool::prefix_acquire`]) pins matching pages instead of
+//!   allocating and re-prefilling them. Any registered or multiply-held
+//!   page is immutable.
+//! - **CoW** — a sequence writing into an immutable page (diverging
+//!   mid-page, or continuing past a fully-shared prompt) copies it to a
+//!   private page first ([`paged::PagedKv`]'s write path; the spare is
+//!   pre-claimed at admission so the copy cannot race the free list).
+//! - **evicted** — a registered page whose refcount drops to 0 parks as
+//!   *cached*: still hittable, reclaimed FIFO by the allocator only when
+//!   the free list runs dry, at which point its registration is dropped.
+//!
+//! # Preemption
+//!
+//! When the pool saturates and a lower-priority slot is mid-decode, the
+//! batcher swaps it out instead of deferring the newcomer (the state
+//! machine lives in `coordinator::batcher`; the KV mechanics here):
+//! **spill** copies the victim's private pages to the host-side
+//! [`spill::SpillArena`] and releases them, and resume bulk-copies them
+//! back into freshly claimed pages; **recompute** just releases and later
+//! replays prompt + already-sampled tokens through prefill. Both resume
+//! bit-exact — spilled floats are the sequence's exact KV state, and
+//! replay recomputes the identical values position-by-position.
+//!
 //! [`KvStats`] packages a pool snapshot with per-slot byte gauges for
 //! `coordinator::metrics`.
 
 pub mod paged;
 pub mod pool;
+pub mod prefix;
+pub mod spill;
 
 pub use paged::{PagedKv, SeqKv};
 pub use pool::{BlockPool, KvLayout, PoolStats};
+pub use prefix::{chain_hash, PrefixIndex, ROOT_HASH};
+pub use spill::{SpillArena, SpilledKv};
 
 /// What the model requires of a KV cache: append one position per layer,
 /// read back position ranges as contiguous `(keys, values)` tiles.

@@ -8,20 +8,34 @@
 //! new position) — bit-compatible by construction, property-pinned by
 //! `tests/paged_kv_prop.rs` — but exposes the cache as per-page `&[f32]`
 //! tiles instead of one contiguous slice. Pages are claimed lazily on
-//! append (free-list pop, no heap traffic) and returned wholesale by
+//! append (free-list pop, no heap traffic) and dereferenced wholesale by
 //! [`SeqKv::release`] when the request finishes.
+//!
+//! With prefix sharing, a table may start with *pinned* pages another
+//! sequence filled ([`SeqKv::set_prefix`]); those are immutable, and the
+//! first write into one triggers copy-on-write — the page is copied into
+//! a private page (the admission-pre-claimed [`SeqKv::claim_cow_spare`]
+//! when available), the shared reference is dropped, and the table entry
+//! is swapped. Reads before the divergence point see bit-identical
+//! content by construction.
 
 use super::pool::BlockPool;
 use super::KvStore;
 
 /// Per-sequence KV state: the page table and the fill length. Owns no
-/// storage — pages live in the [`BlockPool`]; `SeqKv` only names them.
+/// storage — pages live in the [`BlockPool`]; `SeqKv` only names them,
+/// holding one reference per table entry (plus one for the optional
+/// copy-on-write spare).
 #[derive(Clone, Debug, Default)]
 pub struct SeqKv {
     /// Physical page id per logical page index (`pos / page_size`).
     pages: Vec<usize>,
     /// Number of positions filled so far.
     len: usize,
+    /// A page pre-claimed at admission for the guaranteed copy-on-write
+    /// when the sequence's first write lands inside a pinned prefix page
+    /// — so the CoW can never hit an exhausted free list mid-step.
+    cow_spare: Option<usize>,
 }
 
 impl SeqKv {
@@ -30,7 +44,7 @@ impl SeqKv {
     /// [`super::pool::KvLayout::max_pages_per_seq`] to keep the decode
     /// hot loop allocation-free.
     pub fn with_capacity(max_pages: usize) -> SeqKv {
-        SeqKv { pages: Vec::with_capacity(max_pages), len: 0 }
+        SeqKv { pages: Vec::with_capacity(max_pages), len: 0, cow_spare: None }
     }
 
     /// Number of positions filled so far.
@@ -52,13 +66,52 @@ impl SeqKv {
         self.pages.capacity()
     }
 
-    /// Return every page to `pool` and reset the fill (full reclamation;
-    /// the table keeps its capacity for the next sequence in this slot).
+    /// The page table (shared prefix pages first, in prompt order).
+    pub fn pages(&self) -> &[usize] {
+        &self.pages
+    }
+
+    /// Drop one reference to every held page and reset the fill (full
+    /// reclamation from this sequence's side; shared pages survive under
+    /// their other holders or park in the prefix cache). The table keeps
+    /// its capacity for the next sequence in this slot.
     pub fn release(&mut self, pool: &mut BlockPool) {
         for page in self.pages.drain(..) {
             pool.free(page);
         }
+        if let Some(spare) = self.cow_spare.take() {
+            pool.free(spare);
+        }
         self.len = 0;
+    }
+
+    /// Install admission's prefix-cache pins: `pages` (already pinned in
+    /// the pool, in prompt order) become the head of the table and the
+    /// first `matched` positions are treated as filled — prefill resumes
+    /// at `matched` instead of 0. Only valid on an empty sequence.
+    pub fn set_prefix(&mut self, pages: &[usize], matched: usize) {
+        debug_assert!(self.pages.is_empty() && self.len == 0, "set_prefix on a live sequence");
+        self.pages.extend_from_slice(pages);
+        self.len = matched;
+    }
+
+    /// Pre-claim the copy-on-write spare (see [`SeqKv::release`] for its
+    /// lifecycle). Returns false when the pool is exhausted.
+    pub fn claim_cow_spare(&mut self, pool: &mut BlockPool) -> bool {
+        debug_assert!(self.cow_spare.is_none());
+        match pool.try_alloc() {
+            Some(page) => {
+                self.cow_spare = Some(page);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Force the fill length (spill-restore: pages were bulk-copied back
+    /// rather than appended position-by-position).
+    pub fn set_len(&mut self, len: usize) {
+        self.len = len;
     }
 
     /// Pre-claim pages so this sequence holds at least `n_pages` — the
@@ -126,7 +179,28 @@ impl KvStore for PagedKv<'_> {
             });
             self.seq.pages.push(page);
         }
-        self.pool.write(self.seq.pages[pi], layer, pos % l.page_size, k, v);
+        let mut page = self.seq.pages[pi];
+        // Copy-on-write: a page another sequence (or the prefix index)
+        // can observe is immutable — divergence copies it into a private
+        // page first. Admission pre-claims `cow_spare` whenever it pins a
+        // page the sequence will write into, so the guaranteed copy never
+        // races the free list; lazy divergence (direct PagedKv users)
+        // falls back to an ordinary allocation.
+        if self.pool.is_immutable(page) {
+            let np = self.seq.cow_spare.take().or_else(|| self.pool.try_alloc()).unwrap_or_else(
+                || {
+                    panic!(
+                        "kv pool exhausted during copy-on-write of page {page} \
+                         (admission must pre-claim the CoW spare)"
+                    )
+                },
+            );
+            self.pool.copy_page(page, np);
+            self.pool.free(page);
+            self.seq.pages[pi] = np;
+            page = np;
+        }
+        self.pool.write(page, layer, pos % l.page_size, k, v);
         if layer + 1 == l.n_layers && pos >= self.seq.len {
             self.seq.len = pos + 1;
         }
@@ -244,6 +318,46 @@ mod tests {
         assert_eq!(pool.free_pages(), pool.total_pages());
         assert_eq!(seq.len(), 0);
         assert_eq!(seq.page_capacity(), cap, "release must keep the table allocation");
+    }
+
+    #[test]
+    fn cow_diverges_shared_page_without_touching_original() {
+        let mut pool = pool();
+        let mut a = SeqKv::with_capacity(4);
+        {
+            let mut kv = PagedKv::bind(&mut pool, &mut a);
+            for pos in 0..4 {
+                let k = [pos as f32; 4];
+                kv.write(0, pos, &k, &k);
+                kv.write(1, pos, &k, &k);
+            }
+        }
+        let prompt: Vec<usize> = (10..14).collect();
+        pool.publish_prefix(&prompt, a.pages());
+        // Hitter pins the full page but recomputes the last position
+        // (the admission cap), so its first write lands inside the
+        // pinned page and must diverge.
+        let mut b = SeqKv::with_capacity(4);
+        let pinned = pool.prefix_acquire(&prompt, usize::MAX);
+        assert_eq!(pinned.len(), 1);
+        b.set_prefix(&pinned, 3);
+        assert!(b.claim_cow_spare(&mut pool));
+        {
+            let mut kv = PagedKv::bind(&mut pool, &mut b);
+            let k = [9.0f32; 4];
+            kv.write(0, 3, &k, &k);
+            kv.write(1, 3, &k, &k);
+            assert_eq!(kv.len(), 4);
+        }
+        assert_ne!(a.pages()[0], b.pages()[0], "divergence must copy, not mutate");
+        assert_eq!(pool.k_tile(a.pages()[0], 0, 4)[3 * 4], 3.0, "original untouched");
+        assert_eq!(pool.k_tile(b.pages()[0], 0, 4)[3 * 4], 9.0, "copy holds the new write");
+        assert_eq!(pool.k_tile(b.pages()[0], 0, 4)[2 * 4], 2.0, "pre-divergence content shared");
+        assert_eq!(pool.stats().cow_copies, 1);
+        b.release(&mut pool);
+        a.release(&mut pool);
+        assert_eq!(pool.used_pages(), 0);
+        assert_eq!(pool.free_pages(), pool.total_pages(), "cached prefix page still allocatable");
     }
 
     #[test]

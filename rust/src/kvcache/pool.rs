@@ -1,13 +1,51 @@
-//! Fixed-size-page KV arena shared by every sequence and layer.
+//! Fixed-size-page KV arena shared by every sequence and layer, with
+//! refcounted prefix sharing.
 //!
 //! One [`BlockPool`] backs all serving slots: a single `f32` allocation
-//! carved into pages of [`KvLayout::page_size`] tokens, handed out through
-//! a LIFO free list and returned in full when a sequence finishes. Pool
-//! memory therefore bounds *concurrency × live tokens*, not
-//! `slots × max_seq` — the per-request worst-case allocation the
-//! contiguous [`crate::model::KvCache`] pays.
+//! carved into pages of [`KvLayout::page_size`] tokens. Pool memory
+//! therefore bounds *concurrency × live tokens*, not `slots × max_seq` —
+//! the per-request worst-case allocation the contiguous
+//! [`crate::model::KvCache`] pays.
 //!
-//! Page layout (one page, `page_elems` floats):
+//! # Page lifecycle
+//!
+//! Every page is in exactly one of three states, tracked by its refcount
+//! and its membership in the pool's [`PrefixIndex`]:
+//!
+//! ```text
+//!            try_alloc                      free (refs 1→0)
+//!   FREE ───────────────▶ USED (refs ≥ 1) ───────────────▶ FREE
+//!                          │        ▲                  (unregistered)
+//!            publish_prefix│        │pin (refs 0→1,
+//!              (register)  │        │ a prefix hit)
+//!                          ▼        │
+//!                   USED+registered │           free (refs 1→0)
+//!                          └────────┴──────────────────▶ CACHED
+//!                                                     (registered,
+//!                                    evict ◀───────────  refs == 0)
+//!                                 (try_alloc under
+//!                                  free-list pressure)
+//! ```
+//!
+//! - **Free**: on the LIFO free list, content meaningless.
+//! - **Used**: refcount ≥ 1. A refcount of 1 with no registration means
+//!   the page is privately owned and writable; a refcount > 1 *or* a
+//!   registration means it is shared-immutable and writers must
+//!   copy-on-write first ([`BlockPool::is_immutable`], enforced by
+//!   [`super::PagedKv`]).
+//! - **Cached**: refcount 0 but still registered in the prefix index —
+//!   hittable by future prompts, reclaimed FIFO by [`BlockPool::try_alloc`]
+//!   only after the free list empties ([`PoolStats::evictions`]).
+//!
+//! [`BlockPool::free`] is a *reference drop*, not a deallocation: it hard-
+//! asserts the refcount is non-zero (the double-free that previously put a
+//! page on the free list twice — and thus into two sequences' page tables —
+//! now panics at the faulty call site in both debug and release), and only
+//! a 1→0 drop changes the page's state.
+//!
+//! # Page layout
+//!
+//! One page, `page_elems` floats:
 //!
 //! ```text
 //! [layer 0: K rows (page_size × kv_dim) | V rows (page_size × kv_dim)]
@@ -20,6 +58,9 @@
 //! sequence page-by-page with the same inner loops it would run over a
 //! contiguous cache — the page size is the attention tile size.
 
+use std::collections::VecDeque;
+
+use super::prefix::{chain_hash, PrefixIndex, ROOT_HASH};
 use crate::config::{KvConfig, ModelConfig};
 
 /// Geometry of every page in a pool.
@@ -76,17 +117,39 @@ pub struct PoolStats {
     pub page_size: usize,
     pub page_bytes: usize,
     pub total_pages: usize,
+    /// Allocatable pages: truly free plus cached-evictable.
     pub free_pages: usize,
+    /// Pages with refcount ≥ 1.
     pub used_pages: usize,
     /// High-water mark of simultaneously used pages.
     pub used_hwm: usize,
-    /// Cumulative page allocations (churn).
+    /// Cumulative 0→1 refcount transitions (fresh allocations and
+    /// cache-hit re-pins alike — churn).
     pub allocated: u64,
-    /// Cumulative page frees (churn).
+    /// Cumulative 1→0 refcount transitions (churn).
     pub freed: u64,
+    /// Pages currently cached (registered, refcount 0).
+    pub cached_pages: usize,
+    /// Sum of all page refcounts (shared pages count once per holder).
+    pub live_refs: usize,
+    /// Pages currently registered in the prefix index (used or cached).
+    pub prefix_pages: usize,
+    /// Prompts whose admission pinned at least one prefix page.
+    pub prefix_hits: u64,
+    /// Prompts that consulted the index and pinned nothing.
+    pub prefix_misses: u64,
+    /// Prompt tokens covered by pages pinned at admission (page
+    /// granularity; prefill skips all but at most the final one).
+    pub prefix_hit_tokens: u64,
+    /// Cached pages recycled by the allocator (registration dropped).
+    pub evictions: u64,
+    /// Copy-on-write page copies (divergence from a shared prefix).
+    pub cow_copies: u64,
 }
 
-/// The shared page arena: one allocation, a free list, churn counters.
+/// The shared page arena: one allocation, per-page refcounts, a free
+/// list, a cached-page queue, and the prefix index that names immutable
+/// prompt pages.
 #[derive(Clone, Debug)]
 pub struct BlockPool {
     layout: KvLayout,
@@ -94,9 +157,25 @@ pub struct BlockPool {
     /// LIFO free list of page ids (recently freed pages are reused first,
     /// keeping the hot working set small).
     free: Vec<usize>,
+    /// Holders per page; 0 means free or cached.
+    refs: Vec<u32>,
+    /// FIFO eviction queue of cached pages. Lazily maintained: entries
+    /// whose `in_evictable` bit was cleared by a re-pin are skipped at
+    /// pop time instead of being searched out on every hit.
+    evictable: VecDeque<usize>,
+    in_evictable: Vec<bool>,
+    index: PrefixIndex,
+    used_ct: usize,
+    cached_ct: usize,
+    live_refs: usize,
     allocated: u64,
     freed: u64,
     used_hwm: usize,
+    prefix_hits: u64,
+    prefix_misses: u64,
+    prefix_hit_tokens: u64,
+    evictions: u64,
+    cow_copies: u64,
 }
 
 impl BlockPool {
@@ -107,10 +186,22 @@ impl BlockPool {
         BlockPool {
             data: vec![0.0; pages * layout.page_elems()],
             free: (0..pages).rev().collect(),
+            refs: vec![0; pages],
+            evictable: VecDeque::new(),
+            in_evictable: vec![false; pages],
+            index: PrefixIndex::new(),
             layout,
+            used_ct: 0,
+            cached_ct: 0,
+            live_refs: 0,
             allocated: 0,
             freed: 0,
             used_hwm: 0,
+            prefix_hits: 0,
+            prefix_misses: 0,
+            prefix_hit_tokens: 0,
+            evictions: 0,
+            cow_copies: 0,
         }
     }
 
@@ -138,32 +229,241 @@ impl BlockPool {
     }
 
     pub fn total_pages(&self) -> usize {
-        self.data.len() / self.layout.page_elems()
+        self.refs.len()
     }
 
+    /// Allocatable pages: the free list plus cached pages the allocator
+    /// may evict. (A pool fully drained of sequences reports
+    /// `free_pages == total_pages` even when prefix pages remain cached.)
     pub fn free_pages(&self) -> usize {
-        self.free.len()
+        self.free.len() + self.cached_ct
     }
 
+    /// Pages with refcount ≥ 1.
     pub fn used_pages(&self) -> usize {
-        self.total_pages() - self.free.len()
+        self.used_ct
     }
 
-    /// Pop a page off the free list (`None` when the pool is exhausted —
-    /// callers gate admission on [`Self::free_pages`], see the batcher).
+    /// Pages registered but unreferenced — hittable, evictable.
+    pub fn cached_pages(&self) -> usize {
+        self.cached_ct
+    }
+
+    /// Sum of all page refcounts.
+    pub fn live_refs(&self) -> usize {
+        self.live_refs
+    }
+
+    /// Current holders of `page` (0 = free or cached).
+    pub fn refs(&self, page: usize) -> u32 {
+        self.refs[page]
+    }
+
+    /// Whether `page` is registered in the prefix index.
+    pub fn is_registered(&self, page: usize) -> bool {
+        self.index.contains_page(page)
+    }
+
+    /// Whether writing `page` in place would be observable by another
+    /// holder or by future prefix hits — if so, writers must copy first.
+    pub fn is_immutable(&self, page: usize) -> bool {
+        self.refs[page] > 1 || self.index.contains_page(page)
+    }
+
+    /// Claim a page with refcount 1: free list first, then FIFO eviction
+    /// of cached pages (whose registration is dropped —
+    /// [`PoolStats::evictions`]). `None` when the pool is exhausted —
+    /// callers gate admission on [`Self::free_pages`], see the batcher.
     pub fn try_alloc(&mut self) -> Option<usize> {
-        let page = self.free.pop()?;
-        self.allocated += 1;
-        self.used_hwm = self.used_hwm.max(self.used_pages());
+        let page = match self.free.pop() {
+            Some(page) => page,
+            None => self.evict()?,
+        };
+        debug_assert_eq!(self.refs[page], 0, "allocating page {page} that still has holders");
+        self.retain(page);
         Some(page)
     }
 
-    /// Return a page to the free list.
+    /// Pop the oldest cached page, dropping its index entry.
+    fn evict(&mut self) -> Option<usize> {
+        while let Some(page) = self.evictable.pop_front() {
+            if !self.in_evictable[page] {
+                continue; // stale: re-pinned since it was queued
+            }
+            self.in_evictable[page] = false;
+            let removed = self.index.remove_page(page);
+            debug_assert!(removed, "evictable page {page} was not registered");
+            self.cached_ct -= 1;
+            self.evictions += 1;
+            return Some(page);
+        }
+        None
+    }
+
+    /// 0→1 refcount bookkeeping shared by allocation and cache-hit pins.
+    fn retain(&mut self, page: usize) {
+        self.refs[page] = 1;
+        self.used_ct += 1;
+        self.live_refs += 1;
+        self.allocated += 1;
+        self.used_hwm = self.used_hwm.max(self.used_ct);
+    }
+
+    /// Add a holder to `page`. Pinning a cached page (refcount 0) revives
+    /// it out of the eviction queue; pinning a used page shares it.
+    pub fn pin(&mut self, page: usize) {
+        assert!(page < self.total_pages(), "pinning page {page} out of range");
+        if self.refs[page] == 0 {
+            assert!(
+                self.in_evictable[page],
+                "pinning free page {page}: only used or cached pages can gain holders"
+            );
+            self.in_evictable[page] = false;
+            self.cached_ct -= 1;
+            self.retain(page);
+        } else {
+            self.refs[page] += 1;
+            self.live_refs += 1;
+        }
+    }
+
+    /// Drop one holder of `page`. The terminal 1→0 drop sends the page
+    /// back to the free list — or parks it in the cached state when it is
+    /// registered as a prefix page.
+    ///
+    /// Hard-asserts (debug *and* release) that the page has a holder: a
+    /// double free would otherwise put the page on the free list twice
+    /// and hand it to two sequences — silent KV corruption.
     pub fn free(&mut self, page: usize) {
-        debug_assert!(page < self.total_pages(), "freeing page {page} out of range");
-        debug_assert!(!self.free.contains(&page), "double free of page {page}");
-        self.free.push(page);
+        assert!(page < self.total_pages(), "freeing page {page} out of range");
+        assert!(self.refs[page] > 0, "double free of page {page}: refcount is already zero");
+        self.refs[page] -= 1;
+        self.live_refs -= 1;
+        if self.refs[page] > 0 {
+            return;
+        }
+        self.used_ct -= 1;
         self.freed += 1;
+        if self.index.contains_page(page) {
+            debug_assert!(!self.in_evictable[page], "cached page {page} queued twice");
+            self.in_evictable[page] = true;
+            self.evictable.push_back(page);
+            self.cached_ct += 1;
+        } else {
+            self.free.push(page);
+        }
+    }
+
+    /// Full pages of `tokens` currently resident in the prefix index —
+    /// what [`Self::prefix_acquire`] could pin, without side effects.
+    pub fn prefix_peek(&self, tokens: &[usize]) -> usize {
+        self.prefix_peek_detail(tokens).0
+    }
+
+    /// [`Self::prefix_peek`] plus how many of the matched pages are
+    /// currently *cached* (refcount 0) — pinning those removes them from
+    /// the allocatable set, which admission must price in
+    /// ([`Self::free_pages`] counts cached pages as allocatable).
+    pub fn prefix_peek_detail(&self, tokens: &[usize]) -> (usize, usize) {
+        let ps = self.layout.page_size;
+        let mut parent = ROOT_HASH;
+        let (mut matched, mut cached) = (0, 0);
+        for chunk in tokens.chunks_exact(ps) {
+            let hash = chain_hash(parent, chunk);
+            match self.index.lookup_hashed(hash, parent, chunk) {
+                Some(page) => {
+                    if self.refs[page] == 0 {
+                        cached += 1;
+                    }
+                    parent = hash;
+                    matched += 1;
+                }
+                None => break,
+            }
+        }
+        (matched, cached)
+    }
+
+    /// Pin the longest chain of cached/used pages matching the full pages
+    /// of `tokens` — at most `max_pages` of them — in prompt order.
+    /// Counts a prefix hit (and the tokens the pinned pages cover) when
+    /// at least one page is pinned, a miss otherwise; admission passes
+    /// `max_pages = 0` on a planned non-match so misses are still
+    /// counted.
+    pub fn prefix_acquire(&mut self, tokens: &[usize], max_pages: usize) -> Vec<usize> {
+        let ps = self.layout.page_size;
+        let mut parent = ROOT_HASH;
+        let mut pages = Vec::new();
+        for chunk in tokens.chunks_exact(ps) {
+            if pages.len() >= max_pages {
+                break;
+            }
+            let hash = chain_hash(parent, chunk);
+            match self.index.lookup_hashed(hash, parent, chunk) {
+                Some(page) => {
+                    self.pin(page);
+                    pages.push(page);
+                    parent = hash;
+                }
+                None => break,
+            }
+        }
+        if pages.is_empty() {
+            self.prefix_misses += 1;
+        } else {
+            self.prefix_hits += 1;
+            self.prefix_hit_tokens += (pages.len() * ps) as u64;
+        }
+        pages
+    }
+
+    /// Register the full pages of `tokens` (held by `pages`, the owning
+    /// sequence's page table) in the prefix index, making them
+    /// shared-immutable. First publisher wins: pages whose chain key is
+    /// already registered, or that already serve another key, are
+    /// skipped. The caller keeps its references; registration only
+    /// changes what happens when they drop (cached, not freed).
+    pub fn publish_prefix(&mut self, tokens: &[usize], pages: &[usize]) {
+        let ps = self.layout.page_size;
+        let mut parent = ROOT_HASH;
+        for (i, chunk) in tokens.chunks_exact(ps).enumerate() {
+            let hash = chain_hash(parent, chunk);
+            let page = pages[i];
+            debug_assert!(self.refs[page] > 0, "publishing unheld page {page}");
+            if self.index.lookup_hashed(hash, parent, chunk).is_none()
+                && !self.index.contains_page(page)
+            {
+                self.index.insert_hashed(hash, parent, chunk, page);
+            }
+            parent = hash;
+        }
+    }
+
+    /// Copy the full contents of page `src` into page `dst` (the
+    /// copy-on-write body; `dst` is a freshly claimed private page).
+    pub fn copy_page(&mut self, src: usize, dst: usize) {
+        let pe = self.layout.page_elems();
+        debug_assert!(src != dst);
+        self.data.copy_within(src * pe..(src + 1) * pe, dst * pe);
+        self.cow_copies += 1;
+    }
+
+    /// Raw contents of `page` (spill path: copy out before releasing).
+    pub fn page_data(&self, page: usize) -> &[f32] {
+        let pe = self.layout.page_elems();
+        &self.data[page * pe..(page + 1) * pe]
+    }
+
+    /// Overwrite the full contents of `page` (spill restore into a
+    /// freshly claimed private page).
+    pub fn write_page(&mut self, page: usize, src: &[f32]) {
+        let pe = self.layout.page_elems();
+        debug_assert_eq!(src.len(), pe);
+        debug_assert!(
+            self.refs[page] == 1 && !self.index.contains_page(page),
+            "bulk write to shared page {page}"
+        );
+        self.data[page * pe..(page + 1) * pe].copy_from_slice(src);
     }
 
     pub fn stats(&self) -> PoolStats {
@@ -176,6 +476,14 @@ impl BlockPool {
             used_hwm: self.used_hwm,
             allocated: self.allocated,
             freed: self.freed,
+            cached_pages: self.cached_ct,
+            live_refs: self.live_refs,
+            prefix_pages: self.index.len(),
+            prefix_hits: self.prefix_hits,
+            prefix_misses: self.prefix_misses,
+            prefix_hit_tokens: self.prefix_hit_tokens,
+            evictions: self.evictions,
+            cow_copies: self.cow_copies,
         }
     }
 
@@ -202,12 +510,17 @@ impl BlockPool {
     /// Pages are not zeroed on allocation — every position is written
     /// before the attention kernel can read it (reads are bounded by the
     /// sequence length), so recycled pages may carry stale floats that
-    /// are never observed.
+    /// are never observed. The page must be privately held
+    /// ([`Self::is_immutable`] false) — [`super::PagedKv`] copies first.
     pub fn write(&mut self, page: usize, layer: usize, idx: usize, k: &[f32], v: &[f32]) {
         let l = self.layout;
         debug_assert!(idx < l.page_size);
         debug_assert_eq!(k.len(), l.kv_dim);
         debug_assert_eq!(v.len(), l.kv_dim);
+        debug_assert!(
+            self.refs[page] == 1 && !self.index.contains_page(page),
+            "in-place write to shared page {page} (copy-on-write missed)"
+        );
         let base = page * l.page_elems() + l.layer_off(layer);
         let ko = base + idx * l.kv_dim;
         self.data[ko..ko + l.kv_dim].copy_from_slice(k);
@@ -260,6 +573,143 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "double free of page")]
+    fn double_free_panics_in_release_too() {
+        let mut p = BlockPool::new(layout(), 2);
+        let a = p.try_alloc().unwrap();
+        p.free(a);
+        p.free(a);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free of page")]
+    fn free_of_never_allocated_page_panics() {
+        let mut p = BlockPool::new(layout(), 2);
+        p.free(0);
+    }
+
+    #[test]
+    fn pin_shares_and_free_drops_one_holder() {
+        let mut p = BlockPool::new(layout(), 2);
+        let a = p.try_alloc().unwrap();
+        p.pin(a);
+        assert_eq!(p.refs(a), 2);
+        assert!(p.is_immutable(a), "two holders: in-place writes forbidden");
+        assert_eq!(p.used_pages(), 1, "shared page counts once");
+        assert_eq!(p.live_refs(), 2);
+        p.free(a);
+        assert_eq!(p.refs(a), 1);
+        assert!(!p.is_immutable(a));
+        assert_eq!(p.used_pages(), 1);
+        p.free(a);
+        assert_eq!(p.used_pages(), 0);
+        assert_eq!(p.free_pages(), 2);
+    }
+
+    #[test]
+    fn registered_page_parks_cached_then_revives_on_hit() {
+        let mut p = BlockPool::new(layout(), 2);
+        let toks: Vec<usize> = (0..8).collect();
+        let a = p.try_alloc().unwrap();
+        p.publish_prefix(&toks, &[a]);
+        assert!(p.is_registered(a));
+        assert!(p.is_immutable(a), "registered pages are immutable even at refs 1");
+        p.free(a);
+        // Cached: unreferenced but hittable, and still allocatable.
+        assert_eq!(p.used_pages(), 0);
+        assert_eq!(p.cached_pages(), 1);
+        assert_eq!(p.free_pages(), 2);
+        assert_eq!(p.prefix_peek(&toks), 1);
+        let pages = p.prefix_acquire(&toks, usize::MAX);
+        assert_eq!(pages, vec![a]);
+        assert_eq!(p.refs(a), 1);
+        assert_eq!(p.cached_pages(), 0);
+        let s = p.stats();
+        assert_eq!(s.prefix_hits, 1);
+        assert_eq!(s.prefix_hit_tokens, 8);
+        p.free(a);
+    }
+
+    #[test]
+    fn allocation_pressure_evicts_cached_fifo_and_unregisters() {
+        let mut p = BlockPool::new(layout(), 2);
+        let t0: Vec<usize> = (0..8).collect();
+        let t1: Vec<usize> = (100..108).collect();
+        let a = p.try_alloc().unwrap();
+        let b = p.try_alloc().unwrap();
+        p.publish_prefix(&t0, &[a]);
+        p.publish_prefix(&t1, &[b]);
+        p.free(a); // cached first → evicted first
+        p.free(b);
+        assert_eq!(p.free_pages(), 2);
+        let first = p.try_alloc().unwrap();
+        assert_eq!(first, a, "FIFO: oldest cached page evicted first");
+        assert!(!p.is_registered(a));
+        assert_eq!(p.prefix_peek(&t0), 0, "evicted page left the index");
+        assert_eq!(p.prefix_peek(&t1), 1, "survivor still hittable");
+        let s = p.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.prefix_pages, 1);
+        p.free(first);
+    }
+
+    #[test]
+    fn eviction_never_reclaims_referenced_pages() {
+        let mut p = BlockPool::new(layout(), 2);
+        let toks: Vec<usize> = (0..8).collect();
+        let a = p.try_alloc().unwrap();
+        let _b = p.try_alloc().unwrap();
+        p.publish_prefix(&toks, &[a]);
+        // `a` is registered but still referenced: not evictable, pool is
+        // genuinely exhausted.
+        assert_eq!(p.free_pages(), 0);
+        assert!(p.try_alloc().is_none());
+        assert!(p.is_registered(a), "failed alloc must not disturb a live registration");
+    }
+
+    #[test]
+    fn prefix_chain_matches_in_order_only() {
+        let mut p = BlockPool::new(layout(), 4);
+        let prompt: Vec<usize> = (0..16).collect();
+        let a = p.try_alloc().unwrap();
+        let b = p.try_alloc().unwrap();
+        p.publish_prefix(&prompt, &[a, b]);
+        assert_eq!(p.prefix_peek(&prompt), 2);
+        // Same second page under a different first page: no match at all
+        // (the chain hash roots each page in its ancestry).
+        let mut swapped = prompt.clone();
+        swapped[0] = 999;
+        assert_eq!(p.prefix_peek(&swapped), 0);
+        // A longer prompt still matches its first two full pages.
+        let mut longer = prompt.clone();
+        longer.extend(200..210);
+        assert_eq!(p.prefix_peek(&longer), 2);
+        let pages = p.prefix_acquire(&longer, usize::MAX);
+        assert_eq!(pages, vec![a, b]);
+        for page in pages {
+            p.free(page);
+        }
+        p.free(a);
+        p.free(b);
+        assert_eq!(p.free_pages(), 4);
+        assert_eq!(p.stats().prefix_pages, 2, "drained pool keeps its cache");
+    }
+
+    #[test]
+    fn copy_page_copies_all_layers() {
+        let mut p = BlockPool::new(layout(), 2);
+        let a = p.try_alloc().unwrap();
+        let b = p.try_alloc().unwrap();
+        let k = [1.0, 2.0, 3.0, 4.0];
+        let v = [5.0, 6.0, 7.0, 8.0];
+        p.write(a, 1, 3, &k, &v);
+        p.copy_page(a, b);
+        assert_eq!(p.k_tile(b, 1, 4), p.k_tile(a, 1, 4));
+        assert_eq!(p.v_tile(b, 1, 4), p.v_tile(a, 1, 4));
+        assert_eq!(p.stats().cow_copies, 1);
+    }
+
+    #[test]
     fn write_then_read_tiles() {
         let mut p = BlockPool::new(layout(), 2);
         let page = p.try_alloc().unwrap();
@@ -279,7 +729,7 @@ mod tests {
     #[test]
     fn for_model_auto_sizing_matches_contiguous_capacity() {
         let cfg = ModelConfig::tiny();
-        let kv = KvConfig { page_size: 16, pool_pages: 0 };
+        let kv = KvConfig { page_size: 16, pool_pages: 0, ..KvConfig::default() };
         let p = BlockPool::for_model(&cfg, &kv, 4);
         // 4 slots × ceil(128/16) pages each.
         assert_eq!(p.total_pages(), 4 * 8);

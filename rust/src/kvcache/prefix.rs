@@ -1,0 +1,180 @@
+//! Content-addressed index of immutable prompt-prefix pages.
+//!
+//! A full page of prompt tokens is identified by a **chain hash**: the
+//! hash of its own token ids combined with the hash of the page before
+//! it ([`chain_hash`], rooted at [`ROOT_HASH`]). Two sequences whose
+//! prompts agree on their first `k × page_size` tokens therefore derive
+//! the same chain of keys, and admission can convert those pages from
+//! "pages to allocate" into "pages to pin" (see
+//! [`super::BlockPool::prefix_acquire`]).
+//!
+//! The index never trusts a hash alone: every entry stores the page's
+//! token ids plus its parent key, and [`PrefixIndex::lookup`] compares
+//! both before returning a page — a hash collision degrades to a cache
+//! miss, never to serving another prompt's KV (pinned by
+//! `tests/prefix_kv_prop.rs`).
+//!
+//! The index holds **weak** references only: registering a page does not
+//! bump its refcount. Liveness is the pool's job — a registered page
+//! whose refcount drops to zero becomes *cached* (evictable, but still
+//! hittable); the pool unregisters it here when eviction recycles it.
+
+use std::collections::HashMap;
+
+/// FNV-1a offset basis — the chain hash of the empty prefix.
+pub const ROOT_HASH: u64 = 0xcbf2_9ce4_8422_2325;
+
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Chain hash of one full page of token ids under its parent's hash.
+/// Deterministic across runs/processes (unlike `DefaultHasher`), so
+/// hashes are stable cache keys.
+pub fn chain_hash(parent: u64, tokens: &[usize]) -> u64 {
+    let mut h = ROOT_HASH;
+    for byte in parent.to_le_bytes() {
+        h = (h ^ byte as u64).wrapping_mul(FNV_PRIME);
+    }
+    for &t in tokens {
+        for byte in (t as u64).to_le_bytes() {
+            h = (h ^ byte as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+#[derive(Clone, Debug)]
+struct Entry {
+    parent: u64,
+    tokens: Vec<usize>,
+    page: usize,
+}
+
+/// Hash-keyed map from `(parent chain hash, page token ids)` to the pool
+/// page holding that content. Buckets hold every entry sharing a hash;
+/// lookups verify the full identity.
+#[derive(Clone, Debug, Default)]
+pub struct PrefixIndex {
+    buckets: HashMap<u64, Vec<Entry>>,
+    /// Reverse map for O(1)-ish invalidation when a page is evicted.
+    page_hash: HashMap<usize, u64>,
+    entries: usize,
+}
+
+impl PrefixIndex {
+    pub fn new() -> PrefixIndex {
+        PrefixIndex::default()
+    }
+
+    /// Registered entries (= registered pages; a page holds one entry).
+    pub fn len(&self) -> usize {
+        self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries == 0
+    }
+
+    /// The page holding `tokens` under `parent`, verified against the
+    /// stored token ids — a colliding hash with different content is a
+    /// miss, not a wrong page.
+    pub fn lookup(&self, parent: u64, tokens: &[usize]) -> Option<usize> {
+        self.lookup_hashed(chain_hash(parent, tokens), parent, tokens)
+    }
+
+    /// [`Self::lookup`] with the hash supplied by the caller — the
+    /// collision-injection hook for tests; production callers use
+    /// [`Self::lookup`].
+    pub fn lookup_hashed(&self, hash: u64, parent: u64, tokens: &[usize]) -> Option<usize> {
+        self.buckets.get(&hash)?.iter().find(|e| e.parent == parent && e.tokens == tokens).map(|e| e.page)
+    }
+
+    /// Register `page` as the holder of `tokens` under `parent`. Returns
+    /// false (and changes nothing) when the identity is already
+    /// registered — first publisher wins, so a page is never re-pointed.
+    pub fn insert(&mut self, parent: u64, tokens: &[usize], page: usize) -> bool {
+        self.insert_hashed(chain_hash(parent, tokens), parent, tokens, page)
+    }
+
+    /// [`Self::insert`] with the hash supplied by the caller (test hook
+    /// for forcing bucket collisions).
+    pub fn insert_hashed(&mut self, hash: u64, parent: u64, tokens: &[usize], page: usize) -> bool {
+        let bucket = self.buckets.entry(hash).or_default();
+        if bucket.iter().any(|e| e.parent == parent && e.tokens == tokens) {
+            return false;
+        }
+        debug_assert!(
+            !self.page_hash.contains_key(&page),
+            "page {page} already registered under another key"
+        );
+        bucket.push(Entry { parent, tokens: tokens.to_vec(), page });
+        self.page_hash.insert(page, hash);
+        self.entries += 1;
+        true
+    }
+
+    /// Drop the entry registered for `page` (eviction). Returns false if
+    /// the page was not registered.
+    pub fn remove_page(&mut self, page: usize) -> bool {
+        let Some(hash) = self.page_hash.remove(&page) else {
+            return false;
+        };
+        if let Some(bucket) = self.buckets.get_mut(&hash) {
+            bucket.retain(|e| e.page != page);
+            if bucket.is_empty() {
+                self.buckets.remove(&hash);
+            }
+        }
+        self.entries -= 1;
+        true
+    }
+
+    /// Whether `page` holds a registered entry.
+    pub fn contains_page(&self, page: usize) -> bool {
+        self.page_hash.contains_key(&page)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_hash_is_deterministic_and_order_sensitive() {
+        let a = chain_hash(ROOT_HASH, &[1, 2, 3]);
+        assert_eq!(a, chain_hash(ROOT_HASH, &[1, 2, 3]));
+        assert_ne!(a, chain_hash(ROOT_HASH, &[3, 2, 1]));
+        // The parent hash separates equal pages at different depths.
+        assert_ne!(chain_hash(a, &[7, 8]), chain_hash(ROOT_HASH, &[7, 8]));
+    }
+
+    #[test]
+    fn insert_lookup_remove_roundtrip() {
+        let mut ix = PrefixIndex::new();
+        assert!(ix.insert(ROOT_HASH, &[1, 2], 5));
+        assert_eq!(ix.lookup(ROOT_HASH, &[1, 2]), Some(5));
+        assert_eq!(ix.lookup(ROOT_HASH, &[1, 3]), None);
+        // First publisher wins.
+        assert!(!ix.insert(ROOT_HASH, &[1, 2], 9));
+        assert_eq!(ix.lookup(ROOT_HASH, &[1, 2]), Some(5));
+        assert!(ix.contains_page(5));
+        assert!(ix.remove_page(5));
+        assert!(!ix.remove_page(5));
+        assert_eq!(ix.lookup(ROOT_HASH, &[1, 2]), None);
+        assert!(ix.is_empty());
+    }
+
+    #[test]
+    fn colliding_hashes_never_alias_content() {
+        let mut ix = PrefixIndex::new();
+        // Force two different identities into the same bucket.
+        assert!(ix.insert_hashed(42, ROOT_HASH, &[1, 2], 0));
+        assert!(ix.insert_hashed(42, ROOT_HASH, &[9, 9], 1));
+        assert_eq!(ix.lookup_hashed(42, ROOT_HASH, &[1, 2]), Some(0));
+        assert_eq!(ix.lookup_hashed(42, ROOT_HASH, &[9, 9]), Some(1));
+        // Same hash, unknown content: a miss, never a page.
+        assert_eq!(ix.lookup_hashed(42, ROOT_HASH, &[5, 5]), None);
+        assert_eq!(ix.len(), 2);
+        assert!(ix.remove_page(0));
+        assert_eq!(ix.lookup_hashed(42, ROOT_HASH, &[9, 9]), Some(1), "bucket survives partial removal");
+    }
+}

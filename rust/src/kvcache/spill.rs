@@ -1,0 +1,86 @@
+//! Host-side arena for preempted sequences' private KV pages.
+//!
+//! When the batcher preempts a decoding slot in spill mode, the backend
+//! copies the victim's page contents out of the [`super::BlockPool`] into
+//! a [`SpilledKv`] (plain heap floats, outside the pool's fixed budget),
+//! releases the pool pages, and parks the spill in the [`SpillArena`]
+//! keyed by request id. Resume claims fresh pages, bulk-copies the floats
+//! back, and continues decoding at the exact position it left — bit-exact
+//! because the page contents *are* the sequence's KV state.
+//!
+//! Recompute mode skips all of this and replays the prompt plus the
+//! already-sampled tokens instead — cheaper in host memory, more compute
+//! on resume. Both are toggled by `KvConfig::preempt`.
+
+use std::collections::HashMap;
+
+/// One preempted sequence's KV state: whole pages, in page-table order.
+#[derive(Clone, Debug)]
+pub struct SpilledKv {
+    /// Positions that were filled when the sequence was swapped out.
+    pub len: usize,
+    /// `pages_for(len)` pages of raw page contents, concatenated.
+    pub data: Vec<f32>,
+}
+
+impl SpilledKv {
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Spilled sequences by request id. Host memory, unbounded by the pool —
+/// the batcher bounds it implicitly by the number of slots it can
+/// preempt.
+#[derive(Clone, Debug, Default)]
+pub struct SpillArena {
+    spills: HashMap<u64, SpilledKv>,
+}
+
+impl SpillArena {
+    pub fn new() -> SpillArena {
+        SpillArena::default()
+    }
+
+    pub fn insert(&mut self, req_id: u64, spill: SpilledKv) {
+        let prev = self.spills.insert(req_id, spill);
+        debug_assert!(prev.is_none(), "request {req_id} spilled twice without a resume");
+    }
+
+    pub fn take(&mut self, req_id: u64) -> Option<SpilledKv> {
+        self.spills.remove(&req_id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.spills.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spills.is_empty()
+    }
+
+    /// Total host bytes currently parked here.
+    pub fn bytes(&self) -> usize {
+        self.spills.values().map(SpilledKv::bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_take_roundtrip_and_bytes() {
+        let mut arena = SpillArena::new();
+        assert!(arena.is_empty());
+        arena.insert(7, SpilledKv { len: 3, data: vec![1.0; 32] });
+        arena.insert(9, SpilledKv { len: 1, data: vec![2.0; 16] });
+        assert_eq!(arena.len(), 2);
+        assert_eq!(arena.bytes(), (32 + 16) * 4);
+        let s = arena.take(7).unwrap();
+        assert_eq!(s.len, 3);
+        assert_eq!(s.data.len(), 32);
+        assert!(arena.take(7).is_none());
+        assert_eq!(arena.bytes(), 16 * 4);
+    }
+}

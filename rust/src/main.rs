@@ -48,7 +48,8 @@ fn usage() -> String {
          SUBCOMMANDS:\n  \
            tables    --table <1..10|fig4a|fig4b|fig5|all> [--artifacts DIR]\n  \
            serve     [--artifacts DIR] [--backend pjrt|native] [--requests N] [--batch N] [--threads N]\n              \
-                     [--kernel-impl auto|scalar|unrolled|avx2] [--simd-lanes 0|1|8|16] [--pipeline-tiles on|off]\n  \
+                     [--kernel-impl auto|scalar|unrolled|avx2] [--simd-lanes 0|1|8|16] [--pipeline-tiles on|off]\n              \
+                     [--prefix-cache on|off] [--preempt off|spill|recompute]\n  \
            bench-serve [--workload chat|rag|longform|bursty|mixed] [--seed N] [--requests N]\n              \
                      [--out BENCH_6.json] [--baseline PREV.json] [--threshold 0.2] [--advisory]\n  \
            quantize  --config m1v4g128 [--n 512] [--k 512]\n  \
@@ -117,6 +118,16 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .opt("page-size", Some("16"), "KV pool page size in tokens (native backend)")
         .opt("pool-pages", Some("0"), "KV pool pages shared by all slots (0 = auto)")
         .opt(
+            "prefix-cache",
+            Some("on"),
+            "share identical prompt prefixes via refcounted pool pages (on|off)",
+        )
+        .opt(
+            "preempt",
+            Some("spill"),
+            "swap lower-priority decodes out for admission: off | spill | recompute",
+        )
+        .opt(
             "fused-projections",
             Some("on"),
             "fuse Q/K/V and gate/up around one Psumbook build per k-tile (on|off)",
@@ -168,9 +179,16 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         ..Default::default()
     };
 
+    let prefix_cache = match m.str("prefix-cache")? {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => anyhow::bail!("--prefix-cache expects on|off, got '{other}'"),
+    };
     let kv = codegemm::config::KvConfig {
         page_size: m.usize("page-size")?,
         pool_pages: m.usize("pool-pages")?,
+        prefix_cache,
+        preempt: codegemm::config::PreemptMode::parse(m.str("preempt")?)?,
     };
     kv.validate()?;
     let cfg = ServeConfig {

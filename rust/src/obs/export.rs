@@ -13,6 +13,10 @@
 //! - kernel dispatch gauges: `kernel_impl` (str) and `simd_lanes` (int)
 //!   — the resolved CodeGEMM kernel the run dispatched to (added within
 //!   schema v1; older artifacts lack them and parse as `""` / `0`)
+//! - contention gauges: `prefix_hit_rate` (float) and `preemptions`
+//!   (int) — prefix-cache effectiveness and scheduler preemptions
+//!   (added within schema v1; older artifacts lack them and parse as
+//!   `0.0` / `0`)
 //! - counters (ints): `completed`, `rejected`, `infeasible`, `deferred`,
 //!   `kv_used_hwm_pages`, `kv_total_pages`
 //! - `phase_shares` — array of `{name, share}` step-phase attribution
@@ -78,6 +82,13 @@ pub struct BenchArtifact {
     /// Lane width of the resolved kernel (0 when absent, matching
     /// `kernel_impl`).
     pub simd_lanes: usize,
+    /// Fraction of prefix-cache probes that pinned shared pages (0.0
+    /// when the cache is off, never consulted, or the artifact predates
+    /// the gauge).
+    pub prefix_hit_rate: f64,
+    /// Decoding slots swapped out for higher-priority admissions (0 for
+    /// uncontended runs and artifacts predating the gauge).
+    pub preemptions: u64,
     pub kv_used_hwm_pages: usize,
     pub kv_total_pages: usize,
     pub slo_violations: Vec<String>,
@@ -131,6 +142,8 @@ impl BenchArtifact {
             build_share_ops: report.build_share_ops().unwrap_or(0.0),
             kernel_impl: report.kernel.map(|k| k.label().to_string()).unwrap_or_default(),
             simd_lanes: report.kernel.map(|k| k.lanes).unwrap_or(0),
+            prefix_hit_rate: report.prefix_hit_rate(),
+            preemptions: report.preemptions,
             kv_used_hwm_pages: hwm,
             kv_total_pages: pages,
             slo_violations,
@@ -176,6 +189,8 @@ impl BenchArtifact {
             ("build_share_ops", Json::Num(self.build_share_ops)),
             ("kernel_impl", Json::from(self.kernel_impl.as_str())),
             ("simd_lanes", Json::from(self.simd_lanes)),
+            ("prefix_hit_rate", Json::Num(self.prefix_hit_rate)),
+            ("preemptions", Json::from(self.preemptions as usize)),
             ("kv_used_hwm_pages", Json::from(self.kv_used_hwm_pages)),
             ("kv_total_pages", Json::from(self.kv_total_pages)),
             (
@@ -237,6 +252,10 @@ impl BenchArtifact {
                 .unwrap_or("")
                 .to_string(),
             simd_lanes: j.opt_usize("simd_lanes", 0)?,
+            // Contention gauges also arrived within schema v1 — absent
+            // in baselines from uninstrumented builds.
+            prefix_hit_rate: j.get("prefix_hit_rate").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            preemptions: j.opt_usize("preemptions", 0)? as u64,
             kv_used_hwm_pages: j.req_usize("kv_used_hwm_pages")?,
             kv_total_pages: j.req_usize("kv_total_pages")?,
             slo_violations,
@@ -341,6 +360,8 @@ mod tests {
             build_share_ops: 0.25,
             kernel_impl: "unrolled".into(),
             simd_lanes: 8,
+            prefix_hit_rate: 0.5,
+            preemptions: 2,
             kv_used_hwm_pages: 5,
             kv_total_pages: 8,
             slo_violations: vec![],
@@ -364,6 +385,8 @@ mod tests {
         assert_eq!(b.phase_shares, a.phase_shares);
         assert_eq!(b.kernel_impl, "unrolled");
         assert_eq!(b.simd_lanes, 8);
+        assert_eq!(b.prefix_hit_rate, 0.5);
+        assert_eq!(b.preemptions, 2);
         assert_eq!(b.structural_trace(), vec!["1:4:8:length".to_string()]);
     }
 
@@ -379,6 +402,21 @@ mod tests {
         let b = BenchArtifact::from_json(&j).unwrap();
         assert_eq!(b.kernel_impl, "");
         assert_eq!(b.simd_lanes, 0);
+        assert_eq!(b.decode_tok_s, 50.0);
+    }
+
+    #[test]
+    fn artifacts_without_contention_gauges_still_parse() {
+        // Baselines from builds predating prefix caching / preemption
+        // must load with the documented 0.0 / 0 defaults.
+        let mut j = artifact(50.0).to_json();
+        if let Json::Obj(o) = &mut j {
+            o.remove("prefix_hit_rate");
+            o.remove("preemptions");
+        }
+        let b = BenchArtifact::from_json(&j).unwrap();
+        assert_eq!(b.prefix_hit_rate, 0.0);
+        assert_eq!(b.preemptions, 0);
         assert_eq!(b.decode_tok_s, 50.0);
     }
 

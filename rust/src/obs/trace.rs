@@ -19,6 +19,10 @@
 //! |                  | first (0 when < 2 tokens were generated)        |
 //! | `prefill_chunks` | scheduler steps that fed prompt tokens (> 1 ⇒   |
 //! |                  | the shared prefill budget split this prompt)    |
+//! | `preemptions`    | times the request was swapped out of its slot   |
+//! |                  | mid-decode (spilled or dropped for recompute)   |
+//! | `prefix_hit_tokens` | prompt tokens served from pinned prefix-cache |
+//! |                  | pages instead of prefill at (re-)admission      |
 //!
 //! Token counts and the finish reason make the *structural* part of a
 //! span: two runs of the same seeded workload produce identical
@@ -53,6 +57,11 @@ pub struct SpanRecord {
     pub latency_s: f64,
     pub tpot_s: f64,
     pub prefill_chunks: u32,
+    /// Times this request was swapped out of a slot mid-decode.
+    pub preemptions: u32,
+    /// Prompt tokens served from pinned prefix-cache pages instead of
+    /// prefill at (re-)admission.
+    pub prefix_hit_tokens: usize,
 }
 
 impl SpanRecord {
@@ -75,12 +84,14 @@ impl SpanRecord {
             ("latency_s", Json::Num(self.latency_s)),
             ("tpot_s", Json::Num(self.tpot_s)),
             ("prefill_chunks", Json::from(self.prefill_chunks as usize)),
+            ("preemptions", Json::from(self.preemptions as usize)),
+            ("prefix_hit_tokens", Json::from(self.prefix_hit_tokens)),
         ])
     }
 
     /// One-line rendering for `MetricsReport::render`.
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "id {} [{}]: {}+{} tok, wait {:.1} ms, prefill {:.1} ms ({} chunks), \
              ttft {:.1} ms, decode {:.1} ms",
             self.id,
@@ -92,7 +103,14 @@ impl SpanRecord {
             self.prefill_chunks,
             self.ttft_s * 1e3,
             self.decode_s * 1e3,
-        )
+        );
+        if self.prefix_hit_tokens > 0 {
+            out.push_str(&format!(", {} cached tok", self.prefix_hit_tokens));
+        }
+        if self.preemptions > 0 {
+            out.push_str(&format!(", {} preemptions", self.preemptions));
+        }
+        out
     }
 }
 
@@ -179,6 +197,8 @@ mod tests {
             latency_s: 0.007,
             tpot_s: 0.001,
             prefill_chunks: 1,
+            preemptions: 2,
+            prefix_hit_tokens: 16,
         }
     }
 
@@ -213,6 +233,8 @@ mod tests {
         assert_eq!(j.req_usize("id").unwrap(), 7);
         assert_eq!(j.req_str("finish").unwrap(), FINISH_LENGTH);
         assert_eq!(j.req_usize("prefill_chunks").unwrap(), 1);
+        assert_eq!(j.req_usize("preemptions").unwrap(), 2);
+        assert_eq!(j.req_usize("prefix_hit_tokens").unwrap(), 16);
         assert!((j.req_f64("ttft_s").unwrap() - 0.003).abs() < 1e-12);
     }
 

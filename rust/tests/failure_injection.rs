@@ -1,9 +1,22 @@
 //! Failure-injection tests: corrupted artifacts, malformed containers,
 //! invalid configurations — every failure must surface as a clear error,
 //! never a panic or silent wrong answer.
+//!
+//! The scheduler section injects failures into the preemption machinery:
+//! a backend that panics mid-spill (the batcher must fall back to
+//! recompute-from-prompt, still bit-exact), an infeasible request
+//! arriving while a preempted victim waits to resume (rejected cleanly,
+//! the victim still completes), and pool exhaustion with no
+//! lower-priority victim (degrades to deferral, drains within a bounded
+//! step count).
 
-use codegemm::config::{KernelConfig, ModelConfig, QuantConfig};
-use codegemm::model::ModelWeights;
+use codegemm::config::{KernelConfig, KvConfig, ModelConfig, PreemptMode, QuantConfig, ServeConfig};
+use codegemm::coordinator::{
+    Batcher, DecodeBackend, FinishReason, Metrics, NativeBackend, Request, SlotStep,
+};
+use codegemm::kvcache::{KvStats, SpilledKv};
+use codegemm::model::{EngineKind, ModelWeights};
+use std::sync::Arc;
 use codegemm::quant::pack::PackedCodes;
 use codegemm::quant::Quantizer;
 use codegemm::runtime::{Manifest, ModelRuntime};
@@ -131,4 +144,208 @@ fn model_weights_reject_wrong_shapes() {
     tf.tensors.retain(|t| t.name != "lm_head");
     tf.push(Tensor::f32("lm_head", vec![cfg.vocab, cfg.hidden - 1], vec![0.0; cfg.vocab * (cfg.hidden - 1)]));
     assert!(ModelWeights::from_tensor_file(cfg, &tf).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler failure injection: the preemption machinery under faults
+// ---------------------------------------------------------------------------
+
+/// A pool-backed backend whose spill path panics mid-preemption — the
+/// batcher must contain the panic and fall back to
+/// recompute-from-prompt (the victim's pages are still held at the
+/// panic, so an ordinary `reset_slot` reclaims them).
+struct PanickingSpillBackend {
+    inner: NativeBackend,
+}
+
+impl DecodeBackend for PanickingSpillBackend {
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+    fn max_seq(&self) -> usize {
+        self.inner.max_seq()
+    }
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+    fn step(&mut self, steps: &[SlotStep]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.inner.step(steps)
+    }
+    fn prefill(
+        &mut self,
+        slot: usize,
+        tokens: &[usize],
+        pos: usize,
+        want_logits: bool,
+    ) -> anyhow::Result<Option<Vec<f32>>> {
+        self.inner.prefill(slot, tokens, pos, want_logits)
+    }
+    fn reset_slot(&mut self, slot: usize) {
+        self.inner.reset_slot(slot)
+    }
+    fn can_admit(&self, max_tokens: usize) -> bool {
+        self.inner.can_admit(max_tokens)
+    }
+    fn can_ever_admit(&self, max_tokens: usize) -> bool {
+        self.inner.can_ever_admit(max_tokens)
+    }
+    fn reserve(&mut self, slot: usize, max_tokens: usize) {
+        self.inner.reserve(slot, max_tokens)
+    }
+    fn can_admit_prompt(&self, prompt: &[usize], max_tokens: usize) -> bool {
+        self.inner.can_admit_prompt(prompt, max_tokens)
+    }
+    fn reserve_with_prefix(&mut self, slot: usize, prompt: &[usize], max_tokens: usize) -> usize {
+        self.inner.reserve_with_prefix(slot, prompt, max_tokens)
+    }
+    fn publish_prefix(&mut self, slot: usize, tokens: &[usize]) {
+        self.inner.publish_prefix(slot, tokens)
+    }
+    fn spill(&mut self, _slot: usize) -> Option<SpilledKv> {
+        panic!("injected spill failure");
+    }
+    fn restore(&mut self, slot: usize, spill: &SpilledKv, max_tokens: usize) -> bool {
+        self.inner.restore(slot, spill, max_tokens)
+    }
+    fn kv_stats(&self) -> Option<KvStats> {
+        self.inner.kv_stats()
+    }
+    fn label(&self) -> String {
+        format!("panicking-spill/{}", self.inner.label())
+    }
+}
+
+/// A 4-page pool where one request's lifetime (3 prompt + 6 generated →
+/// 3 pages) leaves too little for a second — the contention geometry the
+/// batcher unit tests use, reused by every scheduler-fault test below.
+fn contended_serve_config(mode: PreemptMode) -> (KvConfig, ServeConfig) {
+    let kv = KvConfig { page_size: 4, pool_pages: 4, preempt: mode, ..KvConfig::default() };
+    let cfg = ServeConfig {
+        max_batch: 2,
+        max_new_tokens: 6,
+        temperature: 0.0,
+        queue_capacity: 8,
+        kv: kv.clone(),
+        ..Default::default()
+    };
+    (kv, cfg)
+}
+
+/// Greedy tokens of `prompt` served alone (the uncontended reference).
+fn solo_tokens(w: &ModelWeights, kv: &KvConfig, cfg: &ServeConfig, prompt: Vec<usize>) -> Vec<usize> {
+    let backend = Box::new(NativeBackend::with_kv(w, EngineKind::Dense, 2, kv));
+    let mut b = Batcher::new(backend, cfg.clone(), Arc::new(Metrics::new()));
+    b.submit(Request::new(0, prompt, cfg.max_new_tokens));
+    b.run_to_completion().remove(0).tokens
+}
+
+#[test]
+fn spill_panic_falls_back_to_recompute_and_stays_bit_exact() {
+    let w = ModelWeights::random(ModelConfig::tiny(), 3);
+    let (kv, cfg) = contended_serve_config(PreemptMode::Spill);
+    let want_low = solo_tokens(&w, &kv, &cfg, vec![1, 2, 3]);
+    let want_high = solo_tokens(&w, &kv, &cfg, vec![4, 5, 6]);
+
+    let backend = Box::new(PanickingSpillBackend {
+        inner: NativeBackend::with_kv(&w, EngineKind::Dense, 2, &kv),
+    });
+    let mut b = Batcher::new(backend, cfg, Arc::new(Metrics::new()));
+    b.submit(Request::new(1, vec![1, 2, 3], 6)); // priority 0
+    b.step(); // prefill low
+    b.step(); // low decodes — a valid preemption victim now
+    b.submit(Request::new(2, vec![4, 5, 6], 6).with_priority(1));
+    let mut out = b.run_to_completion();
+    out.sort_by_key(|r| r.id);
+
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].tokens, want_low, "recompute fallback diverged");
+    assert_eq!(out[1].tokens, want_high, "preempting request diverged");
+    assert!(out.iter().all(|r| r.finish == FinishReason::Length));
+    let report = b.metrics.report();
+    assert!(report.preemptions >= 1, "the high-priority arrival must preempt");
+    assert_eq!(report.preempt_spills, 0, "the injected panic must abort every spill");
+    assert_eq!(
+        report.preempt_recomputes, report.preemptions,
+        "every panicked spill must fall back to recompute"
+    );
+    assert_eq!(report.resumes, report.preemptions, "every victim resumes");
+    // The aborted spill must not leak the victim's pages.
+    let kv_stats = report.kv.expect("pool-backed backend");
+    assert_eq!(kv_stats.pool.used_pages, 0);
+    assert_eq!(kv_stats.pool.live_refs, 0);
+    assert_eq!(kv_stats.pool.free_pages, kv_stats.pool.total_pages, "full reclamation");
+}
+
+#[test]
+fn infeasible_request_rejected_while_preempted_victim_waits() {
+    let w = ModelWeights::random(ModelConfig::tiny(), 3);
+    let (kv, cfg) = contended_serve_config(PreemptMode::Spill);
+    let want_low = solo_tokens(&w, &kv, &cfg, vec![1, 2, 3]);
+    let want_high = solo_tokens(&w, &kv, &cfg, vec![4, 5, 6]);
+
+    let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 2, &kv));
+    let mut b = Batcher::new(backend, cfg, Arc::new(Metrics::new()));
+    b.submit(Request::new(1, vec![1, 2, 3], 6)); // priority 0
+    b.step();
+    b.step();
+    b.submit(Request::new(2, vec![4, 5, 6], 6).with_priority(1));
+    b.step(); // preempts the low request; its victim now waits to resume
+    assert!(b.metrics.report().preemptions >= 1, "setup: preemption must have happened");
+    // 30 prompt + 6 new = 36 positions → 9 pages: can never fit the
+    // 4-page pool, even empty. Must be rejected immediately — not
+    // deferred forever ahead of (or behind) the waiting victim.
+    let huge: Vec<usize> = (1..=30).collect();
+    b.submit(Request::new(3, huge, 6).with_priority(2));
+    let mut out = b.run_to_completion();
+    out.sort_by_key(|r| r.id);
+
+    assert_eq!(out.len(), 3);
+    assert_eq!(out[0].tokens, want_low, "victim diverged after resume");
+    assert_eq!(out[0].finish, FinishReason::Length);
+    assert_eq!(out[1].tokens, want_high);
+    assert_eq!(out[1].finish, FinishReason::Length);
+    assert_eq!(out[2].finish, FinishReason::Rejected, "infeasible request must reject");
+    assert!(out[2].tokens.is_empty());
+    let report = b.metrics.report();
+    assert_eq!(report.resumes, report.preemptions, "the rejection must not strand the victim");
+    let kv_stats = report.kv.expect("pool-backed backend");
+    assert_eq!(kv_stats.pool.used_pages, 0);
+    assert_eq!(kv_stats.pool.free_pages, kv_stats.pool.total_pages);
+}
+
+#[test]
+fn exhaustion_without_victim_degrades_to_bounded_deferral() {
+    let w = ModelWeights::random(ModelConfig::tiny(), 3);
+    // Preemption is ON — but the contender has equal priority, so there
+    // is never a strictly-lower victim and the only legal behavior is
+    // deferral until completion reclaims pages.
+    let (kv, cfg) = contended_serve_config(PreemptMode::Spill);
+    let want_first = solo_tokens(&w, &kv, &cfg, vec![1, 2, 3]);
+    let want_second = solo_tokens(&w, &kv, &cfg, vec![4, 5, 6]);
+
+    let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 2, &kv));
+    let mut b = Batcher::new(backend, cfg, Arc::new(Metrics::new()));
+    b.submit(Request::new(1, vec![1, 2, 3], 6));
+    b.step();
+    b.step();
+    b.submit(Request::new(2, vec![4, 5, 6], 6)); // equal priority: no victim
+    let mut out = Vec::new();
+    let mut steps = 0;
+    while !b.is_idle() {
+        assert!(steps < 64, "equal-priority contention must drain within a bounded step count");
+        b.step();
+        out.extend(b.take_finished());
+        steps += 1;
+    }
+    out.sort_by_key(|r| r.id);
+
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].tokens, want_first, "running request must be undisturbed");
+    assert_eq!(out[1].tokens, want_second, "deferred request diverged once admitted");
+    let report = b.metrics.report();
+    assert_eq!(report.preemptions, 0, "equal priority must never preempt");
+    assert!(report.deferred >= 1, "exhaustion without a victim must count deferrals");
+    let kv_stats = report.kv.expect("pool-backed backend");
+    assert_eq!(kv_stats.pool.used_pages, 0);
+    assert_eq!(kv_stats.pool.free_pages, kv_stats.pool.total_pages);
 }

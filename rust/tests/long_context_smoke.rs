@@ -6,8 +6,15 @@
 //! This is the CI guard for the paged-KV serving path at context lengths
 //! the unit tests don't reach (prompt ≫ page_size, many pages per
 //! sequence, prefill spanning several scheduler steps).
+//!
+//! The contention tests extend it to the multi-tenant pool: requests
+//! sharing a long prompt prefix through the refcounted prefix cache
+//! (including a copy-on-write divergence) while a high-priority arrival
+//! preempts a decoding low-priority request — everything must stay
+//! bitwise identical to uncontended one-at-a-time serving, in both
+//! preemption modes, with full pool reclamation at drain.
 
-use codegemm::config::{KvConfig, ModelConfig, ServeConfig};
+use codegemm::config::{KvConfig, ModelConfig, PreemptMode, ServeConfig};
 use codegemm::coordinator::{Batcher, Metrics, NativeBackend, Request};
 use codegemm::model::{EngineKind, ModelWeights};
 use std::sync::Arc;
@@ -33,7 +40,7 @@ fn long_prompt_serves_and_reclaims_through_paged_pool() {
     let cfg_model = long_ctx_config();
     let w = ModelWeights::random(cfg_model.clone(), 17);
     // 16-token pages, auto pool (2 slots × ceil(384/16) = 48 pages).
-    let kv = KvConfig { page_size: 16, pool_pages: 0 };
+    let kv = KvConfig { page_size: 16, pool_pages: 0, ..KvConfig::default() };
     let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 2, &kv));
     let cfg = ServeConfig {
         max_batch: 2,
@@ -90,7 +97,7 @@ fn long_prompt_greedy_output_matches_direct_model_run() {
     }
 
     // Served run (paged pool, budgeted prefill).
-    let kv = KvConfig { page_size: 16, pool_pages: 0 };
+    let kv = KvConfig { page_size: 16, pool_pages: 0, ..KvConfig::default() };
     let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 2, &kv));
     let cfg = ServeConfig {
         max_batch: 2,
@@ -104,4 +111,112 @@ fn long_prompt_greedy_output_matches_direct_model_run() {
     b.submit(Request::new(1, prompt, 4));
     let out = b.run_to_completion();
     assert_eq!(out[0].tokens, want, "scheduled serving diverged from the direct model run");
+}
+
+/// Contention scenario exercised in both preemption modes:
+///
+/// * three requests share a 64-token (4-page) prompt prefix; the first
+///   publishes it, the second is *exactly* the prefix, so the matched
+///   cap (`matched = len - 1`) forces a copy-on-write divergence inside
+///   the last shared page;
+/// * the pool (9 pages) fits the long low-priority request alone, so
+///   the high-priority arrival must preempt it mid-decode;
+/// * every output must be bitwise identical to an uncontended solo run
+///   with the prefix cache off, and the pool must fully drain.
+fn contended_serving_is_bit_exact(mode: PreemptMode) {
+    let cfg_model = long_ctx_config();
+    let w = ModelWeights::random(cfg_model.clone(), 17);
+
+    let prefix: Vec<usize> = (0..64).map(|i| (i * 5) % 251 + 1).collect();
+    let p_low: Vec<usize> = prefix.iter().copied().chain((0..16).map(|i| 100 + i)).collect();
+    let p_high = prefix.clone(); // exactly the published prefix → CoW
+    let p_mid: Vec<usize> = prefix.iter().copied().chain((0..8).map(|i| 200 + i)).collect();
+
+    // Uncontended references: ample pool, sharing and preemption off.
+    let ref_kv = KvConfig {
+        page_size: 16,
+        pool_pages: 0,
+        prefix_cache: false,
+        preempt: PreemptMode::Off,
+    };
+    let reference = |prompt: Vec<usize>, max_new: usize| {
+        let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 2, &ref_kv));
+        let cfg = ServeConfig {
+            max_batch: 2,
+            max_new_tokens: max_new,
+            temperature: 0.0,
+            prefill_budget: 128,
+            kv: ref_kv.clone(),
+            ..Default::default()
+        };
+        let mut b = Batcher::new(backend, cfg, Arc::new(Metrics::new()));
+        b.submit(Request::new(0, prompt, max_new));
+        b.run_to_completion().remove(0).tokens
+    };
+    let want_low = reference(p_low.clone(), 48);
+    let want_high = reference(p_high.clone(), 8);
+    let want_mid = reference(p_mid.clone(), 8);
+
+    // Contended pool: the low request's lifetime is ceil(128/16) = 8
+    // pages, so 9 pages admit it alone but not a cold second request.
+    let kv = KvConfig { page_size: 16, pool_pages: 9, preempt: mode, ..KvConfig::default() };
+    let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 2, &kv));
+    let cfg = ServeConfig {
+        max_batch: 2,
+        max_new_tokens: 48,
+        temperature: 0.0,
+        prefill_budget: 128,
+        kv: kv.clone(),
+        ..Default::default()
+    };
+    let mut b = Batcher::new(backend, cfg, Arc::new(Metrics::new()));
+    b.submit(Request::new(1, p_low, 48)); // priority 0
+    b.step(); // prefill (one chunk) + first sample: publishes the prefix
+    b.step(); // decoding — a valid preemption victim now
+    b.submit(Request::new(2, p_high, 8).with_priority(1));
+    b.submit(Request::new(3, p_mid, 8)); // priority 0, queued behind
+    let mut out = b.run_to_completion();
+
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), 3);
+    assert_eq!(out[0].tokens, want_low, "preempted request diverged from its solo run");
+    assert_eq!(out[1].tokens, want_high, "prefix-sharing request diverged from its solo run");
+    assert_eq!(out[2].tokens, want_mid, "queued request diverged from its solo run");
+
+    let report = b.metrics.report();
+    assert!(report.preemptions >= 1, "tight pool + priorities must force a preemption");
+    assert_eq!(report.resumes, report.preemptions, "every victim resumes and completes");
+    match mode {
+        PreemptMode::Spill => assert_eq!(report.preempt_spills, report.preemptions),
+        PreemptMode::Recompute => assert_eq!(report.preempt_recomputes, report.preemptions),
+        PreemptMode::Off => unreachable!("contention test runs with preemption on"),
+    }
+
+    let kv_stats = report.kv.expect("pool-backed backend reports kv stats");
+    assert!(kv_stats.pool.prefix_hits >= 1, "the shared prefix must be served from cache");
+    assert!(
+        kv_stats.pool.prefix_hit_tokens >= 63,
+        "hit tokens: {}",
+        kv_stats.pool.prefix_hit_tokens
+    );
+    assert!(report.prefix_hit_rate() > 0.0);
+    assert!(
+        kv_stats.pool.cow_copies >= 1,
+        "the exact-prefix prompt must diverge through copy-on-write"
+    );
+    // Full reclamation: no pages held, no dangling refcounts; cached
+    // (refcount-zero, revivable) pages still count as free capacity.
+    assert_eq!(kv_stats.pool.used_pages, 0);
+    assert_eq!(kv_stats.pool.live_refs, 0);
+    assert_eq!(kv_stats.pool.free_pages, kv_stats.pool.total_pages, "full reclamation");
+}
+
+#[test]
+fn contended_serving_bit_exact_spill_mode() {
+    contended_serving_is_bit_exact(PreemptMode::Spill);
+}
+
+#[test]
+fn contended_serving_bit_exact_recompute_mode() {
+    contended_serving_is_bit_exact(PreemptMode::Recompute);
 }

@@ -1,0 +1,437 @@
+//! Property tests for the refcounted prefix-sharing page pool (via
+//! `util::proptest`):
+//!
+//! - **refcount conservation**: over random interleavings of
+//!   alloc/free/pin/publish, every page's pool refcount equals a
+//!   brute-force census of the references the test itself holds, and
+//!   all derived gauges (`used_pages`, `live_refs`, `cached_pages`,
+//!   `free_pages`, `prefix_pages`) agree with the census;
+//! - **hash-collision safety**: identities forced into one index bucket
+//!   (`insert_hashed`/`lookup_hashed`) never alias — a colliding hash
+//!   with different content is a miss, never another prompt's page;
+//! - **eviction safety**: allocating to exhaustion only ever recycles
+//!   refcount-zero cached pages — pages with holders are untouched and
+//!   keep their registrations;
+//! - **sharing is invisible to the model**: prefill over pinned prefix
+//!   pages another sequence published (including the forced
+//!   copy-on-write divergence when the hit is capped inside a page) is
+//!   **bit-identical** to a cold contiguous-cache run, through greedy
+//!   decode.
+
+use codegemm::config::ModelConfig;
+use codegemm::kvcache::{BlockPool, KvLayout, PagedKv, PrefixIndex, SeqKv, ROOT_HASH};
+use codegemm::model::{argmax, EngineKind, LlamaModel, ModelWeights};
+use codegemm::util::prng::Prng;
+use codegemm::util::proptest as pt;
+
+// ---------------------------------------------------------------------------
+// Refcount conservation under random op interleavings
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+struct OpsCase {
+    pages: usize,
+    n_ops: usize,
+    seed: u64,
+}
+
+fn small_layout(page_size: usize) -> KvLayout {
+    KvLayout { n_layers: 1, kv_dim: 2, page_size, max_seq: 256 }
+}
+
+/// Compare every pool gauge against a brute-force census of the
+/// references `holders` records (one entry per reference the test owns).
+fn census(pool: &BlockPool, holders: &[usize]) -> Result<(), String> {
+    let total = pool.total_pages();
+    let mut want = vec![0u32; total];
+    for &p in holders {
+        want[p] += 1;
+    }
+    for p in 0..total {
+        pt::ensure(
+            pool.refs(p) == want[p],
+            format!("page {p}: pool refcount {} != census {}", pool.refs(p), want[p]),
+        )?;
+    }
+    let used = (0..total).filter(|&p| want[p] > 0).count();
+    let cached = (0..total).filter(|&p| want[p] == 0 && pool.is_registered(p)).count();
+    let registered = (0..total).filter(|&p| pool.is_registered(p)).count();
+    let s = pool.stats();
+    pt::ensure(s.used_pages == used, format!("used_pages {} != census {used}", s.used_pages))?;
+    pt::ensure(
+        s.live_refs == holders.len(),
+        format!("live_refs {} != held references {}", s.live_refs, holders.len()),
+    )?;
+    pt::ensure(
+        s.cached_pages == cached,
+        format!("cached_pages {} != census {cached}", s.cached_pages),
+    )?;
+    // free list + cached-evictable together are the allocatable set.
+    pt::ensure(
+        s.free_pages == total - used,
+        format!("free_pages {} != {total} - used {used}", s.free_pages),
+    )?;
+    pt::ensure(
+        s.prefix_pages == registered,
+        format!("prefix_pages {} != census {registered}", s.prefix_pages),
+    )?;
+    Ok(())
+}
+
+#[test]
+fn prop_refcounts_match_brute_force_census() {
+    let gen = pt::gen_fn(|rng: &mut Prng| OpsCase {
+        pages: 2 + rng.index(6),
+        n_ops: 1 + rng.index(60),
+        seed: rng.next_u64(),
+    });
+    let cfg = pt::PropConfig { cases: 48, ..Default::default() };
+    pt::assert_prop("refcount conservation", cfg, &gen, |c: &OpsCase| {
+        let ps = 4;
+        let mut pool = BlockPool::new(small_layout(ps), c.pages);
+        let mut rng = Prng::seeded(c.seed);
+        // One entry per reference this test owns (pages may repeat:
+        // shared pages hold one entry per holder).
+        let mut holders: Vec<usize> = Vec::new();
+        let mut published = 0usize;
+        for op in 0..c.n_ops {
+            match rng.index(4) {
+                // Allocate (may evict a cached page — census observes the
+                // dropped registration through `is_registered`).
+                0 => {
+                    if let Some(p) = pool.try_alloc() {
+                        holders.push(p);
+                    }
+                }
+                // Drop one of our references.
+                1 => {
+                    if !holders.is_empty() {
+                        let i = rng.index(holders.len());
+                        let p = holders.swap_remove(i);
+                        pool.free(p);
+                    }
+                }
+                // Add a holder: share a used page or revive a cached one.
+                2 => {
+                    let mut cands: Vec<usize> = holders.clone();
+                    cands.extend(
+                        (0..pool.total_pages())
+                            .filter(|&p| pool.refs(p) == 0 && pool.is_registered(p)),
+                    );
+                    if !cands.is_empty() {
+                        let p = cands[rng.index(cands.len())];
+                        pool.pin(p);
+                        holders.push(p);
+                    }
+                }
+                // Register a held, not-yet-registered page under a fresh
+                // (never colliding) single-page identity.
+                _ => {
+                    let cands: Vec<usize> = holders
+                        .iter()
+                        .copied()
+                        .filter(|&p| !pool.is_registered(p))
+                        .collect();
+                    if !cands.is_empty() {
+                        let p = cands[rng.index(cands.len())];
+                        let toks: Vec<usize> =
+                            (0..ps).map(|j| 10_000 + published * ps + j).collect();
+                        pool.publish_prefix(&toks, &[p]);
+                        published += 1;
+                    }
+                }
+            }
+            census(&pool, &holders).map_err(|e| format!("after op {op}: {e}"))?;
+        }
+        // Drain: dropping every reference must return the pool to fully
+        // allocatable, with only registered pages surviving as cached.
+        for p in holders.drain(..) {
+            pool.free(p);
+        }
+        census(&pool, &[])?;
+        let s = pool.stats();
+        pt::ensure(
+            s.free_pages == s.total_pages,
+            format!("drained pool not fully allocatable: {} of {}", s.free_pages, s.total_pages),
+        )
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Hash collisions degrade to misses, never to aliasing
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+struct CollisionCase {
+    entries: usize,
+    seed: u64,
+}
+
+#[test]
+fn prop_colliding_hashes_never_alias_content() {
+    let gen = pt::gen_fn(|rng: &mut Prng| CollisionCase {
+        entries: 1 + rng.index(6),
+        seed: rng.next_u64(),
+    });
+    let cfg = pt::PropConfig { cases: 64, ..Default::default() };
+    pt::assert_prop("collision safety", cfg, &gen, |c: &CollisionCase| {
+        let mut rng = Prng::seeded(c.seed);
+        let mut ix = PrefixIndex::new();
+        // Distinct identities forced into ONE bucket: same hash, same
+        // parent, different token content.
+        let idents: Vec<Vec<usize>> =
+            (0..c.entries).map(|i| vec![i, rng.index(1000), rng.index(1000)]).collect();
+        const HASH: u64 = 0xDEAD_BEEF;
+        for (page, toks) in idents.iter().enumerate() {
+            pt::ensure(
+                ix.insert_hashed(HASH, ROOT_HASH, toks, page),
+                format!("fresh identity {toks:?} rejected"),
+            )?;
+        }
+        for (page, toks) in idents.iter().enumerate() {
+            pt::ensure(
+                ix.lookup_hashed(HASH, ROOT_HASH, toks) == Some(page),
+                format!("identity {toks:?} did not resolve to its own page {page}"),
+            )?;
+        }
+        // Same hash, content the index has never seen: a miss, never a
+        // wrong page.
+        let unknown = vec![c.entries + 1, 2000, 2000];
+        pt::ensure(
+            ix.lookup_hashed(HASH, ROOT_HASH, &unknown).is_none(),
+            "colliding unknown content resolved to a page",
+        )?;
+        // A different parent chain with identical tokens is a different
+        // identity — also a miss.
+        pt::ensure(
+            ix.lookup_hashed(HASH, 12_345, &idents[0]).is_none(),
+            "same tokens under a different parent resolved to a page",
+        )?;
+        // Partial removal leaves the other bucket entries resolvable.
+        pt::ensure(ix.remove_page(0), "page 0 was registered")?;
+        pt::ensure(ix.lookup_hashed(HASH, ROOT_HASH, &idents[0]).is_none(), "removed entry hit")?;
+        for (page, toks) in idents.iter().enumerate().skip(1) {
+            pt::ensure(
+                ix.lookup_hashed(HASH, ROOT_HASH, toks) == Some(page),
+                format!("bucket survivor {toks:?} lost after removal"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Eviction never reclaims referenced pages
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+struct EvictCase {
+    pages: usize,
+    held: usize,
+    seed: u64,
+}
+
+#[test]
+fn prop_eviction_only_recycles_refcount_zero_pages() {
+    let gen = pt::gen_fn(|rng: &mut Prng| {
+        let pages = 3 + rng.index(6);
+        EvictCase { pages, held: 1 + rng.index(pages), seed: rng.next_u64() }
+    });
+    let cfg = pt::PropConfig { cases: 64, ..Default::default() };
+    pt::assert_prop("eviction safety", cfg, &gen, |c: &EvictCase| {
+        let ps = 4;
+        let mut pool = BlockPool::new(small_layout(ps), c.pages);
+        let mut rng = Prng::seeded(c.seed);
+        let mut holders: Vec<usize> = (0..c.held).map(|_| pool.try_alloc().unwrap()).collect();
+        // Register a random subset of the held pages…
+        for (i, &p) in holders.iter().enumerate() {
+            if rng.index(2) == 0 {
+                let toks: Vec<usize> = (0..ps).map(|j| 10_000 + i * ps + j).collect();
+                pool.publish_prefix(&toks, &[p]);
+            }
+        }
+        // …then drop a random subset of references (registered drops
+        // park as cached-evictable, unregistered drops go to the free
+        // list).
+        let mut kept: Vec<usize> = Vec::new();
+        for p in holders.drain(..) {
+            if rng.index(2) == 0 {
+                pool.free(p);
+            } else {
+                kept.push(p);
+            }
+        }
+        let kept_regs: Vec<bool> = kept.iter().map(|&p| pool.is_registered(p)).collect();
+        // Allocate to exhaustion: everything allocatable must surface…
+        let mut fresh: Vec<usize> = Vec::new();
+        while let Some(p) = pool.try_alloc() {
+            fresh.push(p);
+            pt::ensure(fresh.len() <= c.pages, "allocator yielded more pages than exist")?;
+        }
+        pt::ensure(
+            kept.len() + fresh.len() == c.pages,
+            format!("{} held + {} fresh != {} total", kept.len(), fresh.len(), c.pages),
+        )?;
+        // …but never a page we still hold, and never with a stale
+        // registration (eviction unregisters before recycling).
+        for &p in &fresh {
+            pt::ensure(!kept.contains(&p), format!("allocator recycled held page {p}"))?;
+            pt::ensure(
+                !pool.is_registered(p),
+                format!("recycled page {p} kept its prefix registration"),
+            )?;
+        }
+        for (i, &p) in kept.iter().enumerate() {
+            pt::ensure(pool.refs(p) == 1, format!("held page {p} lost its reference"))?;
+            pt::ensure(
+                pool.is_registered(p) == kept_regs[i],
+                format!("held page {p} registration disturbed by allocation pressure"),
+            )?;
+        }
+        pt::ensure(pool.try_alloc().is_none(), "exhausted pool still allocated")?;
+        pt::ensure(pool.used_pages() == c.pages, "exhaustion census")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Prefix sharing + CoW is bitwise invisible to the model
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+struct ShareCase {
+    page_size: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+    /// Full pages of the published prompt the hitter reuses.
+    shared_pages: usize,
+    /// Tokens the hitter appends past the shared prefix (0 = the
+    /// exact-prefix prompt, whose matched cap forces copy-on-write).
+    suffix_len: usize,
+    decode_steps: usize,
+    seed: u64,
+}
+
+const MAX_SEQ: usize = 64;
+
+fn share_model_config(c: &ShareCase) -> ModelConfig {
+    ModelConfig {
+        name: "prefix-prop".into(),
+        vocab: 48,
+        hidden: c.n_heads * c.head_dim,
+        n_layers: 2,
+        n_heads: c.n_heads,
+        n_kv_heads: c.n_kv_heads,
+        ffn: 3 * c.n_heads * c.head_dim,
+        max_seq: MAX_SEQ,
+        rope_theta_milli: 10_000_000,
+    }
+}
+
+#[test]
+fn prop_shared_prefix_prefill_bit_exact_vs_contiguous() {
+    let heads: [(usize, usize); 3] = [(2, 1), (4, 2), (4, 4)];
+    let gen = pt::gen_fn(move |rng: &mut Prng| {
+        let (n_heads, n_kv_heads) = heads[rng.index(heads.len())];
+        ShareCase {
+            page_size: [2, 4, 8][rng.index(3)],
+            n_heads,
+            n_kv_heads,
+            head_dim: if rng.index(2) == 0 { 4 } else { 8 },
+            shared_pages: 1 + rng.index(3),
+            suffix_len: rng.index(6),
+            decode_steps: rng.index(3),
+            seed: rng.next_u64(),
+        }
+    });
+    let cfg = pt::PropConfig { cases: 24, ..Default::default() };
+    pt::assert_prop("shared prefill == contiguous", cfg, &gen, |c: &ShareCase| {
+        let ps = c.page_size;
+        let cfg_model = share_model_config(c);
+        let w = ModelWeights::random(cfg_model.clone(), c.seed);
+        let mut model = LlamaModel::load(&w, EngineKind::Dense, None);
+        let mut rng = Prng::seeded(c.seed ^ 0x5A5A);
+
+        // Publisher prompt: at least `shared_pages` full pages plus a
+        // partial tail (published pages cover only full pages).
+        let a_len = c.shared_pages * ps + rng.index(ps);
+        let prompt_a: Vec<usize> = (0..a_len.max(1)).map(|_| rng.index(cfg_model.vocab)).collect();
+        // Hitter prompt: a full-page prefix of A plus a fresh suffix.
+        let fp = 1 + rng.index(c.shared_pages);
+        let mut prompt_b: Vec<usize> = prompt_a[..fp * ps].to_vec();
+        prompt_b.extend((0..c.suffix_len).map(|_| rng.index(cfg_model.vocab)));
+
+        let layout = KvLayout {
+            n_layers: cfg_model.n_layers,
+            kv_dim: cfg_model.kv_dim(),
+            page_size: ps,
+            max_seq: MAX_SEQ,
+        };
+        let mut pool = BlockPool::new(layout, 2 * layout.max_pages_per_seq());
+
+        // Publisher prefills cold and registers its full prompt pages.
+        let mut a = SeqKv::with_capacity(layout.max_pages_per_seq());
+        {
+            let mut kv = PagedKv::bind(&mut pool, &mut a);
+            model.forward_batch(&prompt_a, 0, &mut kv);
+        }
+        pool.publish_prefix(&prompt_a, a.pages());
+
+        // Hitter admission, mirroring the serving backend's plan: pin the
+        // matched pages, cap the hit below the prompt length so the final
+        // position is always recomputed (first-sample logits), pre-claim
+        // the CoW spare when the cap lands inside a pinned page.
+        let avail = pool.prefix_peek(&prompt_b);
+        pt::ensure(avail >= fp, format!("published prefix not hittable: {avail} < {fp}"))?;
+        let matched = (avail * ps).min(prompt_b.len() - 1);
+        let pin = layout.pages_for(matched);
+        let pinned = pool.prefix_acquire(&prompt_b, pin);
+        pt::ensure(pinned.len() == pin, format!("pinned {} of {pin}", pinned.len()))?;
+        let mut b = SeqKv::with_capacity(layout.max_pages_per_seq());
+        b.set_prefix(&pinned, matched);
+        let expect_cow = matched % ps != 0;
+        if expect_cow {
+            pt::ensure(b.claim_cow_spare(&mut pool), "pool exhausted claiming CoW spare")?;
+        }
+        let lp = {
+            let mut kv = PagedKv::bind(&mut pool, &mut b);
+            model.forward_batch(&prompt_b[matched..], matched, &mut kv)
+        };
+
+        // Cold contiguous reference over the identical prompt.
+        let mut flat = model.new_cache();
+        let lf = model.forward_batch(&prompt_b, 0, &mut flat);
+        pt::ensure(lf == lp, format!("shared prefill logits not bit-identical ({c:?})"))?;
+        if expect_cow {
+            pt::ensure(pool.stats().cow_copies >= 1, "capped hit did not copy-on-write")?;
+        }
+
+        // Greedy decode stays bitwise locked.
+        let (mut lf, mut lp) = (lf, lp);
+        for step in 0..c.decode_steps {
+            let pos = prompt_b.len() + step;
+            if pos >= MAX_SEQ {
+                break;
+            }
+            let (tf, tp) = (argmax(&lf), argmax(&lp));
+            pt::ensure(tf == tp, format!("greedy token diverged at step {step} ({c:?})"))?;
+            lf = model.forward(tf, pos, &mut flat);
+            lp = {
+                let mut kv = PagedKv::bind(&mut pool, &mut b);
+                model.forward(tp, pos, &mut kv)
+            };
+            pt::ensure(lf == lp, format!("decode logits diverged at step {step} ({c:?})"))?;
+        }
+
+        // The publisher's pages must be untouched by the hitter: its own
+        // replay of the final prompt position still reads shared content.
+        b.release(&mut pool);
+        a.release(&mut pool);
+        let s = pool.stats();
+        pt::ensure(s.used_pages == 0 && s.live_refs == 0, "references leaked")?;
+        pt::ensure(
+            s.free_pages == s.total_pages,
+            format!("drained pool not fully allocatable: {} of {}", s.free_pages, s.total_pages),
+        )
+    });
+}
