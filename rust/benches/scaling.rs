@@ -31,6 +31,9 @@
 //! the serial engine with the kernel dispatch pinned to the scalar
 //! reference vs the resolved SIMD path (`KernelImpl::Auto`) on the 8B
 //! q_proj shape — the SIMD row must beat the scalar row at M = 1.
+//! Matrix 7 (tile_h sweep): serial row-block heights {256 .. 8192} on
+//! the 8B q_proj shape with a pipelined 4-thread reference row — the
+//! default tile_h must stay within 1.25x of the best swept point.
 
 use codegemm::bench::harness::{black_box, run_bench, BenchOptions, BenchResult};
 use codegemm::bench::workloads::{scaled_block_shapes, GemmShape, LLAMA3_70B, LLAMA3_8B};
@@ -591,5 +594,88 @@ fn main() {
     mx.finish(
         "SIMD decode (M=1) beat the scalar reference on the 8B q_proj shape",
         "SIMD decode (M=1) did not beat the scalar reference above",
+    );
+
+    // ---- matrix 7: tile_h sweep under the pipelined schedule ----
+    // tile_h is the serial engine's row-block height: each block re-walks
+    // every k-tile (build + gather), so too-small blocks rebuild the
+    // Psumbook too often while too-large ones outgrow the gather's cache
+    // reuse window. The sweep pins where the default sits on this host; a
+    // 4-thread pipelined shared-book row rides along as the reference
+    // point the profiler's overlap gauges describe (tile_h does not bind
+    // there — row shards partition n instead). The check gates on the
+    // decode row: the default tile_h must stay within 1.25x of the best
+    // swept serial point.
+    let mut mx = Matrix::begin(
+        "tile_h sweep (serial row blocks, 8B q_proj, M=1): default must stay \
+         within 1.25x of the best swept point; pipelined 4-thread reference row",
+        format!(
+            "{:<40} {:>8} {:>12} {:>10} {:>6}",
+            "variant / shape", "tile_h", "mean us", "vs best", "check"
+        ),
+    );
+    {
+        let shapes: Vec<_> = scaled_block_shapes(&LLAMA3_8B, 1, scale)
+            .into_iter()
+            .filter(|(l, _)| matches!(*l, "q_proj"))
+            .collect();
+        const TILE_H: [usize; 5] = [256, 1024, 2048, 4096, 8192];
+        let default_tile_h = KernelConfig::default().tile_h;
+        for (label, s) in shapes {
+            let prep = Prepared::new(s, cfg);
+            let x = Prng::seeded(23).normal_vec(s.k, 1.0);
+            let mut means = Vec::with_capacity(TILE_H.len());
+            for th in TILE_H {
+                let kc = KernelConfig { tile_h: th, ..KernelConfig::default() };
+                let eng = CodeGemmEngine::with_kernel(&prep.q, kc);
+                let mut y = vec![0f32; s.n];
+                let mut scratch = EngineScratch::new();
+                let name = format!("{}-serial {label} {}x{} h{th}", LLAMA3_8B.name, s.n, s.k);
+                let r = bench_gemm_into(&name, opts, &eng, &x, 1, &mut y, &mut scratch);
+                means.push((th, r.mean_us()));
+            }
+            let best = means.iter().map(|&(_, us)| us).fold(f64::INFINITY, f64::min);
+            let default_us = means
+                .iter()
+                .find(|&&(th, _)| th == default_tile_h)
+                .map(|&(_, us)| us)
+                .unwrap_or(f64::INFINITY);
+            for &(th, us) in &means {
+                let cell =
+                    if th == default_tile_h { mx.check(default_us <= best * 1.25) } else { "" };
+                println!(
+                    "{:<40} {:>8} {:>12.1} {:>9.2}x {:>6}",
+                    format!("{}-serial {label} {}x{}", LLAMA3_8B.name, s.n, s.k),
+                    th,
+                    us,
+                    us / best,
+                    cell
+                );
+            }
+            // Reference row: the pipelined shared-book schedule at 4
+            // threads over the same shape and input.
+            let pool = Arc::new(ThreadPool::new(4));
+            let plan = ShardPlan::new(s.n, 4, 1, 1);
+            let eng = ShardedEngine::from_factory(plan, pool, |(r0, r1)| {
+                CodeGemmEngine::from_quantized(&shard::slice_rows(&prep.q, r0, r1))
+            })
+            .with_shared_book(true);
+            let mut y = vec![0f32; s.n];
+            let mut scratch = EngineScratch::new();
+            let name = format!("{}-pipelined {label} {}x{} t4", LLAMA3_8B.name, s.n, s.k);
+            let r = bench_gemm_into(&name, opts, &eng, &x, 1, &mut y, &mut scratch);
+            println!(
+                "{:<40} {:>8} {:>12.1} {:>9.2}x {:>6}",
+                name,
+                "-",
+                r.mean_us(),
+                r.mean_us() / best,
+                ""
+            );
+        }
+    }
+    mx.finish(
+        "default tile_h within 1.25x of the best swept serial point at M=1",
+        "default tile_h fell more than 1.25x behind the best swept point above",
     );
 }

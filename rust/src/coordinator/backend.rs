@@ -174,6 +174,15 @@ pub trait DecodeBackend: Send {
     fn kernel_sel(&self) -> Option<KernelSel> {
         None
     }
+    /// High-water footprint of the model's shared engine scratch, split
+    /// by buffer (`buf`, `buf2`, `book`, `book2` bytes) — feeds the
+    /// `obs::roofline::FootprintAudit` working-set gauge. `None` when
+    /// the backend has no host-side scratch (compiled PJRT path). Gauge
+    /// semantics: capacities only grow, so the latest snapshot is the
+    /// serving high-water mark.
+    fn scratch_parts(&self) -> Option<(usize, usize, usize, usize)> {
+        None
+    }
     fn label(&self) -> String;
 }
 
@@ -509,6 +518,10 @@ impl DecodeBackend for NativeBackend {
 
     fn kernel_sel(&self) -> Option<KernelSel> {
         self.kernel
+    }
+
+    fn scratch_parts(&self) -> Option<(usize, usize, usize, usize)> {
+        Some(self.model.scratch_parts())
     }
 
     fn label(&self) -> String {

@@ -508,6 +508,11 @@ impl Batcher {
             if let Some(p) = self.backend.phases() {
                 self.metrics.on_model_phases(p);
             }
+            // Scratch working-set gauge (high-water capacities: latest
+            // snapshot is the serving high-water mark).
+            if let Some(parts) = self.backend.scratch_parts() {
+                self.metrics.on_footprint(parts);
+            }
         }
         advanced
     }

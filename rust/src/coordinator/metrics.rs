@@ -29,6 +29,8 @@
 use crate::gemm::{Counters, KernelSel};
 use crate::kvcache::KvStats;
 use crate::obs::hist::Histogram;
+use crate::obs::prof::ProfSummary;
+use crate::obs::roofline::{CacheSizes, FootprintAudit};
 use crate::obs::trace::{SpanRecord, TraceLog};
 use crate::util::stats::Summary;
 use crate::util::timer::PhaseTimer;
@@ -84,6 +86,13 @@ struct Inner {
     /// Resolved CodeGEMM kernel dispatch (gauge; fixed per backend
     /// construction, so any snapshot is the whole story).
     kernel: Option<KernelSel>,
+    /// Latest kernel-profiler gauge bundle from a traced run (gauge;
+    /// recorded once when the trace is drained, before shutdown).
+    prof: Option<ProfSummary>,
+    /// Latest engine-scratch footprint split (`buf`, `buf2`, `book`,
+    /// `book2` bytes; gauge — capacities only grow, so the latest
+    /// snapshot is the serving high-water mark).
+    footprint: Option<(usize, usize, usize, usize)>,
     started: Option<std::time::Instant>,
     finished: Option<std::time::Instant>,
 }
@@ -148,6 +157,10 @@ pub struct MetricsReport {
     pub spans: Vec<SpanRecord>,
     /// Spans ever recorded (including ones evicted from the ring).
     pub spans_total: u64,
+    /// Spans evicted by the bounded ring — nonzero means `spans` is a
+    /// *truncated* view of the run (surfaced so a clipped trace is never
+    /// mistaken for a complete one).
+    pub spans_dropped: u64,
     /// Latest KV-pool snapshot (pool/page occupancy, high-water mark,
     /// churn, per-slot held/filled bytes); `None` for backends without a
     /// pool.
@@ -159,6 +172,14 @@ pub struct MetricsReport {
     /// Resolved CodeGEMM kernel dispatch — implementation + lane width
     /// (`None` for backends without a CodeGEMM kernel layer).
     pub kernel: Option<KernelSel>,
+    /// Kernel-profiler gauges from the latest traced run: span/drop
+    /// counts, pipeline overlap efficiency (hidden vs exposed build
+    /// seconds), per-barrier worker occupancy, and the calibrated peak
+    /// gather bandwidth when a calibration ran. `None` untraced.
+    pub prof: Option<ProfSummary>,
+    /// Engine-scratch working set placed against the detected cache
+    /// hierarchy (`None` when the backend reported no scratch).
+    pub footprint: Option<FootprintAudit>,
 }
 
 impl Metrics {
@@ -227,6 +248,19 @@ impl Metrics {
     /// same value is the expected idempotent case).
     pub fn on_kernel(&self, sel: KernelSel) {
         self.inner.lock().unwrap().kernel = Some(sel);
+    }
+
+    /// Record the kernel-profiler gauge bundle of a traced run (gauge:
+    /// the summary aggregates the whole trace, so the latest recording
+    /// carries the run).
+    pub fn on_prof(&self, summary: ProfSummary) {
+        self.inner.lock().unwrap().prof = Some(summary);
+    }
+
+    /// Record the latest engine-scratch footprint split (`buf`, `buf2`,
+    /// `book`, `book2` bytes; gauge — capacities only grow).
+    pub fn on_footprint(&self, parts: (usize, usize, usize, usize)) {
+        self.inner.lock().unwrap().footprint = Some(parts);
     }
 
     /// Record the latest model-forward phase timer (`model/*` phases;
@@ -340,9 +374,14 @@ impl Metrics {
             phases,
             spans: g.spans.recent(),
             spans_total: g.spans.total(),
+            spans_dropped: g.spans.dropped(),
             kv: g.kv.clone(),
             engine: g.engine.clone(),
             kernel: g.kernel,
+            prof: g.prof.clone(),
+            footprint: g
+                .footprint
+                .map(|p| FootprintAudit::from_parts(p, &CacheSizes::detect())),
         }
     }
 }
@@ -375,6 +414,21 @@ impl MetricsReport {
     /// gauge (`None` without engine accounting).
     pub fn build_share_ops(&self) -> Option<f64> {
         self.engine.as_ref().map(|e| e.build_share_ops())
+    }
+
+    /// Gather-phase achieved bandwidth (GB/s) from the engine gauge's
+    /// read-side byte/seconds split — the numerator `Counters::read_bytes`
+    /// (code stream + Psumbook reads + scales) over `read_seconds`.
+    /// `None` without engine accounting or before any gather time
+    /// accrued. Compare against `prof.gather_gbs_peak` (STREAM triad)
+    /// for the % of attainable.
+    pub fn gather_gbs_achieved(&self) -> Option<f64> {
+        let e = self.engine.as_ref()?;
+        if e.read_seconds > 0.0 && e.read_bytes > 0 {
+            Some(e.read_bytes as f64 / e.read_seconds / 1e9)
+        } else {
+            None
+        }
     }
 
     /// Fraction of prefix-cache probes that pinned at least one shared
@@ -470,9 +524,47 @@ impl MetricsReport {
             if let Some(k) = &self.kernel {
                 out.push_str(&format!(", kernel {} ×{} lanes", k.label(), k.lanes));
             }
+            if let Some(gbs) = self.gather_gbs_achieved() {
+                out.push_str(&format!(", gather {gbs:.2} GB/s achieved"));
+                if let Some(p) = &self.prof {
+                    if p.gather_gbs_peak > 0.0 {
+                        out.push_str(&format!(
+                            " of {:.1} peak ({:.0}%)",
+                            p.gather_gbs_peak,
+                            100.0 * gbs / p.gather_gbs_peak,
+                        ));
+                    }
+                }
+            }
+        }
+        if let Some(p) = &self.prof {
+            out.push_str(&format!(
+                "\nprofiler: {} spans ({} dropped), overlap efficiency {:.1}% \
+                 ({:.2} ms build hidden / {:.2} ms exposed), barrier occupancy {:.1}%",
+                p.events,
+                p.dropped,
+                100.0 * p.overlap_efficiency,
+                p.hidden_build_s * 1e3,
+                p.exposed_build_s * 1e3,
+                100.0 * p.occupancy,
+            ));
+        }
+        if let Some(f) = &self.footprint {
+            out.push_str(&format!(
+                "\nfootprint: {} KiB scratch working set (books {} KiB, staging {} KiB) \
+                 — fits {}",
+                f.total_bytes / 1024,
+                (f.book_bytes + f.book2_bytes) / 1024,
+                f.staging_bytes / 1024,
+                f.level,
+            ));
         }
         if self.spans_total > 0 {
-            out.push_str(&format!("\nspans:    {} recorded; most recent:", self.spans_total));
+            out.push_str(&format!("\nspans:    {} recorded", self.spans_total));
+            if self.spans_dropped > 0 {
+                out.push_str(&format!(" ({} evicted from the ring)", self.spans_dropped));
+            }
+            out.push_str("; most recent:");
             for s in self.spans.iter().rev().take(4).rev() {
                 out.push_str(&format!("\n  {}", s.render()));
             }
@@ -632,6 +724,61 @@ mod tests {
         assert!(rendered.contains("build share 25.0%"), "{rendered}");
         assert!(rendered.contains("fanout 2.50/call"), "{rendered}");
         assert!(rendered.contains("kernel unrolled ×8 lanes"), "{rendered}");
+    }
+
+    #[test]
+    fn prof_and_footprint_gauges_surface_in_report() {
+        let m = Metrics::new();
+        m.on_engine(Counters {
+            read_bytes: 2_000_000_000,
+            read_seconds: 1.0,
+            read_ops: 1,
+            calls: 1,
+            ..Default::default()
+        });
+        m.on_prof(ProfSummary {
+            events: 40,
+            dropped: 2,
+            overlap_efficiency: 0.8,
+            hidden_build_s: 0.008,
+            exposed_build_s: 0.002,
+            occupancy: 0.9,
+            gather_gbs_peak: 10.0,
+        });
+        m.on_footprint((1024, 0, 4096, 4096));
+        let r = m.report();
+        assert!((r.gather_gbs_achieved().unwrap() - 2.0).abs() < 1e-9);
+        let p = r.prof.as_ref().expect("prof gauge recorded");
+        assert_eq!(p.events, 40);
+        let f = r.footprint.as_ref().expect("footprint gauge recorded");
+        assert_eq!(f.total_bytes, 1024 + 4096 + 4096);
+        assert_eq!(f.book_bytes + f.book2_bytes, 8192);
+        let rendered = r.render();
+        assert!(rendered.contains("overlap efficiency 80.0%"), "{rendered}");
+        assert!(rendered.contains("gather 2.00 GB/s achieved of 10.0 peak (20%)"), "{rendered}");
+        assert!(rendered.contains("footprint:"), "{rendered}");
+    }
+
+    #[test]
+    fn gather_gbs_none_without_engine_or_time() {
+        let m = Metrics::new();
+        assert!(m.report().gather_gbs_achieved().is_none());
+        m.on_engine(Counters { read_bytes: 100, ..Default::default() });
+        assert!(m.report().gather_gbs_achieved().is_none(), "no seconds yet");
+        assert!(m.report().prof.is_none());
+        assert!(m.report().footprint.is_none());
+    }
+
+    #[test]
+    fn span_ring_eviction_is_reported_never_silent() {
+        let m = Metrics::new();
+        for i in 0..(TraceLog::DEFAULT_CAPACITY as u64 + 10) {
+            m.on_complete(&span(i, 0.01, 0.02));
+        }
+        let r = m.report();
+        assert_eq!(r.spans_total, TraceLog::DEFAULT_CAPACITY as u64 + 10);
+        assert_eq!(r.spans_dropped, 10);
+        assert!(r.render().contains("(10 evicted from the ring)"), "{}", r.render());
     }
 
     #[test]

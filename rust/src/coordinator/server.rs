@@ -135,6 +135,14 @@ impl Server {
         self.metrics.report()
     }
 
+    /// Record the kernel-profiler gauge bundle of a traced run into the
+    /// metrics sink (callers drain `obs::prof` themselves — typically
+    /// right before [`Server::shutdown`] — because the profiler's rings
+    /// are process-global, not owned by the server).
+    pub fn record_prof(&self, summary: crate::obs::prof::ProfSummary) {
+        self.metrics.on_prof(summary);
+    }
+
     pub fn is_running(&self) -> bool {
         self.running.load(Ordering::SeqCst)
     }

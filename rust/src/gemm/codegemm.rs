@@ -205,6 +205,12 @@ impl CodeGemmEngine {
         counters.activation_bytes += (book.jn * v * book.mb * 2) as u64;
         // Codebook is streamed on-chip once per build.
         counters.weight_bytes += (book.m * book.nc * v * 2) as u64;
+        // Phase-split byte attribution: everything a build moves (book
+        // writes + staged activations + codebook) lands on the build side
+        // of the roofline.
+        counters.build_bytes += book.footprint_bytes() as u64
+            + (book.jn * v * book.mb * 2) as u64
+            + (book.m * book.nc * v * 2) as u64;
         build_macs
     }
 
@@ -321,6 +327,10 @@ impl CodeGemmEngine {
         counters.lookups += gathers;
         counters.scratch_bytes += gathers * 4;
         counters.weight_bytes += nrows * (jn_tile * self.cfg.m * self.codes.bytes_per_code()) as u64;
+        // Phase-split byte attribution: code stream + Psumbook reads land
+        // on the gather side of the roofline.
+        counters.read_bytes +=
+            gathers * 4 + nrows * (jn_tile * self.cfg.m * self.codes.bytes_per_code()) as u64;
     }
 
 }
@@ -353,8 +363,10 @@ impl GemmEngine for CodeGemmEngine {
                 counters.read_seconds += t.elapsed_s();
             }
         }
-        // Scales stream: one per (row, group) per call.
+        // Scales stream: one per (row, group) per call — read during the
+        // gather's scale application, so it lands on the read side too.
         counters.weight_bytes += self.scales_stream_bytes();
+        counters.read_bytes += self.scales_stream_bytes();
         counters.calls += 1;
     }
 

@@ -60,6 +60,22 @@ impl EngineScratch {
             + self.book2.data.capacity())
             * 4
     }
+
+    /// High-water footprint split by buffer, in bytes:
+    /// `(buf, buf2, book, book2)`. Sums to [`footprint_bytes`] — the
+    /// working-set breakdown `obs::roofline::FootprintAudit` places
+    /// against the cache hierarchy (the books are the on-chip-resident
+    /// part; the staging buffers are streamed).
+    ///
+    /// [`footprint_bytes`]: EngineScratch::footprint_bytes
+    pub fn footprint_parts(&self) -> (usize, usize, usize, usize) {
+        (
+            self.buf.capacity() * 4,
+            self.buf2.capacity() * 4,
+            self.book.data.capacity() * 4,
+            self.book2.data.capacity() * 4,
+        )
+    }
 }
 
 /// Grow-only borrow: ensure `buf` holds at least `len` elements and hand
@@ -86,6 +102,17 @@ mod tests {
         assert_eq!(b.capacity(), cap, "shrinking must not reallocate");
         assert_eq!(grow_slice(&mut b, 4).len(), 4);
         assert_eq!(b.capacity(), cap, "regrowth within capacity is free");
+    }
+
+    #[test]
+    fn footprint_parts_sum_to_footprint_bytes() {
+        let mut s = EngineScratch::new();
+        s.buf.resize(7, 0.0);
+        s.buf2.resize(3, 0.0);
+        s.book.reshape(2, 1, 4, 1);
+        let (a, b, c, d) = s.footprint_parts();
+        assert_eq!(a + b + c + d, s.footprint_bytes());
+        assert!(c > 0, "book capacity must be attributed");
     }
 
     #[test]

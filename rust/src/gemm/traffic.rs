@@ -19,6 +19,16 @@ pub struct Counters {
     /// Bytes written to / read from the on-chip scratch (Psumbook / LUT /
     /// decode buffers) — models shared-memory traffic.
     pub scratch_bytes: u64,
+    /// Bytes moved by the **build** phase (activation staging + codebook
+    /// stream + Psumbook writes) — the phase split of the byte classes
+    /// above, so the profiler's roofline can place build and gather
+    /// separately. `build_bytes + read_bytes == total_bytes()` for the
+    /// CodeGEMM engine.
+    pub build_bytes: u64,
+    /// Bytes moved by the **gather/read** phase (code stream + Psumbook
+    /// reads + scales stream) — pairs with `read_seconds` to give the
+    /// gather phase's achieved GB/s against the calibrated peak.
+    pub read_bytes: u64,
     /// Work spent building per-tile structures (Psumbook/LUT), in MACs.
     pub build_ops: u64,
     /// Work spent in the main accumulate loop, in lookup+add units.
@@ -110,6 +120,8 @@ impl Counters {
         self.weight_bytes += other.weight_bytes;
         self.activation_bytes += other.activation_bytes;
         self.scratch_bytes += other.scratch_bytes;
+        self.build_bytes += other.build_bytes;
+        self.read_bytes += other.read_bytes;
         self.build_ops += other.build_ops;
         self.read_ops += other.read_ops;
         self.build_seconds += other.build_seconds;
@@ -147,13 +159,23 @@ mod tests {
 
     #[test]
     fn merge_adds() {
-        let mut a = Counters { mac_flops: 1, lookups: 2, calls: 1, ..Default::default() };
-        let b = Counters { mac_flops: 10, lookups: 20, calls: 1, group_fanout: 3, ..Default::default() };
+        let mut a = Counters { mac_flops: 1, lookups: 2, calls: 1, build_bytes: 5, ..Default::default() };
+        let b = Counters {
+            mac_flops: 10,
+            lookups: 20,
+            calls: 1,
+            group_fanout: 3,
+            build_bytes: 7,
+            read_bytes: 9,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.mac_flops, 11);
         assert_eq!(a.lookups, 22);
         assert_eq!(a.calls, 2);
         assert_eq!(a.group_fanout, 3);
+        assert_eq!(a.build_bytes, 12);
+        assert_eq!(a.read_bytes, 9);
     }
 
     #[test]

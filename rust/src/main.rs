@@ -11,14 +11,20 @@
 //! - `quantize`    quantize a layer and report footprint / error / engine
 //!                 agreement
 //! - `bench`       quick CPU-engine micro-benchmarks (full suite: cargo bench)
+//! - `profile`     calibrate machine peaks (STREAM bandwidth, peak MACs) and
+//!                 place the kernel's exact byte/MAC counters under the
+//!                 roofline, phase by phase, plus a cache-footprint audit
 //! - `doctor`      environment self-checks (PJRT client, artifacts)
 
 use codegemm::bench::harness::{run_bench, BenchOptions};
 use codegemm::bench::tables::{self, EvalContext};
 use codegemm::config::{KernelConfig, KernelImpl, ModelConfig, ParallelConfig, QuantConfig, ServeConfig};
 use codegemm::coordinator::{DecodeBackend, NativeBackend, PjrtBackend, Request, Server};
-use codegemm::gemm::{CodeGemmEngine, DenseEngine, DequantEngine, GemmEngine};
+use codegemm::coordinator::MetricsReport;
+use codegemm::gemm::{CodeGemmEngine, Counters, DenseEngine, DequantEngine, GemmEngine, Psumbook};
 use codegemm::model::{EngineKind, ModelWeights};
+use codegemm::obs::prof::{self, ProfSummary};
+use codegemm::obs::roofline::{analyze, calibrate, CacheSizes, FootprintAudit};
 use codegemm::obs::{check_slo, compare, drive, generate, BenchArtifact, WorkloadMix};
 use codegemm::quant::footprint::bits_per_weight;
 use codegemm::quant::Quantizer;
@@ -51,9 +57,12 @@ fn usage() -> String {
                      [--kernel-impl auto|scalar|unrolled|avx2] [--simd-lanes 0|1|8|16] [--pipeline-tiles on|off]\n              \
                      [--prefix-cache on|off] [--preempt off|spill|recompute]\n  \
            bench-serve [--workload chat|rag|longform|bursty|mixed] [--seed N] [--requests N]\n              \
-                     [--out BENCH_6.json] [--baseline PREV.json] [--threshold 0.2] [--advisory]\n  \
+                     [--out BENCH_6.json] [--baseline PREV.json] [--threshold 0.2] [--advisory]\n              \
+                     [--repeats N] [--profile on|off] [--trace-out trace.json]\n  \
            quantize  --config m1v4g128 [--n 512] [--k 512]\n  \
            bench     [--n 1024] [--k 1024]\n  \
+           profile   [--config m1v4g128] [--n 1024] [--k 1024] [--batch 1] [--quick]\n              \
+                     [--kernel-impl auto|scalar|unrolled|avx2] [--simd-lanes 0|1|8|16]\n  \
            doctor    [--artifacts DIR]\n",
         codegemm::VERSION
     )
@@ -71,6 +80,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "bench-serve" => cmd_bench_serve(rest),
         "quantize" => cmd_quantize(rest),
         "bench" => cmd_bench(rest),
+        "profile" => cmd_profile(rest),
         "doctor" => cmd_doctor(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
@@ -286,7 +296,10 @@ fn cmd_bench_serve(args: &[String]) -> anyhow::Result<()> {
     .opt("baseline", None, "previous BENCH artifact to diff against")
     .opt("threshold", Some("0.2"), "relative regression threshold for the comparator")
     .flag("advisory", "report comparator findings without failing (exit 0)")
-    .opt("artifacts", Some("artifacts"), "weights dir (weights.f32.bin used when present)");
+    .opt("artifacts", Some("artifacts"), "weights dir (weights.f32.bin used when present)")
+    .opt("repeats", Some("1"), "run the scenario N times; report per-gauge min/max/stddev spread")
+    .opt("profile", Some("off"), "kernel profiler on|off: per-worker timelines → overlap/occupancy gauges")
+    .opt("trace-out", None, "write the traced run's Chrome trace-event JSON here (implies --profile on)");
     let m = cmd.parse(args)?;
 
     let workload = m.str("workload")?;
@@ -301,31 +314,97 @@ fn cmd_bench_serve(args: &[String]) -> anyhow::Result<()> {
         n => n,
     };
 
+    let repeats = m.usize("repeats")?.max(1);
+    let trace_out = m.get("trace-out").map(std::path::PathBuf::from);
+    let profile_on = match m.str("profile")? {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => trace_out.is_some(),
+        other => anyhow::bail!("--profile expects on|off, got '{other}'"),
+    };
+
     let model_cfg = ModelConfig::tiny();
     let weights = load_or_random_weights(Path::new(m.str("artifacts")?));
     let kind = EngineKind::codegemm(QuantConfig::new(4, 1, 8, 32)?);
     let cfg = ServeConfig { max_batch: m.usize("batch")?, temperature: 0.0, ..Default::default() };
-    let backend = NativeBackend::with_kv_fused(
-        &weights,
-        kind,
-        cfg.max_batch,
-        &cfg.kv,
-        cfg.parallel.fused_projections_effective(),
-    );
-    let label = backend.label();
-    println!("backend: {label}  workload: {} ({n_requests} requests, seed {seed})", mix.name);
 
     let trace = generate(&mix, seed, n_requests, model_cfg.vocab);
-    let server = Server::start(Box::new(backend), cfg);
-    let t0 = std::time::Instant::now();
-    let responses = drive(&server, &trace);
-    let wall = t0.elapsed().as_secs_f64();
-    let report = server.shutdown();
-    println!("{}", report.render());
-    let generated: usize = responses.iter().map(|r| r.tokens.len()).sum();
-    println!("wall: {wall:.2}s — {generated} tokens generated");
+    let mut label = String::new();
+    let mut reports: Vec<MetricsReport> = Vec::new();
+    for rep in 0..repeats {
+        let backend = NativeBackend::with_kv_fused(
+            &weights,
+            kind,
+            cfg.max_batch,
+            &cfg.kv,
+            cfg.parallel.fused_projections_effective(),
+        );
+        if rep == 0 {
+            label = backend.label();
+            println!(
+                "backend: {label}  workload: {} ({n_requests} requests, seed {seed})",
+                mix.name
+            );
+        }
+        // Only the first repeat is traced: the artifact's gauges come
+        // from it, and later repeats measure undisturbed speed for the
+        // spread rows.
+        let traced = profile_on && rep == 0;
+        if traced {
+            let _ = prof::drain(); // discard anything a previous run left behind
+            prof::enable();
+        }
+        let server = Server::start(Box::new(backend), cfg.clone());
+        let t0 = std::time::Instant::now();
+        let responses = drive(&server, &trace);
+        let wall = t0.elapsed().as_secs_f64();
+        if traced {
+            prof::disable();
+            let tl = prof::drain();
+            let mut summary = ProfSummary::from_timeline(&tl);
+            // Quick bandwidth calibration so the report can show gather
+            // GB/s achieved against an attainable peak.
+            summary.gather_gbs_peak = calibrate(&CacheSizes::detect(), true).bw_gbs;
+            if let Some(path) = &trace_out {
+                std::fs::write(path, tl.to_chrome_trace().to_string_pretty())?;
+                println!(
+                    "trace: {} ({} events across {} threads, {} dropped)",
+                    path.display(),
+                    tl.events.len(),
+                    tl.threads.len(),
+                    tl.dropped
+                );
+            }
+            server.record_prof(summary);
+        }
+        let report = server.shutdown();
+        if rep == 0 {
+            println!("{}", report.render());
+            let generated: usize = responses.iter().map(|r| r.tokens.len()).sum();
+            println!("wall: {wall:.2}s — {generated} tokens generated");
+        }
+        reports.push(report);
+    }
+    let report = &reports[0];
 
-    let violations = check_slo(&mix.slo, &report);
+    let mut spread: Vec<(String, f64, f64, f64)> = Vec::new();
+    if repeats > 1 {
+        let gauges: [(&str, fn(&MetricsReport) -> f64); 4] = [
+            ("decode_tok_s", |r| r.tokens_per_s),
+            ("ttft_p99_s", |r| r.ttft.p99),
+            ("tpot_p99_s", |r| r.tpot.p99),
+            ("latency_p99_s", |r| r.latency.p99),
+        ];
+        for (name, get) in gauges {
+            let vals: Vec<f64> = reports.iter().map(get).collect();
+            let (lo, hi, sd) = spread_of(&vals);
+            println!(
+                "spread: {name} over {repeats} runs — min {lo:.4}, max {hi:.4}, stddev {sd:.4}"
+            );
+            spread.push((name.to_string(), lo, hi, sd));
+        }
+    }
+
+    let violations = check_slo(&mix.slo, report);
     if violations.is_empty() {
         println!(
             "slo: all met (ttft p99 ≤ {:.0} ms, tpot p95 ≤ {:.0} ms, decode ≥ {:.0} tok/s)",
@@ -341,8 +420,10 @@ fn cmd_bench_serve(args: &[String]) -> anyhow::Result<()> {
 
     let out = std::path::PathBuf::from(m.str("out")?);
     let bench_id = out.file_stem().and_then(|s| s.to_str()).unwrap_or("BENCH").to_string();
-    let artifact =
-        BenchArtifact::from_report(&bench_id, mix.name, seed, n_requests, &label, &report, violations);
+    let mut artifact =
+        BenchArtifact::from_report(&bench_id, mix.name, seed, n_requests, &label, report, violations);
+    artifact.repeats = repeats;
+    artifact.spread = spread;
     artifact.save(&out)?;
     println!("artifact: {} (schema v{})", out.display(), artifact.schema_version);
 
@@ -366,6 +447,15 @@ fn cmd_bench_serve(args: &[String]) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// (min, max, population stddev) of a gauge sample.
+fn spread_of(vals: &[f64]) -> (f64, f64, f64) {
+    let lo = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mean = vals.iter().sum::<f64>() / vals.len().max(1) as f64;
+    let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len().max(1) as f64;
+    (lo, hi, var.sqrt())
 }
 
 fn load_or_random_weights(artifacts: &Path) -> ModelWeights {
@@ -462,6 +552,107 @@ fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
             .line()
         );
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- profile
+
+/// Calibrated roofline: measure what this machine can do (STREAM-triad
+/// bandwidth, peak MAC throughput), then drive the resolved kernel's two
+/// phases — Psumbook build and gather — with separate [`Counters`] and
+/// place their exact byte/MAC attribution under the measured roofs.
+fn cmd_profile(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "profile",
+        "calibrate machine peaks; place the kernel's exact counters under the roofline",
+    )
+    .opt("config", Some("m1v4g128"), "quant config label (e.g. m2v8g128)")
+    .opt("n", Some("1024"), "rows")
+    .opt("k", Some("1024"), "cols")
+    .opt("batch", Some("1"), "batch columns")
+    .opt("kernel-impl", Some("auto"), "auto | scalar | unrolled | avx2")
+    .opt("simd-lanes", Some("0"), "0 = auto, 1 = scalar, 8 or 16 unrolled lanes")
+    .flag("quick", "fast calibration (fewer reps, capped sweep buffer) for CI smoke runs");
+    let m = cmd.parse(args)?;
+    let qcfg = QuantConfig::parse_label(m.str("config")?)?;
+    let (n, k, mb) = (m.usize("n")?, m.usize("k")?, m.usize("batch")?);
+    let quick = m.flag("quick");
+    let impl_arg = m.str("kernel-impl")?;
+    let kernel_impl = KernelImpl::parse(impl_arg).ok_or_else(|| {
+        anyhow::anyhow!("--kernel-impl expects auto|scalar|unrolled|avx2, got '{impl_arg}'")
+    })?;
+    let kernel = KernelConfig {
+        kernel_impl,
+        simd_lanes: m.usize("simd-lanes")?,
+        ..KernelConfig::default()
+    };
+
+    // 1. Machine calibration: cache hierarchy + attainable peaks.
+    let caches = CacheSizes::detect();
+    println!(
+        "caches:  L1d {} KiB, L2 {} KiB, LLC {} KiB",
+        caches.l1d >> 10,
+        caches.l2 >> 10,
+        caches.llc >> 10
+    );
+    println!("calibrating peaks ({}) …", if quick { "quick" } else { "full" });
+    let peaks = calibrate(&caches, quick);
+    println!(
+        "peaks:   {:.2} GB/s bandwidth (STREAM triad), {:.2} GMAC/s compute",
+        peaks.bw_gbs, peaks.gmacs
+    );
+
+    // 2. Drive the kernel's phases with separate counters — the same
+    //    exact byte/MAC attribution the serving metrics use.
+    let w = Prng::seeded(1).normal_vec(n * k, 0.02);
+    let q = Quantizer::new(qcfg).quantize(&w, n, k);
+    let engine = CodeGemmEngine::with_kernel(&q, kernel);
+    let sel = engine.kernel_sel();
+    println!("kernel:  {} ({} lanes) on {n}×{k} {}, batch {mb}", sel.label(), sel.lanes, qcfg.label());
+
+    let x = Prng::seeded(2).normal_vec(k * mb, 1.0);
+    let tile_w = engine.kernel_config().tile_w;
+    let reps = if quick { 2 } else { 8 };
+    let mut build_c = Counters::new();
+    let mut gather_c = Counters::new();
+    let mut book = Psumbook::default();
+    let mut buf: Vec<f32> = Vec::new();
+    let mut y = vec![0.0f32; n * mb];
+    for _ in 0..reps {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        let mut c0 = 0;
+        while c0 < k {
+            let c1 = (c0 + tile_w).min(k);
+            engine.build_book(&x, mb, c0, c1, &mut book, &mut buf, &mut build_c);
+            let t0 = std::time::Instant::now();
+            engine.gather_into(&book, c0, mb, &mut y, &mut gather_c);
+            gather_c.read_seconds += t0.elapsed().as_secs_f64();
+            c0 = c1;
+        }
+    }
+    std::hint::black_box(&y);
+
+    // 3. Place each phase under the roofs.
+    let build_pt = analyze("build", build_c.build_ops, build_c.build_bytes, build_c.build_seconds, &peaks);
+    let gather_pt = analyze("gather", gather_c.read_ops, gather_c.read_bytes, gather_c.read_seconds, &peaks);
+    for p in [&build_pt, &gather_pt] {
+        println!(
+            "{:>7}: {:.2} GB/s, {:.2} GMAC/s achieved — AI {:.2} MAC/B, {}-bound, \
+             attainable {:.2} GMAC/s ({:.0}% reached)",
+            p.phase, p.achieved_gbs, p.achieved_gmacs, p.intensity, p.bound, p.attainable_gmacs,
+            p.pct_attainable
+        );
+    }
+
+    // 4. Working-set audit: does the hot state fit on-chip?
+    let audit = FootprintAudit::new(book.data.capacity() * 4, 0, buf.capacity() * 4, &caches);
+    println!(
+        "footprint: {} KiB working set (book {} KiB, staging {} KiB) — fits {}",
+        audit.total_bytes >> 10,
+        audit.book_bytes >> 10,
+        audit.staging_bytes >> 10,
+        audit.level
+    );
     Ok(())
 }
 

@@ -550,6 +550,14 @@ impl LlamaModel {
         &self.scratch.timer
     }
 
+    /// High-water footprint of the shared engine scratch, split by
+    /// buffer (`buf`, `buf2`, `book`, `book2` bytes) — the working set
+    /// `obs::roofline::FootprintAudit` places against the cache
+    /// hierarchy. Reflects the largest tile geometry any layer has run.
+    pub fn scratch_parts(&self) -> (usize, usize, usize, usize) {
+        self.scratch.eng.footprint_parts()
+    }
+
     /// True when every layer's Q/K/V and gate/up sets take the fused
     /// one-shared-build schedule (introspection for tests and labels).
     pub fn uses_fused_projections(&self) -> bool {

@@ -19,6 +19,20 @@
 //!   `0.0` / `0`)
 //! - counters (ints): `completed`, `rejected`, `infeasible`, `deferred`,
 //!   `kv_used_hwm_pages`, `kv_total_pages`
+//! - profiler gauges (added within schema v1; older artifacts lack them
+//!   and parse as `0` / `0.0` / `""`): `spans_dropped` (spans evicted
+//!   from the bounded metrics ring — nonzero ⇒ the artifact's `spans`
+//!   are a truncated view), `overlap_efficiency` and `prof_occupancy`
+//!   (pipeline hidden-build share and mean per-barrier worker occupancy
+//!   from `obs::prof`), `gather_gbs_achieved` / `gather_gbs_peak`
+//!   (gather-phase bandwidth vs the STREAM-calibrated peak), and
+//!   `footprint_bytes` / `footprint_level` (engine-scratch working set
+//!   and the cache level it fits)
+//! - repeat gauges (added within schema v1): `repeats` (measurement
+//!   repetitions aggregated into this artifact; older artifacts parse
+//!   as 1) and `spread` — array of `{gauge, min, max, stddev}` rows
+//!   characterizing the run-to-run spread of the headline gauges across
+//!   the repeats (empty for single runs)
 //! - `phase_shares` — array of `{name, share}` step-phase attribution
 //!   rows (shares of the total attributed seconds)
 //! - `slo_violations` — array of strings (empty ⇒ all SLOs met)
@@ -91,6 +105,35 @@ pub struct BenchArtifact {
     pub preemptions: u64,
     pub kv_used_hwm_pages: usize,
     pub kv_total_pages: usize,
+    /// Spans evicted from the bounded metrics ring during the run — 0
+    /// means `spans` is the complete trace (or the artifact predates the
+    /// gauge), nonzero that it is a truncated view.
+    pub spans_dropped: u64,
+    /// Kernel-profiler pipeline overlap efficiency (hidden build seconds
+    /// over total build seconds; 0.0 untraced or predating the gauge).
+    pub overlap_efficiency: f64,
+    /// Mean per-barrier worker occupancy from the profiler (0.0 when
+    /// absent, matching `overlap_efficiency`).
+    pub prof_occupancy: f64,
+    /// Gather-phase achieved bandwidth, GB/s (0.0 when the engine gauge
+    /// carried no read-side byte/seconds split).
+    pub gather_gbs_achieved: f64,
+    /// STREAM-calibrated peak bandwidth, GB/s (0.0 when no calibration
+    /// ran alongside the bench).
+    pub gather_gbs_peak: f64,
+    /// Engine-scratch working set, bytes (0 when the backend reported no
+    /// scratch).
+    pub footprint_bytes: usize,
+    /// Cache level the working set fits (`"L1"`/`"L2"`/`"LLC"`/`"DRAM"`;
+    /// `""` when absent, matching `footprint_bytes`).
+    pub footprint_level: String,
+    /// Measurement repetitions aggregated into this artifact (gauges are
+    /// from the first repeat; `spread` characterizes the rest). Older
+    /// artifacts parse as 1.
+    pub repeats: usize,
+    /// Per-gauge run-to-run spread across the repeats:
+    /// `(gauge, min, max, stddev)`. Empty for single runs.
+    pub spread: Vec<(String, f64, f64, f64)>,
     pub slo_violations: Vec<String>,
     /// Retained request spans (see `obs::trace` for the object schema).
     pub spans: Vec<Json>,
@@ -146,6 +189,19 @@ impl BenchArtifact {
             preemptions: report.preemptions,
             kv_used_hwm_pages: hwm,
             kv_total_pages: pages,
+            spans_dropped: report.spans_dropped,
+            overlap_efficiency: report.prof.as_ref().map(|p| p.overlap_efficiency).unwrap_or(0.0),
+            prof_occupancy: report.prof.as_ref().map(|p| p.occupancy).unwrap_or(0.0),
+            gather_gbs_achieved: report.gather_gbs_achieved().unwrap_or(0.0),
+            gather_gbs_peak: report.prof.as_ref().map(|p| p.gather_gbs_peak).unwrap_or(0.0),
+            footprint_bytes: report.footprint.as_ref().map(|f| f.total_bytes).unwrap_or(0),
+            footprint_level: report
+                .footprint
+                .as_ref()
+                .map(|f| f.level.clone())
+                .unwrap_or_default(),
+            repeats: 1,
+            spread: Vec::new(),
             slo_violations,
             spans: report.spans.iter().map(|s| s.to_json()).collect(),
         }
@@ -193,6 +249,30 @@ impl BenchArtifact {
             ("preemptions", Json::from(self.preemptions as usize)),
             ("kv_used_hwm_pages", Json::from(self.kv_used_hwm_pages)),
             ("kv_total_pages", Json::from(self.kv_total_pages)),
+            ("spans_dropped", Json::from(self.spans_dropped as usize)),
+            ("overlap_efficiency", Json::Num(self.overlap_efficiency)),
+            ("prof_occupancy", Json::Num(self.prof_occupancy)),
+            ("gather_gbs_achieved", Json::Num(self.gather_gbs_achieved)),
+            ("gather_gbs_peak", Json::Num(self.gather_gbs_peak)),
+            ("footprint_bytes", Json::from(self.footprint_bytes)),
+            ("footprint_level", Json::from(self.footprint_level.as_str())),
+            ("repeats", Json::from(self.repeats)),
+            (
+                "spread",
+                Json::Arr(
+                    self.spread
+                        .iter()
+                        .map(|(g, lo, hi, sd)| {
+                            Json::obj(vec![
+                                ("gauge", Json::from(g.as_str())),
+                                ("min", Json::Num(*lo)),
+                                ("max", Json::Num(*hi)),
+                                ("stddev", Json::Num(*sd)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             (
                 "slo_violations",
                 Json::Arr(self.slo_violations.iter().map(|v| Json::from(v.as_str())).collect()),
@@ -258,6 +338,40 @@ impl BenchArtifact {
             preemptions: j.opt_usize("preemptions", 0)? as u64,
             kv_used_hwm_pages: j.req_usize("kv_used_hwm_pages")?,
             kv_total_pages: j.req_usize("kv_total_pages")?,
+            // Profiler + repeat gauges arrived within schema v1 — absent
+            // in baselines from uninstrumented builds.
+            spans_dropped: j.opt_usize("spans_dropped", 0)? as u64,
+            overlap_efficiency: j
+                .get("overlap_efficiency")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            prof_occupancy: j.get("prof_occupancy").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            gather_gbs_achieved: j
+                .get("gather_gbs_achieved")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            gather_gbs_peak: j.get("gather_gbs_peak").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            footprint_bytes: j.opt_usize("footprint_bytes", 0)?,
+            footprint_level: j
+                .get("footprint_level")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            repeats: j.opt_usize("repeats", 1)?,
+            spread: match j.get("spread") {
+                Some(Json::Arr(rows)) => rows
+                    .iter()
+                    .map(|r| {
+                        Ok((
+                            r.req_str("gauge")?.to_string(),
+                            r.req_f64("min")?,
+                            r.req_f64("max")?,
+                            r.req_f64("stddev")?,
+                        ))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+                _ => Vec::new(),
+            },
             slo_violations,
             spans: j.req_arr("spans")?.to_vec(),
         })
@@ -364,6 +478,15 @@ mod tests {
             preemptions: 2,
             kv_used_hwm_pages: 5,
             kv_total_pages: 8,
+            spans_dropped: 3,
+            overlap_efficiency: 0.8,
+            prof_occupancy: 0.9,
+            gather_gbs_achieved: 2.5,
+            gather_gbs_peak: 10.0,
+            footprint_bytes: 65536,
+            footprint_level: "L2".into(),
+            repeats: 1,
+            spread: vec![("decode_tok_s".into(), 95.0, 105.0, 4.0)],
             slo_violations: vec![],
             spans: vec![Json::obj(vec![
                 ("id", Json::from(1usize)),
@@ -387,7 +510,50 @@ mod tests {
         assert_eq!(b.simd_lanes, 8);
         assert_eq!(b.prefix_hit_rate, 0.5);
         assert_eq!(b.preemptions, 2);
+        assert_eq!(b.spans_dropped, 3);
+        assert_eq!(b.overlap_efficiency, 0.8);
+        assert_eq!(b.prof_occupancy, 0.9);
+        assert_eq!(b.gather_gbs_achieved, 2.5);
+        assert_eq!(b.gather_gbs_peak, 10.0);
+        assert_eq!(b.footprint_bytes, 65536);
+        assert_eq!(b.footprint_level, "L2");
+        assert_eq!(b.repeats, 1);
+        assert_eq!(b.spread, a.spread);
         assert_eq!(b.structural_trace(), vec!["1:4:8:length".to_string()]);
+    }
+
+    #[test]
+    fn artifacts_without_profiler_gauges_still_parse() {
+        // Baselines from builds predating the kernel profiler must load
+        // with the documented 0 / 0.0 / "" / 1 defaults — this pins the
+        // backward-compatible parse the acceptance criteria require.
+        let mut j = artifact(50.0).to_json();
+        if let Json::Obj(o) = &mut j {
+            for key in [
+                "spans_dropped",
+                "overlap_efficiency",
+                "prof_occupancy",
+                "gather_gbs_achieved",
+                "gather_gbs_peak",
+                "footprint_bytes",
+                "footprint_level",
+                "repeats",
+                "spread",
+            ] {
+                o.remove(key);
+            }
+        }
+        let b = BenchArtifact::from_json(&j).unwrap();
+        assert_eq!(b.spans_dropped, 0);
+        assert_eq!(b.overlap_efficiency, 0.0);
+        assert_eq!(b.prof_occupancy, 0.0);
+        assert_eq!(b.gather_gbs_achieved, 0.0);
+        assert_eq!(b.gather_gbs_peak, 0.0);
+        assert_eq!(b.footprint_bytes, 0);
+        assert_eq!(b.footprint_level, "");
+        assert_eq!(b.repeats, 1, "single run is the legacy meaning");
+        assert!(b.spread.is_empty());
+        assert_eq!(b.decode_tok_s, 50.0);
     }
 
     #[test]

@@ -17,6 +17,18 @@
 //!   (headline gauges + phase shares + spans) and the regression
 //!   comparator used by the `bench-serve` CLI and CI. Schema and
 //!   versioning policy live in the module header.
+//! - [`prof`] — the kernel-level profiler: lock-free per-worker event
+//!   rings recorded by the thread pool and the `parallel::fanout`
+//!   schedules, drained into Chrome trace-event JSON (Perfetto /
+//!   `chrome://tracing` loadable), with derived pipeline-overlap
+//!   efficiency and per-barrier occupancy gauges. The event schema and
+//!   viewing instructions live in the module header. ~Zero cost when
+//!   off (one relaxed load per potential span).
+//! - [`roofline`] — STREAM-triad bandwidth + peak-MAC calibration, the
+//!   roofline placement of the build/gather phases over the engines'
+//!   exact counters, and the on-chip footprint audit vs. detected
+//!   L1/L2/LLC sizes. Calibration methodology and its error model are
+//!   in the module header.
 //!
 //! Step-phase attribution follows a namespace convention:
 //! `sched/*` phases come from the batcher (prefill / decode / sample
@@ -24,13 +36,28 @@
 //! (gemm / attention / lm_head), and `engine/*` from the engines'
 //! cumulative `gemm::Counters` (Psumbook build vs gather seconds — the
 //! paper's Table 6 split).
+//!
+//! ## Profiling a serving run
+//!
+//! `bench-serve --profile on --trace-out trace.json` traces the whole
+//! seeded workload and writes the Chrome trace next to the bench
+//! artifact; open it at <https://ui.perfetto.dev>. The `profile`
+//! subcommand runs the calibration + per-kernel roofline standalone.
+//! Overlap efficiency, occupancy, ring drops, the gather-phase
+//! achieved-vs-peak GB/s and the footprint audit all surface in
+//! `MetricsReport::render` and ride the bench artifact
+//! (backward-compatibly — old artifacts parse with the gauges absent).
 
 pub mod export;
 pub mod hist;
 pub mod loadgen;
+pub mod prof;
+pub mod roofline;
 pub mod trace;
 
 pub use export::{compare, BenchArtifact, SCHEMA_VERSION};
 pub use hist::Histogram;
 pub use loadgen::{check_slo, drive, generate, Arrival, GenRequest, Slo, WorkloadClass, WorkloadMix};
+pub use prof::{ProfSummary, Timeline};
+pub use roofline::{CacheSizes, FootprintAudit, Peaks, RooflinePoint};
 pub use trace::{SpanRecord, TraceLog};

@@ -1,0 +1,652 @@
+//! Kernel-level profiler: per-worker timeline tracing with Chrome-trace
+//! export and pipeline-overlap gauges.
+//!
+//! The exact [`crate::gemm::Counters`] say *how much* work and traffic a
+//! call did; this module says *when* it happened and on *which worker* —
+//! the instrument that makes the PR-7 software pipeline's
+//! tile-`t+1`-build-under-tile-`t`-gather overlap directly visible
+//! instead of inferred from `build_seconds`.
+//!
+//! ## Event schema
+//!
+//! Every event is a closed span `(label, tag, tid, start_ns, end_ns)`:
+//!
+//! | label     | recorded by                         | tag            |
+//! |-----------|-------------------------------------|----------------|
+//! | `job`     | every `ThreadPool` worker, per job  | 0              |
+//! | `build`   | shared-book build j-range jobs      | k-tile index   |
+//! | `gather`  | shard × member gather jobs          | k-tile index   |
+//! | `stage`   | control thread: tile staging        | k-tile index   |
+//! | `barrier` | control thread: scope submit→join   | k-tile index   |
+//!
+//! `build`/`gather`/`stage` spans are nested *inside* the worker's
+//! generic `job` span (or the control thread's `barrier` span), so
+//! occupancy computations use the `job` layer and phase analysis uses
+//! the labelled layer — they are different views of the same wall time,
+//! not double counting.
+//!
+//! ## Recording: lock-free per-thread rings
+//!
+//! Each recording thread owns one preallocated ring of atomic slots
+//! (registered on first use, found again through a thread-local). A
+//! record is three relaxed stores plus one release store of the ring
+//! length — no locks, no allocation, no contention with other workers.
+//! When a ring fills, further events are **dropped and counted** (never
+//! overwritten — a wrapping write would race the drain), so a truncated
+//! timeline is always visible as `Timeline::dropped > 0`.
+//!
+//! When profiling is off (the default), [`begin`] is a single relaxed
+//! atomic load returning a sentinel and [`record_since`] returns
+//! immediately — the hot loops pay ~one predictable branch, and kernel
+//! outputs/counters are bit-identical either way (pinned by
+//! `tests/prof_trace.rs`).
+//!
+//! ## Draining and viewing
+//!
+//! [`drain`] snapshots and clears every registered ring into a
+//! [`Timeline`]. Call it only while no traced work is in flight (after
+//! the pool scopes have joined — every call site in this repo drains
+//! after a barrier); a racing recorder cannot corrupt memory (all slots
+//! are atomics) but could lose its event.
+//!
+//! [`Timeline::to_chrome_trace`] renders the Chrome trace-event JSON
+//! format: open <https://ui.perfetto.dev> (or `chrome://tracing`) and
+//! load the file — one row per worker, `build` spans for tile `t+1`
+//! visibly overlapping `gather` spans for tile `t` when the pipeline is
+//! doing its job. Derived gauges: [`Timeline::overlap`] (hidden vs
+//! exposed build seconds against the union of concurrent gather
+//! intervals) and [`Timeline::barrier_occupancy`] (mean fraction of
+//! worker-seconds actually busy inside each pool barrier).
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Sentinel returned by [`begin`] when profiling is disabled.
+pub const OFF: u64 = u64::MAX;
+
+/// Default per-thread ring capacity (events). At the pipeline's event
+/// rate (a handful of spans per k-tile per worker) this holds minutes of
+/// serving; overflow drops-and-counts rather than wrapping.
+pub const DEFAULT_RING_CAPACITY: usize = 1 << 16;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RING_CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAPACITY);
+static NEXT_TID: AtomicUsize = AtomicUsize::new(0);
+static EPOCH: Mutex<Option<Instant>> = Mutex::new(None);
+static REGISTRY: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
+
+/// Span labels. Small closed set so events pack into one atomic word —
+/// never store string pointers in the ring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Label {
+    /// Generic pool job (recorded by every `ThreadPool` worker).
+    Job = 0,
+    /// Psumbook build j-range job (tag = k-tile index).
+    Build = 1,
+    /// Shard × member gather job (tag = k-tile index).
+    Gather = 2,
+    /// Control-thread activation staging + book reshape (tag = k-tile).
+    Stage = 3,
+    /// Control-thread pool scope, submit → barrier (tag = k-tile).
+    Barrier = 4,
+}
+
+impl Label {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Label::Job => "job",
+            Label::Build => "build",
+            Label::Gather => "gather",
+            Label::Stage => "stage",
+            Label::Barrier => "barrier",
+        }
+    }
+
+    fn from_id(id: u32) -> Label {
+        match id {
+            1 => Label::Build,
+            2 => Label::Gather,
+            3 => Label::Stage,
+            4 => Label::Barrier,
+            _ => Label::Job,
+        }
+    }
+}
+
+/// One preallocated event slot: `meta` packs the label (low 32 bits) and
+/// tag (high 32); `start`/`end` are nanoseconds since the profiler epoch.
+struct Slot {
+    meta: AtomicU64,
+    start: AtomicU64,
+    end: AtomicU64,
+}
+
+/// One thread's event ring. Only the owning thread pushes; any thread
+/// may drain. `len` is published with Release so a drain's Acquire load
+/// sees fully written slots.
+struct Ring {
+    slots: Box<[Slot]>,
+    len: AtomicUsize,
+    dropped: AtomicU64,
+    tid: usize,
+    thread: String,
+}
+
+impl Ring {
+    fn new(capacity: usize, tid: usize, thread: String) -> Ring {
+        let slots: Vec<Slot> = (0..capacity.max(1))
+            .map(|_| Slot {
+                meta: AtomicU64::new(0),
+                start: AtomicU64::new(0),
+                end: AtomicU64::new(0),
+            })
+            .collect();
+        Ring { slots: slots.into_boxed_slice(), len: AtomicUsize::new(0), dropped: AtomicU64::new(0), tid, thread }
+    }
+
+    fn push(&self, label: Label, tag: u32, start_ns: u64, end_ns: u64) {
+        let i = self.len.load(Ordering::Relaxed);
+        if i >= self.slots.len() {
+            // Full: drop-and-count. Overwriting the oldest slot would
+            // race a concurrent drain; losing the newest is safe and the
+            // loss is never silent.
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let s = &self.slots[i];
+        s.meta.store(label as u64 | ((tag as u64) << 32), Ordering::Relaxed);
+        s.start.store(start_ns, Ordering::Relaxed);
+        s.end.store(end_ns, Ordering::Relaxed);
+        self.len.store(i + 1, Ordering::Release);
+    }
+}
+
+/// Per-thread recording state: the registered ring plus a copy of the
+/// shared epoch so the hot path never takes the epoch lock.
+struct Local {
+    epoch: Instant,
+    ring: Arc<Ring>,
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<Local>> = RefCell::new(None);
+}
+
+/// The process-wide profiling epoch: set once (first `enable`/record)
+/// and kept forever, so timestamps stay monotone across enable/disable
+/// cycles and traces from successive drains can be concatenated.
+fn epoch() -> Instant {
+    let mut g = EPOCH.lock().expect("prof epoch lock");
+    *g.get_or_insert_with(Instant::now)
+}
+
+fn with_local<R>(f: impl FnOnce(&Local) -> R) -> R {
+    LOCAL.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            let thread = std::thread::current()
+                .name()
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| format!("thread-{tid}"));
+            let ring = Arc::new(Ring::new(RING_CAPACITY.load(Ordering::Relaxed), tid, thread));
+            REGISTRY.lock().expect("prof registry lock").push(Arc::clone(&ring));
+            *slot = Some(Local { epoch: epoch(), ring });
+        }
+        f(slot.as_ref().expect("local ring just initialized"))
+    })
+}
+
+/// Is profiling on? One relaxed load — the entire cost the hot loops pay
+/// when tracing is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on (sets the epoch on first use).
+pub fn enable() {
+    let _ = epoch();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn tracing off. Already-recorded events stay in the rings until
+/// [`drain`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Capacity (events) for rings registered *after* this call; existing
+/// rings keep their size. Mainly for tests that exercise overflow.
+pub fn set_ring_capacity(capacity: usize) {
+    RING_CAPACITY.store(capacity.max(1), Ordering::SeqCst);
+}
+
+/// Start a span: returns the start timestamp, or [`OFF`] when disabled.
+#[inline]
+pub fn begin() -> u64 {
+    if !enabled() {
+        return OFF;
+    }
+    with_local(|l| l.epoch.elapsed().as_nanos() as u64)
+}
+
+/// Close a span opened with [`begin`]. No-op when `start_ns` is [`OFF`]
+/// or profiling has been disabled meanwhile.
+#[inline]
+pub fn record_since(label: Label, tag: u32, start_ns: u64) {
+    if start_ns == OFF || !enabled() {
+        return;
+    }
+    with_local(|l| {
+        let end_ns = l.epoch.elapsed().as_nanos() as u64;
+        l.ring.push(label, tag, start_ns, end_ns);
+    });
+}
+
+/// Run `f` inside a span. With profiling off this is `f()` plus one
+/// relaxed load — `f`'s outputs are identical either way.
+#[inline]
+pub fn with_span<R>(label: Label, tag: u32, f: impl FnOnce() -> R) -> R {
+    let t0 = begin();
+    let r = f();
+    record_since(label, tag, t0);
+    r
+}
+
+/// One closed span as drained from a ring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub label: Label,
+    pub tag: u32,
+    /// Stable per-thread id (registration order), the Chrome-trace tid.
+    pub tid: usize,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+impl Event {
+    pub fn duration_s(&self) -> f64 {
+        self.end_ns.saturating_sub(self.start_ns) as f64 * 1e-9
+    }
+}
+
+/// A drained snapshot of every thread's events, sorted by (tid, start).
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    pub events: Vec<Event>,
+    /// `(tid, thread name)` for every ring ever registered.
+    pub threads: Vec<(usize, String)>,
+    /// Events lost to full rings since the previous drain.
+    pub dropped: u64,
+}
+
+/// Hidden-vs-exposed build time against concurrent gathers — the
+/// pipeline's report card. `efficiency = hidden_s / build_s` (1.0 means
+/// every build nanosecond ran under some gather; the tile-0 prologue is
+/// exposed by construction, so steady-state pipelined runs land below
+/// but near the `(tiles-1)/tiles` ceiling).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Overlap {
+    pub build_s: f64,
+    pub hidden_s: f64,
+    pub exposed_s: f64,
+    pub efficiency: f64,
+}
+
+/// Snapshot and clear all rings. Call after the traced work has passed
+/// its barriers (see module docs).
+pub fn drain() -> Timeline {
+    let rings: Vec<Arc<Ring>> = REGISTRY.lock().expect("prof registry lock").clone();
+    let mut events = Vec::new();
+    let mut threads = Vec::with_capacity(rings.len());
+    let mut dropped = 0u64;
+    for ring in &rings {
+        let n = ring.len.load(Ordering::Acquire).min(ring.slots.len());
+        for slot in &ring.slots[..n] {
+            let meta = slot.meta.load(Ordering::Relaxed);
+            events.push(Event {
+                label: Label::from_id((meta & 0xffff_ffff) as u32),
+                tag: (meta >> 32) as u32,
+                tid: ring.tid,
+                start_ns: slot.start.load(Ordering::Relaxed),
+                end_ns: slot.end.load(Ordering::Relaxed),
+            });
+        }
+        dropped += ring.dropped.swap(0, Ordering::Relaxed);
+        ring.len.store(0, Ordering::Release);
+        threads.push((ring.tid, ring.thread.clone()));
+    }
+    events.sort_by_key(|e| (e.tid, e.start_ns, e.end_ns));
+    threads.sort();
+    threads.dedup();
+    Timeline { events, threads, dropped }
+}
+
+impl Timeline {
+    /// Chrome trace-event JSON (the `{"traceEvents": [...]}` object
+    /// form): complete `ph:"X"` spans in microseconds plus `ph:"M"`
+    /// thread-name metadata. Loadable in Perfetto / `chrome://tracing`.
+    pub fn to_chrome_trace(&self) -> Json {
+        let mut rows: Vec<Json> = Vec::with_capacity(self.threads.len() + self.events.len());
+        for (tid, name) in &self.threads {
+            rows.push(Json::obj(vec![
+                ("name", Json::from("thread_name")),
+                ("ph", Json::from("M")),
+                ("pid", Json::from(1usize)),
+                ("tid", Json::from(*tid)),
+                ("args", Json::obj(vec![("name", Json::from(name.as_str()))])),
+            ]));
+        }
+        for e in &self.events {
+            rows.push(Json::obj(vec![
+                ("name", Json::from(e.label.as_str())),
+                ("cat", Json::from("codegemm")),
+                ("ph", Json::from("X")),
+                ("ts", Json::Num(e.start_ns as f64 / 1000.0)),
+                ("dur", Json::Num(e.end_ns.saturating_sub(e.start_ns) as f64 / 1000.0)),
+                ("pid", Json::from(1usize)),
+                ("tid", Json::from(e.tid)),
+                ("args", Json::obj(vec![("tile", Json::from(e.tag as usize))])),
+            ]));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(rows)),
+            ("displayTimeUnit", Json::from("ms")),
+        ])
+    }
+
+    /// Build time hidden under concurrent gathers: intersect every
+    /// `build` span with the merged union of all `gather` intervals
+    /// (across threads).
+    pub fn overlap(&self) -> Overlap {
+        let mut gathers: Vec<(u64, u64)> = self
+            .events
+            .iter()
+            .filter(|e| e.label == Label::Gather)
+            .map(|e| (e.start_ns, e.end_ns))
+            .collect();
+        gathers.sort_unstable();
+        let mut union: Vec<(u64, u64)> = Vec::new();
+        for (s, e) in gathers {
+            match union.last_mut() {
+                Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                _ => union.push((s, e)),
+            }
+        }
+        let mut build_ns = 0u64;
+        let mut hidden_ns = 0u64;
+        for ev in self.events.iter().filter(|e| e.label == Label::Build) {
+            let (s, e) = (ev.start_ns, ev.end_ns);
+            build_ns += e.saturating_sub(s);
+            let mut i = union.partition_point(|&(_, ue)| ue <= s);
+            while i < union.len() && union[i].0 < e {
+                let lo = union[i].0.max(s);
+                let hi = union[i].1.min(e);
+                hidden_ns += hi.saturating_sub(lo);
+                i += 1;
+            }
+        }
+        let build_s = build_ns as f64 * 1e-9;
+        let hidden_s = hidden_ns as f64 * 1e-9;
+        Overlap {
+            build_s,
+            hidden_s,
+            exposed_s: build_ns.saturating_sub(hidden_ns) as f64 * 1e-9,
+            efficiency: if build_ns == 0 { 0.0 } else { hidden_s / build_s },
+        }
+    }
+
+    /// Mean worker occupancy across `barrier` spans: for each barrier,
+    /// the busy worker-seconds inside its window over `window ×
+    /// workers`. Uses the generic `job` layer when present (the
+    /// labelled build/gather spans nest inside it — counting both would
+    /// double-bill); `None` when no barriers were traced.
+    pub fn barrier_occupancy(&self) -> Option<f64> {
+        let barriers: Vec<&Event> =
+            self.events.iter().filter(|e| e.label == Label::Barrier).collect();
+        if barriers.is_empty() {
+            return None;
+        }
+        let mut work: Vec<&Event> = self.events.iter().filter(|e| e.label == Label::Job).collect();
+        if work.is_empty() {
+            work = self
+                .events
+                .iter()
+                .filter(|e| matches!(e.label, Label::Build | Label::Gather))
+                .collect();
+        }
+        let mut tids: Vec<usize> = work.iter().map(|e| e.tid).collect();
+        tids.sort_unstable();
+        tids.dedup();
+        if tids.is_empty() {
+            return Some(0.0);
+        }
+        let mut acc = 0.0f64;
+        let mut n = 0usize;
+        for b in &barriers {
+            let window = b.end_ns.saturating_sub(b.start_ns);
+            if window == 0 {
+                continue;
+            }
+            let mut busy = 0u64;
+            for w in &work {
+                let lo = w.start_ns.max(b.start_ns);
+                let hi = w.end_ns.min(b.end_ns);
+                busy += hi.saturating_sub(lo);
+            }
+            acc += busy as f64 / (window as f64 * tids.len() as f64);
+            n += 1;
+        }
+        if n == 0 {
+            None
+        } else {
+            Some(acc / n as f64)
+        }
+    }
+
+    /// Schedule-invariant structural view: the sorted multiset of
+    /// `(label, tag)` pairs. Same-seed runs produce the same structure
+    /// regardless of which worker ran which job or how the clock fell.
+    pub fn structural(&self) -> Vec<(Label, u32)> {
+        let mut v: Vec<(Label, u32)> = self.events.iter().map(|e| (e.label, e.tag)).collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Derived profiler gauges in report/artifact form — what `MetricsReport`
+/// and `BENCH_<n>.json` carry when a traced run finishes.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ProfSummary {
+    /// Spans drained from the worker rings.
+    pub events: u64,
+    /// Spans lost to full rings (truncated trace ⇒ nonzero).
+    pub dropped: u64,
+    /// Hidden build share, [`Overlap::efficiency`].
+    pub overlap_efficiency: f64,
+    pub hidden_build_s: f64,
+    pub exposed_build_s: f64,
+    /// Mean per-barrier worker occupancy (0 when untraceable).
+    pub occupancy: f64,
+    /// Calibrated peak memory bandwidth (STREAM triad), GB/s; 0 when no
+    /// calibration ran alongside the trace.
+    pub gather_gbs_peak: f64,
+}
+
+impl ProfSummary {
+    pub fn from_timeline(tl: &Timeline) -> ProfSummary {
+        let o = tl.overlap();
+        ProfSummary {
+            events: tl.events.len() as u64,
+            dropped: tl.dropped,
+            overlap_efficiency: o.efficiency,
+            hidden_build_s: o.hidden_s,
+            exposed_build_s: o.exposed_s,
+            occupancy: tl.barrier_occupancy().unwrap_or(0.0),
+            gather_gbs_peak: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes the tests that flip the process-wide profiler state
+    /// (cargo runs `#[test]`s on parallel threads).
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn ev(label: Label, tag: u32, tid: usize, start_ns: u64, end_ns: u64) -> Event {
+        Event { label, tag, tid, start_ns, end_ns }
+    }
+
+    #[test]
+    fn overlap_math_on_synthetic_timeline() {
+        // Gathers cover [0,100) and [150,200); builds [50,160) and
+        // [300,310). Hidden = 50 + 10 = 60 of 120 build ns.
+        let tl = Timeline {
+            events: vec![
+                ev(Label::Gather, 0, 1, 0, 100),
+                ev(Label::Gather, 0, 2, 150, 200),
+                ev(Label::Build, 1, 3, 50, 160),
+                ev(Label::Build, 2, 3, 300, 310),
+            ],
+            threads: vec![],
+            dropped: 0,
+        };
+        let o = tl.overlap();
+        assert_eq!((o.build_s * 1e9).round() as u64, 120);
+        assert_eq!((o.hidden_s * 1e9).round() as u64, 60);
+        assert_eq!((o.exposed_s * 1e9).round() as u64, 60);
+        assert!((o.efficiency - 0.5).abs() < 1e-12, "efficiency {}", o.efficiency);
+    }
+
+    #[test]
+    fn overlap_merges_touching_gather_intervals() {
+        // Two abutting gathers must not double-count a build overlapping
+        // the seam.
+        let tl = Timeline {
+            events: vec![
+                ev(Label::Gather, 0, 1, 0, 50),
+                ev(Label::Gather, 0, 2, 50, 100),
+                ev(Label::Build, 1, 3, 40, 60),
+            ],
+            threads: vec![],
+            dropped: 0,
+        };
+        let o = tl.overlap();
+        assert_eq!((o.hidden_s * 1e9).round() as u64, 20);
+        assert!((o.efficiency - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn barrier_occupancy_uses_job_layer() {
+        // One 100ns barrier; two workers each busy 50ns inside it (job
+        // spans), with nested build spans that must NOT double-count.
+        let tl = Timeline {
+            events: vec![
+                ev(Label::Barrier, 0, 0, 0, 100),
+                ev(Label::Job, 0, 1, 0, 50),
+                ev(Label::Build, 0, 1, 0, 50),
+                ev(Label::Job, 0, 2, 50, 100),
+            ],
+            threads: vec![],
+            dropped: 0,
+        };
+        let occ = tl.barrier_occupancy().expect("has barriers");
+        assert!((occ - 0.5).abs() < 1e-12, "occupancy {occ}");
+        assert_eq!(Timeline::default().barrier_occupancy(), None);
+    }
+
+    #[test]
+    fn chrome_trace_shape_roundtrips() {
+        let tl = Timeline {
+            events: vec![ev(Label::Build, 3, 1, 1000, 2500), ev(Label::Gather, 2, 2, 0, 4000)],
+            threads: vec![(1, "w1".to_string()), (2, "w2".to_string())],
+            dropped: 0,
+        };
+        let j = Json::parse(&tl.to_chrome_trace().to_string_compact()).expect("valid JSON");
+        let rows = j.req_arr("traceEvents").expect("traceEvents");
+        assert_eq!(rows.len(), 4);
+        let metas = rows.iter().filter(|r| r.req_str("ph").unwrap() == "M").count();
+        assert_eq!(metas, 2);
+        for r in rows.iter().filter(|r| r.req_str("ph").unwrap() == "X") {
+            assert!(r.req_f64("dur").unwrap() >= 0.0);
+            assert!(r.req_f64("ts").unwrap() >= 0.0);
+            assert!(r.get("args").and_then(|a| a.get("tile")).is_some());
+        }
+    }
+
+    #[test]
+    fn disabled_recording_is_a_no_op() {
+        let _g = lock();
+        disable();
+        let _ = drain();
+        assert_eq!(begin(), OFF);
+        record_since(Label::Build, 7, OFF);
+        let out = with_span(Label::Gather, 9, || 41 + 1);
+        assert_eq!(out, 42);
+        let tl = drain();
+        assert!(
+            tl.events.iter().all(|e| e.label == Label::Job),
+            "no labelled spans may appear while disabled"
+        );
+    }
+
+    #[test]
+    fn ring_overflow_drops_and_counts() {
+        let _g = lock();
+        disable();
+        let _ = drain();
+        set_ring_capacity(16);
+        enable();
+        // A fresh thread gets a fresh (16-slot) ring.
+        std::thread::spawn(|| {
+            for i in 0..21u32 {
+                with_span(Label::Stage, 0xD1, || std::hint::black_box(i));
+            }
+        })
+        .join()
+        .expect("recorder thread");
+        disable();
+        set_ring_capacity(DEFAULT_RING_CAPACITY);
+        let tl = drain();
+        let mine = tl.events.iter().filter(|e| e.tag == 0xD1).count();
+        assert_eq!(mine, 16, "ring must keep exactly its capacity");
+        assert!(tl.dropped >= 5, "dropped {} events, expected >= 5", tl.dropped);
+    }
+
+    #[test]
+    fn with_span_records_label_tag_and_order() {
+        let _g = lock();
+        disable();
+        let _ = drain();
+        enable();
+        std::thread::spawn(|| {
+            with_span(Label::Build, 0xA2, || {
+                with_span(Label::Gather, 0xA3, || std::hint::black_box(1));
+            });
+        })
+        .join()
+        .expect("recorder thread");
+        disable();
+        let tl = drain();
+        let build = tl.events.iter().find(|e| e.tag == 0xA2).expect("build span");
+        let gather = tl.events.iter().find(|e| e.tag == 0xA3).expect("gather span");
+        assert_eq!(build.label, Label::Build);
+        assert_eq!(gather.label, Label::Gather);
+        // The nested span closes first but lies inside the outer one.
+        assert!(build.start_ns <= gather.start_ns && gather.end_ns <= build.end_ns);
+        assert!(build.end_ns >= build.start_ns);
+        let s = tl.structural();
+        assert!(s.windows(2).all(|w| w[0] <= w[1]), "structural view is sorted");
+    }
+}

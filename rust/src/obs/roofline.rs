@@ -1,0 +1,355 @@
+//! Calibrated roofline + on-chip footprint audit.
+//!
+//! The engines' [`crate::gemm::Counters`] are exact — MACs, lookups and
+//! bytes derived from the algorithm, not sampled — but "achieved 9 GB/s
+//! on the gather stream" means nothing without knowing what *this*
+//! machine can do. This module measures the two roofs and places the
+//! measured phases under them:
+//!
+//! - [`measure_bandwidth_gbs`]: STREAM-triad (`a[i] = b[i] + s·c[i]`)
+//!   over three arrays sized well past the LLC, best-of-N reps — the
+//!   sustainable memory bandwidth roof.
+//! - [`measure_peak_gmacs`]: independent-accumulator multiply-add chains
+//!   over an L1-resident buffer, best-of-N — the compute roof for the
+//!   portable (auto-vectorized) mul+add the kernels actually compile to.
+//!
+//! ## Error model
+//!
+//! Calibration is best-of-N wall-clock on a possibly noisy machine:
+//! treat single-digit percent as noise (CI runners: tens of percent —
+//! which is why the bench comparator stays advisory there). The triad
+//! understates achievable bandwidth when the compiler fails to
+//! vectorize the copy loop and overstates the *gather* roof slightly
+//! because gathers are not pure streams; the MAC roof measures mul+add
+//! pairs (fused only under `-C target-cpu=native`-style flags). Both
+//! errors are stable on one machine, so *ratios across configs/kernels*
+//! are trustworthy even where absolute percentages carry the noise.
+//!
+//! [`analyze`] combines a phase's exact counters (MACs, bytes, seconds)
+//! with the measured [`Peaks`]: arithmetic intensity (MACs/byte), the
+//! binding roof (`min(peak_mac, AI × bw)`), and % of attainable.
+//!
+//! ## Footprint audit
+//!
+//! [`FootprintAudit`] prices the on-chip working set the way the paper's
+//! §3 space argument does, but against *this* machine's detected cache
+//! sizes ([`CacheSizes::detect`], sysfs with fallbacks): the Psumbook
+//! (+ the PR-7 `book2` double buffer under the pipeline) plus staging
+//! buffers, and the smallest cache level that holds them. A config whose
+//! audit says `DRAM` has lost the paper's bet — the gather loop will
+//! stream its tables from memory and the roofline will show it.
+
+use crate::util::timer::Timer;
+use std::hint::black_box;
+
+/// Detected (or fallback) cache capacities in bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheSizes {
+    pub l1d: usize,
+    pub l2: usize,
+    pub llc: usize,
+}
+
+impl CacheSizes {
+    /// Conservative defaults when sysfs is unavailable (containers,
+    /// non-Linux): 32 KiB / 1 MiB / 32 MiB.
+    pub const FALLBACK: CacheSizes =
+        CacheSizes { l1d: 32 << 10, l2: 1 << 20, llc: 32 << 20 };
+
+    /// Read `/sys/devices/system/cpu/cpu0/cache/index*` (Linux),
+    /// falling back per level when absent or unparsable.
+    pub fn detect() -> CacheSizes {
+        let mut out = CacheSizes::FALLBACK;
+        let mut best_llc = 0usize;
+        for idx in 0..8usize {
+            let base = format!("/sys/devices/system/cpu/cpu0/cache/index{idx}");
+            let read = |f: &str| std::fs::read_to_string(format!("{base}/{f}"));
+            let (Ok(level), Ok(ty), Ok(size)) = (read("level"), read("type"), read("size"))
+            else {
+                continue;
+            };
+            let Ok(level) = level.trim().parse::<usize>() else { continue };
+            let Some(bytes) = parse_size(size.trim()) else { continue };
+            if ty.trim() == "Instruction" {
+                continue;
+            }
+            match level {
+                1 => out.l1d = bytes,
+                2 => out.l2 = bytes,
+                _ => {
+                    if bytes > best_llc {
+                        best_llc = bytes;
+                        out.llc = bytes;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Smallest level that holds `bytes`: "L1" | "L2" | "LLC" | "DRAM".
+    pub fn level_of(&self, bytes: usize) -> &'static str {
+        if bytes <= self.l1d {
+            "L1"
+        } else if bytes <= self.l2 {
+            "L2"
+        } else if bytes <= self.llc {
+            "LLC"
+        } else {
+            "DRAM"
+        }
+    }
+}
+
+/// Parse a sysfs cache size string ("32K", "1024K", "8M", raw bytes).
+fn parse_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    if let Some(v) = s.strip_suffix('K') {
+        v.parse::<usize>().ok().map(|v| v << 10)
+    } else if let Some(v) = s.strip_suffix('M') {
+        v.parse::<usize>().ok().map(|v| v << 20)
+    } else if let Some(v) = s.strip_suffix('G') {
+        v.parse::<usize>().ok().map(|v| v << 30)
+    } else {
+        s.parse::<usize>().ok()
+    }
+}
+
+/// Measured machine peaks for the two roofs.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Peaks {
+    /// Sustainable memory bandwidth (GB/s), STREAM triad best-of-N.
+    pub bw_gbs: f64,
+    /// Peak multiply-add throughput (GMAC/s), best-of-N.
+    pub gmacs: f64,
+}
+
+/// STREAM-triad bandwidth: `a[i] = b[i] + s·c[i]` over three f32 arrays
+/// totalling ~2× `llc_bytes` so the streams miss every cache level.
+/// Returns the best of `reps` passes in GB/s (3 streams × 4 bytes).
+pub fn measure_bandwidth_gbs(llc_bytes: usize, reps: usize) -> f64 {
+    let len = ((llc_bytes * 2) / (3 * 4)).max(1 << 16);
+    let mut a = vec![0f32; len];
+    let b = vec![1.5f32; len];
+    let c = vec![0.25f32; len];
+    let s = 3.0f32;
+    let mut best = 0.0f64;
+    for _ in 0..reps.max(1) {
+        let t = Timer::start();
+        for i in 0..len {
+            a[i] = b[i] + s * c[i];
+        }
+        black_box(&mut a);
+        let dt = t.elapsed_s();
+        if dt > 0.0 {
+            let gbs = (len as f64 * 3.0 * 4.0) / dt / 1e9;
+            if gbs > best {
+                best = gbs;
+            }
+        }
+    }
+    best
+}
+
+/// Peak MAC throughput: 16 independent accumulator chains over a 4 KiB
+/// (L1-resident) buffer — the same independent-lane structure the
+/// `gemm::simd` kernels use, so the auto-vectorizer has the same room.
+/// Counts one MAC per mul+add pair; best of `reps` passes in GMAC/s.
+pub fn measure_peak_gmacs(reps: usize) -> f64 {
+    const LANES: usize = 16;
+    const LEN: usize = 1024;
+    const INNER: usize = 2048;
+    let x: Vec<f32> = (0..LEN).map(|i| 1.0 + (i % 7) as f32 * 1e-3).collect();
+    let mut acc = [0f32; LANES];
+    let mut best = 0.0f64;
+    for _ in 0..reps.max(1) {
+        for a in acc.iter_mut() {
+            *a = 0.0;
+        }
+        let t = Timer::start();
+        for pass in 0..INNER {
+            let scale = 1.0 + (pass % 3) as f32 * 1e-4;
+            let mut i = 0;
+            while i + LANES <= LEN {
+                for l in 0..LANES {
+                    acc[l] += x[i + l] * scale;
+                }
+                i += LANES;
+            }
+        }
+        black_box(&mut acc);
+        let dt = t.elapsed_s();
+        if dt > 0.0 {
+            let macs = (INNER * LEN) as f64;
+            let g = macs / dt / 1e9;
+            if g > best {
+                best = g;
+            }
+        }
+    }
+    best
+}
+
+/// Run both calibration loops. `quick` caps the triad working set and
+/// rep count for CI smoke legs.
+pub fn calibrate(caches: &CacheSizes, quick: bool) -> Peaks {
+    let (reps, llc) = if quick { (3, caches.llc.min(8 << 20)) } else { (7, caches.llc) };
+    Peaks { bw_gbs: measure_bandwidth_gbs(llc, reps), gmacs: measure_peak_gmacs(reps) }
+}
+
+/// One phase placed under the calibrated roofs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RooflinePoint {
+    pub phase: String,
+    pub macs: u64,
+    pub bytes: u64,
+    pub seconds: f64,
+    pub achieved_gbs: f64,
+    pub achieved_gmacs: f64,
+    /// Arithmetic intensity: MACs per byte moved.
+    pub intensity: f64,
+    /// `min(peak_mac, intensity × peak_bw)` — what this phase could do.
+    pub attainable_gmacs: f64,
+    pub pct_attainable: f64,
+    /// Which roof binds: "memory" or "compute".
+    pub bound: &'static str,
+}
+
+/// Place a phase's exact counters under the measured peaks.
+pub fn analyze(phase: &str, macs: u64, bytes: u64, seconds: f64, peaks: &Peaks) -> RooflinePoint {
+    let achieved_gbs = if seconds > 0.0 { bytes as f64 / seconds / 1e9 } else { 0.0 };
+    let achieved_gmacs = if seconds > 0.0 { macs as f64 / seconds / 1e9 } else { 0.0 };
+    let intensity = if bytes > 0 { macs as f64 / bytes as f64 } else { 0.0 };
+    let mem_roof = intensity * peaks.bw_gbs;
+    let attainable = if peaks.gmacs > 0.0 { mem_roof.min(peaks.gmacs) } else { mem_roof };
+    RooflinePoint {
+        phase: phase.to_string(),
+        macs,
+        bytes,
+        seconds,
+        achieved_gbs,
+        achieved_gmacs,
+        intensity,
+        attainable_gmacs: attainable,
+        pct_attainable: if attainable > 0.0 { 100.0 * achieved_gmacs / attainable } else { 0.0 },
+        bound: if peaks.gmacs > 0.0 && mem_roof < peaks.gmacs { "memory" } else { "compute" },
+    }
+}
+
+/// On-chip working set of one engine scratch vs. the cache hierarchy.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FootprintAudit {
+    /// Psumbook high-water bytes (`EngineScratch::book`).
+    pub book_bytes: usize,
+    /// The pipeline's spare book (`book2`) — zero when not pipelining.
+    pub book2_bytes: usize,
+    /// Activation staging (`buf` + `buf2`) high-water bytes.
+    pub staging_bytes: usize,
+    pub total_bytes: usize,
+    pub l1d: usize,
+    pub l2: usize,
+    pub llc: usize,
+    /// Smallest cache level holding the total ("L1"/"L2"/"LLC"/"DRAM").
+    pub level: String,
+}
+
+impl FootprintAudit {
+    /// Audit component byte counts against `caches`.
+    pub fn new(
+        book_bytes: usize,
+        book2_bytes: usize,
+        staging_bytes: usize,
+        caches: &CacheSizes,
+    ) -> FootprintAudit {
+        let total_bytes = book_bytes + book2_bytes + staging_bytes;
+        FootprintAudit {
+            book_bytes,
+            book2_bytes,
+            staging_bytes,
+            total_bytes,
+            l1d: caches.l1d,
+            l2: caches.l2,
+            llc: caches.llc,
+            level: caches.level_of(total_bytes).to_string(),
+        }
+    }
+
+    /// Audit from an [`crate::gemm::EngineScratch`]'s component parts
+    /// (`(buf, buf2, book, book2)` bytes, as `footprint_parts` returns).
+    pub fn from_parts(parts: (usize, usize, usize, usize), caches: &CacheSizes) -> FootprintAudit {
+        FootprintAudit::new(parts.2, parts.3, parts.0 + parts.1, caches)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CACHES: CacheSizes = CacheSizes { l1d: 32 << 10, l2: 1 << 20, llc: 32 << 20 };
+
+    #[test]
+    fn parse_size_suffixes() {
+        assert_eq!(parse_size("32K"), Some(32 << 10));
+        assert_eq!(parse_size("1024K"), Some(1 << 20));
+        assert_eq!(parse_size("8M"), Some(8 << 20));
+        assert_eq!(parse_size("512"), Some(512));
+        assert_eq!(parse_size("x"), None);
+    }
+
+    #[test]
+    fn level_of_walks_the_hierarchy() {
+        assert_eq!(CACHES.level_of(1 << 10), "L1");
+        assert_eq!(CACHES.level_of(64 << 10), "L2");
+        assert_eq!(CACHES.level_of(2 << 20), "LLC");
+        assert_eq!(CACHES.level_of(64 << 20), "DRAM");
+    }
+
+    #[test]
+    fn detect_returns_positive_sizes() {
+        let c = CacheSizes::detect();
+        assert!(c.l1d > 0 && c.l2 >= c.l1d.min(c.l2) && c.llc > 0);
+    }
+
+    #[test]
+    fn analyze_places_phases_under_the_roofs() {
+        let peaks = Peaks { bw_gbs: 10.0, gmacs: 50.0 };
+        // 1e9 MACs over 4e9 bytes in 1s: AI = 0.25, mem roof = 2.5 GMACs
+        // < 50 ⇒ memory bound, achieved 1 GMAC/s = 40% of attainable.
+        let p = analyze("gather", 1_000_000_000, 4_000_000_000, 1.0, &peaks);
+        assert_eq!(p.bound, "memory");
+        assert!((p.intensity - 0.25).abs() < 1e-12);
+        assert!((p.achieved_gbs - 4.0).abs() < 1e-9);
+        assert!((p.attainable_gmacs - 2.5).abs() < 1e-9);
+        assert!((p.pct_attainable - 40.0).abs() < 1e-6);
+        // High intensity flips to the compute roof.
+        let p2 = analyze("build", 1_000_000_000, 1_000_000, 1.0, &peaks);
+        assert_eq!(p2.bound, "compute");
+        assert!((p2.attainable_gmacs - 50.0).abs() < 1e-9);
+        // Zero time ⇒ zero achieved, no division blowups.
+        let p3 = analyze("empty", 0, 0, 0.0, &peaks);
+        assert_eq!(p3.achieved_gbs, 0.0);
+        assert_eq!(p3.pct_attainable, 0.0);
+    }
+
+    #[test]
+    fn calibration_loops_produce_positive_peaks() {
+        // Tiny working set: correctness of the plumbing, not the numbers.
+        let bw = measure_bandwidth_gbs(1 << 16, 1);
+        let mac = measure_peak_gmacs(1);
+        assert!(bw > 0.0, "triad bandwidth {bw}");
+        assert!(mac > 0.0, "mac peak {mac}");
+    }
+
+    #[test]
+    fn footprint_audit_sums_and_levels() {
+        let a = FootprintAudit::new(16 << 10, 16 << 10, 8 << 10, &CACHES);
+        assert_eq!(a.total_bytes, 40 << 10);
+        assert_eq!(a.level, "L2");
+        let b = FootprintAudit::from_parts((4 << 10, 4 << 10, 8 << 10, 0), &CACHES);
+        assert_eq!(a.book_bytes, 16 << 10);
+        assert_eq!(b.book_bytes, 8 << 10);
+        assert_eq!(b.book2_bytes, 0);
+        assert_eq!(b.staging_bytes, 8 << 10);
+        assert_eq!(b.level, "L1");
+    }
+}

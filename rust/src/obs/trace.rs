@@ -173,6 +173,14 @@ impl TraceLog {
         self.capacity
     }
 
+    /// Spans evicted by the bounded ring (`total - retained`) — nonzero
+    /// means the retained window is a *truncated* view of the run, which
+    /// the metrics report and bench artifact surface so a clipped trace
+    /// is never mistaken for a complete one.
+    pub fn dropped(&self) -> u64 {
+        self.total - self.spans.len() as u64
+    }
+
     /// Ring storage footprint — constant once the ring has filled.
     pub fn footprint_bytes(&self) -> usize {
         std::mem::size_of::<TraceLog>()
@@ -211,6 +219,21 @@ mod tests {
         assert_eq!(log.total(), 10);
         let ids: Vec<u64> = log.recent().iter().map(|s| s.id).collect();
         assert_eq!(ids, vec![6, 7, 8, 9], "oldest → newest of the last 4");
+    }
+
+    #[test]
+    fn overflow_is_counted_never_silent() {
+        let mut log = TraceLog::with_capacity(4);
+        for id in 0..3 {
+            log.push(span(id));
+        }
+        assert_eq!(log.dropped(), 0, "under capacity nothing drops");
+        for id in 3..11 {
+            log.push(span(id));
+        }
+        assert_eq!(log.total(), 11);
+        assert_eq!(log.recent().len(), 4);
+        assert_eq!(log.dropped(), 7, "evicted spans must be counted");
     }
 
     #[test]

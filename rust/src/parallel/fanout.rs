@@ -43,7 +43,12 @@
 //! staging time. Timing attribution shifts: `build_seconds` covers the
 //! prologue build only, while the overlapped scopes land in
 //! `read_seconds` — the split measures the *exposed* (non-overlapped)
-//! build cost, which is the pipeline's whole point.
+//! build cost, which is the pipeline's whole point. With `obs::prof`
+//! enabled every build j-range, gather job, staging call and barrier
+//! wait is recorded as a tile-tagged span, so the exported Chrome trace
+//! shows tile `t+1`'s build running under tile `t`'s gather barrier
+//! directly — and [`crate::obs::prof::Timeline::overlap`] turns that
+//! into the hidden-vs-exposed build-seconds gauge.
 //!
 //! Cost model caveat: unlike the private schedule's single rendezvous
 //! per call, the shared schedule still synchronizes the pool once per
@@ -59,6 +64,7 @@ use crate::gemm::scratch::grow_slice;
 use crate::gemm::simd;
 use crate::gemm::tiling::Tiles;
 use crate::gemm::{CodeGemmEngine, Counters, EngineScratch, GemmEngine};
+use crate::obs::prof;
 use crate::util::threadpool::{ScopedJob, ThreadPool};
 use crate::util::timer::Timer;
 
@@ -242,11 +248,15 @@ pub(crate) fn shared_book_fan_out_multi<E: GemmEngine + Send + Sync>(
     }
     // Per-row group scales stream once per logical call (row partitioning
     // conserves this stream exactly; each member streams its own rows').
-    counters.weight_bytes += members
+    // Read during gather's scale application ⇒ also the read side of the
+    // roofline byte split.
+    let scales_bytes = members
         .iter()
         .flat_map(|m| m.engines.iter())
         .map(|e| e.as_codegemm().expect("codegemm shard").scales_stream_bytes())
         .sum::<u64>();
+    counters.weight_bytes += scales_bytes;
+    counters.read_bytes += scales_bytes;
     merge_children_into(counters, children);
 }
 
@@ -255,13 +265,16 @@ pub(crate) fn shared_book_fan_out_multi<E: GemmEngine + Send + Sync>(
 /// under the pipeline, where it overlaps the previous tile's gather).
 /// `book` must already be reshaped for the tile (via `prepare_tile`);
 /// each job writes its disjoint slice of the book's storage through the
-/// engine's resolved SIMD build kernel.
+/// engine's resolved SIMD build kernel. `tile` tags the profiler spans
+/// with the k-tile index so the trace shows *which* tile's build ran
+/// under which tile's gather.
 fn append_build_jobs<'env>(
     jobs: &mut Vec<ScopedJob<'env>>,
     pool_size: usize,
     e0: &'env CodeGemmEngine,
     x_tile: &'env [f32],
     book: &'env mut Psumbook,
+    tile: u32,
 ) {
     let (jn_tile, m, nc, mb) = (book.jn, book.m, book.nc, book.mb);
     let v = e0.quant_config().v;
@@ -274,14 +287,17 @@ fn append_build_jobs<'env>(
         let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((j1 - j0) * stride);
         rest = tail;
         jobs.push(Box::new(move || {
-            simd::build_range(sel, codebooks, v, x_tile, jn_tile, m, nc, mb, j0, j1, chunk);
+            prof::with_span(prof::Label::Build, tile, || {
+                simd::build_range(sel, codebooks, v, x_tile, jn_tile, m, nc, mb, j0, j1, chunk);
+            });
         }));
     }
 }
 
 /// Append the phase-2 shard × member gather jobs for the k-tile starting
 /// at column `c0`, each reading `book` read-only into its disjoint block
-/// of its member's dest and counting into its own child scratch.
+/// of its member's dest and counting into its own child scratch. `tile`
+/// tags the profiler spans with the k-tile index.
 #[allow(clippy::too_many_arguments)]
 fn append_gather_jobs<'env, 'b, E: GemmEngine + Send + Sync>(
     jobs: &mut Vec<ScopedJob<'env>>,
@@ -291,6 +307,7 @@ fn append_gather_jobs<'env, 'b, E: GemmEngine + Send + Sync>(
     m_batch: usize,
     dest_blocks: &'env mut [&'b mut [f32]],
     children: &'env mut [EngineScratch],
+    tile: u32,
 ) {
     let mut child_iter = children.iter_mut();
     for (member, block) in members.iter().zip(dest_blocks.iter_mut()) {
@@ -301,7 +318,11 @@ fn append_gather_jobs<'env, 'b, E: GemmEngine + Send + Sync>(
             let (ys, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * m_batch);
             rest = tail;
             let gather_counters = &mut child.counters;
-            jobs.push(Box::new(move || e.gather_into(book, c0, m_batch, ys, gather_counters)));
+            jobs.push(Box::new(move || {
+                prof::with_span(prof::Label::Gather, tile, || {
+                    e.gather_into(book, c0, m_batch, ys, gather_counters)
+                })
+            }));
         }
     }
 }
@@ -348,11 +369,14 @@ fn shared_book_tiles<E: GemmEngine + Send + Sync>(
     let pipelined = e0.kernel_config().pipeline_tiles && tiles.len() > 1;
 
     if !pipelined {
-        for &(c0, c1) in &tiles {
+        for (ti, &(c0, c1)) in tiles.iter().enumerate() {
+            let ti = ti as u32;
             // Phase 1: build one shared book for this k-tile, fanned out
             // by j-ranges (disjoint slices of the book's storage).
             let t = Timer::start();
+            let ts = prof::begin();
             let x_tile: &[f32] = e0.prepare_tile(x, m_batch, c0, c1, book, buf);
+            prof::record_since(prof::Label::Stage, ti, ts);
             // Build work is attributed ONCE per logical call, independent
             // of the shard count and the member count — the amortization
             // `build_share_*` / `group_fanout` price. `count_build` is
@@ -361,8 +385,10 @@ fn shared_book_tiles<E: GemmEngine + Send + Sync>(
             // drift.
             e0.count_build(book, counters);
             let mut jobs: Vec<ScopedJob> = Vec::new();
-            append_build_jobs(&mut jobs, pool.size(), e0, x_tile, book);
+            append_build_jobs(&mut jobs, pool.size(), e0, x_tile, book, ti);
+            let tb = prof::begin();
             pool.scope_run(jobs);
+            prof::record_since(prof::Label::Barrier, ti, tb);
             counters.build_seconds += t.elapsed_s();
 
             // Phase 2: the shard × member matrix gathers read-only from
@@ -370,8 +396,10 @@ fn shared_book_tiles<E: GemmEngine + Send + Sync>(
             // member's dest.
             let t = Timer::start();
             let mut jobs: Vec<ScopedJob> = Vec::with_capacity(total_shards);
-            append_gather_jobs(&mut jobs, members, book, c0, m_batch, dest_blocks, children);
+            append_gather_jobs(&mut jobs, members, book, c0, m_batch, dest_blocks, children, ti);
+            let tb = prof::begin();
             pool.scope_run(jobs);
+            prof::record_since(prof::Label::Barrier, ti, tb);
             counters.read_seconds += t.elapsed_s();
         }
         return;
@@ -382,11 +410,15 @@ fn shared_book_tiles<E: GemmEngine + Send + Sync>(
     {
         let (c0, c1) = tiles[0];
         let t = Timer::start();
+        let ts = prof::begin();
         let x_tile: &[f32] = e0.prepare_tile(x, m_batch, c0, c1, book, buf);
+        prof::record_since(prof::Label::Stage, 0, ts);
         e0.count_build(book, counters);
         let mut jobs: Vec<ScopedJob> = Vec::new();
-        append_build_jobs(&mut jobs, pool.size(), e0, x_tile, book);
+        append_build_jobs(&mut jobs, pool.size(), e0, x_tile, book, 0);
+        let tb = prof::begin();
         pool.scope_run(jobs);
+        prof::record_since(prof::Label::Barrier, 0, tb);
         counters.build_seconds += t.elapsed_s();
     }
     // Steady state: one scope per tile runs tile t's gathers against
@@ -402,13 +434,17 @@ fn shared_book_tiles<E: GemmEngine + Send + Sync>(
         let (c0, _) = tiles[ti];
         let t = Timer::start();
         let mut jobs: Vec<ScopedJob> = Vec::with_capacity(total_shards + pool.size());
-        append_gather_jobs(&mut jobs, members, &*cur, c0, m_batch, dest_blocks, children);
+        append_gather_jobs(&mut jobs, members, &*cur, c0, m_batch, dest_blocks, children, ti as u32);
         if let Some(&(n0, n1)) = tiles.get(ti + 1) {
+            let ts = prof::begin();
             let x_next: &[f32] = e0.prepare_tile(x, m_batch, n0, n1, nxt, buf);
+            prof::record_since(prof::Label::Stage, (ti + 1) as u32, ts);
             e0.count_build(nxt, counters);
-            append_build_jobs(&mut jobs, pool.size(), e0, x_next, &mut *nxt);
+            append_build_jobs(&mut jobs, pool.size(), e0, x_next, &mut *nxt, (ti + 1) as u32);
         }
+        let tb = prof::begin();
         pool.scope_run(jobs);
+        prof::record_since(prof::Label::Barrier, ti as u32, tb);
         counters.read_seconds += t.elapsed_s();
         std::mem::swap(&mut cur, &mut nxt);
     }

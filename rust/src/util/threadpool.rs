@@ -10,6 +10,7 @@
 //! `parallel_map` — the first panic payload is re-thrown at the
 //! `parallel_map` caller once all jobs of that call have settled.
 
+use crate::obs::prof;
 use std::any::Any;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
@@ -62,7 +63,14 @@ impl ThreadPool {
                                 // pool and wedge later calls). parallel_map
                                 // jobs catch their own panics first and
                                 // forward the payload to the caller.
+                                //
+                                // The profiler span is the generic per-job
+                                // `job` layer (labelled build/gather spans
+                                // nest inside it); with profiling off this
+                                // is one relaxed load.
+                                let t0 = prof::begin();
                                 let _ = catch_unwind(AssertUnwindSafe(job));
+                                prof::record_since(prof::Label::Job, 0, t0);
                             }
                             Ok(Msg::Shutdown) | Err(_) => break,
                         }

@@ -1,0 +1,213 @@
+//! Integration suite for the kernel profiler (`obs::prof`) on the real
+//! pipelined shared-book schedule:
+//!
+//! - the Chrome trace-event export is valid, loadable JSON (`ph:"X"`
+//!   spans with non-negative `ts`/`dur`, `ph:"M"` thread metadata);
+//! - the pipelined schedule demonstrably co-issues tile `t+1`'s Psumbook
+//!   build with tile `t`'s gather: both land inside the same barrier
+//!   window, which is the deterministic overlap evidence the trace shows;
+//! - same-seed traced runs are structurally deterministic (same
+//!   `(label, tag)` multiset regardless of worker/clock placement);
+//! - with the profiler off (the default), outputs and the exact engine
+//!   counters are bit-identical to a traced run, and nothing is recorded.
+//!
+//! This suite lives in its own test binary so flipping the process-global
+//! profiler cannot race the library's unit tests; the tests here still
+//! serialize on a lock because cargo runs `#[test]`s on parallel threads.
+
+use codegemm::config::QuantConfig;
+use codegemm::gemm::{CodeGemmEngine, Counters, EngineScratch, GemmEngine};
+use codegemm::obs::prof::{self, Label, ProfSummary, Timeline};
+use codegemm::parallel::{shard, ShardPlan, ShardedEngine};
+use codegemm::quant::{QuantizedLinear, Quantizer};
+use codegemm::util::json::Json;
+use codegemm::util::prng::Prng;
+use codegemm::util::threadpool::ThreadPool;
+use std::sync::{Arc, Mutex};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Enough k-tiles (k / tile_w = 8 with the default tile_w 32) for a
+/// steady pipeline state, three row shards so builds and gathers spread
+/// across workers.
+const N: usize = 96;
+const K: usize = 256;
+const THREADS: usize = 3;
+
+fn quantized() -> QuantizedLinear {
+    let w = Prng::seeded(5).normal_vec(N * K, 0.02);
+    Quantizer::new(QuantConfig::parse_label("m1v4g128").unwrap()).quantize(&w, N, K)
+}
+
+fn pipelined(q: &QuantizedLinear) -> ShardedEngine<CodeGemmEngine> {
+    let pool = Arc::new(ThreadPool::new(THREADS));
+    let plan = ShardPlan::new(N, THREADS, 1, 1);
+    let codes = q.codes.unpack();
+    ShardedEngine::from_factory(plan, pool, |(r0, r1)| {
+        CodeGemmEngine::from_quantized(&shard::slice_rows_unpacked(q, &codes, r0, r1))
+    })
+    .with_shared_book(true)
+}
+
+/// One `gemm_into` call over the pipelined schedule, profiler on or off.
+fn run(q: &QuantizedLinear, traced: bool) -> (Vec<f32>, Counters, Timeline) {
+    let eng = pipelined(q);
+    let x = Prng::seeded(9).normal_vec(K * 4, 1.0);
+    let mut y = vec![0f32; N * 4];
+    let mut scratch = EngineScratch::new();
+    let _ = prof::drain(); // discard whatever an earlier test left behind
+    if traced {
+        prof::enable();
+    }
+    eng.gemm_into(&x, 4, &mut y, &mut scratch);
+    if traced {
+        prof::disable();
+    }
+    let tl = prof::drain();
+    (y, scratch.counters.clone(), tl)
+}
+
+/// The deterministic (timing-free) face of the counters — everything
+/// except the wall-clock `*_seconds` fields.
+#[allow(clippy::type_complexity)]
+fn exact_counts(c: &Counters) -> (u64, u64, u64, u64, u64, u64, u64, u64, u64, u64, u64) {
+    (
+        c.mac_flops,
+        c.lookups,
+        c.weight_bytes,
+        c.activation_bytes,
+        c.scratch_bytes,
+        c.build_bytes,
+        c.read_bytes,
+        c.build_ops,
+        c.read_ops,
+        c.calls,
+        c.group_fanout,
+    )
+}
+
+#[test]
+fn chrome_trace_is_valid_loadable_json() {
+    let _g = lock();
+    let q = quantized();
+    let (_, _, tl) = run(&q, true);
+    assert!(!tl.events.is_empty(), "traced pipelined run must record spans");
+
+    let text = tl.to_chrome_trace().to_string_pretty();
+    let parsed = Json::parse(&text).expect("chrome trace must be valid JSON");
+    let Some(Json::Arr(rows)) = parsed.get("traceEvents") else {
+        panic!("chrome trace must carry a traceEvents array");
+    };
+    assert_eq!(
+        rows.len(),
+        tl.events.len() + tl.threads.len(),
+        "one X row per span plus one M row per thread"
+    );
+    let mut spans = 0usize;
+    for row in rows {
+        let ph = row.get("ph").and_then(|v| v.as_str()).expect("every row has a ph");
+        match ph {
+            "M" => {
+                assert_eq!(row.get("name").and_then(|v| v.as_str()), Some("thread_name"));
+                assert!(row.get("args").and_then(|a| a.get("name")).is_some());
+            }
+            "X" => {
+                spans += 1;
+                let ts = row.get("ts").and_then(|v| v.as_f64()).expect("X rows carry ts");
+                let dur = row.get("dur").and_then(|v| v.as_f64()).expect("X rows carry dur");
+                assert!(ts >= 0.0 && dur >= 0.0, "no negative timestamps or durations");
+                let name = row.get("name").and_then(|v| v.as_str()).unwrap_or("");
+                assert!(
+                    matches!(name, "job" | "build" | "gather" | "stage" | "barrier"),
+                    "unexpected span name {name:?}"
+                );
+                assert!(row.get("tid").and_then(|v| v.as_f64()).is_some());
+            }
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    assert_eq!(spans, tl.events.len());
+    // Per-thread event streams come out sorted and well-formed.
+    for pair in tl.events.windows(2) {
+        if pair[0].tid == pair[1].tid {
+            assert!(pair[0].start_ns <= pair[1].start_ns, "per-thread starts must be monotonic");
+        }
+    }
+    for e in &tl.events {
+        assert!(e.end_ns >= e.start_ns, "spans must close after they open");
+        assert!(tl.threads.iter().any(|(tid, _)| *tid == e.tid), "span tid must be registered");
+    }
+}
+
+#[test]
+fn pipelined_schedule_coissues_next_build_with_gather() {
+    let _g = lock();
+    let q = quantized();
+    let (_, _, tl) = run(&q, true);
+    let has = |l: Label| tl.events.iter().any(|e| e.label == l);
+    assert!(has(Label::Build) && has(Label::Gather) && has(Label::Barrier));
+
+    // The pipeline's defining property: some barrier window holds both
+    // tile t's gather and tile t+1's build — the build runs under the
+    // gather instead of serializing after it. This is structural (the
+    // spans are recorded inside the barrier's scope_run), so it holds on
+    // any host, single-core included.
+    let coissued = tl.events.iter().filter(|b| b.label == Label::Barrier).any(|b| {
+        let inside = |e: &&prof::Event| e.start_ns >= b.start_ns && e.end_ns <= b.end_ns;
+        let gathered = tl
+            .events
+            .iter()
+            .filter(|e| e.label == Label::Gather && e.tag == b.tag)
+            .any(|e| inside(&e));
+        let built = tl
+            .events
+            .iter()
+            .filter(|e| e.label == Label::Build && e.tag == b.tag + 1)
+            .any(|e| inside(&e));
+        gathered && built
+    });
+    assert!(coissued, "no barrier window co-scheduled gather(t) with build(t+1)");
+
+    // The derived gauges stay in range and see the build time.
+    let s = ProfSummary::from_timeline(&tl);
+    assert_eq!(s.events, tl.events.len() as u64);
+    assert!((0.0..=1.0).contains(&s.overlap_efficiency));
+    assert!(s.hidden_build_s + s.exposed_build_s > 0.0, "builds must take nonzero time");
+    assert!((0.0..=1.0).contains(&s.occupancy) && s.occupancy > 0.0);
+}
+
+#[test]
+fn same_seed_traces_are_structurally_deterministic() {
+    let _g = lock();
+    let q = quantized();
+    let (y1, c1, t1) = run(&q, true);
+    let (y2, c2, t2) = run(&q, true);
+    assert_eq!(t1.structural(), t2.structural(), "same seed ⇒ same (label, tag) multiset");
+    assert_eq!(y1, y2, "same seed ⇒ bit-identical outputs");
+    assert_eq!(exact_counts(&c1), exact_counts(&c2));
+    assert_eq!(t1.dropped, 0, "this workload must fit the default ring");
+}
+
+#[test]
+fn profiler_off_is_bit_identical_and_silent() {
+    let _g = lock();
+    let q = quantized();
+    let (y_off, c_off, tl_off) = run(&q, false);
+    assert!(tl_off.events.is_empty(), "disabled profiler must record nothing");
+    assert_eq!(tl_off.dropped, 0);
+
+    let (y_on, c_on, tl_on) = run(&q, true);
+    assert!(!tl_on.events.is_empty());
+    assert_eq!(y_off, y_on, "tracing must not change kernel outputs");
+    assert_eq!(
+        exact_counts(&c_off),
+        exact_counts(&c_on),
+        "tracing must not change the exact counters"
+    );
+    // And the byte split introduced for the roofline stays conserved.
+    assert_eq!(c_off.build_bytes + c_off.read_bytes, c_off.total_bytes());
+}
