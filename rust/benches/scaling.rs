@@ -34,6 +34,10 @@
 //! Matrix 7 (tile_h sweep): serial row-block heights {256 .. 8192} on
 //! the 8B q_proj shape with a pipelined 4-thread reference row — the
 //! default tile_h must stay within 1.25x of the best swept point.
+//! Matrix 8 (KV page dtype): attention latency and held pool bytes over
+//! dtype {f32, f16, int8} × ctx {512, 2048} × {decode, batched prefill},
+//! gated on the batched chunk resolving each K/V tile exactly twice
+//! (counter-pinned) and int8 pool bytes ≤ 0.3× the f32 row.
 
 use codegemm::bench::harness::{black_box, run_bench, BenchOptions, BenchResult};
 use codegemm::bench::workloads::{scaled_block_shapes, GemmShape, LLAMA3_70B, LLAMA3_8B};
@@ -42,8 +46,8 @@ use codegemm::gemm::{
     CodeGemmEngine, DenseEngine, DequantEngine, EngineScratch, GemmEngine, GemmGroup, GroupMember,
     LutGemmEngine,
 };
-use codegemm::kvcache::{BlockPool, KvLayout, KvStore, PagedKv, SeqKv};
-use codegemm::model::{attend, AttnShape, KvCache};
+use codegemm::kvcache::{BlockPool, KvDtype, KvLayout, KvStore, PagedKv, SeqKv};
+use codegemm::model::{attend, attend_batch, AttnScratch, AttnShape, KvCache};
 use codegemm::parallel::{shard, ShardPlan, ShardedEngine};
 use codegemm::quant::bcq::BcqLinear;
 use codegemm::quant::{QuantizedLinear, Quantizer};
@@ -341,8 +345,13 @@ fn main() {
         // page 0 encodes the contiguous ("flat") baseline.
         for page in [0usize, 16, 64, 256] {
             let mut flat = KvCache::new(1, ctx, kv_dim);
-            let layout =
-                KvLayout { n_layers: 1, kv_dim, page_size: page.max(1), max_seq: ctx };
+            let layout = KvLayout {
+                n_layers: 1,
+                kv_dim,
+                page_size: page.max(1),
+                max_seq: ctx,
+                dtype: KvDtype::F32,
+            };
             // The flat baseline never touches the pool — keep its arena
             // at a single page instead of ctx pages of dead weight.
             let pool_pages = if page == 0 { 1 } else { layout.max_pages_per_seq() };
@@ -360,6 +369,7 @@ fn main() {
                 }
             }
             let q = rng.normal_vec(shape.n_heads * shape.head_dim, 1.0);
+            let mut scratch = AttnScratch::new();
             let mut scores = vec![0f32; shape.scores_len(ctx)];
             let mut out = vec![0f32; q.len()];
             let variant = if page == 0 { "flat".to_string() } else { format!("{page}") };
@@ -369,9 +379,9 @@ fn main() {
                 let r = run_bench(&format!("{name} {phase}"), opts, || {
                     if phase == "decode" {
                         if page == 0 {
-                            attend(&flat, 0, &shape, &q, ctx, attn_scale, &mut scores, &mut out);
+                            attend(&flat, 0, &shape, &q, ctx, attn_scale, &mut scratch, &mut scores, &mut out);
                         } else {
-                            attend(&paged, 0, &shape, &q, ctx, attn_scale, &mut scores, &mut out);
+                            attend(&paged, 0, &shape, &q, ctx, attn_scale, &mut scratch, &mut scores, &mut out);
                         }
                     } else {
                         // Causal tail: the last PREFILL_TAIL positions of a
@@ -379,9 +389,9 @@ fn main() {
                         for b in 0..PREFILL_TAIL {
                             let upto = ctx - PREFILL_TAIL + 1 + b;
                             if page == 0 {
-                                attend(&flat, 0, &shape, &q, upto, attn_scale, &mut scores, &mut out);
+                                attend(&flat, 0, &shape, &q, upto, attn_scale, &mut scratch, &mut scores, &mut out);
                             } else {
-                                attend(&paged, 0, &shape, &q, upto, attn_scale, &mut scores, &mut out);
+                                attend(&paged, 0, &shape, &q, upto, attn_scale, &mut scratch, &mut scores, &mut out);
                             }
                         }
                     }
@@ -677,5 +687,123 @@ fn main() {
     mx.finish(
         "default tile_h within 1.25x of the best swept serial point at M=1",
         "default tile_h fell more than 1.25x behind the best swept point above",
+    );
+
+    // ---- matrix 8: KV page dtype sweep — latency, pool bytes, tile economics ----
+    // The same 8B-class GQA head group as matrix 4 over coded pools:
+    // decode is 1 query over the full context, prefill is one batched
+    // 16-token causal chunk through `attend_batch`. Two exact gates ride
+    // on the rows: the batched chunk must resolve each K/V tile exactly
+    // twice (tile loop outside the query loop — the economics that make
+    // coded pools affordable), and the int8 pool must hold the same
+    // tokens in ≤ 0.3× the f32 bytes (1/4 element width + the per-row
+    // scale sidecar at kv_dim 64).
+    let mut mx = Matrix::begin(
+        "kv page dtype sweep (paged attention h8/kv2/hd32, page 64): decode = 1 query \
+         over full context; prefill = one batched 16-token causal chunk",
+        format!(
+            "{:<40} {:>6} {:>6} {:>9} {:>12} {:>10} {:>9} {:>6}",
+            "shape", "ctx", "dtype", "phase", "mean us", "pool KiB", "tile res", "check"
+        ),
+    );
+    {
+        let shape = AttnShape { n_heads: 8, n_kv_heads: 2, head_dim: 32 };
+        let kv_dim = shape.kv_dim();
+        let attn_scale = 1.0 / (shape.head_dim as f32).sqrt();
+        const CHUNK: usize = 16;
+        let page = 64usize;
+        for ctx in [512usize, 2048] {
+            let mut held = [0usize; 3];
+            for (di, dtype) in [KvDtype::F32, KvDtype::F16, KvDtype::Int8].into_iter().enumerate()
+            {
+                let layout =
+                    KvLayout { n_layers: 1, kv_dim, page_size: page, max_seq: ctx, dtype };
+                let mut pool = BlockPool::new(layout, layout.max_pages_per_seq());
+                let mut seq = SeqKv::with_capacity(layout.max_pages_per_seq());
+                let mut paged = PagedKv::bind(&mut pool, &mut seq);
+                let mut rng = Prng::seeded(29);
+                for pos in 0..ctx {
+                    let k = rng.normal_vec(kv_dim, 1.0);
+                    let v = rng.normal_vec(kv_dim, 1.0);
+                    paged.write(0, pos, &k, &v);
+                }
+                let q1 = rng.normal_vec(shape.n_heads * shape.head_dim, 1.0);
+                let qm = rng.normal_vec(CHUNK * shape.n_heads * shape.head_dim, 1.0);
+                let mut scratch = AttnScratch::new();
+                let mut scores = vec![0f32; shape.scores_len_batch(CHUNK, ctx)];
+                let mut out1 = vec![0f32; q1.len()];
+                let mut outm = vec![0f32; qm.len()];
+                held[di] = paged.bytes();
+                let held_kib = held[di] / 1024;
+                let pos0 = ctx - CHUNK;
+                for phase in ["decode", "prefill"] {
+                    let name = format!(
+                        "attn h{}kv{} page {page} {}",
+                        shape.n_heads,
+                        shape.n_kv_heads,
+                        dtype.as_str()
+                    );
+                    let r = run_bench(&format!("{name} ctx{ctx} {phase}"), opts, || {
+                        if phase == "decode" {
+                            attend(
+                                &paged, 0, &shape, &q1, ctx, attn_scale, &mut scratch,
+                                &mut scores, &mut out1,
+                            );
+                        } else {
+                            attend_batch(
+                                &paged, 0, &shape, &qm, pos0, CHUNK, attn_scale, &mut scratch,
+                                &mut scores, &mut outm,
+                            );
+                        }
+                        black_box(&outm);
+                        black_box(&out1);
+                    });
+                    // Counter pin (prefill rows): one batched chunk
+                    // resolves each of the context's tiles exactly twice
+                    // — K once, V once — independent of the chunk length.
+                    let (res_s, check) = if phase == "prefill" {
+                        scratch.reset_tile_resolutions();
+                        attend_batch(
+                            &paged, 0, &shape, &qm, pos0, CHUNK, attn_scale, &mut scratch,
+                            &mut scores, &mut outm,
+                        );
+                        let n_tiles = KvStore::n_tiles(&paged, ctx) as u64;
+                        let res = scratch.tile_resolutions;
+                        (format!("{res}"), mx.check(res == 2 * n_tiles))
+                    } else {
+                        (String::new(), "")
+                    };
+                    println!(
+                        "{:<40} {:>6} {:>6} {:>9} {:>12.1} {:>10} {:>9} {:>6}",
+                        name,
+                        ctx,
+                        dtype.as_str(),
+                        phase,
+                        r.mean_us(),
+                        held_kib,
+                        res_s,
+                        check
+                    );
+                }
+            }
+            // Byte gate: same tokens, ≤ 0.3× the f32 footprint under int8.
+            let cell = mx.check(held[2] * 10 <= held[0] * 3);
+            println!(
+                "{:<40} {:>6} {:>6} {:>9} {:>12} {:>10} {:>9} {:>6}",
+                "int8/f32 pool bytes",
+                ctx,
+                "-",
+                "-",
+                format!("{:.3}x", held[2] as f64 / held[0] as f64),
+                "",
+                "",
+                cell
+            );
+        }
+    }
+    mx.finish(
+        "batched prefill resolved each tile exactly twice per chunk, and int8 pool \
+         bytes <= 0.3x f32 at both contexts",
+        "a dtype row missed the tile-resolution or pool-byte gate above",
     );
 }

@@ -4,7 +4,7 @@
 
 pub mod serve;
 
-pub use serve::{KvConfig, PreemptMode, ServeConfig};
+pub use serve::{KvConfig, KvDtype, PreemptMode, ServeConfig};
 
 use crate::util::json::Json;
 use anyhow::{bail, Result};

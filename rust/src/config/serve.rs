@@ -39,6 +39,53 @@ impl PreemptMode {
     }
 }
 
+/// Element encoding for KV pool pages (see `kvcache::codec`). The pool
+/// stores *coded* bytes: f32 is the passthrough layout, f16 halves pool
+/// bytes with bit-exact round-trip determinism, int8 quarters them with
+/// per-row round-to-nearest scales (epsilon-level attention error,
+/// pinned by the paged-KV property tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KvDtype {
+    /// 4-byte passthrough — tile reads borrow pool memory directly.
+    #[default]
+    F32,
+    /// IEEE half precision (round-to-nearest-even). Decode is exact for
+    /// the stored value, so paged runs are deterministic bit-for-bit.
+    F16,
+    /// 1-byte RTN quantization with one f32 scale per kv_dim row
+    /// (per page, per layer, per K/V, per position).
+    Int8,
+}
+
+impl KvDtype {
+    /// Coded bytes per element (excluding the int8 scale sidecar, which
+    /// `kvcache::KvLayout` accounts separately).
+    pub fn elem_bytes(&self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::F16 => 2,
+            KvDtype::Int8 => 1,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::F16 => "f16",
+            KvDtype::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<KvDtype> {
+        match s {
+            "f32" => Ok(KvDtype::F32),
+            "f16" => Ok(KvDtype::F16),
+            "int8" => Ok(KvDtype::Int8),
+            other => bail!("unknown kv dtype {other:?} (expected f32|f16|int8)"),
+        }
+    }
+}
+
 /// Paged KV-cache settings for the native backend (`kv` section): the
 /// page granularity of `kvcache::BlockPool`, the pool's total size, and
 /// the multi-tenant policies (prefix sharing, preemption).
@@ -60,6 +107,9 @@ pub struct KvConfig {
     pub prefix_cache: bool,
     /// Preemption policy when the pool saturates (see [`PreemptMode`]).
     pub preempt: PreemptMode,
+    /// Page element encoding (see [`KvDtype`]). `CODEGEMM_KV_DTYPE`
+    /// overrides it at pool construction, mirroring `CODEGEMM_KERNEL`.
+    pub kv_dtype: KvDtype,
 }
 
 impl Default for KvConfig {
@@ -69,6 +119,7 @@ impl Default for KvConfig {
             pool_pages: 0,
             prefix_cache: true,
             preempt: PreemptMode::default(),
+            kv_dtype: KvDtype::default(),
         }
     }
 }
@@ -119,6 +170,7 @@ impl KvConfig {
             ("pool_pages", Json::from(self.pool_pages)),
             ("prefix_cache", Json::Bool(self.prefix_cache)),
             ("preempt", Json::Str(self.preempt.as_str().to_string())),
+            ("kv_dtype", Json::Str(self.kv_dtype.as_str().to_string())),
         ])
     }
 
@@ -136,6 +188,10 @@ impl KvConfig {
             preempt: match j.get("preempt").and_then(|v| v.as_str()) {
                 Some(s) => PreemptMode::parse(s)?,
                 None => d.preempt,
+            },
+            kv_dtype: match j.get("kv_dtype").and_then(|v| v.as_str()) {
+                Some(s) => KvDtype::parse(s)?,
+                None => d.kv_dtype,
             },
         };
         cfg.validate()?;
@@ -275,6 +331,7 @@ mod tests {
             pool_pages: 100,
             prefix_cache: false,
             preempt: PreemptMode::Recompute,
+            kv_dtype: KvDtype::F16,
         };
         kv.validate().unwrap();
         let j = Json::parse(&kv.to_json().to_string_pretty()).unwrap();
@@ -287,11 +344,29 @@ mod tests {
         assert_eq!(c.pool_pages, 0);
         assert!(c.prefix_cache);
         assert_eq!(c.preempt, PreemptMode::Spill);
+        assert_eq!(c.kv_dtype, KvDtype::F32);
         // page_size 0 is rejected.
         let bad = Json::parse(r#"{"page_size": 0}"#).unwrap();
         assert!(KvConfig::from_json(&bad).is_err());
         // Unknown preempt modes are rejected, not silently defaulted.
         let bad = Json::parse(r#"{"preempt": "yolo"}"#).unwrap();
+        assert!(KvConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn kv_dtype_roundtrip_and_rejection() {
+        for (s, d) in [("f32", KvDtype::F32), ("f16", KvDtype::F16), ("int8", KvDtype::Int8)] {
+            assert_eq!(KvDtype::parse(s).unwrap(), d);
+            assert_eq!(d.as_str(), s);
+        }
+        assert_eq!(KvDtype::F32.elem_bytes(), 4);
+        assert_eq!(KvDtype::F16.elem_bytes(), 2);
+        assert_eq!(KvDtype::Int8.elem_bytes(), 1);
+        let kv = KvConfig { kv_dtype: KvDtype::Int8, ..KvConfig::default() };
+        let j = Json::parse(&kv.to_json().to_string_pretty()).unwrap();
+        assert_eq!(KvConfig::from_json(&j).unwrap(), kv);
+        // Unknown dtypes are rejected, not silently defaulted.
+        let bad = Json::parse(r#"{"kv_dtype": "int4"}"#).unwrap();
         assert!(KvConfig::from_json(&bad).is_err());
     }
 

@@ -469,11 +469,10 @@ impl DecodeBackend for NativeBackend {
         let l = self.kv_pool.layout();
         let len = self.seqs[slot].len();
         let n = l.pages_for(len);
-        let pe = l.page_elems();
-        let mut data = vec![0f32; n * pe];
-        for (i, &page) in self.seqs[slot].pages()[..n].iter().enumerate() {
-            data[i * pe..(i + 1) * pe].copy_from_slice(self.kv_pool.page_data(page));
-        }
+        // Snapshot the *coded* page bytes verbatim — never decode and
+        // re-encode, so the resumed sequence is bit-identical in every
+        // dtype (and an int8 spill costs ~3.8× less host memory).
+        let data = self.kv_pool.export_pages(&self.seqs[slot].pages()[..n]);
         // Copy everything first, release last: a panic mid-copy leaves
         // the pages held, so the batcher's recompute fallback can still
         // `reset_slot` cleanly.
@@ -489,11 +488,10 @@ impl DecodeBackend for NativeBackend {
         debug_assert!(self.seqs[slot].pages().is_empty(), "restore into an occupied slot");
         let ok = self.seqs[slot].claim(&mut self.kv_pool, need);
         debug_assert!(ok, "claim after the free-page check cannot fail");
-        let pe = self.kv_pool.layout().page_elems();
         let n = self.kv_pool.layout().pages_for(spill.len);
         for i in 0..n {
             let page = self.seqs[slot].pages()[i];
-            self.kv_pool.write_page(page, &spill.data[i * pe..(i + 1) * pe]);
+            self.kv_pool.import_page(page, &spill.data, i);
         }
         self.seqs[slot].set_len(spill.len);
         true

@@ -487,12 +487,13 @@ impl MetricsReport {
         }
         if let Some(kv) = &self.kv {
             out.push_str(&format!(
-                "\nkv pool:  {}/{} pages used (hwm {}), {} tok/page, \
+                "\nkv pool:  {}/{} pages used (hwm {}), {} tok/page, {} dtype, \
                  churn {} alloc / {} free, {} KiB held / {} KiB filled",
                 kv.pool.used_pages,
                 kv.pool.total_pages,
                 kv.pool.used_hwm,
                 kv.pool.page_size,
+                kv.pool.dtype.as_str(),
                 kv.pool.allocated,
                 kv.pool.freed,
                 kv.held_bytes() / 1024,

@@ -1,0 +1,277 @@
+//! Page **codec**: the pool's coded element storage, pluggable per
+//! [`KvDtype`].
+//!
+//! [`PageStore`] owns the arena bytes for every page in a
+//! [`super::BlockPool`] (and for the page snapshots a
+//! [`super::SpillArena`] holds). Three layouts:
+//!
+//! - **f32** — passthrough. Tile reads borrow pool memory directly
+//!   (zero copy, zero decode), so the default config pays nothing for
+//!   the codec layer existing.
+//! - **f16** — IEEE half, round-to-nearest-even
+//!   ([`crate::util::f16`]). 2 bytes/element; decode reproduces the
+//!   stored value exactly, so paged runs stay deterministic
+//!   bit-for-bit (write → read → write round-trips are fixed points).
+//! - **int8** — round-to-nearest uniform quantization with one f32
+//!   scale per **row** (one kv_dim vector: per page, per layer, per
+//!   K/V side, per position), reusing `quant::uniform`'s recipe:
+//!   `scale = round_f16(amax / 127)` (degenerate rows store scale 1),
+//!   `q = clamp(round(x / scale), -128, 127)`. 1 byte/element + a
+//!   4-byte sidecar scale per row. Per-row granularity means every
+//!   write is independent and deterministic — the batched prefill walk
+//!   and the m=1 walk store identical bytes, and CoW / spill copy the
+//!   coded representation verbatim without re-encoding drift.
+//!
+//! Every offset handed to the store is a multiple of the row width
+//! `kv_dim` (pages are `[layer][K rows | V rows]` with row-aligned
+//! sections), which is what lets the int8 sidecar index be simply
+//! `offset / kv_dim`.
+
+use crate::config::KvDtype;
+use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits, round_f16};
+
+/// Coded element storage for a run of KV rows. All offsets/lengths are
+/// in *elements* (f32 lanes) and must be multiples of the row width
+/// `kv_dim` the store was built with.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PageStore {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    Int8 {
+        q: Vec<i8>,
+        /// One scale per kv_dim row: `scales[off / kv_dim]`.
+        scales: Vec<f32>,
+        kv_dim: usize,
+    },
+}
+
+impl PageStore {
+    /// A zeroed store of `elems` f32 lanes coded as `dtype`, with rows
+    /// of `kv_dim` elements. `elems` must be a multiple of `kv_dim`.
+    pub fn new(dtype: KvDtype, elems: usize, kv_dim: usize) -> PageStore {
+        assert!(kv_dim > 0 && elems % kv_dim == 0, "elems {elems} not row-aligned to kv_dim {kv_dim}");
+        match dtype {
+            KvDtype::F32 => PageStore::F32(vec![0.0; elems]),
+            KvDtype::F16 => PageStore::F16(vec![0; elems]),
+            // Scale 1.0 matches what encoding a zero row stores, so a
+            // fresh store equals an explicitly-zeroed one bit-for-bit.
+            KvDtype::Int8 => PageStore::Int8 {
+                q: vec![0; elems],
+                scales: vec![1.0; elems / kv_dim],
+                kv_dim,
+            },
+        }
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        match self {
+            PageStore::F32(_) => KvDtype::F32,
+            PageStore::F16(_) => KvDtype::F16,
+            PageStore::Int8 { .. } => KvDtype::Int8,
+        }
+    }
+
+    /// Total f32-lane capacity.
+    pub fn elems(&self) -> usize {
+        match self {
+            PageStore::F32(d) => d.len(),
+            PageStore::F16(d) => d.len(),
+            PageStore::Int8 { q, .. } => q.len(),
+        }
+    }
+
+    /// Coded bytes actually held (element storage + int8 scale sidecar).
+    pub fn bytes(&self) -> usize {
+        match self {
+            PageStore::F32(d) => d.len() * 4,
+            PageStore::F16(d) => d.len() * 2,
+            PageStore::Int8 { q, scales, .. } => q.len() + scales.len() * 4,
+        }
+    }
+
+    /// Encode one full row (`src.len() == kv_dim`) at element offset
+    /// `off` (a multiple of kv_dim).
+    pub fn write_row(&mut self, off: usize, src: &[f32]) {
+        match self {
+            PageStore::F32(d) => d[off..off + src.len()].copy_from_slice(src),
+            PageStore::F16(d) => {
+                for (dst, &x) in d[off..off + src.len()].iter_mut().zip(src) {
+                    *dst = f32_to_f16_bits(x);
+                }
+            }
+            PageStore::Int8 { q, scales, kv_dim } => {
+                debug_assert_eq!(src.len(), *kv_dim, "int8 rows encode whole kv_dim vectors");
+                debug_assert_eq!(off % *kv_dim, 0, "int8 write offset {off} not row-aligned");
+                let amax = src.iter().fold(0f32, |m, &x| m.max(x.abs()));
+                // quant::uniform's RTN recipe: an f16-rounded scale (so
+                // the sidecar is reproducible) with degenerate rows
+                // pinned to 1.0.
+                let mut scale = if amax > 0.0 { round_f16(amax / 127.0) } else { 1.0 };
+                if scale == 0.0 {
+                    scale = 1.0;
+                }
+                scales[off / *kv_dim] = scale;
+                for (dst, &x) in q[off..off + src.len()].iter_mut().zip(src) {
+                    *dst = (x / scale).round().clamp(-128.0, 127.0) as i8;
+                }
+            }
+        }
+    }
+
+    /// Decode `len` elements starting at `off`. For f32 this borrows
+    /// pool memory directly and ignores `buf`; coded layouts decode
+    /// into `buf` (resized as needed) and return a borrow of it.
+    pub fn read<'a>(&'a self, off: usize, len: usize, buf: &'a mut Vec<f32>) -> &'a [f32] {
+        match self {
+            PageStore::F32(d) => &d[off..off + len],
+            PageStore::F16(d) => {
+                buf.clear();
+                buf.extend(d[off..off + len].iter().map(|&h| f16_bits_to_f32(h)));
+                &buf[..]
+            }
+            PageStore::Int8 { q, scales, kv_dim } => {
+                debug_assert!(off % *kv_dim == 0 && len % *kv_dim == 0, "int8 reads are row-aligned");
+                buf.clear();
+                buf.reserve(len);
+                for (r, row) in q[off..off + len].chunks_exact(*kv_dim).enumerate() {
+                    let scale = scales[off / *kv_dim + r];
+                    buf.extend(row.iter().map(|&v| v as f32 * scale));
+                }
+                &buf[..]
+            }
+        }
+    }
+
+    /// Copy `len` coded elements (plus their sidecar scales) from
+    /// `src_off` to `dst_off` within this store — never decodes, so the
+    /// destination is bit-identical to the source in every dtype.
+    pub fn copy_within(&mut self, src_off: usize, dst_off: usize, len: usize) {
+        match self {
+            PageStore::F32(d) => d.copy_within(src_off..src_off + len, dst_off),
+            PageStore::F16(d) => d.copy_within(src_off..src_off + len, dst_off),
+            PageStore::Int8 { q, scales, kv_dim } => {
+                q.copy_within(src_off..src_off + len, dst_off);
+                let (s0, d0, n) = (src_off / *kv_dim, dst_off / *kv_dim, len / *kv_dim);
+                scales.copy_within(s0..s0 + n, d0);
+            }
+        }
+    }
+
+    /// Copy `len` coded elements (plus sidecar scales) from another
+    /// store of the same dtype — the spill/restore path, which must
+    /// move the quantized representation verbatim.
+    pub fn copy_from(&mut self, src: &PageStore, src_off: usize, dst_off: usize, len: usize) {
+        match (self, src) {
+            (PageStore::F32(d), PageStore::F32(s)) => {
+                d[dst_off..dst_off + len].copy_from_slice(&s[src_off..src_off + len])
+            }
+            (PageStore::F16(d), PageStore::F16(s)) => {
+                d[dst_off..dst_off + len].copy_from_slice(&s[src_off..src_off + len])
+            }
+            (
+                PageStore::Int8 { q: dq, scales: ds, kv_dim: dk },
+                PageStore::Int8 { q: sq, scales: ss, kv_dim: sk },
+            ) => {
+                debug_assert_eq!(dk, sk, "int8 stores disagree on row width");
+                dq[dst_off..dst_off + len].copy_from_slice(&sq[src_off..src_off + len]);
+                let (s0, d0, n) = (src_off / *sk, dst_off / *dk, len / *dk);
+                ds[d0..d0 + n].copy_from_slice(&ss[s0..s0 + n]);
+            }
+            (me, src) => panic!(
+                "page codec dtype mismatch: copying {:?} into {:?}",
+                src.dtype(),
+                me.dtype()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn f32_reads_are_zero_copy_and_exact() {
+        let mut s = PageStore::new(KvDtype::F32, 16, 4);
+        let row = [1.5f32, -2.25, 0.0, 1e-3];
+        s.write_row(4, &row);
+        let mut buf = Vec::new();
+        assert_eq!(s.read(4, 4, &mut buf), &row);
+        assert!(buf.is_empty(), "f32 path must not touch the decode buffer");
+        assert_eq!(s.bytes(), 16 * 4);
+    }
+
+    #[test]
+    fn f16_roundtrip_is_a_fixed_point() {
+        let mut s = PageStore::new(KvDtype::F16, 8, 4);
+        let row = Prng::seeded(3).normal_vec(4, 1.0);
+        s.write_row(0, &row);
+        let mut buf = Vec::new();
+        let once: Vec<f32> = s.read(0, 4, &mut buf).to_vec();
+        // Re-encoding the decoded values must be lossless (RNE half is
+        // exact on values that are already halves).
+        s.write_row(4, &once);
+        let mut buf2 = Vec::new();
+        assert_eq!(s.read(4, 4, &mut buf2), &once[..]);
+        assert_eq!(s.bytes(), 8 * 2);
+    }
+
+    #[test]
+    fn int8_rows_decode_within_half_step_and_account_sidecar() {
+        let kv_dim = 8;
+        let mut s = PageStore::new(KvDtype::Int8, 2 * kv_dim, kv_dim);
+        let row = Prng::seeded(7).normal_vec(kv_dim, 0.5);
+        s.write_row(kv_dim, &row);
+        let mut buf = Vec::new();
+        let dec = s.read(kv_dim, kv_dim, &mut buf);
+        let amax = row.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let step = round_f16(amax / 127.0);
+        for (d, x) in dec.iter().zip(&row) {
+            assert!((d - x).abs() <= 0.5 * step + 1e-7, "decoded {d} vs {x} (step {step})");
+        }
+        // 1 byte/element + one f32 scale per row.
+        assert_eq!(s.bytes(), 2 * kv_dim + 2 * 4);
+    }
+
+    #[test]
+    fn int8_zero_row_is_the_fresh_store() {
+        let mut s = PageStore::new(KvDtype::Int8, 8, 4);
+        let fresh = s.clone();
+        s.write_row(0, &[0.0; 4]);
+        s.write_row(4, &[0.0; 4]);
+        assert_eq!(s, fresh, "encoding zero rows must be idempotent on a fresh store");
+    }
+
+    #[test]
+    fn coded_copies_are_verbatim_in_every_dtype() {
+        for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
+            let kv_dim = 4;
+            let mut a = PageStore::new(dtype, 4 * kv_dim, kv_dim);
+            let mut rng = Prng::seeded(11);
+            for r in 0..2 {
+                let row = rng.normal_vec(kv_dim, 2.0);
+                a.write_row(r * kv_dim, &row);
+            }
+            // within-store copy (the CoW path)
+            a.copy_within(0, 2 * kv_dim, 2 * kv_dim);
+            let (mut b1, mut b2) = (Vec::new(), Vec::new());
+            let lo = a.read(0, 2 * kv_dim, &mut b1).to_vec();
+            let hi = a.read(2 * kv_dim, 2 * kv_dim, &mut b2).to_vec();
+            assert_eq!(lo, hi, "{dtype:?} copy_within drifted");
+            // cross-store copy (the spill path)
+            let mut b = PageStore::new(dtype, 2 * kv_dim, kv_dim);
+            b.copy_from(&a, 0, 0, 2 * kv_dim);
+            let mut b3 = Vec::new();
+            assert_eq!(b.read(0, 2 * kv_dim, &mut b3), &lo[..], "{dtype:?} copy_from drifted");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "dtype mismatch")]
+    fn cross_dtype_copy_panics() {
+        let mut a = PageStore::new(KvDtype::F32, 4, 4);
+        let b = PageStore::new(KvDtype::F16, 4, 4);
+        a.copy_from(&b, 0, 0, 4);
+    }
+}

@@ -1,6 +1,6 @@
 //! Paged KV-cache pool: one shared fixed-size-page arena for every
-//! sequence and layer, plus the trait that lets the model walk any KV
-//! cache tile-by-tile.
+//! sequence and layer — stored in a pluggable page *codec* — plus the
+//! trait that lets the model walk any KV cache tile-by-tile.
 //!
 //! CodeGEMM's argument is about memory-subsystem utilization in
 //! memory-bound inference; on the serving side the same wall is the KV
@@ -8,24 +8,51 @@
 //! `2 × n_layers × max_seq × kv_dim` floats per request up front, so
 //! serving capacity degrades with the *worst-case* sequence length even
 //! when live sequences are short. This module replaces that with
-//! vLLM-style paging:
+//! vLLM-style paging over coded pages:
 //!
-//! - [`pool::BlockPool`] — the arena: one allocation carved into pages of
-//!   `page_size` tokens (all layers, K and V), per-page refcounts, a LIFO
-//!   free list, and churn/occupancy counters ([`pool::PoolStats`]). Pool
-//!   pages bound total KV memory; the batcher gates admission on free
-//!   pages.
+//! - [`codec::PageStore`] — the element codec behind every page byte:
+//!   f32 passthrough (tile reads borrow pool memory, zero cost), f16
+//!   (half the bytes, decode exact for the stored value), or int8 with
+//!   one f32 scale per kv_dim row (~3.8× fewer bytes at model-scale row
+//!   widths, round-to-nearest per `quant::uniform`'s recipe). Selected
+//!   by `KvConfig::kv_dtype` / [`KvLayout::dtype`], overridable with
+//!   `CODEGEMM_KV_DTYPE`.
+//! - [`pool::BlockPool`] — the arena: one coded allocation carved into
+//!   pages of `page_size` tokens (all layers, K and V), per-page
+//!   refcounts, a LIFO free list, and churn/occupancy counters
+//!   ([`pool::PoolStats`], in *coded* bytes). Pool pages bound total KV
+//!   memory; the batcher gates admission on free pages — so a smaller
+//!   dtype directly buys admission capacity, prefix-cache reach and
+//!   smaller spills.
 //! - [`paged::SeqKv`] / [`paged::PagedKv`] — the per-sequence page table
 //!   and the handle that binds it to the pool for one model call, with
-//!   the contiguous cache's exact append/read semantics (bit-compatible;
-//!   property-pinned) but per-page `&[f32]` views. Pages are claimed
-//!   lazily on append and dereferenced wholesale when the request
-//!   finishes.
+//!   the contiguous cache's exact append/read semantics but per-page
+//!   tile views. Pages are claimed lazily on append and dereferenced
+//!   wholesale when the request finishes.
 //! - [`KvStore`] — the capability the model actually needs: positional
-//!   writes plus tiled reads. The contiguous cache implements it as one
-//!   big tile; the paged cache as page-sized tiles. The chunked attention
-//!   kernel ([`crate::model::attention`]) is written against this trait,
-//!   so decode and prefill run identically over either representation.
+//!   writes plus tiled reads. Reads are **decode-into-caller-scratch**:
+//!   [`KvStore::k_tile`]/[`KvStore::v_tile`] take a decode buffer
+//!   (owned by the model's per-call `AttnScratch`) and return a borrow
+//!   that is pool memory for f32 and the decoded buffer otherwise. The
+//!   chunked attention kernel ([`crate::model::attention`]) is written
+//!   against this trait, so decode and prefill run identically over
+//!   either representation and any dtype.
+//!
+//! # Exactness contract per dtype
+//!
+//! - **f32** — bit-exact vs the contiguous cache (property-pinned).
+//! - **f16** — deterministic: decode returns exactly the RNE-rounded
+//!   stored value, so paged runs agree bit-for-bit with each other and
+//!   with a contiguous run *of the same encoding*; vs f32 the error is
+//!   half-precision rounding.
+//! - **int8** — per-row scale quantization: attention reads are within
+//!   half a scale step per element; greedy decode on the smoke model
+//!   matches f32 token-for-token (pinned by `tests/paged_kv_prop.rs`).
+//!
+//! In *all* dtypes, page-granular motion is exact: CoW, prefix sharing,
+//! spill and restore copy coded bytes verbatim (never
+//! decode→re-encode), so shared and resumed sequences are bit-identical
+//! to uninterrupted ones.
 //!
 //! # Sharing: the page lifecycle
 //!
@@ -38,7 +65,9 @@
 //!   the chain hash of its token ids; admission
 //!   ([`pool::BlockPool::prefix_acquire`]) pins matching pages instead of
 //!   allocating and re-prefilling them. Any registered or multiply-held
-//!   page is immutable.
+//!   page is immutable. Under coded dtypes the hitters share the
+//!   *quantized* bytes — the O(prompt) shared footprint shrinks by the
+//!   same 2–4× as the pool.
 //! - **CoW** — a sequence writing into an immutable page (diverging
 //!   mid-page, or continuing past a fully-shared prompt) copies it to a
 //!   private page first ([`paged::PagedKv`]'s write path; the spare is
@@ -52,25 +81,34 @@
 //! When the pool saturates and a lower-priority slot is mid-decode, the
 //! batcher swaps it out instead of deferring the newcomer (the state
 //! machine lives in `coordinator::batcher`; the KV mechanics here):
-//! **spill** copies the victim's private pages to the host-side
+//! **spill** snapshots the victim's private pages — coded bytes, via
+//! [`pool::BlockPool::export_pages`] — into the host-side
 //! [`spill::SpillArena`] and releases them, and resume bulk-copies them
-//! back into freshly claimed pages; **recompute** just releases and later
-//! replays prompt + already-sampled tokens through prefill. Both resume
-//! bit-exact — spilled floats are the sequence's exact KV state, and
-//! replay recomputes the identical values position-by-position.
+//! back into freshly claimed pages ([`pool::BlockPool::import_page`]);
+//! **recompute** just releases and later replays prompt +
+//! already-sampled tokens through prefill. Both resume bit-exact in
+//! every dtype — the spilled snapshot *is* the sequence's coded KV
+//! state, and replay re-encodes the identical values
+//! position-by-position (per-row encoding is deterministic).
 //!
-//! [`KvStats`] packages a pool snapshot with per-slot byte gauges for
-//! `coordinator::metrics`.
+//! [`KvStats`] packages a pool snapshot with per-slot byte gauges (in
+//! coded bytes) for `coordinator::metrics`.
 
+pub mod codec;
 pub mod paged;
 pub mod pool;
 pub mod prefix;
 pub mod spill;
 
+pub use codec::PageStore;
 pub use paged::{PagedKv, SeqKv};
 pub use pool::{BlockPool, KvLayout, PoolStats};
 pub use prefix::{chain_hash, PrefixIndex, ROOT_HASH};
 pub use spill::{SpillArena, SpilledKv};
+
+// Re-exported so KV call sites can name the dtype without reaching into
+// the config module tree.
+pub use crate::config::KvDtype;
 
 /// What the model requires of a KV cache: append one position per layer,
 /// read back position ranges as contiguous `(keys, values)` tiles.
@@ -81,6 +119,12 @@ pub use spill::{SpillArena, SpilledKv};
 /// tile; a paged cache reports page-sized tiles. The attention kernel
 /// visits positions in ascending order either way, which is what keeps
 /// the tiled walk bit-exact against a flat loop.
+///
+/// Tile reads are split per pass (keys for the score pass, values for
+/// the weighting pass) and take a caller decode buffer: coded backings
+/// decode the tile into `buf` and return a borrow of it, while f32
+/// backings return a zero-copy borrow of their own storage and leave
+/// `buf` untouched.
 pub trait KvStore {
     /// Number of positions filled so far.
     fn len(&self) -> usize;
@@ -117,27 +161,35 @@ pub trait KvStore {
         upto.div_ceil(self.tile_tokens())
     }
 
-    /// `(keys, values)` of tile `t`, trimmed to `upto`: positions
-    /// `t * tile_tokens() .. min((t+1) * tile_tokens(), upto)`.
-    fn tile(&self, layer: usize, t: usize, upto: usize) -> (&[f32], &[f32]);
+    /// Keys of tile `t`, trimmed to `upto`: positions
+    /// `t * tile_tokens() .. min((t+1) * tile_tokens(), upto)`, decoded
+    /// into `buf` when the backing is coded.
+    fn k_tile<'a>(&'a self, layer: usize, t: usize, upto: usize, buf: &'a mut Vec<f32>)
+        -> &'a [f32];
 
-    /// Bytes of storage currently *held* by this sequence (pages claimed,
-    /// or the full contiguous allocation).
+    /// Values of tile `t`, trimmed to `upto` (see [`Self::k_tile`]).
+    fn v_tile<'a>(&'a self, layer: usize, t: usize, upto: usize, buf: &'a mut Vec<f32>)
+        -> &'a [f32];
+
+    /// Coded bytes of storage currently *held* by this sequence (pages
+    /// claimed, or the full contiguous allocation).
     fn bytes(&self) -> usize;
 
-    /// Bytes actually *filled* (`2 × n_layers × len × kv_dim × 4`).
+    /// Coded bytes actually *filled* (`len` positions, K and V, all
+    /// layers, plus any scale sidecar).
     fn bytes_used(&self) -> usize;
 }
 
 /// KV occupancy snapshot a pool-backed serving backend reports to
 /// `coordinator::metrics`: the pool-level page accounting plus per-slot
-/// held/filled byte gauges.
+/// held/filled byte gauges (coded bytes — what the arena actually
+/// holds).
 #[derive(Clone, Debug, Default)]
 pub struct KvStats {
     pub pool: PoolStats,
-    /// Bytes held (pages claimed) per slot.
+    /// Coded bytes held (pages claimed) per slot.
     pub slot_bytes: Vec<usize>,
-    /// Bytes filled per slot.
+    /// Coded bytes filled per slot.
     pub slot_bytes_used: Vec<usize>,
 }
 

@@ -6,10 +6,12 @@
 //! append/read semantics as the contiguous [`crate::model::KvCache`]
 //! (write per `(layer, pos)`, length advances when the last layer writes a
 //! new position) — bit-compatible by construction, property-pinned by
-//! `tests/paged_kv_prop.rs` — but exposes the cache as per-page `&[f32]`
-//! tiles instead of one contiguous slice. Pages are claimed lazily on
-//! append (free-list pop, no heap traffic) and dereferenced wholesale by
-//! [`SeqKv::release`] when the request finishes.
+//! `tests/paged_kv_prop.rs` — but exposes the cache as per-page tile
+//! views instead of one contiguous slice (decoded into the caller's
+//! scratch under coded dtypes, borrowed zero-copy under f32). Pages are
+//! claimed lazily on append (free-list pop, no heap traffic) and
+//! dereferenced wholesale by [`SeqKv::release`] when the request
+//! finishes.
 //!
 //! With prefix sharing, a table may start with *pinned* pages another
 //! sequence filled ([`SeqKv::set_prefix`]); those are immutable, and the
@@ -214,12 +216,18 @@ impl KvStore for PagedKv<'_> {
         self.pool.layout().page_size
     }
 
-    fn tile(&self, layer: usize, t: usize, upto: usize) -> (&[f32], &[f32]) {
+    fn k_tile<'b>(&'b self, layer: usize, t: usize, upto: usize, buf: &'b mut Vec<f32>) -> &'b [f32] {
         let ps = self.pool.layout().page_size;
         debug_assert!(t * ps < upto, "tile {t} starts at or past upto {upto}");
         let tokens = upto.min((t + 1) * ps) - t * ps;
-        let page = self.seq.pages[t];
-        (self.pool.k_tile(page, layer, tokens), self.pool.v_tile(page, layer, tokens))
+        self.pool.k_tile(self.seq.pages[t], layer, tokens, buf)
+    }
+
+    fn v_tile<'b>(&'b self, layer: usize, t: usize, upto: usize, buf: &'b mut Vec<f32>) -> &'b [f32] {
+        let ps = self.pool.layout().page_size;
+        debug_assert!(t * ps < upto, "tile {t} starts at or past upto {upto}");
+        let tokens = upto.min((t + 1) * ps) - t * ps;
+        self.pool.v_tile(self.seq.pages[t], layer, tokens, buf)
     }
 
     fn bytes(&self) -> usize {
@@ -237,7 +245,14 @@ mod tests {
     use super::*;
 
     fn pool() -> BlockPool {
-        BlockPool::new(KvLayout { n_layers: 2, kv_dim: 4, page_size: 4, max_seq: 16 }, 8)
+        let l = KvLayout {
+            n_layers: 2,
+            kv_dim: 4,
+            page_size: 4,
+            max_seq: 16,
+            dtype: crate::config::KvDtype::F32,
+        };
+        BlockPool::new(l, 8)
     }
 
     #[test]
@@ -252,9 +267,10 @@ mod tests {
             assert_eq!(kv.len(), 0, "len advances only on the last layer");
             kv.write(1, 0, &k, &v);
             assert_eq!(kv.len(), 1);
-            let (keys, vals) = kv.tile(0, 0, 1);
-            assert_eq!(keys, &k);
-            assert_eq!(vals, &v);
+            let mut buf = Vec::new();
+            assert_eq!(kv.k_tile(0, 0, 1, &mut buf), &k);
+            let mut buf = Vec::new();
+            assert_eq!(kv.v_tile(0, 0, 1, &mut buf), &v);
         }
         assert_eq!(seq.n_pages(), 1);
     }
@@ -288,14 +304,18 @@ mod tests {
             kv.write(1, pos, &k, &k);
         }
         // upto = 6 spans tile 0 (positions 0..4) and tile 1 (4..6).
-        let (k0, _) = kv.tile(0, 0, 6);
+        let mut buf = Vec::new();
+        let k0 = kv.k_tile(0, 0, 6, &mut buf);
         assert_eq!(k0.len(), 4 * 4);
         assert_eq!(k0[0], 0.0);
         assert_eq!(k0[3 * 4], 3.0);
-        let (k1, v1) = kv.tile(0, 1, 6);
+        let mut buf = Vec::new();
+        let k1 = kv.k_tile(0, 1, 6, &mut buf);
         assert_eq!(k1.len(), 2 * 4);
         assert_eq!(k1[0], 4.0);
         assert_eq!(k1[4], 5.0);
+        let mut buf = Vec::new();
+        let v1 = kv.v_tile(0, 1, 6, &mut buf);
         assert_eq!(v1[4], 5.0);
     }
 
@@ -350,9 +370,12 @@ mod tests {
             assert_eq!(kv.len(), 4);
         }
         assert_ne!(a.pages()[0], b.pages()[0], "divergence must copy, not mutate");
-        assert_eq!(pool.k_tile(a.pages()[0], 0, 4)[3 * 4], 3.0, "original untouched");
-        assert_eq!(pool.k_tile(b.pages()[0], 0, 4)[3 * 4], 9.0, "copy holds the new write");
-        assert_eq!(pool.k_tile(b.pages()[0], 0, 4)[2 * 4], 2.0, "pre-divergence content shared");
+        let mut buf = Vec::new();
+        assert_eq!(pool.k_tile(a.pages()[0], 0, 4, &mut buf)[3 * 4], 3.0, "original untouched");
+        let mut buf = Vec::new();
+        assert_eq!(pool.k_tile(b.pages()[0], 0, 4, &mut buf)[3 * 4], 9.0, "copy holds the new write");
+        let mut buf = Vec::new();
+        assert_eq!(pool.k_tile(b.pages()[0], 0, 4, &mut buf)[2 * 4], 2.0, "pre-divergence content shared");
         assert_eq!(pool.stats().cow_copies, 1);
         b.release(&mut pool);
         a.release(&mut pool);
@@ -363,8 +386,14 @@ mod tests {
     #[test]
     #[should_panic(expected = "kv pool exhausted")]
     fn exhaustion_panics_with_context() {
-        let mut pool =
-            BlockPool::new(KvLayout { n_layers: 1, kv_dim: 2, page_size: 1, max_seq: 16 }, 2);
+        let l = KvLayout {
+            n_layers: 1,
+            kv_dim: 2,
+            page_size: 1,
+            max_seq: 16,
+            dtype: crate::config::KvDtype::F32,
+        };
+        let mut pool = BlockPool::new(l, 2);
         let mut seq = SeqKv::with_capacity(16);
         let mut kv = PagedKv::bind(&mut pool, &mut seq);
         for pos in 0..3 {

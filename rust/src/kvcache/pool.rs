@@ -1,11 +1,13 @@
 //! Fixed-size-page KV arena shared by every sequence and layer, with
-//! refcounted prefix sharing.
+//! refcounted prefix sharing and pluggable page encoding.
 //!
-//! One [`BlockPool`] backs all serving slots: a single `f32` allocation
-//! carved into pages of [`KvLayout::page_size`] tokens. Pool memory
-//! therefore bounds *concurrency × live tokens*, not `slots × max_seq` —
-//! the per-request worst-case allocation the contiguous
-//! [`crate::model::KvCache`] pays.
+//! One [`BlockPool`] backs all serving slots: a single *coded*
+//! allocation (a [`super::codec::PageStore`], dtype per
+//! [`KvLayout::dtype`]) carved into pages of [`KvLayout::page_size`]
+//! tokens. Pool memory therefore bounds *concurrency × live tokens*,
+//! not `slots × max_seq` — the per-request worst-case allocation the
+//! contiguous [`crate::model::KvCache`] pays — and under f16/int8
+//! encodings each of those tokens costs 2×/~3.8× fewer bytes.
 //!
 //! # Page lifecycle
 //!
@@ -56,12 +58,20 @@
 //! Keys of consecutive positions within a page are contiguous per layer,
 //! so the chunked attention kernel ([`crate::model::attention`]) walks a
 //! sequence page-by-page with the same inner loops it would run over a
-//! contiguous cache — the page size is the attention tile size.
+//! contiguous cache — the page size is the attention tile size. Under
+//! coded dtypes a tile read decodes into caller scratch
+//! ([`BlockPool::k_tile`]/[`BlockPool::v_tile`] take a decode buffer);
+//! f32 stays a zero-copy borrow. Every *page*-granular operation — CoW
+//! ([`BlockPool::copy_page`]), spill ([`BlockPool::export_pages`]) and
+//! restore ([`BlockPool::import_page`]) — copies the coded bytes
+//! verbatim, never decode→re-encode, so shared and resumed pages are
+//! bit-identical to their sources in every dtype.
 
 use std::collections::VecDeque;
 
+use super::codec::PageStore;
 use super::prefix::{chain_hash, PrefixIndex, ROOT_HASH};
-use crate::config::{KvConfig, ModelConfig};
+use crate::config::{KvConfig, KvDtype, ModelConfig};
 
 /// Geometry of every page in a pool.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -74,17 +84,32 @@ pub struct KvLayout {
     /// Maximum sequence length (positions; bounds page tables, not pool
     /// memory).
     pub max_seq: usize,
+    /// Page element encoding (f32 passthrough, f16, int8 + scales).
+    pub dtype: KvDtype,
 }
 
 impl KvLayout {
-    /// Floats in one page (all layers, K and V).
+    /// Logical f32 lanes in one page (all layers, K and V) — the coded
+    /// element count, independent of dtype.
     pub fn page_elems(&self) -> usize {
         self.n_layers * 2 * self.page_size * self.kv_dim
     }
 
-    /// Bytes in one page.
+    /// Sidecar scales per page: one per kv_dim row under int8, none
+    /// otherwise.
+    pub fn scales_per_page(&self) -> usize {
+        match self.dtype {
+            KvDtype::Int8 => self.n_layers * 2 * self.page_size,
+            _ => 0,
+        }
+    }
+
+    /// *Coded* bytes in one page: element storage at the dtype's width
+    /// plus the f32 scale sidecar. This is the pool's true allocation
+    /// quantum — admission accounting and the serving byte gauges all
+    /// derive from it.
     pub fn page_bytes(&self) -> usize {
-        self.page_elems() * 4
+        self.page_elems() * self.dtype.elem_bytes() + self.scales_per_page() * 4
     }
 
     /// Pages needed to hold `tokens` positions.
@@ -92,11 +117,17 @@ impl KvLayout {
         tokens.div_ceil(self.page_size)
     }
 
-    /// Bytes filled by `positions` cached positions (K and V, all
-    /// layers) — the single source of the fill-bytes formula shared by
-    /// the paged handle and the serving metrics.
+    /// Coded bytes filled by `positions` cached positions (K and V, all
+    /// layers, including their sidecar scales) — the single source of
+    /// the fill-bytes formula shared by the paged handle and the
+    /// serving metrics.
     pub fn bytes_for(&self, positions: usize) -> usize {
-        2 * self.n_layers * positions * self.kv_dim * 4
+        let rows = 2 * self.n_layers * positions;
+        let scale_bytes = match self.dtype {
+            KvDtype::Int8 => rows * 4,
+            _ => 0,
+        };
+        rows * self.kv_dim * self.dtype.elem_bytes() + scale_bytes
     }
 
     /// Upper bound of pages one sequence can ever hold.
@@ -115,7 +146,10 @@ impl KvLayout {
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct PoolStats {
     pub page_size: usize,
+    /// Coded bytes per page (element width + scale sidecar).
     pub page_bytes: usize,
+    /// Page element encoding.
+    pub dtype: KvDtype,
     pub total_pages: usize,
     /// Allocatable pages: truly free plus cached-evictable.
     pub free_pages: usize,
@@ -153,7 +187,8 @@ pub struct PoolStats {
 #[derive(Clone, Debug)]
 pub struct BlockPool {
     layout: KvLayout,
-    data: Vec<f32>,
+    /// Coded page arena (element storage + int8 scale sidecar).
+    data: PageStore,
     /// LIFO free list of page ids (recently freed pages are reused first,
     /// keeping the hot working set small).
     free: Vec<usize>,
@@ -184,7 +219,7 @@ impl BlockPool {
         assert!(layout.page_size >= 1, "page_size must be >= 1");
         assert!(pages >= 1, "pool needs at least one page");
         BlockPool {
-            data: vec![0.0; pages * layout.page_elems()],
+            data: PageStore::new(layout.dtype, pages * layout.page_elems(), layout.kv_dim),
             free: (0..pages).rev().collect(),
             refs: vec![0; pages],
             evictable: VecDeque::new(),
@@ -220,8 +255,21 @@ impl BlockPool {
             kv_dim: cfg.kv_dim(),
             page_size: kv.page_size,
             max_seq: cfg.max_seq,
+            dtype: Self::resolve_dtype(kv.kv_dtype),
         };
         BlockPool::new(layout, kv.pool_pages_for(cfg.max_seq, slots))
+    }
+
+    /// Resolve the pool dtype: the `CODEGEMM_KV_DTYPE` env var wins over
+    /// the config (mirroring `CODEGEMM_KERNEL` — it lets CI matrix legs
+    /// force an encoding without threading flags through every harness).
+    /// Unparseable values are ignored, not fatal: an env typo should not
+    /// take down a server.
+    pub fn resolve_dtype(cfg_dtype: KvDtype) -> KvDtype {
+        match std::env::var("CODEGEMM_KV_DTYPE") {
+            Ok(s) => KvDtype::parse(s.trim()).unwrap_or(cfg_dtype),
+            Err(_) => cfg_dtype,
+        }
     }
 
     pub fn layout(&self) -> KvLayout {
@@ -441,35 +489,45 @@ impl BlockPool {
 
     /// Copy the full contents of page `src` into page `dst` (the
     /// copy-on-write body; `dst` is a freshly claimed private page).
+    /// Copies *coded* bytes — the copy is bit-identical to the source
+    /// in every dtype, never a decode→re-encode.
     pub fn copy_page(&mut self, src: usize, dst: usize) {
         let pe = self.layout.page_elems();
         debug_assert!(src != dst);
-        self.data.copy_within(src * pe..(src + 1) * pe, dst * pe);
+        self.data.copy_within(src * pe, dst * pe, pe);
         self.cow_copies += 1;
     }
 
-    /// Raw contents of `page` (spill path: copy out before releasing).
-    pub fn page_data(&self, page: usize) -> &[f32] {
+    /// Snapshot the coded contents of `pages` into a standalone
+    /// [`PageStore`] (spill path: copy out before releasing). The
+    /// snapshot preserves the quantized representation verbatim, so a
+    /// later [`Self::import_page`] restores bit-identical pages.
+    pub fn export_pages(&self, pages: &[usize]) -> PageStore {
         let pe = self.layout.page_elems();
-        &self.data[page * pe..(page + 1) * pe]
+        let mut out = PageStore::new(self.layout.dtype, pages.len() * pe, self.layout.kv_dim);
+        for (i, &page) in pages.iter().enumerate() {
+            out.copy_from(&self.data, page * pe, i * pe, pe);
+        }
+        out
     }
 
-    /// Overwrite the full contents of `page` (spill restore into a
-    /// freshly claimed private page).
-    pub fn write_page(&mut self, page: usize, src: &[f32]) {
+    /// Overwrite the full coded contents of `page` with snapshot page
+    /// `src_index` of `src` (spill restore into a freshly claimed
+    /// private page).
+    pub fn import_page(&mut self, page: usize, src: &PageStore, src_index: usize) {
         let pe = self.layout.page_elems();
-        debug_assert_eq!(src.len(), pe);
         debug_assert!(
             self.refs[page] == 1 && !self.index.contains_page(page),
             "bulk write to shared page {page}"
         );
-        self.data[page * pe..(page + 1) * pe].copy_from_slice(src);
+        self.data.copy_from(src, src_index * pe, page * pe, pe);
     }
 
     pub fn stats(&self) -> PoolStats {
         PoolStats {
             page_size: self.layout.page_size,
             page_bytes: self.layout.page_bytes(),
+            dtype: self.layout.dtype,
             total_pages: self.total_pages(),
             free_pages: self.free_pages(),
             used_pages: self.used_pages(),
@@ -488,30 +546,47 @@ impl BlockPool {
     }
 
     /// Keys of the first `tokens` positions of `page` for `layer`
-    /// (contiguous rows of `kv_dim`).
+    /// (contiguous rows of `kv_dim`), decoded into `buf` for coded
+    /// dtypes; f32 borrows pool memory directly and leaves `buf` alone.
     #[inline]
-    pub fn k_tile(&self, page: usize, layer: usize, tokens: usize) -> &[f32] {
+    pub fn k_tile<'a>(
+        &'a self,
+        page: usize,
+        layer: usize,
+        tokens: usize,
+        buf: &'a mut Vec<f32>,
+    ) -> &'a [f32] {
         let l = self.layout;
         debug_assert!(tokens <= l.page_size);
         let base = page * l.page_elems() + l.layer_off(layer);
-        &self.data[base..base + tokens * l.kv_dim]
+        self.data.read(base, tokens * l.kv_dim, buf)
     }
 
-    /// Values of the first `tokens` positions of `page` for `layer`.
+    /// Values of the first `tokens` positions of `page` for `layer`
+    /// (decoded like [`Self::k_tile`]).
     #[inline]
-    pub fn v_tile(&self, page: usize, layer: usize, tokens: usize) -> &[f32] {
+    pub fn v_tile<'a>(
+        &'a self,
+        page: usize,
+        layer: usize,
+        tokens: usize,
+        buf: &'a mut Vec<f32>,
+    ) -> &'a [f32] {
         let l = self.layout;
         debug_assert!(tokens <= l.page_size);
         let base = page * l.page_elems() + l.layer_off(layer) + l.page_size * l.kv_dim;
-        &self.data[base..base + tokens * l.kv_dim]
+        self.data.read(base, tokens * l.kv_dim, buf)
     }
 
-    /// Write one position's K/V rows into `page` at in-page index `idx`.
-    /// Pages are not zeroed on allocation — every position is written
-    /// before the attention kernel can read it (reads are bounded by the
-    /// sequence length), so recycled pages may carry stale floats that
-    /// are never observed. The page must be privately held
-    /// ([`Self::is_immutable`] false) — [`super::PagedKv`] copies first.
+    /// Write (encode) one position's K/V rows into `page` at in-page
+    /// index `idx`. Pages are not zeroed on allocation — every position
+    /// is written before the attention kernel can read it (reads are
+    /// bounded by the sequence length), so recycled pages may carry
+    /// stale coded bytes that are never observed. The page must be
+    /// privately held ([`Self::is_immutable`] false) —
+    /// [`super::PagedKv`] copies first. Encoding is per-row (int8
+    /// scales cover exactly one kv_dim vector), so each write is
+    /// independent and deterministic regardless of batch shape.
     pub fn write(&mut self, page: usize, layer: usize, idx: usize, k: &[f32], v: &[f32]) {
         let l = self.layout;
         debug_assert!(idx < l.page_size);
@@ -522,10 +597,8 @@ impl BlockPool {
             "in-place write to shared page {page} (copy-on-write missed)"
         );
         let base = page * l.page_elems() + l.layer_off(layer);
-        let ko = base + idx * l.kv_dim;
-        self.data[ko..ko + l.kv_dim].copy_from_slice(k);
-        let vo = base + l.page_size * l.kv_dim + idx * l.kv_dim;
-        self.data[vo..vo + l.kv_dim].copy_from_slice(v);
+        self.data.write_row(base + idx * l.kv_dim, k);
+        self.data.write_row(base + l.page_size * l.kv_dim + idx * l.kv_dim, v);
     }
 }
 
@@ -534,7 +607,7 @@ mod tests {
     use super::*;
 
     fn layout() -> KvLayout {
-        KvLayout { n_layers: 2, kv_dim: 4, page_size: 8, max_seq: 32 }
+        KvLayout { n_layers: 2, kv_dim: 4, page_size: 8, max_seq: 32, dtype: KvDtype::F32 }
     }
 
     #[test]
@@ -545,6 +618,28 @@ mod tests {
         assert_eq!(l.pages_for(8), 1);
         assert_eq!(l.pages_for(9), 2);
         assert_eq!(l.max_pages_per_seq(), 4);
+    }
+
+    #[test]
+    fn coded_footprint_math_per_dtype() {
+        let f32_l = layout();
+        let f16_l = KvLayout { dtype: KvDtype::F16, ..f32_l };
+        let i8_l = KvLayout { dtype: KvDtype::Int8, ..f32_l };
+        assert_eq!(f32_l.page_bytes(), f32_l.page_elems() * 4);
+        assert_eq!(f16_l.page_bytes(), f32_l.page_elems() * 2);
+        // int8: 1 byte/elem + one f32 scale per kv_dim row.
+        let rows = 2 * f32_l.n_layers * f32_l.page_size;
+        assert_eq!(i8_l.scales_per_page(), rows);
+        assert_eq!(i8_l.page_bytes(), f32_l.page_elems() + rows * 4);
+        // Fill bytes follow the same coded accounting.
+        assert_eq!(f32_l.bytes_for(3), 2 * 2 * 3 * 4 * 4);
+        assert_eq!(f16_l.bytes_for(3), 2 * 2 * 3 * 4 * 2);
+        assert_eq!(i8_l.bytes_for(3), 2 * 2 * 3 * 4 + 2 * 2 * 3 * 4);
+        // The headline ratio (1/4 + 1/kv_dim of f32): ≥ 3× smaller at
+        // model-scale row widths (kv_dim ≥ 16).
+        let wide = KvLayout { kv_dim: 64, ..f32_l };
+        let wide_i8 = KvLayout { dtype: KvDtype::Int8, ..wide };
+        assert!(wide_i8.page_bytes() * 3 <= wide.page_bytes());
     }
 
     #[test]
@@ -704,8 +799,14 @@ mod tests {
         let v = [5.0, 6.0, 7.0, 8.0];
         p.write(a, 1, 3, &k, &v);
         p.copy_page(a, b);
-        assert_eq!(p.k_tile(b, 1, 4), p.k_tile(a, 1, 4));
-        assert_eq!(p.v_tile(b, 1, 4), p.v_tile(a, 1, 4));
+        let mut buf = Vec::new();
+        let ka = p.k_tile(a, 1, 4, &mut buf).to_vec();
+        let mut buf = Vec::new();
+        let va = p.v_tile(a, 1, 4, &mut buf).to_vec();
+        let mut buf = Vec::new();
+        assert_eq!(p.k_tile(b, 1, 4, &mut buf), &ka[..]);
+        let mut buf = Vec::new();
+        assert_eq!(p.v_tile(b, 1, 4, &mut buf), &va[..]);
         assert_eq!(p.stats().cow_copies, 1);
     }
 
@@ -716,14 +817,58 @@ mod tests {
         let k = [1.0, 2.0, 3.0, 4.0];
         let v = [5.0, 6.0, 7.0, 8.0];
         p.write(page, 1, 3, &k, &v);
-        let keys = p.k_tile(page, 1, 4);
-        assert_eq!(&keys[3 * 4..4 * 4], &k);
-        let vals = p.v_tile(page, 1, 4);
-        assert_eq!(&vals[3 * 4..4 * 4], &v);
+        let mut buf = Vec::new();
+        assert_eq!(&p.k_tile(page, 1, 4, &mut buf)[3 * 4..4 * 4], &k);
+        let mut buf = Vec::new();
+        assert_eq!(&p.v_tile(page, 1, 4, &mut buf)[3 * 4..4 * 4], &v);
         // The other layer's tile is unaffected at that index… (stale or
         // zero-init contents, but disjoint storage).
         p.write(page, 0, 3, &v, &k);
-        assert_eq!(&p.k_tile(page, 1, 4)[3 * 4..4 * 4], &k);
+        let mut buf = Vec::new();
+        assert_eq!(&p.k_tile(page, 1, 4, &mut buf)[3 * 4..4 * 4], &k);
+    }
+
+    #[test]
+    fn coded_pools_roundtrip_tiles_per_dtype() {
+        // f16 decodes exactly what RNE stored; int8 decodes within half
+        // a scale step of the written row. Both must survive CoW and
+        // export/import with bit-identical decoded reads.
+        for dtype in [KvDtype::F16, KvDtype::Int8] {
+            let l = KvLayout { dtype, ..layout() };
+            let mut p = BlockPool::new(l, 2);
+            let a = p.try_alloc().unwrap();
+            let b = p.try_alloc().unwrap();
+            let k: Vec<f32> = vec![0.5, -1.25, 3.0, 0.01];
+            let v: Vec<f32> = vec![-0.75, 2.5, 0.0, 10.0];
+            for idx in 0..l.page_size {
+                p.write(a, 0, idx, &k, &v);
+                p.write(a, 1, idx, &v, &k);
+            }
+            let mut buf = Vec::new();
+            let ka = p.k_tile(a, 0, l.page_size, &mut buf).to_vec();
+            let amax = k.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            let step = amax / 127.0;
+            let tol = if dtype == KvDtype::Int8 { 0.51 * step } else { amax / 1024.0 };
+            for row in ka.chunks_exact(l.kv_dim) {
+                for (d, x) in row.iter().zip(&k) {
+                    assert!((d - x).abs() <= tol, "{dtype:?}: decoded {d} vs {x}");
+                }
+            }
+            // CoW copy and spill round-trip both preserve coded bytes,
+            // so decoded reads are identical (== not epsilon).
+            p.copy_page(a, b);
+            let mut buf = Vec::new();
+            assert_eq!(p.k_tile(b, 0, l.page_size, &mut buf), &ka[..]);
+            let snap = p.export_pages(&[a]);
+            assert_eq!(snap.bytes(), l.page_bytes());
+            p.import_page(b, &snap, 0);
+            let mut buf = Vec::new();
+            assert_eq!(p.k_tile(b, 0, l.page_size, &mut buf), &ka[..]);
+            let mut buf = Vec::new();
+            let va = p.v_tile(a, 1, l.page_size, &mut buf).to_vec();
+            let mut buf = Vec::new();
+            assert_eq!(p.v_tile(b, 1, l.page_size, &mut buf), &va[..]);
+        }
     }
 
     #[test]
@@ -735,5 +880,17 @@ mod tests {
         assert_eq!(p.total_pages(), 4 * 8);
         let total_bytes = p.total_pages() * p.layout().page_bytes();
         assert_eq!(total_bytes, 4 * 2 * cfg.n_layers * cfg.max_seq * cfg.kv_dim() * 4);
+    }
+
+    #[test]
+    fn for_model_coded_pool_shrinks_bytes() {
+        let cfg = ModelConfig::tiny();
+        let f32_kv = KvConfig { page_size: 16, ..KvConfig::default() };
+        let i8_kv = KvConfig { page_size: 16, kv_dtype: KvDtype::Int8, ..KvConfig::default() };
+        let pf = BlockPool::for_model(&cfg, &f32_kv, 4);
+        let pi = BlockPool::for_model(&cfg, &i8_kv, 4);
+        assert_eq!(pf.total_pages(), pi.total_pages(), "capacity (tokens) is unchanged");
+        let (bf, bi) = (pf.layout().page_bytes(), pi.layout().page_bytes());
+        assert!(bi * 3 <= bf, "int8 pages {bi}B vs f32 {bf}B: expected ≥3× shrink");
     }
 }

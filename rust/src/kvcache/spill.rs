@@ -1,12 +1,15 @@
 //! Host-side arena for preempted sequences' private KV pages.
 //!
 //! When the batcher preempts a decoding slot in spill mode, the backend
-//! copies the victim's page contents out of the [`super::BlockPool`] into
-//! a [`SpilledKv`] (plain heap floats, outside the pool's fixed budget),
-//! releases the pool pages, and parks the spill in the [`SpillArena`]
-//! keyed by request id. Resume claims fresh pages, bulk-copies the floats
-//! back, and continues decoding at the exact position it left — bit-exact
-//! because the page contents *are* the sequence's KV state.
+//! snapshots the victim's page contents out of the [`super::BlockPool`]
+//! into a [`SpilledKv`] (a standalone [`PageStore`] on the heap, outside
+//! the pool's fixed budget), releases the pool pages, and parks the
+//! spill in the [`SpillArena`] keyed by request id. Resume claims fresh
+//! pages, bulk-copies the snapshot back, and continues decoding at the
+//! exact position it left — bit-exact in every dtype, because the
+//! snapshot holds the sequence's *coded* KV state verbatim
+//! ([`super::BlockPool::export_pages`] /
+//! [`super::BlockPool::import_page`] never decode→re-encode).
 //!
 //! Recompute mode skips all of this and replays the prompt plus the
 //! already-sampled tokens instead — cheaper in host memory, more compute
@@ -14,18 +17,22 @@
 
 use std::collections::HashMap;
 
+use super::codec::PageStore;
+
 /// One preempted sequence's KV state: whole pages, in page-table order.
 #[derive(Clone, Debug)]
 pub struct SpilledKv {
     /// Positions that were filled when the sequence was swapped out.
     pub len: usize,
-    /// `pages_for(len)` pages of raw page contents, concatenated.
-    pub data: Vec<f32>,
+    /// `pages_for(len)` pages of coded page contents (elements + any
+    /// scale sidecar), concatenated in page-table order.
+    pub data: PageStore,
 }
 
 impl SpilledKv {
+    /// Coded host bytes this spill holds.
     pub fn bytes(&self) -> usize {
-        self.data.len() * 4
+        self.data.bytes()
     }
 }
 
@@ -59,7 +66,8 @@ impl SpillArena {
         self.spills.is_empty()
     }
 
-    /// Total host bytes currently parked here.
+    /// Total host bytes currently parked here (coded bytes — an int8
+    /// victim spills ~3.8× less than an f32 one).
     pub fn bytes(&self) -> usize {
         self.spills.values().map(SpilledKv::bytes).sum()
     }
@@ -68,19 +76,21 @@ impl SpillArena {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::KvDtype;
 
     #[test]
     fn insert_take_roundtrip_and_bytes() {
         let mut arena = SpillArena::new();
         assert!(arena.is_empty());
-        arena.insert(7, SpilledKv { len: 3, data: vec![1.0; 32] });
-        arena.insert(9, SpilledKv { len: 1, data: vec![2.0; 16] });
+        arena.insert(7, SpilledKv { len: 3, data: PageStore::new(KvDtype::F32, 32, 4) });
+        arena.insert(9, SpilledKv { len: 1, data: PageStore::new(KvDtype::Int8, 16, 4) });
         assert_eq!(arena.len(), 2);
-        assert_eq!(arena.bytes(), (32 + 16) * 4);
+        // f32: 32 × 4 bytes; int8: 16 × 1 + 4 row scales × 4 bytes.
+        assert_eq!(arena.bytes(), 32 * 4 + 16 + 4 * 4);
         let s = arena.take(7).unwrap();
         assert_eq!(s.len, 3);
-        assert_eq!(s.data.len(), 32);
+        assert_eq!(s.data.elems(), 32);
         assert!(arena.take(7).is_none());
-        assert_eq!(arena.bytes(), 16 * 4);
+        assert_eq!(arena.bytes(), 16 + 4 * 4);
     }
 }

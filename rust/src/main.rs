@@ -55,7 +55,7 @@ fn usage() -> String {
            tables    --table <1..10|fig4a|fig4b|fig5|all> [--artifacts DIR]\n  \
            serve     [--artifacts DIR] [--backend pjrt|native] [--requests N] [--batch N] [--threads N]\n              \
                      [--kernel-impl auto|scalar|unrolled|avx2] [--simd-lanes 0|1|8|16] [--pipeline-tiles on|off]\n              \
-                     [--prefix-cache on|off] [--preempt off|spill|recompute]\n  \
+                     [--prefix-cache on|off] [--preempt off|spill|recompute] [--kv-dtype f32|f16|int8]\n  \
            bench-serve [--workload chat|rag|longform|bursty|mixed] [--seed N] [--requests N]\n              \
                      [--out BENCH_6.json] [--baseline PREV.json] [--threshold 0.2] [--advisory]\n              \
                      [--repeats N] [--profile on|off] [--trace-out trace.json]\n  \
@@ -138,6 +138,11 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             "swap lower-priority decodes out for admission: off | spill | recompute",
         )
         .opt(
+            "kv-dtype",
+            Some("f32"),
+            "KV page codec: f32 | f16 | int8 (CODEGEMM_KV_DTYPE overrides)",
+        )
+        .opt(
             "fused-projections",
             Some("on"),
             "fuse Q/K/V and gate/up around one Psumbook build per k-tile (on|off)",
@@ -199,6 +204,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         pool_pages: m.usize("pool-pages")?,
         prefix_cache,
         preempt: codegemm::config::PreemptMode::parse(m.str("preempt")?)?,
+        kv_dtype: codegemm::config::KvDtype::parse(m.str("kv-dtype")?)?,
     };
     kv.validate()?;
     let cfg = ServeConfig {

@@ -1,33 +1,50 @@
-//! Chunked GQA attention over a tiled KV cache.
+//! Chunked GQA attention over a tiled, possibly *coded* KV cache.
 //!
-//! The kernel walks the cache tile-by-tile through
+//! The kernels walk the cache tile-by-tile through
 //! [`crate::kvcache::KvStore`] — page-sized tiles for the paged pool, one
 //! whole-cache tile for the contiguous [`super::KvCache`] — in two
 //! passes:
 //!
 //! 1. **scores**: `q · k` for every cached position and every head,
-//!    written into the caller's scores scratch (one `upto`-long row per
-//!    head), then a single softmax per head over `0..upto`;
+//!    written into the caller's scores scratch, then a single softmax per
+//!    (query, head) over that query's causal range;
 //! 2. **values**: the softmax-weighted V accumulation into each output
 //!    head.
 //!
 //! Both passes iterate **tiles outer, heads inner**: each tile is
-//! resolved through [`KvStore::tile`] exactly once per pass and its
-//! contiguous K (resp. V) rows are reused by every head — `2 × n_tiles`
-//! page-table resolutions per call, not `2 × n_heads × n_tiles` (the
-//! paged store walks a page table per resolution, so the head loop was
-//! multiplying pure bookkeeping). Per (head, position) the float ops and
-//! their order are identical to the flat loop this kernel replaced in
-//! `llama.rs` — positions ascend within each head in both passes — so
-//! the result stays **bit-exact** for any tile size (property-pinned by
-//! `tests/paged_kv_prop.rs` across page sizes × heads × prompt lengths).
-//! Two passes were chosen over online softmax precisely to keep that
-//! guarantee — the scores buffer is `n_heads × max_seq` floats of reused
-//! scratch ([`AttnShape::scores_len`]), which is noise next to the cache
-//! itself.
+//! resolved (and, for coded dtypes, decoded) through
+//! [`KvStore::k_tile`]/[`KvStore::v_tile`] exactly once per pass into the
+//! caller's [`AttnScratch`], and the decoded rows are reused by every
+//! head. Tile reads are the unit [`AttnScratch::tile_resolutions`]
+//! counts: a page-table walk plus — for f16/int8 pools — a full tile
+//! decode, so keeping resolutions at `2 × n_tiles` is what keeps coded
+//! caches from decoding the same page over and over.
 //!
-//! Used by both the decode step (`m = 1`) and batched prefill (causal:
-//! position `pos0 + b` attends to `0..=pos0 + b`, all already appended).
+//! [`attend`] handles one query position (the decode step). For prefill,
+//! [`attend_batch`] takes all `m` freshly-appended query rows of a chunk
+//! and walks each K/V tile **once for the whole chunk**: the tile loop
+//! sits outside the query loop, computing a tile × queries score block
+//! with the causal mask applied inside the tile walk (query `pos0 + b`
+//! sees positions `0..=pos0 + b`). A chunk therefore costs
+//! `2 × n_tiles(pos0 + m)` tile resolutions instead of the
+//! `2 × Σ_b n_tiles(pos0 + b + 1)` the per-position loop paid — on a
+//! coded pool that is the difference between decoding each page once and
+//! decoding it `m` times per chunk.
+//!
+//! # Exactness
+//!
+//! Per (query, head, position) the float ops and their order are
+//! identical between [`attend`], [`attend_batch`], and the flat loop the
+//! kernels replaced — positions ascend within each query's head in both
+//! passes, and the causal mask only *truncates* that ascending walk. So
+//! for any tile size and chunk split, batched prefill is **bit-exact**
+//! against the per-position walk over the *same store* in every KV dtype
+//! (the per-tile decode is deterministic, so both kernels see identical
+//! decoded floats). Versus an f32 store, coded dtypes carry the KV
+//! codec's documented error (f16 rounding; int8 half-a-scale-step per
+//! element) — see [`crate::kvcache`] for the per-dtype contract. Two
+//! passes were chosen over online softmax precisely to keep the
+//! bit-exactness guarantee.
 
 use crate::config::ModelConfig;
 use crate::kvcache::KvStore;
@@ -61,12 +78,51 @@ impl AttnShape {
     pub fn scores_len(&self, upto: usize) -> usize {
         self.n_heads * upto
     }
+
+    /// Scores-scratch length [`attend_batch`] needs for `m` queries whose
+    /// last position is `upto_max - 1`: one `upto_max`-long row per
+    /// (query, head).
+    pub fn scores_len_batch(&self, m: usize, upto_max: usize) -> usize {
+        m * self.n_heads * upto_max
+    }
+}
+
+/// Per-call attention scratch: the K/V tile decode buffers (borrowed by
+/// [`KvStore::k_tile`]/[`KvStore::v_tile`] when the backing is coded;
+/// untouched for f32 pools, which hand out zero-copy borrows) plus a
+/// tile-resolution counter.
+///
+/// The counter increments once per tile read — page-table walk + decode —
+/// which is exactly the work batched prefill amortises: one [`attend`]
+/// call costs `2 × n_tiles(upto)` resolutions, one [`attend_batch`] chunk
+/// costs `2 × n_tiles(pos0 + m)` *total*, independent of `m`
+/// (counter-pinned in tests and gated in `benches/scaling.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct AttnScratch {
+    /// Key-tile decode buffer.
+    pub k: Vec<f32>,
+    /// Value-tile decode buffer.
+    pub v: Vec<f32>,
+    /// Tile reads (K and V each count) since construction or
+    /// [`Self::reset_tile_resolutions`].
+    pub tile_resolutions: u64,
+}
+
+impl AttnScratch {
+    pub fn new() -> AttnScratch {
+        AttnScratch::default()
+    }
+
+    pub fn reset_tile_resolutions(&mut self) {
+        self.tile_resolutions = 0;
+    }
 }
 
 /// One query position's GQA attention against `kv` positions `0..upto`
 /// of `layer`.
 ///
 /// - `q`: the RoPE-rotated query row (`n_heads × head_dim`);
+/// - `scratch`: tile decode buffers + resolution counter;
 /// - `scores`: caller scratch, at least [`AttnShape::scores_len`]
 ///   (`n_heads × upto`) long (overwritten) — one row per head, so the
 ///   tile loop can sit outside the head loop;
@@ -78,6 +134,7 @@ pub fn attend<C: KvStore + ?Sized>(
     q: &[f32],
     upto: usize,
     scale: f32,
+    scratch: &mut AttnScratch,
     scores: &mut [f32],
     out: &mut [f32],
 ) {
@@ -93,10 +150,11 @@ pub fn attend<C: KvStore + ?Sized>(
     let sc = &mut scores[..shape.n_heads * upto];
     out.fill(0.0);
     // Pass 1: raw scores — tiles outer, so each tile (one page-table
-    // resolution on the paged store) serves every head; per head,
+    // resolution + decode on a coded store) serves every head; per head,
     // positions are still visited in ascending order.
     for t in 0..n_tiles {
-        let (keys, _) = kv.tile(layer, t, upto);
+        scratch.tile_resolutions += 1;
+        let keys = kv.k_tile(layer, t, upto, &mut scratch.k);
         let p0 = t * tt;
         let n_in = keys.len() / kv_dim;
         for head in 0..shape.n_heads {
@@ -116,7 +174,8 @@ pub fn attend<C: KvStore + ?Sized>(
     // output head still accumulates positions in ascending order, so
     // the result is bit-exact vs. the heads-outer loop this replaced.
     for t in 0..n_tiles {
-        let (_, vals) = kv.tile(layer, t, upto);
+        scratch.tile_resolutions += 1;
+        let vals = kv.v_tile(layer, t, upto, &mut scratch.v);
         let p0 = t * tt;
         let n_in = vals.len() / kv_dim;
         for head in 0..shape.n_heads {
@@ -134,9 +193,114 @@ pub fn attend<C: KvStore + ?Sized>(
     }
 }
 
+/// Batched causal attention for one prefill chunk: queries at positions
+/// `pos0..pos0 + m` (all of whose K/V rows are already appended to `kv`),
+/// each attending to its own causal prefix `0..=pos0 + b`.
+///
+/// Walks each K/V tile once for the whole chunk — score blocks are
+/// computed tile × queries with the causal mask applied as a truncation
+/// of each query's in-tile range — so the chunk costs
+/// `2 × n_tiles(pos0 + m)` tile resolutions total. Bit-exact against `m`
+/// successive [`attend`] calls over the same store in every dtype (see
+/// the module docs).
+///
+/// - `q`: `m` query rows, `m × n_heads × head_dim`;
+/// - `scores`: at least [`AttnShape::scores_len_batch`]`(m, pos0 + m)`
+///   long (overwritten);
+/// - `out`: `m × n_heads × head_dim` (overwritten).
+pub fn attend_batch<C: KvStore + ?Sized>(
+    kv: &C,
+    layer: usize,
+    shape: &AttnShape,
+    q: &[f32],
+    pos0: usize,
+    m: usize,
+    scale: f32,
+    scratch: &mut AttnScratch,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    let hd = shape.head_dim;
+    let kv_dim = shape.kv_dim();
+    let groups = shape.groups();
+    let upto_max = pos0 + m;
+    debug_assert!(m >= 1 && upto_max <= kv.max_seq());
+    debug_assert_eq!(q.len(), m * shape.n_heads * hd);
+    debug_assert_eq!(out.len(), m * shape.n_heads * hd);
+    debug_assert!(scores.len() >= shape.scores_len_batch(m, upto_max));
+    let tt = kv.tile_tokens();
+    let n_tiles = kv.n_tiles(upto_max);
+    let sc = &mut scores[..m * shape.n_heads * upto_max];
+    out.fill(0.0);
+    // Pass 1: tile × queries score blocks. The causal mask is a per-query
+    // truncation of the in-tile range: query pos0 + b sees tile positions
+    // p0..min(p0 + n_in, pos0 + b + 1).
+    for t in 0..n_tiles {
+        scratch.tile_resolutions += 1;
+        let keys = kv.k_tile(layer, t, upto_max, &mut scratch.k);
+        let p0 = t * tt;
+        let n_in = keys.len() / kv_dim;
+        for b in 0..m {
+            let visible = pos0 + b + 1;
+            if visible <= p0 {
+                continue;
+            }
+            let limit = n_in.min(visible - p0);
+            let qb = &q[b * shape.n_heads * hd..(b + 1) * shape.n_heads * hd];
+            for head in 0..shape.n_heads {
+                let kv_head = head / groups;
+                let qh = &qb[head * hd..(head + 1) * hd];
+                let row = (b * shape.n_heads + head) * upto_max;
+                let sc_h = &mut sc[row..row + upto_max];
+                for j in 0..limit {
+                    let kh = &keys[j * kv_dim + kv_head * hd..j * kv_dim + (kv_head + 1) * hd];
+                    sc_h[p0 + j] = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+                }
+            }
+        }
+    }
+    for b in 0..m {
+        let visible = pos0 + b + 1;
+        for head in 0..shape.n_heads {
+            let row = (b * shape.n_heads + head) * upto_max;
+            softmax_inplace(&mut sc[row..row + visible]);
+        }
+    }
+    // Pass 2: weighted V accumulation, tiles outer again; per (query,
+    // head) positions still accumulate in ascending order.
+    for t in 0..n_tiles {
+        scratch.tile_resolutions += 1;
+        let vals = kv.v_tile(layer, t, upto_max, &mut scratch.v);
+        let p0 = t * tt;
+        let n_in = vals.len() / kv_dim;
+        for b in 0..m {
+            let visible = pos0 + b + 1;
+            if visible <= p0 {
+                continue;
+            }
+            let limit = n_in.min(visible - p0);
+            for head in 0..shape.n_heads {
+                let kv_head = head / groups;
+                let row = (b * shape.n_heads + head) * upto_max;
+                let sc_h = &sc[row..row + upto_max];
+                let oh = &mut out
+                    [(b * shape.n_heads + head) * hd..(b * shape.n_heads + head + 1) * hd];
+                for j in 0..limit {
+                    let w = sc_h[p0 + j];
+                    let vh = &vals[j * kv_dim + kv_head * hd..j * kv_dim + (kv_head + 1) * hd];
+                    for x in 0..hd {
+                        oh[x] += w * vh[x];
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::KvDtype;
     use crate::kvcache::{BlockPool, KvLayout, PagedKv, SeqKv};
     use crate::model::KvCache;
     use crate::util::prng::Prng;
@@ -203,7 +367,7 @@ mod tests {
         let (n_layers, max_seq) = (2, 40);
         let scale = 1.0 / (shape.head_dim as f32).sqrt();
         for page_size in [1usize, 3, 4, 7, 16, 64] {
-            let layout = KvLayout { n_layers, kv_dim, page_size, max_seq };
+            let layout = KvLayout { n_layers, kv_dim, page_size, max_seq, dtype: KvDtype::F32 };
             let mut pool = BlockPool::new(layout, layout.max_pages_per_seq());
             let mut seq = SeqKv::with_capacity(layout.max_pages_per_seq());
             let mut cache = KvCache::new(n_layers, max_seq, kv_dim);
@@ -214,14 +378,19 @@ mod tests {
             let q = rng.normal_vec(shape.n_heads * shape.head_dim, 1.0);
             let mut flat_scores = vec![0f32; max_seq];
             let mut scores = vec![0f32; shape.scores_len(max_seq)];
+            let mut scratch = AttnScratch::new();
             let mut a = vec![0f32; q.len()];
             let mut b = vec![0f32; q.len()];
             let mut c = vec![0f32; q.len()];
             for upto in [1usize, page_size.min(37), 17, 36, 37] {
                 for layer in 0..n_layers {
                     attend_flat(&cache, layer, &shape, &q, upto, scale, &mut flat_scores, &mut a);
-                    attend(&cache, layer, &shape, &q, upto, scale, &mut scores, &mut b);
-                    attend(&paged, layer, &shape, &q, upto, scale, &mut scores, &mut c);
+                    attend(
+                        &cache, layer, &shape, &q, upto, scale, &mut scratch, &mut scores, &mut b,
+                    );
+                    attend(
+                        &paged, layer, &shape, &q, upto, scale, &mut scratch, &mut scores, &mut c,
+                    );
                     assert_eq!(a, b, "contiguous tiled != flat (page {page_size}, upto {upto})");
                     assert_eq!(a, c, "paged tiled != flat (page {page_size}, upto {upto})");
                 }
@@ -235,7 +404,8 @@ mod tests {
         for (n_heads, n_kv_heads) in [(4, 1), (4, 4)] {
             let shape = AttnShape { n_heads, n_kv_heads, head_dim: 4 };
             let kv_dim = shape.kv_dim();
-            let layout = KvLayout { n_layers: 1, kv_dim, page_size: 2, max_seq: 8 };
+            let layout =
+                KvLayout { n_layers: 1, kv_dim, page_size: 2, max_seq: 8, dtype: KvDtype::F32 };
             let mut pool = BlockPool::new(layout, layout.max_pages_per_seq());
             let mut seq = SeqKv::with_capacity(layout.max_pages_per_seq());
             let mut cache = KvCache::new(1, 8, kv_dim);
@@ -245,10 +415,127 @@ mod tests {
             let q = rng.normal_vec(n_heads * 4, 1.0);
             let mut flat_scores = vec![0f32; 8];
             let mut scores = vec![0f32; shape.scores_len(8)];
+            let mut scratch = AttnScratch::new();
             let (mut a, mut b) = (vec![0f32; q.len()], vec![0f32; q.len()]);
             attend_flat(&cache, 0, &shape, &q, 5, 0.5, &mut flat_scores, &mut a);
-            attend(&paged, 0, &shape, &q, 5, 0.5, &mut scores, &mut b);
+            attend(&paged, 0, &shape, &q, 5, 0.5, &mut scratch, &mut scores, &mut b);
             assert_eq!(a, b);
         }
+    }
+
+    /// Batched prefill must be bit-exact against the per-position walk
+    /// over the same store — in every dtype, across page sizes, head
+    /// geometries, and chunk splits whose causal boundaries straddle
+    /// page boundaries.
+    #[test]
+    fn attend_batch_bit_exact_vs_per_position_walk() {
+        for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
+            for (n_heads, n_kv_heads, head_dim) in [(4, 2, 8), (4, 1, 4), (3, 3, 4)] {
+                let shape = AttnShape { n_heads, n_kv_heads, head_dim };
+                let kv_dim = shape.kv_dim();
+                let (n_layers, max_seq) = (2, 48);
+                let scale = 1.0 / (head_dim as f32).sqrt();
+                for page_size in [1usize, 3, 7, 16] {
+                    let layout = KvLayout { n_layers, kv_dim, page_size, max_seq, dtype };
+                    let mut pool = BlockPool::new(layout, layout.max_pages_per_seq());
+                    let mut seq = SeqKv::with_capacity(layout.max_pages_per_seq());
+                    let mut paged = PagedKv::bind(&mut pool, &mut seq);
+                    let mut rng = Prng::seeded(31 + page_size as u64 + n_heads as u64);
+                    // 41 positions: the chunk splits below straddle page
+                    // boundaries for every page_size above.
+                    let total = 41usize;
+                    for pos in 0..total {
+                        for layer in 0..n_layers {
+                            let k = rng.normal_vec(kv_dim, 1.0);
+                            let v = rng.normal_vec(kv_dim, 1.0);
+                            paged.write(layer, pos, &k, &v);
+                        }
+                    }
+                    // Chunk the "prompt" as prefill would: [0,13), [13,30), [30,41).
+                    for (pos0, m) in [(0usize, 13usize), (13, 17), (30, 11)] {
+                        let q = rng.normal_vec(m * n_heads * head_dim, 1.0);
+                        let upto_max = pos0 + m;
+                        let mut scores_b = vec![0f32; shape.scores_len_batch(m, upto_max)];
+                        let mut scores_1 = vec![0f32; shape.scores_len(upto_max)];
+                        let mut scratch = AttnScratch::new();
+                        let mut out_b = vec![0f32; q.len()];
+                        let mut out_1 = vec![0f32; q.len()];
+                        for layer in 0..n_layers {
+                            attend_batch(
+                                &paged, layer, &shape, &q, pos0, m, scale, &mut scratch,
+                                &mut scores_b, &mut out_b,
+                            );
+                            let d = n_heads * head_dim;
+                            for b in 0..m {
+                                attend(
+                                    &paged,
+                                    layer,
+                                    &shape,
+                                    &q[b * d..(b + 1) * d],
+                                    pos0 + b + 1,
+                                    scale,
+                                    &mut scratch,
+                                    &mut scores_1,
+                                    &mut out_1[b * d..(b + 1) * d],
+                                );
+                            }
+                            assert_eq!(
+                                out_b, out_1,
+                                "batched != per-position ({dtype:?}, page {page_size}, \
+                                 heads {n_heads}/{n_kv_heads}, chunk {pos0}+{m}, layer {layer})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// One batched chunk resolves each tile exactly twice (K pass + V
+    /// pass) regardless of chunk length — the point of the score-block
+    /// walk; the per-position walk pays ~m× that.
+    #[test]
+    fn attend_batch_resolves_each_tile_twice_per_chunk() {
+        let shape = AttnShape { n_heads: 2, n_kv_heads: 2, head_dim: 4 };
+        let kv_dim = shape.kv_dim();
+        let layout =
+            KvLayout { n_layers: 1, kv_dim, page_size: 4, max_seq: 64, dtype: KvDtype::Int8 };
+        let mut pool = BlockPool::new(layout, layout.max_pages_per_seq());
+        let mut seq = SeqKv::with_capacity(layout.max_pages_per_seq());
+        let mut paged = PagedKv::bind(&mut pool, &mut seq);
+        let mut rng = Prng::seeded(5);
+        let (pos0, m) = (9usize, 21usize);
+        for pos in 0..pos0 + m {
+            let k = rng.normal_vec(kv_dim, 1.0);
+            let v = rng.normal_vec(kv_dim, 1.0);
+            paged.write(0, pos, &k, &v);
+        }
+        let q = rng.normal_vec(m * shape.n_heads * shape.head_dim, 1.0);
+        let upto_max = pos0 + m;
+        let mut scores = vec![0f32; shape.scores_len_batch(m, upto_max)];
+        let mut scratch = AttnScratch::new();
+        let mut out = vec![0f32; q.len()];
+        attend_batch(&paged, 0, &shape, &q, pos0, m, 1.0, &mut scratch, &mut scores, &mut out);
+        let n_tiles = KvStore::n_tiles(&paged, upto_max) as u64;
+        assert_eq!(scratch.tile_resolutions, 2 * n_tiles);
+        // Per-position replay of the same chunk: strictly more resolutions.
+        scratch.reset_tile_resolutions();
+        let mut scores_1 = vec![0f32; shape.scores_len(upto_max)];
+        let d = shape.n_heads * shape.head_dim;
+        let mut out_1 = vec![0f32; d];
+        for b in 0..m {
+            attend(
+                &paged,
+                0,
+                &shape,
+                &q[b * d..(b + 1) * d],
+                pos0 + b + 1,
+                1.0,
+                &mut scratch,
+                &mut scores_1,
+                &mut out_1,
+            );
+        }
+        assert!(scratch.tile_resolutions > 2 * n_tiles, "per-position walk should cost more");
     }
 }

@@ -113,9 +113,14 @@ impl KvStore for KvCache {
         self.max_seq
     }
 
-    fn tile(&self, layer: usize, t: usize, upto: usize) -> (&[f32], &[f32]) {
+    fn k_tile<'a>(&'a self, layer: usize, t: usize, upto: usize, _buf: &'a mut Vec<f32>) -> &'a [f32] {
         debug_assert_eq!(t, 0, "contiguous cache has a single tile");
-        (self.keys(layer, upto), self.values(layer, upto))
+        self.keys(layer, upto)
+    }
+
+    fn v_tile<'a>(&'a self, layer: usize, t: usize, upto: usize, _buf: &'a mut Vec<f32>) -> &'a [f32] {
+        debug_assert_eq!(t, 0, "contiguous cache has a single tile");
+        self.values(layer, upto)
     }
 
     fn bytes(&self) -> usize {
@@ -187,8 +192,10 @@ mod tests {
         c.write(0, 0, &k, &v);
         assert_eq!(KvStore::tile_tokens(&c), 8);
         assert_eq!(KvStore::n_tiles(&c, 1), 1);
-        let (keys, vals) = KvStore::tile(&c, 0, 0, 1);
-        assert_eq!(keys, &k);
-        assert_eq!(vals, &v);
+        let mut buf = Vec::new();
+        assert_eq!(KvStore::k_tile(&c, 0, 0, 1, &mut buf), &k);
+        let mut buf = Vec::new();
+        assert_eq!(KvStore::v_tile(&c, 0, 0, 1, &mut buf), &v);
+        assert!(buf.is_empty(), "f32 contiguous reads are zero-copy");
     }
 }

@@ -18,12 +18,13 @@
 //!
 //! Every forward path is generic over [`KvStore`]: the same code decodes
 //! against the contiguous per-sequence [`KvCache`] and against the paged
-//! pool (`kvcache::PagedKv`). Attention itself lives in
-//! [`super::attention`] — a chunked GQA kernel that walks the cache
-//! tile-by-tile (page-sized tiles under paging) and is bit-exact against
-//! the flat loop it replaced.
+//! pool (`kvcache::PagedKv`) — in any KV dtype (f32/f16/int8 coded
+//! pages). Attention itself lives in [`super::attention`]: decode (`m =
+//! 1`) runs the chunked per-position kernel, prefill chunks (`m > 1`)
+//! run the batched score-block kernel that walks each K/V tile once per
+//! chunk — bit-exact against the per-position walk it replaced.
 
-use super::attention::{attend, AttnShape};
+use super::attention::{attend, attend_batch, AttnScratch, AttnShape};
 use super::engine_factory::{EngineKind, ProjectionSet};
 use super::kv::KvCache;
 use super::weights::ModelWeights;
@@ -74,6 +75,9 @@ struct ForwardScratch {
     up: Vec<f32>,
     act: Vec<f32>,
     scores: Vec<f32>,
+    /// Attention tile decode buffers + resolution counter — coded KV
+    /// pools decode each walked tile into here.
+    attn: AttnScratch,
     eng: EngineScratch,
     /// Cumulative per-phase wall time of every forward through this
     /// scratch: `model/gemm` (all linears), `model/attention`
@@ -349,8 +353,9 @@ impl LlamaModel {
     /// `pos0 .. pos0 + tokens.len()`) through every layer as true
     /// `m_batch = tokens.len()` GEMMs — the regime where the Psumbook
     /// build cost `O(m·2^b·K·N_blocks·M)` amortizes over the gather
-    /// (paper Eq. 3) — applying attention per position against the
-    /// shared KV cache. Returns the logits after the final token.
+    /// (paper Eq. 3) — with causal attention batched per chunk through
+    /// `attend_batch` (each K/V tile walked once per chunk). Returns the
+    /// logits after the final token.
     ///
     /// Matches token-by-token [`Self::forward`] up to float
     /// reassociation inside the engines' batched kernels (bit-exact for
@@ -440,11 +445,12 @@ impl LlamaModel {
         let gate = grow_slice(&mut s.gate, m * cfg.ffn);
         let up = grow_slice(&mut s.up, m * cfg.ffn);
         let act = grow_slice(&mut s.act, m * cfg.ffn);
-        // Sized to the full context up front (one row per head — the
-        // attention kernel iterates tiles outer / heads inner) so the
-        // buffer never grows mid-sequence (pos0 + m <= max_seq,
-        // enforced by the cache).
-        let scores = grow_slice(&mut s.scores, shape.scores_len(cfg.max_seq));
+        // Sized to the full context for this chunk width up front (one
+        // `max_seq`-long row per query per head) so the buffer never
+        // grows mid-sequence (pos0 + m <= max_seq, enforced by the
+        // cache); decode (m = 1) needs exactly the old n_heads × max_seq.
+        let scores = grow_slice(&mut s.scores, shape.scores_len_batch(m, cfg.max_seq));
+        let attn = &mut s.attn;
         let eng = &mut s.eng;
         let timer = &mut s.timer;
         let scale = 1.0 / (hd as f32).sqrt();
@@ -473,21 +479,28 @@ impl LlamaModel {
                     &vv[b * kv_dim..(b + 1) * kv_dim],
                 );
             }
-            // Causal attention per position through the chunked kernel:
-            // position `pos0 + b` attends to `0..=pos0+b`, all already
-            // written above; the kernel walks the cache tile-by-tile
-            // (page-sized tiles under paging, one tile contiguous).
-            for b in 0..m {
-                let upto = pos0 + b + 1;
+            // Causal attention: position `pos0 + b` attends to
+            // `0..=pos0+b`, all already written above. Prefill chunks
+            // (m > 1) take the batched score-block kernel — each K/V
+            // tile is resolved (and, for coded pools, decoded) once per
+            // chunk instead of once per position; decode keeps the
+            // per-position kernel. Both walk the cache tile-by-tile and
+            // agree bitwise (see `super::attention`).
+            if m == 1 {
                 attend(
                     &*cache,
                     layer_i,
                     &shape,
-                    &q[b * d..(b + 1) * d],
-                    upto,
+                    &q[..d],
+                    pos0 + 1,
                     scale,
+                    attn,
                     scores,
-                    &mut attn_out[b * d..(b + 1) * d],
+                    &mut attn_out[..d],
+                );
+            } else {
+                attend_batch(
+                    &*cache, layer_i, &shape, q, pos0, m, scale, attn, scores, attn_out,
                 );
             }
             timer.add("model/attention", ta.elapsed().as_secs_f64());
@@ -855,6 +868,8 @@ mod tests {
                 + s.up.capacity()
                 + s.act.capacity()
                 + s.scores.capacity()
+                + s.attn.k.capacity()
+                + s.attn.v.capacity()
                 + s.eng.footprint_bytes()
         };
         let warm = fp(&m.scratch);

@@ -25,7 +25,13 @@
 //! page-table resolution serves every head) and is **bit-exact** against
 //! the flat loop for any tile size — so paging is purely a memory layout
 //! decision, never a numerics one. The page size is thereby an attention
-//! tiling knob to tune like the GEMM `tile_w`/`tile_h`.
+//! tiling knob to tune like the GEMM `tile_w`/`tile_h`. Prefill chunks
+//! route through [`attention::attend_batch`], which walks each K/V tile
+//! once per *chunk* (tile × queries score blocks, causal mask inside the
+//! tile loop) — bit-exact vs the per-position walk, and the piece that
+//! makes coded KV dtypes (`KvConfig::kv_dtype` = f32/f16/int8) cheap:
+//! each page decodes once per chunk into [`attention::AttnScratch`],
+//! not once per position.
 //!
 //! ## Fused projection groups
 //!
@@ -45,7 +51,7 @@ pub mod llama;
 pub mod sampler;
 pub mod weights;
 
-pub use attention::{attend, AttnShape};
+pub use attention::{attend, attend_batch, AttnScratch, AttnShape};
 pub use engine_factory::{EngineKind, ProjectionSet};
 pub use kv::KvCache;
 pub use llama::{rmsnorm, silu, LlamaModel, MAX_PREFILL_CHUNK};

@@ -19,6 +19,12 @@
 //!   `0.0` / `0`)
 //! - counters (ints): `completed`, `rejected`, `infeasible`, `deferred`,
 //!   `kv_used_hwm_pages`, `kv_total_pages`
+//! - KV codec gauges (added within schema v1; older artifacts lack them
+//!   and parse as `"f32"` / `0` / `0`): `kv_dtype` (the pool's page
+//!   codec — `f32`/`f16`/`int8`), `kv_page_bytes` (coded bytes per pool
+//!   page, scale sidecar included) and `kv_held_bytes` (coded bytes held
+//!   across slots at the final snapshot) — the gauges that make dtype
+//!   shrink visible and comparable across artifacts
 //! - profiler gauges (added within schema v1; older artifacts lack them
 //!   and parse as `0` / `0.0` / `""`): `spans_dropped` (spans evicted
 //!   from the bounded metrics ring — nonzero ⇒ the artifact's `spans`
@@ -105,6 +111,16 @@ pub struct BenchArtifact {
     pub preemptions: u64,
     pub kv_used_hwm_pages: usize,
     pub kv_total_pages: usize,
+    /// KV pool page codec (`"f32"`/`"f16"`/`"int8"`); artifacts
+    /// predating the gauge parse as `"f32"` — the only dtype that
+    /// existed then.
+    pub kv_dtype: String,
+    /// Coded bytes per pool page, scale sidecar included (0 when no pool
+    /// or predating the gauge).
+    pub kv_page_bytes: usize,
+    /// Coded bytes held across slots at the final KV snapshot (0 when
+    /// absent, matching `kv_page_bytes`).
+    pub kv_held_bytes: usize,
     /// Spans evicted from the bounded metrics ring during the run — 0
     /// means `spans` is the complete trace (or the artifact predates the
     /// gauge), nonzero that it is a truncated view.
@@ -156,11 +172,19 @@ impl BenchArtifact {
             .iter()
             .map(|(n, s)| (n.clone(), if total > 0.0 { s / total } else { 0.0 }))
             .collect();
-        let (hwm, pages) = report
+        let (hwm, pages, kv_dtype, kv_page_bytes, kv_held_bytes) = report
             .kv
             .as_ref()
-            .map(|kv| (kv.pool.used_hwm, kv.pool.total_pages))
-            .unwrap_or((0, 0));
+            .map(|kv| {
+                (
+                    kv.pool.used_hwm,
+                    kv.pool.total_pages,
+                    kv.pool.dtype.as_str().to_string(),
+                    kv.pool.page_bytes,
+                    kv.held_bytes(),
+                )
+            })
+            .unwrap_or((0, 0, "f32".to_string(), 0, 0));
         BenchArtifact {
             schema_version: SCHEMA_VERSION,
             bench_id: bench_id.to_string(),
@@ -189,6 +213,9 @@ impl BenchArtifact {
             preemptions: report.preemptions,
             kv_used_hwm_pages: hwm,
             kv_total_pages: pages,
+            kv_dtype,
+            kv_page_bytes,
+            kv_held_bytes,
             spans_dropped: report.spans_dropped,
             overlap_efficiency: report.prof.as_ref().map(|p| p.overlap_efficiency).unwrap_or(0.0),
             prof_occupancy: report.prof.as_ref().map(|p| p.occupancy).unwrap_or(0.0),
@@ -249,6 +276,9 @@ impl BenchArtifact {
             ("preemptions", Json::from(self.preemptions as usize)),
             ("kv_used_hwm_pages", Json::from(self.kv_used_hwm_pages)),
             ("kv_total_pages", Json::from(self.kv_total_pages)),
+            ("kv_dtype", Json::from(self.kv_dtype.as_str())),
+            ("kv_page_bytes", Json::from(self.kv_page_bytes)),
+            ("kv_held_bytes", Json::from(self.kv_held_bytes)),
             ("spans_dropped", Json::from(self.spans_dropped as usize)),
             ("overlap_efficiency", Json::Num(self.overlap_efficiency)),
             ("prof_occupancy", Json::Num(self.prof_occupancy)),
@@ -338,6 +368,11 @@ impl BenchArtifact {
             preemptions: j.opt_usize("preemptions", 0)? as u64,
             kv_used_hwm_pages: j.req_usize("kv_used_hwm_pages")?,
             kv_total_pages: j.req_usize("kv_total_pages")?,
+            // KV codec gauges arrived within schema v1 — artifacts that
+            // predate them were all produced by f32-only pools.
+            kv_dtype: j.get("kv_dtype").and_then(|v| v.as_str()).unwrap_or("f32").to_string(),
+            kv_page_bytes: j.opt_usize("kv_page_bytes", 0)?,
+            kv_held_bytes: j.opt_usize("kv_held_bytes", 0)?,
             // Profiler + repeat gauges arrived within schema v1 — absent
             // in baselines from uninstrumented builds.
             spans_dropped: j.opt_usize("spans_dropped", 0)? as u64,
@@ -478,6 +513,9 @@ mod tests {
             preemptions: 2,
             kv_used_hwm_pages: 5,
             kv_total_pages: 8,
+            kv_dtype: "int8".into(),
+            kv_page_bytes: 4352,
+            kv_held_bytes: 21760,
             spans_dropped: 3,
             overlap_efficiency: 0.8,
             prof_occupancy: 0.9,
@@ -510,6 +548,9 @@ mod tests {
         assert_eq!(b.simd_lanes, 8);
         assert_eq!(b.prefix_hit_rate, 0.5);
         assert_eq!(b.preemptions, 2);
+        assert_eq!(b.kv_dtype, "int8");
+        assert_eq!(b.kv_page_bytes, 4352);
+        assert_eq!(b.kv_held_bytes, 21760);
         assert_eq!(b.spans_dropped, 3);
         assert_eq!(b.overlap_efficiency, 0.8);
         assert_eq!(b.prof_occupancy, 0.9);
@@ -583,6 +624,24 @@ mod tests {
         let b = BenchArtifact::from_json(&j).unwrap();
         assert_eq!(b.prefix_hit_rate, 0.0);
         assert_eq!(b.preemptions, 0);
+        assert_eq!(b.decode_tok_s, 50.0);
+    }
+
+    #[test]
+    fn artifacts_without_kv_codec_gauges_still_parse() {
+        // Baselines from builds predating coded KV pages were all
+        // produced by f32-only pools — they must load with the
+        // documented "f32" / 0 / 0 defaults.
+        let mut j = artifact(50.0).to_json();
+        if let Json::Obj(o) = &mut j {
+            o.remove("kv_dtype");
+            o.remove("kv_page_bytes");
+            o.remove("kv_held_bytes");
+        }
+        let b = BenchArtifact::from_json(&j).unwrap();
+        assert_eq!(b.kv_dtype, "f32", "pre-codec artifacts default to f32");
+        assert_eq!(b.kv_page_bytes, 0);
+        assert_eq!(b.kv_held_bytes, 0);
         assert_eq!(b.decode_tok_s, 50.0);
     }
 

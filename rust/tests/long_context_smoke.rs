@@ -138,6 +138,7 @@ fn contended_serving_is_bit_exact(mode: PreemptMode) {
         pool_pages: 0,
         prefix_cache: false,
         preempt: PreemptMode::Off,
+        ..KvConfig::default()
     };
     let reference = |prompt: Vec<usize>, max_new: usize| {
         let backend = Box::new(NativeBackend::with_kv(&w, EngineKind::Dense, 2, &ref_kv));

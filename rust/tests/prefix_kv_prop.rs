@@ -15,11 +15,17 @@
 //! - **sharing is invisible to the model**: prefill over pinned prefix
 //!   pages another sequence published (including the forced
 //!   copy-on-write divergence when the hit is capped inside a page) is
-//!   **bit-identical** to a cold contiguous-cache run, through greedy
-//!   decode.
+//!   **bit-identical** to a cold run of the same page dtype, through a
+//!   mid-stream preemption (spill → restore of the coded bytes) and
+//!   greedy decode — under all three page encodings (f32/f16/int8),
+//!   with the pool fully reclaimable afterwards;
+//! - **hits share the quantized bytes**: a prefix hit pins the
+//!   publisher's own coded pages (no copy, no decode→re-encode), and
+//!   the shared footprint counted in coded bytes shrinks ≥ 3× under
+//!   int8 at model-scale row widths.
 
 use codegemm::config::ModelConfig;
-use codegemm::kvcache::{BlockPool, KvLayout, PagedKv, PrefixIndex, SeqKv, ROOT_HASH};
+use codegemm::kvcache::{BlockPool, KvDtype, KvLayout, PagedKv, PrefixIndex, SeqKv, ROOT_HASH};
 use codegemm::model::{argmax, EngineKind, LlamaModel, ModelWeights};
 use codegemm::util::prng::Prng;
 use codegemm::util::proptest as pt;
@@ -36,7 +42,7 @@ struct OpsCase {
 }
 
 fn small_layout(page_size: usize) -> KvLayout {
-    KvLayout { n_layers: 1, kv_dim: 2, page_size, max_seq: 256 }
+    KvLayout { n_layers: 1, kv_dim: 2, page_size, max_seq: 256, dtype: KvDtype::F32 }
 }
 
 /// Compare every pool gauge against a brute-force census of the
@@ -309,6 +315,8 @@ struct ShareCase {
     /// exact-prefix prompt, whose matched cap forces copy-on-write).
     suffix_len: usize,
     decode_steps: usize,
+    /// Page encoding the whole interleaving runs under.
+    dtype: KvDtype,
     seed: u64,
 }
 
@@ -340,7 +348,10 @@ fn prop_shared_prefix_prefill_bit_exact_vs_contiguous() {
             head_dim: if rng.index(2) == 0 { 4 } else { 8 },
             shared_pages: 1 + rng.index(3),
             suffix_len: rng.index(6),
-            decode_steps: rng.index(3),
+            // At least one step so the post-preemption decode always
+            // observes the restored pages.
+            decode_steps: 1 + rng.index(3),
+            dtype: [KvDtype::F32, KvDtype::F16, KvDtype::Int8][rng.index(3)],
             seed: rng.next_u64(),
         }
     });
@@ -366,6 +377,7 @@ fn prop_shared_prefix_prefill_bit_exact_vs_contiguous() {
             kv_dim: cfg_model.kv_dim(),
             page_size: ps,
             max_seq: MAX_SEQ,
+            dtype: c.dtype,
         };
         let mut pool = BlockPool::new(layout, 2 * layout.max_pages_per_seq());
 
@@ -398,15 +410,48 @@ fn prop_shared_prefix_prefill_bit_exact_vs_contiguous() {
             model.forward_batch(&prompt_b[matched..], matched, &mut kv)
         };
 
-        // Cold contiguous reference over the identical prompt.
-        let mut flat = model.new_cache();
-        let lf = model.forward_batch(&prompt_b, 0, &mut flat);
+        // Cold reference over the identical prompt: a fresh pool of the
+        // SAME dtype. Sharing, CoW and preemption must be invisible
+        // *within* an encoding — encode→decode is deterministic, so the
+        // comparison is bitwise even for f16/int8.
+        let mut ref_pool = BlockPool::new(layout, layout.max_pages_per_seq());
+        let mut r = SeqKv::with_capacity(layout.max_pages_per_seq());
+        let lf = {
+            let mut kv = PagedKv::bind(&mut ref_pool, &mut r);
+            model.forward_batch(&prompt_b, 0, &mut kv)
+        };
         pt::ensure(lf == lp, format!("shared prefill logits not bit-identical ({c:?})"))?;
+        if c.dtype == KvDtype::F32 {
+            // f32 passthrough additionally matches the contiguous cache.
+            let mut flat = model.new_cache();
+            let lflat = model.forward_batch(&prompt_b, 0, &mut flat);
+            pt::ensure(lflat == lf, format!("f32 paged != contiguous ({c:?})"))?;
+        }
         if expect_cow {
             pt::ensure(pool.stats().cow_copies >= 1, "capped hit did not copy-on-write")?;
         }
 
-        // Greedy decode stays bitwise locked.
+        // Preempt the hitter mid-stream: spill its coded bytes verbatim,
+        // release every page (shared pins drop back to the publisher),
+        // restore into freshly claimed private pages. Decode after this
+        // must still be bitwise locked — the round-trip never decodes
+        // and re-encodes.
+        {
+            let n = layout.pages_for(b.len());
+            let len = b.len();
+            let snap = pool.export_pages(&b.pages()[..n]);
+            b.release(&mut pool);
+            pt::ensure(
+                b.claim(&mut pool, layout.max_pages_per_seq()),
+                "pool exhausted re-admitting the preempted hitter",
+            )?;
+            for i in 0..n {
+                pool.import_page(b.pages()[i], &snap, i);
+            }
+            b.set_len(len);
+        }
+
+        // Greedy decode stays bitwise locked across the restore.
         let (mut lf, mut lp) = (lf, lp);
         for step in 0..c.decode_steps {
             let pos = prompt_b.len() + step;
@@ -415,7 +460,10 @@ fn prop_shared_prefix_prefill_bit_exact_vs_contiguous() {
             }
             let (tf, tp) = (argmax(&lf), argmax(&lp));
             pt::ensure(tf == tp, format!("greedy token diverged at step {step} ({c:?})"))?;
-            lf = model.forward(tf, pos, &mut flat);
+            lf = {
+                let mut kv = PagedKv::bind(&mut ref_pool, &mut r);
+                model.forward(tf, pos, &mut kv)
+            };
             lp = {
                 let mut kv = PagedKv::bind(&mut pool, &mut b);
                 model.forward(tp, pos, &mut kv)
@@ -434,4 +482,56 @@ fn prop_shared_prefix_prefill_bit_exact_vs_contiguous() {
             format!("drained pool not fully allocatable: {} of {}", s.free_pages, s.total_pages),
         )
     });
+}
+
+// ---------------------------------------------------------------------------
+// Prefix hits share the *quantized* pages, counted in coded bytes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prefix_hits_pin_shared_coded_pages_and_int8_footprint_shrinks() {
+    // Contention on one published prompt: the hit must pin the
+    // publisher's own pages — the pool holds exactly one copy of the
+    // coded (possibly quantized) bytes, never a decoded duplicate — and
+    // the shared footprint is priced in coded bytes, so an int8 prefix
+    // costs ≤ 0.3× its f32 twin at model-scale row widths (kv_dim 64:
+    // 1/4 element bytes + one f32 scale per row).
+    let mk = |dtype| KvLayout { n_layers: 2, kv_dim: 64, page_size: 8, max_seq: 64, dtype };
+    let mut shared_bytes = Vec::new();
+    for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
+        let l = mk(dtype);
+        let mut pool = BlockPool::new(l, 8);
+        let toks: Vec<usize> = (0..2 * l.page_size).collect();
+        let p0 = pool.try_alloc().unwrap();
+        let p1 = pool.try_alloc().unwrap();
+        let row: Vec<f32> = (0..l.kv_dim).map(|i| i as f32 * 0.25 - 3.0).collect();
+        for &page in &[p0, p1] {
+            for layer in 0..l.n_layers {
+                for idx in 0..l.page_size {
+                    pool.write(page, layer, idx, &row, &row);
+                }
+            }
+        }
+        pool.publish_prefix(&toks, &[p0, p1]);
+        // Two contending hitters pin the same physical pages.
+        let hit_a = pool.prefix_acquire(&toks, usize::MAX);
+        let hit_b = pool.prefix_acquire(&toks, usize::MAX);
+        assert_eq!(hit_a, vec![p0, p1], "hit must pin the publisher's own coded pages");
+        assert_eq!(hit_b, hit_a, "contending hits share one physical copy");
+        assert_eq!(pool.refs(p0), 3, "publisher + two hitters on one page");
+        assert_eq!(pool.stats().cow_copies, 0, "a read-only hit never copies");
+        // Used pages did not grow with the hitters: the shared coded
+        // bytes exist once in the pool.
+        assert_eq!(pool.used_pages(), 2);
+        shared_bytes.push(hit_a.len() * l.page_bytes());
+        for p in hit_a.into_iter().chain(hit_b) {
+            pool.free(p);
+        }
+        pool.free(p0);
+        pool.free(p1);
+        assert_eq!(pool.free_pages(), pool.total_pages(), "full reclamation");
+    }
+    let (f32_b, f16_b, i8_b) = (shared_bytes[0], shared_bytes[1], shared_bytes[2]);
+    assert_eq!(f16_b * 2, f32_b, "f16 prefix costs exactly half");
+    assert!(i8_b * 10 <= f32_b * 3, "int8 shared prefix {i8_b}B vs f32 {f32_b}B: want ≤ 0.3×");
 }
